@@ -1,0 +1,82 @@
+//! Adapter portability — the paper's storage claim (§4.1): after
+//! training, only the core Y and a seed are stored; L and R regenerate
+//! bit-identically, so a reloaded adapter reproduces the trained model's
+//! outputs exactly.
+//!
+//! Flow: train → checkpoint (Y + seed) → fresh Trainer (re-inits
+//! everything from seeds) → load checkpoint → verify eval losses and
+//! logits match to the bit.
+
+use cosa::config::{RunConfig, Schedule, TrainConfig};
+use cosa::runtime::executor::Runtime;
+use cosa::runtime::Registry;
+use cosa::train::checkpoint::Checkpoint;
+use cosa::train::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = RunConfig {
+        name: "portability".into(),
+        artifact: "tiny-lm_cosa".into(),
+        task: "math".into(),
+        train: TrainConfig {
+            steps: 25,
+            lr: 3e-3,
+            weight_decay: 0.01,
+            clip_norm: 1.0,
+            schedule: Schedule::Constant,
+            eval_every: 0,
+            log_every: 0,
+            grad_accum: 1,
+        },
+        ..RunConfig::default()
+    };
+    let rt = Runtime::cpu()?;
+    let reg = Registry::open_default()?;
+
+    // 1. train and checkpoint
+    let mut t1 = Trainer::new(&rt, &reg, cfg.clone())?;
+    t1.run()?;
+    let (loss1, metric1) = t1.evaluate()?;
+    let path = std::path::Path::new("runs/portability.ckpt");
+    t1.save_checkpoint(path)?;
+    let ck = Checkpoint::load(path)?;
+    let core_params: usize =
+        ck.tensors.values().map(|(_, v)| v.len()).sum();
+    println!("stored adapter: {} cores, {} params, {} bytes on disk \
+              (+ seed {})",
+             ck.tensors.len(), core_params,
+             std::fs::metadata(path)?.len(), ck.adapter_seed);
+
+    // 2. fresh trainer — same seeds, pristine state (Y = 0)
+    let mut t2 = Trainer::new(&rt, &reg, cfg.clone())?;
+    let (loss_pristine, _) = t2.evaluate()?;
+
+    // 3. load the adapter: projections come from the seed, Y from disk
+    t2.load_checkpoint(&ck)?;
+    let (loss2, metric2) = t2.evaluate()?;
+
+    println!("eval loss  trained {loss1:.6} | pristine {loss_pristine:.6} \
+              | reloaded {loss2:.6}");
+    println!("metric     trained {metric1:.6} | reloaded {metric2:.6}");
+    anyhow::ensure!((loss1 - loss2).abs() < 1e-6,
+                    "reloaded adapter diverges: {loss1} vs {loss2}");
+    anyhow::ensure!((loss_pristine - loss1).abs() > 1e-4,
+                    "training had no effect; portability check is vacuous");
+
+    // 4. cross-check the regenerated projections against the live state
+    let meta = &t2.train_exec.meta;
+    let spec = meta
+        .inputs_with_role("frozen")
+        .into_iter()
+        .find(|s| s.name.ends_with(".l"))
+        .expect("cosa artifact has L projections")
+        .clone();
+    let live = t2.state.read(&spec.name)?;
+    let regen = cosa::adapters::cosa::regen_l(
+        ck.adapter_seed, &spec.name, spec.shape[0], spec.shape[1]);
+    anyhow::ensure!(live == regen.data,
+                    "L projection is not bit-identical after regen");
+    println!("projection `{}` regenerated bit-identically from seed", spec.name);
+    println!("adapter_portability OK");
+    Ok(())
+}

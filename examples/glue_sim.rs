@@ -1,0 +1,35 @@
+//! One GLUE-sim task end-to-end across three methods — a fast taste of
+//! the Table 2 comparison (full table: `cosa-repro exp table2`).
+//!
+//!     cargo run --release --example glue_sim [-- --task mrpc-sim --steps 60]
+
+use cosa::exp::harness::{exp_train_cfg, method_lr, run_scored, LmScore};
+use cosa::runtime::executor::Runtime;
+use cosa::runtime::Registry;
+use cosa::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let task = args.str("task", "mrpc-sim");
+    let steps = args.usize("steps", 60);
+    let preset = if task == "stsb-sim" { "small-reg" } else { "small-cls" };
+
+    let rt = Runtime::cpu()?;
+    let reg = Registry::open_default()?;
+    println!("GLUE-sim task `{task}` ({} metric), {steps} steps\n",
+             cosa::data::nlu::metric_for(&task));
+
+    for method in ["lora", "vera", "cosa"] {
+        let tcfg = exp_train_cfg(steps, method_lr(method, 2e-3));
+        let r = run_scored(&rt, &reg, &format!("{preset}_{method}"),
+                           &format!("nlu:{task}"), &tcfg, 0,
+                           LmScore::ExactInt, 0)?;
+        println!(
+            "{method:8}  params {:>8}   loss {:.3} -> {:.3}   metric {:.2}",
+            r.trainable_params, r.train_loss_first, r.train_loss_last,
+            100.0 * r.metric
+        );
+    }
+    println!("\nglue_sim OK");
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Quickstart: load the tiny CoSA artifact, fine-tune on synthetic math
+//! for a handful of steps, and evaluate.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use cosa::config::{RunConfig, Schedule, TrainConfig};
+use cosa::runtime::executor::Runtime;
+use cosa::runtime::Registry;
+use cosa::train::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = RunConfig {
+        name: "quickstart".into(),
+        artifact: "tiny-lm_cosa".into(),
+        task: "math".into(),
+        train: TrainConfig {
+            steps: 40,
+            lr: 3e-3,
+            weight_decay: 0.01,
+            clip_norm: 1.0,
+            schedule: Schedule::CosineWarmup { warmup_frac: 0.1 },
+            eval_every: 20,
+            log_every: 5,
+            grad_accum: 1,
+        },
+        ..RunConfig::default()
+    };
+
+    let rt = Runtime::cpu()?;
+    let reg = Registry::open_default()?;
+    println!("platform: {} ({} devices)", rt.client.platform_name(),
+             rt.client.device_count());
+
+    let mut trainer = Trainer::new(&rt, &reg, cfg)?;
+    let meta = trainer.train_exec.meta.clone();
+    println!(
+        "model: d={} layers={} | method={} (a={}, b={}) | {} trainable params",
+        meta.model.d_model, meta.model.n_layers, meta.method.method,
+        meta.method.a, meta.method.b, meta.trainable_param_count()
+    );
+
+    trainer.run()?;
+    let (eval_loss, token_acc) = trainer.evaluate()?;
+    let first = trainer.log.first_loss();
+    let last = trainer.log.recent_loss(5);
+    println!("\ntrain loss: {first:.3} -> {last:.3}");
+    println!("eval: loss {eval_loss:.3}, token accuracy {token_acc:.3}");
+    trainer.log.save_csv(&trainer.csv_path())?;
+    trainer.save_checkpoint(&trainer.ckpt_path())?;
+    println!("wrote {} and {}", trainer.csv_path().display(),
+             trainer.ckpt_path().display());
+    anyhow::ensure!(last < first, "loss did not decrease");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! Standalone RIP validation — regenerates paper Table 4 + Figure 4
+//! without touching the PJRT runtime (pure rust, runs in seconds).
+//!
+//!     cargo run --release --example rip_validation [-- --samples 1000]
+
+use cosa::exp;
+use cosa::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    exp::run("table4", &args)
+}

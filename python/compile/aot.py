@@ -1,0 +1,124 @@
+"""AOT pipeline: lower every (preset × method × kind) step to HLO text.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs, per artifact ``<name>_<kind>``:
+  artifacts/<name>_<kind>.hlo.txt   — the lowered module
+  artifacts/<name>_<kind>.json      — ordered input/output specs + configs
+plus one ``artifacts/manifest.json`` indexing everything for the rust L3.
+
+Usage:  python -m compile.aot [--out-dir ../artifacts] [--jobs N]
+        [--only SUBSTR]        (artifact-name filter, for iteration)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from concurrent.futures import ProcessPoolExecutor
+
+import jax
+
+from . import model, presets
+
+KINDS = ["train", "eval"]
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_one(job):
+    """Lower one artifact; runs in a worker process."""
+    name, preset, meth, kind, out_dir = job
+    t0 = time.time()
+    mcfg = presets.MODEL_PRESETS[preset]
+    graph_method = presets.GRAPH_ALIAS.get(meth["method"], meth["method"])
+    gmeth = dict(meth, method=graph_method)
+
+    step = model.make_step(mcfg, gmeth, kind)
+    specs = model.input_shapedtypes(mcfg, gmeth, kind)
+    lowered = jax.jit(step).lower(*specs)
+    text = to_hlo_text(lowered)
+
+    ins, outs = model.io_spec(mcfg, gmeth, kind)
+    meta = {
+        "name": f"{name}_{kind}",
+        "preset": preset,
+        "kind": kind,
+        "model": mcfg,
+        "method": meth,
+        "graph_method": graph_method,
+        "inputs": ins,
+        "outputs": outs,
+    }
+    base = os.path.join(out_dir, f"{name}_{kind}")
+    with open(base + ".hlo.txt", "w") as f:
+        f.write(text)
+    with open(base + ".json", "w") as f:
+        json.dump(meta, f, indent=1)
+    return f"{name}_{kind}", len(text), time.time() - t0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(legacy) ignored marker file")
+    ap.add_argument("--jobs", type=int, default=min(8, os.cpu_count() or 1))
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    jobs = []
+    entries = presets.artifact_set()
+    for name, preset, meth in entries:
+        for kind in KINDS:
+            if args.only and args.only not in f"{name}_{kind}":
+                continue
+            jobs.append((name, preset, meth, kind, args.out_dir))
+
+    print(f"lowering {len(jobs)} artifacts with {args.jobs} workers",
+          file=sys.stderr)
+    t0 = time.time()
+    results = []
+    if args.jobs <= 1:
+        for j in jobs:
+            results.append(lower_one(j))
+            print(f"  {results[-1][0]}  {results[-1][1]} chars "
+                  f"{results[-1][2]:.1f}s", file=sys.stderr)
+    else:
+        with ProcessPoolExecutor(max_workers=args.jobs) as pool:
+            for res in pool.map(lower_one, jobs):
+                results.append(res)
+                print(f"  {res[0]}  {res[1]} chars {res[2]:.1f}s",
+                      file=sys.stderr)
+
+    manifest = {
+        "artifacts": [r[0] for r in results],
+        "entries": [
+            {"name": name, "preset": preset, "method": meth,
+             "kinds": KINDS}
+            for name, preset, meth in entries
+            if not args.only or any(args.only in f"{name}_{k}" for k in KINDS)
+        ],
+        "model_presets": presets.MODEL_PRESETS,
+        "adapted_sites": ["wq", "wv", "w1", "w2"],
+    }
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"done: {len(results)} artifacts in {time.time() - t0:.1f}s",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,191 @@
+"""L1: fused Pallas kernel for the CoSA adapter branch  o = L(Y(R·x)).
+
+Hardware adaptation (paper targets CUDA GPUs; we target the TPU model that
+Pallas exposes, validated on CPU via ``interpret=True``):
+
+* The adapter chain ``x(n) → u=Rx(b) → v=Yu(a) → o=Lv(m)`` is fused into a
+  single kernel so the intermediates ``u`` and ``v`` never round-trip
+  through HBM — the paper's "never materialize ΔW (m×n)" memory argument
+  carried through to activations.
+* The grid tiles the flattened ``(B·T, n)`` activation rows; ``R``, ``Y``
+  and ``L`` are pinned in VMEM for every row-tile (their BlockSpec index
+  maps are constant), so each weight byte is read from HBM once per grid
+  pass instead of once per row, raising arithmetic intensity to
+  ``b(n+a) + am`` FLOPs per activation row.
+* On a real MXU the three dots run as 128×128 bf16 systolic tiles; the
+  default row tile (128) matches the MXU/VREG lane width.  VMEM footprint
+  per tile is ``(bm·n + b·n + a·b + m·a + bm·m)·4`` bytes — see
+  ``vmem_bytes`` below; presets keep it well under the 16 MiB budget.
+
+``interpret=True`` is mandatory here: real TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute.  Numerics are
+identical between the two paths.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default number of activation rows processed by one grid step.  128 matches
+# the MXU systolic tile; bench/perf notes in EXPERIMENTS.md §Perf.
+DEFAULT_BLOCK_ROWS = 128
+
+
+def vmem_bytes(block_rows: int, n: int, b: int, a: int, m: int,
+               itemsize: int = 4) -> int:
+    """Per-grid-step VMEM working set of the fused kernel, in bytes."""
+    return itemsize * (block_rows * n    # x tile
+                       + b * n           # R
+                       + a * b           # Y
+                       + m * a           # L
+                       + block_rows * b  # u scratch
+                       + block_rows * a  # v scratch
+                       + block_rows * m) # o tile
+
+
+def mxu_utilization_estimate(block_rows: int, n: int, b: int, a: int,
+                             m: int) -> float:
+    """Fraction of MXU-issue slots doing useful work for one row tile.
+
+    Each of the three dots is padded to 128-multiples on the MXU; the
+    estimate is useful-FLOPs / padded-FLOPs.  Used by DESIGN.md §Perf to
+    pick (a, b) tile-friendly presets (multiples of 128 score 1.0).
+    """
+    def pad(v):
+        return ((v + 127) // 128) * 128
+
+    useful = block_rows * (2 * n * b + 2 * b * a + 2 * a * m)
+    padded = pad(block_rows) * (2 * pad(n) * pad(b) + 2 * pad(b) * pad(a)
+                                + 2 * pad(a) * pad(m))
+    return useful / padded
+
+
+def _cosa_kernel(x_ref, r_ref, y_ref, l_ref, o_ref):
+    """One grid step: rows tile of x → rows tile of o.
+
+    All three weight refs hold the full (small) matrices; only x/o are
+    tiled.  Accumulation dtype is f32 regardless of input dtype.
+    """
+    x = x_ref[...]
+    u = jnp.dot(x, r_ref[...].T, preferred_element_type=jnp.float32)
+    v = jnp.dot(u, y_ref[...].T, preferred_element_type=jnp.float32)
+    o = jnp.dot(v, l_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
+def _cosa_kernel_mtiled(x_ref, r_ref, y_ref, l_ref, o_ref):
+    """2-D grid variant: (row tile i, output-column tile j).
+
+    §Perf L1 finding: at paper scale (m=n=4096, a=1024) the full L
+    (m×a ≈ 16 MiB) blows the VMEM budget; tiling L's rows (the adapter's
+    output dim m) brings the per-step working set under budget.  u and v
+    are recomputed per j-tile — b·(n+a) FLOPs per row, negligible next to
+    the a·m reconstruction — trading a little compute for HBM locality,
+    the same trade the paper's threadblock scheme makes on GPUs.
+    """
+    x = x_ref[...]
+    u = jnp.dot(x, r_ref[...].T, preferred_element_type=jnp.float32)
+    v = jnp.dot(u, y_ref[...].T, preferred_element_type=jnp.float32)
+    o = jnp.dot(v, l_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
+def _pallas_forward(x, l, r, y, *, block_rows: int,
+                    block_m: int | None = None) -> jnp.ndarray:
+    """Invoke the fused kernel on ``(N, n)`` activations, padding N.
+
+    ``block_m`` (optional) additionally tiles the output dimension m —
+    required once ``m·a`` itself exceeds VMEM (paper-scale sites); see
+    ``_cosa_kernel_mtiled``.
+    """
+    nrows, n = x.shape
+    m, a = l.shape
+    b, n2 = r.shape
+    assert n == n2 and y.shape == (a, b), (x.shape, l.shape, r.shape, y.shape)
+
+    bm = min(block_rows, max(8, nrows))
+    padded = ((nrows + bm - 1) // bm) * bm
+    if padded != nrows:
+        x = jnp.pad(x, ((0, padded - nrows), (0, 0)))
+
+    if block_m is None or block_m >= m:
+        out = pl.pallas_call(
+            _cosa_kernel,
+            grid=(padded // bm,),
+            in_specs=[
+                pl.BlockSpec((bm, n), lambda i: (i, 0)),
+                pl.BlockSpec((b, n), lambda i: (0, 0)),
+                pl.BlockSpec((a, b), lambda i: (0, 0)),
+                pl.BlockSpec((m, a), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bm, m), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((padded, m), x.dtype),
+            interpret=True,  # Mosaic custom-calls can't run on CPU PJRT
+        )(x, r, y, l)
+        return out[:nrows]
+
+    # 2-D grid: pad m to a multiple of block_m and tile L's rows.
+    bmm = block_m
+    padded_m = ((m + bmm - 1) // bmm) * bmm
+    l_p = jnp.pad(l, ((0, padded_m - m), (0, 0))) if padded_m != m else l
+    out = pl.pallas_call(
+        _cosa_kernel_mtiled,
+        grid=(padded // bm, padded_m // bmm),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((b, n), lambda i, j: (0, 0)),
+            pl.BlockSpec((a, b), lambda i, j: (0, 0)),
+            pl.BlockSpec((bmm, a), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bmm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((padded, padded_m), x.dtype),
+        interpret=True,
+    )(x, r, y, l_p)
+    return out[:nrows, :m]
+
+
+def vmem_bytes_mtiled(block_rows: int, block_m: int, n: int, b: int,
+                      a: int, itemsize: int = 4) -> int:
+    """Working set of the m-tiled kernel (paper-scale path)."""
+    return itemsize * (block_rows * n + b * n + a * b + block_m * a
+                       + block_rows * b + block_rows * a
+                       + block_rows * block_m)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def cosa_adapter(x, l, r, y, block_rows=DEFAULT_BLOCK_ROWS):
+    """Fused CoSA adapter forward ``o = x Rᵀ Yᵀ Lᵀ`` with analytic VJP.
+
+    The VJP implements the paper's Eq. 10: ``∇Y = (Lᵀ g)(R x)ᵀ`` and routes
+    the activation cotangent ``∇x = ((g L) Y) R`` so gradients flow to
+    earlier layers.  L and R are frozen — their cotangents are zero.
+    """
+    return _pallas_forward(x, l, r, y, block_rows=block_rows)
+
+
+def _cosa_fwd(x, l, r, y, block_rows):
+    return _pallas_forward(x, l, r, y, block_rows=block_rows), (x, l, r, y)
+
+
+def _cosa_bwd(block_rows, res, g):
+    x, l, r, y = res
+    gv = g @ l                 # (N, a)
+    u = x @ r.T                # (N, b) recomputed — cheaper than storing
+    dy = gv.T @ u              # (a, b)  paper Eq. 10
+    dx = (gv @ y) @ r          # (N, n)
+    return dx, jnp.zeros_like(l), jnp.zeros_like(r), dy
+
+
+cosa_adapter.defvjp(_cosa_fwd, _cosa_bwd)
+
+
+def cosa_adapter_3d(x, l, r, y, scale: float = 1.0,
+                    block_rows: int = DEFAULT_BLOCK_ROWS):
+    """Apply the adapter to ``(B, T, n)`` activations, returning (B, T, m)."""
+    bsz, t, n = x.shape
+    out = cosa_adapter(x.reshape(bsz * t, n), l, r, y, block_rows)
+    return scale * out.reshape(bsz, t, -1)

@@ -1,0 +1,58 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here, written
+with plain ``jnp`` ops only (no pallas, no custom_vjp).  pytest compares the
+kernel output (and its VJP) against these oracles; hypothesis sweeps shapes
+and dtypes.  These are also the semantic definition mirrored by the
+rust-side property tests (``rust/src/adapters/cosa.rs``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosa_adapter_ref(x: jnp.ndarray, l: jnp.ndarray, r: jnp.ndarray,
+                     y: jnp.ndarray) -> jnp.ndarray:
+    """CoSA adapter branch  o = L (Y (R x))  in row-vector convention.
+
+    Args:
+      x: ``(N, n)`` activations (rows are flattened batch*time positions).
+      l: ``(m, a)`` fixed Gaussian output projection.
+      r: ``(b, n)`` fixed Gaussian input projection.
+      y: ``(a, b)`` trainable core.
+
+    Returns:
+      ``(N, m)`` adapter output ``ΔW x`` with ``ΔW = L Y R``.
+    """
+    u = x @ r.T          # (N, b)   input compression
+    v = u @ y.T          # (N, a)   core transformation
+    return v @ l.T       # (N, m)   output reconstruction
+
+
+def cosa_adapter_vjp_ref(x, l, r, y, g):
+    """Analytic VJP of the adapter (paper Eq. 10 generalized to batches).
+
+    Returns ``(dx, dY)`` — cotangents for the activation and the core.
+    L and R are frozen so their cotangents are identically zero.
+    """
+    gv = g @ l           # (N, a)
+    u = x @ r.T          # (N, b)
+    dy = gv.T @ u        # (a, b)  == (L^T g)(R x)^T summed over rows
+    dx = (gv @ y) @ r    # (N, n)
+    return dx, dy
+
+
+def lora_delta_ref(a: jnp.ndarray, b: jnp.ndarray, scale: float) -> jnp.ndarray:
+    """LoRA update  ΔW = scale · A B  with A ``(in, r)``, B ``(r, out)``."""
+    return scale * (a @ b)
+
+
+def cosa_delta_ref(l: jnp.ndarray, y: jnp.ndarray, r: jnp.ndarray,
+                   scale: float) -> jnp.ndarray:
+    """Materialized CoSA update ΔW = scale · L Y R, shape ``(m, n)``.
+
+    Only used by tests — the runtime never materializes ΔW (that is the
+    point of the method); it applies the three matmuls to activations.
+    """
+    return scale * (l @ y @ r)

@@ -1,0 +1,176 @@
+"""Adapter method definitions: parameter specs + forward application.
+
+Implements CoSA plus every baseline the paper compares against, as pure
+functions over a flat ``{name: array}`` parameter dict:
+
+* ``full``     — full fine-tuning (whole trunk trainable)
+* ``lora``     — ΔW = (α/r)·A B                       (Hu et al. 2022)
+* ``pissa``    — LoRA graph; SVD-based init + residual W0 happen in rust
+* ``dora``     — magnitude/direction decomposition     (Liu et al. 2024b)
+* ``vera``     — shared frozen A/B + trainable scaling vectors (Kopiczko 2023)
+* ``adalora``  — P·diag(λ⊙mask)·Q with a rust-driven rank-budget mask
+* ``nola``     — linear combination of frozen random low-rank bases
+* ``cosa``     — ΔW = α·L Y R via the fused Pallas kernel (the paper)
+
+Naming convention (mirrored by rust/src/runtime/artifact.rs):
+  trunk:    embed, pos, lyr{i}.{ln1.s,ln1.b,wq,wk,wv,wo,ln2.s,ln2.b,w1,w2},
+            lnf.s, lnf.b, head.w[, head.b]
+  adapters: adp.{i}.{site}.{tensor}      site ∈ {wq, wv, w1, w2}
+  shared:   vera.{ni}x{no}.{a,b}, nola.{ni}x{no}.{abank,bbank}
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.cosa_kernel import cosa_adapter_3d
+
+# Sites adapted by every PEFT method (attention q/v + both MLP projections),
+# with (input_dim, output_dim) expressed in units of (d_model, d_ff).
+ADAPTED_SITES = ["wq", "wv", "w1", "w2"]
+
+
+def site_dims(site: str, d: int, ff: int):
+    return {"wq": (d, d), "wv": (d, d), "w1": (d, ff), "w2": (ff, d)}[site]
+
+
+class SpecBuilder:
+    """Collects ordered (name, role, shape, dtype) input specs."""
+
+    def __init__(self):
+        self.entries = []  # list of dicts
+        self._seen = set()
+
+    def add(self, name, role, shape, dtype="f32"):
+        if name in self._seen:
+            return
+        self._seen.add(name)
+        self.entries.append(
+            {"name": name, "role": role, "shape": list(shape), "dtype": dtype})
+
+    def by_role(self, role):
+        return [e for e in self.entries if e["role"] == role]
+
+
+def build_param_specs(mcfg: dict, meth: dict) -> SpecBuilder:
+    """Full input spec (trunk + adapters + batch) for one model × method."""
+    sb = SpecBuilder()
+    d, ff, v, t = mcfg["d_model"], mcfg["d_ff"], mcfg["vocab"], mcfg["max_seq"]
+    nl, head, ncls, bsz = (mcfg["n_layers"], mcfg["head"],
+                           mcfg["n_classes"], mcfg["batch"])
+    method = meth["method"]
+    trunk_role = "trainable" if method == "full" else "frozen"
+
+    # --- trunk ---
+    sb.add("embed", trunk_role, (v, d))
+    sb.add("pos", trunk_role, (t, d))
+    for i in range(nl):
+        p = f"lyr{i}."
+        sb.add(p + "ln1.s", trunk_role, (d,))
+        sb.add(p + "ln1.b", trunk_role, (d,))
+        for w in ["wq", "wk", "wv", "wo"]:
+            sb.add(p + w, trunk_role, (d, d))
+        sb.add(p + "ln2.s", trunk_role, (d,))
+        sb.add(p + "ln2.b", trunk_role, (d,))
+        sb.add(p + "w1", trunk_role, (d, ff))
+        sb.add(p + "w2", trunk_role, (ff, d))
+    sb.add("lnf.s", trunk_role, (d,))
+    sb.add("lnf.b", trunk_role, (d,))
+    # Classification/regression heads are always trained (PEFT convention);
+    # the tied-ish LM head stays frozen unless full FT.
+    head_role = "trainable" if (method == "full" or head != "lm") else "frozen"
+    if head == "lm":
+        sb.add("head.w", head_role, (d, v))
+    else:
+        sb.add("head.w", head_role, (d, ncls))
+        sb.add("head.b", head_role, (ncls,))
+
+    # --- adapters ---
+    r, a, b, k = meth.get("r", 8), meth.get("a", 64), meth.get("b", 32), \
+        meth.get("nola_k", 32)
+    if method != "full":
+        for i in range(nl):
+            for s in ADAPTED_SITES:
+                ni, no = site_dims(s, d, ff)
+                p = f"adp.{i}.{s}."
+                if method in ("lora", "pissa"):
+                    sb.add(p + "a", "trainable", (ni, r))
+                    sb.add(p + "b", "trainable", (r, no))
+                elif method == "dora":
+                    sb.add(p + "a", "trainable", (ni, r))
+                    sb.add(p + "b", "trainable", (r, no))
+                    sb.add(p + "mag", "trainable", (no,))
+                elif method == "vera":
+                    sb.add(f"vera.{ni}x{no}.a", "frozen", (ni, r))
+                    sb.add(f"vera.{ni}x{no}.b", "frozen", (r, no))
+                    sb.add(p + "dvec", "trainable", (r,))
+                    sb.add(p + "bvec", "trainable", (no,))
+                elif method == "adalora":
+                    sb.add(p + "p", "trainable", (ni, r))
+                    sb.add(p + "lam", "trainable", (r,))
+                    sb.add(p + "q", "trainable", (r, no))
+                    sb.add(p + "mask", "frozen", (r,))
+                elif method == "nola":
+                    sb.add(f"nola.{ni}x{no}.abank", "frozen", (k, ni, r))
+                    sb.add(f"nola.{ni}x{no}.bbank", "frozen", (k, r, no))
+                    sb.add(p + "ca", "trainable", (k,))
+                    sb.add(p + "cb", "trainable", (k,))
+                elif method == "cosa":
+                    sb.add(p + "l", "frozen", (no, a))
+                    sb.add(p + "r", "frozen", (b, ni))
+                    sb.add(p + "y", "trainable", (a, b))
+                else:
+                    raise ValueError(f"unknown method {method}")
+
+    # --- batch ---
+    seq = mcfg["max_seq"]
+    sb.add("inputs", "batch", (bsz, seq), "i32")
+    sb.add("wmask", "batch", (bsz, seq))
+    if head == "lm":
+        sb.add("targets", "batch", (bsz, seq), "i32")
+    elif head == "cls":
+        sb.add("labels", "batch", (bsz,), "i32")
+    else:
+        sb.add("labels", "batch", (bsz,))
+    return sb
+
+
+def adapted_matmul(p: dict, meth: dict, layer: int, site: str,
+                   x: jnp.ndarray) -> jnp.ndarray:
+    """``x @ W_eff`` for one adapted site; x is (B, T, ni) → (B, T, no).
+
+    Where the method permits, the update is applied on the *activation*
+    path (never materializing ΔW) — for CoSA this is the fused L1 kernel.
+    """
+    method = meth["method"]
+    w0 = p[f"lyr{layer}.{site}"]
+    if method == "full":
+        return x @ w0
+    base = x @ w0
+    pre = f"adp.{layer}.{site}."
+    alpha, r = meth.get("alpha", 2.0), meth.get("r", 8)
+    if method in ("lora", "pissa"):
+        return base + (alpha / r) * ((x @ p[pre + "a"]) @ p[pre + "b"])
+    if method == "dora":
+        dirn = w0 + (alpha / r) * (p[pre + "a"] @ p[pre + "b"])
+        col = jnp.sqrt(jnp.sum(dirn * dirn, axis=0, keepdims=True) + 1e-6)
+        return x @ (p[pre + "mag"][None, :] * dirn / col)
+    if method == "vera":
+        ni, no = w0.shape
+        av, bv = p[f"vera.{ni}x{no}.a"], p[f"vera.{ni}x{no}.b"]
+        return base + alpha * (((x @ av) * p[pre + "dvec"]) @ bv) \
+            * p[pre + "bvec"]
+    if method == "adalora":
+        lam = p[pre + "lam"] * p[pre + "mask"]
+        return base + (alpha / r) * (((x @ p[pre + "p"]) * lam) @ p[pre + "q"])
+    if method == "nola":
+        ni, no = w0.shape
+        am = jnp.einsum("k,kir->ir", p[pre + "ca"],
+                        p[f"nola.{ni}x{no}.abank"])
+        bm = jnp.einsum("k,kro->ro", p[pre + "cb"],
+                        p[f"nola.{ni}x{no}.bbank"])
+        return base + (alpha / r) * ((x @ am) @ bm)
+    if method == "cosa":
+        return base + cosa_adapter_3d(x, p[pre + "l"], p[pre + "r"],
+                                      p[pre + "y"], scale=alpha)
+    raise ValueError(f"unknown method {method}")

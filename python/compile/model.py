@@ -1,0 +1,275 @@
+"""L2: transformer forward/loss + AdamW train step for every PEFT method.
+
+A pre-LN transformer (MHA + GELU MLP) with the adapter methods of
+``methods.py`` applied to the q/v attention projections and both MLP
+projections — the sites the paper adapts.  The same trunk serves three
+heads: causal LM (``lm``), mean-pooled classification (``cls``) and scalar
+regression (``reg``, STS-B analogue).
+
+Everything here is *build-time only*: ``aot.py`` lowers ``make_step`` once
+per (preset × method × kind) to HLO text; the rust L3 executes the
+artifacts and owns schedules, data order, seeding and checkpoints.
+
+Backward passes come from ``jax.grad`` — except the CoSA adapter branch,
+whose VJP is the paper's analytic Eq. 10 inside ``kernels/cosa_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import methods
+from .methods import adapted_matmul, build_param_specs
+
+# AdamW constants (paper App. C; β2=0.999 everywhere but the full-FT
+# MetaMath runs — rust selects clip/wd per config instead).
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def _layernorm(x, s, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + 1e-5) * s + b
+
+
+def _attention(p, meth, i, x, attn_bias, n_heads):
+    bsz, t, d = x.shape
+    hd = d // n_heads
+
+    def split(h):
+        return h.reshape(bsz, t, n_heads, hd).transpose(0, 2, 1, 3)
+
+    q = split(adapted_matmul(p, meth, i, "wq", x))
+    k = split(x @ p[f"lyr{i}.wk"])
+    v = split(adapted_matmul(p, meth, i, "wv", x))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    scores = scores + attn_bias  # (B, 1, T, T) additive mask
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    ctx = ctx.transpose(0, 2, 1, 3).reshape(bsz, t, d)
+    return ctx @ p[f"lyr{i}.wo"]
+
+
+def forward(p: dict, mcfg: dict, meth: dict, inputs, wmask):
+    """Token ids (B, T) → logits: (B, T, V) for lm, (B, n_classes) else."""
+    nl, nh, head = mcfg["n_layers"], mcfg["n_heads"], mcfg["head"]
+    bsz, t = inputs.shape
+    x = jnp.take(p["embed"], inputs, axis=0) + p["pos"][None, :t, :]
+
+    # Additive attention bias: padding mask always; causal for the LM head.
+    pad = (wmask[:, None, None, :] - 1.0) * 1e9  # 0 where valid, -1e9 where pad
+    if head == "lm":
+        causal = jnp.tril(jnp.ones((t, t), dtype=x.dtype))
+        bias = pad + (causal[None, None, :, :] - 1.0) * 1e9
+    else:
+        bias = pad
+
+    for i in range(nl):
+        h = _layernorm(x, p[f"lyr{i}.ln1.s"], p[f"lyr{i}.ln1.b"])
+        x = x + _attention(p, meth, i, h, bias, nh)
+        h = _layernorm(x, p[f"lyr{i}.ln2.s"], p[f"lyr{i}.ln2.b"])
+        h = jax.nn.gelu(adapted_matmul(p, meth, i, "w1", h))
+        x = x + adapted_matmul(p, meth, i, "w2", h)
+
+    x = _layernorm(x, p["lnf.s"], p["lnf.b"])
+    if head == "lm":
+        return x @ p["head.w"]
+    pooled = jnp.sum(x * wmask[:, :, None], axis=1) \
+        / jnp.maximum(jnp.sum(wmask, axis=1, keepdims=True), 1.0)
+    out = pooled @ p["head.w"] + p["head.b"]
+    return out
+
+
+def loss_and_metrics(p, mcfg, meth, batch):
+    """Returns (loss, accuracy, logits) for the preset's head type."""
+    head = mcfg["head"]
+    logits = forward(p, mcfg, meth, batch["inputs"], batch["wmask"])
+    if head == "lm":
+        tgt, w = batch["targets"], batch["wmask"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(jnp.sum(w), 1.0)
+        loss = jnp.sum(nll * w) / denom
+        acc = jnp.sum((jnp.argmax(logits, -1) == tgt) * w) / denom
+    elif head == "cls":
+        lab = batch["labels"]
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        loss = -jnp.mean(jnp.take_along_axis(logp, lab[:, None], axis=-1))
+        acc = jnp.mean((jnp.argmax(logits, -1) == lab).astype(jnp.float32))
+    else:  # regression
+        pred = logits[:, 0]
+        loss = jnp.mean((pred - batch["labels"]) ** 2)
+        acc = -loss  # placeholder; rust computes Pearson/Spearman from logits
+    return loss, acc, logits
+
+
+def _adamw(p, g, m, v, lr, wd, t):
+    m = ADAM_B1 * m + (1.0 - ADAM_B1) * g
+    v = ADAM_B2 * v + (1.0 - ADAM_B2) * g * g
+    mh = m / (1.0 - ADAM_B1 ** t)
+    vh = v / (1.0 - ADAM_B2 ** t)
+    p = p - lr * (mh / (jnp.sqrt(vh) + ADAM_EPS) + wd * p)
+    return p, m, v
+
+
+# ---------------------------------------------------------------------------
+# Flat-ABI step builders (the artifact boundary)
+# ---------------------------------------------------------------------------
+
+TRAIN_SCALARS = ["lr", "wd", "clip", "t"]
+
+
+def io_spec(mcfg, meth, kind):
+    """Ordered input/output spec dicts for one artifact (→ meta json)."""
+    sb = build_param_specs(mcfg, meth)
+    trainables = sb.by_role("trainable")
+    frozen = sb.by_role("frozen")
+    batch = sb.by_role("batch")
+    inputs = []
+    if kind == "train":
+        inputs += [{"name": s, "role": "scalar", "shape": [], "dtype": "f32"}
+                   for s in TRAIN_SCALARS]
+    inputs += [dict(e, role="trainable") for e in trainables]
+    if kind == "train":
+        inputs += [dict(e, name="opt_m:" + e["name"], role="opt_m")
+                   for e in trainables]
+        inputs += [dict(e, name="opt_v:" + e["name"], role="opt_v")
+                   for e in trainables]
+    inputs += [dict(e, role="frozen") for e in frozen]
+    inputs += batch
+
+    head = mcfg["head"]
+    if head == "lm":
+        lshape = [mcfg["batch"], mcfg["max_seq"], mcfg["vocab"]]
+    else:
+        lshape = [mcfg["batch"], mcfg["n_classes"]]
+    outputs = [{"name": "loss", "shape": [], "dtype": "f32"},
+               {"name": "acc", "shape": [], "dtype": "f32"}]
+    if kind == "train":
+        outputs += [{"name": "new:" + e["name"], "shape": e["shape"],
+                     "dtype": "f32"} for e in trainables]
+        outputs += [{"name": "new_m:" + e["name"], "shape": e["shape"],
+                     "dtype": "f32"} for e in trainables]
+        outputs += [{"name": "new_v:" + e["name"], "shape": e["shape"],
+                     "dtype": "f32"} for e in trainables]
+    else:
+        outputs += [{"name": "logits", "shape": lshape, "dtype": "f32"}]
+    return inputs, outputs
+
+
+def make_step(mcfg, meth, kind):
+    """Build the flat-argument step function matching ``io_spec`` order."""
+    sb = build_param_specs(mcfg, meth)
+    tnames = [e["name"] for e in sb.by_role("trainable")]
+    fnames = [e["name"] for e in sb.by_role("frozen")]
+    bnames = [e["name"] for e in sb.by_role("batch")]
+    nt, nf = len(tnames), len(fnames)
+
+    def unpack(args, kind):
+        i = 0
+        sc = {}
+        if kind == "train":
+            for s in TRAIN_SCALARS:
+                sc[s] = args[i]
+                i += 1
+        tr = dict(zip(tnames, args[i:i + nt])); i += nt
+        m = v = None
+        if kind == "train":
+            m = dict(zip(tnames, args[i:i + nt])); i += nt
+            v = dict(zip(tnames, args[i:i + nt])); i += nt
+        fr = dict(zip(fnames, args[i:i + nf])); i += nf
+        batch = dict(zip(bnames, args[i:]))
+        return sc, tr, m, v, fr, batch
+
+    if kind == "eval":
+        def eval_step(*args):
+            _, tr, _, _, fr, batch = unpack(args, "eval")
+            loss, acc, logits = loss_and_metrics({**tr, **fr}, mcfg, meth,
+                                                 batch)
+            return (loss, acc, logits)
+        return eval_step
+
+    def train_step(*args):
+        sc, tr, m, v, fr, batch = unpack(args, "train")
+
+        def lossfn(tr):
+            loss, acc, _ = loss_and_metrics({**tr, **fr}, mcfg, meth, batch)
+            return loss, acc
+
+        (loss, acc), grads = jax.value_and_grad(lossfn, has_aux=True)(tr)
+        # Global-norm clipping (rust passes clip=1e9 to disable).
+        gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads.values()) + 1e-12)
+        scale = jnp.minimum(1.0, sc["clip"] / gnorm)
+        new_t, new_m, new_v = [], [], []
+        for name in tnames:
+            pn, mn, vn = _adamw(tr[name], grads[name] * scale, m[name],
+                                v[name], sc["lr"], sc["wd"], sc["t"])
+            new_t.append(pn); new_m.append(mn); new_v.append(vn)
+        return tuple([loss, acc] + new_t + new_m + new_v)
+
+    return train_step
+
+
+def input_shapedtypes(mcfg, meth, kind):
+    ins, _ = io_spec(mcfg, meth, kind)
+    return [jax.ShapeDtypeStruct(tuple(e["shape"]), DTYPES[e["dtype"]])
+            for e in ins]
+
+
+# ---------------------------------------------------------------------------
+# Test-only initialization (the runtime inits live in rust/src/adapters/)
+# ---------------------------------------------------------------------------
+
+def init_params(mcfg, meth, seed=0):
+    """Random init of every spec'd tensor — used by pytest only."""
+    sb = build_param_specs(mcfg, meth)
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for e in sb.entries:
+        if e["role"] == "batch":
+            continue
+        key, sub = jax.random.split(key)
+        shape, name = tuple(e["shape"]), e["name"]
+        if name.endswith((".y", ".b")) and name.startswith("adp.") \
+                or name.endswith((".dvec", ".ca", ".cb", ".lam", ".mag")):
+            # Zero-init the "last" adapter factor so ΔW = 0 at step 0
+            # (the paper's requirement that training starts at W0).
+            val = jnp.zeros(shape)
+        elif name.endswith(".mask"):
+            val = jnp.ones(shape)
+        elif name.endswith((".s",)) and ("ln" in name):
+            val = jnp.ones(shape)
+        elif name.endswith(".b") and ("ln" in name or "head" in name):
+            val = jnp.zeros(shape)
+        else:
+            fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+            val = jax.random.normal(sub, shape) / jnp.sqrt(float(fan_in))
+        out[name] = val
+    # DoRA magnitudes start at the column norms of W0 so W_eff == W0.
+    if meth["method"] == "dora":
+        for i in range(mcfg["n_layers"]):
+            for s in methods.ADAPTED_SITES:
+                w0 = out[f"lyr{i}.{s}"]
+                out[f"adp.{i}.{s}.mag"] = jnp.sqrt(
+                    jnp.sum(w0 * w0, axis=0) + 1e-6)
+    return out
+
+
+def init_batch(mcfg, seed=0):
+    key = jax.random.PRNGKey(seed + 99)
+    bsz, t, v = mcfg["batch"], mcfg["max_seq"], mcfg["vocab"]
+    k1, k2, k3 = jax.random.split(key, 3)
+    batch = {
+        "inputs": jax.random.randint(k1, (bsz, t), 0, v),
+        "wmask": jnp.ones((bsz, t)),
+    }
+    if mcfg["head"] == "lm":
+        batch["targets"] = jax.random.randint(k2, (bsz, t), 0, v)
+    elif mcfg["head"] == "cls":
+        batch["labels"] = jax.random.randint(k3, (bsz,), 0, mcfg["n_classes"])
+    else:
+        batch["labels"] = jax.random.normal(k3, (mcfg["batch"],))
+    return batch

@@ -1,0 +1,97 @@
+"""§Perf analysis for L1/L2 (DESIGN.md / EXPERIMENTS.md §Perf).
+
+L1 — Pallas kernel: VMEM working set + MXU utilization *estimates* per
+block configuration (interpret=True wallclock is CPU-numpy, not a TPU
+proxy; we optimize structure, not timing).
+
+L2 — lowered HLO: op-census of each artifact (fusion opportunities,
+redundant recompute check, graph size), the basis for the scan-vs-unroll
+and donation decisions.
+
+Usage:  python -m compile.perf_analysis [--artifacts ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+from collections import Counter
+
+from .kernels.cosa_kernel import mxu_utilization_estimate, vmem_bytes
+
+
+def l1_report():
+    print("== L1 (Pallas kernel): VMEM footprint / MXU utilization "
+          "estimates ==")
+    print(f"{'preset':<26} {'block':>6} {'VMEM':>10} {'MXU util':>9}")
+    # (label, n, b, a, m) — the shipped adapter shapes
+    shapes = [
+        ("tiny  d=64   (a32,b16)", 64, 16, 32, 64),
+        ("small d=128  (a64,b32)", 128, 32, 64, 128),
+        ("small ff=256 (a64,b32)", 256, 32, 64, 128),
+        ("e2e   d=512  (a128,b64)", 512, 64, 128, 512),
+        ("e2e   ff=2048 in", 512, 64, 128, 2048),
+        ("e2e   ff=2048 out", 2048, 64, 128, 512),
+        ("paper d=4096 (a1024,b256)", 4096, 256, 1024, 4096),
+    ]
+    for label, n, b, a, m in shapes:
+        for bm in (128,):
+            v = vmem_bytes(bm, n, b, a, m)
+            u = mxu_utilization_estimate(bm, n, b, a, m)
+            flag = "" if v < 16 * 2**20 else "  EXCEEDS 16MiB"
+            print(f"{label:<26} {bm:>6} {v/2**20:>9.2f}M {u:>9.2f}{flag}")
+    print("\nblock-rows sweep at the e2e shape (n=512,b=64,a=128,m=512):")
+    for bm in (32, 64, 128, 256, 512):
+        v = vmem_bytes(bm, 512, 64, 128, 512)
+        u = mxu_utilization_estimate(bm, 512, 64, 128, 512)
+        print(f"  bm={bm:<4}  VMEM {v/2**20:6.2f}M   MXU-util {u:.2f}")
+
+
+OP_RE = re.compile(r"^\s+(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[\w\[\],{}/ ]*?\s*"
+                   r"([a-z][a-z0-9\-]*)\(")
+
+
+def census(path):
+    ops = Counter()
+    with open(path) as f:
+        for line in f:
+            m = OP_RE.match(line)
+            if m:
+                ops[m.group(1)] += 1
+    return ops
+
+
+def l2_report(artifacts_dir):
+    print("\n== L2 (lowered HLO): op census per artifact ==")
+    interesting = ["tiny-lm_cosa_train", "small-lm_cosa_train",
+                   "small-lm_lora_train", "small-lm_full_train",
+                   "e2e-lm_cosa_train"]
+    print(f"{'artifact':<24} {'total':>7} {'dot':>5} {'fusion':>7} "
+          f"{'transpose':>9} {'reduce':>7} {'bytes':>9}")
+    for name in interesting:
+        path = os.path.join(artifacts_dir, f"{name}.hlo.txt")
+        if not os.path.exists(path):
+            continue
+        ops = census(path)
+        total = sum(ops.values())
+        size = os.path.getsize(path)
+        print(f"{name:<24} {total:>7} {ops.get('dot', 0):>5} "
+              f"{ops.get('fusion', 0):>7} {ops.get('transpose', 0):>9} "
+              f"{ops.get('reduce', 0):>7} {size:>9}")
+    print("\nredundant-recompute check: dot count per layer should be "
+          "~constant across methods modulo the adapter branch (3 dots for "
+          "CoSA fwd, +3 bwd).")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "artifacts"))
+    args = ap.parse_args()
+    l1_report()
+    l2_report(args.artifacts)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,184 @@
+"""L1 correctness: fused Pallas kernel vs the pure-jnp oracle.
+
+Includes hypothesis sweeps over shapes and dtypes, VJP checks against the
+paper's analytic gradient (Eq. 10), and numerical-gradient cross-checks.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.cosa_kernel import (cosa_adapter, cosa_adapter_3d,
+                                         mxu_utilization_estimate,
+                                         vmem_bytes)
+from compile.kernels.ref import (cosa_adapter_ref, cosa_adapter_vjp_ref,
+                                 cosa_delta_ref)
+
+
+def _rand(key, *shapes):
+    keys = jax.random.split(key, len(shapes))
+    return [jax.random.normal(k, s) for k, s in zip(keys, shapes)]
+
+
+class TestForward:
+    def test_matches_ref_basic(self):
+        x, l, r, y = _rand(jax.random.PRNGKey(0), (40, 24), (16, 12),
+                           (8, 24), (12, 8))
+        np.testing.assert_allclose(cosa_adapter(x, l, r, y),
+                                   cosa_adapter_ref(x, l, r, y),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_matches_materialized_delta(self):
+        """Activation-path kernel == x @ (L Y R)^T — the synthesis model."""
+        x, l, r, y = _rand(jax.random.PRNGKey(1), (10, 6), (7, 5), (4, 6),
+                           (5, 4))
+        delta = cosa_delta_ref(l, y, r, 1.0)        # (m, n)
+        np.testing.assert_allclose(cosa_adapter(x, l, r, y), x @ delta.T,
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_zero_core_gives_zero(self):
+        x, l, r, _ = _rand(jax.random.PRNGKey(2), (33, 16), (12, 8), (4, 16),
+                           (8, 4))
+        out = cosa_adapter(x, l, r, jnp.zeros((8, 4)))
+        assert float(jnp.abs(out).max()) == 0.0
+
+    def test_rows_not_multiple_of_block(self):
+        """Padding path: N deliberately not divisible by block_rows."""
+        x, l, r, y = _rand(jax.random.PRNGKey(3), (130, 24), (16, 12),
+                           (8, 24), (12, 8))
+        np.testing.assert_allclose(cosa_adapter(x, l, r, y, 64),
+                                   cosa_adapter_ref(x, l, r, y),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_single_row(self):
+        x, l, r, y = _rand(jax.random.PRNGKey(4), (1, 8), (6, 4), (3, 8),
+                           (4, 3))
+        np.testing.assert_allclose(cosa_adapter(x, l, r, y),
+                                   cosa_adapter_ref(x, l, r, y),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_3d_wrapper_scale(self):
+        x3, l, r, y = _rand(jax.random.PRNGKey(5), (2, 9, 16), (12, 8),
+                            (4, 16), (8, 4))
+        out = cosa_adapter_3d(x3, l, r, y, scale=2.5)
+        ref = 2.5 * cosa_adapter_ref(x3.reshape(18, 16), l, r, y)
+        np.testing.assert_allclose(out.reshape(18, 12), ref, rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_jit_composes(self):
+        x, l, r, y = _rand(jax.random.PRNGKey(6), (32, 16), (12, 8), (4, 16),
+                           (8, 4))
+        f = jax.jit(lambda x, y: cosa_adapter(x, l, r, y).sum())
+        np.testing.assert_allclose(f(x, y),
+                                   cosa_adapter_ref(x, l, r, y).sum(),
+                                   rtol=1e-5)
+
+
+class TestVJP:
+    def test_matches_analytic_eq10(self):
+        x, l, r, y, g = _rand(jax.random.PRNGKey(7), (21, 10), (9, 7), (5, 10),
+                              (7, 5), (21, 9))
+        f = lambda x, y: jnp.sum(cosa_adapter(x, l, r, y) * g)
+        dx, dy = jax.grad(f, (0, 1))(x, y)
+        dx_ref, dy_ref = cosa_adapter_vjp_ref(x, l, r, y, g)
+        np.testing.assert_allclose(dx, dx_ref, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(dy, dy_ref, rtol=1e-5, atol=1e-5)
+
+    def test_numerical_gradient_y(self):
+        x, l, r, y = _rand(jax.random.PRNGKey(8), (5, 6), (4, 3), (2, 6),
+                           (3, 2))
+        f = lambda y: jnp.sum(jnp.sin(cosa_adapter(x, l, r, y)))
+        g = jax.grad(f)(y)
+        eps = 1e-3
+        for i in range(3):
+            for j in range(2):
+                yp = y.at[i, j].add(eps)
+                ym = y.at[i, j].add(-eps)
+                num = (f(yp) - f(ym)) / (2 * eps)
+                np.testing.assert_allclose(g[i, j], num, rtol=2e-2, atol=1e-3)
+
+    def test_gradient_flows_through_x(self):
+        """∇x must route to earlier layers: ((gL)Y)R."""
+        x, l, r, y = _rand(jax.random.PRNGKey(9), (7, 6), (4, 3), (2, 6),
+                           (3, 2))
+        f = lambda x: jnp.sum(cosa_adapter(x, l, r, y) ** 2)
+        g = jax.grad(f)(x)
+        assert float(jnp.abs(g).max()) > 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    nrows=st.integers(1, 200),
+    n=st.integers(1, 48),
+    b=st.integers(1, 24),
+    a=st.integers(1, 24),
+    m=st.integers(1, 48),
+    block=st.sampled_from([8, 32, 128]),
+)
+def test_hypothesis_shapes(nrows, n, b, a, m, block):
+    """Kernel == oracle across the shape lattice (incl. padding edges)."""
+    key = jax.random.PRNGKey(nrows * 1000 + n * 100 + b * 10 + a)
+    x, l, r, y = _rand(key, (nrows, n), (m, a), (b, n), (a, b))
+    out = cosa_adapter(x, l, r, y, block)
+    ref = cosa_adapter_ref(x, l, r, y)
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(dtype=st.sampled_from(["float32", "bfloat16"]),
+       nrows=st.integers(4, 64))
+def test_hypothesis_dtypes(dtype, nrows):
+    key = jax.random.PRNGKey(nrows)
+    x, l, r, y = _rand(key, (nrows, 16), (12, 8), (4, 16), (8, 4))
+    dt = jnp.dtype(dtype)
+    out = cosa_adapter(x.astype(dt), l.astype(dt), r.astype(dt),
+                       y.astype(dt))
+    assert out.dtype == dt
+    ref = cosa_adapter_ref(x, l, r, y)
+    tol = 1e-4 if dtype == "float32" else 0.15
+    np.testing.assert_allclose(out.astype(jnp.float32), ref, rtol=tol,
+                               atol=tol * 8)
+
+
+class TestMTiled:
+    """The §Perf L1 m-tiled variant (paper-scale VMEM fix)."""
+
+    def test_matches_ref_with_m_tiling(self):
+        from compile.kernels.cosa_kernel import _pallas_forward
+        x, l, r, y = _rand(jax.random.PRNGKey(20), (70, 48), (96, 24),
+                           (12, 48), (24, 12))
+        out = _pallas_forward(x, l, r, y, block_rows=32, block_m=32)
+        np.testing.assert_allclose(out, cosa_adapter_ref(x, l, r, y),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_m_not_multiple_of_block(self):
+        from compile.kernels.cosa_kernel import _pallas_forward
+        x, l, r, y = _rand(jax.random.PRNGKey(21), (16, 20), (50, 8),
+                           (4, 20), (8, 4))
+        out = _pallas_forward(x, l, r, y, block_rows=8, block_m=16)
+        np.testing.assert_allclose(out, cosa_adapter_ref(x, l, r, y),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_vmem_mtiled_fits_paper_scale(self):
+        from compile.kernels.cosa_kernel import vmem_bytes_mtiled
+        # paper site m=n=4096, (a,b)=(1024,256): full-L kernel needs
+        # >16MiB; the m-tiled variant fits.
+        assert vmem_bytes(128, 4096, 256, 1024, 4096) > 16 * 2**20
+        assert vmem_bytes_mtiled(128, 512, 4096, 256, 1024) < 16 * 2**20
+
+
+class TestPerfModel:
+    def test_vmem_within_budget_for_presets(self):
+        """Every shipped preset's working set fits a 16 MiB VMEM budget."""
+        presets = [(128, 512, 64, 128, 512), (128, 2048, 64, 128, 512),
+                   (128, 512, 64, 128, 2048)]
+        for bm, n, b, a, m in presets:
+            assert vmem_bytes(bm, n, b, a, m) < 16 * 2 ** 20
+
+    def test_mxu_estimate_bounds(self):
+        u = mxu_utilization_estimate(128, 512, 64, 128, 512)
+        assert 0.0 < u <= 1.0
+        # 128-aligned shapes achieve full-tile issue
+        assert mxu_utilization_estimate(128, 512, 128, 128, 512) == 1.0

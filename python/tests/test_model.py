@@ -1,0 +1,164 @@
+"""L2 correctness: model forward/loss, adapter semantics, train-step descent."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, presets
+from compile.methods import ADAPTED_SITES, build_param_specs
+
+TINY_LM = presets.MODEL_PRESETS["tiny-lm"]
+TINY_CLS = presets.MODEL_PRESETS["tiny-cls"]
+
+PEFT_METHODS = ["lora", "dora", "vera", "adalora", "nola", "cosa"]
+
+
+def _meth(method, preset="tiny-lm", **ov):
+    return presets.method_cfg(preset, method, **ov)
+
+
+class TestSpecs:
+    @pytest.mark.parametrize("method", PEFT_METHODS + ["full"])
+    def test_roles_partition(self, method):
+        sb = build_param_specs(TINY_LM, _meth(method))
+        roles = {e["role"] for e in sb.entries}
+        assert roles <= {"trainable", "frozen", "batch"}
+        names = [e["name"] for e in sb.entries]
+        assert len(names) == len(set(names)), "duplicate spec names"
+
+    def test_full_has_no_frozen_params(self):
+        sb = build_param_specs(TINY_LM, _meth("full"))
+        assert sb.by_role("frozen") == []
+
+    def test_cosa_trainable_is_only_core_for_lm(self):
+        sb = build_param_specs(TINY_LM, _meth("cosa"))
+        tr = [e["name"] for e in sb.by_role("trainable")]
+        assert all(t.endswith(".y") for t in tr)
+        assert len(tr) == TINY_LM["n_layers"] * len(ADAPTED_SITES)
+
+    def test_cls_head_is_trainable(self):
+        sb = build_param_specs(TINY_CLS, _meth("cosa", "tiny-cls"))
+        tr = [e["name"] for e in sb.by_role("trainable")]
+        assert "head.w" in tr and "head.b" in tr
+
+    def test_cosa_param_count_matches_paper_formula(self):
+        """Trainable count == a·b per adapted site — independent of (m,n)."""
+        meth = _meth("cosa")
+        sb = build_param_specs(TINY_LM, meth)
+        count = sum(int(np.prod(e["shape"])) for e in sb.by_role("trainable"))
+        per_site = meth["a"] * meth["b"]
+        assert count == per_site * TINY_LM["n_layers"] * len(ADAPTED_SITES)
+
+
+class TestZeroInit:
+    @pytest.mark.parametrize("method", PEFT_METHODS)
+    def test_adapter_starts_at_base_model(self, method):
+        """Paper requirement: model initially behaves as the pre-trained one."""
+        meth = _meth(method)
+        p = model.init_params(TINY_LM, meth, seed=3)
+        batch = model.init_batch(TINY_LM, seed=3)
+        base = model.forward(p, TINY_LM, _meth("full"), batch["inputs"],
+                             batch["wmask"])
+        adapted = model.forward(p, TINY_LM, meth, batch["inputs"],
+                                batch["wmask"])
+        np.testing.assert_allclose(adapted, base, rtol=1e-4, atol=1e-4)
+
+
+class TestForward:
+    def test_causal_masking(self):
+        """LM logits at position i must not depend on tokens > i."""
+        meth = _meth("cosa")
+        p = model.init_params(TINY_LM, meth, seed=1)
+        batch = model.init_batch(TINY_LM, seed=1)
+        ids = batch["inputs"]
+        logits1 = model.forward(p, TINY_LM, meth, ids, batch["wmask"])
+        ids2 = ids.at[:, -1].set((ids[:, -1] + 7) % TINY_LM["vocab"])
+        logits2 = model.forward(p, TINY_LM, meth, ids2, batch["wmask"])
+        np.testing.assert_allclose(logits1[:, :-1], logits2[:, :-1],
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_padding_mask_ignores_tokens_cls(self):
+        meth = _meth("cosa", "tiny-cls")
+        p = model.init_params(TINY_CLS, meth, seed=2)
+        batch = model.init_batch(TINY_CLS, seed=2)
+        wm = batch["wmask"].at[:, 16:].set(0.0)
+        out1 = model.forward(p, TINY_CLS, meth, batch["inputs"], wm)
+        ids2 = batch["inputs"].at[:, 16:].set(0)
+        out2 = model.forward(p, TINY_CLS, meth, ids2, wm)
+        np.testing.assert_allclose(out1, out2, rtol=1e-4, atol=1e-4)
+
+
+class TestTrainStep:
+    def _run_steps(self, mcfg, meth, nsteps=12, lr=5e-2):
+        gmeth = dict(meth, method=presets.GRAPH_ALIAS.get(meth["method"],
+                                                          meth["method"]))
+        step = jax.jit(model.make_step(mcfg, gmeth, "train"))
+        sb = build_param_specs(mcfg, gmeth)
+        p = model.init_params(mcfg, gmeth, seed=5)
+        batch = model.init_batch(mcfg, seed=5)
+        tnames = [e["name"] for e in sb.by_role("trainable")]
+        fnames = [e["name"] for e in sb.by_role("frozen")]
+        bnames = [e["name"] for e in sb.by_role("batch")]
+        tr = [p[n] for n in tnames]
+        m = [jnp.zeros_like(v) for v in tr]
+        v = [jnp.zeros_like(x) for x in tr]
+        losses = []
+        for t in range(1, nsteps + 1):
+            args = ([jnp.float32(lr), jnp.float32(0.0), jnp.float32(1e9),
+                     jnp.float32(t)] + tr + m + v
+                    + [p[n] for n in fnames] + [batch[n] for n in bnames])
+            out = step(*args)
+            losses.append(float(out[0]))
+            k = len(tr)
+            tr = list(out[2:2 + k])
+            m = list(out[2 + k:2 + 2 * k])
+            v = list(out[2 + 2 * k:2 + 3 * k])
+        return losses
+
+    @pytest.mark.parametrize("method", ["cosa", "lora", "full"])
+    def test_loss_decreases_lm(self, method):
+        losses = self._run_steps(TINY_LM, _meth(method))
+        assert losses[-1] < losses[0] * 0.98, losses
+
+    @pytest.mark.parametrize("method", ["cosa", "vera", "dora"])
+    def test_loss_decreases_cls(self, method):
+        losses = self._run_steps(TINY_CLS, _meth(method, "tiny-cls"))
+        assert losses[-1] < losses[0], losses
+
+    def test_eval_step_matches_loss(self):
+        """train and eval artifacts compute the same loss on the same state."""
+        meth = _meth("cosa")
+        mcfg = TINY_LM
+        sb = build_param_specs(mcfg, meth)
+        p = model.init_params(mcfg, meth, seed=7)
+        batch = model.init_batch(mcfg, seed=7)
+        estep = jax.jit(model.make_step(mcfg, meth, "eval"))
+        tnames = [e["name"] for e in sb.by_role("trainable")]
+        fnames = [e["name"] for e in sb.by_role("frozen")]
+        bnames = [e["name"] for e in sb.by_role("batch")]
+        out = estep(*([p[n] for n in tnames] + [p[n] for n in fnames]
+                      + [batch[n] for n in bnames]))
+        loss_direct, _, _ = model.loss_and_metrics(p, mcfg, meth, batch)
+        np.testing.assert_allclose(float(out[0]), float(loss_direct),
+                                   rtol=1e-5)
+        assert out[2].shape == (mcfg["batch"], mcfg["max_seq"],
+                                mcfg["vocab"])
+
+
+class TestIoSpec:
+    @pytest.mark.parametrize("kind", ["train", "eval"])
+    def test_spec_matches_step_arity(self, kind):
+        meth = _meth("cosa")
+        ins, outs = model.io_spec(TINY_LM, meth, kind)
+        specs = model.input_shapedtypes(TINY_LM, meth, kind)
+        assert len(ins) == len(specs)
+        step = model.make_step(TINY_LM, meth, kind)
+        args = [jnp.zeros(s.shape, s.dtype) for s in specs]
+        # set t=1 to avoid 0^0 in bias correction
+        if kind == "train":
+            args[3] = jnp.float32(1.0)
+        out = step(*args)
+        assert len(out) == len(outs)
+        for o, spec in zip(out, outs):
+            assert list(o.shape) == spec["shape"], spec["name"]

@@ -1,0 +1,49 @@
+//! Bench: host-side CoSA adapter forward vs materialized ΔW — the
+//! paper's Table 1 FWD complexity argument in wall-clock form, plus the
+//! projection-regeneration cost behind the seed-storage trick.
+
+use cosa::adapters::cosa::{adapter_forward, materialize_delta, regen_l,
+                           regen_r};
+use cosa::math::matrix::Matrix;
+use cosa::math::rng::Pcg64;
+use cosa::util::bench::{bench, black_box};
+
+fn main() {
+    println!("== adapter_fwd: activation path vs materialized ΔW ==");
+    // paper NLG shape: site 2048x2048, (a,b)=(1024,256), batch rows 64
+    for (m, n, a, b, rows) in [
+        (512, 512, 128, 64, 64),
+        (2048, 2048, 1024, 256, 16),
+    ] {
+        let mut rng = Pcg64::new(1);
+        let x = Matrix::gaussian(rows, n, 1.0, &mut rng);
+        let l = regen_l(7, "bench.l", m, a);
+        let r = regen_r(7, "bench.r", b, n);
+        let y = Matrix::gaussian(a, b, 0.02, &mut rng);
+
+        bench(
+            &format!("adapter_forward m={m} n={n} a={a} b={b} rows={rows}"),
+            400,
+            || {
+                black_box(adapter_forward(&x, &l, &r, &y, 2.0));
+            },
+        );
+        if m <= 512 {
+            bench(
+                &format!("materialize ΔW + matmul m={m} n={n}"),
+                400,
+                || {
+                    let d = materialize_delta(&l, &y, &r, 2.0);
+                    black_box(x.matmul(&d.transpose()));
+                },
+            );
+        }
+    }
+
+    println!("\n== projection regeneration from seed (adapter load path) ==");
+    for (m, a) in [(512, 128), (2048, 1024)] {
+        bench(&format!("regen_l m={m} a={a}"), 300, || {
+            black_box(regen_l(7, "bench.l", m, a));
+        });
+    }
+}

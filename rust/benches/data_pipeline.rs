@@ -1,0 +1,28 @@
+//! Bench: synthetic-data generators and the batcher — the L3 data path
+//! must stay far below the XLA step cost (EXPERIMENTS.md §Perf L3).
+
+use cosa::data::batcher::{lm_batch, Batcher};
+use cosa::data::{codegen, mathgen, nlu};
+use cosa::util::bench::{bench, black_box};
+
+fn main() {
+    println!("== data_pipeline ==");
+    bench("mathgen 512 examples (mixed)", 300, || {
+        black_box(mathgen::generate(mathgen::Family::Mixed, 512, 0, 64, 1));
+    });
+    bench("codegen 512 examples", 300, || {
+        black_box(codegen::generate(512, 0, 64, 1));
+    });
+    bench("nlu mrpc-sim 512 examples", 300, || {
+        black_box(nlu::generate("mrpc-sim", 512, 0, 512, 48, 1).unwrap());
+    });
+
+    let ds = mathgen::generate(mathgen::Family::Mixed, 4096, 0, 64, 2);
+    let mut batcher = Batcher::new(ds.train.len(), 8, 3);
+    let r = bench("batcher next + lm_batch (B=8, T=64)", 300, || {
+        let idx = batcher.next_indices();
+        let exs: Vec<&_> = idx.iter().map(|i| &ds.train[*i]).collect();
+        black_box(lm_batch(&exs, 8, 64));
+    });
+    r.throughput(8.0, "examples");
+}

@@ -1,0 +1,70 @@
+//! Bench: end-to-end train/eval step latency per (preset × method) — the
+//! paper-table workloads' compute budget, plus executor overhead
+//! decomposition (batch literal marshalling vs XLA execute).
+//!
+//! Requires `make artifacts`.
+
+use cosa::config::RunConfig;
+use cosa::exp::harness::exp_train_cfg;
+use cosa::runtime::executor::Runtime;
+use cosa::runtime::Registry;
+use cosa::train::Trainer;
+use cosa::util::bench::{bench, black_box};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let reg = match Registry::open_default() {
+        Ok(r) => r,
+        Err(e) => {
+            println!("skipping e2e_step bench: {e}");
+            return Ok(());
+        }
+    };
+    println!("== e2e_step: optimizer-step latency (XLA CPU) ==");
+    for artifact in ["tiny-lm_cosa", "small-lm_cosa", "small-lm_lora",
+                     "small-lm_full"] {
+        if !reg.has(&format!("{artifact}_train")) {
+            continue;
+        }
+        let cfg = RunConfig {
+            name: format!("bench-{artifact}"),
+            artifact: artifact.into(),
+            task: "math".into(),
+            train: exp_train_cfg(1, 1e-3),
+            ..RunConfig::default()
+        };
+        let mut t = Trainer::new(&rt, &reg, cfg)?;
+        // warm the executable once outside the timer
+        t.run()?;
+        let batch = {
+            // deterministic bench batch
+            use cosa::data::batcher::lm_batch;
+            use cosa::train::TaskData;
+            match &t.data {
+                TaskData::Lm(d) => {
+                    let exs: Vec<&_> = d.train[..t.train_exec.meta.model.batch
+                        .min(d.train.len())].iter().collect();
+                    lm_batch(&exs, t.train_exec.meta.model.batch,
+                             t.train_exec.meta.model.max_seq)
+                }
+                _ => unreachable!(),
+            }
+        };
+        let state = &mut t.state;
+        let exec = &t.train_exec;
+        exec.take_profile();
+        let r = bench(&format!("{artifact} train_step"), 1500, || {
+            black_box(exec.train_step(state, 1e-4, 0.01, 1.0, &batch)
+                .unwrap());
+        });
+        let tokens = (exec.meta.model.batch * exec.meta.model.max_seq) as f64;
+        r.throughput(tokens, "tokens");
+        println!("    {}", exec.take_profile().report());
+
+        let eval_exec = &t.eval_exec;
+        bench(&format!("{artifact} eval_step"), 800, || {
+            black_box(eval_exec.eval_step(state, &batch).unwrap());
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Bench: RIP estimator hot path (Table 4's compute) — per-sample cost of
+//! the rank-one Gram expansion across sparsity levels and configs, plus
+//! coherence factorization cost.
+
+use cosa::rip::coherence::kron_coherence;
+use cosa::rip::estimator::{rip_constant, RipSetup};
+use cosa::util::bench::{bench, black_box};
+
+fn main() {
+    println!("== rip_bench: Monte-Carlo RIP estimation ==");
+    for (a, b) in [(32, 8), (128, 32), (256, 64)] {
+        for s in [5, 20] {
+            let setup = RipSetup::paper(a, b);
+            let r = bench(
+                &format!("rip_constant a={a} b={b} s={s} N=200"),
+                300,
+                || {
+                    black_box(rip_constant(setup, s, 200, 42));
+                },
+            );
+            r.throughput(200.0, "samples");
+        }
+    }
+    println!("\n== coherence (factorized, never materializes mn x ab) ==");
+    for (a, b) in [(64, 16), (256, 64)] {
+        bench(&format!("kron_coherence a={a} b={b}"), 300, || {
+            black_box(kron_coherence(512, 256, a, b, 7));
+        });
+    }
+}

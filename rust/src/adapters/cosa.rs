@@ -1,0 +1,132 @@
+//! Host-side CoSA adapter math + the paper's seed-regeneration storage.
+//!
+//! The deployable adapter artifact is *only* the core Y plus an RNG seed
+//! (§4.1: "only the compact matrix Y needs to be stored … together with a
+//! random seed for regenerating L and R").  `regen_l` / `regen_r` are the
+//! canonical generators — the runtime initializer (`init.rs`), the
+//! checkpoint loader and the portability example all call them, so a
+//! stored adapter reproduces bit-identical projections forever.
+
+use crate::math::matrix::Matrix;
+use crate::math::rng::Pcg64;
+
+/// Scale of the output projection L (m × a): entries N(0, 1/m) make
+/// E‖Lv‖² = ‖v‖² — norm-preserving reconstruction.
+pub fn l_sigma(m: usize) -> f64 {
+    1.0 / (m as f64).sqrt()
+}
+
+/// Scale of the input projection R (b × n): entries N(0, 1/b) make
+/// E‖Rx‖² = ‖x‖² — norm-preserving compression (JL-style rows).
+pub fn r_sigma(b: usize) -> f64 {
+    1.0 / (b as f64).sqrt()
+}
+
+/// Regenerate the fixed L projection for tensor `name` (e.g.
+/// "adp.3.wq.l") from the adapter seed.  Deterministic per (seed, name).
+pub fn regen_l(seed: u64, name: &str, m: usize, a: usize) -> Matrix {
+    let mut rng = Pcg64::derive(seed, name);
+    Matrix::gaussian(m, a, l_sigma(m), &mut rng)
+}
+
+/// Regenerate the fixed R projection (see `regen_l`).
+pub fn regen_r(seed: u64, name: &str, b: usize, n: usize) -> Matrix {
+    let mut rng = Pcg64::derive(seed, name);
+    Matrix::gaussian(b, n, r_sigma(b), &mut rng)
+}
+
+/// Host-side adapter forward on a batch of row activations
+/// (mirror of the Pallas kernel; used by tests and the portability check):
+/// `o = α · x Rᵀ Yᵀ Lᵀ` for x (N × n).
+pub fn adapter_forward(x: &Matrix, l: &Matrix, r: &Matrix, y: &Matrix,
+                       alpha: f32) -> Matrix {
+    let u = x.matmul(&r.transpose());
+    let v = u.matmul(&y.transpose());
+    let mut o = v.matmul(&l.transpose());
+    o.scale(alpha);
+    o
+}
+
+/// Materialized ΔW = α·L Y R (tests only — O(mn), the thing CoSA avoids).
+pub fn materialize_delta(l: &Matrix, y: &Matrix, r: &Matrix,
+                         alpha: f32) -> Matrix {
+    let mut d = l.matmul(y).matmul(r);
+    d.scale(alpha);
+    d
+}
+
+/// Trainable-parameter count for one adapted site — the paper's headline
+/// `ab`, independent of the site's (m, n).
+pub fn param_count(a: usize, b: usize) -> usize {
+    a * b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn regen_is_deterministic_and_name_scoped() {
+        let l1 = regen_l(7, "adp.0.wq.l", 16, 8);
+        let l2 = regen_l(7, "adp.0.wq.l", 16, 8);
+        assert_eq!(l1, l2);
+        assert_ne!(regen_l(7, "adp.0.wv.l", 16, 8), l1);
+        assert_ne!(regen_l(8, "adp.0.wq.l", 16, 8), l1);
+    }
+
+    #[test]
+    fn projections_are_norm_preserving_in_expectation() {
+        let mut rng = Pcg64::new(3);
+        let r = regen_r(1, "adp.0.wq.r", 48, 256);
+        let x = Matrix::gaussian(64, 256, 1.0, &mut rng);
+        let u = x.matmul(&r.transpose());
+        let ratio = u.frobenius_sq() / x.frobenius_sq();
+        assert!((ratio - 1.0).abs() < 0.25, "R ratio {ratio}");
+
+        let l = regen_l(1, "adp.0.wq.l", 256, 48);
+        let v = Matrix::gaussian(64, 48, 1.0, &mut rng);
+        let o = v.matmul(&l.transpose());
+        let ratio = o.frobenius_sq() / v.frobenius_sq();
+        assert!((ratio - 1.0).abs() < 0.25, "L ratio {ratio}");
+    }
+
+    #[test]
+    fn forward_matches_materialized_delta() {
+        prop::for_all("x·ΔWᵀ == adapter(x)", 10, |rng| {
+            let (nn, b, a, m, rows) = (
+                prop::int_in(rng, 2, 10),
+                prop::int_in(rng, 1, 6),
+                prop::int_in(rng, 1, 6),
+                prop::int_in(rng, 2, 10),
+                prop::int_in(rng, 1, 12),
+            );
+            let x = Matrix::gaussian(rows, nn, 1.0, rng);
+            let l = Matrix::gaussian(m, a, 1.0, rng);
+            let r = Matrix::gaussian(b, nn, 1.0, rng);
+            let y = Matrix::gaussian(a, b, 1.0, rng);
+            let fast = adapter_forward(&x, &l, &r, &y, 1.5);
+            let slow = x.matmul(&materialize_delta(&l, &y, &r, 1.5).transpose());
+            for (p, q) in fast.data.iter().zip(&slow.data) {
+                assert!((p - q).abs() < 1e-3, "{p} vs {q}");
+            }
+        });
+    }
+
+    #[test]
+    fn zero_core_is_identity_update() {
+        let l = regen_l(0, "l", 8, 4);
+        let r = regen_r(0, "r", 3, 6);
+        let y = Matrix::zeros(4, 3);
+        let x = Matrix::gaussian(5, 6, 1.0, &mut Pcg64::new(1));
+        let o = adapter_forward(&x, &l, &r, &y, 2.0);
+        assert!(o.frobenius() == 0.0);
+    }
+
+    #[test]
+    fn param_count_independent_of_layer_dims() {
+        assert_eq!(param_count(1024, 256), 262_144);
+        // same count regardless of whether the site is 2048×2048 or
+        // 8192×2048 — the paper's Table 1 property.
+    }
+}

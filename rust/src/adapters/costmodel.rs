@@ -1,0 +1,215 @@
+//! Parameter / memory cost model (paper Table 1 and Figure 3).
+//!
+//! Counts trainable parameters and optimizer-state memory for every
+//! method against *real* LLM architectures (Llama-3.2-1B, Qwen2-7B,
+//! Llama-3.1-8B) — this part of the paper's evaluation is exact
+//! arithmetic, so the reproduction matches its numbers to the megabyte.
+
+use crate::adapters::Method;
+
+/// One adapted linear site: x(n_in) → z(n_out).
+#[derive(Clone, Copy, Debug)]
+pub struct Site {
+    pub n_in: usize,
+    pub n_out: usize,
+}
+
+/// A model architecture as a list of adapted sites (per layer × layers).
+#[derive(Clone, Debug)]
+pub struct Arch {
+    pub name: &'static str,
+    pub sites: Vec<Site>,
+}
+
+impl Arch {
+    /// Decoder with GQA attention + gated MLP; adapters on
+    /// q,k,v,o,gate,up,down — the seven sites the paper's NLG runs adapt.
+    pub fn llama_style(name: &'static str, d: usize, kv: usize, ff: usize,
+                       layers: usize) -> Arch {
+        let per_layer = vec![
+            Site { n_in: d, n_out: d },   // q
+            Site { n_in: d, n_out: kv },  // k
+            Site { n_in: d, n_out: kv },  // v
+            Site { n_in: d, n_out: d },   // o
+            Site { n_in: d, n_out: ff },  // gate
+            Site { n_in: d, n_out: ff },  // up
+            Site { n_in: ff, n_out: d },  // down
+        ];
+        let mut sites = Vec::new();
+        for _ in 0..layers {
+            sites.extend_from_slice(&per_layer);
+        }
+        Arch { name, sites }
+    }
+
+    /// The three scales of Figure 3.
+    pub fn paper_models() -> Vec<Arch> {
+        vec![
+            // Llama-3.2-1B: d=2048, kv=512, ff=8192, 16 layers
+            Arch::llama_style("Llama-3.2-1B", 2048, 512, 8192, 16),
+            // Qwen2-7B: d=3584, kv=512, ff=18944, 28 layers
+            Arch::llama_style("Qwen2-7B", 3584, 512, 18944, 28),
+            // Llama-3.1-8B: d=4096, kv=1024, ff=14336, 32 layers
+            Arch::llama_style("Llama-3.1-8B", 4096, 1024, 14336, 32),
+        ]
+    }
+}
+
+/// Hyperparameters entering the counts.
+#[derive(Clone, Copy, Debug)]
+pub struct CostCfg {
+    pub r: usize,
+    pub a: usize,
+    pub b: usize,
+    pub nola_k: usize,
+    /// Full-model parameter count (Full FT rows in Table 2/3).
+    pub full_params: usize,
+}
+
+/// Trainable parameters for one site under `method` (paper Table 1).
+pub fn site_params(method: Method, s: Site, c: &CostCfg) -> usize {
+    let (m, n) = (s.n_out, s.n_in); // paper convention: ΔW ∈ R^{m×n}
+    match method {
+        Method::Full => m * n,
+        Method::LoRA | Method::PiSSA => (m + n) * c.r,
+        Method::DoRA => (m + n) * c.r + m,
+        // VeRA trains the two scaling vectors (r-dim d and m-dim b).
+        Method::VeRA => c.r + m,
+        // AdaLoRA's P/λ/Q at the initial rank.
+        Method::AdaLoRA => (m + n + 1) * c.r,
+        Method::NoLA => 2 * c.nola_k,
+        Method::CoSA => c.a * c.b,
+    }
+}
+
+/// Total trainable parameters across an architecture.
+pub fn total_params(method: Method, arch: &Arch, c: &CostCfg) -> usize {
+    if method == Method::Full {
+        return c.full_params;
+    }
+    arch.sites.iter().map(|s| site_params(method, *s, c)).sum()
+}
+
+/// Training memory for the adapter path in bytes: fp32 parameters +
+/// AdamW first/second moments + one gradient buffer (4 tensors the size
+/// of the trainables — the "≈3× optimizer state" of §4.2 plus params).
+pub fn train_memory_bytes(method: Method, arch: &Arch, c: &CostCfg) -> usize {
+    total_params(method, arch, c) * 4 * 4
+}
+
+/// Storage on disk: CoSA stores Y + a seed (projections regenerate);
+/// every other method stores all trainables.
+pub fn storage_bytes(method: Method, arch: &Arch, c: &CostCfg) -> usize {
+    match method {
+        Method::CoSA => total_params(method, arch, c) * 4 + 8,
+        _ => total_params(method, arch, c) * 4,
+    }
+}
+
+/// Asymptotic complexity strings for Table 1.
+pub fn table1_row(method: Method) -> (&'static str, &'static str,
+                                      &'static str, &'static str) {
+    match method {
+        Method::LoRA | Method::PiSSA =>
+            ("(m+n)r", "O((m+n)r)", "O(mn)", "O((m+n)r)"),
+        Method::DoRA => ("(m+n)r+m", "O((m+n)r)", "O(mn)", "O((m+n)r)"),
+        Method::VeRA => ("(m+n)", "O(m+n)", "O(mn)", "O(m+n)"),
+        Method::CoSA => ("ab", "O(ab)", "O(mn)", "O(ab)"),
+        Method::Full => ("mn", "O(mn)", "O(mn)", "O(mn)"),
+        Method::AdaLoRA => ("(m+n+1)r", "O((m+n)r)", "O(mn)", "O((m+n)r)"),
+        Method::NoLA => ("2k", "O(k)", "O(mn)", "O(k)"),
+    }
+}
+
+pub fn fmt_params(p: usize) -> String {
+    if p >= 1_000_000_000 {
+        format!("{:.2}B", p as f64 / 1e9)
+    } else if p >= 1_000_000 {
+        format!("{:.1}M", p as f64 / 1e6)
+    } else if p >= 1_000 {
+        format!("{:.1}K", p as f64 / 1e3)
+    } else {
+        p.to_string()
+    }
+}
+
+pub fn fmt_mb(bytes: usize) -> String {
+    format!("{:.0}MB", bytes as f64 / (1024.0 * 1024.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_cfg() -> CostCfg {
+        CostCfg { r: 128, a: 1024, b: 256, nola_k: 1024, full_params: 0 }
+    }
+
+    /// Figure 3a's exact numbers: LoRA vs CoSA trainable params.
+    #[test]
+    fn fig3_param_counts_match_paper() {
+        let c = paper_cfg();
+        let models = Arch::paper_models();
+        let lora: Vec<usize> = models.iter()
+            .map(|m| total_params(Method::LoRA, m, &c)).collect();
+        let cosa: Vec<usize> = models.iter()
+            .map(|m| total_params(Method::CoSA, m, &c)).collect();
+        // Paper: 1B → 90M/29M, 7B → 323M/51M, 8B → 336M/58M.
+        assert!((lora[0] as f64 / 1e6 - 90.0).abs() < 1.0, "{}", lora[0]);
+        assert!((cosa[0] as f64 / 1e6 - 29.4).abs() < 0.5, "{}", cosa[0]);
+        assert!((lora[1] as f64 / 1e6 - 323.0).abs() < 2.0, "{}", lora[1]);
+        assert!((cosa[1] as f64 / 1e6 - 51.4).abs() < 0.5, "{}", cosa[1]);
+        assert!((lora[2] as f64 / 1e6 - 335.5).abs() < 2.0, "{}", lora[2]);
+        assert!((cosa[2] as f64 / 1e6 - 58.7).abs() < 0.5, "{}", cosa[2]);
+    }
+
+    /// Paper claim: "CoSA operates with less than 32.6% of the parameters
+    /// [of LoRA] across all employed models".
+    #[test]
+    fn cosa_under_one_third_of_lora() {
+        let c = paper_cfg();
+        for m in Arch::paper_models() {
+            let ratio = total_params(Method::CoSA, &m, &c) as f64
+                / total_params(Method::LoRA, &m, &c) as f64;
+            assert!(ratio < 0.326, "{}: {ratio}", m.name);
+        }
+    }
+
+    #[test]
+    fn cosa_memory_independent_of_width() {
+        let c = paper_cfg();
+        let narrow = Arch::llama_style("narrow", 1024, 256, 4096, 4);
+        let wide = Arch::llama_style("wide", 8192, 2048, 28672, 4);
+        assert_eq!(
+            total_params(Method::CoSA, &narrow, &c),
+            total_params(Method::CoSA, &wide, &c),
+            "CoSA count must not depend on (m, n)"
+        );
+        assert!(total_params(Method::LoRA, &wide, &c)
+            > total_params(Method::LoRA, &narrow, &c));
+    }
+
+    #[test]
+    fn dora_costs_more_than_lora() {
+        let c = paper_cfg();
+        let m = &Arch::paper_models()[0];
+        assert!(total_params(Method::DoRA, m, &c)
+            > total_params(Method::LoRA, m, &c));
+    }
+
+    #[test]
+    fn vera_is_cheapest_vector_method() {
+        let c = paper_cfg();
+        let m = &Arch::paper_models()[0];
+        assert!(total_params(Method::VeRA, m, &c)
+            < total_params(Method::CoSA, m, &c));
+    }
+
+    #[test]
+    fn storage_includes_seed_only_for_cosa() {
+        let c = paper_cfg();
+        let m = &Arch::paper_models()[0];
+        let p = total_params(Method::CoSA, m, &c);
+        assert_eq!(storage_bytes(Method::CoSA, m, &c), p * 4 + 8);
+    }
+}

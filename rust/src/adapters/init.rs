@@ -1,0 +1,315 @@
+//! Deterministic initialization of every artifact input tensor.
+//!
+//! Two seeds, two concerns:
+//! * `base_seed` — the synthetic "pretrained" trunk (DESIGN.md §2: stands
+//!   in for RoBERTa/Llama/Qwen checkpoints; all methods see the *same*
+//!   frozen W0 for a given seed, so method comparisons are paired).
+//! * `adapter_seed` — the paper's stored adapter seed; CoSA's L/R (and
+//!   VeRA/NoLA's shared banks) regenerate from it via `Pcg64::derive`.
+//!
+//! PiSSA is initialized here per the paper: randomized SVD of each W0,
+//! principal factors into A/B, residual folded back into the trunk.
+
+use std::collections::BTreeMap;
+
+use crate::adapters::cosa;
+use crate::adapters::Method;
+use crate::math::matrix::Matrix;
+use crate::math::rng::Pcg64;
+use crate::math::svd::randomized_svd;
+
+/// Method hyperparameters mirrored from the artifact meta json.
+#[derive(Clone, Copy, Debug)]
+pub struct MethodCfg {
+    pub method: Method,
+    pub r: usize,
+    pub a: usize,
+    pub b: usize,
+    pub alpha: f32,
+    pub nola_k: usize,
+}
+
+/// Initialize all trainable + frozen tensors for the given specs
+/// (`(name, shape)` pairs from the artifact meta, in meta order).
+pub fn init_state(
+    specs: &[(String, Vec<usize>)],
+    meth: &MethodCfg,
+    base_seed: u64,
+    adapter_seed: u64,
+) -> BTreeMap<String, Vec<f32>> {
+    let mut out: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+
+    // Pass 1: trunk tensors (synthetic pretrained weights).
+    for (name, shape) in specs {
+        if is_adapter_tensor(name) {
+            continue;
+        }
+        out.insert(name.clone(), init_trunk(name, shape, base_seed));
+    }
+
+    // Pass 2: adapter tensors (may reference trunk W0).
+    for (name, shape) in specs {
+        if !is_adapter_tensor(name) {
+            continue;
+        }
+        let vals = init_adapter(name, shape, meth, adapter_seed, &out);
+        out.insert(name.clone(), vals);
+    }
+
+    // Pass 3: PiSSA — SVD-initialize A/B and fold residuals into W0.
+    if meth.method == Method::PiSSA {
+        pissa_init(specs, meth, adapter_seed, &mut out);
+    }
+    out
+}
+
+fn is_adapter_tensor(name: &str) -> bool {
+    name.starts_with("adp.") || name.starts_with("vera.")
+        || name.starts_with("nola.")
+}
+
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product::<usize>().max(1)
+}
+
+fn init_trunk(name: &str, shape: &[usize], seed: u64) -> Vec<f32> {
+    let mut rng = Pcg64::derive(seed, name);
+    let n = numel(shape);
+    if name.ends_with("ln1.s") || name.ends_with("ln2.s")
+        || name.ends_with("lnf.s")
+    {
+        return vec![1.0; n];
+    }
+    if name.ends_with(".b") {
+        // layernorm biases and head bias
+        return vec![0.0; n];
+    }
+    if name == "pos" {
+        return rng.normal_vec(n, 0.01);
+    }
+    if name == "embed" {
+        let d = *shape.last().unwrap() as f64;
+        return rng.normal_vec(n, 1.0 / d.sqrt());
+    }
+    // weight matrices: N(0, 1/√fan_in)
+    let fan_in = shape[0].max(1) as f64;
+    rng.normal_vec(n, 1.0 / fan_in.sqrt())
+}
+
+fn init_adapter(
+    name: &str,
+    shape: &[usize],
+    meth: &MethodCfg,
+    seed: u64,
+    trunk: &BTreeMap<String, Vec<f32>>,
+) -> Vec<f32> {
+    let n = numel(shape);
+    let mut rng = Pcg64::derive(seed, name);
+
+    // --- zero-init tensors (ΔW = 0 at step 0) ---
+    if ends_with_any(name, &[".y", ".dvec", ".ca", ".cb", ".lam"])
+        || (name.starts_with("adp.") && name.ends_with(".b"))
+        || (name.starts_with("adp.") && name.ends_with(".bvec"))
+    {
+        return vec![0.0; n];
+    }
+    if name.ends_with(".mask") {
+        return vec![1.0; n]; // AdaLoRA rank mask starts fully open
+    }
+    if name.ends_with(".mag") {
+        // DoRA magnitude = column norms of the frozen W0 at this site.
+        let w0_name = site_w0_name(name);
+        let w0 = &trunk[&w0_name];
+        let cols = shape[0];
+        let rows = w0.len() / cols;
+        let m = Matrix::from_vec(rows, cols, w0.clone());
+        return m.col_norms();
+    }
+
+    // --- CoSA fixed projections (norm-preserving scales) ---
+    if name.starts_with("adp.") && name.ends_with(".l") {
+        let (m, a) = (shape[0], shape[1]);
+        return cosa::regen_l(seed, name, m, a).data;
+    }
+    if name.starts_with("adp.") && name.ends_with(".r") {
+        let (b, nn) = (shape[0], shape[1]);
+        return cosa::regen_r(seed, name, b, nn).data;
+    }
+
+    // --- shared frozen banks (VeRA / NoLA) + LoRA-family A factors ---
+    if name.starts_with("vera.") || name.starts_with("nola.")
+        || name.ends_with(".a") || name.ends_with(".p")
+        || name.ends_with(".q")
+    {
+        let fan_in = shape[0].max(1) as f64;
+        let _ = meth; // scales are shape-driven
+        return rng.normal_vec(n, 1.0 / fan_in.sqrt());
+    }
+    panic!("no initializer for adapter tensor `{name}` ({shape:?})");
+}
+
+fn ends_with_any(name: &str, suffixes: &[&str]) -> bool {
+    suffixes.iter().any(|s| name.ends_with(s))
+}
+
+/// "adp.3.wq.mag" → "lyr3.wq"
+fn site_w0_name(adapter_name: &str) -> String {
+    let parts: Vec<&str> = adapter_name.split('.').collect();
+    format!("lyr{}.{}", parts[1], parts[2])
+}
+
+/// PiSSA (Meng et al. 2024): A,B from the principal SVD factors of W0 so
+/// that (α/r)·A·B equals the top-r component; residual replaces W0.
+fn pissa_init(
+    specs: &[(String, Vec<usize>)],
+    meth: &MethodCfg,
+    seed: u64,
+    state: &mut BTreeMap<String, Vec<f32>>,
+) {
+    let scale = meth.alpha / meth.r as f32;
+    for (name, shape) in specs {
+        if !(name.starts_with("adp.") && name.ends_with(".a")) {
+            continue;
+        }
+        let w0_name = site_w0_name(name);
+        let b_name = name.strip_suffix(".a").unwrap().to_string() + ".b";
+        let (ni, r) = (shape[0], shape[1]);
+        let w0_vals = state[&w0_name].clone();
+        let no = w0_vals.len() / ni;
+        let w0 = Matrix::from_vec(ni, no, w0_vals);
+
+        let mut rng = Pcg64::derive(seed, name);
+        let svd = randomized_svd(&w0, r, 4, &mut rng);
+        // A = U·√S / √scale, B = √S·Vᵀ / √scale  ⇒ scale·A·B = U S Vᵀ
+        let mut a = Matrix::zeros(ni, r);
+        let mut b = Matrix::zeros(r, no);
+        let s_norm = scale.max(1e-12).sqrt();
+        for k in 0..r.min(svd.s.len()) {
+            let sq = svd.s[k].max(0.0).sqrt();
+            for i in 0..ni {
+                a.set(i, k, svd.u.at(i, k) * sq / s_norm);
+            }
+            for j in 0..no {
+                b.set(k, j, svd.vt.at(k, j) * sq / s_norm);
+            }
+        }
+        // residual: W0 ← W0 − scale·A·B
+        let mut delta = a.matmul(&b);
+        delta.scale(scale);
+        let resid = w0.sub(&delta);
+        state.insert(w0_name, resid.data);
+        state.insert(name.clone(), a.data);
+        state.insert(b_name, b.data);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(method: Method) -> MethodCfg {
+        MethodCfg { method, r: 4, a: 16, b: 8, alpha: 2.0, nola_k: 8 }
+    }
+
+    fn lora_specs() -> Vec<(String, Vec<usize>)> {
+        vec![
+            ("embed".into(), vec![64, 16]),
+            ("lyr0.ln1.s".into(), vec![16]),
+            ("lyr0.ln1.b".into(), vec![16]),
+            ("lyr0.wq".into(), vec![16, 16]),
+            ("adp.0.wq.a".into(), vec![16, 4]),
+            ("adp.0.wq.b".into(), vec![4, 16]),
+        ]
+    }
+
+    #[test]
+    fn trunk_deterministic_and_method_independent() {
+        let s1 = init_state(&lora_specs(), &cfg(Method::LoRA), 5, 9);
+        let s2 = init_state(&lora_specs(), &cfg(Method::LoRA), 5, 10);
+        assert_eq!(s1["lyr0.wq"], s2["lyr0.wq"],
+                   "trunk must depend only on base_seed");
+        let s3 = init_state(&lora_specs(), &cfg(Method::LoRA), 6, 9);
+        assert_ne!(s1["lyr0.wq"], s3["lyr0.wq"]);
+    }
+
+    #[test]
+    fn layernorm_scales_are_one() {
+        let s = init_state(&lora_specs(), &cfg(Method::LoRA), 5, 9);
+        assert!(s["lyr0.ln1.s"].iter().all(|v| *v == 1.0));
+        assert!(s["lyr0.ln1.b"].iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn lora_b_zero_a_random() {
+        let s = init_state(&lora_specs(), &cfg(Method::LoRA), 5, 9);
+        assert!(s["adp.0.wq.b"].iter().all(|v| *v == 0.0));
+        assert!(s["adp.0.wq.a"].iter().any(|v| *v != 0.0));
+    }
+
+    #[test]
+    fn cosa_projections_match_regen() {
+        let specs = vec![
+            ("lyr0.wq".into(), vec![16, 16]),
+            ("adp.0.wq.l".into(), vec![16, 16]),
+            ("adp.0.wq.r".into(), vec![8, 16]),
+            ("adp.0.wq.y".into(), vec![16, 8]),
+        ];
+        let s = init_state(&specs, &cfg(Method::CoSA), 5, 9);
+        assert_eq!(s["adp.0.wq.l"], cosa::regen_l(9, "adp.0.wq.l", 16, 16).data);
+        assert_eq!(s["adp.0.wq.r"], cosa::regen_r(9, "adp.0.wq.r", 8, 16).data);
+        assert!(s["adp.0.wq.y"].iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn dora_magnitude_equals_w0_col_norms() {
+        let specs = vec![
+            ("lyr0.wq".into(), vec![16, 16]),
+            ("adp.0.wq.a".into(), vec![16, 4]),
+            ("adp.0.wq.b".into(), vec![4, 16]),
+            ("adp.0.wq.mag".into(), vec![16]),
+        ];
+        let s = init_state(&specs, &cfg(Method::DoRA), 5, 9);
+        let w0 = Matrix::from_vec(16, 16, s["lyr0.wq"].clone());
+        let norms = w0.col_norms();
+        for (a, b) in s["adp.0.wq.mag"].iter().zip(&norms) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn pissa_base_plus_delta_reconstructs_w0() {
+        let specs = vec![
+            ("lyr0.wq".into(), vec![16, 16]),
+            ("adp.0.wq.a".into(), vec![16, 4]),
+            ("adp.0.wq.b".into(), vec![4, 16]),
+        ];
+        let c = cfg(Method::PiSSA);
+        let pristine = init_trunk("lyr0.wq", &[16, 16], 5);
+        let s = init_state(&specs, &c, 5, 9);
+        let resid = Matrix::from_vec(16, 16, s["lyr0.wq"].clone());
+        let a = Matrix::from_vec(16, 4, s["adp.0.wq.a"].clone());
+        let b = Matrix::from_vec(4, 16, s["adp.0.wq.b"].clone());
+        let mut delta = a.matmul(&b);
+        delta.scale(c.alpha / c.r as f32);
+        let rec = resid.add(&delta);
+        let w0 = Matrix::from_vec(16, 16, pristine);
+        let err = rec.sub(&w0).frobenius() / w0.frobenius();
+        assert!(err < 1e-3, "pissa reconstruction err {err}");
+        // and the principal component actually lives in A·B
+        assert!(delta.frobenius() > 0.1 * w0.frobenius());
+    }
+
+    #[test]
+    fn adalora_mask_open_lam_zero() {
+        let specs = vec![
+            ("lyr0.wq".into(), vec![16, 16]),
+            ("adp.0.wq.p".into(), vec![16, 4]),
+            ("adp.0.wq.lam".into(), vec![4]),
+            ("adp.0.wq.q".into(), vec![4, 16]),
+            ("adp.0.wq.mask".into(), vec![4]),
+        ];
+        let s = init_state(&specs, &cfg(Method::AdaLoRA), 5, 9);
+        assert!(s["adp.0.wq.mask"].iter().all(|v| *v == 1.0));
+        assert!(s["adp.0.wq.lam"].iter().all(|v| *v == 0.0));
+    }
+}

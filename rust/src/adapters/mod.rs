@@ -1,0 +1,84 @@
+//! Adapter methods: CoSA and every baseline the paper evaluates.
+//!
+//! Three concerns live here:
+//! * `init` — deterministic tensor initialization for every artifact input
+//!   (synthetic "pretrained" trunks, Gaussian L/R projections, PiSSA SVD
+//!   init, VeRA/NoLA shared banks, DoRA magnitudes);
+//! * `cosa` — the host-side mirror of the adapter math plus the paper's
+//!   seed-regeneration storage trick (store Y + seed, regenerate L and R);
+//! * `costmodel` — trainable-parameter and memory accounting against real
+//!   LLM architectures (Table 1, Figure 3).
+
+pub mod cosa;
+pub mod costmodel;
+pub mod init;
+
+/// The PEFT methods implemented across L2/L3.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Full,
+    LoRA,
+    PiSSA,
+    DoRA,
+    VeRA,
+    AdaLoRA,
+    NoLA,
+    CoSA,
+}
+
+impl Method {
+    pub fn from_str(s: &str) -> anyhow::Result<Method> {
+        Ok(match s {
+            "full" => Method::Full,
+            "lora" => Method::LoRA,
+            "pissa" => Method::PiSSA,
+            "dora" => Method::DoRA,
+            "vera" => Method::VeRA,
+            "adalora" => Method::AdaLoRA,
+            "nola" => Method::NoLA,
+            "cosa" => Method::CoSA,
+            other => anyhow::bail!("unknown method `{other}`"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Full => "full",
+            Method::LoRA => "lora",
+            Method::PiSSA => "pissa",
+            Method::DoRA => "dora",
+            Method::VeRA => "vera",
+            Method::AdaLoRA => "adalora",
+            Method::NoLA => "nola",
+            Method::CoSA => "cosa",
+        }
+    }
+
+    /// Display name matching the paper's tables.
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            Method::Full => "Full FT",
+            Method::LoRA => "LoRA",
+            Method::PiSSA => "PiSSA",
+            Method::DoRA => "DoRA",
+            Method::VeRA => "VeRA",
+            Method::AdaLoRA => "AdaLoRA",
+            Method::NoLA => "NoLA",
+            Method::CoSA => "CoSA",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_names() {
+        for m in [Method::Full, Method::LoRA, Method::PiSSA, Method::DoRA,
+                  Method::VeRA, Method::AdaLoRA, Method::NoLA, Method::CoSA] {
+            assert_eq!(Method::from_str(m.name()).unwrap(), m);
+        }
+        assert!(Method::from_str("qlora").is_err());
+    }
+}

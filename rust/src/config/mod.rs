@@ -1,0 +1,169 @@
+//! Config system: run configs (TOML) + the preset registry mirrored from
+//! `python/compile/presets.py` via `artifacts/manifest.json`.
+//!
+//! A run is fully described by (artifact entry, task, train hyperparams,
+//! seeds).  `RunConfig::from_toml` loads a config file; every field has a
+//! sensible default so tiny configs stay tiny (see `configs/`).
+
+pub mod presets;
+
+use crate::util::toml::TomlDoc;
+
+/// Learning-rate schedule selector (rust-side; the artifact takes lr as a
+/// scalar input every step).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Schedule {
+    Constant,
+    /// Linear warmup then linear decay to zero (GLUE setup, App. C.1).
+    LinearWarmup { warmup_frac: f64 },
+    /// Linear warmup then cosine decay (NLG setup, App. C.2).
+    CosineWarmup { warmup_frac: f64 },
+}
+
+/// Training hyperparameters owned by the rust coordinator.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f64,
+    pub weight_decay: f64,
+    pub clip_norm: f64,
+    pub schedule: Schedule,
+    pub eval_every: usize,
+    pub log_every: usize,
+    /// Logical batch = device batch × grad_accum (batcher groups chunks).
+    pub grad_accum: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 200,
+            lr: 2e-3,
+            weight_decay: 0.01,
+            clip_norm: 1.0,
+            schedule: Schedule::CosineWarmup { warmup_frac: 0.03 },
+            eval_every: 50,
+            log_every: 10,
+            grad_accum: 1,
+        }
+    }
+}
+
+/// A full run description.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub name: String,
+    /// Artifact entry name, e.g. "small-lm_cosa" (kind suffix added by the
+    /// trainer: `_train` / `_eval`).
+    pub artifact: String,
+    /// Task id from `data::tasks` (e.g. "math", "code", "nlu:mrpc-sim").
+    pub task: String,
+    pub train: TrainConfig,
+    pub base_seed: u64,
+    pub adapter_seed: u64,
+    pub data_seed: u64,
+    pub out_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            name: "run".into(),
+            artifact: "tiny-lm_cosa".into(),
+            task: "math".into(),
+            train: TrainConfig::default(),
+            base_seed: 42,
+            adapter_seed: 1234,
+            data_seed: 7,
+            out_dir: "runs".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_toml(src: &str) -> anyhow::Result<RunConfig> {
+        let doc = TomlDoc::parse(src)?;
+        let mut cfg = RunConfig::default();
+        cfg.name = doc.str_or("name", &cfg.name);
+        cfg.artifact = doc.str_or("artifact", &cfg.artifact);
+        cfg.task = doc.str_or("task", &cfg.task);
+        cfg.base_seed = doc.i64_or("seeds.base", cfg.base_seed as i64) as u64;
+        cfg.adapter_seed =
+            doc.i64_or("seeds.adapter", cfg.adapter_seed as i64) as u64;
+        cfg.data_seed = doc.i64_or("seeds.data", cfg.data_seed as i64) as u64;
+        cfg.out_dir = doc.str_or("out_dir", &cfg.out_dir);
+
+        let t = &mut cfg.train;
+        t.steps = doc.i64_or("train.steps", t.steps as i64) as usize;
+        t.lr = doc.f64_or("train.lr", t.lr);
+        t.weight_decay = doc.f64_or("train.weight_decay", t.weight_decay);
+        t.clip_norm = doc.f64_or("train.clip_norm", t.clip_norm);
+        t.eval_every =
+            doc.i64_or("train.eval_every", t.eval_every as i64) as usize;
+        t.log_every =
+            doc.i64_or("train.log_every", t.log_every as i64) as usize;
+        t.grad_accum =
+            doc.i64_or("train.grad_accum", t.grad_accum as i64) as usize;
+        let warmup = doc.f64_or("train.warmup_frac", 0.03);
+        t.schedule = match doc.str_or("train.schedule", "cosine").as_str() {
+            "constant" => Schedule::Constant,
+            "linear" => Schedule::LinearWarmup { warmup_frac: warmup },
+            "cosine" => Schedule::CosineWarmup { warmup_frac: warmup },
+            other => anyhow::bail!("unknown schedule `{other}`"),
+        };
+        Ok(cfg)
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<RunConfig> {
+        let src = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        Self::from_toml(&src)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_fill_missing_fields() {
+        let cfg = RunConfig::from_toml("artifact = \"small-lm_cosa\"").unwrap();
+        assert_eq!(cfg.artifact, "small-lm_cosa");
+        assert_eq!(cfg.train.steps, 200);
+        assert_eq!(cfg.train.weight_decay, 0.01);
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let cfg = RunConfig::from_toml(
+            r#"
+name = "e2e-math"
+artifact = "e2e-lm_cosa"
+task = "math"
+out_dir = "runs/e2e"
+[train]
+steps = 300
+lr = 1e-3
+schedule = "cosine"
+warmup_frac = 0.1
+clip_norm = 0.5
+[seeds]
+base = 1
+adapter = 2
+data = 3
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "e2e-math");
+        assert_eq!(cfg.train.steps, 300);
+        assert_eq!(cfg.train.clip_norm, 0.5);
+        assert_eq!(cfg.train.schedule,
+                   Schedule::CosineWarmup { warmup_frac: 0.1 });
+        assert_eq!((cfg.base_seed, cfg.adapter_seed, cfg.data_seed), (1, 2, 3));
+    }
+
+    #[test]
+    fn bad_schedule_rejected() {
+        assert!(RunConfig::from_toml("[train]\nschedule = \"step\"").is_err());
+    }
+}

@@ -1,0 +1,248 @@
+//! Batching: padding, loss-mask construction, epoch shuffling and
+//! wrap-around fill so every batch matches the artifact's static (B, T).
+//!
+//! LM batches implement completion-only loss: `targets[i] = ids[i+1]` and
+//! the weight mask selects exactly the positions that predict completion
+//! tokens (the prompt is context, not loss).
+
+use crate::data::tokenizer::PAD;
+use crate::data::{ClsExample, LmExample};
+use crate::math::rng::Pcg64;
+
+/// A materialized batch in artifact input layout (row-major B×T).
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub bsz: usize,
+    pub seq: usize,
+    pub ids: Vec<i32>,
+    pub wmask: Vec<f32>,
+    /// LM next-token targets (None for cls/reg).
+    pub targets: Option<Vec<i32>>,
+    /// cls labels (i32) or reg labels (f32).
+    pub labels_i: Option<Vec<i32>>,
+    pub labels_f: Option<Vec<f32>>,
+    /// Number of genuine (non-wraparound-fill) examples in this batch.
+    pub valid: usize,
+}
+
+/// Build one LM batch from `examples` (≤ bsz; wraps if fewer).
+pub fn lm_batch(examples: &[&LmExample], bsz: usize, seq: usize) -> Batch {
+    assert!(!examples.is_empty());
+    let mut ids = vec![PAD as i32; bsz * seq];
+    let mut targets = vec![PAD as i32; bsz * seq];
+    let mut wmask = vec![0.0f32; bsz * seq];
+    for bi in 0..bsz {
+        let e = examples[bi % examples.len()];
+        let full: Vec<u32> = e.prompt.iter().chain(&e.completion).copied()
+            .collect();
+        let len = full.len().min(seq);
+        for t in 0..len {
+            ids[bi * seq + t] = full[t] as i32;
+        }
+        // position i predicts token i+1; mask on completion predictions
+        let comp_start = e.prompt.len().min(seq);
+        for t in 0..len.saturating_sub(1) {
+            targets[bi * seq + t] = full[t + 1] as i32;
+            if t + 1 >= comp_start {
+                wmask[bi * seq + t] = 1.0;
+            }
+        }
+    }
+    Batch {
+        bsz,
+        seq,
+        ids,
+        wmask,
+        targets: Some(targets),
+        labels_i: None,
+        labels_f: None,
+        valid: examples.len().min(bsz),
+    }
+}
+
+/// Build one classification/regression batch.
+pub fn cls_batch(examples: &[&ClsExample], bsz: usize, seq: usize,
+                 regression: bool) -> Batch {
+    assert!(!examples.is_empty());
+    let mut ids = vec![PAD as i32; bsz * seq];
+    let mut wmask = vec![0.0f32; bsz * seq];
+    let mut li = vec![0i32; bsz];
+    let mut lf = vec![0f32; bsz];
+    for bi in 0..bsz {
+        let e = examples[bi % examples.len()];
+        let len = e.tokens.len().min(seq);
+        for t in 0..len {
+            ids[bi * seq + t] = e.tokens[t] as i32;
+            wmask[bi * seq + t] = 1.0;
+        }
+        li[bi] = e.label as i32;
+        lf[bi] = e.label;
+    }
+    Batch {
+        bsz,
+        seq,
+        ids,
+        wmask,
+        targets: None,
+        labels_i: if regression { None } else { Some(li) },
+        labels_f: if regression { Some(lf) } else { None },
+        valid: examples.len().min(bsz),
+    }
+}
+
+/// Epoch-shuffling index iterator over a dataset of `n` examples.
+/// Grad-accum grouping: `chunk = bsz * grad_accum` examples are drawn
+/// per logical step, split into `grad_accum` device batches.
+pub struct Batcher {
+    n: usize,
+    bsz: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    epoch: u64,
+    seed: u64,
+}
+
+impl Batcher {
+    pub fn new(n: usize, bsz: usize, seed: u64) -> Batcher {
+        assert!(n > 0 && bsz > 0);
+        let mut b = Batcher { n, bsz, order: (0..n).collect(), cursor: 0,
+                              epoch: 0, seed };
+        b.reshuffle();
+        b
+    }
+
+    fn reshuffle(&mut self) {
+        let mut rng = Pcg64::derive(self.seed, &format!("epoch.{}", self.epoch));
+        self.order = (0..self.n).collect();
+        rng.shuffle(&mut self.order);
+        self.cursor = 0;
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Next `bsz` example indices, rolling over epochs as needed.
+    pub fn next_indices(&mut self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.bsz);
+        while out.len() < self.bsz {
+            if self.cursor >= self.n {
+                self.epoch += 1;
+                self.reshuffle();
+            }
+            out.push(self.order[self.cursor]);
+            self.cursor += 1;
+        }
+        out
+    }
+}
+
+/// Sequential eval batching: yields index windows covering [0, n) once;
+/// the final window wraps but reports `valid < bsz`.
+pub fn eval_windows(n: usize, bsz: usize) -> Vec<(Vec<usize>, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < n {
+        let valid = bsz.min(n - i);
+        let idx: Vec<usize> = (0..bsz).map(|k| (i + k) % n).collect();
+        out.push((idx, valid));
+        i += bsz;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tokenizer::{BOS, EOS, SEP};
+    use crate::util::prop;
+
+    fn ex(plen: usize, clen: usize) -> LmExample {
+        LmExample {
+            prompt: std::iter::once(BOS)
+                .chain((0..plen - 1).map(|i| 30 + i as u32)).collect(),
+            completion: (0..clen - 1).map(|i| 60 + i as u32)
+                .chain(std::iter::once(EOS)).collect(),
+        }
+    }
+
+    #[test]
+    fn lm_mask_covers_exactly_completion_predictions() {
+        let e = ex(5, 3);
+        let b = lm_batch(&[&e], 1, 16);
+        let wm = &b.wmask[..16];
+        // positions 4..=6 predict tokens 5..=7 (the 3 completion tokens)
+        let active: Vec<usize> = (0..16).filter(|i| wm[*i] > 0.0).collect();
+        assert_eq!(active, vec![4, 5, 6]);
+        let t = b.targets.as_ref().unwrap();
+        assert_eq!(t[4], 60);
+        assert_eq!(t[6], EOS as i32);
+    }
+
+    #[test]
+    fn lm_truncation_is_safe() {
+        let e = ex(10, 10);
+        let b = lm_batch(&[&e], 2, 8); // shorter than the example
+        assert_eq!(b.ids.len(), 16);
+        // no mask bit can point past the sequence
+        for i in 0..16 {
+            if b.wmask[i] > 0.0 {
+                assert!(i % 8 < 7);
+            }
+        }
+    }
+
+    #[test]
+    fn cls_batch_padding_and_labels() {
+        let e1 = ClsExample { tokens: vec![BOS, 30, 31, SEP, 40], label: 1.0 };
+        let e2 = ClsExample { tokens: vec![BOS, 32], label: 0.0 };
+        let b = cls_batch(&[&e1, &e2], 4, 8, false);
+        assert_eq!(b.valid, 2);
+        assert_eq!(b.labels_i.as_ref().unwrap()[..2], [1, 0]);
+        // wraparound fill repeats examples
+        assert_eq!(b.labels_i.as_ref().unwrap()[2], 1);
+        assert_eq!(b.wmask[8 + 2], 0.0, "padding after short example");
+        assert_eq!(b.wmask[8 + 1], 1.0);
+    }
+
+    #[test]
+    fn batcher_visits_every_example_each_epoch() {
+        prop::for_all("batcher partition", 20, |rng| {
+            let n = prop::int_in(rng, 1, 40);
+            let bsz = prop::int_in(rng, 1, 8);
+            let mut b = Batcher::new(n, bsz, 9);
+            let steps_per_epoch = n.div_ceil(bsz);
+            let mut seen = vec![0usize; n];
+            for _ in 0..steps_per_epoch {
+                for i in b.next_indices() {
+                    seen[i] += 1;
+                }
+            }
+            // each example seen at least once, at most twice (epoch roll)
+            assert!(seen.iter().all(|c| *c >= 1 || bsz > n));
+            assert!(seen.iter().all(|c| *c <= 2));
+        });
+    }
+
+    #[test]
+    fn batcher_epochs_reshuffle_differently() {
+        let mut b = Batcher::new(32, 8, 1);
+        let e0: Vec<usize> = (0..4).flat_map(|_| b.next_indices()).collect();
+        let e1: Vec<usize> = (0..4).flat_map(|_| b.next_indices()).collect();
+        assert_ne!(e0, e1);
+        let mut s0 = e0.clone();
+        s0.sort_unstable();
+        assert_eq!(s0, (0..32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn eval_windows_cover_once() {
+        let ws = eval_windows(10, 4);
+        assert_eq!(ws.len(), 3);
+        assert_eq!(ws[2].1, 2, "last window has 2 valid");
+        let mut all: Vec<usize> = ws.iter()
+            .flat_map(|(idx, v)| idx[..*v].to_vec()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (0..10).collect::<Vec<_>>());
+    }
+}

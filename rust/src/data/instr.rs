@@ -1,0 +1,164 @@
+//! Instruction-following corpus + deterministic rubric judge
+//! (WizardLM-Evol-Instruct → MT-Bench substitute, Table 8).
+//!
+//! Instructions are symbolic ("repeat token k times", "sort digits",
+//! "reverse sequence", "count token"); the judge scores a response 0–10
+//! from explicit rubric constraints (content, length, format) instead of
+//! GPT-4 — same comparison harness, pluggable scorer.
+
+use crate::data::tokenizer::{Vocab, BOS, EOS, SEP};
+use crate::data::{LmDataset, LmExample};
+use crate::math::rng::Pcg64;
+
+/// Instruction kinds (word-token markers 30..=33).
+const K_REPEAT: usize = 30;
+const K_SORT: usize = 31;
+const K_REVERSE: usize = 32;
+const K_COUNT: usize = 33;
+
+/// Build one instruction example and its gold completion.
+fn gen_one(v: &Vocab, rng: &mut Pcg64) -> LmExample {
+    let kind = rng.below(4);
+    let mut prompt = vec![BOS];
+    let mut completion: Vec<u32> = Vec::new();
+    match kind {
+        0 => {
+            // repeat token w k times
+            let w = v.word(60 + rng.below(20));
+            let k = 1 + rng.below(5);
+            prompt.push(v.word(K_REPEAT));
+            prompt.extend(v.encode_int(k as i64));
+            prompt.push(w);
+            completion.extend(std::iter::repeat(w).take(k));
+        }
+        1 => {
+            // sort digits ascending
+            let n = 3 + rng.below(4);
+            let mut ds: Vec<u32> = (0..n).map(|_| rng.below(10) as u32).collect();
+            prompt.push(v.word(K_SORT));
+            for d in &ds {
+                prompt.push(v.digit(*d));
+            }
+            ds.sort_unstable();
+            for d in ds {
+                completion.push(v.digit(d));
+            }
+        }
+        2 => {
+            // reverse a word sequence
+            let n = 3 + rng.below(4);
+            let ws: Vec<u32> = (0..n).map(|_| v.word(60 + rng.below(20))).collect();
+            prompt.push(v.word(K_REVERSE));
+            prompt.extend(&ws);
+            completion.extend(ws.iter().rev());
+        }
+        _ => {
+            // count occurrences of token w
+            let w = v.word(60 + rng.below(5));
+            let n = 4 + rng.below(6);
+            let mut count = 0i64;
+            prompt.push(v.word(K_COUNT));
+            prompt.push(w);
+            prompt.push(SEP);
+            for _ in 0..n {
+                let t = v.word(60 + rng.below(5));
+                if t == w {
+                    count += 1;
+                }
+                prompt.push(t);
+            }
+            completion.extend(v.encode_int(count));
+        }
+    }
+    prompt.push(SEP);
+    completion.push(EOS);
+    LmExample { prompt, completion }
+}
+
+pub fn generate(n_train: usize, n_eval: usize, vocab: usize, max_seq: usize,
+                seed: u64) -> LmDataset {
+    let v = Vocab::new(vocab);
+    let mut tr = Pcg64::derive(seed, "instr.train");
+    let mut ev = Pcg64::derive(seed, "instr.eval");
+    let gen = |rng: &mut Pcg64, n: usize| {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let e = gen_one(&v, rng);
+            if e.prompt.len() + e.completion.len() <= max_seq {
+                out.push(e);
+            }
+        }
+        out
+    };
+    LmDataset { train: gen(&mut tr, n_train), eval: gen(&mut ev, n_eval) }
+}
+
+/// Deterministic rubric judge: score a generated response 0–10 against
+/// the gold completion.  60% content overlap (order-aware), 20% length
+/// discipline, 20% clean termination — an explicit stand-in for the
+/// paper's GPT-4 judge.
+pub fn judge(gold: &[u32], generated: &[u32]) -> f64 {
+    let strip = |xs: &[u32]| -> Vec<u32> {
+        xs.iter().copied().take_while(|t| *t != EOS).collect()
+    };
+    let g = strip(gold);
+    let r = strip(generated);
+    if g.is_empty() {
+        return 0.0;
+    }
+    // order-aware overlap: longest common prefix + positional matches
+    let pos_match = g.iter().zip(&r).filter(|(a, b)| a == b).count() as f64
+        / g.len() as f64;
+    let len_score = {
+        let diff = (g.len() as f64 - r.len() as f64).abs() / g.len() as f64;
+        (1.0 - diff).max(0.0)
+    };
+    let term_score = if generated.contains(&EOS) { 1.0 } else { 0.0 };
+    10.0 * (0.6 * pos_match + 0.2 * len_score + 0.2 * term_score)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_response_scores_ten() {
+        let d = generate(20, 0, 256, 48, 1);
+        for e in &d.train {
+            let s = judge(&e.completion, &e.completion);
+            assert!((s - 10.0).abs() < 1e-9, "{s}");
+        }
+    }
+
+    #[test]
+    fn empty_response_scores_low() {
+        let d = generate(5, 0, 256, 48, 2);
+        for e in &d.train {
+            assert!(judge(&e.completion, &[]) <= 2.1);
+        }
+    }
+
+    #[test]
+    fn partial_beats_garbage() {
+        let v = Vocab::new(256);
+        let gold: Vec<u32> = {
+            let mut g = v.encode_int(123);
+            g.push(EOS);
+            g
+        };
+        let mut half = gold.clone();
+        half[2] = v.word(9); // corrupt one digit but terminate properly
+        let garbage = vec![v.word(1), v.word(2), v.word(3)];
+        assert!(judge(&gold, &half) > judge(&gold, &garbage));
+    }
+
+    #[test]
+    fn examples_fit_and_terminate() {
+        let d = generate(50, 20, 256, 40, 3);
+        for e in d.train.iter().chain(&d.eval) {
+            assert!(e.prompt.len() + e.completion.len() <= 40);
+            assert_eq!(*e.completion.last().unwrap(), EOS);
+            assert_eq!(*e.prompt.last().unwrap(), SEP);
+        }
+    }
+}

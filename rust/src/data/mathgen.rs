@@ -1,0 +1,251 @@
+//! Arithmetic-reasoning corpus generator (MetaMathQA → GSM8K/MATH
+//! substitute, plus the seven Table 6 task families).
+//!
+//! Examples are `prompt | completion` LM pairs:
+//!   `<s> 1 2 + ( 3 * 4 ) = | 2 4 </s>`
+//! with loss masked to the completion.  Greedy decode + integer
+//! exact-match gives the GSM8K-style accuracy.
+
+use crate::data::tokenizer::{Vocab, BOS, EOS, SEP};
+use crate::data::{LmDataset, LmExample};
+use crate::math::rng::Pcg64;
+
+/// Task families mirroring the paper's Table 6 benchmark list.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Family {
+    /// a+b (AddSub analogue)
+    AddSub,
+    /// a*b (single products)
+    Mul,
+    /// a+b-c etc., 3 operands (MultiArith analogue)
+    MultiArith,
+    /// one unknown: a + x = c, answer x (SingleEq analogue)
+    SingleEq,
+    /// two-step word-problem shape: (a+b)*c (SVAMP/MAWPS analogue)
+    TwoStep,
+    /// parenthesized 3-op expressions (AQuA/MATH analogue — hardest)
+    Expr3,
+    /// comparison: max of three numbers (GSM8K-lite reasoning)
+    Max3,
+    /// uniform mixture of all families (the "MetaMath" training mix)
+    Mixed,
+}
+
+impl Family {
+    pub fn from_str(s: &str) -> anyhow::Result<Family> {
+        Ok(match s {
+            "addsub" => Family::AddSub,
+            "mul" => Family::Mul,
+            "multiarith" => Family::MultiArith,
+            "singleeq" => Family::SingleEq,
+            "twostep" => Family::TwoStep,
+            "expr3" => Family::Expr3,
+            "max3" => Family::Max3,
+            "mixed" => Family::Mixed,
+            other => anyhow::bail!("unknown math family `{other}`"),
+        })
+    }
+
+    pub const ALL: [Family; 7] = [
+        Family::AddSub, Family::Mul, Family::MultiArith, Family::SingleEq,
+        Family::TwoStep, Family::Expr3, Family::Max3,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Family::AddSub => "AddSub",
+            Family::Mul => "Mul",
+            Family::MultiArith => "MultiArith",
+            Family::SingleEq => "SingleEq",
+            Family::TwoStep => "TwoStep",
+            Family::Expr3 => "Expr3",
+            Family::Max3 => "Max3",
+            Family::Mixed => "Mixed",
+        }
+    }
+}
+
+/// One generated problem: prompt tokens (after BOS, before SEP) and the
+/// integer answer.
+fn sample_problem(fam: Family, v: &Vocab, rng: &mut Pcg64)
+                  -> (Vec<u32>, i64) {
+    let fam = if fam == Family::Mixed {
+        Family::ALL[rng.below(Family::ALL.len())]
+    } else {
+        fam
+    };
+    let small = |rng: &mut Pcg64| rng.below(10) as i64;
+    let mid = |rng: &mut Pcg64| rng.below(50) as i64;
+    let mut t = Vec::new();
+    let ans;
+    match fam {
+        Family::AddSub => {
+            let (a, b) = (mid(rng), mid(rng));
+            let plus = rng.below(2) == 0;
+            t.extend(v.encode_int(a));
+            t.push(v.op(if plus { '+' } else { '-' }));
+            t.extend(v.encode_int(b));
+            ans = if plus { a + b } else { a - b };
+        }
+        Family::Mul => {
+            let (a, b) = (small(rng), small(rng));
+            t.extend(v.encode_int(a));
+            t.push(v.op('*'));
+            t.extend(v.encode_int(b));
+            ans = a * b;
+        }
+        Family::MultiArith => {
+            let (a, b, c) = (mid(rng), mid(rng), mid(rng));
+            t.extend(v.encode_int(a));
+            t.push(v.op('+'));
+            t.extend(v.encode_int(b));
+            t.push(v.op('-'));
+            t.extend(v.encode_int(c));
+            ans = a + b - c;
+        }
+        Family::SingleEq => {
+            // a + x = c   → answer x
+            let (a, x) = (mid(rng), mid(rng));
+            let c = a + x;
+            t.extend(v.encode_int(a));
+            t.push(v.op('+'));
+            t.push(v.word(0)); // the unknown symbol
+            t.push(v.op('='));
+            t.extend(v.encode_int(c));
+            ans = x;
+        }
+        Family::TwoStep => {
+            let (a, b, c) = (small(rng), small(rng), small(rng));
+            t.push(v.op('('));
+            t.extend(v.encode_int(a));
+            t.push(v.op('+'));
+            t.extend(v.encode_int(b));
+            t.push(v.op(')'));
+            t.push(v.op('*'));
+            t.extend(v.encode_int(c));
+            ans = (a + b) * c;
+        }
+        Family::Expr3 => {
+            let (a, b, c, d) = (small(rng), small(rng), small(rng), small(rng));
+            t.extend(v.encode_int(a));
+            t.push(v.op('*'));
+            t.extend(v.encode_int(b));
+            t.push(v.op('+'));
+            t.push(v.op('('));
+            t.extend(v.encode_int(c));
+            t.push(v.op('-'));
+            t.extend(v.encode_int(d));
+            t.push(v.op(')'));
+            ans = a * b + (c - d);
+        }
+        Family::Max3 => {
+            let (a, b, c) = (mid(rng), mid(rng), mid(rng));
+            t.push(v.word(1)); // "max" marker
+            t.extend(v.encode_int(a));
+            t.push(v.op(','));
+            t.extend(v.encode_int(b));
+            t.push(v.op(','));
+            t.extend(v.encode_int(c));
+            ans = a.max(b).max(c);
+        }
+        Family::Mixed => unreachable!(),
+    }
+    (t, ans)
+}
+
+/// Build one LM example `[BOS prompt SEP] [answer EOS]`.
+pub fn make_example(fam: Family, v: &Vocab, rng: &mut Pcg64) -> LmExample {
+    let (body, ans) = sample_problem(fam, v, rng);
+    let mut prompt = vec![BOS];
+    prompt.extend(body);
+    prompt.push(SEP);
+    let mut completion = v.encode_int(ans);
+    completion.push(EOS);
+    LmExample { prompt, completion }
+}
+
+/// Generate a train/eval split (disjoint RNG streams; eval problems are
+/// unseen with high probability given the combinatorial space).
+pub fn generate(fam: Family, n_train: usize, n_eval: usize, max_seq: usize,
+                seed: u64) -> LmDataset {
+    // Vocab only needs the symbolic table; 64 is the floor.
+    let v = Vocab::new(64);
+    let mut tr_rng = Pcg64::derive(seed, "math.train");
+    let mut ev_rng = Pcg64::derive(seed, "math.eval");
+    let fits = |e: &LmExample| e.prompt.len() + e.completion.len() <= max_seq;
+    let gen = |rng: &mut Pcg64, n: usize| {
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let e = make_example(fam, &v, rng);
+            if fits(&e) {
+                out.push(e);
+            }
+        }
+        out
+    };
+    LmDataset { train: gen(&mut tr_rng, n_train), eval: gen(&mut ev_rng, n_eval) }
+}
+
+/// Ground-truth answer for an example (re-parse of the completion).
+pub fn gold_answer(v: &Vocab, e: &LmExample) -> Option<i64> {
+    v.decode_int(&e.completion)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn answers_are_consistent() {
+        // The completion must decode back to an integer for every family.
+        let v = Vocab::new(64);
+        prop::for_all("math answers decode", 50, |rng| {
+            for fam in Family::ALL {
+                let e = make_example(fam, &v, rng);
+                assert!(gold_answer(&v, &e).is_some(), "{fam:?}");
+                assert_eq!(*e.prompt.first().unwrap(), BOS);
+                assert_eq!(*e.prompt.last().unwrap(), SEP);
+                assert_eq!(*e.completion.last().unwrap(), EOS);
+            }
+        });
+    }
+
+    #[test]
+    fn twostep_matches_arithmetic() {
+        let v = Vocab::new(64);
+        let mut rng = Pcg64::new(5);
+        for _ in 0..50 {
+            let (toks, ans) = sample_problem(Family::TwoStep, &v, &mut rng);
+            // parse (a+b)*c back out of the tokens
+            let rendered = v.render(&toks).replace(' ', "");
+            let inner: Vec<i64> = rendered
+                .trim_start_matches('(')
+                .split(|c| "()+*".contains(c))
+                .filter(|s| !s.is_empty())
+                .map(|s| s.parse().unwrap())
+                .collect();
+            assert_eq!((inner[0] + inner[1]) * inner[2], ans, "{rendered}");
+        }
+    }
+
+    #[test]
+    fn deterministic_and_split_disjoint_streams() {
+        let d1 = generate(Family::Mixed, 20, 10, 32, 9);
+        let d2 = generate(Family::Mixed, 20, 10, 32, 9);
+        assert_eq!(d1.train.len(), 20);
+        assert_eq!(d1.eval.len(), 10);
+        for (a, b) in d1.train.iter().zip(&d2.train) {
+            assert_eq!(a.prompt, b.prompt);
+        }
+        // train and eval streams differ
+        assert_ne!(d1.train[0].prompt, d1.eval[0].prompt);
+    }
+
+    #[test]
+    fn respects_max_seq() {
+        let d = generate(Family::Mixed, 100, 0, 20, 3);
+        assert!(d.train.iter()
+            .all(|e| e.prompt.len() + e.completion.len() <= 20));
+    }
+}

@@ -1,0 +1,69 @@
+//! Synthetic data pipeline (DESIGN.md §2 substitutions).
+//!
+//! The paper's gated datasets (GLUE, MetaMathQA, Code-Feedback,
+//! WizardLM) are replaced by synthetic generators with matched *shape*:
+//! same task types, same metric machinery, same fine-tuning pipeline.
+//! Every generator is deterministic in its seed.
+
+pub mod batcher;
+pub mod codegen;
+pub mod instr;
+pub mod mathgen;
+pub mod nlu;
+pub mod tokenizer;
+
+pub use batcher::{Batch, Batcher};
+pub use tokenizer::Vocab;
+
+/// One language-modeling example: loss is taken on the completion only.
+#[derive(Clone, Debug)]
+pub struct LmExample {
+    pub prompt: Vec<u32>,
+    pub completion: Vec<u32>,
+}
+
+/// One classification / regression example.
+#[derive(Clone, Debug)]
+pub struct ClsExample {
+    pub tokens: Vec<u32>,
+    /// Class index for cls heads; scaled score for reg heads.
+    pub label: f32,
+}
+
+/// A generated dataset split.
+#[derive(Clone, Debug, Default)]
+pub struct LmDataset {
+    pub train: Vec<LmExample>,
+    pub eval: Vec<LmExample>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ClsDataset {
+    pub train: Vec<ClsExample>,
+    pub eval: Vec<ClsExample>,
+    /// Metric selector: "acc" | "f1" | "mcc" | "pearson_spearman".
+    pub metric: &'static str,
+}
+
+/// Resolve a task id (from RunConfig.task) to an LM dataset.
+pub fn lm_task(task: &str, n_train: usize, n_eval: usize, vocab: usize,
+               max_seq: usize, seed: u64) -> anyhow::Result<LmDataset> {
+    match task {
+        "math" => Ok(mathgen::generate(mathgen::Family::Mixed, n_train,
+                                       n_eval, max_seq, seed)),
+        "code" => Ok(codegen::generate(n_train, n_eval, max_seq, seed)),
+        "instr" => Ok(instr::generate(n_train, n_eval, vocab, max_seq, seed)),
+        f if f.starts_with("math:") => {
+            let fam = mathgen::Family::from_str(&f[5..])?;
+            Ok(mathgen::generate(fam, n_train, n_eval, max_seq, seed))
+        }
+        other => anyhow::bail!("unknown lm task `{other}`"),
+    }
+}
+
+/// Resolve a task id to a classification/regression dataset.
+pub fn cls_task(task: &str, n_train: usize, n_eval: usize, vocab: usize,
+                max_seq: usize, seed: u64) -> anyhow::Result<ClsDataset> {
+    let name = task.strip_prefix("nlu:").unwrap_or(task);
+    nlu::generate(name, n_train, n_eval, vocab, max_seq, seed)
+}

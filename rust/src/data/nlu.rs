@@ -1,0 +1,248 @@
+//! GLUE-simulacrum NLU task suite (Table 2 substitute; DESIGN.md §2).
+//!
+//! Six synthetic sequence tasks with the *same output types and metrics*
+//! as the paper's GLUE selection:
+//!
+//! | id        | GLUE analogue | task shape                       | metric |
+//! |-----------|---------------|----------------------------------|--------|
+//! | sst2-sim  | SST-2         | lexicon sentiment majority       | acc    |
+//! | mrpc-sim  | MRPC          | paraphrase detection (pair)      | F1     |
+//! | cola-sim  | CoLA          | grammar-pattern acceptability    | MCC    |
+//! | qnli-sim  | QNLI          | question-answer entailment (pair)| acc    |
+//! | rte-sim   | RTE           | premise-hypothesis entailment    | acc    |
+//! | stsb-sim  | STS-B         | token-overlap similarity (0–5)   | P/S    |
+//!
+//! Difficulty is tuned via distractor noise so methods separate without
+//! saturating — the property the table comparison needs.
+
+use crate::data::tokenizer::{Vocab, BOS, SEP};
+use crate::data::{ClsDataset, ClsExample};
+use crate::math::rng::Pcg64;
+
+pub const TASKS: [&str; 6] =
+    ["sst2-sim", "mrpc-sim", "cola-sim", "qnli-sim", "rte-sim", "stsb-sim"];
+
+/// Paper metric label for each task (Table 2 caption).
+pub fn metric_for(task: &str) -> &'static str {
+    match task {
+        "mrpc-sim" => "f1",
+        "cola-sim" => "mcc",
+        "stsb-sim" => "pearson_spearman",
+        _ => "acc",
+    }
+}
+
+fn sentence(v: &Vocab, rng: &mut Pcg64, len: usize, pool: usize,
+            offset: usize) -> Vec<u32> {
+    (0..len).map(|_| v.word(offset + rng.below(pool))).collect()
+}
+
+/// Word-pool layout: [0,50) positive lexicon, [50,100) negative lexicon,
+/// [100,150) neutral filler, [150,170) question keys, [170,190) answers.
+const POS0: usize = 0;
+const NEG0: usize = 50;
+const NEUT0: usize = 100;
+const QKEY0: usize = 150;
+const ANS0: usize = 170;
+
+fn gen_example(task: &str, v: &Vocab, rng: &mut Pcg64, max_seq: usize)
+               -> ClsExample {
+    let body = max_seq.saturating_sub(4).max(8);
+    let mut toks = vec![BOS];
+    let label: f32;
+    match task {
+        "sst2-sim" => {
+            // sentiment = which lexicon dominates; 70/30 mix with filler
+            let positive = rng.below(2) == 1;
+            let n = body.min(16);
+            for _ in 0..n {
+                let roll = rng.below(10);
+                let w = if roll < 5 {
+                    let base = if positive { POS0 } else { NEG0 };
+                    base + rng.below(50)
+                } else if roll < 7 {
+                    let base = if positive { NEG0 } else { POS0 };
+                    base + rng.below(50)
+                } else {
+                    NEUT0 + rng.below(50)
+                };
+                toks.push(v.word(w));
+            }
+            label = positive as u32 as f32;
+        }
+        "mrpc-sim" => {
+            let n = (body / 2 - 1).min(10).max(3);
+            let s1 = sentence(v, rng, n, 50, NEUT0);
+            let paraphrase = rng.below(2) == 1;
+            let mut s2 = if paraphrase {
+                let mut s = s1.clone();
+                rng.shuffle(&mut s);
+                // light lexical substitution noise
+                if !s.is_empty() {
+                    let i = rng.below(s.len());
+                    s[i] = v.word(NEUT0 + rng.below(50));
+                }
+                s
+            } else {
+                sentence(v, rng, n, 50, NEUT0)
+            };
+            toks.extend(&s1);
+            toks.push(SEP);
+            toks.append(&mut s2);
+            label = paraphrase as u32 as f32;
+        }
+        "cola-sim" => {
+            // "grammar": alternating determiner/noun pattern
+            // acceptable = strict alternation w(even) w(odd) w(even)...
+            let n = body.min(12).max(4);
+            let acceptable = rng.below(2) == 1;
+            for i in 0..n {
+                let parity = i % 2;
+                let ok = acceptable || rng.below(4) != 0;
+                let p = if ok { parity } else { 1 - parity };
+                toks.push(v.word(NEUT0 + p * 25 + rng.below(25)));
+            }
+            label = acceptable as u32 as f32;
+        }
+        "qnli-sim" => {
+            // question: key token k; entail iff sentence contains ANS(k)
+            let k = rng.below(20);
+            let entail = rng.below(2) == 1;
+            toks.push(v.word(QKEY0 + k));
+            toks.push(SEP);
+            let n = (body - 3).min(12).max(4);
+            let mut sent = sentence(v, rng, n, 50, NEUT0);
+            if entail {
+                let i = rng.below(sent.len());
+                sent[i] = v.word(ANS0 + k);
+            } else if rng.below(2) == 0 {
+                // distractor: answer to a *different* question
+                let i = rng.below(sent.len());
+                sent[i] = v.word(ANS0 + (k + 1 + rng.below(19)) % 20);
+            }
+            toks.extend(sent);
+            label = entail as u32 as f32;
+        }
+        "rte-sim" => {
+            // hypothesis ⊆ premise → entail; novel token → not
+            let n = (body / 2).min(10).max(4);
+            let premise = sentence(v, rng, n, 60, NEUT0);
+            let entail = rng.below(2) == 1;
+            let hn = (n / 2).max(2);
+            let mut hyp: Vec<u32> = (0..hn)
+                .map(|_| premise[rng.below(premise.len())])
+                .collect();
+            if !entail {
+                let i = rng.below(hyp.len());
+                hyp[i] = v.word(NEUT0 + 60 + rng.below(30));
+            }
+            toks.extend(premise);
+            toks.push(SEP);
+            toks.extend(hyp);
+            label = entail as u32 as f32;
+        }
+        "stsb-sim" => {
+            // similarity = |shared| / n scaled to 0..5 with noise
+            let n = (body / 2).min(10).max(4);
+            let s1 = sentence(v, rng, n, 80, NEUT0);
+            let shared = rng.below(n + 1);
+            let mut s2: Vec<u32> = s1[..shared].to_vec();
+            while s2.len() < n {
+                s2.push(v.word(NEUT0 + 80 + rng.below(40)));
+            }
+            rng.shuffle(&mut s2);
+            toks.extend(&s1);
+            toks.push(SEP);
+            toks.extend(&s2);
+            label = 5.0 * shared as f32 / n as f32;
+        }
+        other => panic!("unknown nlu task `{other}`"),
+    }
+    ClsExample { tokens: toks, label }
+}
+
+/// Generate a train/eval split for one task id.
+pub fn generate(task: &str, n_train: usize, n_eval: usize, vocab: usize,
+                max_seq: usize, seed: u64) -> anyhow::Result<ClsDataset> {
+    if !TASKS.contains(&task) {
+        anyhow::bail!("unknown nlu task `{task}` (expected one of {TASKS:?})");
+    }
+    let v = Vocab::new(vocab);
+    let mut tr = Pcg64::derive(seed, &format!("nlu.{task}.train"));
+    let mut ev = Pcg64::derive(seed, &format!("nlu.{task}.eval"));
+    let gen = |rng: &mut Pcg64, n: usize| {
+        (0..n).map(|_| gen_example(task, &v, rng, max_seq)).collect()
+    };
+    Ok(ClsDataset {
+        train: gen(&mut tr, n_train),
+        eval: gen(&mut ev, n_eval),
+        metric: metric_for(task),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate() {
+        for t in TASKS {
+            let d = generate(t, 50, 20, 512, 48, 1).unwrap();
+            assert_eq!(d.train.len(), 50);
+            assert_eq!(d.eval.len(), 20);
+            assert!(d.train.iter().all(|e| e.tokens.len() <= 48));
+            assert!(d.train.iter().all(|e| e.tokens[0] == BOS));
+        }
+    }
+
+    #[test]
+    fn labels_balanced_for_binary_tasks() {
+        for t in ["sst2-sim", "mrpc-sim", "qnli-sim", "rte-sim"] {
+            let d = generate(t, 400, 0, 512, 48, 2).unwrap();
+            let pos = d.train.iter().filter(|e| e.label > 0.5).count();
+            assert!((120..=280).contains(&pos), "{t}: {pos}/400");
+        }
+    }
+
+    #[test]
+    fn stsb_labels_in_range() {
+        let d = generate("stsb-sim", 200, 0, 512, 48, 3).unwrap();
+        assert!(d.train.iter().all(|e| (0.0..=5.0).contains(&e.label)));
+        // non-degenerate spread
+        let lo = d.train.iter().filter(|e| e.label < 1.5).count();
+        let hi = d.train.iter().filter(|e| e.label > 3.5).count();
+        assert!(lo > 10 && hi > 10);
+    }
+
+    #[test]
+    fn qnli_is_learnable_signal() {
+        // entailment examples must actually contain the paired answer
+        let v = Vocab::new(512);
+        let mut rng = Pcg64::new(4);
+        for _ in 0..100 {
+            let e = gen_example("qnli-sim", &v, &mut rng, 48);
+            let key = e.tokens[1]; // token after BOS
+            let k = key - v.word(QKEY0);
+            let ans = v.word(ANS0 + k as usize);
+            let contains = e.tokens[3..].contains(&ans);
+            if e.label > 0.5 {
+                assert!(contains);
+            } else {
+                assert!(!contains);
+            }
+        }
+    }
+
+    #[test]
+    fn metric_mapping_matches_paper() {
+        assert_eq!(metric_for("cola-sim"), "mcc");
+        assert_eq!(metric_for("mrpc-sim"), "f1");
+        assert_eq!(metric_for("stsb-sim"), "pearson_spearman");
+        assert_eq!(metric_for("sst2-sim"), "acc");
+    }
+
+    #[test]
+    fn rejects_unknown_task() {
+        assert!(generate("wnli-sim", 1, 1, 512, 48, 0).is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! Fixed symbolic vocabulary shared by all synthetic tasks.
+//!
+//! Layout (stable — artifacts bake the vocab size, not the table):
+//!   0..=3    PAD, BOS, EOS, SEP
+//!   4..=13   digits 0–9
+//!   14..=21  operators + - * ( ) = , →
+//!   22..     generic word tokens `w{i}` up to the model's vocab size
+
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const SEP: u32 = 3;
+const DIGIT0: u32 = 4;
+const OPS_BASE: u32 = 14;
+pub const WORD_BASE: u32 = 22;
+
+const OPS: [char; 8] = ['+', '-', '*', '(', ')', '=', ',', '>'];
+
+/// Vocabulary view bound to a model preset's vocab size.
+#[derive(Clone, Copy, Debug)]
+pub struct Vocab {
+    pub size: usize,
+}
+
+impl Vocab {
+    pub fn new(size: usize) -> Vocab {
+        assert!(size >= 64, "vocab too small for the symbolic table");
+        Vocab { size }
+    }
+
+    pub fn digit(&self, d: u32) -> u32 {
+        debug_assert!(d < 10);
+        DIGIT0 + d
+    }
+
+    pub fn op(&self, c: char) -> u32 {
+        let idx = OPS.iter().position(|o| *o == c)
+            .unwrap_or_else(|| panic!("unknown op `{c}`"));
+        OPS_BASE + idx as u32
+    }
+
+    /// Generic word token; wraps into the available word range.
+    pub fn word(&self, i: usize) -> u32 {
+        let nwords = self.size as u32 - WORD_BASE;
+        WORD_BASE + (i as u32 % nwords)
+    }
+
+    pub fn n_words(&self) -> usize {
+        self.size - WORD_BASE as usize
+    }
+
+    /// Encode a non-negative integer as digit tokens (decimal).
+    pub fn encode_int(&self, v: i64) -> Vec<u32> {
+        let mut out = Vec::new();
+        if v < 0 {
+            out.push(self.op('-'));
+        }
+        for c in v.abs().to_string().chars() {
+            out.push(self.digit(c.to_digit(10).unwrap()));
+        }
+        out
+    }
+
+    /// Decode a digit-token run back to an integer; `None` if the slice
+    /// contains no digits before EOS/SEP.
+    pub fn decode_int(&self, toks: &[u32]) -> Option<i64> {
+        let mut s = String::new();
+        let mut neg = false;
+        for &t in toks {
+            if t == EOS || t == SEP || t == PAD {
+                break;
+            }
+            if t == self.op('-') && s.is_empty() {
+                neg = true;
+            } else if (DIGIT0..DIGIT0 + 10).contains(&t) {
+                s.push(char::from_digit(t - DIGIT0, 10).unwrap());
+            } else if !s.is_empty() {
+                break;
+            }
+        }
+        if s.is_empty() {
+            return None;
+        }
+        s.parse::<i64>().ok().map(|v| if neg { -v } else { v })
+    }
+
+    /// Human-readable rendering for debugging / EXPERIMENTS.md excerpts.
+    pub fn render(&self, toks: &[u32]) -> String {
+        let mut out = String::new();
+        for &t in toks {
+            let s = match t {
+                PAD => "·".into(),
+                BOS => "<s>".into(),
+                EOS => "</s>".into(),
+                SEP => "|".into(),
+                t if (DIGIT0..DIGIT0 + 10).contains(&t) =>
+                    (t - DIGIT0).to_string(),
+                t if (OPS_BASE..OPS_BASE + 8).contains(&t) =>
+                    OPS[(t - OPS_BASE) as usize].to_string(),
+                t => format!("w{}", t - WORD_BASE),
+            };
+            out.push_str(&s);
+            out.push(' ');
+        }
+        out.trim_end().to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int_roundtrip() {
+        let v = Vocab::new(256);
+        for x in [0i64, 7, 42, 999, 12345, -38] {
+            let enc = v.encode_int(x);
+            assert_eq!(v.decode_int(&enc), Some(x), "{x}");
+        }
+    }
+
+    #[test]
+    fn decode_stops_at_separator() {
+        let v = Vocab::new(256);
+        let mut toks = v.encode_int(57);
+        toks.push(EOS);
+        toks.extend(v.encode_int(99));
+        assert_eq!(v.decode_int(&toks), Some(57));
+    }
+
+    #[test]
+    fn decode_rejects_wordish_prefix() {
+        let v = Vocab::new(256);
+        assert_eq!(v.decode_int(&[v.word(5), EOS]), None);
+    }
+
+    #[test]
+    fn words_stay_in_vocab() {
+        let v = Vocab::new(256);
+        for i in 0..10_000 {
+            assert!((v.word(i) as usize) < v.size);
+            assert!(v.word(i) >= WORD_BASE);
+        }
+    }
+
+    #[test]
+    fn render_readable() {
+        let v = Vocab::new(256);
+        let mut t = vec![BOS];
+        t.extend(v.encode_int(12));
+        t.push(v.op('+'));
+        t.extend(v.encode_int(3));
+        t.push(v.op('='));
+        assert_eq!(v.render(&t), "<s> 1 2 + 3 =");
+    }
+}

@@ -1,0 +1,57 @@
+//! Figure 2: performance across compression pairs (a, b) — the paper's
+//! central ablation.  Sweeps the pre-lowered (a, b) grid on `tiny-lm`
+//! with the math task and prints the heatmap plus the symmetric-pair
+//! (a > b vs a < b) comparison the paper highlights.
+
+use crate::exp::harness::{exp_train_cfg, run_scored, LmScore};
+use crate::exp::{print_header, print_row};
+use crate::runtime::executor::Runtime;
+use crate::runtime::Registry;
+use crate::util::args::Args;
+
+/// The grid lowered by `presets.py` (symmetric diagonal + asymmetric
+/// pairs mirroring the paper's ▲/▼ analysis).
+pub const GRID: [(usize, usize); 8] = [
+    (16, 16), (32, 32), (64, 64), (96, 96),
+    (32, 96), (96, 32), (16, 64), (64, 16),
+];
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let steps = args.usize("steps", 120);
+    let decode_n = args.usize("decode", 64);
+    let lr = args.f64("lr", 3e-3);
+    let rt = Runtime::cpu()?;
+    let reg = Registry::open_default()?;
+
+    println!("== Figure 2: compression-pair (a,b) sweep \
+              (tiny-lm, math, {steps} steps) ==\n");
+    let widths = [12, 10, 12, 12];
+    print_header(&["(a,b)", "PARAMS", "EXACT MATCH", "eval loss"], &widths);
+    let mut scores = Vec::new();
+    for (a, b) in GRID {
+        let artifact = format!("tiny-lm_cosa-a{a}b{b}");
+        let tcfg = exp_train_cfg(steps, lr);
+        let r = run_scored(&rt, &reg, &artifact, "math", &tcfg, 0,
+                           LmScore::ExactInt, decode_n)?;
+        scores.push(((a, b), 100.0 * r.metric));
+        print_row(&[
+            format!("({a},{b})"),
+            r.trainable_params.to_string(),
+            format!("{:.1}%", 100.0 * r.metric),
+            format!("{:.3}", r.eval_loss),
+        ], &widths);
+    }
+
+    println!("\n-- symmetric-pair asymmetry (paper: enlarging a, the");
+    println!("   input-side dim, beats enlarging b) --");
+    for ((hi, lo), (lo2, hi2)) in [((96, 32), (32, 96)), ((64, 16), (16, 64))]
+    {
+        let s_a = scores.iter().find(|(c, _)| *c == (hi, lo)).unwrap().1;
+        let s_b = scores.iter().find(|(c, _)| *c == (lo2, hi2)).unwrap().1;
+        let mark = if s_a >= s_b { "▲ a>b wins" } else { "▼ a<b wins" };
+        println!("  ({hi},{lo}) {s_a:.1}%  vs  ({lo2},{hi2}) {s_b:.1}%   {mark}");
+    }
+    println!("\nPaper shape: rapid rise from small (a,b), plateau at large; \
+              (512,128) > (128,512) by 5.4pts at Llama-1B scale.");
+    Ok(())
+}

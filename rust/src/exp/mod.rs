@@ -1,0 +1,58 @@
+//! Experiment registry: one module per paper table/figure.
+//! `cosa-repro exp <id>` regenerates the corresponding rows/series.
+
+pub mod fig2;
+pub mod harness;
+pub mod fig3;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod table6;
+pub mod table7;
+pub mod table8;
+pub mod warmstart;
+pub mod ystruct;
+
+use crate::util::args::Args;
+
+pub const ALL: [&str; 12] = [
+    "table1", "table2", "table3", "table4", "table5", "table6", "table7",
+    "table8", "fig2", "fig3", "ystruct", "warmstart",
+];
+
+/// Dispatch one experiment id.
+pub fn run(id: &str, args: &Args) -> anyhow::Result<()> {
+    match id {
+        "table1" => table1::run(args),
+        "table2" => table2::run(args),
+        "table3" => table3::run(args),
+        "table4" | "fig4" => table4::run(args),
+        "table5" => table5::run(args),
+        "table6" => table6::run(args),
+        "table7" => table7::run(args),
+        "table8" => table8::run(args),
+        "fig2" => fig2::run(args),
+        "fig3" => fig3::run(args),
+        "ystruct" => ystruct::run(args),
+        "warmstart" => warmstart::run(args),
+        other => anyhow::bail!("unknown experiment `{other}` (try one of {ALL:?})"),
+    }
+}
+
+/// Shared pretty-printer: fixed-width table row.
+pub fn print_row(cells: &[String], widths: &[usize]) {
+    let mut line = String::new();
+    for (c, w) in cells.iter().zip(widths) {
+        line.push_str(&format!("{c:<w$}  ", w = w));
+    }
+    println!("{}", line.trim_end());
+}
+
+pub fn print_header(cells: &[&str], widths: &[usize]) {
+    print_row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+              widths);
+    let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+    println!("{}", "-".repeat(total));
+}

@@ -1,0 +1,39 @@
+//! Table 1: trainable parameters and training complexities per method —
+//! asymptotic rows plus a concrete instantiation at paper NLG scale.
+
+use crate::adapters::costmodel::{fmt_params, site_params, table1_row,
+                                 CostCfg, Site};
+use crate::adapters::Method;
+use crate::exp::{print_header, print_row};
+use crate::util::args::Args;
+
+pub fn run(_args: &Args) -> anyhow::Result<()> {
+    println!("== Table 1: trainable params and training complexities ==\n");
+    let widths = [10, 12, 14, 10, 14];
+    print_header(&["METHOD", "PARAMS", "OPT. STATE", "FWD/BWD", "STORAGE"],
+                 &widths);
+    let methods = [Method::LoRA, Method::PiSSA, Method::DoRA, Method::VeRA,
+                   Method::CoSA];
+    for m in methods {
+        let (p, o, f, s) = table1_row(m);
+        print_row(&[m.paper_name().to_string(), p.into(), o.into(),
+                    f.into(), s.into()], &widths);
+    }
+
+    println!("\nConcrete instantiation (one 4096×4096 site, r=128, \
+              (a,b)=(1024,256)):");
+    let site = Site { n_in: 4096, n_out: 4096 };
+    let c = CostCfg { r: 128, a: 1024, b: 256, nola_k: 1024,
+                      full_params: 4096 * 4096 };
+    print_header(&["METHOD", "PARAMS", "vs LoRA"], &[10, 12, 10]);
+    let lora = site_params(Method::LoRA, site, &c) as f64;
+    for m in [Method::Full, Method::LoRA, Method::PiSSA, Method::DoRA,
+              Method::VeRA, Method::CoSA] {
+        let p = site_params(m, site, &c);
+        print_row(&[m.paper_name().to_string(), fmt_params(p),
+                    format!("{:.2}x", p as f64 / lora)], &[10, 12, 10]);
+    }
+    println!("\nShape check (paper): CoSA ab=262144 = 0.25x LoRA's \
+              (m+n)r=1048576 at this site; VeRA cheapest; DoRA > LoRA.");
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! Table 2: NLU (GLUE-sim) comparison across methods.
+//!
+//! Six synthetic GLUE-analogue tasks × PEFT methods × seeds on the
+//! `small-cls` / `small-reg` presets (DESIGN.md §2 substitution).  The
+//! printed shape to compare against the paper's RoBERTa-base block:
+//! CoSA best-or-second-best on average with fewer trainables than the
+//! LoRA family.
+
+use crate::adapters::costmodel::fmt_params;
+use crate::data::nlu;
+use crate::exp::harness::{exp_train_cfg, method_lr, run_scored, LmScore};
+use crate::exp::{print_header, print_row};
+use crate::math::stats;
+use crate::runtime::executor::Runtime;
+use crate::runtime::Registry;
+use crate::util::args::Args;
+
+pub const METHODS: [&str; 7] =
+    ["full", "lora", "adalora", "pissa", "vera", "dora", "cosa"];
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let steps = args.usize("steps", 60);
+    let seeds = args.usize("seeds", 2);
+    let lr = args.f64("lr", 2e-3);
+    let methods: Vec<String> = match args.opt("methods") {
+        Some(m) => m.split(',').map(str::to_string).collect(),
+        None => METHODS.iter().map(|s| s.to_string()).collect(),
+    };
+    let rt = Runtime::cpu()?;
+    let reg = Registry::open_default()?;
+
+    println!("== Table 2 (GLUE-sim): small preset, {steps} steps, \
+              {seeds} seeds ==\n");
+    let mut widths = vec![9usize, 10];
+    widths.extend(std::iter::repeat(14).take(nlu::TASKS.len()));
+    widths.push(8);
+    let mut header = vec!["METHOD", "PARAMS"];
+    header.extend(nlu::TASKS.iter().copied());
+    header.push("AVG");
+    print_header(&header, &widths);
+
+    let mut best: (f64, String) = (f64::MIN, String::new());
+    for method in &methods {
+        let mut cells = vec![method.clone(), String::new()];
+        let mut task_means = Vec::new();
+        let mut params = 0usize;
+        for task in nlu::TASKS {
+            let preset =
+                if task == "stsb-sim" { "small-reg" } else { "small-cls" };
+            let artifact = format!("{preset}_{method}");
+            let tcfg = exp_train_cfg(steps, method_lr(method, lr));
+            let mut vals = Vec::new();
+            for s in 0..seeds {
+                let r = run_scored(&rt, &reg, &artifact,
+                                   &format!("nlu:{task}"), &tcfg, s as u64,
+                                   LmScore::ExactInt, 0)?;
+                vals.push(100.0 * r.metric);
+                params = r.trainable_params;
+            }
+            task_means.push(stats::mean(&vals));
+            cells.push(stats::fmt_mean_std(&vals));
+        }
+        let avg = stats::mean(&task_means);
+        cells[1] = fmt_params(params);
+        cells.push(format!("{avg:.2}"));
+        print_row(&cells, &widths);
+        if avg > best.0 {
+            best = (avg, method.clone());
+        }
+    }
+    println!("\nBest average: {} ({:.2}).  Paper shape: CoSA best/2nd-best \
+              avg (83.23 base / 86.82 large) with ~1.1x VeRA params and \
+              ~0.3x DoRA params.", best.1, best.0);
+    Ok(())
+}

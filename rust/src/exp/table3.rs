@@ -1,0 +1,62 @@
+//! Table 3: NLG comparison — math reasoning (GSM8K/MATH analogue) and
+//! code generation (HumanEval/MBPP analogue) on the `small-lm` preset,
+//! decode-based metrics (exact match / execution-checked pass@1).
+
+use crate::adapters::costmodel::fmt_params;
+use crate::exp::harness::{exp_train_cfg, method_lr, run_scored, LmScore};
+use crate::exp::{print_header, print_row};
+use crate::math::stats;
+use crate::runtime::executor::Runtime;
+use crate::runtime::Registry;
+use crate::util::args::Args;
+
+pub const METHODS: [&str; 5] = ["full", "lora", "adalora", "pissa", "cosa"];
+const TASKS: [(&str, &str, LmScore); 2] = [
+    ("math", "GSM8K-sim", LmScore::ExactInt),
+    ("code", "HumanEval-sim", LmScore::PassAt1),
+];
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let steps = args.usize("steps", 150);
+    let seeds = args.usize("seeds", 2);
+    let lr = args.f64("lr", 2e-3);
+    let decode_n = args.usize("decode", 64);
+    let methods: Vec<String> = match args.opt("methods") {
+        Some(m) => m.split(',').map(str::to_string).collect(),
+        None => METHODS.iter().map(|s| s.to_string()).collect(),
+    };
+    let rt = Runtime::cpu()?;
+    let reg = Registry::open_default()?;
+
+    println!("== Table 3 (NLG-sim): small-lm, {steps} steps, {seeds} seeds, \
+              decode n={decode_n} ==\n");
+    let widths = [9, 10, 16, 16, 8];
+    print_header(&["METHOD", "PARAMS", "GSM8K-sim", "HumanEval-sim", "AVG"],
+                 &widths);
+
+    for method in &methods {
+        let artifact = format!("small-lm_{method}");
+        let tcfg = exp_train_cfg(steps, method_lr(method, lr));
+        let mut cells = vec![method.clone(), String::new()];
+        let mut means = Vec::new();
+        let mut params = 0;
+        for (task, _, score) in TASKS {
+            let mut vals = Vec::new();
+            for s in 0..seeds {
+                let r = run_scored(&rt, &reg, &artifact, task, &tcfg,
+                                   s as u64, score, decode_n)?;
+                vals.push(100.0 * r.metric);
+                params = r.trainable_params;
+            }
+            means.push(stats::mean(&vals));
+            cells.push(stats::fmt_mean_std(&vals));
+        }
+        cells[1] = fmt_params(params);
+        cells.push(format!("{:.2}", stats::mean(&means)));
+        print_row(&cells, &widths);
+    }
+    println!("\nPaper shape (LLaMA-3.2-1B block): CoSA 28.10 avg with 29M \
+              params vs PiSSA 27.75 @ 90M and LoRA 23.91 @ 90M — CoSA \
+              matches/beats the LoRA family at ~1/3 the parameters.");
+    Ok(())
+}

@@ -1,0 +1,27 @@
+//! Table 5: GLUE fine-tuning hyperparameters (App. C.1), encoded as the
+//! presets our GLUE-sim runs key off.
+
+use crate::config::presets::{table5, GLUE_AB, NLG_AB};
+use crate::exp::{print_header, print_row};
+use crate::util::args::Args;
+
+pub fn run(_args: &Args) -> anyhow::Result<()> {
+    println!("== Table 5: GLUE hyperparameters (paper App. C.1) ==\n");
+    let widths = [8, 8, 8, 8, 10, 8, 8];
+    print_header(&["METHOD", "MODEL", "TASK", "EPOCHS", "LR", "BATCH",
+                   "ALPHA"], &widths);
+    for r in table5() {
+        print_row(&[
+            r.method.to_string(),
+            r.model.to_string(),
+            r.task.to_string(),
+            r.epochs.to_string(),
+            format!("{:.0e}", r.lr),
+            r.batch.to_string(),
+            format!("{}", r.alpha),
+        ], &widths);
+    }
+    println!("\nDefault compression dims: GLUE (a,b)={GLUE_AB:?}, \
+              NLG (a,b)={NLG_AB:?}.");
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Table 6: arithmetic-reasoning task families (MultiArith/AddSub/AQuA/…
+//! analogues) — CoSA vs LoRA across the seven synthetic math families.
+
+use crate::adapters::costmodel::fmt_params;
+use crate::data::mathgen::Family;
+use crate::exp::harness::{exp_train_cfg, method_lr, run_scored, LmScore};
+use crate::exp::{print_header, print_row};
+use crate::math::stats;
+use crate::runtime::executor::Runtime;
+use crate::runtime::Registry;
+use crate::util::args::Args;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let steps = args.usize("steps", 150);
+    let decode_n = args.usize("decode", 48);
+    let lr = args.f64("lr", 2e-3);
+    let methods: Vec<String> = match args.opt("methods") {
+        Some(m) => m.split(',').map(str::to_string).collect(),
+        None => vec!["lora".into(), "dora".into(), "cosa".into()],
+    };
+    let rt = Runtime::cpu()?;
+    let reg = Registry::open_default()?;
+
+    println!("== Table 6 (arithmetic families): small-lm, {steps} steps ==\n");
+    let mut widths = vec![9usize, 10];
+    widths.extend(std::iter::repeat(11).take(Family::ALL.len()));
+    widths.push(8);
+    let mut header = vec!["METHOD".to_string(), "PARAMS".to_string()];
+    header.extend(Family::ALL.iter().map(|f| f.name().to_string()));
+    header.push("AVG".to_string());
+    print_header(&header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+                 &widths);
+
+    for method in &methods {
+        let artifact = format!("small-lm_{method}");
+        let tcfg = exp_train_cfg(steps, method_lr(method, lr));
+        let mut cells = vec![method.clone(), String::new()];
+        let mut means = Vec::new();
+        let mut params = 0;
+        for fam in Family::ALL {
+            let task = format!("math:{}", fam.name().to_lowercase());
+            let r = run_scored(&rt, &reg, &artifact, &task, &tcfg, 0,
+                               LmScore::ExactInt, decode_n)?;
+            means.push(100.0 * r.metric);
+            params = r.trainable_params;
+            cells.push(format!("{:.1}", 100.0 * r.metric));
+        }
+        cells[1] = fmt_params(params);
+        cells.push(format!("{:.2}", stats::mean(&means)));
+        print_row(&cells, &widths);
+    }
+    println!("\nPaper shape: CoSA 79.5 avg at 29.4M params vs LoRA 77.2 @ \
+              56.2M and DoRA 77.5 @ 57M — competitive at the fewest \
+              parameters.");
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Table 8: instruction tuning (MT-Bench substitute) — rubric-judge
+//! scores (0–10) for LoRA vs PiSSA vs CoSA over 2 runs.
+
+use crate::adapters::costmodel::fmt_params;
+use crate::exp::harness::{exp_train_cfg, method_lr, run_scored, LmScore};
+use crate::exp::{print_header, print_row};
+use crate::math::stats;
+use crate::runtime::executor::Runtime;
+use crate::runtime::Registry;
+use crate::util::args::Args;
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let steps = args.usize("steps", 150);
+    let decode_n = args.usize("decode", 48);
+    let lr = args.f64("lr", 2e-3);
+    let rt = Runtime::cpu()?;
+    let reg = Registry::open_default()?;
+
+    println!("== Table 8 (instruction tuning, rubric judge 0-10): \
+              small-lm, {steps} steps ==\n");
+    let widths = [9, 10, 10, 10, 10];
+    print_header(&["METHOD", "PARAMS", "RUN 1", "RUN 2", "AVERAGE"],
+                 &widths);
+    for method in ["lora", "pissa", "cosa"] {
+        let artifact = format!("small-lm_{method}");
+        let tcfg = exp_train_cfg(steps, method_lr(method, lr));
+        let mut scores = Vec::new();
+        let mut params = 0;
+        for s in 0..2 {
+            let r = run_scored(&rt, &reg, &artifact, "instr", &tcfg, s,
+                               LmScore::Judge, decode_n)?;
+            scores.push(r.metric);
+            params = r.trainable_params;
+        }
+        print_row(&[
+            method.to_string(),
+            fmt_params(params),
+            format!("{:.2}", scores[0]),
+            format!("{:.2}", scores[1]),
+            format!("{:.2}", stats::mean(&scores)),
+        ], &widths);
+    }
+    println!("\nPaper shape: CoSA 3.24 avg > PiSSA 2.69 > LoRA 1.88, with \
+              ~1/3 the trainable parameters.");
+    Ok(())
+}

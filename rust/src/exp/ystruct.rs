@@ -1,0 +1,136 @@
+//! Appendix B.3: structure of trained Y cores — sparsity fraction,
+//! effective rank at 95% spectral energy, Frobenius norms and the
+//! fraction of layers with non-trivial learned structure.
+//!
+//! Trains a quick CoSA run (or loads `--ckpt`) and analyzes every core.
+
+use crate::config::RunConfig;
+use crate::exp::harness::exp_train_cfg;
+use crate::exp::{print_header, print_row};
+use crate::math::matrix::Matrix;
+use crate::math::stats;
+use crate::math::svd::jacobi_svd;
+use crate::runtime::executor::Runtime;
+use crate::runtime::Registry;
+use crate::train::checkpoint::Checkpoint;
+use crate::train::Trainer;
+use crate::util::args::Args;
+
+/// Effective rank: #singular values holding 95% of spectral energy.
+pub fn effective_rank(m: &Matrix, energy: f64) -> usize {
+    let (_, s, _) = jacobi_svd(m);
+    let total: f64 = s.iter().map(|x| (*x as f64) * (*x as f64)).sum();
+    if total <= 0.0 {
+        return 0;
+    }
+    let mut acc = 0.0;
+    for (i, v) in s.iter().enumerate() {
+        acc += (*v as f64) * (*v as f64);
+        if acc >= energy * total {
+            return i + 1;
+        }
+    }
+    s.len()
+}
+
+pub fn run(args: &Args) -> anyhow::Result<()> {
+    let tensors: Vec<(String, Vec<usize>, Vec<f32>)> =
+        if let Some(path) = args.opt("ckpt") {
+            let ck = Checkpoint::load(std::path::Path::new(path))?;
+            ck.tensors.into_iter().map(|(n, (s, v))| (n, s, v)).collect()
+        } else {
+            // quick training run to obtain non-trivial cores
+            let steps = args.usize("steps", 80);
+            let rt = Runtime::cpu()?;
+            let reg = Registry::open_default()?;
+            let cfg = RunConfig {
+                name: "ystruct".into(),
+                artifact: "small-lm_cosa".into(),
+                task: "math".into(),
+                train: exp_train_cfg(steps, 2e-3),
+                ..RunConfig::default()
+            };
+            let mut tr = Trainer::new(&rt, &reg, cfg)?;
+            tr.run()?;
+            tr.train_exec
+                .meta
+                .inputs_with_role("trainable")
+                .iter()
+                .map(|s| {
+                    Ok((s.name.clone(), s.shape.clone(),
+                        tr.state.read(&s.name)?))
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?
+        };
+
+    println!("== App. B.3: trained-Y structure ({} cores) ==\n",
+             tensors.len());
+    let mut sparsities = Vec::new();
+    let mut ranks = Vec::new();
+    let mut fronorms = Vec::new();
+    let mut nontrivial = 0usize;
+    for (_, shape, vals) in &tensors {
+        if shape.len() != 2 {
+            continue;
+        }
+        let m = Matrix::from_vec(shape[0], shape[1], vals.clone());
+        let thresh = 1e-4f32;
+        let frac_small = vals.iter().filter(|v| v.abs() < thresh).count()
+            as f64 / vals.len() as f64;
+        sparsities.push(frac_small);
+        let fro = m.frobenius();
+        fronorms.push(fro);
+        if fro > 1e-6 {
+            nontrivial += 1;
+            ranks.push(effective_rank(&m, 0.95) as f64);
+        }
+    }
+    let widths = [34, 16];
+    print_header(&["STATISTIC", "VALUE"], &widths);
+    print_row(&["cores analyzed".into(), tensors.len().to_string()],
+              &widths);
+    print_row(&["mean sparsity (<1e-4)".into(),
+                format!("{:.1}%", 100.0 * stats::mean(&sparsities))],
+              &widths);
+    print_row(&["mean effective rank (95% energy)".into(),
+                format!("{:.1}", stats::mean(&ranks))], &widths);
+    print_row(&["mean Frobenius norm".into(),
+                format!("{:.4}", stats::mean(&fronorms))], &widths);
+    print_row(&["non-trivial cores".into(),
+                format!("{}/{} ({:.1}%)", nontrivial, tensors.len(),
+                        100.0 * nontrivial as f64
+                            / tensors.len().max(1) as f64)],
+              &widths);
+    println!("\nPaper reference (RoBERTa-base CoLA, 128x128 cores): 31.2% \
+              sparsity, effective rank ~63, Frobenius ~0.05, 98.7% \
+              non-trivial.");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Pcg64;
+
+    #[test]
+    fn effective_rank_of_lowrank_matrix() {
+        let mut rng = Pcg64::new(1);
+        let u = Matrix::gaussian(20, 3, 1.0, &mut rng);
+        let v = Matrix::gaussian(3, 16, 1.0, &mut rng);
+        let m = u.matmul(&v);
+        let r = effective_rank(&m, 0.95);
+        assert!(r <= 3, "rank-3 matrix reported effective rank {r}");
+        assert!(r >= 1);
+    }
+
+    #[test]
+    fn effective_rank_zero_matrix() {
+        assert_eq!(effective_rank(&Matrix::zeros(8, 8), 0.95), 0);
+    }
+
+    #[test]
+    fn effective_rank_identity_is_full() {
+        let m = Matrix::identity(6);
+        assert!(effective_rank(&m, 0.95) >= 5);
+    }
+}

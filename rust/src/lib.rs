@@ -1,0 +1,31 @@
+//! # cosa-repro — CoSA: Compressed Sensing-Based Adaptation of LLMs
+//!
+//! Full-system reproduction of the CoSA paper (Wei et al., 2026) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the fine-tuning framework: config system,
+//!   launcher, synthetic data pipeline, PJRT runtime, training loop,
+//!   adapter management (including the paper's Y-plus-seed storage format),
+//!   RIP validation suite and every paper table/figure as a regenerable
+//!   experiment.
+//! * **L2 (`python/compile/model.py`)** — the transformer + 7 PEFT methods,
+//!   lowered once to HLO text artifacts (`make artifacts`).
+//! * **L1 (`python/compile/kernels/cosa_kernel.py`)** — the fused Pallas
+//!   adapter kernel `o = L(Y(Rx))` with the paper's analytic VJP (Eq. 10).
+//!
+//! Python never runs on the training path: the rust binary is
+//! self-contained once `artifacts/` is built.
+
+pub mod adapters;
+pub mod config;
+pub mod data;
+pub mod eval;
+pub mod exp;
+pub mod math;
+pub mod rip;
+pub mod runtime;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type (anyhow-backed, like the rest of the stack).
+pub type Result<T> = anyhow::Result<T>;

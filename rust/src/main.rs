@@ -1,0 +1,128 @@
+//! `cosa-repro` — launcher CLI for the CoSA reproduction framework.
+//!
+//! Subcommands:
+//!   train   --config <toml> [--steps N]       run one fine-tuning job
+//!   eval    --ckpt <path> --task <id>         score a stored adapter
+//!   exp     <table1|table2|...|fig2|fig3|...> regenerate a paper table
+//!   rip     [--samples N] [--trials K]        RIP validation (Table 4)
+//!   params  [--rank R --a A --b B]            cost model (Fig 3)
+//!   list                                      available artifacts
+//!
+//! Examples:
+//!   cosa-repro exp table4
+//!   cosa-repro train --config configs/quickstart.toml
+//!   cosa-repro exp table2 --steps 60 --seeds 2
+
+use cosa::config::RunConfig;
+use cosa::runtime::executor::Runtime;
+use cosa::runtime::Registry;
+use cosa::train::Trainer;
+use cosa::util::args::Args;
+use cosa::{exp, info};
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> anyhow::Result<()> {
+    match args.subcommand.as_str() {
+        "train" => cmd_train(args),
+        "eval" => cmd_eval(args),
+        "exp" => {
+            let id = args
+                .positional
+                .first()
+                .ok_or_else(|| anyhow::anyhow!(
+                    "usage: cosa-repro exp <id>; ids: {:?}", exp::ALL))?;
+            exp::run(id, args)
+        }
+        "rip" => exp::run("table4", args),
+        "params" => exp::run("fig3", args),
+        "list" => cmd_list(),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand `{other}`\n{HELP}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => RunConfig::load(path)?,
+        None => RunConfig::default(),
+    };
+    if let Some(a) = args.opt("artifact") {
+        cfg.artifact = a.to_string();
+    }
+    if let Some(t) = args.opt("task") {
+        cfg.task = t.to_string();
+    }
+    if let Some(s) = args.opt("steps") {
+        cfg.train.steps = s.parse()?;
+    }
+    if let Some(lr) = args.opt("lr") {
+        cfg.train.lr = lr.parse()?;
+    }
+    let rt = Runtime::cpu()?;
+    let reg = Registry::open_default()?;
+    let mut trainer = Trainer::new(&rt, &reg, cfg)?;
+    trainer.run()?;
+    let (eloss, metric) = trainer.evaluate()?;
+    trainer.log.save_csv(&trainer.csv_path())?;
+    trainer.save_checkpoint(&trainer.ckpt_path())?;
+    info!("final eval: loss {eloss:.4} metric {metric:.4}");
+    info!("loss curve: {}", trainer.csv_path().display());
+    info!("adapter checkpoint: {}", trainer.ckpt_path().display());
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> anyhow::Result<()> {
+    use cosa::train::checkpoint::Checkpoint;
+    let path = args
+        .opt("ckpt")
+        .ok_or_else(|| anyhow::anyhow!("--ckpt <path> required"))?;
+    let ck = Checkpoint::load(std::path::Path::new(path))?;
+    let cfg = RunConfig {
+        artifact: ck.artifact.clone(),
+        task: args.str("task", "math"),
+        adapter_seed: ck.adapter_seed,
+        train: cosa::config::TrainConfig { steps: 0,
+            ..cosa::config::TrainConfig::default() },
+        ..RunConfig::default()
+    };
+    let rt = Runtime::cpu()?;
+    let reg = Registry::open_default()?;
+    let mut trainer = Trainer::new(&rt, &reg, cfg)?;
+    trainer.load_checkpoint(&ck)?;
+    let (eloss, metric) = trainer.evaluate()?;
+    println!("checkpoint {path}: eval loss {eloss:.4}  metric {metric:.4}");
+    Ok(())
+}
+
+fn cmd_list() -> anyhow::Result<()> {
+    let reg = Registry::open_default()?;
+    println!("{} artifacts in {}:", reg.artifacts.len(), reg.dir.display());
+    for a in &reg.artifacts {
+        println!("  {a}");
+    }
+    Ok(())
+}
+
+const HELP: &str = "\
+cosa-repro — CoSA (Compressed Sensing-Based Adaptation) reproduction
+
+USAGE: cosa-repro <subcommand> [flags]
+
+  train   --config <toml> | --artifact <name> --task <id> [--steps N --lr F]
+  eval    --ckpt <path> [--task <id>]
+  exp     <id>         one of: table1 table2 table3 table4 table5 table6
+                       table7 table8 fig2 fig3 ystruct
+  rip     [--samples N --trials K --seed S]     alias for `exp table4`
+  params  [--rank R --a A --b B]                alias for `exp fig3`
+  list    show artifacts (build with `make artifacts`)
+";

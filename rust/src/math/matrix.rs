@@ -1,0 +1,247 @@
+//! Row-major dense f32 matrix with the operations the framework needs:
+//! matmul (blocked), transpose, norms, QR (for randomized SVD), and the
+//! sparse-core product used by the RIP estimator's hot loop.
+
+use crate::math::rng::Pcg64;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Matrix { rows, cols, data }
+    }
+
+    /// i.i.d. N(0, sigma²) entries from a deterministic generator.
+    pub fn gaussian(rows: usize, cols: usize, sigma: f64,
+                    rng: &mut Pcg64) -> Self {
+        Matrix { rows, cols, data: rng.normal_vec(rows * cols, sigma) }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Blocked matmul `self (r×k) · other (k×c)`.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (r, k, c) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(r, c);
+        // i-k-j loop order: contiguous access on both `other` and `out`.
+        for i in 0..r {
+            let orow = &mut out.data[i * c..(i + 1) * c];
+            for kk in 0..k {
+                let a = self.data[i * k + kk];
+                if a == 0.0 {
+                    continue; // sparse cores: skip zero rows of the pattern
+                }
+                let brow = &other.data[kk * c..(kk + 1) * c];
+                for j in 0..c {
+                    orow[j] += a * brow[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data =
+            self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data =
+            self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn frobenius_sq(&self) -> f64 {
+        self.data.iter().map(|v| (*v as f64) * (*v as f64)).sum()
+    }
+    pub fn frobenius(&self) -> f64 {
+        self.frobenius_sq().sqrt()
+    }
+
+    /// Column L2 norms (DoRA's direction normalizer).
+    pub fn col_norms(&self) -> Vec<f32> {
+        let mut out = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                let v = self.data[i * self.cols + j] as f64;
+                out[j] += v * v;
+            }
+        }
+        out.into_iter().map(|v| v.sqrt() as f32).collect()
+    }
+
+    /// Thin QR via modified Gram–Schmidt; returns Q (rows × cols).
+    /// Requires rows >= cols; rank deficiency is tolerated (zero columns).
+    pub fn qr_q(&self) -> Matrix {
+        assert!(self.rows >= self.cols);
+        let (m, n) = (self.rows, self.cols);
+        // work column-major for stability bookkeeping
+        let mut cols: Vec<Vec<f64>> = (0..n)
+            .map(|j| (0..m).map(|i| self.at(i, j) as f64).collect())
+            .collect();
+        for j in 0..n {
+            for k in 0..j {
+                let dot: f64 =
+                    (0..m).map(|i| cols[k][i] * cols[j][i]).sum();
+                for i in 0..m {
+                    cols[j][i] -= dot * cols[k][i];
+                }
+            }
+            let norm: f64 =
+                (0..m).map(|i| cols[j][i] * cols[j][i]).sum::<f64>().sqrt();
+            if norm > 1e-12 {
+                for i in 0..m {
+                    cols[j][i] /= norm;
+                }
+            } else {
+                for i in 0..m {
+                    cols[j][i] = 0.0;
+                }
+            }
+        }
+        let mut q = Matrix::zeros(m, n);
+        for j in 0..n {
+            for i in 0..m {
+                q.set(i, j, cols[j][i] as f32);
+            }
+        }
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity_property() {
+        prop::for_all("A·I == A", 20, |rng| {
+            let n = prop::int_in(rng, 1, 12);
+            let m = prop::int_in(rng, 1, 12);
+            let a = Matrix::gaussian(m, n, 1.0, rng);
+            let c = a.matmul(&Matrix::identity(n));
+            for (x, y) in a.data.iter().zip(&c.data) {
+                assert!((x - y).abs() < 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn matmul_associativity() {
+        prop::for_all("(AB)C == A(BC)", 10, |rng| {
+            let (m, k, l, n) = (
+                prop::int_in(rng, 1, 8),
+                prop::int_in(rng, 1, 8),
+                prop::int_in(rng, 1, 8),
+                prop::int_in(rng, 1, 8),
+            );
+            let a = Matrix::gaussian(m, k, 1.0, rng);
+            let b = Matrix::gaussian(k, l, 1.0, rng);
+            let c = Matrix::gaussian(l, n, 1.0, rng);
+            let lhs = a.matmul(&b).matmul(&c);
+            let rhs = a.matmul(&b.matmul(&c));
+            for (x, y) in lhs.data.iter().zip(&rhs.data) {
+                assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+            }
+        });
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Pcg64::new(1);
+        let a = Matrix::gaussian(5, 9, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn qr_orthonormal_and_spans() {
+        let mut rng = Pcg64::new(2);
+        let a = Matrix::gaussian(20, 6, 1.0, &mut rng);
+        let q = a.qr_q();
+        let qtq = q.transpose().matmul(&q);
+        for i in 0..6 {
+            for j in 0..6 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (qtq.at(i, j) - want).abs() < 1e-4,
+                    "QtQ[{i},{j}] = {}",
+                    qtq.at(i, j)
+                );
+            }
+        }
+        // Q Qᵀ A == A (Q spans A's column space when A has full column rank)
+        let proj = q.matmul(&q.transpose()).matmul(&a);
+        assert!(proj.sub(&a).frobenius() / a.frobenius() < 1e-4);
+    }
+
+    #[test]
+    fn col_norms_match_manual() {
+        let a = Matrix::from_vec(2, 2, vec![3.0, 0.0, 4.0, 2.0]);
+        let n = a.col_norms();
+        assert!((n[0] - 5.0).abs() < 1e-6);
+        assert!((n[1] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn frobenius_norm() {
+        let a = Matrix::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((a.frobenius() - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,13 @@
+//! Dense linear algebra, deterministic RNG and statistics substrates.
+//!
+//! Everything the framework needs numerically on the host side: Gaussian
+//! projection generation (the paper's L/R dictionaries), randomized SVD
+//! (PiSSA initialization), and the metric zoo for the GLUE-style evals.
+
+pub mod matrix;
+pub mod rng;
+pub mod stats;
+pub mod svd;
+
+pub use matrix::Matrix;
+pub use rng::Pcg64;

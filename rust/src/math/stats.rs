@@ -1,0 +1,207 @@
+//! Statistics + the GLUE metric zoo (paper §5.1): accuracy, F1, Matthews
+//! correlation, Pearson/Spearman, percentiles, mean/std aggregation.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation (n-1 denominator; 0 for n < 2).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+        / (xs.len() - 1) as f64)
+        .sqrt()
+}
+
+/// Linear-interpolated percentile, `p` in [0, 100].  Sorts a copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Classification accuracy.
+pub fn accuracy(pred: &[usize], gold: &[usize]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hit = pred.iter().zip(gold).filter(|(p, g)| p == g).count();
+    hit as f64 / pred.len() as f64
+}
+
+/// Binary F1 with class 1 as positive (GLUE MRPC convention).
+pub fn f1_binary(pred: &[usize], gold: &[usize]) -> f64 {
+    let tp = pred.iter().zip(gold).filter(|(p, g)| **p == 1 && **g == 1).count() as f64;
+    let fp = pred.iter().zip(gold).filter(|(p, g)| **p == 1 && **g == 0).count() as f64;
+    let fn_ = pred.iter().zip(gold).filter(|(p, g)| **p == 0 && **g == 1).count() as f64;
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let prec = tp / (tp + fp);
+    let rec = tp / (tp + fn_);
+    2.0 * prec * rec / (prec + rec)
+}
+
+/// Matthews correlation coefficient (GLUE CoLA).
+pub fn matthews_corr(pred: &[usize], gold: &[usize]) -> f64 {
+    let tp = pred.iter().zip(gold).filter(|(p, g)| **p == 1 && **g == 1).count() as f64;
+    let tn = pred.iter().zip(gold).filter(|(p, g)| **p == 0 && **g == 0).count() as f64;
+    let fp = pred.iter().zip(gold).filter(|(p, g)| **p == 1 && **g == 0).count() as f64;
+    let fn_ = pred.iter().zip(gold).filter(|(p, g)| **p == 0 && **g == 1).count() as f64;
+    let denom = ((tp + fp) * (tp + fn_) * (tn + fp) * (tn + fn_)).sqrt();
+    if denom == 0.0 {
+        0.0
+    } else {
+        (tp * tn - fp * fn_) / denom
+    }
+}
+
+/// Pearson correlation (GLUE STS-B, with Spearman below).
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let n = x.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let mx = mean(x);
+    let my = mean(y);
+    let mut num = 0.0;
+    let mut dx = 0.0;
+    let mut dy = 0.0;
+    for i in 0..x.len() {
+        let a = x[i] - mx;
+        let b = y[i] - my;
+        num += a * b;
+        dx += a * a;
+        dy += b * b;
+    }
+    if dx == 0.0 || dy == 0.0 {
+        0.0
+    } else {
+        num / (dx * dy).sqrt()
+    }
+}
+
+/// Average ranks with ties sharing the mean rank.
+fn ranks(xs: &[f64]) -> Vec<f64> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    let mut out = vec![0.0; xs.len()];
+    let mut i = 0;
+    while i < idx.len() {
+        let mut j = i;
+        while j + 1 < idx.len() && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            out[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Spearman rank correlation.
+pub fn spearman(x: &[f64], y: &[f64]) -> f64 {
+    pearson(&ranks(x), &ranks(y))
+}
+
+/// GLUE STS-B metric: average of Pearson and Spearman.
+pub fn pearson_spearman_avg(x: &[f64], y: &[f64]) -> f64 {
+    0.5 * (pearson(x, y) + spearman(x, y))
+}
+
+/// "mean ± std" formatting used by every experiment table.
+pub fn fmt_mean_std(xs: &[f64]) -> String {
+    format!("{:.2} ±{:.2}", mean(xs), std_dev(xs))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std_dev(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!((percentile(&xs, 95.0) - 3.85).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_f1_mcc() {
+        let pred = [1, 0, 1, 1, 0, 0];
+        let gold = [1, 0, 0, 1, 1, 0];
+        assert!((accuracy(&pred, &gold) - 4.0 / 6.0).abs() < 1e-12);
+        // tp=2 fp=1 fn=1 → P=2/3 R=2/3 → F1=2/3
+        assert!((f1_binary(&pred, &gold) - 2.0 / 3.0).abs() < 1e-12);
+        let mcc = matthews_corr(&pred, &gold);
+        assert!((mcc - (2.0 * 2.0 - 1.0) / 9.0).abs() < 1e-9, "{mcc}");
+    }
+
+    #[test]
+    fn perfect_and_inverse_predictions() {
+        let g = [0, 1, 0, 1];
+        assert_eq!(matthews_corr(&g, &g), 1.0);
+        let inv = [1, 0, 1, 0];
+        assert_eq!(matthews_corr(&inv, &g), -1.0);
+        assert_eq!(f1_binary(&g, &g), 1.0);
+    }
+
+    #[test]
+    fn pearson_exact_linear() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-12);
+        let yneg = [8.0, 6.0, 4.0, 2.0];
+        assert!((pearson(&x, &yneg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_monotone_invariance() {
+        let x = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let y = [1.0, 8.0, 27.0, 64.0, 125.0]; // nonlinear but monotone
+        assert!((spearman(&x, &y) - 1.0).abs() < 1e-12);
+        assert!(pearson(&x, &y) < 1.0);
+    }
+
+    #[test]
+    fn spearman_with_ties() {
+        let x = [1.0, 2.0, 2.0, 3.0];
+        let r = ranks(&x);
+        assert_eq!(r, vec![1.0, 2.5, 2.5, 4.0]);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert_eq!(pearson(&[1.0, 1.0], &[2.0, 3.0]), 0.0);
+        assert_eq!(f1_binary(&[0, 0], &[0, 0]), 0.0);
+        assert_eq!(std_dev(&[5.0]), 0.0);
+    }
+}

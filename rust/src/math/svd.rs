@@ -1,0 +1,241 @@
+//! Randomized truncated SVD (Halko–Martinsson–Tropp) — the substrate for
+//! PiSSA initialization: principal singular triplets of the frozen W0 seed
+//! the A/B adapters, and the residual replaces W0.
+
+use crate::math::matrix::Matrix;
+use crate::math::rng::Pcg64;
+
+pub struct Svd {
+    /// Left singular vectors, (m × k), columns orthonormal.
+    pub u: Matrix,
+    /// Singular values, descending, length k.
+    pub s: Vec<f32>,
+    /// Right singular vectors transposed, (k × n), rows orthonormal.
+    pub vt: Matrix,
+}
+
+/// Rank-`k` randomized SVD of `a` with `n_iter` subspace iterations.
+///
+/// Oversamples by `p = min(8, …)` then truncates; `n_iter = 4` is plenty
+/// for the Gaussian-spectrum matrices this framework generates.
+pub fn randomized_svd(a: &Matrix, k: usize, n_iter: usize,
+                      rng: &mut Pcg64) -> Svd {
+    let (m, n) = (a.rows, a.cols);
+    let k = k.min(m).min(n);
+    let p = (k + 8).min(n.min(m)); // oversampled sketch size
+    let at = a.transpose();
+
+    // Range finder: Q spans the dominant column space of A.
+    let omega = Matrix::gaussian(n, p, 1.0, rng);
+    let mut q = a.matmul(&omega).qr_q();
+    for _ in 0..n_iter {
+        q = at.matmul(&q).qr_q();
+        q = a.matmul(&q).qr_q();
+    }
+
+    // B = Qᵀ A  (p × n);  SVD of the small B via one-sided Jacobi on Bᵀ.
+    let b = q.transpose().matmul(a);
+    let (ub, s, vtb) = jacobi_svd(&b);
+
+    // U = Q · U_b, truncated to k.
+    let u_full = q.matmul(&ub);
+    let mut u = Matrix::zeros(m, k);
+    let mut vt = Matrix::zeros(k, n);
+    for i in 0..k {
+        for r in 0..m {
+            u.set(r, i, u_full.at(r, i));
+        }
+        for c in 0..n {
+            vt.set(i, c, vtb.at(i, c));
+        }
+    }
+    Svd { u, s: s[..k].to_vec(), vt }
+}
+
+/// Full SVD of a small matrix via one-sided Jacobi rotations on columns
+/// of Aᵀ — O(n²·sweeps) but only ever applied to (k+8)-sized sketches.
+/// Returns (U, s, Vᵀ) with s descending.
+pub fn jacobi_svd(a: &Matrix) -> (Matrix, Vec<f32>, Matrix) {
+    let (m, n) = (a.rows, a.cols);
+    // Work on columns of G = Aᵀ (n × m): one-sided Jacobi orthogonalizes
+    // rows of A; we instead orthogonalize columns of A directly when m>=n.
+    // Standard trick: run on W = A if m >= n else on Aᵀ and swap outputs.
+    if m < n {
+        let (u, s, vt) = jacobi_svd(&a.transpose());
+        return (vt.transpose(), s, u.transpose());
+    }
+    // W: m × n, V: n × n accumulating right rotations.
+    let mut w: Vec<Vec<f64>> = (0..n)
+        .map(|j| (0..m).map(|i| a.at(i, j) as f64).collect())
+        .collect();
+    let mut v = vec![vec![0.0f64; n]; n];
+    for (i, row) in v.iter_mut().enumerate() {
+        row[i] = 1.0;
+    }
+
+    for _sweep in 0..60 {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let alpha: f64 = (0..m).map(|i| w[p][i] * w[p][i]).sum();
+                let beta: f64 = (0..m).map(|i| w[q][i] * w[q][i]).sum();
+                let gamma: f64 = (0..m).map(|i| w[p][i] * w[q][i]).sum();
+                off += gamma * gamma;
+                if gamma.abs() < 1e-14 * (alpha * beta).sqrt().max(1e-300) {
+                    continue;
+                }
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let wp = w[p][i];
+                    let wq = w[q][i];
+                    w[p][i] = c * wp - s * wq;
+                    w[q][i] = s * wp + c * wq;
+                }
+                for i in 0..n {
+                    let vp = v[p][i];
+                    let vq = v[q][i];
+                    v[p][i] = c * vp - s * vq;
+                    v[q][i] = s * vp + c * vq;
+                }
+            }
+        }
+        if off.sqrt() < 1e-12 {
+            break;
+        }
+    }
+
+    // Singular values are column norms of W; U = W / s.
+    let mut triples: Vec<(f64, usize)> = (0..n)
+        .map(|j| {
+            let norm: f64 =
+                (0..m).map(|i| w[j][i] * w[j][i]).sum::<f64>().sqrt();
+            (norm, j)
+        })
+        .collect();
+    triples.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+
+    let mut u = Matrix::zeros(m, n);
+    let mut s = vec![0.0f32; n];
+    let mut vt = Matrix::zeros(n, n);
+    for (rank, (norm, j)) in triples.iter().enumerate() {
+        s[rank] = *norm as f32;
+        if *norm > 1e-12 {
+            for i in 0..m {
+                u.set(i, rank, (w[*j][i] / norm) as f32);
+            }
+        }
+        for i in 0..n {
+            vt.set(rank, i, v[*j][i] as f32);
+        }
+    }
+    (u, s, vt)
+}
+
+impl Svd {
+    /// Reconstruct U diag(s) Vᵀ (tests / residual computation).
+    pub fn reconstruct(&self) -> Matrix {
+        let k = self.s.len();
+        let mut us = Matrix::zeros(self.u.rows, k);
+        for i in 0..self.u.rows {
+            for j in 0..k {
+                us.set(i, j, self.u.at(i, j) * self.s[j]);
+            }
+        }
+        us.matmul(&self.vt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn jacobi_reconstructs_small() {
+        let mut rng = Pcg64::new(10);
+        let a = Matrix::gaussian(8, 5, 1.0, &mut rng);
+        let (u, s, vt) = jacobi_svd(&a);
+        let mut us = Matrix::zeros(8, 5);
+        for i in 0..8 {
+            for j in 0..5 {
+                us.set(i, j, u.at(i, j) * s[j]);
+            }
+        }
+        let rec = us.matmul(&vt);
+        assert!(rec.sub(&a).frobenius() / a.frobenius() < 1e-4);
+        // descending singular values
+        assert!(s.windows(2).all(|w| w[0] >= w[1] - 1e-6));
+    }
+
+    #[test]
+    fn jacobi_wide_matrix() {
+        let mut rng = Pcg64::new(11);
+        let a = Matrix::gaussian(4, 9, 1.0, &mut rng);
+        let (u, s, vt) = jacobi_svd(&a);
+        assert_eq!((u.rows, vt.cols), (4, 9));
+        let k = s.len();
+        let mut us = Matrix::zeros(4, k);
+        for i in 0..4 {
+            for j in 0..k {
+                us.set(i, j, u.at(i, j) * s[j]);
+            }
+        }
+        assert!(us.matmul(&vt).sub(&a).frobenius() / a.frobenius() < 1e-4);
+    }
+
+    #[test]
+    fn randomized_svd_captures_low_rank() {
+        // Build an exactly rank-3 matrix; rank-3 RSVD must nail it.
+        let mut rng = Pcg64::new(12);
+        let u = Matrix::gaussian(30, 3, 1.0, &mut rng);
+        let v = Matrix::gaussian(3, 20, 1.0, &mut rng);
+        let a = u.matmul(&v);
+        let svd = randomized_svd(&a, 3, 4, &mut rng);
+        let rec = svd.reconstruct();
+        assert!(
+            rec.sub(&a).frobenius() / a.frobenius() < 1e-3,
+            "relative err {}",
+            rec.sub(&a).frobenius() / a.frobenius()
+        );
+    }
+
+    #[test]
+    fn rsvd_truncation_error_bounded_by_tail() {
+        prop::for_all("rsvd tail bound", 5, |rng| {
+            let m = prop::int_in(rng, 10, 24);
+            let n = prop::int_in(rng, 10, 24);
+            let a = Matrix::gaussian(m, n, 1.0, rng);
+            let k = 4.min(m).min(n);
+            let svd = randomized_svd(&a, k, 4, rng);
+            let err = svd.reconstruct().sub(&a).frobenius();
+            // Compare to exact truncation error from full Jacobi SVD.
+            let (_, s_full, _) = jacobi_svd(&a);
+            let tail: f64 = s_full[k..]
+                .iter()
+                .map(|x| (*x as f64) * (*x as f64))
+                .sum::<f64>()
+                .sqrt();
+            assert!(
+                err <= tail * 1.6 + 1e-4,
+                "rsvd err {err} vs optimal tail {tail}"
+            );
+        });
+    }
+
+    #[test]
+    fn singular_vectors_orthonormal() {
+        let mut rng = Pcg64::new(13);
+        let a = Matrix::gaussian(25, 12, 1.0, &mut rng);
+        let svd = randomized_svd(&a, 5, 3, &mut rng);
+        let utu = svd.u.transpose().matmul(&svd.u);
+        for i in 0..5 {
+            for j in 0..5 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((utu.at(i, j) - want).abs() < 1e-3);
+            }
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Monte-Carlo RIP constant estimator (paper Appendix A.3 / B.1).
+//!
+//! For the Kronecker dictionary `Ψ = Rᵀ ⊗ L`, the isometry ratio of a
+//! sparse core never materializes Ψ (mn × ab): using
+//! `Ψ vec(Y) = vec(L Y R)` and the rank-one expansion
+//!
+//! ```text
+//! ‖L Y R‖_F² = Σ_k Σ_l y_k y_l (l_{ik}·l_{il}) (r_{jk}·r_{jl})
+//! ```
+//!
+//! each s-sparse sample costs O(s²·(m+n)) instead of O(mn·ab) — this is
+//! the L3 hot path behind Table 4 / Fig 4 and is benchmarked in
+//! `rust/benches/rip_bench.rs`.
+
+use crate::math::rng::Pcg64;
+use crate::math::stats;
+
+/// Dimensions of one RIP experiment: ΔW is (m × n), core Y is (a × b).
+#[derive(Clone, Copy, Debug)]
+pub struct RipSetup {
+    pub m: usize,
+    pub n: usize,
+    pub a: usize,
+    pub b: usize,
+}
+
+impl RipSetup {
+    /// The paper's proxy dimensions (App. B.1): m=512, n=256.
+    pub fn paper(a: usize, b: usize) -> Self {
+        RipSetup { m: 512, n: 256, a, b }
+    }
+
+    /// Compression ratio mn / ab as reported in Table 4.
+    pub fn compression_ratio(&self) -> f64 {
+        (self.m * self.n) as f64 / (self.a * self.b) as f64
+    }
+}
+
+/// Result of one Monte-Carlo δ_s estimation.
+#[derive(Clone, Debug)]
+pub struct RipEstimate {
+    pub setup: RipSetup,
+    pub sparsity: usize,
+    pub samples: usize,
+    /// 95th percentile of |ratio − 1| (paper Eq. 26).
+    pub delta: f64,
+    /// Mean and std of |ratio − 1| across samples (diagnostics).
+    pub mean_dev: f64,
+    pub std_dev: f64,
+    /// Raw isometry ratios (returned for Fig 4 histograms).
+    pub ratios: Vec<f64>,
+}
+
+/// Sample one s-sparse core and return its isometry ratio
+/// ‖Ψα‖²/‖α‖² under the 1/√(mn)-normalized dictionary.
+///
+/// `lt` is L in column-major form (a rows of length m — i.e. Lᵀ), `r` is
+/// R row-major (b rows of length n), both with N(0,1) entries.
+fn isometry_ratio(
+    lt: &[Vec<f32>],
+    r: &[Vec<f32>],
+    setup: &RipSetup,
+    sparsity: usize,
+    rng: &mut Pcg64,
+) -> f64 {
+    let ab = setup.a * setup.b;
+    let s = sparsity.min(ab);
+    // support: s distinct (i, j) positions in Y; values N(0, 1)
+    let support = rng.sample_indices(ab, s);
+    let vals: Vec<f64> = (0..s).map(|_| rng.normal()).collect();
+
+    // Gram matrices restricted to the support's L-columns / R-rows.
+    let mut num = 0.0f64;
+    for k in 0..s {
+        let (ik, jk) = (support[k] / setup.b, support[k] % setup.b);
+        for l in 0..s {
+            let (il, jl) = (support[l] / setup.b, support[l] % setup.b);
+            let ldot: f64 = lt[ik]
+                .iter()
+                .zip(&lt[il])
+                .map(|(x, y)| *x as f64 * *y as f64)
+                .sum();
+            let rdot: f64 = r[jk]
+                .iter()
+                .zip(&r[jl])
+                .map(|(x, y)| *x as f64 * *y as f64)
+                .sum();
+            num += vals[k] * vals[l] * ldot * rdot;
+        }
+    }
+    let denom: f64 = vals.iter().map(|v| v * v).sum();
+    // Ψ ← Ψ / √(mn): entries of L,R are N(0,1); E‖LYR‖² = mn‖Y‖².
+    num / denom / (setup.m * setup.n) as f64
+}
+
+/// Estimate δ_s = percentile₉₅{|ratio − 1|} over `samples` random s-sparse
+/// cores against a fresh Gaussian (L, R) draw seeded by `seed`.
+pub fn rip_constant(
+    setup: RipSetup,
+    sparsity: usize,
+    samples: usize,
+    seed: u64,
+) -> RipEstimate {
+    let mut rng = Pcg64::derive(seed, "rip.projections");
+    // store Lᵀ so column dots are contiguous
+    let lt: Vec<Vec<f32>> =
+        (0..setup.a).map(|_| rng.normal_vec(setup.m, 1.0)).collect();
+    let r: Vec<Vec<f32>> =
+        (0..setup.b).map(|_| rng.normal_vec(setup.n, 1.0)).collect();
+
+    let mut sample_rng = Pcg64::derive(seed, "rip.samples");
+    let mut ratios = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        ratios.push(isometry_ratio(&lt, &r, &setup, sparsity,
+                                   &mut sample_rng));
+    }
+    let devs: Vec<f64> = ratios.iter().map(|r| (r - 1.0).abs()).collect();
+    RipEstimate {
+        setup,
+        sparsity,
+        samples,
+        delta: stats::percentile(&devs, 95.0),
+        mean_dev: stats::mean(&devs),
+        std_dev: stats::std_dev(&devs),
+        ratios,
+    }
+}
+
+/// Repeat `rip_constant` over `trials` independent (L, R) draws and return
+/// (mean δ, std δ) — the ± column of Table 4.
+pub fn rip_constant_trials(
+    setup: RipSetup,
+    sparsity: usize,
+    samples: usize,
+    trials: usize,
+    seed: u64,
+) -> (f64, f64, Vec<f64>) {
+    let deltas: Vec<f64> = (0..trials)
+        .map(|t| {
+            rip_constant(setup, sparsity, samples, seed + 1000 * t as u64)
+                .delta
+        })
+        .collect();
+    (stats::mean(&deltas), stats::std_dev(&deltas), deltas)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios_concentrate_around_one() {
+        let est = rip_constant(RipSetup::paper(64, 16), 10, 300, 7);
+        let mean = stats::mean(&est.ratios);
+        assert!((mean - 1.0).abs() < 0.1, "mean ratio {mean}");
+        assert!(est.delta < 0.5, "delta {} breaches stability", est.delta);
+        assert!(est.delta > 0.01, "delta {} suspiciously tight", est.delta);
+    }
+
+    #[test]
+    fn delta_decreases_with_sparsity_level() {
+        // Random (non-adversarial) sparse cores concentrate better as s
+        // grows — the paper's Table 4 trend.
+        let s5 = rip_constant(RipSetup::paper(128, 32), 5, 400, 3).delta;
+        let s20 = rip_constant(RipSetup::paper(128, 32), 20, 400, 3).delta;
+        assert!(s20 < s5, "δ5={s5} δ20={s20}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = rip_constant(RipSetup::paper(32, 8), 5, 50, 11);
+        let b = rip_constant(RipSetup::paper(32, 8), 5, 50, 11);
+        assert_eq!(a.delta, b.delta);
+        assert_eq!(a.ratios, b.ratios);
+    }
+
+    #[test]
+    fn dense_core_matches_direct_computation() {
+        // s = ab (fully dense core): cross-check the rank-one expansion
+        // against the direct ‖LYR‖ computed with explicit matrices.
+        use crate::math::matrix::Matrix;
+        let setup = RipSetup { m: 24, n: 16, a: 4, b: 3 };
+        let mut rng = Pcg64::derive(5, "rip.projections");
+        let lt: Vec<Vec<f32>> =
+            (0..setup.a).map(|_| rng.normal_vec(setup.m, 1.0)).collect();
+        let r: Vec<Vec<f32>> =
+            (0..setup.b).map(|_| rng.normal_vec(setup.n, 1.0)).collect();
+        let mut srng = Pcg64::new(99);
+        let ratio = isometry_ratio(&lt, &r, &setup, 12, &mut srng);
+
+        // rebuild the same support/values stream
+        let mut srng2 = Pcg64::new(99);
+        let support = srng2.sample_indices(12, 12);
+        let vals: Vec<f64> = (0..12).map(|_| srng2.normal()).collect();
+        let mut y = Matrix::zeros(setup.a, setup.b);
+        for (k, pos) in support.iter().enumerate() {
+            y.set(pos / setup.b, pos % setup.b, vals[k] as f32);
+        }
+        let mut l = Matrix::zeros(setup.m, setup.a);
+        for (j, col) in lt.iter().enumerate() {
+            for (i, v) in col.iter().enumerate() {
+                l.set(i, j, *v);
+            }
+        }
+        let mut rm = Matrix::zeros(setup.b, setup.n);
+        for (i, row) in r.iter().enumerate() {
+            for (j, v) in row.iter().enumerate() {
+                rm.set(i, j, *v);
+            }
+        }
+        let lyr = l.matmul(&y).matmul(&rm);
+        let direct = lyr.frobenius_sq()
+            / y.frobenius_sq()
+            / (setup.m * setup.n) as f64;
+        assert!(
+            (ratio - direct).abs() / direct < 1e-3,
+            "expansion {ratio} vs direct {direct}"
+        );
+    }
+
+    #[test]
+    fn trials_report_spread() {
+        let (mean, std, deltas) =
+            rip_constant_trials(RipSetup::paper(64, 16), 5, 100, 3, 21);
+        assert_eq!(deltas.len(), 3);
+        assert!(mean > 0.0 && std >= 0.0);
+    }
+}

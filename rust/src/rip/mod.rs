@@ -1,0 +1,15 @@
+//! RIP measurement suite (paper §3.2, §4.1, Appendix A/B).
+//!
+//! Validates that CoSA's Kronecker dictionary `Ψ = Rᵀ ⊗ L` acts as a
+//! near-isometry on sparse cores: Monte-Carlo estimation of the empirical
+//! RIP constant δ_s (Appendix B, Eq. 26), mutual coherence of the
+//! dictionary (App. B.2), and the theoretical bounds of Appendix A.2 —
+//! everything behind Table 4 and Figure 4.
+
+pub mod coherence;
+pub mod estimator;
+pub mod theory;
+
+pub use coherence::kron_coherence;
+pub use estimator::{rip_constant, RipEstimate, RipSetup};
+pub use theory::{kron_rip_bound, single_factor_bound};

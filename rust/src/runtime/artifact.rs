@@ -1,0 +1,280 @@
+//! Artifact registry: parse `artifacts/manifest.json` and the per-artifact
+//! `<name>.json` metadata emitted by `python/compile/aot.py`.
+//!
+//! The JSON is the ABI between L2 and L3: ordered input/output tensor
+//! specs with roles, plus the model/method configs the specs were lowered
+//! against.  Rust trusts the order, not name conventions.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One input or output tensor in artifact order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub name: String,
+    /// "scalar" | "trainable" | "opt_m" | "opt_v" | "frozen" | "batch"
+    /// for inputs; outputs leave this empty.
+    pub role: String,
+    pub shape: Vec<usize>,
+    /// "f32" | "i32"
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> anyhow::Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req("name")?.as_str().unwrap_or_default().to_string(),
+            role: j.get("role").and_then(|r| r.as_str()).unwrap_or("")
+                .to_string(),
+            shape: j
+                .req("shape")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|v| v.as_usize().unwrap_or(0))
+                .collect(),
+            dtype: j.get("dtype").and_then(|d| d.as_str()).unwrap_or("f32")
+                .to_string(),
+        })
+    }
+}
+
+/// Model config mirrored from `presets.py`.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub head: String,
+    pub n_classes: usize,
+    pub batch: usize,
+}
+
+impl ModelMeta {
+    fn from_json(j: &Json) -> anyhow::Result<ModelMeta> {
+        let u = |k: &str| -> anyhow::Result<usize> {
+            Ok(j.req(k)?.as_usize().unwrap_or(0))
+        };
+        Ok(ModelMeta {
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            d_ff: u("d_ff")?,
+            max_seq: u("max_seq")?,
+            head: j.req("head")?.as_str().unwrap_or("lm").to_string(),
+            n_classes: u("n_classes")?,
+            batch: u("batch")?,
+        })
+    }
+}
+
+/// Method config mirrored from `presets.py`.
+#[derive(Clone, Debug)]
+pub struct MethodMeta {
+    pub method: String,
+    pub r: usize,
+    pub a: usize,
+    pub b: usize,
+    pub alpha: f64,
+    pub nola_k: usize,
+}
+
+impl MethodMeta {
+    fn from_json(j: &Json) -> anyhow::Result<MethodMeta> {
+        Ok(MethodMeta {
+            method: j.req("method")?.as_str().unwrap_or("").to_string(),
+            r: j.get("r").and_then(|v| v.as_usize()).unwrap_or(8),
+            a: j.get("a").and_then(|v| v.as_usize()).unwrap_or(64),
+            b: j.get("b").and_then(|v| v.as_usize()).unwrap_or(32),
+            alpha: j.get("alpha").and_then(|v| v.as_f64()).unwrap_or(2.0),
+            nola_k: j.get("nola_k").and_then(|v| v.as_usize()).unwrap_or(32),
+        })
+    }
+}
+
+/// Parsed metadata for one lowered artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: String,
+    pub preset: String,
+    pub model: ModelMeta,
+    pub method: MethodMeta,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub hlo_path: PathBuf,
+}
+
+impl ArtifactMeta {
+    pub fn load(dir: &Path, artifact: &str) -> anyhow::Result<ArtifactMeta> {
+        let meta_path = dir.join(format!("{artifact}.json"));
+        let src = std::fs::read_to_string(&meta_path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts`?): {e}",
+                meta_path.display()
+            )
+        })?;
+        let j = Json::parse(&src)?;
+        let inputs = j
+            .req("inputs")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let outputs = j
+            .req("outputs")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(TensorSpec::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(ArtifactMeta {
+            name: j.req("name")?.as_str().unwrap_or("").to_string(),
+            kind: j.req("kind")?.as_str().unwrap_or("").to_string(),
+            preset: j.req("preset")?.as_str().unwrap_or("").to_string(),
+            model: ModelMeta::from_json(j.req("model")?)?,
+            method: MethodMeta::from_json(j.req("method")?)?,
+            inputs,
+            outputs,
+            hlo_path: dir.join(format!("{artifact}.hlo.txt")),
+        })
+    }
+
+    /// Input specs with a given role, in artifact order.
+    pub fn inputs_with_role(&self, role: &str) -> Vec<&TensorSpec> {
+        self.inputs.iter().filter(|s| s.role == role).collect()
+    }
+
+    /// (name, shape) pairs for the initializer (trainable + frozen).
+    pub fn init_specs(&self) -> Vec<(String, Vec<usize>)> {
+        self.inputs
+            .iter()
+            .filter(|s| s.role == "trainable" || s.role == "frozen")
+            .map(|s| (s.name.clone(), s.shape.clone()))
+            .collect()
+    }
+
+    pub fn trainable_param_count(&self) -> usize {
+        self.inputs_with_role("trainable").iter().map(|s| s.numel()).sum()
+    }
+}
+
+/// The artifact directory + manifest.
+#[derive(Debug)]
+pub struct Registry {
+    pub dir: PathBuf,
+    pub artifacts: Vec<String>,
+    pub entries: BTreeMap<String, Json>,
+}
+
+impl Registry {
+    /// Open `artifacts/` (or `$COSA_ARTIFACTS`).
+    pub fn open_default() -> anyhow::Result<Registry> {
+        let dir = std::env::var("COSA_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Registry::open(Path::new(&dir))
+    }
+
+    pub fn open(dir: &Path) -> anyhow::Result<Registry> {
+        let manifest = dir.join("manifest.json");
+        let src = std::fs::read_to_string(&manifest).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts`): {e}",
+                manifest.display()
+            )
+        })?;
+        let j = Json::parse(&src)?;
+        let artifacts = j
+            .req("artifacts")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|v| v.as_str().map(str::to_string))
+            .collect();
+        let mut entries = BTreeMap::new();
+        if let Some(arr) = j.get("entries").and_then(|e| e.as_arr()) {
+            for e in arr {
+                if let Some(name) = e.get("name").and_then(|n| n.as_str()) {
+                    entries.insert(name.to_string(), e.clone());
+                }
+            }
+        }
+        Ok(Registry { dir: dir.to_path_buf(), artifacts, entries })
+    }
+
+    pub fn meta(&self, artifact: &str) -> anyhow::Result<ArtifactMeta> {
+        ArtifactMeta::load(&self.dir, artifact)
+    }
+
+    pub fn has(&self, artifact: &str) -> bool {
+        self.artifacts.iter().any(|a| a == artifact)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn registry_and_meta_parse() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let reg = Registry::open(&dir).unwrap();
+        assert!(reg.has("tiny-lm_cosa_train"), "{:?}", reg.artifacts);
+        let meta = reg.meta("tiny-lm_cosa_train").unwrap();
+        assert_eq!(meta.kind, "train");
+        assert_eq!(meta.model.d_model, 64);
+        assert_eq!(meta.method.method, "cosa");
+        assert!(meta.hlo_path.exists());
+
+        // role partitioning: scalars first, batch last
+        assert_eq!(meta.inputs[0].role, "scalar");
+        assert_eq!(meta.inputs.last().unwrap().role, "batch");
+        // train outputs = loss, acc + 3 tensors per trainable
+        let nt = meta.inputs_with_role("trainable").len();
+        assert_eq!(meta.outputs.len(), 2 + 3 * nt);
+        // CoSA trainables are exactly the cores: n_layers × 4 sites
+        assert_eq!(nt, meta.model.n_layers * 4);
+        assert_eq!(meta.trainable_param_count(),
+                   nt * meta.method.a * meta.method.b);
+    }
+
+    #[test]
+    fn eval_meta_has_logits() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let meta = Registry::open(&dir).unwrap()
+            .meta("tiny-lm_cosa_eval").unwrap();
+        let last = meta.outputs.last().unwrap();
+        assert_eq!(last.name, "logits");
+        assert_eq!(last.shape, vec![8, 32, 256]);
+    }
+
+    #[test]
+    fn missing_artifact_is_helpful_error() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let err = Registry::open(&dir).unwrap().meta("nope").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,352 @@
+//! Executor: compiled artifact + persistent model state + step dispatch.
+//!
+//! State is a name → **device buffer** map shared between the train and
+//! eval executors of a run, executed via `execute_b`.  Weights live on
+//! the device across steps: per step only the four schedule scalars and
+//! the batch are uploaded, and only the updated trainables/moments are
+//! spliced back.  (§Perf L3: the literal-based `execute` path re-uploads
+//! every frozen tensor per call *and leaks the input device buffers* in
+//! xla_rs.cc — at e2e scale that is 132 MB/step of growth; the
+//! buffer-resident path removed both the copy and the leak.  See
+//! EXPERIMENTS.md §Perf.)
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient,
+          PjRtLoadedExecutable, XlaComputation};
+
+use crate::data::batcher::Batch;
+use crate::runtime::artifact::ArtifactMeta;
+use crate::runtime::literal::{scalar_f32, to_vec};
+
+/// Process-wide PJRT client (CPU).
+pub struct Runtime {
+    pub client: PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        Ok(Runtime { client: PjRtClient::cpu()? })
+    }
+
+    /// Load + compile one artifact.
+    pub fn load(&self, dir: &Path, artifact: &str)
+                -> anyhow::Result<Executor> {
+        let meta = ArtifactMeta::load(dir, artifact)?;
+        let proto = HloModuleProto::from_text_file(
+            meta.hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("bad path"))?,
+        )?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executor {
+            meta,
+            exe,
+            client: self.client.clone(),
+            profile: Default::default(),
+        })
+    }
+}
+
+/// A state tensor: host mirror + device buffer.
+///
+/// Uploads go through `buffer_from_host_buffer` with
+/// `kImmutableOnlyDuringCall` semantics — the CPU client copies the host
+/// data *before returning*, so there is no async-transfer lifetime hazard
+/// (`BufferFromHostLiteral` defers its copy to a worker thread and
+/// use-after-frees if the source literal dies first — the crate's own
+/// `execute` wrapper awaits readiness for that reason, at the price of
+/// leaking every input buffer; see EXPERIMENTS.md §Perf).
+pub struct Entry {
+    /// Host mirror of the tensor (also serves `State::read`).
+    pub data: Vec<f32>,
+    pub buf: PjRtBuffer,
+}
+
+/// Shared model + optimizer state (name → device-resident entry).
+pub struct State {
+    pub tensors: BTreeMap<String, Entry>,
+    /// AdamW step counter (t input; starts at 1 on the first step).
+    pub step: u64,
+    client: PjRtClient,
+}
+
+impl State {
+    /// Initialize from host tensors (trainable + frozen) plus zeroed
+    /// moments for every trainable of `meta`.  All tensors are uploaded
+    /// to the device once here.
+    pub fn init(client: &PjRtClient, meta: &ArtifactMeta,
+                host: &BTreeMap<String, Vec<f32>>) -> anyhow::Result<State> {
+        let up = |data: Vec<f32>, shape: &[usize]| -> anyhow::Result<Entry> {
+            let buf = client.buffer_from_host_buffer(&data, shape, None)?;
+            Ok(Entry { data, buf })
+        };
+        let mut tensors = BTreeMap::new();
+        for spec in &meta.inputs {
+            match spec.role.as_str() {
+                "trainable" | "frozen" => {
+                    let vals = host.get(&spec.name).ok_or_else(|| {
+                        anyhow::anyhow!("initializer missing `{}`", spec.name)
+                    })?;
+                    anyhow::ensure!(
+                        vals.len() == spec.numel(),
+                        "`{}`: init has {} values, spec wants {:?}",
+                        spec.name, vals.len(), spec.shape
+                    );
+                    tensors.insert(spec.name.clone(),
+                                   up(vals.clone(), &spec.shape)?);
+                }
+                "opt_m" | "opt_v" => {
+                    tensors.insert(spec.name.clone(),
+                                   up(vec![0.0; spec.numel()], &spec.shape)?);
+                }
+                _ => {}
+            }
+        }
+        Ok(State { tensors, step: 0, client: client.clone() })
+    }
+
+    /// Read one tensor back to the host (checkpointing, AdaLoRA masks…).
+    pub fn read(&self, name: &str) -> anyhow::Result<Vec<f32>> {
+        let e = self.tensors.get(name)
+            .ok_or_else(|| anyhow::anyhow!("state missing `{name}`"))?;
+        Ok(e.data.clone()) // host mirror always matches the device buffer
+    }
+
+    /// Overwrite one tensor from host values.
+    pub fn write(&mut self, name: &str, shape: &[usize],
+                 vals: &[f32]) -> anyhow::Result<()> {
+        let data = vals.to_vec();
+        let buf = self.client.buffer_from_host_buffer(&data, shape, None)?;
+        self.tensors.insert(name.to_string(), Entry { data, buf });
+        Ok(())
+    }
+}
+
+/// Result of one train step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepOut {
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// Result of one eval step.
+pub struct EvalOut {
+    pub loss: f32,
+    pub acc: f32,
+    pub logits: Vec<f32>,
+    pub logits_shape: Vec<usize>,
+}
+
+/// Accumulated per-phase timings of the executor hot path (§Perf L3):
+/// batch upload vs XLA execute vs output readback/splice.
+#[derive(Default, Debug, Clone, Copy)]
+pub struct PhaseTimes {
+    pub marshal_ns: u64,
+    pub execute_ns: u64,
+    pub splice_ns: u64,
+    pub steps: u64,
+}
+
+impl PhaseTimes {
+    pub fn report(&self) -> String {
+        let s = self.steps.max(1);
+        format!(
+            "per step: marshal {:.1}µs | execute {:.1}µs | splice {:.1}µs \
+             (overhead {:.2}%)",
+            self.marshal_ns as f64 / s as f64 / 1e3,
+            self.execute_ns as f64 / s as f64 / 1e3,
+            self.splice_ns as f64 / s as f64 / 1e3,
+            100.0 * (self.marshal_ns + self.splice_ns) as f64
+                / (self.marshal_ns + self.execute_ns + self.splice_ns)
+                    .max(1) as f64
+        )
+    }
+}
+
+fn dbg_log(msg: &str) {
+    if std::env::var("COSA_DBG").is_ok() {
+        eprintln!("DBG: {msg}");
+    }
+}
+
+pub struct Executor {
+    pub meta: ArtifactMeta,
+    exe: PjRtLoadedExecutable,
+    client: PjRtClient,
+    profile: std::cell::Cell<PhaseTimes>,
+}
+
+impl Executor {
+    /// Upload one batch-role input as a device buffer.
+    fn batch_buffer(&self, name: &str, shape: &[usize],
+                    batch: &Batch) -> anyhow::Result<PjRtBuffer> {
+        match name {
+            "inputs" => self.upload_i32(&batch.ids, shape),
+            "wmask" => Ok(self.client
+                .buffer_from_host_buffer(&batch.wmask, shape, None)?),
+            "targets" => {
+                let t = batch.targets.as_ref()
+                    .ok_or_else(|| anyhow::anyhow!("batch lacks targets"))?;
+                self.upload_i32(t, shape)
+            }
+            "labels" => {
+                if let Some(li) = &batch.labels_i {
+                    self.upload_i32(li, shape)
+                } else if let Some(lf) = &batch.labels_f {
+                    Ok(self.client.buffer_from_host_buffer(lf, shape, None)?)
+                } else {
+                    anyhow::bail!("batch lacks labels")
+                }
+            }
+            other => anyhow::bail!("unknown batch input `{other}`"),
+        }
+    }
+
+    /// Reset and return accumulated phase timings.
+    pub fn take_profile(&self) -> PhaseTimes {
+        self.profile.replace(PhaseTimes::default())
+    }
+
+    /// Synchronous-copy upload of f32 host data.
+    fn upload_f32(&self, data: Vec<f32>, shape: &[usize])
+                  -> anyhow::Result<Entry> {
+        let buf = self.client.buffer_from_host_buffer(&data, shape, None)?;
+        Ok(Entry { data, buf })
+    }
+
+    /// Per-call i32 upload (batch ids/targets/labels); host data is
+    /// copied before return, nothing to keep alive.
+    fn upload_i32(&self, data: &[i32], shape: &[usize])
+                  -> anyhow::Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, shape, None)?)
+    }
+
+    /// Assemble inputs in artifact order and execute via `execute_b`,
+    /// returning the decomposed output tuple.
+    fn run(&self, scalars: &BTreeMap<&str, f32>, state: &State,
+           batch: &Batch) -> anyhow::Result<Vec<Literal>> {
+        let t0 = std::time::Instant::now();
+        // Two passes: first upload the per-call buffers (scalars + batch),
+        // then assemble borrows in artifact order.
+        enum Src {
+            Owned(usize),
+            State(usize), // index into meta.inputs → name lookup
+        }
+        let mut owned: Vec<PjRtBuffer> = Vec::new();
+        // Host storage for per-call uploads: must outlive execute_b (the
+        // CPU client may defer the H2D copy to a worker thread even under
+        // kImmutableOnlyDuringCall — observed on xla_extension 0.5.1).
+        let mut scalar_store: Vec<Box<[f32; 1]>> = Vec::new();
+        let mut srcs: Vec<Src> = Vec::with_capacity(self.meta.inputs.len());
+        for (idx, spec) in self.meta.inputs.iter().enumerate() {
+            match spec.role.as_str() {
+                "scalar" => {
+                    let v = *scalars.get(spec.name.as_str()).ok_or_else(|| {
+                        anyhow::anyhow!("missing scalar `{}`", spec.name)
+                    })?;
+                    scalar_store.push(Box::new([v]));
+                    let data: &[f32] = scalar_store.last().unwrap().as_ref();
+                    owned.push(self.client
+                        .buffer_from_host_buffer(data, &[], None)?);
+                    srcs.push(Src::Owned(owned.len() - 1));
+                }
+                "trainable" | "opt_m" | "opt_v" | "frozen" => {
+                    anyhow::ensure!(
+                        state.tensors.contains_key(&spec.name),
+                        "state missing `{}`", spec.name
+                    );
+                    srcs.push(Src::State(idx));
+                }
+                "batch" => {
+                    owned.push(self.batch_buffer(&spec.name, &spec.shape,
+                                                 batch)?);
+                    srcs.push(Src::Owned(owned.len() - 1));
+                }
+                other => anyhow::bail!("unknown input role `{other}`"),
+            }
+        }
+        let mut args: Vec<&PjRtBuffer> =
+            Vec::with_capacity(self.meta.inputs.len());
+        for src in &srcs {
+            match src {
+                Src::Owned(i) => args.push(&owned[*i]),
+                Src::State(i) => {
+                    args.push(&state.tensors[&self.meta.inputs[*i].name].buf)
+                }
+            }
+        }
+        let t1 = std::time::Instant::now();
+        dbg_log("inputs ready, executing");
+        let result = self.exe.execute_b::<&PjRtBuffer>(&args)?;
+        dbg_log("executed");
+        let t2 = std::time::Instant::now();
+        dbg_log("readback");
+        let tuple = result[0][0].to_literal_sync()?;
+        dbg_log("tuple read");
+        let outs = tuple.to_tuple()?;
+        let t3 = std::time::Instant::now();
+        let mut p = self.profile.get();
+        p.marshal_ns += (t1 - t0).as_nanos() as u64;
+        p.execute_ns += (t2 - t1).as_nanos() as u64;
+        p.splice_ns += (t3 - t2).as_nanos() as u64;
+        p.steps += 1;
+        self.profile.set(p);
+        Ok(outs)
+    }
+
+    /// One optimizer step; splices updated trainables + moments into
+    /// `state` and bumps the Adam step counter.
+    pub fn train_step(&self, state: &mut State, lr: f32, wd: f32, clip: f32,
+                      batch: &Batch) -> anyhow::Result<StepOut> {
+        anyhow::ensure!(self.meta.kind == "train", "not a train artifact");
+        state.step += 1;
+        let scalars = BTreeMap::from([
+            ("lr", lr),
+            ("wd", wd),
+            ("clip", clip),
+            ("t", state.step as f32),
+        ]);
+        let outs = self.run(&scalars, state, batch)?;
+        anyhow::ensure!(outs.len() == self.meta.outputs.len(),
+                        "output arity mismatch");
+        let loss = scalar_f32(&outs[0])?;
+        let acc = scalar_f32(&outs[1])?;
+        let t0 = std::time::Instant::now();
+        for (spec, lit) in self.meta.outputs.iter().zip(outs).skip(2) {
+            // output names: "new:<t>", "new_m:<t>", "new_v:<t>"
+            let state_name = match spec.name.split_once(':') {
+                Some(("new", t)) => t.to_string(),
+                Some(("new_m", t)) => format!("opt_m:{t}"),
+                Some(("new_v", t)) => format!("opt_v:{t}"),
+                _ => anyhow::bail!("unexpected output `{}`", spec.name),
+            };
+            let spec_shape = &spec.shape;
+            let data = to_vec::<f32>(&lit)?;
+            state.tensors.insert(state_name,
+                                 self.upload_f32(data, spec_shape)?);
+        }
+        let mut p = self.profile.get();
+        p.splice_ns += t0.elapsed().as_nanos() as u64;
+        self.profile.set(p);
+        Ok(StepOut { loss, acc })
+    }
+
+    /// Loss + logits on one batch (no state mutation).
+    pub fn eval_step(&self, state: &State, batch: &Batch)
+                     -> anyhow::Result<EvalOut> {
+        anyhow::ensure!(self.meta.kind == "eval", "not an eval artifact");
+        let outs = self.run(&BTreeMap::new(), state, batch)?;
+        let loss = scalar_f32(&outs[0])?;
+        let acc = scalar_f32(&outs[1])?;
+        let logits = to_vec::<f32>(&outs[2])?;
+        Ok(EvalOut {
+            loss,
+            acc,
+            logits,
+            logits_shape: self.meta.outputs[2].shape.clone(),
+        })
+    }
+}

@@ -1,0 +1,91 @@
+//! Literal marshalling helpers: host tensors ↔ `xla::Literal`.
+
+use xla::{ArrayElement, ElementType, Literal};
+
+use crate::runtime::artifact::TensorSpec;
+
+/// f32 tensor → Literal with the given dims.
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> anyhow::Result<Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// i32 tensor → Literal.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> anyhow::Result<Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8,
+                                   data.len() * 4)
+    };
+    Ok(Literal::create_from_shape_and_untyped_data(
+        ElementType::S32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// f32 scalar literal.
+pub fn lit_scalar(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// Zero-filled literal for a spec (AdamW moment buffers).
+pub fn lit_zeros(spec: &TensorSpec) -> anyhow::Result<Literal> {
+    lit_f32(&spec.shape, &vec![0.0f32; spec.numel()])
+}
+
+/// Literal → host Vec<T>.
+pub fn to_vec<T: ArrayElement>(lit: &Literal) -> anyhow::Result<Vec<T>> {
+    Ok(lit.to_vec::<T>()?)
+}
+
+/// First element of a scalar f32 literal.
+pub fn scalar_f32(lit: &Literal) -> anyhow::Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = vec![1.0f32, -2.5, 3.25, 0.0, 7.0, 9.5];
+        let lit = lit_f32(&[2, 3], &data).unwrap();
+        assert_eq!(to_vec::<f32>(&lit).unwrap(), data);
+        assert_eq!(lit.element_count(), 6);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = vec![1i32, -2, 3, 40];
+        let lit = lit_i32(&[4], &data).unwrap();
+        assert_eq!(to_vec::<i32>(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let lit = lit_scalar(2.5);
+        assert_eq!(scalar_f32(&lit).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn zeros_match_spec() {
+        let spec = TensorSpec {
+            name: "y".into(),
+            role: "trainable".into(),
+            shape: vec![4, 3],
+            dtype: "f32".into(),
+        };
+        let lit = lit_zeros(&spec).unwrap();
+        assert_eq!(to_vec::<f32>(&lit).unwrap(), vec![0.0; 12]);
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! training hot path.  Python is never involved here — see DESIGN.md §3.
+
+pub mod artifact;
+pub mod executor;
+pub mod literal;
+
+pub use artifact::{ArtifactMeta, Registry, TensorSpec};
+pub use executor::{Executor, Runtime, State};

@@ -1,0 +1,163 @@
+//! Adapter checkpoints — the paper's storage format (§4.1/§4.2):
+//! the trainable tensors plus the adapter seed; CoSA's fixed projections
+//! are *not* stored, they regenerate from the seed at load time.
+//!
+//! File layout: `b"COSA"` magic, u32 header length, JSON header
+//! (method cfg, seed, ordered tensor names + shapes), then raw
+//! little-endian f32 blobs in header order.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::util::json::{obj, Json};
+
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub method: String,
+    pub adapter_seed: u64,
+    pub artifact: String,
+    pub step: u64,
+    /// name → (shape, values), insertion-ordered by name (BTreeMap).
+    pub tensors: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+}
+
+const MAGIC: &[u8; 4] = b"COSA";
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let names: Vec<Json> = self
+            .tensors
+            .iter()
+            .map(|(n, (shape, _))| {
+                obj(vec![
+                    ("name", Json::Str(n.clone())),
+                    ("shape",
+                     Json::Arr(shape.iter().map(|s| Json::from(*s)).collect())),
+                ])
+            })
+            .collect();
+        let header = obj(vec![
+            ("method", Json::Str(self.method.clone())),
+            ("adapter_seed", Json::from(self.adapter_seed as usize)),
+            ("artifact", Json::Str(self.artifact.clone())),
+            ("step", Json::from(self.step as usize)),
+            ("tensors", Json::Arr(names)),
+        ])
+        .to_string();
+
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u32).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for (_, (_, vals)) in &self.tensors {
+            for v in vals {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 4];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not a COSA checkpoint");
+        let mut len = [0u8; 4];
+        f.read_exact(&mut len)?;
+        let mut header = vec![0u8; u32::from_le_bytes(len) as usize];
+        f.read_exact(&mut header)?;
+        let j = Json::parse(std::str::from_utf8(&header)?)?;
+
+        let mut tensors = BTreeMap::new();
+        for t in j.req("tensors")?.as_arr().unwrap_or(&[]) {
+            let name = t.req("name")?.as_str().unwrap_or("").to_string();
+            let shape: Vec<usize> = t
+                .req("shape")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect();
+            let n: usize = shape.iter().product::<usize>().max(1);
+            let mut bytes = vec![0u8; n * 4];
+            f.read_exact(&mut bytes)?;
+            let vals: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.insert(name, (shape, vals));
+        }
+        Ok(Checkpoint {
+            method: j.req("method")?.as_str().unwrap_or("").to_string(),
+            adapter_seed: j.req("adapter_seed")?.as_i64().unwrap_or(0) as u64,
+            artifact: j.req("artifact")?.as_str().unwrap_or("").to_string(),
+            step: j.req("step")?.as_i64().unwrap_or(0) as u64,
+            tensors,
+        })
+    }
+
+    /// Bytes on disk (Figure 3 storage accounting cross-check).
+    pub fn size_bytes(&self) -> usize {
+        let data: usize =
+            self.tensors.values().map(|(_, v)| v.len() * 4).sum();
+        data + 64 // magic + header order-of-magnitude
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        let mut tensors = BTreeMap::new();
+        tensors.insert("adp.0.wq.y".to_string(),
+                       (vec![4, 2], vec![0.5f32; 8]));
+        tensors.insert("adp.1.w1.y".to_string(),
+                       (vec![2, 3], vec![-1.25f32, 0.0, 3.5, 7.0, 8.0, 9.0]));
+        Checkpoint {
+            method: "cosa".into(),
+            adapter_seed: 1234,
+            artifact: "tiny-lm_cosa".into(),
+            step: 42,
+            tensors,
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("cosa_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("adapter.cosa");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.method, "cosa");
+        assert_eq!(back.adapter_seed, 1234);
+        assert_eq!(back.step, 42);
+        assert_eq!(back.tensors.len(), 2);
+        assert_eq!(back.tensors["adp.1.w1.y"].0, vec![2, 3]);
+        assert_eq!(back.tensors["adp.1.w1.y"].1[3], 7.0);
+        assert_eq!(back.tensors["adp.0.wq.y"].1, vec![0.5f32; 8]);
+    }
+
+    #[test]
+    fn rejects_non_checkpoint() {
+        let dir = std::env::temp_dir().join("cosa_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("garbage.bin");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn cosa_checkpoint_is_core_plus_seed_sized() {
+        let ck = sample();
+        let params: usize = ck.tensors.values().map(|(_, v)| v.len()).sum();
+        assert!(ck.size_bytes() < params * 4 + 128,
+                "no hidden projection storage");
+    }
+}

@@ -1,0 +1,82 @@
+//! Training metrics log: in-memory history + CSV export for loss curves
+//! (the E2E example's deliverable in EXPERIMENTS.md).
+
+use std::path::Path;
+
+#[derive(Clone, Debug, Default)]
+pub struct MetricsLog {
+    /// (step, lr, loss, token/cls accuracy)
+    pub rows: Vec<(usize, f64, f64, f64)>,
+    /// (step, eval_loss, eval_metric)
+    pub evals: Vec<(usize, f64, f64)>,
+}
+
+impl MetricsLog {
+    pub fn push_train(&mut self, step: usize, lr: f64, loss: f64, acc: f64) {
+        self.rows.push((step, lr, loss, acc));
+    }
+
+    pub fn push_eval(&mut self, step: usize, loss: f64, metric: f64) {
+        self.evals.push((step, loss, metric));
+    }
+
+    /// Mean training loss over the last `k` logged steps.
+    pub fn recent_loss(&self, k: usize) -> f64 {
+        let tail = &self.rows[self.rows.len().saturating_sub(k)..];
+        if tail.is_empty() {
+            return f64::NAN;
+        }
+        tail.iter().map(|r| r.2).sum::<f64>() / tail.len() as f64
+    }
+
+    pub fn first_loss(&self) -> f64 {
+        self.rows.first().map_or(f64::NAN, |r| r.2)
+    }
+
+    pub fn save_csv(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = String::from("step,lr,loss,acc\n");
+        for (s, lr, l, a) in &self.rows {
+            out.push_str(&format!("{s},{lr:.3e},{l:.6},{a:.6}\n"));
+        }
+        std::fs::write(path, out)?;
+        if !self.evals.is_empty() {
+            let mut ev = String::from("step,eval_loss,eval_metric\n");
+            for (s, l, m) in &self.evals {
+                ev.push_str(&format!("{s},{l:.6},{m:.6}\n"));
+            }
+            std::fs::write(path.with_extension("eval.csv"), ev)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recent_loss_window() {
+        let mut m = MetricsLog::default();
+        for i in 0..10 {
+            m.push_train(i, 1e-3, 10.0 - i as f64, 0.0);
+        }
+        assert!((m.recent_loss(2) - 1.5).abs() < 1e-9);
+        assert_eq!(m.first_loss(), 10.0);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let mut m = MetricsLog::default();
+        m.push_train(1, 2e-5, 3.25, 0.5);
+        m.push_eval(1, 3.0, 0.6);
+        let path = std::env::temp_dir().join("cosa_metrics_test/t.csv");
+        m.save_csv(&path).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.starts_with("step,lr,loss,acc\n"));
+        assert!(s.contains("3.25"));
+        assert!(path.with_extension("eval.csv").exists());
+    }
+}

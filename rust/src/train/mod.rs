@@ -1,0 +1,226 @@
+//! Training loop: the L3 coordinator's core.  Owns schedules, data order,
+//! grad-accum grouping, periodic eval, AdaLoRA's rank-budget schedule,
+//! checkpointing and the metrics log.  The compute itself is one
+//! AOT-compiled XLA train step per optimizer update.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod sched;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::adapters::init::{init_state, MethodCfg};
+use crate::adapters::Method;
+use crate::config::RunConfig;
+use crate::data::batcher::{cls_batch, lm_batch, Batcher};
+use crate::data::{self, ClsDataset, LmDataset};
+use crate::eval;
+use crate::info;
+use crate::runtime::executor::{Executor, Runtime, State};
+use crate::runtime::Registry;
+use crate::train::checkpoint::Checkpoint;
+use crate::train::metrics::MetricsLog;
+
+/// Task data bound to the model's head type.
+pub enum TaskData {
+    Lm(LmDataset),
+    Cls(ClsDataset),
+}
+
+/// A fully-wired training run.
+pub struct Trainer {
+    pub cfg: RunConfig,
+    pub train_exec: Executor,
+    pub eval_exec: Executor,
+    pub state: State,
+    pub data: TaskData,
+    pub log: MetricsLog,
+    batcher: Batcher,
+}
+
+impl Trainer {
+    /// Wire a run: load artifacts, initialize state, generate data.
+    pub fn new(rt: &Runtime, reg: &Registry, cfg: RunConfig)
+               -> anyhow::Result<Trainer> {
+        let train_exec = rt.load(&reg.dir, &format!("{}_train", cfg.artifact))?;
+        let eval_exec = rt.load(&reg.dir, &format!("{}_eval", cfg.artifact))?;
+        let meta = &train_exec.meta;
+
+        let mcfg = MethodCfg {
+            method: Method::from_str(&meta.method.method)?,
+            r: meta.method.r,
+            a: meta.method.a,
+            b: meta.method.b,
+            alpha: meta.method.alpha as f32,
+            nola_k: meta.method.nola_k,
+        };
+        let host = init_state(&meta.init_specs(), &mcfg, cfg.base_seed,
+                              cfg.adapter_seed);
+        let state = State::init(&rt.client, meta, &host)?;
+
+        let bsz = meta.model.batch;
+        let n_train = (cfg.train.steps * bsz * cfg.train.grad_accum)
+            .clamp(512, 20_000);
+        let data = match meta.model.head.as_str() {
+            "lm" => TaskData::Lm(data::lm_task(
+                &cfg.task, n_train, 128, meta.model.vocab,
+                meta.model.max_seq, cfg.data_seed)?),
+            _ => TaskData::Cls(data::cls_task(
+                &cfg.task, n_train, 256, meta.model.vocab,
+                meta.model.max_seq, cfg.data_seed)?),
+        };
+        let n = match &data {
+            TaskData::Lm(d) => d.train.len(),
+            TaskData::Cls(d) => d.train.len(),
+        };
+        let batcher = Batcher::new(n, bsz, cfg.data_seed);
+        info!(
+            "run `{}`: artifact={} method={} trainables={} params={}",
+            cfg.name, cfg.artifact, meta.method.method,
+            meta.inputs_with_role("trainable").len(),
+            meta.trainable_param_count()
+        );
+        Ok(Trainer {
+            cfg, train_exec, eval_exec, state, data,
+            log: MetricsLog::default(), batcher,
+        })
+    }
+
+    fn next_batch(&mut self) -> crate::data::batcher::Batch {
+        let idx = self.batcher.next_indices();
+        let m = &self.train_exec.meta.model;
+        match &self.data {
+            TaskData::Lm(d) => {
+                let exs: Vec<&_> = idx.iter().map(|i| &d.train[*i]).collect();
+                lm_batch(&exs, m.batch, m.max_seq)
+            }
+            TaskData::Cls(d) => {
+                let exs: Vec<&_> = idx.iter().map(|i| &d.train[*i]).collect();
+                cls_batch(&exs, m.batch, m.max_seq, m.head == "reg")
+            }
+        }
+    }
+
+    /// Periodic eval: (loss, metric).  For LM the fast metric is
+    /// teacher-forced token accuracy; decode-based metrics are computed
+    /// by the experiment harnesses at the end of a run.
+    pub fn evaluate(&self) -> anyhow::Result<(f64, f64)> {
+        match &self.data {
+            TaskData::Lm(d) => eval::eval_lm(&self.eval_exec, &self.state, d),
+            TaskData::Cls(d) => {
+                eval::eval_cls(&self.eval_exec, &self.state, d)
+            }
+        }
+    }
+
+    /// AdaLoRA rank-budget schedule: cubic decay of the kept-rank
+    /// fraction from 1.0 to 0.5 over the first 60% of training, pruning
+    /// the smallest |λ| entries via the frozen mask inputs.
+    fn adalora_mask_update(&mut self, step: usize) -> anyhow::Result<()> {
+        let total = self.cfg.train.steps.max(1);
+        let progress = (step as f64 / (0.6 * total as f64)).min(1.0);
+        let keep_frac = 1.0 - 0.5 * (1.0 - (1.0 - progress).powi(3));
+        let mask_names: Vec<String> = self.train_exec.meta
+            .inputs_with_role("frozen")
+            .iter()
+            .filter(|s| s.name.ends_with(".mask"))
+            .map(|s| s.name.clone())
+            .collect();
+        for mname in mask_names {
+            let lam_name = mname.replace(".mask", ".lam");
+            let lam = self.state.read(&lam_name)?;
+            let r = lam.len();
+            let keep = ((keep_frac * r as f64).round() as usize).clamp(1, r);
+            let mut order: Vec<usize> = (0..r).collect();
+            order.sort_by(|&i, &j| lam[j].abs().partial_cmp(&lam[i].abs())
+                .unwrap());
+            let mut mask = vec![0.0f32; r];
+            for &i in order.iter().take(keep) {
+                mask[i] = 1.0;
+            }
+            self.state.write(&mname, &[r], &mask)?;
+        }
+        Ok(())
+    }
+
+    /// Run the configured number of steps.  Returns the metrics log.
+    pub fn run(&mut self) -> anyhow::Result<&MetricsLog> {
+        let t = self.cfg.train.clone();
+        let is_adalora = self.train_exec.meta.method.method == "adalora";
+        for step in 0..t.steps {
+            let lr = sched::lr_at(t.schedule, t.lr, step, t.steps);
+            let mut loss_sum = 0.0;
+            let mut acc_sum = 0.0;
+            // grad-accum grouping: N micro-steps per logical step (each
+            // micro-step is a full optimizer update at lr/N — see
+            // DESIGN.md §6 deviation note).
+            let micro = t.grad_accum.max(1);
+            for _ in 0..micro {
+                let batch = self.next_batch();
+                let out = self.train_exec.train_step(
+                    &mut self.state,
+                    (lr / micro as f64) as f32,
+                    t.weight_decay as f32,
+                    t.clip_norm as f32,
+                    &batch,
+                )?;
+                loss_sum += out.loss as f64;
+                acc_sum += out.acc as f64;
+            }
+            let loss = loss_sum / micro as f64;
+            self.log.push_train(step, lr, loss, acc_sum / micro as f64);
+            if t.log_every > 0 && step % t.log_every == 0 {
+                info!("step {step:5}  lr {lr:.3e}  loss {loss:.4}");
+            }
+            if is_adalora && step > 0 && step % 25 == 0 {
+                self.adalora_mask_update(step)?;
+            }
+            if t.eval_every > 0 && (step + 1) % t.eval_every == 0 {
+                let (el, em) = self.evaluate()?;
+                info!("step {step:5}  eval_loss {el:.4}  metric {em:.4}");
+                self.log.push_eval(step, el, em);
+            }
+        }
+        Ok(&self.log)
+    }
+
+    /// Save the adapter checkpoint (trainables + adapter seed).
+    pub fn save_checkpoint(&self, path: &Path) -> anyhow::Result<PathBuf> {
+        let meta = &self.train_exec.meta;
+        let mut tensors = BTreeMap::new();
+        for spec in meta.inputs_with_role("trainable") {
+            tensors.insert(spec.name.clone(),
+                           (spec.shape.clone(), self.state.read(&spec.name)?));
+        }
+        let ck = Checkpoint {
+            method: meta.method.method.clone(),
+            adapter_seed: self.cfg.adapter_seed,
+            artifact: self.cfg.artifact.clone(),
+            step: self.state.step,
+            tensors,
+        };
+        ck.save(path)?;
+        Ok(path.to_path_buf())
+    }
+
+    /// Restore trainables from a checkpoint (projections regenerate from
+    /// the stored seed via the initializer — nothing else is persisted).
+    pub fn load_checkpoint(&mut self, ck: &Checkpoint) -> anyhow::Result<()> {
+        anyhow::ensure!(ck.artifact == self.cfg.artifact,
+                        "checkpoint is for `{}`", ck.artifact);
+        for (name, (shape, vals)) in &ck.tensors {
+            self.state.write(name, shape, vals)?;
+        }
+        self.state.step = ck.step;
+        Ok(())
+    }
+
+    /// Output path helpers.
+    pub fn csv_path(&self) -> PathBuf {
+        Path::new(&self.cfg.out_dir).join(format!("{}.csv", self.cfg.name))
+    }
+    pub fn ckpt_path(&self) -> PathBuf {
+        Path::new(&self.cfg.out_dir).join(format!("{}.ckpt", self.cfg.name))
+    }
+}

@@ -1,0 +1,79 @@
+//! Learning-rate schedules (App. C: linear for GLUE, cosine for NLG).
+//! The artifact takes lr as a scalar input, so schedules live entirely
+//! in the coordinator.
+
+use crate::config::Schedule;
+
+/// LR at 0-based step `step` of `total` steps.
+pub fn lr_at(schedule: Schedule, base_lr: f64, step: usize,
+             total: usize) -> f64 {
+    let total = total.max(1);
+    let s = step.min(total) as f64;
+    let t = total as f64;
+    match schedule {
+        Schedule::Constant => base_lr,
+        Schedule::LinearWarmup { warmup_frac } => {
+            let w = (warmup_frac * t).max(1.0);
+            if s < w {
+                base_lr * (s + 1.0) / w
+            } else {
+                base_lr * ((t - s) / (t - w).max(1.0)).max(0.0)
+            }
+        }
+        Schedule::CosineWarmup { warmup_frac } => {
+            let w = (warmup_frac * t).max(1.0);
+            if s < w {
+                base_lr * (s + 1.0) / w
+            } else {
+                let p = (s - w) / (t - w).max(1.0);
+                base_lr * 0.5 * (1.0 + (std::f64::consts::PI * p).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn constant_is_constant() {
+        for s in [0, 10, 199] {
+            assert_eq!(lr_at(Schedule::Constant, 3e-4, s, 200), 3e-4);
+        }
+    }
+
+    #[test]
+    fn warmup_ramps_then_decays() {
+        let sch = Schedule::LinearWarmup { warmup_frac: 0.1 };
+        let lr0 = lr_at(sch, 1.0, 0, 100);
+        assert!(lr0 < 0.2);
+        let peak = lr_at(sch, 1.0, 9, 100);
+        assert!((peak - 1.0).abs() < 1e-9);
+        assert!(lr_at(sch, 1.0, 99, 100) < 0.05);
+    }
+
+    #[test]
+    fn cosine_ends_near_zero_and_is_monotone_after_warmup() {
+        let sch = Schedule::CosineWarmup { warmup_frac: 0.05 };
+        let end = lr_at(sch, 1.0, 199, 200);
+        assert!(end < 0.01, "{end}");
+        prop::for_all("cosine monotone decay", 20, |rng| {
+            let a = prop::int_in(rng, 10, 150);
+            let b = a + prop::int_in(rng, 1, 40);
+            assert!(lr_at(sch, 1.0, a, 200) >= lr_at(sch, 1.0, b, 200));
+        });
+    }
+
+    #[test]
+    fn never_negative() {
+        for sch in [Schedule::Constant,
+                    Schedule::LinearWarmup { warmup_frac: 0.06 },
+                    Schedule::CosineWarmup { warmup_frac: 0.03 }] {
+            for s in 0..250 {
+                assert!(lr_at(sch, 2e-5, s, 200) >= 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,108 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `cosa-repro <subcommand> [positional…] [--flag[=| ]value…]`.
+//! Bare `--flag` with no value is a boolean switch.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next().unwrap();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(flag) = a.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(flag.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.insert(flag.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn u64(&self, key: &str, default: u64) -> u64 {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn bool(&self, key: &str) -> bool {
+        self.flags.get(key).map_or(false, |v| v == "true" || v == "1")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("train --config configs/e2e.toml --steps=200 --verbose");
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.str("config", ""), "configs/e2e.toml");
+        assert_eq!(a.usize("steps", 0), 200);
+        assert!(a.bool("verbose"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("exp table2 --seeds 3");
+        assert_eq!(a.subcommand, "exp");
+        assert_eq!(a.positional, vec!["table2"]);
+        assert_eq!(a.usize("seeds", 1), 3);
+    }
+
+    #[test]
+    fn space_separated_value() {
+        let a = parse("rip --samples 500");
+        assert_eq!(a.usize("samples", 0), 500);
+    }
+
+    #[test]
+    fn trailing_boolean_flag() {
+        let a = parse("bench --quick");
+        assert!(a.bool("quick"));
+    }
+
+    #[test]
+    fn negative_number_value() {
+        // a value starting with '-' but not '--' is still a value
+        let a = parse("train --offset -5");
+        assert_eq!(a.str("offset", ""), "-5");
+    }
+}

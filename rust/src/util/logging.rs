@@ -1,0 +1,70 @@
+//! Leveled stderr logging with wall-clock timestamps relative to start.
+//!
+//! `COSA_LOG=debug|info|warn` selects verbosity (default `info`).
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(PartialEq, PartialOrd, Clone, Copy, Debug)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+}
+
+static START: OnceLock<Instant> = OnceLock::new();
+static LEVEL: OnceLock<Level> = OnceLock::new();
+
+fn level() -> Level {
+    *LEVEL.get_or_init(|| match std::env::var("COSA_LOG").as_deref() {
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        _ => Level::Info,
+    })
+}
+
+pub fn log(lvl: Level, msg: &str) {
+    if lvl < level() {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    let tag = match lvl {
+        Level::Debug => "DBG",
+        Level::Info => "INF",
+        Level::Warn => "WRN",
+    };
+    eprintln!("[{t:8.2}s {tag}] {msg}");
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::util::logging::log(
+        $crate::util::logging::Level::Info, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::util::logging::log(
+        $crate::util::logging::Level::Debug, &format!($($arg)*)) };
+}
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::util::logging::log(
+        $crate::util::logging::Level::Warn, &format!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Debug < Level::Info);
+        assert!(Level::Info < Level::Warn);
+    }
+
+    #[test]
+    fn log_does_not_panic() {
+        log(Level::Info, "hello from test");
+        crate::info!("macro path {}", 42);
+    }
+}

@@ -1,0 +1,11 @@
+//! Self-built substrates that would normally come from crates.io — the
+//! offline registry only carries the `xla` crate's closure, so the JSON
+//! codec, TOML-subset config reader, CLI parser, property-test harness and
+//! bench harness are implemented here (DESIGN.md S16/S17).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod toml;

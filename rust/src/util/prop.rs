@@ -1,0 +1,76 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! Deterministic, seeded case generation with shrink-free minimal
+//! reporting: on failure the failing case index and seed are printed so
+//! the case can be replayed exactly.  Used by the invariant tests across
+//! data/, train/, math/ and rip/.
+
+use crate::math::rng::Pcg64;
+
+/// Run `cases` random trials of `f`, feeding a seeded RNG.
+/// Panics with the trial seed on the first failure.
+pub fn for_all<F: FnMut(&mut Pcg64)>(name: &str, cases: usize, mut f: F) {
+    for case in 0..cases {
+        let seed = 0xC05A_0000 + case as u64;
+        let mut rng = Pcg64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || f(&mut rng),
+        ));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "panic".into());
+            panic!("property `{name}` failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Uniform integer in `[lo, hi]` (inclusive).
+pub fn int_in(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+    lo + (rng.next_u64() as usize) % (hi - lo + 1)
+}
+
+/// Random f32 vector with entries in [-scale, scale].
+pub fn vec_f32(rng: &mut Pcg64, len: usize, scale: f32) -> Vec<f32> {
+    (0..len).map(|_| (rng.uniform() as f32 * 2.0 - 1.0) * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut n = 0;
+        for_all("count", 25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn reports_failure_with_seed() {
+        for_all("fails", 10, |rng| {
+            assert!(int_in(rng, 0, 4) < 5); // passes
+            assert!(int_in(rng, 5, 9) < 7, "too big"); // eventually fails
+        });
+    }
+
+    #[test]
+    fn int_in_bounds() {
+        for_all("bounds", 50, |rng| {
+            let v = int_in(rng, 3, 17);
+            assert!((3..=17).contains(&v));
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for_all("det-a", 5, |rng| a.push(rng.next_u64()));
+        for_all("det-b", 5, |rng| b.push(rng.next_u64()));
+        assert_eq!(a, b, "same per-case seeds must give same streams");
+    }
+}

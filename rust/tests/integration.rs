@@ -1,0 +1,191 @@
+//! Integration tests over real AOT artifacts: the L3 runtime executing
+//! L2-lowered XLA programs containing the L1 Pallas kernel.
+//!
+//! All tests skip (with a message) when `artifacts/` has not been built.
+//! PJRT client creation is serialized behind a mutex — one CPU client at
+//! a time keeps the thread pools sane under the parallel test runner.
+
+use std::sync::Mutex;
+
+use cosa::config::{RunConfig, Schedule, TrainConfig};
+use cosa::runtime::executor::Runtime;
+use cosa::runtime::Registry;
+use cosa::train::checkpoint::Checkpoint;
+use cosa::train::Trainer;
+
+static PJRT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize PJRT usage; recover from poison so one failing test does
+/// not cascade into every other test.
+fn pjrt_guard() -> std::sync::MutexGuard<'static, ()> {
+    PJRT_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn setup() -> Option<(Runtime, Registry)> {
+    let reg = match Registry::open_default() {
+        Ok(r) => r,
+        Err(_) => {
+            eprintln!("skipping: run `make artifacts` first");
+            return None;
+        }
+    };
+    let rt = Runtime::cpu().expect("pjrt cpu client");
+    Some((rt, reg))
+}
+
+fn quick_cfg(artifact: &str, steps: usize, lr: f64) -> RunConfig {
+    RunConfig {
+        name: format!("it-{artifact}"),
+        artifact: artifact.to_string(),
+        task: "math".into(),
+        train: TrainConfig {
+            steps,
+            lr,
+            weight_decay: 0.01,
+            clip_norm: 1.0,
+            schedule: Schedule::Constant,
+            eval_every: 0,
+            log_every: 0,
+            grad_accum: 1,
+        },
+        out_dir: std::env::temp_dir().join("cosa-it").to_str().unwrap()
+            .to_string(),
+        ..RunConfig::default()
+    }
+}
+
+#[test]
+fn train_decreases_loss_for_cosa_lora_full() {
+    let _g = pjrt_guard();
+    let Some((rt, reg)) = setup() else { return };
+    for (artifact, lr) in [("tiny-lm_cosa", 3e-3), ("tiny-lm_lora", 3e-3),
+                           ("tiny-lm_full", 3e-4)] {
+        let mut t = Trainer::new(&rt, &reg, quick_cfg(artifact, 30, lr))
+            .unwrap();
+        t.run().unwrap();
+        let first = t.log.first_loss();
+        let last = t.log.recent_loss(5);
+        assert!(last < first * 0.95, "{artifact}: {first} -> {last}");
+    }
+}
+
+#[test]
+fn zero_init_adapters_match_base_model() {
+    // Paper §4.1: with Y=0 (resp. B=0) the adapted model IS the base
+    // model, so pristine eval losses must agree across methods — and
+    // PiSSA's residual+SVD split must reconstruct the same function.
+    let _g = pjrt_guard();
+    let Some((rt, reg)) = setup() else { return };
+    let mut losses = Vec::new();
+    for artifact in ["tiny-lm_cosa", "tiny-lm_lora", "tiny-lm_pissa"] {
+        let t = Trainer::new(&rt, &reg, quick_cfg(artifact, 1, 1e-3))
+            .unwrap();
+        let (loss, _) = t.evaluate().unwrap();
+        losses.push(loss);
+    }
+    assert!((losses[0] - losses[1]).abs() < 1e-4,
+            "cosa vs lora pristine: {losses:?}");
+    assert!((losses[0] - losses[2]).abs() < 2e-3,
+            "pissa reconstruction: {losses:?}");
+}
+
+#[test]
+fn training_is_deterministic_given_seeds() {
+    let _g = pjrt_guard();
+    let Some((rt, reg)) = setup() else { return };
+    let losses: Vec<Vec<f64>> = (0..2)
+        .map(|_| {
+            let mut t = Trainer::new(&rt, &reg,
+                                     quick_cfg("tiny-lm_cosa", 8, 2e-3))
+                .unwrap();
+            t.run().unwrap();
+            t.log.rows.iter().map(|r| r.2).collect()
+        })
+        .collect();
+    assert_eq!(losses[0], losses[1], "same seeds must reproduce exactly");
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_eval() {
+    let _g = pjrt_guard();
+    let Some((rt, reg)) = setup() else { return };
+    let mut t = Trainer::new(&rt, &reg, quick_cfg("tiny-lm_cosa", 12, 3e-3))
+        .unwrap();
+    t.run().unwrap();
+    let (loss_trained, _) = t.evaluate().unwrap();
+    let path = std::env::temp_dir().join("cosa-it/roundtrip.ckpt");
+    t.save_checkpoint(&path).unwrap();
+
+    let mut t2 = Trainer::new(&rt, &reg, quick_cfg("tiny-lm_cosa", 1, 3e-3))
+        .unwrap();
+    t2.load_checkpoint(&Checkpoint::load(&path).unwrap()).unwrap();
+    let (loss_reloaded, _) = t2.evaluate().unwrap();
+    assert!((loss_trained - loss_reloaded).abs() < 1e-6,
+            "{loss_trained} vs {loss_reloaded}");
+}
+
+#[test]
+fn cls_head_trains_on_nlu_task() {
+    let _g = pjrt_guard();
+    let Some((rt, reg)) = setup() else { return };
+    let mut cfg = quick_cfg("tiny-cls_cosa", 80, 5e-3);
+    cfg.task = "nlu:sst2-sim".into();
+    let mut t = Trainer::new(&rt, &reg, cfg).unwrap();
+    let (_, acc0) = t.evaluate().unwrap();
+    t.run().unwrap();
+    let (_, acc) = t.evaluate().unwrap();
+    assert!(acc > 0.55, "sst2-sim accuracy {acc} is not above chance");
+    assert!(acc > acc0 - 0.05, "accuracy regressed: {acc0} -> {acc}");
+}
+
+#[test]
+fn greedy_decode_produces_terminated_sequences() {
+    let _g = pjrt_guard();
+    let Some((rt, reg)) = setup() else { return };
+    let mut t = Trainer::new(&rt, &reg, quick_cfg("tiny-lm_cosa", 60, 3e-3))
+        .unwrap();
+    t.run().unwrap();
+    let cosa::train::TaskData::Lm(d) = &t.data else { panic!() };
+    let exs: Vec<&_> = d.eval[..8].iter().collect();
+    let gen = cosa::eval::greedy_decode(&t.eval_exec, &t.state, &exs, 12)
+        .unwrap();
+    assert_eq!(gen.len(), 8);
+    let vocab = t.eval_exec.meta.model.vocab;
+    for g in &gen {
+        // decode mechanics: non-empty, bounded, EOS only at the end
+        assert!(!g.is_empty() && g.len() <= 12, "{g:?}");
+        if let Some(pos) =
+            g.iter().position(|tok| *tok == cosa::data::tokenizer::EOS)
+        {
+            assert_eq!(pos, g.len() - 1, "EOS mid-sequence: {g:?}");
+        }
+        assert!(g.iter().all(|tok| (*tok as usize) < vocab));
+    }
+}
+
+#[test]
+fn missing_artifact_errors_cleanly() {
+    let _g = pjrt_guard();
+    let Some((rt, reg)) = setup() else { return };
+    let err = Trainer::new(&rt, &reg, quick_cfg("tiny-lm_qlora", 1, 1e-3));
+    assert!(err.is_err());
+    let msg = format!("{:#}", err.err().unwrap());
+    assert!(msg.contains("make artifacts"), "{msg}");
+}
+
+#[test]
+fn vera_and_dora_artifacts_execute() {
+    let _g = pjrt_guard();
+    let Some((rt, reg)) = setup() else { return };
+    for artifact in ["small-lm_vera", "small-lm_dora", "small-lm_nola",
+                     "small-lm_adalora"] {
+        if !reg.has(&format!("{artifact}_train")) {
+            continue;
+        }
+        let mut t = Trainer::new(&rt, &reg, quick_cfg(artifact, 4, 1e-3))
+            .unwrap();
+        t.run().unwrap();
+        assert!(t.log.rows.iter().all(|r| r.2.is_finite()),
+                "{artifact} produced non-finite loss");
+    }
+}

@@ -1,18 +1,34 @@
 //! Bench: host-side CoSA adapter forward vs materialized ΔW — the
 //! paper's Table 1 FWD complexity argument in wall-clock form, plus the
 //! projection-regeneration cost behind the seed-storage trick.
+//!
+//! Runs every shape against each `linalg` backend, reports GFLOP/s, and
+//! emits a machine-readable `BENCH_linalg.json` section (merged with the
+//! sections other benches write) so old-vs-new is diffable.
 
-use cosa::adapters::cosa::{adapter_forward, materialize_delta, regen_l,
-                           regen_r};
+use cosa::adapters::cosa::{adapter_forward, adapter_forward_into,
+                           materialize_delta, regen_l, regen_r};
+use cosa::linalg::{self, Kind, Workspace};
 use cosa::math::matrix::Matrix;
 use cosa::math::rng::Pcg64;
-use cosa::util::bench::{bench, black_box};
+use cosa::util::bench::{bench, black_box, write_bench_json};
+use cosa::util::json::{obj, Json};
+
+/// The backend that actually executes (the COSA_BACKEND env override
+/// silently wins over `set_backend`, and `auto` resolves via
+/// `linalg::resolved_kind`).
+fn effective_backend() -> &'static str {
+    linalg::resolved_kind().name()
+}
 
 fn main() {
-    println!("== adapter_fwd: activation path vs materialized ΔW ==");
-    // paper NLG shape: site 2048x2048, (a,b)=(1024,256), batch rows 64
+    let mut rows_json: Vec<Json> = Vec::new();
+    println!("== adapter_fwd: activation path, per linalg backend ==");
+    // (512,…) legacy shape; (2048,2048,64,64) is the acceptance shape
+    // (paper-scale site, a=b≤64); (2048,2048,1024,256) the paper NLG pair
     for (m, n, a, b, rows) in [
         (512, 512, 128, 64, 64),
+        (2048, 2048, 64, 64, 64),
         (2048, 2048, 1024, 256, 16),
     ] {
         let mut rng = Pcg64::new(1);
@@ -20,30 +36,104 @@ fn main() {
         let l = regen_l(7, "bench.l", m, a);
         let r = regen_r(7, "bench.r", b, n);
         let y = Matrix::gaussian(a, b, 0.02, &mut rng);
+        // mul+add per chained product: x·Rᵀ, u·Yᵀ, v·Lᵀ
+        let flops = 2.0 * rows as f64 * (n * b + b * a + a * m) as f64;
 
-        bench(
-            &format!("adapter_forward m={m} n={n} a={a} b={b} rows={rows}"),
+        for kind in [Kind::Reference, Kind::Tiled] {
+            linalg::set_backend(kind, 0);
+            if linalg::resolved_kind() != kind {
+                println!("warning: COSA_BACKEND env override is active \
+                          ({}); skipping the {} pass so BENCH_linalg.json \
+                          rows stay truthful", effective_backend(),
+                         kind.name());
+                continue;
+            }
+            let res = bench(
+                &format!("adapter_forward[{}] m={m} n={n} a={a} b={b} \
+                          rows={rows}", kind.name()),
+                400,
+                || {
+                    black_box(adapter_forward(&x, &l, &r, &y, 2.0));
+                },
+            );
+            res.report_gflops(flops);
+            rows_json.push(obj(vec![
+                ("bench", "adapter_forward".into()),
+                ("backend", kind.name().into()),
+                ("m", m.into()),
+                ("n", n.into()),
+                ("a", a.into()),
+                ("b", b.into()),
+                ("rows", rows.into()),
+                ("mean_ns", res.mean_ns.into()),
+                ("min_ns", res.min_ns.into()),
+                ("gflops", res.gflops(flops).into()),
+            ]));
+        }
+
+        // workspace-reused variant on the default backend (label = the
+        // backend that actually runs, env override included)
+        linalg::set_backend(Kind::Auto, 0);
+        let mut ws = Workspace::new();
+        let mut out = Matrix::zeros(rows, m);
+        let eff = effective_backend();
+        let res = bench(
+            &format!("adapter_forward_into[{eff}] m={m} n={n} a={a} b={b}"),
             400,
             || {
-                black_box(adapter_forward(&x, &l, &r, &y, 2.0));
+                adapter_forward_into(&x, &l, &r, &y, 2.0, &mut ws,
+                                     &mut out);
+                black_box(out.data[0]);
             },
         );
+        res.report_gflops(flops);
+        println!("    workspace fresh allocs after warmup: {} (expect to \
+                  stay flat)", ws.fresh_allocs());
+        rows_json.push(obj(vec![
+            ("bench", "adapter_forward_into".into()),
+            ("backend", eff.into()),
+            ("m", m.into()),
+            ("n", n.into()),
+            ("a", a.into()),
+            ("b", b.into()),
+            ("rows", rows.into()),
+            ("mean_ns", res.mean_ns.into()),
+            ("gflops", res.gflops(flops).into()),
+            ("ws_fresh_allocs", ws.fresh_allocs().into()),
+        ]));
+
         if m <= 512 {
-            bench(
+            let res = bench(
                 &format!("materialize ΔW + matmul m={m} n={n}"),
                 400,
                 || {
                     let d = materialize_delta(&l, &y, &r, 2.0);
-                    black_box(x.matmul(&d.transpose()));
+                    black_box(x.matmul_nt(&d));
                 },
             );
+            rows_json.push(obj(vec![
+                ("bench", "materialized_delta".into()),
+                ("backend", eff.into()),
+                ("m", m.into()),
+                ("n", n.into()),
+                ("mean_ns", res.mean_ns.into()),
+            ]));
         }
     }
+    linalg::set_backend(Kind::Auto, 0);
 
     println!("\n== projection regeneration from seed (adapter load path) ==");
     for (m, a) in [(512, 128), (2048, 1024)] {
-        bench(&format!("regen_l m={m} a={a}"), 300, || {
+        let res = bench(&format!("regen_l m={m} a={a}"), 300, || {
             black_box(regen_l(7, "bench.l", m, a));
         });
+        rows_json.push(obj(vec![
+            ("bench", "regen_l".into()),
+            ("m", m.into()),
+            ("a", a.into()),
+            ("mean_ns", res.mean_ns.into()),
+        ]));
     }
+
+    write_bench_json("adapter_fwd", Json::Arr(rows_json));
 }

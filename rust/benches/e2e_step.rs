@@ -1,26 +1,114 @@
-//! Bench: end-to-end train/eval step latency per (preset × method) — the
-//! paper-table workloads' compute budget, plus executor overhead
-//! decomposition (batch literal marshalling vs XLA execute).
+//! Bench: end-to-end train-step latency.
 //!
-//! Requires `make artifacts`.
+//! Two tiers:
+//!
+//! 1. **Host-mirror CoSA step** (`train::HostCosaStep`: forward + analytic
+//!    VJP + core update) — always runs, per `linalg` backend, with
+//!    GFLOP/s and the workspace allocation counter (must stay flat after
+//!    warmup).  This is the measurable form of the "workspace-reused
+//!    step" contract.
+//! 2. **XLA optimizer step** per (preset × method) — requires
+//!    `make artifacts` and a real `xla` backend; skips cleanly otherwise.
+//!
+//! Emits an `e2e_step_host` section into `BENCH_linalg.json`.
 
+use cosa::adapters::cosa::{adapter_forward, regen_l, regen_r};
 use cosa::config::RunConfig;
 use cosa::exp::harness::exp_train_cfg;
+use cosa::linalg::{self, Kind};
+use cosa::math::matrix::Matrix;
+use cosa::math::rng::Pcg64;
 use cosa::runtime::executor::Runtime;
 use cosa::runtime::Registry;
-use cosa::train::Trainer;
-use cosa::util::bench::{bench, black_box};
+use cosa::train::{HostCosaStep, Trainer};
+use cosa::util::bench::{bench, black_box, write_bench_json};
+use cosa::util::json::{obj, Json};
 
-fn main() -> anyhow::Result<()> {
-    let rt = Runtime::cpu()?;
+fn host_step_section() {
+    println!("== e2e_step (host mirror): fwd + VJP + update, \
+              workspace-reused ==");
+    let mut rows_json: Vec<Json> = Vec::new();
+    for (m, n, a, b, rows) in [
+        (512, 512, 128, 64, 32),
+        (2048, 2048, 64, 64, 32),
+    ] {
+        let mut rng = Pcg64::new(3);
+        let x = Matrix::gaussian(rows, n, 1.0, &mut rng);
+        let target = {
+            let mut y_star = Matrix::zeros(a, b);
+            for pos in rng.sample_indices(a * b, 16) {
+                y_star.data[pos] = rng.normal() as f32;
+            }
+            adapter_forward(&x, &regen_l(9, "e2e.l", m, a),
+                            &regen_r(9, "e2e.r", b, n), &y_star, 2.0)
+        };
+        // fwd: x·Rᵀ, u·Yᵀ, v·Lᵀ; residual; vjp: xRᵀ again, e·L, tᵀ·u; axpy
+        let flops = 2.0 * rows as f64
+            * (2 * (n * b) + b * a + a * m + m * a + a * b) as f64
+            + (rows * m + a * b) as f64;
+
+        for kind in [Kind::Reference, Kind::Tiled] {
+            linalg::set_backend(kind, 0);
+            if linalg::resolved_kind() != kind {
+                println!("warning: COSA_BACKEND env override is active; \
+                          skipping the {} pass so BENCH_linalg.json rows \
+                          stay truthful", kind.name());
+                continue;
+            }
+            let mut step = HostCosaStep::new(
+                regen_l(9, "e2e.l", m, a),
+                regen_r(9, "e2e.r", b, n),
+                Matrix::zeros(a, b),
+                2.0,
+            );
+            let lr = step.safe_lr(&x);
+            step.step(&x, &target, lr); // warmup (workspace + buffers)
+            let warm = step.fresh_allocs();
+            let res = bench(
+                &format!("host_cosa_step[{}] m={m} n={n} a={a} b={b} \
+                          rows={rows}", kind.name()),
+                800,
+                || {
+                    black_box(step.step(&x, &target, lr));
+                },
+            );
+            res.report_gflops(flops);
+            let leaked = step.fresh_allocs() - warm;
+            println!("    matmul-output allocations after warmup: {leaked}");
+            rows_json.push(obj(vec![
+                ("bench", "host_cosa_step".into()),
+                ("backend", kind.name().into()),
+                ("m", m.into()),
+                ("n", n.into()),
+                ("a", a.into()),
+                ("b", b.into()),
+                ("rows", rows.into()),
+                ("mean_ns", res.mean_ns.into()),
+                ("gflops", res.gflops(flops).into()),
+                ("allocs_after_warmup", leaked.into()),
+            ]));
+        }
+    }
+    linalg::set_backend(Kind::Auto, 0);
+    write_bench_json("e2e_step_host", Json::Arr(rows_json));
+}
+
+fn xla_section() -> anyhow::Result<()> {
     let reg = match Registry::open_default() {
         Ok(r) => r,
         Err(e) => {
-            println!("skipping e2e_step bench: {e}");
+            println!("\nskipping XLA e2e_step bench: {e}");
             return Ok(());
         }
     };
-    println!("== e2e_step: optimizer-step latency (XLA CPU) ==");
+    let rt = match Runtime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("\nskipping XLA e2e_step bench: {e}");
+            return Ok(());
+        }
+    };
+    println!("\n== e2e_step: optimizer-step latency (XLA CPU) ==");
     for artifact in ["tiny-lm_cosa", "small-lm_cosa", "small-lm_lora",
                      "small-lm_full"] {
         if !reg.has(&format!("{artifact}_train")) {
@@ -33,7 +121,13 @@ fn main() -> anyhow::Result<()> {
             train: exp_train_cfg(1, 1e-3),
             ..RunConfig::default()
         };
-        let mut t = Trainer::new(&rt, &reg, cfg)?;
+        let mut t = match Trainer::new(&rt, &reg, cfg) {
+            Ok(t) => t,
+            Err(e) => {
+                println!("skipping {artifact}: {e}");
+                continue;
+            }
+        };
         // warm the executable once outside the timer
         t.run()?;
         let batch = {
@@ -67,4 +161,9 @@ fn main() -> anyhow::Result<()> {
         });
     }
     Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    host_step_section();
+    xla_section()
 }

@@ -7,6 +7,7 @@
 //! checkpoint loader and the portability example all call them, so a
 //! stored adapter reproduces bit-identical projections forever.
 
+use crate::linalg::{self, Workspace};
 use crate::math::matrix::Matrix;
 use crate::math::rng::Pcg64;
 
@@ -37,20 +38,82 @@ pub fn regen_r(seed: u64, name: &str, b: usize, n: usize) -> Matrix {
 
 /// Host-side adapter forward on a batch of row activations
 /// (mirror of the Pallas kernel; used by tests and the portability check):
-/// `o = α · x Rᵀ Yᵀ Lᵀ` for x (N × n).
+/// `o = α · x Rᵀ Yᵀ Lᵀ` for x (N × n).  The three products use the
+/// `linalg` transpose-free NT kernels — no `Rᵀ/Yᵀ/Lᵀ` copies are formed.
 pub fn adapter_forward(x: &Matrix, l: &Matrix, r: &Matrix, y: &Matrix,
                        alpha: f32) -> Matrix {
-    let u = x.matmul(&r.transpose());
-    let v = u.matmul(&y.transpose());
-    let mut o = v.matmul(&l.transpose());
+    let u = linalg::gemm_nt(x, r); // x Rᵀ         (N × b)
+    let v = linalg::gemm_nt(&u, y); // (x Rᵀ) Yᵀ   (N × a)
+    let mut o = linalg::gemm_nt(&v, l); // … Lᵀ    (N × m)
     o.scale(alpha);
     o
 }
 
+/// Allocation-free forward: intermediates come from `ws`, the result is
+/// written into `out` (N × m).  After the first call with a given shape
+/// set, no allocations occur (see `Workspace` docs).
+pub fn adapter_forward_into(x: &Matrix, l: &Matrix, r: &Matrix, y: &Matrix,
+                            alpha: f32, ws: &mut Workspace,
+                            out: &mut Matrix) {
+    let mut u = ws.take_matrix(x.rows, r.rows);
+    linalg::gemm_nt_into(x, r, &mut u);
+    let mut v = ws.take_matrix(x.rows, y.rows);
+    linalg::gemm_nt_into(&u, y, &mut v);
+    linalg::gemm_nt_into(&v, l, out);
+    out.scale(alpha);
+    ws.recycle_matrix(v);
+    ws.recycle_matrix(u);
+}
+
+/// Analytic VJP of the adapter forward (host mirror of the Pallas
+/// kernel's Eq. 10 backward): given upstream gradients `g = ∂L/∂o`
+/// (N × m), returns
+///
+/// * `dY = α · (g L)ᵀ (x Rᵀ)`  — (a × b), the only trainable gradient;
+/// * `dX = α · g L Y R`        — (N × n), the activation gradient.
+pub fn adapter_vjp(x: &Matrix, l: &Matrix, r: &Matrix, y: &Matrix,
+                   g: &Matrix, alpha: f32) -> (Matrix, Matrix) {
+    let u = linalg::gemm_nt(x, r); // x Rᵀ   (N × b)
+    let t = linalg::gemm(g, l); //    g L    (N × a)
+    let mut dy = linalg::gemm_tn(&t, &u); // (a × b)
+    dy.scale(alpha);
+    let ty = linalg::gemm(&t, y); //  g L Y  (N × b)
+    let mut dx = linalg::gemm(&ty, r); //    (N × n)
+    dx.scale(alpha);
+    (dy, dx)
+}
+
+/// Allocation-free core gradient: writes `dY = α·(g L)ᵀ(x Rᵀ)` into
+/// `dy_out` using workspace intermediates only.
+pub fn adapter_vjp_y_into(x: &Matrix, l: &Matrix, r: &Matrix, g: &Matrix,
+                          alpha: f32, ws: &mut Workspace,
+                          dy_out: &mut Matrix) {
+    let mut u = ws.take_matrix(x.rows, r.rows);
+    linalg::gemm_nt_into(x, r, &mut u);
+    let mut t = ws.take_matrix(g.rows, l.cols);
+    linalg::gemm_into(g, l, &mut t);
+    linalg::gemm_tn_into(&t, &u, dy_out);
+    dy_out.scale(alpha);
+    ws.recycle_matrix(t);
+    ws.recycle_matrix(u);
+}
+
 /// Materialized ΔW = α·L Y R (tests only — O(mn), the thing CoSA avoids).
+/// The association is chosen by FLOP count: `(L·Y)·R` when `a > b` at
+/// large n (the paper's NLG shape — the old grouping, ~3× cheaper
+/// there), else `L·(Y·R)` where the sparse core Y is the left operand
+/// and the dedicated sparse-left kernel from `linalg::sparse` applies.
 pub fn materialize_delta(l: &Matrix, y: &Matrix, r: &Matrix,
                          alpha: f32) -> Matrix {
-    let mut d = l.matmul(y).matmul(r);
+    let (m, a, b, n) = (l.rows, y.rows, y.cols, r.cols);
+    let cost_ly_first = m * a * b + m * b * n;
+    let cost_yr_first = a * b * n + m * a * n;
+    let mut d = if cost_yr_first <= cost_ly_first {
+        let yr = linalg::sparse::gemm_sparse_left(y, r);
+        linalg::gemm(l, &yr)
+    } else {
+        linalg::gemm(&linalg::gemm(l, y), r)
+    };
     d.scale(alpha);
     d
 }
@@ -111,6 +174,77 @@ mod tests {
                 assert!((p - q).abs() < 1e-3, "{p} vs {q}");
             }
         });
+    }
+
+    #[test]
+    fn forward_into_matches_allocating_forward() {
+        let mut rng = Pcg64::new(6);
+        let (m, nn, a, b, rows) = (10, 12, 4, 3, 8);
+        let x = Matrix::gaussian(rows, nn, 1.0, &mut rng);
+        let l = Matrix::gaussian(m, a, 1.0, &mut rng);
+        let r = Matrix::gaussian(b, nn, 1.0, &mut rng);
+        let y = Matrix::gaussian(a, b, 1.0, &mut rng);
+        let want = adapter_forward(&x, &l, &r, &y, 1.5);
+
+        let mut ws = crate::linalg::Workspace::new();
+        let mut out = Matrix::zeros(rows, m);
+        adapter_forward_into(&x, &l, &r, &y, 1.5, &mut ws, &mut out);
+        for (p, q) in out.data.iter().zip(&want.data) {
+            assert!((p - q).abs() < 1e-5, "{p} vs {q}");
+        }
+
+        // steady state: repeated calls never allocate again
+        let warm = ws.fresh_allocs();
+        for _ in 0..5 {
+            adapter_forward_into(&x, &l, &r, &y, 1.5, &mut ws, &mut out);
+        }
+        assert_eq!(ws.fresh_allocs(), warm);
+    }
+
+    #[test]
+    fn vjp_matches_finite_differences() {
+        // The forward is linear in Y, so central differences on the
+        // scalar loss Σ o⊙g recover dY exactly up to f32 rounding.
+        let mut rng = Pcg64::new(7);
+        let (m, nn, a, b, rows) = (6, 8, 3, 4, 5);
+        let x = Matrix::gaussian(rows, nn, 1.0, &mut rng);
+        let l = Matrix::gaussian(m, a, 0.5, &mut rng);
+        let r = Matrix::gaussian(b, nn, 0.5, &mut rng);
+        let y = Matrix::gaussian(a, b, 0.5, &mut rng);
+        let g = Matrix::gaussian(rows, m, 0.5, &mut rng);
+        let alpha = 1.3f32;
+        let loss = |yy: &Matrix| -> f64 {
+            let o = adapter_forward(&x, &l, &r, yy, alpha);
+            o.data.iter().zip(&g.data)
+                .map(|(ov, gv)| *ov as f64 * *gv as f64).sum()
+        };
+        let (dy, dx) = adapter_vjp(&x, &l, &r, &y, &g, alpha);
+        let eps = 1e-2f32;
+        for idx in [0usize, 3, 7, a * b - 1] {
+            let mut yp = y.clone();
+            yp.data[idx] += eps;
+            let mut ym = y.clone();
+            ym.data[idx] -= eps;
+            let fd = (loss(&yp) - loss(&ym)) / (2.0 * eps as f64);
+            assert!(
+                (fd - dy.data[idx] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                "dY[{idx}]: fd {fd} vs analytic {}", dy.data[idx]
+            );
+        }
+        // dX via the materialized ΔW: dX = g · ΔW with ΔW = α·L Y R.
+        let delta = materialize_delta(&l, &y, &r, alpha);
+        let dx_ref = g.matmul(&delta);
+        for (p, q) in dx.data.iter().zip(&dx_ref.data) {
+            assert!((p - q).abs() < 1e-3, "{p} vs {q}");
+        }
+
+        // workspace variant agrees with the allocating one
+        let mut ws = crate::linalg::Workspace::new();
+        let mut dy2 = Matrix::zeros(a, b);
+        adapter_vjp_y_into(&x, &l, &r, &g, alpha, &mut ws, &mut dy2);
+        for (p, q) in dy2.data.iter().zip(&dy.data) {
+            assert!((p - q).abs() < 1e-4, "{p} vs {q}");
+        }
     }
 
     #[test]

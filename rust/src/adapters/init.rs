@@ -14,6 +14,7 @@ use std::collections::BTreeMap;
 
 use crate::adapters::cosa;
 use crate::adapters::Method;
+use crate::linalg;
 use crate::math::matrix::Matrix;
 use crate::math::rng::Pcg64;
 use crate::math::svd::randomized_svd;
@@ -193,8 +194,9 @@ fn pissa_init(
                 b.set(k, j, svd.vt.at(k, j) * sq / s_norm);
             }
         }
-        // residual: W0 ← W0 − scale·A·B
-        let mut delta = a.matmul(&b);
+        // residual: W0 ← W0 − scale·A·B (backend gemm; A·B is the one
+        // O(n·r·n) product of the init path)
+        let mut delta = linalg::gemm(&a, &b);
         delta.scale(scale);
         let resid = w0.sub(&delta);
         state.insert(w0_name, resid.data);

@@ -49,6 +49,43 @@ impl Default for TrainConfig {
     }
 }
 
+/// Host `linalg` backend selection, mirrored into
+/// `linalg::configure` by the trainer (TOML table `[compute]`; the
+/// `COSA_BACKEND` / `COSA_THREADS` env vars override everything).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ComputeConfig {
+    /// "auto" | "reference" | "tiled".
+    pub backend: String,
+    /// Worker threads for the tiled backend; 0 = auto.
+    pub threads: usize,
+}
+
+impl Default for ComputeConfig {
+    fn default() -> Self {
+        ComputeConfig { backend: "auto".into(), threads: 0 }
+    }
+}
+
+impl ComputeConfig {
+    /// Fill unset fields ("auto" / 0) from the preset's hint
+    /// (`presets::compute_hint`).
+    pub fn resolved(&self, preset: &str) -> ComputeConfig {
+        let (hint_backend, hint_threads) = presets::compute_hint(preset);
+        ComputeConfig {
+            backend: if self.backend == "auto" {
+                hint_backend.to_string()
+            } else {
+                self.backend.clone()
+            },
+            threads: if self.threads == 0 {
+                hint_threads
+            } else {
+                self.threads
+            },
+        }
+    }
+}
+
 /// A full run description.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -59,6 +96,7 @@ pub struct RunConfig {
     /// Task id from `data::tasks` (e.g. "math", "code", "nlu:mrpc-sim").
     pub task: String,
     pub train: TrainConfig,
+    pub compute: ComputeConfig,
     pub base_seed: u64,
     pub adapter_seed: u64,
     pub data_seed: u64,
@@ -72,6 +110,7 @@ impl Default for RunConfig {
             artifact: "tiny-lm_cosa".into(),
             task: "math".into(),
             train: TrainConfig::default(),
+            compute: ComputeConfig::default(),
             base_seed: 42,
             adapter_seed: 1234,
             data_seed: 7,
@@ -111,6 +150,15 @@ impl RunConfig {
             "cosine" => Schedule::CosineWarmup { warmup_frac: warmup },
             other => anyhow::bail!("unknown schedule `{other}`"),
         };
+
+        let c = &mut cfg.compute;
+        c.backend = doc.str_or("compute.backend", &c.backend);
+        crate::linalg::Kind::parse(&c.backend)?; // fail fast on typos
+        let threads = doc.i64_or("compute.threads", c.threads as i64);
+        anyhow::ensure!(threads >= 0,
+                        "compute.threads must be >= 0 (got {threads}; \
+                         use 0 for auto)");
+        c.threads = threads as usize;
         Ok(cfg)
     }
 
@@ -165,5 +213,33 @@ data = 3
     #[test]
     fn bad_schedule_rejected() {
         assert!(RunConfig::from_toml("[train]\nschedule = \"step\"").is_err());
+    }
+
+    #[test]
+    fn compute_table_parses_and_validates() {
+        let cfg = RunConfig::from_toml(
+            "[compute]\nbackend = \"tiled\"\nthreads = 4",
+        )
+        .unwrap();
+        assert_eq!(cfg.compute.backend, "tiled");
+        assert_eq!(cfg.compute.threads, 4);
+        assert!(RunConfig::from_toml("[compute]\nbackend = \"gpu\"").is_err());
+        assert!(RunConfig::from_toml("[compute]\nthreads = -1").is_err());
+        // defaults stay "auto"/0
+        let d = RunConfig::from_toml("").unwrap();
+        assert_eq!(d.compute, ComputeConfig::default());
+    }
+
+    #[test]
+    fn compute_resolution_respects_explicit_settings() {
+        let auto = ComputeConfig::default();
+        let r = auto.resolved("tiny-lm");
+        assert_eq!(r.backend, "tiled");
+        assert_eq!(r.threads, 1, "tiny preset hints serial");
+        let explicit =
+            ComputeConfig { backend: "reference".into(), threads: 3 };
+        let r = explicit.resolved("tiny-lm");
+        assert_eq!(r.backend, "reference");
+        assert_eq!(r.threads, 3);
     }
 }

@@ -43,6 +43,19 @@ pub fn table5() -> Vec<GlueHp> {
 pub const GLUE_AB: (usize, usize) = (128, 56);
 pub const NLG_AB: (usize, usize) = (1024, 256);
 
+/// Host `linalg` backend hint per model preset, applied when the run
+/// config leaves `[compute]` on "auto": (backend, threads).  Tiny
+/// presets (d_model=64) stay serial — their products sit far below the
+/// parallelism threshold and thread spawn would only add latency; every
+/// larger preset uses the tiled backend with auto thread count.
+pub fn compute_hint(preset: &str) -> (&'static str, usize) {
+    if preset.starts_with("tiny") {
+        ("tiled", 1)
+    } else {
+        ("tiled", 0)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

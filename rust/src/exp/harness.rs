@@ -50,8 +50,10 @@ pub fn run_scored(
         adapter_seed: 1000 + seed,
         data_seed: 7000 + seed,
         out_dir: "runs/exp".into(),
+        ..RunConfig::default()
     };
     let mut trainer = Trainer::new(rt, reg, cfg)?;
+    crate::debug!("exp run `{artifact}` on {}", crate::linalg::describe());
     trainer.run()?;
     let (eval_loss, fast_metric) = trainer.evaluate()?;
     let params = trainer.train_exec.meta.trainable_param_count();

@@ -15,12 +15,34 @@
 //!
 //! Python never runs on the training path: the rust binary is
 //! self-contained once `artifacts/` is built.
+//!
+//! ## Host compute layer (`linalg`)
+//!
+//! Every host-side dense product — adapter forward/VJP mirrors, PiSSA's
+//! randomized SVD, the RIP estimator's Gram matrices, the experiment
+//! harnesses and the benches — goes through the [`linalg`] backend
+//! layer: a [`linalg::Backend`] trait with a `Reference` baseline and a
+//! cache-blocked, row-parallel `Tiled` implementation, transpose-free
+//! `gemm_nt` / `gemm_tn` kernels, dedicated sparse-core products
+//! (`linalg::sparse`) and a reusable [`linalg::Workspace`] arena that
+//! keeps training-step hot loops allocation-free after warmup.
+//! Selection is config-driven (`[compute]` in run configs, preset hints
+//! in `config::presets`) with `COSA_BACKEND` / `COSA_THREADS` env
+//! overrides — see the `linalg` module docs for the exact rules.
+//!
+//! ## Offline builds
+//!
+//! The workspace compiles with no network: `anyhow` and `xla` resolve to
+//! vendored path crates under `rust/vendor/` (the `xla` stub executes
+//! nothing — artifact-dependent tests and tools skip cleanly, exactly as
+//! they do when `artifacts/` has not been built).
 
 pub mod adapters;
 pub mod config;
 pub mod data;
 pub mod eval;
 pub mod exp;
+pub mod linalg;
 pub mod math;
 pub mod rip;
 pub mod runtime;

@@ -1,0 +1,78 @@
+//! Reference backend: the seed's single-threaded i-k-j matmul, kept as
+//! the semantic baseline every other backend is property-tested against.
+//!
+//! Differences from the original `Matrix::matmul`: the per-element
+//! `a == 0.0` skip branch is gone (it penalized every dense product to
+//! help only sparse cores — those now use `linalg::sparse`), and the
+//! transpose variants accumulate directly from the untransposed operands
+//! instead of materializing `Aᵀ`/`Bᵀ` first.  Accumulation order per
+//! output element (ascending k) is identical to the original, so results
+//! match the seed bit-for-bit on the dense path.
+
+use crate::linalg::{shape_nn, shape_nt, shape_tn, Backend};
+use crate::math::matrix::Matrix;
+
+/// Plain-loop backend; allocation-free kernels, no blocking, no threads.
+pub struct Reference;
+
+impl Backend for Reference {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn gemm_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
+        shape_nn(a, b, out);
+        let (m, k, c) = (a.rows, a.cols, b.cols);
+        out.data.fill(0.0);
+        for i in 0..m {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let orow = &mut out.data[i * c..(i + 1) * c];
+            for (kk, av) in arow.iter().enumerate() {
+                let brow = &b.data[kk * c..(kk + 1) * c];
+                for (o, bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+
+    fn gemm_nt_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
+        shape_nt(a, b, out);
+        let (m, k, n) = (a.rows, a.cols, b.rows);
+        for i in 0..m {
+            let arow = &a.data[i * k..(i + 1) * k];
+            let orow = &mut out.data[i * n..(i + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &b.data[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (x, y) in arow.iter().zip(brow) {
+                    acc += x * y;
+                }
+                *o = acc;
+            }
+        }
+    }
+
+    fn gemm_tn_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
+        shape_tn(a, b, out);
+        let (k, mo, n) = (a.rows, a.cols, b.cols);
+        out.data.fill(0.0);
+        for kk in 0..k {
+            let arow = &a.data[kk * mo..(kk + 1) * mo];
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for (i, av) in arow.iter().enumerate() {
+                let orow = &mut out.data[i * n..(i + 1) * n];
+                for (o, bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+
+    fn axpy(&self, alpha: f32, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), y.len(), "axpy length mismatch");
+        for (yv, xv) in y.iter_mut().zip(x) {
+            *yv += alpha * xv;
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! Dedicated sparse-dense product for sparse cores.
+//!
+//! The seed's dense matmul carried a per-element `a == 0.0` skip on its
+//! innermost hot loop — a branch paid by *every* dense product to speed
+//! up the rare case of a sparse left operand.  That branch now lives
+//! here, as an explicit kernel for products whose **left** operand is a
+//! sparse core (CoSA's trained Y, whose structure Appendix B.3 measures
+//! at ~30% zeros, and the exactly-s-sparse cores of the RIP suite):
+//! zero rows of the access pattern are skipped wholesale, so cost scales
+//! with the number of nonzeros instead of `m·k·n`.
+
+use crate::linalg::shape_nn;
+use crate::math::matrix::Matrix;
+
+/// `a · b` where `a` is sparse (entries exactly 0.0 are skipped).
+/// Skipping only elides `+= 0.0 * x` terms, so for finite inputs the
+/// result equals the dense product exactly.
+pub fn gemm_sparse_left(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(a.rows, b.cols);
+    gemm_sparse_left_into(a, b, &mut out);
+    out
+}
+
+/// In-place variant of [`gemm_sparse_left`]; fully overwrites `out`.
+pub fn gemm_sparse_left_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    shape_nn(a, b, out);
+    let (m, k, c) = (a.rows, a.cols, b.cols);
+    out.data.fill(0.0);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let orow = &mut out.data[i * c..(i + 1) * c];
+        for (kk, av) in arow.iter().enumerate() {
+            if *av == 0.0 {
+                continue; // sparse core: skip zero entries of the pattern
+            }
+            let brow = &b.data[kk * c..(kk + 1) * c];
+            for (o, bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Fraction of exactly-zero entries (diagnostic for kernel selection).
+pub fn zero_fraction(m: &Matrix) -> f64 {
+    if m.data.is_empty() {
+        return 0.0;
+    }
+    m.data.iter().filter(|v| **v == 0.0).count() as f64 / m.data.len() as f64
+}

@@ -68,6 +68,13 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     if let Some(lr) = args.opt("lr") {
         cfg.train.lr = lr.parse()?;
     }
+    if let Some(b) = args.opt("backend") {
+        cosa::linalg::Kind::parse(b)?; // validate before the run starts
+        cfg.compute.backend = b.to_string();
+    }
+    if let Some(t) = args.opt("threads") {
+        cfg.compute.threads = t.parse()?;
+    }
     let rt = Runtime::cpu()?;
     let reg = Registry::open_default()?;
     let mut trainer = Trainer::new(&rt, &reg, cfg)?;
@@ -119,6 +126,8 @@ cosa-repro — CoSA (Compressed Sensing-Based Adaptation) reproduction
 USAGE: cosa-repro <subcommand> [flags]
 
   train   --config <toml> | --artifact <name> --task <id> [--steps N --lr F]
+          [--backend auto|reference|tiled --threads N]   host linalg backend
+          (env: COSA_BACKEND / COSA_THREADS override)
   eval    --ckpt <path> [--task <id>]
   exp     <id>         one of: table1 table2 table3 table4 table5 table6
                        table7 table8 fig2 fig3 ystruct

@@ -1,6 +1,7 @@
-//! Row-major dense f32 matrix with the operations the framework needs:
-//! matmul (blocked), transpose, norms, QR (for randomized SVD), and the
-//! sparse-core product used by the RIP estimator's hot loop.
+//! Row-major dense f32 matrix: storage, norms and QR (for randomized
+//! SVD).  All products delegate to the `linalg` backend layer — matmul
+//! variants here are thin ergonomic wrappers over `linalg::gemm*`, and
+//! sparse-core products live in `linalg::sparse`.
 
 use crate::math::rng::Pcg64;
 
@@ -47,26 +48,20 @@ impl Matrix {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
-    /// Blocked matmul `self (r×k) · other (k×c)`.
+    /// `self (r×k) · other (k×c)` on the active `linalg` backend.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
-        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
-        let (r, k, c) = (self.rows, self.cols, other.cols);
-        let mut out = Matrix::zeros(r, c);
-        // i-k-j loop order: contiguous access on both `other` and `out`.
-        for i in 0..r {
-            let orow = &mut out.data[i * c..(i + 1) * c];
-            for kk in 0..k {
-                let a = self.data[i * k + kk];
-                if a == 0.0 {
-                    continue; // sparse cores: skip zero rows of the pattern
-                }
-                let brow = &other.data[kk * c..(kk + 1) * c];
-                for j in 0..c {
-                    orow[j] += a * brow[j];
-                }
-            }
-        }
-        out
+        crate::linalg::gemm(self, other)
+    }
+
+    /// `self (r×k) · otherᵀ` for other (c×k) — no transpose materialized.
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        crate::linalg::gemm_nt(self, other)
+    }
+
+    /// `selfᵀ · other` for self (k×r), other (k×c) — no transpose
+    /// materialized.
+    pub fn matmul_tn(&self, other: &Matrix) -> Matrix {
+        crate::linalg::gemm_tn(self, other)
     }
 
     pub fn transpose(&self) -> Matrix {
@@ -199,6 +194,29 @@ mod tests {
             let rhs = a.matmul(&b.matmul(&c));
             for (x, y) in lhs.data.iter().zip(&rhs.data) {
                 assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+            }
+        });
+    }
+
+    #[test]
+    fn matmul_nt_tn_match_explicit_transposes() {
+        prop::for_all("A·Bᵀ and Aᵀ·B wrappers", 15, |rng| {
+            let m = prop::int_in(rng, 1, 10);
+            let k = prop::int_in(rng, 1, 12);
+            let n = prop::int_in(rng, 1, 10);
+            let a = Matrix::gaussian(m, k, 1.0, rng);
+            let bt = Matrix::gaussian(n, k, 1.0, rng);
+            let at = Matrix::gaussian(k, m, 1.0, rng);
+            let b = Matrix::gaussian(k, n, 1.0, rng);
+            let nt = a.matmul_nt(&bt);
+            let nt_ref = a.matmul(&bt.transpose());
+            for (x, y) in nt.data.iter().zip(&nt_ref.data) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+            }
+            let tn = at.matmul_tn(&b);
+            let tn_ref = at.transpose().matmul(&b);
+            for (x, y) in tn.data.iter().zip(&tn_ref.data) {
+                assert!((x - y).abs() < 1e-4, "{x} vs {y}");
             }
         });
     }

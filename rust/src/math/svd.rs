@@ -1,7 +1,13 @@
 //! Randomized truncated SVD (Halko–Martinsson–Tropp) — the substrate for
 //! PiSSA initialization: principal singular triplets of the frozen W0 seed
 //! the A/B adapters, and the residual replaces W0.
+//!
+//! One of the two heaviest host-side matmul consumers (with the RIP
+//! estimator): the range finder and sketch products route through the
+//! `linalg` backend, using the transpose-free `gemm_tn` kernels instead
+//! of materializing `Aᵀ` / `Qᵀ` copies per power iteration.
 
+use crate::linalg;
 use crate::math::matrix::Matrix;
 use crate::math::rng::Pcg64;
 
@@ -23,22 +29,21 @@ pub fn randomized_svd(a: &Matrix, k: usize, n_iter: usize,
     let (m, n) = (a.rows, a.cols);
     let k = k.min(m).min(n);
     let p = (k + 8).min(n.min(m)); // oversampled sketch size
-    let at = a.transpose();
 
     // Range finder: Q spans the dominant column space of A.
     let omega = Matrix::gaussian(n, p, 1.0, rng);
-    let mut q = a.matmul(&omega).qr_q();
+    let mut q = linalg::gemm(a, &omega).qr_q();
     for _ in 0..n_iter {
-        q = at.matmul(&q).qr_q();
-        q = a.matmul(&q).qr_q();
+        q = linalg::gemm_tn(a, &q).qr_q(); // Aᵀ·Q without forming Aᵀ
+        q = linalg::gemm(a, &q).qr_q();
     }
 
     // B = Qᵀ A  (p × n);  SVD of the small B via one-sided Jacobi on Bᵀ.
-    let b = q.transpose().matmul(a);
+    let b = linalg::gemm_tn(&q, a);
     let (ub, s, vtb) = jacobi_svd(&b);
 
     // U = Q · U_b, truncated to k.
-    let u_full = q.matmul(&ub);
+    let u_full = linalg::gemm(&q, &ub);
     let mut u = Matrix::zeros(m, k);
     let mut vt = Matrix::zeros(k, n);
     for i in 0..k {

@@ -8,10 +8,15 @@
 //! ‖L Y R‖_F² = Σ_k Σ_l y_k y_l (l_{ik}·l_{il}) (r_{jk}·r_{jl})
 //! ```
 //!
-//! each s-sparse sample costs O(s²·(m+n)) instead of O(mn·ab) — this is
-//! the L3 hot path behind Table 4 / Fig 4 and is benchmarked in
+//! each s-sparse sample needs only the Gram matrices `Gₗ = LᵀL` (a × a)
+//! and `Gᵣ = R Rᵀ` (b × b): the column/row dot products are **hoisted out
+//! of the sample loop** into two `linalg::gemm_nt` products per (L, R)
+//! draw, dropping the per-sample cost from O(s²·(m+n)) to O(s²) lookups —
+//! this is the L3 hot path behind Table 4 / Fig 4 and is benchmarked in
 //! `rust/benches/rip_bench.rs`.
 
+use crate::linalg;
+use crate::math::matrix::Matrix;
 use crate::math::rng::Pcg64;
 use crate::math::stats;
 
@@ -51,14 +56,32 @@ pub struct RipEstimate {
     pub ratios: Vec<f64>,
 }
 
+/// Stack row vectors into a Matrix (rows must share a length).
+fn rows_to_matrix(rows: &[Vec<f32>]) -> Matrix {
+    let cols = rows.first().map_or(0, |r| r.len());
+    let mut m = Matrix::zeros(rows.len(), cols);
+    for (i, row) in rows.iter().enumerate() {
+        m.data[i * cols..(i + 1) * cols].copy_from_slice(row);
+    }
+    m
+}
+
+/// Gram matrix of a set of row vectors: `G = V Vᵀ`, via the backend's
+/// transpose-free NT kernel.
+fn gram_rows(rows: &[Vec<f32>]) -> Matrix {
+    let v = rows_to_matrix(rows);
+    linalg::gemm_nt(&v, &v)
+}
+
 /// Sample one s-sparse core and return its isometry ratio
 /// ‖Ψα‖²/‖α‖² under the 1/√(mn)-normalized dictionary.
 ///
-/// `lt` is L in column-major form (a rows of length m — i.e. Lᵀ), `r` is
-/// R row-major (b rows of length n), both with N(0,1) entries.
+/// `gl` is the L-column Gram `LᵀL` (a × a), `gr` the R-row Gram `R Rᵀ`
+/// (b × b) — both precomputed once per (L, R) draw by [`rip_constant`],
+/// so each sample is O(s²) table lookups.
 fn isometry_ratio(
-    lt: &[Vec<f32>],
-    r: &[Vec<f32>],
+    gl: &Matrix,
+    gr: &Matrix,
     setup: &RipSetup,
     sparsity: usize,
     rng: &mut Pcg64,
@@ -69,23 +92,14 @@ fn isometry_ratio(
     let support = rng.sample_indices(ab, s);
     let vals: Vec<f64> = (0..s).map(|_| rng.normal()).collect();
 
-    // Gram matrices restricted to the support's L-columns / R-rows.
     let mut num = 0.0f64;
     for k in 0..s {
         let (ik, jk) = (support[k] / setup.b, support[k] % setup.b);
         for l in 0..s {
             let (il, jl) = (support[l] / setup.b, support[l] % setup.b);
-            let ldot: f64 = lt[ik]
-                .iter()
-                .zip(&lt[il])
-                .map(|(x, y)| *x as f64 * *y as f64)
-                .sum();
-            let rdot: f64 = r[jk]
-                .iter()
-                .zip(&r[jl])
-                .map(|(x, y)| *x as f64 * *y as f64)
-                .sum();
-            num += vals[k] * vals[l] * ldot * rdot;
+            num += vals[k] * vals[l]
+                * gl.at(ik, il) as f64
+                * gr.at(jk, jl) as f64;
         }
     }
     let denom: f64 = vals.iter().map(|v| v * v).sum();
@@ -102,16 +116,20 @@ pub fn rip_constant(
     seed: u64,
 ) -> RipEstimate {
     let mut rng = Pcg64::derive(seed, "rip.projections");
-    // store Lᵀ so column dots are contiguous
+    // store Lᵀ so column dots are contiguous (draw order is part of the
+    // seeded stream contract shared with `rip::coherence`)
     let lt: Vec<Vec<f32>> =
         (0..setup.a).map(|_| rng.normal_vec(setup.m, 1.0)).collect();
     let r: Vec<Vec<f32>> =
         (0..setup.b).map(|_| rng.normal_vec(setup.n, 1.0)).collect();
+    // hoisted Gram matrices: two NT products, then O(s²) per sample
+    let gl = gram_rows(&lt);
+    let gr = gram_rows(&r);
 
     let mut sample_rng = Pcg64::derive(seed, "rip.samples");
     let mut ratios = Vec::with_capacity(samples);
     for _ in 0..samples {
-        ratios.push(isometry_ratio(&lt, &r, &setup, sparsity,
+        ratios.push(isometry_ratio(&gl, &gr, &setup, sparsity,
                                    &mut sample_rng));
     }
     let devs: Vec<f64> = ratios.iter().map(|r| (r - 1.0).abs()).collect();
@@ -178,15 +196,15 @@ mod tests {
     fn dense_core_matches_direct_computation() {
         // s = ab (fully dense core): cross-check the rank-one expansion
         // against the direct ‖LYR‖ computed with explicit matrices.
-        use crate::math::matrix::Matrix;
         let setup = RipSetup { m: 24, n: 16, a: 4, b: 3 };
         let mut rng = Pcg64::derive(5, "rip.projections");
         let lt: Vec<Vec<f32>> =
             (0..setup.a).map(|_| rng.normal_vec(setup.m, 1.0)).collect();
         let r: Vec<Vec<f32>> =
             (0..setup.b).map(|_| rng.normal_vec(setup.n, 1.0)).collect();
+        let (gl, gr) = (gram_rows(&lt), gram_rows(&r));
         let mut srng = Pcg64::new(99);
-        let ratio = isometry_ratio(&lt, &r, &setup, 12, &mut srng);
+        let ratio = isometry_ratio(&gl, &gr, &setup, 12, &mut srng);
 
         // rebuild the same support/values stream
         let mut srng2 = Pcg64::new(99);

@@ -8,7 +8,9 @@
 //! every frozen tensor per call *and leaks the input device buffers* in
 //! xla_rs.cc — at e2e scale that is 132 MB/step of growth; the
 //! buffer-resident path removed both the copy and the leak.  See
-//! EXPERIMENTS.md §Perf.)
+//! EXPERIMENTS.md §Perf.)  The splice path refills each entry's host
+//! mirror in place via `Literal::read_f32_into`, so steady-state steps
+//! perform no host-side output allocations.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -323,10 +325,18 @@ impl Executor {
                 Some(("new_v", t)) => format!("opt_v:{t}"),
                 _ => anyhow::bail!("unexpected output `{}`", spec.name),
             };
-            let spec_shape = &spec.shape;
-            let data = to_vec::<f32>(&lit)?;
-            state.tensors.insert(state_name,
-                                 self.upload_f32(data, spec_shape)?);
+            // Splice without per-step host allocations: refill the
+            // existing entry's host mirror in place (its capacity is
+            // already right after the first step) and re-upload.
+            if let Some(entry) = state.tensors.get_mut(&state_name) {
+                lit.read_f32_into(&mut entry.data)?;
+                entry.buf = self.client.buffer_from_host_buffer(
+                    &entry.data, &spec.shape, None)?;
+            } else {
+                let data = to_vec::<f32>(&lit)?;
+                state.tensors.insert(state_name,
+                                     self.upload_f32(data, &spec.shape)?);
+            }
         }
         let mut p = self.profile.get();
         p.splice_ns += t0.elapsed().as_nanos() as u64;

@@ -32,6 +32,17 @@ impl BenchResult {
         let per_sec = items / (self.mean_ns * 1e-9);
         println!("{:<44} {:>26.1} {unit}/s", "", per_sec);
     }
+
+    /// Compute rate for a kernel of `flops` floating-point operations
+    /// per iteration (flops / mean-ns happens to be GFLOP/s exactly).
+    pub fn gflops(&self, flops: f64) -> f64 {
+        flops / self.mean_ns
+    }
+
+    /// Print the GFLOP/s line under the standard report row.
+    pub fn report_gflops(&self, flops: f64) {
+        println!("{:<44} {:>24.2} GFLOP/s", "", self.gflops(flops));
+    }
 }
 
 pub fn fmt_ns(ns: f64) -> String {
@@ -79,6 +90,41 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Merge one bench section into a machine-readable JSON report at
+/// `path`, preserving other benches' sections (so `adapter_fwd` and
+/// `e2e_step` can both write `BENCH_linalg.json`).
+pub fn write_bench_json_at(path: &std::path::Path, section: &str,
+                           entries: crate::util::json::Json) {
+    use crate::util::json::Json;
+    let mut root = match std::fs::read_to_string(path) {
+        Ok(src) => match Json::parse(&src) {
+            Ok(j) => j.as_obj().cloned().unwrap_or_default(),
+            Err(e) => {
+                eprintln!(
+                    "warning: existing {} is not valid JSON ({e}); \
+                     starting a fresh report — prior sections are lost",
+                    path.display()
+                );
+                Default::default()
+            }
+        },
+        Err(_) => Default::default(), // no existing report
+    };
+    root.insert(section.to_string(), entries);
+    if let Err(e) = std::fs::write(path, Json::Obj(root).to_string()) {
+        eprintln!("warning: cannot write {}: {e}", path.display());
+    } else {
+        println!("wrote section `{section}` to {}", path.display());
+    }
+}
+
+/// `write_bench_json_at` against the conventional `BENCH_linalg.json`
+/// in the current directory.
+pub fn write_bench_json(section: &str, entries: crate::util::json::Json) {
+    write_bench_json_at(std::path::Path::new("BENCH_linalg.json"), section,
+                        entries);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,5 +145,36 @@ mod tests {
         assert!(fmt_ns(12_000.0).ends_with("µs"));
         assert!(fmt_ns(12_000_000.0).ends_with("ms"));
         assert!(fmt_ns(2e9).ends_with('s'));
+    }
+
+    #[test]
+    fn gflops_units() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean_ns: 1_000_000.0, // 1 ms
+            p50_ns: 0.0,
+            p99_ns: 0.0,
+            min_ns: 0.0,
+        };
+        // 2 GFLOP in 1 ms = 2000 GFLOP/s
+        assert!((r.gflops(2e9) - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_json_sections_merge() {
+        use crate::util::json::{obj, Json};
+        let dir = std::env::temp_dir().join("cosa_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_linalg.json");
+        let _ = std::fs::remove_file(&path);
+        write_bench_json_at(&path, "a",
+                            obj(vec![("v", Json::from(1usize))]));
+        write_bench_json_at(&path, "b",
+                            obj(vec![("v", Json::from(2usize))]));
+        let j = Json::parse(&std::fs::read_to_string(&path).unwrap())
+            .unwrap();
+        assert_eq!(j.get("a").unwrap().get("v").unwrap().as_i64(), Some(1));
+        assert_eq!(j.get("b").unwrap().get("v").unwrap().as_i64(), Some(2));
     }
 }

@@ -1,0 +1,115 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! Implements exactly the surface the `cosa` workspace uses: a boxed-free
+//! string-backed [`Error`], the [`Result`] alias, the `anyhow!` / `bail!` /
+//! `ensure!` macros, and blanket `?`-conversion from any
+//! `std::error::Error`.  Deliberately API-compatible so the path
+//! dependency can be swapped for the real crates.io `anyhow` without
+//! touching call sites.
+
+use std::fmt;
+
+/// String-backed error value (the real crate boxes the source error and
+/// captures a backtrace; this shim keeps just the rendered message).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Blanket conversion powering `?` on std / vendored-crate error types.
+// `Error` itself must NOT implement `std::error::Error`, or this impl
+// would collide with the reflexive `From<T> for T` (same trick as the
+// real anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built like `anyhow!`.
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($t:tt)*) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    fn fails(flag: bool) -> crate::Result<u32> {
+        crate::ensure!(!flag, "flag was {}", flag);
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = crate::anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        assert_eq!(format!("{e:#}"), "x = 3");
+        assert_eq!(format!("{e:?}"), "x = 3");
+        assert_eq!(fails(false).unwrap(), 7);
+        assert_eq!(fails(true).unwrap_err().to_string(), "flag was true");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> crate::Result<usize> {
+            Ok(s.parse::<usize>()?)
+        }
+        assert_eq!(parse("41").unwrap(), 41);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn bail_early_returns() {
+        fn f() -> crate::Result<()> {
+            crate::bail!("stop");
+        }
+        assert_eq!(f().unwrap_err().to_string(), "stop");
+    }
+}

@@ -1,0 +1,369 @@
+//! Offline stub of the `xla` (PJRT) bindings.
+//!
+//! The container this workspace builds in has no XLA toolchain, so this
+//! crate provides a compile-time compatible subset of the `xla` API:
+//!
+//! * [`Literal`] is **fully functional host-side** — typed storage,
+//!   round-trips, tuple decomposition — so the marshalling layer
+//!   (`runtime/literal.rs`) and its tests behave exactly as with the real
+//!   bindings.
+//! * [`PjRtClient::cpu`] and [`PjRtClient::buffer_from_host_buffer`]
+//!   succeed (buffers hold a host copy), but
+//!   [`PjRtClient::compile`] returns an error: executing lowered HLO
+//!   requires the real backend.  Every artifact-dependent code path in
+//!   the workspace already skips cleanly when compilation is impossible.
+//!
+//! One deliberate extension over the upstream API:
+//! [`Literal::read_f32_into`], which refills a caller-owned buffer without
+//! allocating — the executor's train-step splice path uses it to keep
+//! steady-state host allocations at zero.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element dtypes the workspace marshals (f32 tensors, i32 token ids).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+impl ElementType {
+    pub fn byte_size(&self) -> usize {
+        4
+    }
+}
+
+/// Types that can live in a [`Literal`].
+pub trait ArrayElement: Copy {
+    const TY: ElementType;
+    fn to_le_bytes4(self) -> [u8; 4];
+    fn from_le_bytes4(b: [u8; 4]) -> Self;
+}
+
+impl ArrayElement for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn to_le_bytes4(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+    fn from_le_bytes4(b: [u8; 4]) -> Self {
+        f32::from_le_bytes(b)
+    }
+}
+
+impl ArrayElement for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn to_le_bytes4(self) -> [u8; 4] {
+        self.to_le_bytes()
+    }
+    fn from_le_bytes4(b: [u8; 4]) -> Self {
+        i32::from_le_bytes(b)
+    }
+}
+
+fn numel(dims: &[usize]) -> usize {
+    dims.iter().product::<usize>()
+}
+
+/// Host tensor value: dtype + dims + little-endian bytes, or a tuple.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    ty: ElementType,
+    dims: Vec<usize>,
+    data: Vec<u8>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        ty: ElementType,
+        dims: &[usize],
+        data: &[u8],
+    ) -> Result<Literal> {
+        let want = numel(dims) * ty.byte_size();
+        if data.len() != want {
+            return Err(Error::new(format!(
+                "literal data is {} bytes, shape {:?} wants {}",
+                data.len(),
+                dims,
+                want
+            )));
+        }
+        Ok(Literal {
+            ty,
+            dims: dims.to_vec(),
+            data: data.to_vec(),
+            tuple: None,
+        })
+    }
+
+    /// Scalar f32 literal.
+    pub fn scalar(v: f32) -> Literal {
+        Literal {
+            ty: ElementType::F32,
+            dims: Vec::new(),
+            data: v.to_le_bytes().to_vec(),
+            tuple: None,
+        }
+    }
+
+    /// Wrap component literals into a tuple literal.
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal {
+            ty: ElementType::F32,
+            dims: Vec::new(),
+            data: Vec::new(),
+            tuple: Some(parts),
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        numel(&self.dims)
+    }
+
+    fn check_type(&self, ty: ElementType) -> Result<()> {
+        if self.tuple.is_some() {
+            return Err(Error::new("literal is a tuple, not an array"));
+        }
+        if self.ty != ty {
+            return Err(Error::new(format!(
+                "literal is {:?}, requested {:?}",
+                self.ty, ty
+            )));
+        }
+        Ok(())
+    }
+
+    pub fn to_vec<T: ArrayElement>(&self) -> Result<Vec<T>> {
+        self.check_type(T::TY)?;
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| T::from_le_bytes4([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Refill `dst` from an f32 literal, reusing its capacity (extension
+    /// over the upstream API; see crate docs).
+    pub fn read_f32_into(&self, dst: &mut Vec<f32>) -> Result<()> {
+        self.check_type(ElementType::F32)?;
+        dst.clear();
+        dst.reserve(self.element_count());
+        for c in self.data.chunks_exact(4) {
+            dst.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(())
+    }
+
+    pub fn get_first_element<T: ArrayElement>(&self) -> Result<T> {
+        self.check_type(T::TY)?;
+        if self.data.len() < 4 {
+            return Err(Error::new("empty literal has no first element"));
+        }
+        Ok(T::from_le_bytes4([
+            self.data[0],
+            self.data[1],
+            self.data[2],
+            self.data[3],
+        ]))
+    }
+
+    /// Decompose a tuple literal into its parts.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        self.tuple
+            .ok_or_else(|| Error::new("literal is not a tuple"))
+    }
+}
+
+/// Parsed HLO module (text is retained verbatim; only the real backend
+/// interprets it).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    _hlo: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _hlo: proto.text.clone() }
+    }
+}
+
+/// Device buffer: in the stub, a host copy of the uploaded data.
+#[derive(Clone, Debug)]
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+/// PJRT client handle.  Creation and uploads succeed; compilation needs
+/// the real backend and errors with a clear message.
+#[derive(Clone, Debug, Default)]
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(
+            "PJRT execution is unavailable in this build: the `xla` \
+             dependency is the vendored stub (rust/vendor/xla); link the \
+             real bindings to run lowered artifacts",
+        ))
+    }
+
+    pub fn buffer_from_host_buffer<T: ArrayElement>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        if data.len() != numel(dims) {
+            return Err(Error::new(format!(
+                "host buffer has {} elements, shape {:?} wants {}",
+                data.len(),
+                dims,
+                numel(dims)
+            )));
+        }
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes4());
+        }
+        Ok(PjRtBuffer {
+            lit: Literal {
+                ty: T::TY,
+                dims: dims.to_vec(),
+                data: bytes,
+                tuple: None,
+            },
+        })
+    }
+}
+
+/// Compiled executable handle.  Unreachable through the stub (compile
+/// errors first), but the API surface exists so call sites type-check.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T: std::borrow::Borrow<PjRtBuffer>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new("stub executable cannot run"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let vals = [1.0f32, -2.5, 0.0, 3.25];
+        let bytes: Vec<u8> =
+            vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let lit = Literal::create_from_shape_and_untyped_data(
+            ElementType::F32,
+            &[2, 2],
+            &bytes,
+        )
+        .unwrap();
+        assert_eq!(lit.element_count(), 4);
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vals);
+        assert!(lit.to_vec::<i32>().is_err(), "dtype mismatch must error");
+    }
+
+    #[test]
+    fn read_into_reuses_capacity() {
+        let lit = Literal::scalar(4.5);
+        let mut dst = Vec::with_capacity(8);
+        let cap = dst.capacity();
+        lit.read_f32_into(&mut dst).unwrap();
+        assert_eq!(dst, vec![4.5]);
+        assert_eq!(dst.capacity(), cap);
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0), Literal::scalar(2.0)]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        assert_eq!(parts[1].get_first_element::<f32>().unwrap(), 2.0);
+    }
+
+    #[test]
+    fn upload_validates_shape() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client
+            .buffer_from_host_buffer(&[1.0f32, 2.0], &[3], None)
+            .is_err());
+        let buf = client
+            .buffer_from_host_buffer(&[1i32, 2, 3], &[3], None)
+            .unwrap();
+        assert_eq!(buf.to_literal_sync().unwrap().to_vec::<i32>().unwrap(),
+                   vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn compile_is_a_clear_stub_error() {
+        let client = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation::from_proto(&HloModuleProto {
+            text: "HloModule m".into(),
+        });
+        let err = client.compile(&comp).unwrap_err().to_string();
+        assert!(err.contains("vendored stub"), "{err}");
+    }
+}

@@ -39,7 +39,7 @@ fn main() {
         // mul+add per chained product: x·Rᵀ, u·Yᵀ, v·Lᵀ
         let flops = 2.0 * rows as f64 * (n * b + b * a + a * m) as f64;
 
-        for kind in [Kind::Reference, Kind::Tiled] {
+        for kind in [Kind::Reference, Kind::Tiled, Kind::Packed] {
             linalg::set_backend(kind, 0);
             if linalg::resolved_kind() != kind {
                 println!("warning: COSA_BACKEND env override is active \

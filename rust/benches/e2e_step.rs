@@ -47,7 +47,7 @@ fn host_step_section() {
             * (2 * (n * b) + b * a + a * m + m * a + a * b) as f64
             + (rows * m + a * b) as f64;
 
-        for kind in [Kind::Reference, Kind::Tiled] {
+        for kind in [Kind::Reference, Kind::Tiled, Kind::Packed] {
             linalg::set_backend(kind, 0);
             if linalg::resolved_kind() != kind {
                 println!("warning: COSA_BACKEND env override is active; \

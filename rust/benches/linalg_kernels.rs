@@ -1,0 +1,162 @@
+//! Bench: raw per-kernel GFLOP/s for every `linalg` backend — the
+//! regression baseline behind `BENCH_baseline.json`.
+//!
+//! Unlike `adapter_fwd` (which times the chained adapter products), this
+//! times each GEMM kernel (NN / NT / TN) in isolation, per backend, at
+//! paper shapes, single-threaded (the acceptance metric: packed ≥ 1.5×
+//! tiled on NN/NT) and with auto threads.  A sparse-left section covers
+//! the threaded nonzero-row-index kernel.  Everything lands in the
+//! `linalg_kernels` section of `BENCH_linalg.json`, which
+//! `tools/bench_regression.py` compares against the committed
+//! `BENCH_baseline.json`.
+
+use cosa::linalg::{self, sparse, Backend, Kind, Packed, Reference, Tiled};
+use cosa::math::matrix::Matrix;
+use cosa::math::rng::Pcg64;
+use cosa::util::bench::{bench, black_box, write_bench_json};
+use cosa::util::json::{obj, Json};
+
+struct Bk {
+    name: &'static str,
+    threads: usize,
+    make: fn(usize) -> Box<dyn Backend>,
+}
+
+fn backends() -> Vec<Bk> {
+    fn mk_ref(_t: usize) -> Box<dyn Backend> {
+        Box::new(Reference)
+    }
+    fn mk_tiled(t: usize) -> Box<dyn Backend> {
+        Box::new(Tiled::new(t))
+    }
+    fn mk_packed(t: usize) -> Box<dyn Backend> {
+        Box::new(Packed::new(t))
+    }
+    vec![
+        Bk { name: "reference", threads: 1, make: mk_ref },
+        Bk { name: "tiled", threads: 1, make: mk_tiled },
+        Bk { name: "packed", threads: 1, make: mk_packed },
+        Bk { name: "tiled", threads: 0, make: mk_tiled },
+        Bk { name: "packed", threads: 0, make: mk_packed },
+    ]
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push_row(rows: &mut Vec<Json>, kernel: &str, backend: &str,
+            threads: usize, m: usize, k: usize, n: usize, mean_ns: f64,
+            min_ns: f64, gflops: f64) {
+    rows.push(obj(vec![
+        ("kernel", kernel.into()),
+        ("backend", backend.into()),
+        ("threads", threads.into()),
+        ("m", m.into()),
+        ("k", k.into()),
+        ("n", n.into()),
+        ("mean_ns", mean_ns.into()),
+        ("min_ns", min_ns.into()),
+        ("gflops", gflops.into()),
+    ]));
+}
+
+fn main() {
+    println!("== linalg_kernels: per-kernel GFLOP/s, simd level: {} ==",
+             cosa::linalg::simd::level().name());
+    let mut rows_json: Vec<Json> = Vec::new();
+    let mut rng = Pcg64::new(5);
+
+    // (m, k, n): a paper GLUE-ish square, the NLG L·Y panel, a big square
+    let shapes = [(512usize, 512usize, 512usize), (2048, 1024, 256),
+                  (1024, 1024, 1024)];
+    for (m, k, n) in shapes {
+        let a = Matrix::gaussian(m, k, 1.0, &mut rng);
+        let b = Matrix::gaussian(k, n, 1.0, &mut rng);
+        let bt = Matrix::gaussian(n, k, 1.0, &mut rng);
+        let at = Matrix::gaussian(k, m, 1.0, &mut rng);
+        let flops = 2.0 * (m * k * n) as f64;
+        for bk in backends() {
+            // auto-thread rows only at the largest shape (the serial
+            // rows are the acceptance metric; threaded rows show scaling)
+            if bk.threads == 0 && (m, k, n) != (1024, 1024, 1024) {
+                continue;
+            }
+            let be = (bk.make)(bk.threads);
+            let mut out = Matrix::zeros(m, n);
+            let r = bench(
+                &format!("nn[{}/t{}] {m}x{k}x{n}", bk.name, bk.threads),
+                300,
+                || {
+                    be.gemm_into(&a, &b, &mut out);
+                    black_box(out.data[0]);
+                },
+            );
+            r.report_gflops(flops);
+            push_row(&mut rows_json, "nn", bk.name, bk.threads, m, k, n,
+                     r.mean_ns, r.min_ns, r.gflops(flops));
+
+            let mut out = Matrix::zeros(m, n);
+            let r = bench(
+                &format!("nt[{}/t{}] {m}x{k}x{n}", bk.name, bk.threads),
+                300,
+                || {
+                    be.gemm_nt_into(&a, &bt, &mut out);
+                    black_box(out.data[0]);
+                },
+            );
+            r.report_gflops(flops);
+            push_row(&mut rows_json, "nt", bk.name, bk.threads, m, k, n,
+                     r.mean_ns, r.min_ns, r.gflops(flops));
+
+            let mut out = Matrix::zeros(m, n);
+            let r = bench(
+                &format!("tn[{}/t{}] {m}x{k}x{n}", bk.name, bk.threads),
+                300,
+                || {
+                    be.gemm_tn_into(&at, &b, &mut out);
+                    black_box(out.data[0]);
+                },
+            );
+            r.report_gflops(flops);
+            push_row(&mut rows_json, "tn", bk.name, bk.threads, m, k, n,
+                     r.mean_ns, r.min_ns, r.gflops(flops));
+        }
+    }
+
+    // Sparse-left: a ~10%-dense core against a wide B; thread count is
+    // taken from the process-wide setting, so pin it per pass.
+    println!("\n== sparse-left (nonzero-row index) ==");
+    let (m, k, c) = (1024usize, 1024usize, 512usize);
+    let mut y = Matrix::zeros(m, k);
+    for pos in rng.sample_indices(m * k, m * k / 10) {
+        y.data[pos] = rng.normal() as f32;
+    }
+    let b = Matrix::gaussian(k, c, 1.0, &mut rng);
+    let nnz = y.data.iter().filter(|v| **v != 0.0).count();
+    let sflops = 2.0 * (nnz * c) as f64;
+    if std::env::var("COSA_THREADS").is_ok() {
+        // env wins over set_backend — the rows below would be mislabeled
+        // and would poison a --update'd BENCH_baseline.json
+        println!("warning: COSA_THREADS env override is active; skipping \
+                  the sparse_left passes so row labels stay truthful");
+    }
+    for threads in [1usize, 0] {
+        if std::env::var("COSA_THREADS").is_ok() {
+            continue;
+        }
+        linalg::set_backend(Kind::Auto, threads);
+        let mut out = Matrix::zeros(m, c);
+        let r = bench(
+            &format!("sparse_left[t{threads}] {m}x{k}x{c} nnz={nnz}"),
+            300,
+            || {
+                sparse::gemm_sparse_left_into(&y, &b, &mut out);
+                black_box(out.data[0]);
+            },
+        );
+        r.report_gflops(sflops);
+        push_row(&mut rows_json, "sparse_left", "sparse", threads, m, k,
+                 c, r.mean_ns, r.min_ns, r.gflops(sflops));
+    }
+    linalg::set_backend(Kind::Auto, 0);
+
+    write_bench_json("linalg_kernels", Json::Arr(rows_json));
+}

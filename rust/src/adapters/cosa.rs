@@ -102,7 +102,9 @@ pub fn adapter_vjp_y_into(x: &Matrix, l: &Matrix, r: &Matrix, g: &Matrix,
 /// The association is chosen by FLOP count: `(L·Y)·R` when `a > b` at
 /// large n (the paper's NLG shape — the old grouping, ~3× cheaper
 /// there), else `L·(Y·R)` where the sparse core Y is the left operand
-/// and the dedicated sparse-left kernel from `linalg::sparse` applies.
+/// and the dedicated sparse-left kernel from `linalg::sparse` applies —
+/// threaded over its precomputed nonzero-row index above the FLOP
+/// threshold, so large materializations scale across cores.
 pub fn materialize_delta(l: &Matrix, y: &Matrix, r: &Matrix,
                          alpha: f32) -> Matrix {
     let (m, a, b, n) = (l.rows, y.rows, y.cols, r.cols);

@@ -54,9 +54,9 @@ impl Default for TrainConfig {
 /// `COSA_BACKEND` / `COSA_THREADS` env vars override everything).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ComputeConfig {
-    /// "auto" | "reference" | "tiled".
+    /// "auto" | "reference" | "tiled" | "packed".
     pub backend: String,
-    /// Worker threads for the tiled backend; 0 = auto.
+    /// Worker threads for the tiled/packed backends; 0 = auto.
     pub threads: usize,
 }
 
@@ -234,7 +234,7 @@ data = 3
     fn compute_resolution_respects_explicit_settings() {
         let auto = ComputeConfig::default();
         let r = auto.resolved("tiny-lm");
-        assert_eq!(r.backend, "tiled");
+        assert_eq!(r.backend, "packed");
         assert_eq!(r.threads, 1, "tiny preset hints serial");
         let explicit =
             ComputeConfig { backend: "reference".into(), threads: 3 };

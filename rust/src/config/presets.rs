@@ -47,12 +47,13 @@ pub const NLG_AB: (usize, usize) = (1024, 256);
 /// config leaves `[compute]` on "auto": (backend, threads).  Tiny
 /// presets (d_model=64) stay serial — their products sit far below the
 /// parallelism threshold and thread spawn would only add latency; every
-/// larger preset uses the tiled backend with auto thread count.
+/// larger preset uses the packed micro-kernel backend with auto thread
+/// count (pin `backend = "tiled"` / `"reference"` to compare).
 pub fn compute_hint(preset: &str) -> (&'static str, usize) {
     if preset.starts_with("tiny") {
-        ("tiled", 1)
+        ("packed", 1)
     } else {
-        ("tiled", 0)
+        ("packed", 0)
     }
 }
 

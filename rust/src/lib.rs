@@ -21,14 +21,18 @@
 //! Every host-side dense product — adapter forward/VJP mirrors, PiSSA's
 //! randomized SVD, the RIP estimator's Gram matrices, the experiment
 //! harnesses and the benches — goes through the [`linalg`] backend
-//! layer: a [`linalg::Backend`] trait with a `Reference` baseline and a
-//! cache-blocked, row-parallel `Tiled` implementation, transpose-free
-//! `gemm_nt` / `gemm_tn` kernels, dedicated sparse-core products
-//! (`linalg::sparse`) and a reusable [`linalg::Workspace`] arena that
-//! keeps training-step hot loops allocation-free after warmup.
+//! layer: a [`linalg::Backend`] trait with a `Reference` baseline, a
+//! cache-blocked row-parallel `Tiled` implementation, and the default
+//! `Packed` backend (packed B panels + register-blocked micro-kernels +
+//! runtime-dispatched wide-lane SIMD), transpose-free `gemm_nt` /
+//! `gemm_tn` kernels, dedicated sparse-core products (`linalg::sparse`,
+//! threaded over a precomputed nonzero-row index) and a reusable
+//! [`linalg::Workspace`] arena that keeps training-step hot loops —
+//! including panel packing — allocation-free after warmup.
 //! Selection is config-driven (`[compute]` in run configs, preset hints
-//! in `config::presets`) with `COSA_BACKEND` / `COSA_THREADS` env
-//! overrides — see the `linalg` module docs for the exact rules.
+//! in `config::presets`) with `COSA_BACKEND` / `COSA_THREADS` /
+//! `COSA_SIMD` env overrides — see the `linalg` module docs for the
+//! exact rules.
 //!
 //! ## Offline builds
 //!

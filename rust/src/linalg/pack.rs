@@ -1,0 +1,125 @@
+//! B-panel packing for the packed micro-kernel backend.
+//!
+//! The NN/TN micro-kernels in [`super::packed`] read B through
+//! [`NR`]-column strips laid out contiguously in k: strip `s` holds
+//! columns `[s·NR, s·NR + NR)` of B as `k` consecutive NR-wide rows,
+//! zero-padded on the right edge.  One pack pass rewrites the whole
+//! `k×n` operand; the micro-kernel then streams each strip linearly
+//! (one cache line every other k-step) instead of striding across B's
+//! full row width, and the zero padding lets the kernel stay branch-free
+//! at the column remainder.
+//!
+//! ## Allocation contract
+//!
+//! Pack buffers come from a **thread-local [`Workspace`] pool**, so a
+//! steady-state loop of packed products performs no fresh allocations
+//! after its first iteration — the same arena contract the `*_into`
+//! kernels make for outputs, extended to the packing scratch.  The pool
+//! is thread-local because only the dispatching thread packs (worker
+//! threads of a parallel product share the packed panel read-only);
+//! [`pool_fresh_allocs`] exposes the counter the steady-state test
+//! asserts on.
+
+use std::cell::RefCell;
+
+use crate::linalg::Workspace;
+
+/// Strip width (columns) — two 8-lane registers per micro-kernel row.
+pub const NR: usize = 16;
+
+thread_local! {
+    static PACK_POOL: RefCell<Workspace> = RefCell::new(Workspace::new());
+}
+
+/// Fresh allocations performed by this thread's pack pool (flat across
+/// iterations ⇒ packing is allocation-free after warmup).
+pub fn pool_fresh_allocs() -> usize {
+    PACK_POOL.with(|ws| ws.borrow().fresh_allocs())
+}
+
+/// Length of the packed image of a `k×n` operand.
+pub fn packed_len(k: usize, n: usize) -> usize {
+    n.div_ceil(NR) * k * NR
+}
+
+/// Pack row-major `b` (`k×n`) into NR-column strips (see module docs).
+/// `packed` must hold at least [`packed_len`]`(k, n)` elements.
+pub fn pack_b(b: &[f32], k: usize, n: usize, packed: &mut [f32]) {
+    let strips = n.div_ceil(NR);
+    assert!(packed.len() >= strips * k * NR, "pack buffer too small");
+    for s in 0..strips {
+        let j0 = s * NR;
+        let jw = NR.min(n - j0);
+        for kk in 0..k {
+            let dst = &mut packed[(s * k + kk) * NR..(s * k + kk + 1) * NR];
+            dst[..jw].copy_from_slice(&b[kk * n + j0..kk * n + j0 + jw]);
+            // right-edge padding — REQUIRED: buffers arrive with stale
+            // contents (scratch draw), the kernel multiplies these lanes
+            for d in dst[jw..].iter_mut() {
+                *d = 0.0;
+            }
+        }
+    }
+}
+
+/// Run `f` against the packed image of `b`, drawing and returning the
+/// buffer from the thread-local pool.  The borrow is released before
+/// `f` runs, so nested packed products are fine.
+pub fn with_packed_b<R>(
+    b: &[f32],
+    k: usize,
+    n: usize,
+    f: impl FnOnce(&[f32]) -> R,
+) -> R {
+    // Scratch (non-zeroed) draw: pack_b writes every element of the
+    // packed image, padding included, so take's zeroing pass would be a
+    // redundant full memset on the GEMM hot path.
+    let mut buf =
+        PACK_POOL.with(|ws| ws.borrow_mut().take_scratch(packed_len(k, n)));
+    pack_b(b, k, n, &mut buf);
+    let r = f(&buf);
+    PACK_POOL.with(|ws| ws.borrow_mut().recycle(buf));
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packs_strips_with_zero_padding() {
+        // 3×5 matrix, NR=16 ⇒ one strip, 11 padded columns per k-row
+        let b: Vec<f32> = (0..15).map(|v| v as f32 + 1.0).collect();
+        let mut packed = vec![7.0f32; packed_len(3, 5)];
+        pack_b(&b, 3, 5, &mut packed);
+        for kk in 0..3 {
+            let row = &packed[kk * NR..(kk + 1) * NR];
+            assert_eq!(&row[..5], &b[kk * 5..kk * 5 + 5], "k-row {kk}");
+            assert!(row[5..].iter().all(|v| *v == 0.0), "padding {kk}");
+        }
+    }
+
+    #[test]
+    fn multi_strip_layout_is_contiguous_in_k() {
+        // 2×20 ⇒ two strips; strip 1 holds columns 16..20
+        let b: Vec<f32> = (0..40).map(|v| v as f32).collect();
+        let mut packed = vec![0.0f32; packed_len(2, 20)];
+        pack_b(&b, 2, 20, &mut packed);
+        let s1 = &packed[2 * NR..]; // strip 1: k rows of NR
+        assert_eq!(&s1[..4], &b[16..20]);
+        assert_eq!(&s1[NR..NR + 4], &b[36..40]);
+    }
+
+    #[test]
+    fn pool_reuses_buffers_after_warmup() {
+        let b = vec![1.0f32; 24 * 24];
+        with_packed_b(&b, 24, 24, |p| assert_eq!(p.len(), packed_len(24, 24)));
+        let warm = pool_fresh_allocs();
+        for _ in 0..8 {
+            with_packed_b(&b, 24, 24, |p| {
+                assert_eq!(p[0], 1.0);
+            });
+        }
+        assert_eq!(pool_fresh_allocs(), warm, "steady-state pack allocated");
+    }
+}

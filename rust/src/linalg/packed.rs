@@ -1,0 +1,413 @@
+//! Packed backend: register-blocked micro-kernels over packed B panels
+//! with runtime-selected wide-lane SIMD.
+//!
+//! What it adds over [`super::Tiled`]:
+//!
+//! * **Packed B panels** ([`super::pack`]): NN/TN stream B through
+//!   [`NR`]-column strips packed contiguously in k, so the micro-kernel
+//!   reads one dense 16-float line per k-step instead of striding across
+//!   B's full row; strips are zero-padded, keeping the kernel branch-free
+//!   at the column remainder.  Pack buffers come from a thread-local
+//!   [`Workspace`](super::Workspace) pool — no fresh allocations after
+//!   warmup.
+//! * **A register-blocked micro-kernel**: [`MR`]×[`NR`] outputs (4 rows ×
+//!   two 8-lanes) accumulate entirely in registers across a [`KC`]-deep
+//!   k-block before touching `out` — 8 independent accumulator vectors,
+//!   one broadcast and two panel loads per (row, k) step.
+//! * **Explicit SIMD with runtime dispatch** ([`super::simd`]): every hot
+//!   body is compiled twice on x86_64 (portable + AVX2/FMA clone) and the
+//!   level is chosen once per process at runtime; the portable body
+//!   auto-vectorizes for the build target elsewhere.  The NT kernel
+//!   replaces the old unrolled `dot8` with 8-lane loads and 4-way B-row
+//!   blocking (each A-row load feeds four dot products).
+//! * **Row-parallelism** identical to `Tiled` (scoped threads, disjoint
+//!   output rows, deterministic per thread count); packing happens once
+//!   on the dispatching thread, workers share the panel read-only.
+//!
+//! Accumulation order per output element is ascending k within each
+//! KC-block and blocks are added in order — a reassociation of the
+//! reference fold, elementwise within the 1e-4 property tolerance
+//! (`fma` fusion removes one rounding per multiply-add; see
+//! `linalg::tests`).
+
+use crate::linalg::pack::{self, NR};
+use crate::linalg::simd::{self, F32x8};
+use crate::linalg::tiled::{parallel_rows, plan_threads, DEFAULT_MIN_PAR_FLOPS};
+use crate::linalg::{shape_nn, shape_nt, shape_tn, Backend};
+use crate::math::matrix::Matrix;
+
+/// Micro-kernel height (output rows held in registers).
+pub const MR: usize = 4;
+/// k-block depth: MR×KC of A (4 KiB) and KC×NR of packed B (16 KiB)
+/// stay L1-resident under the accumulator pass.
+const KC: usize = 256;
+/// B-row block for the NT kernel (panel reused across all A rows).
+const NT_JB: usize = 64;
+/// B rows processed per A-row load in the NT inner kernel.
+const NT_RB: usize = 4;
+
+/// Packed micro-kernel backend (see module docs).
+pub struct Packed {
+    /// Worker thread count; 0 = auto (`available_parallelism`, capped).
+    pub threads: usize,
+    /// Multiply-add threshold below which the kernels stay serial.
+    pub min_par_flops: usize,
+}
+
+impl Packed {
+    pub fn new(threads: usize) -> Packed {
+        Packed { threads, min_par_flops: DEFAULT_MIN_PAR_FLOPS }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Kernel bodies.  Each is written once, generic over `FMA`, marked
+// `#[inline(always)]` so it folds into the `#[target_feature]` clones
+// below and vectorizes with their instruction set (see `simd` docs).
+//
+// nn_body and tn_body deliberately duplicate their block structure
+// instead of sharing it through an A-element accessor closure: the
+// whole dispatch scheme depends on every body inlining completely into
+// its feature clone, and an extra indirection layer is exactly the kind
+// of thing that quietly breaks that.  Fixes to the shared remainder /
+// padding logic must be applied to both.
+// ---------------------------------------------------------------------
+
+/// Accumulator spill: `out[i0..i0+mr) × [j0..j0+jw) += acc`.
+#[inline(always)]
+fn store_acc(
+    acc: &[[F32x8; 2]; MR],
+    out: &mut [f32],
+    i0: usize,
+    mr: usize,
+    j0: usize,
+    jw: usize,
+    n: usize,
+) {
+    for r in 0..mr {
+        let orow = &mut out[(i0 + r) * n + j0..(i0 + r) * n + j0 + jw];
+        if jw == NR {
+            acc[r][0].accumulate_into(&mut orow[..8]);
+            acc[r][1].accumulate_into(&mut orow[8..16]);
+        } else {
+            let mut flat = [0.0f32; NR];
+            flat[..8].copy_from_slice(&acc[r][0].0);
+            flat[8..].copy_from_slice(&acc[r][1].0);
+            for (o, v) in orow.iter_mut().zip(flat.iter()) {
+                *o += *v;
+            }
+        }
+    }
+}
+
+/// NN: `out = a · B` where `a` is `rows×k` (row-contiguous chunk) and B
+/// is pre-packed `k×n`.
+#[inline(always)]
+fn nn_body<const FMA: bool>(
+    a: &[f32],
+    packed: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+) {
+    out.fill(0.0);
+    let strips = n.div_ceil(NR);
+    let mut kb = 0;
+    while kb < k {
+        let kend = (kb + KC).min(k);
+        for s in 0..strips {
+            let j0 = s * NR;
+            let jw = NR.min(n - j0);
+            let panel = &packed[(s * k + kb) * NR..(s * k + kend) * NR];
+            let mut i0 = 0;
+            while i0 < rows {
+                let mr = MR.min(rows - i0);
+                // A-row base offsets; bottom-edge padding lanes re-read
+                // the block's first row (their results are discarded).
+                let mut base = [0usize; MR];
+                for (r, bo) in base.iter_mut().enumerate() {
+                    *bo = (i0 + r.min(mr - 1)) * k;
+                }
+                let mut acc = [[F32x8::ZERO; 2]; MR];
+                let mut p = 0;
+                for kk in kb..kend {
+                    let b0 = F32x8::load(&panel[p..p + 8]);
+                    let b1 = F32x8::load(&panel[p + 8..p + 16]);
+                    p += NR;
+                    for r in 0..MR {
+                        let av = F32x8::splat(a[base[r] + kk]);
+                        acc[r][0] = acc[r][0].fma::<FMA>(av, b0);
+                        acc[r][1] = acc[r][1].fma::<FMA>(av, b1);
+                    }
+                }
+                store_acc(&acc, out, i0, mr, j0, jw, n);
+                i0 += MR;
+            }
+        }
+        kb = kend;
+    }
+}
+
+/// TN: `out rows [row0, row0+rows) of aᵀ·B` — `a` is the full k×mo
+/// matrix (TN reads A columns, which are strided), B pre-packed k×n.
+#[inline(always)]
+fn tn_body<const FMA: bool>(
+    a: &[f32],
+    packed: &[f32],
+    out: &mut [f32],
+    row0: usize,
+    rows: usize,
+    mo: usize,
+    k: usize,
+    n: usize,
+) {
+    out.fill(0.0);
+    let strips = n.div_ceil(NR);
+    let mut kb = 0;
+    while kb < k {
+        let kend = (kb + KC).min(k);
+        for s in 0..strips {
+            let j0 = s * NR;
+            let jw = NR.min(n - j0);
+            let panel = &packed[(s * k + kb) * NR..(s * k + kend) * NR];
+            let mut i0 = 0;
+            while i0 < rows {
+                let mr = MR.min(rows - i0);
+                let mut cols = [0usize; MR];
+                for (r, co) in cols.iter_mut().enumerate() {
+                    *co = row0 + i0 + r.min(mr - 1);
+                }
+                let mut acc = [[F32x8::ZERO; 2]; MR];
+                let mut p = 0;
+                for kk in kb..kend {
+                    let b0 = F32x8::load(&panel[p..p + 8]);
+                    let b1 = F32x8::load(&panel[p + 8..p + 16]);
+                    p += NR;
+                    let arow = &a[kk * mo..(kk + 1) * mo];
+                    for r in 0..MR {
+                        let av = F32x8::splat(arow[cols[r]]);
+                        acc[r][0] = acc[r][0].fma::<FMA>(av, b0);
+                        acc[r][1] = acc[r][1].fma::<FMA>(av, b1);
+                    }
+                }
+                store_acc(&acc, out, i0, mr, j0, jw, n);
+                i0 += MR;
+            }
+        }
+        kb = kend;
+    }
+}
+
+/// 8-lane dot product (the SIMD successor of the old `dot8`).
+#[inline(always)]
+fn dot_body<const FMA: bool>(x: &[f32], y: &[f32]) -> f32 {
+    let k = x.len().min(y.len());
+    let mut acc = F32x8::ZERO;
+    let mut kk = 0;
+    while kk + 8 <= k {
+        acc = acc
+            .fma::<FMA>(F32x8::load(&x[kk..kk + 8]),
+                        F32x8::load(&y[kk..kk + 8]));
+        kk += 8;
+    }
+    let mut s = acc.hsum();
+    for q in kk..k {
+        s += x[q] * y[q];
+    }
+    s
+}
+
+/// NT: `out = a · bᵀ`, `a` rows×k (chunk), `b` n×k.  NT_JB-row B panels
+/// are reused across all A rows; inside, each A-row load feeds NT_RB
+/// independent dot accumulators.
+#[inline(always)]
+fn nt_body<const FMA: bool>(
+    a: &[f32],
+    b: &[f32],
+    out: &mut [f32],
+    rows: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut jb = 0;
+    while jb < n {
+        let jend = (jb + NT_JB).min(n);
+        for i in 0..rows {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            let mut j = jb;
+            while j + NT_RB <= jend {
+                let b0 = &b[j * k..(j + 1) * k];
+                let b1 = &b[(j + 1) * k..(j + 2) * k];
+                let b2 = &b[(j + 2) * k..(j + 3) * k];
+                let b3 = &b[(j + 3) * k..(j + 4) * k];
+                let mut acc = [F32x8::ZERO; NT_RB];
+                let mut kk = 0;
+                while kk + 8 <= k {
+                    let av = F32x8::load(&arow[kk..kk + 8]);
+                    acc[0] = acc[0]
+                        .fma::<FMA>(av, F32x8::load(&b0[kk..kk + 8]));
+                    acc[1] = acc[1]
+                        .fma::<FMA>(av, F32x8::load(&b1[kk..kk + 8]));
+                    acc[2] = acc[2]
+                        .fma::<FMA>(av, F32x8::load(&b2[kk..kk + 8]));
+                    acc[3] = acc[3]
+                        .fma::<FMA>(av, F32x8::load(&b3[kk..kk + 8]));
+                    kk += 8;
+                }
+                let mut sums =
+                    [acc[0].hsum(), acc[1].hsum(), acc[2].hsum(),
+                     acc[3].hsum()];
+                for q in kk..k {
+                    let av = arow[q];
+                    sums[0] += av * b0[q];
+                    sums[1] += av * b1[q];
+                    sums[2] += av * b2[q];
+                    sums[3] += av * b3[q];
+                }
+                orow[j..j + NT_RB].copy_from_slice(&sums);
+                j += NT_RB;
+            }
+            while j < jend {
+                orow[j] = dot_body::<FMA>(arow, &b[j * k..(j + 1) * k]);
+                j += 1;
+            }
+        }
+        jb = jend;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Runtime dispatch: portable entry + AVX2/FMA clones (x86_64 only).
+// The clones are `unsafe fn` because `#[target_feature]` requires the
+// caller to guarantee the CPU supports the features — guaranteed here
+// by `simd::level()`'s `is_x86_feature_detected!` probe.
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn nn_avx2fma(a: &[f32], packed: &[f32], out: &mut [f32],
+                     rows: usize, k: usize, n: usize) {
+    nn_body::<true>(a, packed, out, rows, k, n);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn tn_avx2fma(a: &[f32], packed: &[f32], out: &mut [f32],
+                     row0: usize, rows: usize, mo: usize, k: usize,
+                     n: usize) {
+    tn_body::<true>(a, packed, out, row0, rows, mo, k, n);
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[target_feature(enable = "fma")]
+unsafe fn nt_avx2fma(a: &[f32], b: &[f32], out: &mut [f32], rows: usize,
+                     k: usize, n: usize) {
+    nt_body::<true>(a, b, out, rows, k, n);
+}
+
+fn nn_kernel(a: &[f32], packed: &[f32], out: &mut [f32], rows: usize,
+             k: usize, n: usize) {
+    match simd::level() {
+        #[cfg(target_arch = "x86_64")]
+        simd::Level::Avx2Fma => unsafe {
+            // SAFETY: level() returned Avx2Fma ⇒ CPU has avx2+fma.
+            nn_avx2fma(a, packed, out, rows, k, n)
+        },
+        _ => nn_body::<false>(a, packed, out, rows, k, n),
+    }
+}
+
+fn tn_kernel(a: &[f32], packed: &[f32], out: &mut [f32], row0: usize,
+             rows: usize, mo: usize, k: usize, n: usize) {
+    match simd::level() {
+        #[cfg(target_arch = "x86_64")]
+        simd::Level::Avx2Fma => unsafe {
+            // SAFETY: level() returned Avx2Fma ⇒ CPU has avx2+fma.
+            tn_avx2fma(a, packed, out, row0, rows, mo, k, n)
+        },
+        _ => tn_body::<false>(a, packed, out, row0, rows, mo, k, n),
+    }
+}
+
+fn nt_kernel(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, k: usize,
+             n: usize) {
+    match simd::level() {
+        #[cfg(target_arch = "x86_64")]
+        simd::Level::Avx2Fma => unsafe {
+            // SAFETY: level() returned Avx2Fma ⇒ CPU has avx2+fma.
+            nt_avx2fma(a, b, out, rows, k, n)
+        },
+        _ => nt_body::<false>(a, b, out, rows, k, n),
+    }
+}
+
+impl Backend for Packed {
+    fn name(&self) -> &'static str {
+        "packed"
+    }
+
+    fn gemm_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
+        shape_nn(a, b, out);
+        let (m, k, c) = (a.rows, a.cols, b.cols);
+        if m == 0 || c == 0 {
+            return;
+        }
+        if k == 0 {
+            out.data.fill(0.0);
+            return;
+        }
+        let nt = plan_threads(self.threads, self.min_par_flops, m, m * k * c);
+        let (ad, bd) = (&a.data, &b.data);
+        let od = &mut out.data;
+        pack::with_packed_b(bd, k, c, |packed| {
+            parallel_rows(od, m, c, nt, |row0, chunk| {
+                let rows_here = chunk.len() / c;
+                nn_kernel(&ad[row0 * k..(row0 + rows_here) * k], packed,
+                          chunk, rows_here, k, c);
+            });
+        });
+    }
+
+    fn gemm_nt_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
+        shape_nt(a, b, out);
+        let (m, k, n) = (a.rows, a.cols, b.rows);
+        if m == 0 || n == 0 {
+            return;
+        }
+        let nt = plan_threads(self.threads, self.min_par_flops, m,
+                              m * k.max(1) * n);
+        let (ad, bd) = (&a.data, &b.data);
+        parallel_rows(&mut out.data, m, n, nt, |row0, chunk| {
+            let rows_here = chunk.len() / n;
+            nt_kernel(&ad[row0 * k..(row0 + rows_here) * k], bd, chunk,
+                      rows_here, k, n);
+        });
+    }
+
+    fn gemm_tn_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
+        shape_tn(a, b, out);
+        let (k, mo, n) = (a.rows, a.cols, b.cols);
+        if mo == 0 || n == 0 {
+            return;
+        }
+        if k == 0 {
+            out.data.fill(0.0);
+            return;
+        }
+        let nt = plan_threads(self.threads, self.min_par_flops, mo,
+                              mo * k * n);
+        let (ad, bd) = (&a.data, &b.data);
+        let od = &mut out.data;
+        pack::with_packed_b(bd, k, n, |packed| {
+            parallel_rows(od, mo, n, nt, |row0, chunk| {
+                let rows_here = chunk.len() / n;
+                tn_kernel(ad, packed, chunk, row0, rows_here, mo, k, n);
+            });
+        });
+    }
+}

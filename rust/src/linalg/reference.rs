@@ -68,11 +68,4 @@ impl Backend for Reference {
             }
         }
     }
-
-    fn axpy(&self, alpha: f32, x: &[f32], y: &mut [f32]) {
-        assert_eq!(x.len(), y.len(), "axpy length mismatch");
-        for (yv, xv) in y.iter_mut().zip(x) {
-            *yv += alpha * xv;
-        }
-    }
 }

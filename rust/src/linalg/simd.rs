@@ -1,0 +1,150 @@
+//! Portable wide-lane SIMD primitives for the packed backend.
+//!
+//! `std::simd` is nightly-only, so the vector type here is a plain
+//! `[f32; 8]` wrapper ([`F32x8`]) whose per-lane loops LLVM reliably
+//! turns into vector instructions — *provided* the enclosing function is
+//! compiled with wide registers enabled.  That is what the runtime
+//! dispatch below is for:
+//!
+//! * on `x86_64`, the hot kernels in `linalg::packed` exist twice — a
+//!   portable body and an `#[target_feature(enable = "avx2", "fma")]`
+//!   clone — and [`level`] picks the wide one at runtime when the CPU
+//!   reports AVX2+FMA (`is_x86_feature_detected!`), independent of the
+//!   build's baseline target (plain `x86-64` only guarantees SSE2);
+//! * everywhere else (and under `COSA_SIMD=scalar`) the portable body
+//!   runs and auto-vectorizes to whatever the build target allows
+//!   (e.g. NEON on aarch64).
+//!
+//! The `FMA` const parameter on [`F32x8::fma`] selects between
+//! `mul_add` (fused, one instruction when the `fma` feature is active)
+//! and separate multiply+add: calling `f32::mul_add` without hardware
+//! FMA falls back to a libm call, which is catastrophically slow, so the
+//! scalar body must *not* use it.  Fusion changes results by less than
+//! the property-test tolerance (it removes an intermediate rounding).
+
+use std::sync::OnceLock;
+
+/// Lane width every kernel is written against.
+pub const LANES: usize = 8;
+
+/// Runtime-selected instruction level for the packed kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    /// Portable body, build-target auto-vectorization only.
+    Scalar,
+    /// x86_64 AVX2 + FMA clone of the kernel body.
+    Avx2Fma,
+}
+
+impl Level {
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Avx2Fma => "avx2+fma",
+        }
+    }
+}
+
+fn detect() -> Level {
+    if let Ok(v) = std::env::var("COSA_SIMD") {
+        match v.to_ascii_lowercase().as_str() {
+            "scalar" => return Level::Scalar,
+            "auto" | "" => {}
+            other => eprintln!(
+                "warning: ignoring COSA_SIMD=`{other}` (scalar|auto)"
+            ),
+        }
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return Level::Avx2Fma;
+        }
+    }
+    Level::Scalar
+}
+
+/// The instruction level the packed kernels run at (cached; honors the
+/// `COSA_SIMD=scalar|auto` override, read once at first use).
+pub fn level() -> Level {
+    static LEVEL: OnceLock<Level> = OnceLock::new();
+    *LEVEL.get_or_init(detect)
+}
+
+/// Eight f32 lanes.  All methods are `#[inline(always)]` so they fold
+/// into the (possibly `target_feature`-annotated) kernel bodies and
+/// vectorize with that body's instruction set.
+#[derive(Clone, Copy, Debug)]
+pub struct F32x8(pub [f32; 8]);
+
+impl F32x8 {
+    pub const ZERO: F32x8 = F32x8([0.0; 8]);
+
+    /// Load 8 lanes from the front of `s` (panics if `s.len() < 8`).
+    #[inline(always)]
+    pub fn load(s: &[f32]) -> F32x8 {
+        let mut v = [0.0f32; 8];
+        v.copy_from_slice(&s[..8]);
+        F32x8(v)
+    }
+
+    #[inline(always)]
+    pub fn splat(x: f32) -> F32x8 {
+        F32x8([x; 8])
+    }
+
+    /// `self + a·b` per lane; fused when `FMA` (see module docs).
+    #[inline(always)]
+    pub fn fma<const FMA: bool>(self, a: F32x8, b: F32x8) -> F32x8 {
+        let mut o = self.0;
+        for t in 0..8 {
+            o[t] = if FMA {
+                a.0[t].mul_add(b.0[t], o[t])
+            } else {
+                o[t] + a.0[t] * b.0[t]
+            };
+        }
+        F32x8(o)
+    }
+
+    /// `out[t] += self[t]` for the first 8 elements of `out`.
+    #[inline(always)]
+    pub fn accumulate_into(self, out: &mut [f32]) {
+        for (o, v) in out[..8].iter_mut().zip(&self.0) {
+            *o += *v;
+        }
+    }
+
+    /// Pairwise horizontal sum (same reduction tree as the old `dot8`).
+    #[inline(always)]
+    pub fn hsum(self) -> f32 {
+        let v = self.0;
+        ((v[0] + v[4]) + (v[1] + v[5])) + ((v[2] + v[6]) + (v[3] + v[7]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanes_roundtrip_and_reduce() {
+        let x = F32x8::load(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(x.hsum(), 36.0);
+        let y = F32x8::splat(2.0);
+        assert_eq!(F32x8::ZERO.fma::<false>(x, y).hsum(), 72.0);
+        assert_eq!(F32x8::ZERO.fma::<true>(x, y).hsum(), 72.0);
+        let mut out = [1.0f32; 8];
+        F32x8::splat(0.5).accumulate_into(&mut out);
+        assert!(out.iter().all(|v| *v == 1.5));
+    }
+
+    #[test]
+    fn level_is_cached_and_named() {
+        let l = level();
+        assert_eq!(l, level(), "level must be stable across calls");
+        assert!(!l.name().is_empty());
+    }
+}

@@ -8,8 +8,23 @@
 //! at ~30% zeros, and the exactly-s-sparse cores of the RIP suite):
 //! zero rows of the access pattern are skipped wholesale, so cost scales
 //! with the number of nonzeros instead of `m·k·n`.
+//!
+//! ## Threading
+//!
+//! Above the shared FLOP threshold (`tiled::DEFAULT_MIN_PAR_FLOPS`,
+//! counted in *nonzero* multiply-adds) the kernel precomputes a
+//! CSR-style nonzero index — per-row (column, value) entries plus row
+//! offsets — and fans the output rows across scoped threads exactly like
+//! the dense backends.  The index costs one O(m·k) scan, threads own
+//! disjoint output rows (deterministic for any thread count: per-row
+//! accumulation order is the index order, which is ascending k), and
+//! all-zero rows vanish from the work list entirely.  This is what lets
+//! the RIP suite's materialized cross-checks and
+//! `adapters::cosa::materialize_delta` scale across cores.  The serial
+//! small-product path is unchanged and allocation-free.
 
 use crate::linalg::shape_nn;
+use crate::linalg::tiled::{parallel_rows, plan_threads, DEFAULT_MIN_PAR_FLOPS};
 use crate::math::matrix::Matrix;
 
 /// `a · b` where `a` is sparse (entries exactly 0.0 are skipped).
@@ -22,10 +37,72 @@ pub fn gemm_sparse_left(a: &Matrix, b: &Matrix) -> Matrix {
 }
 
 /// In-place variant of [`gemm_sparse_left`]; fully overwrites `out`.
+/// Threads above the FLOP threshold using the process-wide thread
+/// setting (`COSA_THREADS` / `[compute] threads`; 0 = auto).
 pub fn gemm_sparse_left_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
+    let threads = crate::linalg::current().1;
+    sparse_left_run(a, b, out, threads, DEFAULT_MIN_PAR_FLOPS);
+}
+
+/// Worker with explicit thread/threshold knobs (tests force the
+/// threaded path through this).
+pub(crate) fn sparse_left_run(a: &Matrix, b: &Matrix, out: &mut Matrix,
+                              threads: usize, min_par_flops: usize) {
     shape_nn(a, b, out);
     let (m, k, c) = (a.rows, a.cols, b.cols);
     out.data.fill(0.0);
+    if m == 0 || k == 0 || c == 0 {
+        return;
+    }
+    // Cheap gate first: if even the *dense* muladd bound stays serial,
+    // skip the nnz-count scan entirely — small products keep the
+    // original single-pass, allocation-free path.
+    if plan_threads(threads, min_par_flops, m, m * k * c) <= 1 {
+        serial_skip(a, b, out, m, k, c);
+        return;
+    }
+    let nnz = a.data.iter().filter(|v| **v != 0.0).count();
+    let nt = plan_threads(threads, min_par_flops, m, nnz * c);
+    if nt <= 1 {
+        serial_skip(a, b, out, m, k, c);
+        return;
+    }
+
+    // CSR-style nonzero index: entries[row_ptr[i]..row_ptr[i+1]] are the
+    // (col, val) pairs of row i in ascending-k order.  Built per call —
+    // the O(nnz) build is amortized against the O(nnz·c) kernel (c is
+    // ≥ hundreds on every threaded-size call site), and the (u32, f32)
+    // entries don't fit the f32 Workspace pools.
+    let mut row_ptr = Vec::with_capacity(m + 1);
+    let mut entries: Vec<(u32, f32)> = Vec::with_capacity(nnz);
+    row_ptr.push(0usize);
+    for i in 0..m {
+        for (kk, av) in a.data[i * k..(i + 1) * k].iter().enumerate() {
+            if *av != 0.0 {
+                entries.push((kk as u32, *av));
+            }
+        }
+        row_ptr.push(entries.len());
+    }
+
+    let bd = &b.data;
+    let (rp, en) = (&row_ptr, &entries);
+    parallel_rows(&mut out.data, m, c, nt, |row0, chunk| {
+        for (i, orow) in chunk.chunks_mut(c).enumerate() {
+            let row = row0 + i;
+            for &(kk, av) in &en[rp[row]..rp[row + 1]] {
+                let brow = &bd[kk as usize * c..(kk as usize + 1) * c];
+                for (o, bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    });
+}
+
+/// The original serial per-entry skip loop (allocation-free).
+fn serial_skip(a: &Matrix, b: &Matrix, out: &mut Matrix, m: usize,
+               k: usize, c: usize) {
     for i in 0..m {
         let arow = &a.data[i * k..(i + 1) * k];
         let orow = &mut out.data[i * c..(i + 1) * c];

@@ -17,6 +17,12 @@
 //! reference backend (bitwise-identical results); the NT kernel's
 //! unrolled dot reassociates the sum, agreeing elementwise within
 //! standard f32 tolerance (property-tested at 1e-4 in `linalg::tests`).
+//!
+//! This backend is deliberately kept as-is: it is the mid-tier baseline
+//! that [`super::Packed`] (packed panels + explicit SIMD) is benchmarked
+//! against, and the regression anchor in `BENCH_baseline.json`.  Its
+//! threading helpers ([`plan_threads`], [`parallel_rows`]) are shared by
+//! the packed and sparse kernels.
 
 use crate::linalg::{shape_nn, shape_nt, shape_tn, Backend};
 use crate::math::matrix::Matrix;
@@ -48,25 +54,34 @@ impl Tiled {
     }
 
     fn thread_count(&self, rows: usize, muladds: usize) -> usize {
-        if muladds < self.min_par_flops || rows == 0 {
-            return 1;
-        }
-        let t = if self.threads == 0 {
-            std::thread::available_parallelism()
-                .map(|n| n.get())
-                .unwrap_or(1)
-                .min(MAX_AUTO_THREADS)
-        } else {
-            self.threads
-        };
-        t.clamp(1, rows)
+        plan_threads(self.threads, self.min_par_flops, rows, muladds)
     }
+}
+
+/// Worker-thread count for a product of `muladds` multiply-adds over
+/// `rows` output rows — shared by `Tiled`, `Packed` and the sparse-left
+/// kernel so every backend applies the same serial threshold and
+/// auto-detection cap.
+pub(crate) fn plan_threads(threads: usize, min_par_flops: usize,
+                           rows: usize, muladds: usize) -> usize {
+    if muladds < min_par_flops || rows == 0 {
+        return 1;
+    }
+    let t = if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(MAX_AUTO_THREADS)
+    } else {
+        threads
+    };
+    t.clamp(1, rows)
 }
 
 /// Run `f(first_row, row_chunk)` over disjoint chunks of `rows` output
 /// rows (each `cols` wide), on `nthreads` scoped threads.
-fn parallel_rows<F>(out: &mut [f32], rows: usize, cols: usize,
-                    nthreads: usize, f: F)
+pub(crate) fn parallel_rows<F>(out: &mut [f32], rows: usize, cols: usize,
+                               nthreads: usize, f: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
 {
@@ -218,12 +233,5 @@ impl Backend for Tiled {
             let rows_here = chunk.len() / n;
             tn_block(ad, bd, chunk, row0, rows_here, mo, k, n);
         });
-    }
-
-    fn axpy(&self, alpha: f32, x: &[f32], y: &mut [f32]) {
-        assert_eq!(x.len(), y.len(), "axpy length mismatch");
-        for (yv, xv) in y.iter_mut().zip(x) {
-            *yv += alpha * xv;
-        }
     }
 }

@@ -4,7 +4,9 @@
 //!
 //! * [`Workspace::take`] returns a **zeroed** `Vec<f32>` of the requested
 //!   length, reusing a pooled allocation whenever one with sufficient
-//!   capacity exists; [`Workspace::recycle`] returns a buffer to the
+//!   capacity exists ([`Workspace::take_scratch`] is the non-zeroing
+//!   variant for callers that overwrite every element, e.g. panel
+//!   packing); [`Workspace::recycle`] returns a buffer to the
 //!   pool.  With a fixed set of shapes per iteration (the training-step
 //!   case), every `take` after the first iteration is a reuse — the
 //!   [`Workspace::fresh_allocs`] counter stops moving, which is exactly
@@ -43,11 +45,10 @@ impl Workspace {
         self.pool.len()
     }
 
-    /// A zeroed buffer of length `len`, reusing pooled capacity if any
-    /// buffer is large enough.  Best-fit (smallest sufficient capacity)
-    /// so a repeating request sequence reaches a deterministic
-    /// steady-state assignment and stays allocation-free.
-    pub fn take(&mut self, len: usize) -> Vec<f32> {
+    /// Best-fit pooled buffer with capacity ≥ `len` (smallest sufficient
+    /// capacity, so a repeating request sequence reaches a deterministic
+    /// steady-state assignment and stays allocation-free).
+    fn take_pooled(&mut self, len: usize) -> Option<Vec<f32>> {
         let best = self
             .pool
             .iter()
@@ -55,10 +56,32 @@ impl Workspace {
             .filter(|(_, b)| b.capacity() >= len)
             .min_by_key(|(_, b)| b.capacity())
             .map(|(i, _)| i);
-        if let Some(i) = best {
-            let mut buf = self.pool.swap_remove(i);
+        best.map(|i| self.pool.swap_remove(i))
+    }
+
+    /// A zeroed buffer of length `len`, reusing pooled capacity if any
+    /// buffer is large enough.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        if let Some(mut buf) = self.take_pooled(len) {
             buf.clear();
             buf.resize(len, 0.0);
+            return buf;
+        }
+        self.fresh_allocs += 1;
+        vec![0.0; len]
+    }
+
+    /// A length-`len` buffer with **unspecified contents** (stale values
+    /// from a previous use), for callers that overwrite every element
+    /// anyway — panel packing uses this to skip `take`'s O(len) zeroing
+    /// pass on the GEMM hot path.
+    pub fn take_scratch(&mut self, len: usize) -> Vec<f32> {
+        if let Some(mut buf) = self.take_pooled(len) {
+            if buf.len() >= len {
+                buf.truncate(len);
+            } else {
+                buf.resize(len, 0.0); // only the grown tail is written
+            }
             return buf;
         }
         self.fresh_allocs += 1;

@@ -126,8 +126,9 @@ cosa-repro — CoSA (Compressed Sensing-Based Adaptation) reproduction
 USAGE: cosa-repro <subcommand> [flags]
 
   train   --config <toml> | --artifact <name> --task <id> [--steps N --lr F]
-          [--backend auto|reference|tiled --threads N]   host linalg backend
-          (env: COSA_BACKEND / COSA_THREADS override)
+          [--backend auto|reference|tiled|packed --threads N]
+          host linalg backend (auto resolves to packed; env
+          COSA_BACKEND / COSA_THREADS / COSA_SIMD=scalar override)
   eval    --ckpt <path> [--task <id>]
   exp     <id>         one of: table1 table2 table3 table4 table5 table6
                        table7 table8 fig2 fig3 ystruct

@@ -144,6 +144,18 @@ pub fn rip_constant(
     }
 }
 
+/// Direct isometry ratio for an explicitly materialized core:
+/// `‖L·Y·R‖²_F / ‖Y‖²_F / (mn)` — the slow-path cross-check of the Gram
+/// expansion (used by the suite's validation tests and Fig 4 sanity
+/// lanes).  `Y` is an s-sparse core, so the first product goes through
+/// the threaded sparse-left kernel (`linalg::sparse`): zero rows drop
+/// out of the work list and large cross-checks scale across cores.
+pub fn direct_isometry_ratio(l: &Matrix, r: &Matrix, y: &Matrix) -> f64 {
+    let yr = linalg::sparse::gemm_sparse_left(y, r);
+    let lyr = linalg::gemm(l, &yr);
+    lyr.frobenius_sq() / y.frobenius_sq() / (l.rows * r.cols) as f64
+}
+
 /// Repeat `rip_constant` over `trials` independent (L, R) draws and return
 /// (mean δ, std δ) — the ± column of Table 4.
 pub fn rip_constant_trials(
@@ -226,10 +238,7 @@ mod tests {
                 rm.set(i, j, *v);
             }
         }
-        let lyr = l.matmul(&y).matmul(&rm);
-        let direct = lyr.frobenius_sq()
-            / y.frobenius_sq()
-            / (setup.m * setup.n) as f64;
+        let direct = direct_isometry_ratio(&l, &rm, &y);
         assert!(
             (ratio - direct).abs() / direct < 1e-3,
             "expansion {ratio} vs direct {direct}"

@@ -24,11 +24,21 @@ pub struct Checkpoint {
 
 const MAGIC: &[u8; 4] = b"COSA";
 
+/// Element count of a shape.  The empty shape is a scalar (1 element,
+/// the numpy convention); any zero dimension means zero elements.
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
 impl Checkpoint {
-    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
+    /// The serialized JSON header — shared by `save` and `size_bytes` so
+    /// storage accounting always matches the bytes actually written.
+    ///
+    /// `adapter_seed` is serialized as a decimal *string*: the JSON
+    /// number path goes through f64, which corrupts seeds ≥ 2⁵³ — and a
+    /// corrupted seed silently regenerates different L/R projections,
+    /// the one thing §4.1 requires to be bit-stable.
+    fn header_json(&self) -> String {
         let names: Vec<Json> = self
             .tensors
             .iter()
@@ -40,15 +50,32 @@ impl Checkpoint {
                 ])
             })
             .collect();
-        let header = obj(vec![
+        obj(vec![
             ("method", Json::Str(self.method.clone())),
-            ("adapter_seed", Json::from(self.adapter_seed as usize)),
+            ("adapter_seed", Json::Str(self.adapter_seed.to_string())),
             ("artifact", Json::Str(self.artifact.clone())),
             ("step", Json::from(self.step as usize)),
             ("tensors", Json::Arr(names)),
         ])
-        .to_string();
+        .to_string()
+    }
 
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        // Shape/value agreement is checked before any bytes hit disk:
+        // the blob section has no per-tensor framing, so a mismatched
+        // tensor would silently misalign every blob after it on load.
+        for (name, (shape, vals)) in &self.tensors {
+            anyhow::ensure!(
+                vals.len() == numel(shape),
+                "tensor `{name}`: {} values for shape {shape:?} \
+                 (expect {})",
+                vals.len(), numel(shape)
+            );
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let header = self.header_json();
         let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
         f.write_all(MAGIC)?;
         f.write_all(&(header.len() as u32).to_le_bytes())?;
@@ -58,6 +85,9 @@ impl Checkpoint {
                 f.write_all(&v.to_le_bytes())?;
             }
         }
+        // Surface buffered-write failures (full disk) instead of letting
+        // BufWriter's drop swallow them after reporting Ok.
+        f.flush()?;
         Ok(())
     }
 
@@ -82,7 +112,10 @@ impl Checkpoint {
                 .iter()
                 .filter_map(|v| v.as_usize())
                 .collect();
-            let n: usize = shape.iter().product::<usize>().max(1);
+            // Exactly numel(shape) floats: a zero-element tensor (any 0
+            // dim) owns zero blob bytes, matching what `save` wrote —
+            // over-reading here would misalign every later tensor.
+            let n: usize = numel(&shape);
             let mut bytes = vec![0u8; n * 4];
             f.read_exact(&mut bytes)?;
             let vals: Vec<f32> = bytes
@@ -91,20 +124,32 @@ impl Checkpoint {
                 .collect();
             tensors.insert(name, (shape, vals));
         }
+        // Decimal-string seed (current format), with a fallback for
+        // pre-fix checkpoints that stored a JSON number.
+        let seed_field = j.req("adapter_seed")?;
+        let adapter_seed = match seed_field.as_str() {
+            Some(s) => s.parse::<u64>().map_err(|e| {
+                anyhow::anyhow!("bad adapter_seed `{s}`: {e}")
+            })?,
+            None => seed_field.as_i64().unwrap_or(0) as u64,
+        };
         Ok(Checkpoint {
             method: j.req("method")?.as_str().unwrap_or("").to_string(),
-            adapter_seed: j.req("adapter_seed")?.as_i64().unwrap_or(0) as u64,
+            adapter_seed,
             artifact: j.req("artifact")?.as_str().unwrap_or("").to_string(),
             step: j.req("step")?.as_i64().unwrap_or(0) as u64,
             tensors,
         })
     }
 
-    /// Bytes on disk (Figure 3 storage accounting cross-check).
+    /// Bytes on disk (Figure 3 storage accounting cross-check): magic +
+    /// length word + the actual serialized header + blobs.  The header
+    /// grows linearly with tensor count, so a fixed fudge constant would
+    /// understate multi-layer adapters.
     pub fn size_bytes(&self) -> usize {
         let data: usize =
             self.tensors.values().map(|(_, v)| v.len() * 4).sum();
-        data + 64 // magic + header order-of-magnitude
+        MAGIC.len() + 4 + self.header_json().len() + data
     }
 }
 
@@ -157,7 +202,79 @@ mod tests {
     fn cosa_checkpoint_is_core_plus_seed_sized() {
         let ck = sample();
         let params: usize = ck.tensors.values().map(|(_, v)| v.len()).sum();
-        assert!(ck.size_bytes() < params * 4 + 128,
+        assert!(ck.size_bytes() < params * 4 + 512,
                 "no hidden projection storage");
+    }
+
+    #[test]
+    fn size_bytes_matches_bytes_on_disk() {
+        let dir = std::env::temp_dir().join("cosa_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sized.cosa");
+        // many tensors so a fixed header fudge would visibly understate
+        let mut ck = sample();
+        for layer in 0..24 {
+            ck.tensors.insert(format!("adp.{layer}.w_long_name.y"),
+                              (vec![3, 5], vec![0.25f32; 15]));
+        }
+        ck.save(&path).unwrap();
+        let on_disk = std::fs::metadata(&path).unwrap().len() as usize;
+        assert_eq!(ck.size_bytes(), on_disk, "Fig 3 accounting drift");
+    }
+
+    #[test]
+    fn zero_element_tensors_roundtrip_without_misalignment() {
+        let dir = std::env::temp_dir().join("cosa_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("zero_elem.cosa");
+        let mut tensors = BTreeMap::new();
+        // zero-element tensors sorted *before* a real one: any spurious
+        // blob bytes for them would shift the real tensor's values
+        tensors.insert("a.empty_rows.y".to_string(),
+                       (vec![0, 5], Vec::new()));
+        tensors.insert("b.empty_cols.y".to_string(),
+                       (vec![3, 0], Vec::new()));
+        tensors.insert("c.real.y".to_string(),
+                       (vec![2, 2], vec![1.0f32, -2.0, 3.0, -4.0]));
+        let ck = Checkpoint {
+            method: "cosa".into(),
+            adapter_seed: 7,
+            artifact: "tiny-lm_cosa".into(),
+            step: 1,
+            tensors,
+        };
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.tensors["a.empty_rows.y"].0, vec![0, 5]);
+        assert!(back.tensors["a.empty_rows.y"].1.is_empty());
+        assert!(back.tensors["b.empty_cols.y"].1.is_empty());
+        assert_eq!(back.tensors["c.real.y"].1,
+                   vec![1.0f32, -2.0, 3.0, -4.0],
+                   "blob misaligned by zero-element tensor");
+    }
+
+    #[test]
+    fn adapter_seed_roundtrips_at_u64_max() {
+        let dir = std::env::temp_dir().join("cosa_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("big_seed.cosa");
+        // seeds ≥ 2⁶³ corrupted under the old numeric (f64) round-trip
+        for seed in [u64::MAX, 1u64 << 63, (1u64 << 53) + 1, 0] {
+            let mut ck = sample();
+            ck.adapter_seed = seed;
+            ck.save(&path).unwrap();
+            let back = Checkpoint::load(&path).unwrap();
+            assert_eq!(back.adapter_seed, seed, "seed {seed} corrupted");
+        }
+    }
+
+    #[test]
+    fn save_rejects_shape_value_mismatch() {
+        let dir = std::env::temp_dir().join("cosa_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mismatch.cosa");
+        let mut ck = sample();
+        ck.tensors.insert("bad.y".to_string(), (vec![4, 4], vec![0.0; 3]));
+        assert!(ck.save(&path).is_err(), "mismatched tensor must not save");
     }
 }

@@ -9,7 +9,10 @@
 //! CoSA core: forward + analytic VJP + update, with every intermediate
 //! drawn from a `linalg::Workspace` so the steady-state step performs
 //! zero matmul-output allocations (asserted in this module's tests and
-//! measured by `benches/e2e_step.rs`).
+//! measured by `benches/e2e_step.rs`).  The packed backend extends the
+//! same contract to its B-panel packing scratch (thread-local pool), so
+//! pinning `[compute] backend = "packed"` keeps the step allocation-free
+//! too.
 
 pub mod checkpoint;
 pub mod metrics;

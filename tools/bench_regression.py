@@ -1,0 +1,162 @@
+#!/usr/bin/env python3
+"""Bench regression gate for the linalg kernels.
+
+Compares the `linalg_kernels` section of a freshly generated
+`BENCH_linalg.json` (written by `cargo bench --bench linalg_kernels`)
+against the committed `BENCH_baseline.json` and fails on a >20%
+per-kernel GFLOP/s regression.
+
+Two kinds of checks:
+
+1. **Absolute floors** — each baseline row's `gflops` value.  The
+   committed numbers are deliberately *conservative floors* (well below
+   what a healthy run produces on any recent x86_64 machine), because CI
+   runners vary wildly; they exist to catch order-of-magnitude
+   regressions (a kernel silently falling back to scalar loops, a
+   packing bug exploding the memory traffic), not single-digit drift.
+   Regenerate with `--update` on a representative machine to tighten.
+
+2. **Relative gate** (machine-independent): within the fresh run,
+   single-thread packed must beat single-thread tiled by >= MIN_RATIO on
+   the NN and NT kernels at every measured shape.  The acceptance target
+   is 1.5x; the gate uses 1.2x to absorb runner noise.
+
+Exit codes: 0 ok / skipped (no fresh file), 1 regression detected.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+SECTION = "linalg_kernels"
+TOLERANCE = 0.20   # max allowed drop below the baseline gflops
+MIN_RATIO = 1.2    # fresh-run packed/tiled single-thread NN+NT floor
+
+KEY_FIELDS = ("kernel", "backend", "threads", "m", "k", "n")
+
+
+def row_key(row):
+    return tuple(row.get(f) for f in KEY_FIELDS)
+
+
+def load_rows(path):
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc.get(SECTION, [])
+    return {row_key(r): r for r in rows if "gflops" in r}
+
+
+def find_fresh(candidates):
+    for p in candidates:
+        if os.path.exists(p):
+            return p
+    return None
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--fresh", default=None,
+                    help="fresh BENCH_linalg.json (default: search "
+                         "rust/BENCH_linalg.json, BENCH_linalg.json)")
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE)
+    ap.add_argument("--min-ratio", type=float, default=MIN_RATIO)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the fresh run")
+    args = ap.parse_args()
+
+    fresh_path = args.fresh or find_fresh(
+        ["rust/BENCH_linalg.json", "BENCH_linalg.json"])
+    if fresh_path is None or not os.path.exists(fresh_path):
+        print("bench_regression: no fresh BENCH_linalg.json found — "
+              "skipping (run `cargo bench --bench linalg_kernels` first)")
+        return 0
+
+    fresh = load_rows(fresh_path)
+    if not fresh:
+        print(f"bench_regression: {fresh_path} has no `{SECTION}` rows — "
+              "skipping")
+        return 0
+
+    if args.update:
+        with open(fresh_path) as f:
+            section = json.load(f).get(SECTION, [])
+        baseline_doc = {}
+        if os.path.exists(args.baseline):
+            with open(args.baseline) as f:
+                baseline_doc = json.load(f)
+        baseline_doc[SECTION] = section
+        with open(args.baseline, "w") as f:
+            json.dump(baseline_doc, f, indent=1, sort_keys=True)
+        print(f"bench_regression: baseline updated from {fresh_path} "
+              f"({len(section)} rows)")
+        return 0
+
+    failures = []
+
+    # 1. absolute floors vs the committed baseline
+    if os.path.exists(args.baseline):
+        baseline = load_rows(args.baseline)
+        compared = 0
+        for key, base_row in sorted(baseline.items()):
+            fresh_row = fresh.get(key)
+            if fresh_row is None:
+                print(f"  note: baseline row {key} missing from fresh run")
+                continue
+            compared += 1
+            floor = base_row["gflops"] * (1.0 - args.tolerance)
+            got = fresh_row["gflops"]
+            tag = "/".join(str(k) for k in key)
+            if got < floor:
+                failures.append(
+                    f"{tag}: {got:.2f} GFLOP/s < floor {floor:.2f} "
+                    f"(baseline {base_row['gflops']:.2f} -{args.tolerance:.0%})")
+            else:
+                print(f"  ok: {tag}: {got:.2f} GFLOP/s "
+                      f"(floor {floor:.2f})")
+        print(f"bench_regression: {compared} rows compared against "
+              f"{args.baseline}")
+    else:
+        print(f"bench_regression: no {args.baseline} — absolute check "
+              "skipped (generate one with --update)")
+
+    # 2. machine-independent relative gate: packed vs tiled, 1 thread
+    relative_pairs = 0
+    for key, tiled_row in sorted(fresh.items()):
+        kernel, backend, threads = key[0], key[1], key[2]
+        if backend != "tiled" or threads != 1 or kernel not in ("nn", "nt"):
+            continue
+        packed_key = (kernel, "packed") + key[2:]
+        packed_row = fresh.get(packed_key)
+        if packed_row is None or tiled_row["gflops"] <= 0:
+            continue
+        relative_pairs += 1
+        ratio = packed_row["gflops"] / tiled_row["gflops"]
+        shape = "x".join(str(k) for k in key[3:])
+        line = (f"{kernel} {shape}: packed/tiled = {ratio:.2f}x "
+                f"({packed_row['gflops']:.2f} vs "
+                f"{tiled_row['gflops']:.2f} GFLOP/s)")
+        if ratio < args.min_ratio:
+            failures.append(f"{line} — below the {args.min_ratio}x gate")
+        else:
+            print(f"  ok: {line}")
+    if relative_pairs == 0:
+        # A vacuous gate is a disabled gate: if a backend/field rename
+        # leaves zero comparable packed/tiled pairs, fail loudly instead
+        # of silently no longer enforcing the acceptance criterion.
+        failures.append(
+            "relative gate compared 0 packed-vs-tiled single-thread "
+            "nn/nt pairs — bench row keys no longer match this script")
+
+    if failures:
+        print("\nbench_regression: FAIL")
+        for f in failures:
+            print(f"  regression: {f}")
+        return 1
+    print("\nbench_regression: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

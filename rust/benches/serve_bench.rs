@@ -1,0 +1,54 @@
+//! Bench: multi-adapter serving throughput and latency — the CI-gated
+//! `serving` section of `BENCH_linalg.json`.
+//!
+//! Two scenarios:
+//!
+//! 1. **acceptance** — 64 adapters, Zipf 1.1 popularity, firehose
+//!    injection.  The `batched_vs_sequential` field is the acceptance
+//!    metric (target 1.5x; `tools/bench_regression.py` gates on it),
+//!    and the throughput / p99 rows feed the conservative `serving`
+//!    floors in `BENCH_baseline.json`.
+//! 2. **paced** — the same fleet at a modest arrival rate, so the
+//!    latency percentiles reflect scheduling delay rather than pure
+//!    queue drain.
+//!
+//! Knobs come from the default `[serve]` table; `COSA_SERVE_*` env
+//! overrides apply (so a pinned CI runner can pin workers).
+
+use cosa::serve::bench::{run, ServeBenchOpts};
+use cosa::util::bench::write_bench_json;
+use cosa::util::json::Json;
+
+fn main() {
+    println!("== serve_bench: multi-adapter serving engine ==");
+    let mut rows: Vec<Json> = Vec::new();
+
+    // Scenario 1: the acceptance workload (64 adapters, Zipf 1.1).
+    let acceptance = ServeBenchOpts {
+        cfg: ServeBenchOpts::default().cfg.env_overridden(),
+        ..ServeBenchOpts::default()
+    };
+    match run(&acceptance) {
+        Ok(report) => {
+            report.print();
+            rows.push(report.to_json());
+        }
+        Err(e) => eprintln!("serve_bench acceptance scenario failed: {e:#}"),
+    }
+
+    // Scenario 2: paced arrivals — latency under schedule, not drain.
+    let paced = ServeBenchOpts {
+        requests: 512,
+        rate: 2000.0,
+        ..acceptance.clone()
+    };
+    match run(&paced) {
+        Ok(report) => {
+            report.print();
+            rows.push(report.to_json());
+        }
+        Err(e) => eprintln!("serve_bench paced scenario failed: {e:#}"),
+    }
+
+    write_bench_json("serving", Json::Arr(rows));
+}

@@ -86,6 +86,97 @@ impl ComputeConfig {
     }
 }
 
+/// Multi-adapter serving engine knobs (TOML table `[serve]`; the
+/// `COSA_SERVE_*` env vars override via [`ServeConfig::env_overridden`]).
+/// Consumed by `serve::Server` and the `serve-bench` CLI subcommand.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Byte budget for the regenerated-projection LRU, in MiB.
+    pub cache_mb: f64,
+    /// Max rows batched per adapter before a flush.
+    pub max_batch: usize,
+    /// Max time a partial batch waits before flushing, in microseconds.
+    pub max_wait_us: u64,
+    /// Worker threads; 0 = auto (same cap as the compute backends).
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            cache_mb: 64.0,
+            max_batch: 16,
+            max_wait_us: 200,
+            workers: 0,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Apply the `COSA_SERVE_*` env overrides (read fresh on every call
+    /// so long-lived processes can be steered per-invocation):
+    /// `COSA_SERVE_CACHE_MB`, `COSA_SERVE_MAX_BATCH`,
+    /// `COSA_SERVE_MAX_WAIT_US`, `COSA_SERVE_WORKERS`.  Unparseable
+    /// values warn and fall back to the config value, mirroring the
+    /// `COSA_BACKEND` / `COSA_THREADS` behavior.
+    pub fn env_overridden(&self) -> ServeConfig {
+        fn env_num<T: std::str::FromStr>(key: &str, fallback: T) -> T {
+            match std::env::var(key) {
+                Ok(s) => match s.parse::<T>() {
+                    Ok(v) => v,
+                    Err(_) => {
+                        eprintln!(
+                            "warning: ignoring {key}=`{s}` (not a valid \
+                             value)"
+                        );
+                        fallback
+                    }
+                },
+                Err(_) => fallback,
+            }
+        }
+        let mut out = self.clone();
+        out.cache_mb = env_num("COSA_SERVE_CACHE_MB", out.cache_mb);
+        out.max_batch = env_num("COSA_SERVE_MAX_BATCH", out.max_batch);
+        out.max_wait_us = env_num("COSA_SERVE_MAX_WAIT_US", out.max_wait_us);
+        out.workers = env_num("COSA_SERVE_WORKERS", out.workers);
+        if out.max_batch == 0 {
+            eprintln!("warning: COSA_SERVE_MAX_BATCH=0 is invalid; using 1");
+            out.max_batch = 1;
+        }
+        if out.cache_mb.is_nan() || out.cache_mb < 0.0 {
+            // Mirror the TOML path's `cache_mb >= 0` validation instead
+            // of letting a negative or NaN value silently zero the
+            // cache (parsing "NaN" as f64 succeeds, so a plain `< 0.0`
+            // test alone would let it through).
+            eprintln!(
+                "warning: COSA_SERVE_CACHE_MB={} is not a valid budget; \
+                 using {}",
+                out.cache_mb, self.cache_mb
+            );
+            out.cache_mb = self.cache_mb;
+        }
+        out
+    }
+
+    /// Fill auto fields from the preset's hint (`presets::serve_hint`),
+    /// mirroring [`ComputeConfig::resolved`].  For deployments that
+    /// serve a *model preset's own site* — `serve-bench` deliberately
+    /// does not call this, because its synthetic site has nothing to do
+    /// with any preset's model size (see `cmd_serve_bench`).
+    pub fn resolved(&self, preset: &str) -> ServeConfig {
+        let hint_workers = presets::serve_hint(preset);
+        ServeConfig {
+            workers: if self.workers == 0 {
+                hint_workers
+            } else {
+                self.workers
+            },
+            ..self.clone()
+        }
+    }
+}
+
 /// A full run description.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -97,6 +188,7 @@ pub struct RunConfig {
     pub task: String,
     pub train: TrainConfig,
     pub compute: ComputeConfig,
+    pub serve: ServeConfig,
     pub base_seed: u64,
     pub adapter_seed: u64,
     pub data_seed: u64,
@@ -111,6 +203,7 @@ impl Default for RunConfig {
             task: "math".into(),
             train: TrainConfig::default(),
             compute: ComputeConfig::default(),
+            serve: ServeConfig::default(),
             base_seed: 42,
             adapter_seed: 1234,
             data_seed: 7,
@@ -159,6 +252,24 @@ impl RunConfig {
                         "compute.threads must be >= 0 (got {threads}; \
                          use 0 for auto)");
         c.threads = threads as usize;
+
+        let s = &mut cfg.serve;
+        s.cache_mb = doc.f64_or("serve.cache_mb", s.cache_mb);
+        anyhow::ensure!(s.cache_mb >= 0.0,
+                        "serve.cache_mb must be >= 0 (got {})", s.cache_mb);
+        let max_batch = doc.i64_or("serve.max_batch", s.max_batch as i64);
+        anyhow::ensure!(max_batch >= 1,
+                        "serve.max_batch must be >= 1 (got {max_batch})");
+        s.max_batch = max_batch as usize;
+        let max_wait = doc.i64_or("serve.max_wait_us", s.max_wait_us as i64);
+        anyhow::ensure!(max_wait >= 0,
+                        "serve.max_wait_us must be >= 0 (got {max_wait})");
+        s.max_wait_us = max_wait as u64;
+        let workers = doc.i64_or("serve.workers", s.workers as i64);
+        anyhow::ensure!(workers >= 0,
+                        "serve.workers must be >= 0 (got {workers}; \
+                         use 0 for auto)");
+        s.workers = workers as usize;
         Ok(cfg)
     }
 
@@ -228,6 +339,56 @@ data = 3
         // defaults stay "auto"/0
         let d = RunConfig::from_toml("").unwrap();
         assert_eq!(d.compute, ComputeConfig::default());
+    }
+
+    #[test]
+    fn serve_table_parses_and_validates() {
+        let cfg = RunConfig::from_toml(
+            "[serve]\ncache_mb = 16.0\nmax_batch = 8\nmax_wait_us = 500\n\
+             workers = 3",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.cache_mb, 16.0);
+        assert_eq!(cfg.serve.max_batch, 8);
+        assert_eq!(cfg.serve.max_wait_us, 500);
+        assert_eq!(cfg.serve.workers, 3);
+        assert!(RunConfig::from_toml("[serve]\nmax_batch = 0").is_err());
+        assert!(RunConfig::from_toml("[serve]\nworkers = -1").is_err());
+        assert!(RunConfig::from_toml("[serve]\ncache_mb = -2.0").is_err());
+        // defaults when the table is absent
+        let d = RunConfig::from_toml("").unwrap();
+        assert_eq!(d.serve, ServeConfig::default());
+    }
+
+    #[test]
+    fn serve_env_overrides_win_and_warn_on_garbage() {
+        // Unique var values so a parallel test reading the same keys is
+        // the only possible interference (none does today).
+        std::env::set_var("COSA_SERVE_MAX_BATCH", "9");
+        std::env::set_var("COSA_SERVE_MAX_WAIT_US", "not-a-number");
+        std::env::set_var("COSA_SERVE_CACHE_MB", "-3.0");
+        let cfg = ServeConfig::default().env_overridden();
+        assert_eq!(cfg.max_batch, 9, "env wins over the default");
+        assert_eq!(cfg.max_wait_us, ServeConfig::default().max_wait_us,
+                   "garbage env value falls back");
+        assert_eq!(cfg.cache_mb, ServeConfig::default().cache_mb,
+                   "negative cache budget falls back like the TOML path");
+        std::env::remove_var("COSA_SERVE_MAX_BATCH");
+        std::env::remove_var("COSA_SERVE_MAX_WAIT_US");
+        std::env::remove_var("COSA_SERVE_CACHE_MB");
+        let cfg = ServeConfig::default().env_overridden();
+        assert_eq!(cfg, ServeConfig::default());
+    }
+
+    #[test]
+    fn serve_resolution_respects_explicit_settings() {
+        let auto = ServeConfig::default();
+        assert_eq!(auto.resolved("tiny-lm").workers, 1,
+                   "tiny preset hints one worker");
+        assert_eq!(auto.resolved("small-lm").workers, 0,
+                   "larger presets stay auto");
+        let explicit = ServeConfig { workers: 5, ..ServeConfig::default() };
+        assert_eq!(explicit.resolved("tiny-lm").workers, 5);
     }
 
     #[test]

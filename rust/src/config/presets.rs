@@ -57,6 +57,19 @@ pub fn compute_hint(preset: &str) -> (&'static str, usize) {
     }
 }
 
+/// Serving-engine worker hint per model preset, applied when the run
+/// config leaves `[serve] workers` at 0-auto: tiny presets serve
+/// single-worker (their per-batch products sit below any useful
+/// parallelism), everything larger stays 0 so `serve::Server` resolves
+/// the count at spawn time via the shared `plan_threads` cap.
+pub fn serve_hint(preset: &str) -> usize {
+    if preset.starts_with("tiny") {
+        1
+    } else {
+        0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -34,6 +34,19 @@
 //! `COSA_SIMD` env overrides — see the `linalg` module docs for the
 //! exact rules.
 //!
+//! ## Multi-adapter serving (`serve`)
+//!
+//! The paper's §4.1 deployment story — an adapter is only the compact
+//! core plus a seed that regenerates its projections — scales to *many
+//! adapters per base model*: the [`serve`] subsystem provides an
+//! adapter registry (checkpoints loaded by name, regenerated `L`/`R`
+//! cached in a byte-budgeted LRU, hot load/evict with bit-identical
+//! re-materialization), a batched request scheduler (per-adapter
+//! batches under a max-batch/max-wait policy on a Workspace-backed
+//! worker pool) and the `serve-bench` workload driver whose `serving`
+//! report section CI gates.  Knobs live in the `[serve]` config table
+//! (`config::ServeConfig`) with `COSA_SERVE_*` env overrides.
+//!
 //! ## Offline builds
 //!
 //! The workspace compiles with no network: `anyhow` and `xla` resolve to
@@ -50,6 +63,7 @@ pub mod linalg;
 pub mod math;
 pub mod rip;
 pub mod runtime;
+pub mod serve;
 pub mod train;
 pub mod util;
 

@@ -1,17 +1,19 @@
 //! `cosa-repro` — launcher CLI for the CoSA reproduction framework.
 //!
 //! Subcommands:
-//!   train   --config <toml> [--steps N]       run one fine-tuning job
-//!   eval    --ckpt <path> --task <id>         score a stored adapter
-//!   exp     <table1|table2|...|fig2|fig3|...> regenerate a paper table
-//!   rip     [--samples N] [--trials K]        RIP validation (Table 4)
-//!   params  [--rank R --a A --b B]            cost model (Fig 3)
-//!   list                                      available artifacts
+//!   train       --config <toml> [--steps N]       run one fine-tuning job
+//!   eval        --ckpt <path> --task <id>         score a stored adapter
+//!   exp         <table1|table2|...|fig2|fig3|...> regenerate a paper table
+//!   rip         [--samples N] [--trials K]        RIP validation (Table 4)
+//!   params      [--rank R --a A --b B]            cost model (Fig 3)
+//!   serve-bench [--adapters N --requests N ...]   multi-adapter serving bench
+//!   list                                          available artifacts
 //!
 //! Examples:
 //!   cosa-repro exp table4
 //!   cosa-repro train --config configs/quickstart.toml
 //!   cosa-repro exp table2 --steps 60 --seeds 2
+//!   cosa-repro serve-bench --adapters 64 --zipf 1.1 --requests 2048
 
 use cosa::config::RunConfig;
 use cosa::runtime::executor::Runtime;
@@ -42,6 +44,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         }
         "rip" => exp::run("table4", args),
         "params" => exp::run("fig3", args),
+        "serve-bench" => cmd_serve_bench(args),
         "list" => cmd_list(),
         "" | "help" | "--help" => {
             print!("{}", HELP);
@@ -111,6 +114,61 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `serve-bench`: drive the multi-adapter serving engine under a
+/// synthetic Zipf workload and write the `serving` section of the
+/// canonical `BENCH_linalg.json`.  Knob precedence, highest first:
+/// CLI flags, `COSA_SERVE_*` env, `[serve]` config table.  The preset
+/// worker hint (`ServeConfig::resolved`) is deliberately NOT applied:
+/// it describes serving a *model preset's* site, while this bench runs
+/// its own synthetic site — pinning workers to the tiny-preset hint
+/// here would silently bench single-worker and diverge from what
+/// `cargo bench --bench serve_bench` (CI) measures.
+fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
+    use cosa::serve::bench::{run, ServeBenchOpts};
+    use cosa::serve::SiteShape;
+    use cosa::util::json::Json;
+
+    let cfg = match args.opt("config") {
+        Some(path) => RunConfig::load(path)?,
+        None => RunConfig::default(),
+    };
+    let mut serve = cfg.serve.env_overridden();
+    if let Some(v) = args.opt("batch") {
+        serve.max_batch = v.parse()?;
+        anyhow::ensure!(serve.max_batch >= 1, "--batch must be >= 1");
+    }
+    if let Some(v) = args.opt("wait-us") {
+        serve.max_wait_us = v.parse()?;
+    }
+    if let Some(v) = args.opt("workers") {
+        serve.workers = v.parse()?;
+    }
+    if let Some(v) = args.opt("cache-mb") {
+        serve.cache_mb = v.parse()?;
+        anyhow::ensure!(serve.cache_mb >= 0.0, "--cache-mb must be >= 0");
+    }
+    let defaults = ServeBenchOpts::default();
+    let opts = ServeBenchOpts {
+        adapters: args.usize("adapters", defaults.adapters),
+        requests: args.usize("requests", defaults.requests),
+        zipf: args.f64("zipf", defaults.zipf),
+        rate: args.f64("rate", defaults.rate),
+        site: SiteShape {
+            m: args.usize("site-m", defaults.site.m),
+            n: args.usize("site-n", defaults.site.n),
+        },
+        core_a: args.usize("core-a", defaults.core_a),
+        core_b: args.usize("core-b", defaults.core_b),
+        seed: args.u64("seed", defaults.seed),
+        cfg: serve,
+    };
+    let report = run(&opts)?;
+    report.print();
+    cosa::util::bench::write_bench_json("serving",
+                                        Json::Arr(vec![report.to_json()]));
+    Ok(())
+}
+
 fn cmd_list() -> anyhow::Result<()> {
     let reg = Registry::open_default()?;
     println!("{} artifacts in {}:", reg.artifacts.len(), reg.dir.display());
@@ -134,5 +192,12 @@ USAGE: cosa-repro <subcommand> [flags]
                        table7 table8 fig2 fig3 ystruct
   rip     [--samples N --trials K --seed S]     alias for `exp table4`
   params  [--rank R --a A --b B]                alias for `exp fig3`
+  serve-bench  [--adapters N --requests N --zipf S --rate RPS]
+          [--batch N --wait-us U --workers N --cache-mb F]
+          [--site-m M --site-n N --core-a A --core-b B --seed S]
+          multi-adapter serving benchmark: batched scheduler vs
+          sequential per-request forward; writes the `serving`
+          section of BENCH_linalg.json ([serve] config table and
+          COSA_SERVE_* env provide the defaults)
   list    show artifacts (build with `make artifacts`)
 ";

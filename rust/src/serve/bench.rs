@@ -1,0 +1,363 @@
+//! Synthetic open-loop serving workload — the driver behind the
+//! `serve-bench` CLI subcommand and `benches/serve_bench.rs`.
+//!
+//! The workload models the paper's deployment story at traffic shape:
+//! one base-model site, many adapters, request popularity Zipf-skewed
+//! (a few hot adapters take most of the traffic, a long tail stays
+//! cold).  Each run measures the same request sequence two ways:
+//!
+//! 1. **sequential** — one allocating `adapter_forward` per request on
+//!    the caller thread (the no-engine baseline);
+//! 2. **batched** — through the [`Server`](super::Server) scheduler,
+//!    which groups same-adapter requests into batches.
+//!
+//! Reported: wall-clock throughput for both modes, their ratio (the CI
+//! acceptance gate: batched >= 1.5x sequential at 64 adapters), p50 /
+//! p95 / p99 request latency (submit -> worker completion), mean batch
+//! occupancy and projection-cache hit statistics.  `to_json` emits one
+//! row for the `serving` section of `BENCH_linalg.json`, which
+//! `tools/bench_regression.py` gates against `BENCH_baseline.json`.
+
+use std::time::{Duration, Instant};
+
+use crate::config::ServeConfig;
+use crate::math::matrix::Matrix;
+use crate::math::rng::Pcg64;
+use crate::serve::registry::{AdapterRegistry, CacheStats, SiteShape};
+use crate::serve::scheduler::{Server, Ticket};
+use crate::util::bench::black_box;
+use crate::util::json::{obj, Json};
+
+/// Workload description.  `rate = 0` means open-loop firehose: every
+/// request is enqueued as fast as `submit` allows (the throughput
+/// measurement); a positive rate paces arrivals at `rate` requests/sec.
+#[derive(Clone, Debug)]
+pub struct ServeBenchOpts {
+    pub adapters: usize,
+    pub requests: usize,
+    /// Zipf skew exponent for adapter popularity (1.1 = acceptance).
+    pub zipf: f64,
+    /// Arrival rate in requests/sec; 0 = firehose.
+    pub rate: f64,
+    pub site: SiteShape,
+    /// Core dims shared by every synthetic adapter.
+    pub core_a: usize,
+    pub core_b: usize,
+    pub seed: u64,
+    pub cfg: ServeConfig,
+}
+
+impl Default for ServeBenchOpts {
+    fn default() -> Self {
+        ServeBenchOpts {
+            adapters: 64,
+            requests: 2048,
+            zipf: 1.1,
+            rate: 0.0,
+            site: SiteShape { m: 256, n: 256 },
+            core_a: 64,
+            core_b: 48,
+            seed: 11,
+            cfg: ServeConfig::default(),
+        }
+    }
+}
+
+/// One measured scenario (the `serving` bench row).
+#[derive(Clone, Debug)]
+pub struct ServeBenchReport {
+    pub opts: ServeBenchOpts,
+    /// Workers the server actually spawned (after auto resolution).
+    pub workers: usize,
+    pub seq_wall_s: f64,
+    pub batched_wall_s: f64,
+    pub seq_throughput_rps: f64,
+    pub throughput_rps: f64,
+    /// The acceptance metric: batched / sequential throughput.
+    pub batched_vs_sequential: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_batch_rows: f64,
+    pub cache: CacheStats,
+}
+
+impl ServeBenchReport {
+    pub fn to_json(&self) -> Json {
+        let o = &self.opts;
+        obj(vec![
+            ("adapters", o.adapters.into()),
+            ("requests", o.requests.into()),
+            ("zipf", o.zipf.into()),
+            ("rate_rps", o.rate.into()),
+            ("site_m", o.site.m.into()),
+            ("site_n", o.site.n.into()),
+            ("core_a", o.core_a.into()),
+            ("core_b", o.core_b.into()),
+            ("max_batch", o.cfg.max_batch.into()),
+            ("max_wait_us", (o.cfg.max_wait_us as usize).into()),
+            ("workers", self.workers.into()),
+            ("cache_mb", o.cfg.cache_mb.into()),
+            ("seq_wall_s", self.seq_wall_s.into()),
+            ("batched_wall_s", self.batched_wall_s.into()),
+            ("seq_throughput_rps", self.seq_throughput_rps.into()),
+            ("throughput_rps", self.throughput_rps.into()),
+            ("batched_vs_sequential", self.batched_vs_sequential.into()),
+            ("mean_ms", self.mean_ms.into()),
+            ("p50_ms", self.p50_ms.into()),
+            ("p95_ms", self.p95_ms.into()),
+            ("p99_ms", self.p99_ms.into()),
+            ("mean_batch_rows", self.mean_batch_rows.into()),
+            ("cache_hits", (self.cache.hits as usize).into()),
+            ("cache_misses", (self.cache.misses as usize).into()),
+            ("cache_evictions", (self.cache.evictions as usize).into()),
+        ])
+    }
+
+    pub fn print(&self) {
+        let o = &self.opts;
+        println!(
+            "serve[{} adapters, zipf {:.2}, {} reqs, batch<= {}, \
+             wait {}us, {} workers]",
+            o.adapters, o.zipf, o.requests, o.cfg.max_batch,
+            o.cfg.max_wait_us, self.workers
+        );
+        println!(
+            "  sequential  {:>10.0} req/s   ({:.3} s wall)",
+            self.seq_throughput_rps, self.seq_wall_s
+        );
+        println!(
+            "  batched     {:>10.0} req/s   ({:.3} s wall)  => {:.2}x",
+            self.throughput_rps, self.batched_wall_s,
+            self.batched_vs_sequential
+        );
+        println!(
+            "  latency ms  mean {:.3}  p50 {:.3}  p95 {:.3}  p99 {:.3}",
+            self.mean_ms, self.p50_ms, self.p95_ms, self.p99_ms
+        );
+        println!(
+            "  mean batch rows {:.2}   cache hits {} misses {} \
+             evictions {}",
+            self.mean_batch_rows, self.cache.hits, self.cache.misses,
+            self.cache.evictions
+        );
+    }
+}
+
+/// Zipf-over-ranks sampler: item `i` has weight `1 / (i+1)^s`.
+pub struct Zipf {
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    pub fn new(items: usize, s: f64) -> Zipf {
+        assert!(items > 0, "zipf over zero items");
+        let mut cdf = Vec::with_capacity(items);
+        let mut acc = 0.0f64;
+        for i in 0..items {
+            acc += 1.0 / ((i + 1) as f64).powf(s);
+            cdf.push(acc);
+        }
+        Zipf { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let total = *self.cdf.last().unwrap();
+        let u = rng.uniform() * total;
+        // first index whose cumulative weight exceeds u
+        self.cdf.partition_point(|&c| c <= u).min(self.cdf.len() - 1)
+    }
+}
+
+/// Nearest-rank percentile: the smallest sample with at least `p` of
+/// the distribution at or below it (`ceil(n*p)` ranks, 1-based — so
+/// p50 of [a, b] is `a`, and p99 of 100 samples is rank 99, not the
+/// single worst outlier).
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return 0.0;
+    }
+    let rank = ((sorted_ms.len() as f64) * p).ceil() as usize;
+    sorted_ms[rank.saturating_sub(1).min(sorted_ms.len() - 1)]
+}
+
+/// Rows of pre-generated activations the request loop cycles through
+/// (so input generation never dominates the measurement).
+const X_POOL: usize = 32;
+
+/// Run one scenario (see module docs).  `opts.cfg` is taken as final —
+/// apply `env_overridden()` / preset resolution at the call site.
+pub fn run(opts: &ServeBenchOpts) -> anyhow::Result<ServeBenchReport> {
+    anyhow::ensure!(opts.adapters > 0, "need at least one adapter");
+    anyhow::ensure!(opts.requests > 0, "need at least one request");
+    anyhow::ensure!(
+        opts.site.m >= 1 && opts.site.n >= 1,
+        "site must be at least 1x1 (got {}x{})",
+        opts.site.m,
+        opts.site.n
+    );
+    let (m, n) = (opts.site.m, opts.site.n);
+    let (a, b) = (opts.core_a, opts.core_b);
+    let mut rng = Pcg64::new(opts.seed);
+
+    // Registry of synthetic adapters: distinct seeds, shared site/core
+    // shape, sparse-ish cores (the trained-Y regime).
+    let budget = (opts.cfg.cache_mb * (1 << 20) as f64) as usize;
+    let mut registry = AdapterRegistry::new(opts.site, budget);
+    let mut names = Vec::with_capacity(opts.adapters);
+    for i in 0..opts.adapters {
+        let name = format!("adp{i:03}");
+        let seed = opts.seed.wrapping_add(1 + i as u64);
+        let y = Matrix::gaussian(a, b, 0.02, &mut rng);
+        registry.insert(&name, seed, 2.0, &format!("{name}.l"),
+                        &format!("{name}.r"), y)?;
+        names.push(name);
+    }
+
+    // Zipf-skewed request sequence + a small pool of activation rows.
+    let zipf = Zipf::new(opts.adapters, opts.zipf);
+    let seq: Vec<usize> =
+        (0..opts.requests).map(|_| zipf.sample(&mut rng)).collect();
+    let pool: Vec<Vec<f32>> = (0..X_POOL)
+        .map(|_| rng.normal_vec(n, 1.0))
+        .collect();
+
+    // Warm every adapter's projections once so the two timed passes see
+    // the same cache state (regeneration cost is measured by
+    // `benches/adapter_fwd.rs`, not here).
+    for name in &names {
+        let x = Matrix::from_vec(1, n, pool[0].clone());
+        black_box(registry.forward(name, &x)?);
+    }
+
+    // -- sequential baseline: one single-row forward per request --
+    let t0 = Instant::now();
+    for (j, &idx) in seq.iter().enumerate() {
+        let x = Matrix::from_vec(1, n, pool[j % X_POOL].clone());
+        let o = registry.forward(&names[idx], &x)?;
+        black_box(o.data[0]);
+    }
+    let seq_wall_s = t0.elapsed().as_secs_f64();
+
+    // -- batched: the same sequence through the scheduler --
+    registry.reset_cache_stats();
+    let server = Server::new(registry, &opts.cfg);
+    let workers = server.worker_count();
+    let registry_arc = server.registry();
+    let interval = if opts.rate > 0.0 {
+        Some(Duration::from_secs_f64(1.0 / opts.rate))
+    } else {
+        None
+    };
+    let t0 = Instant::now();
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(opts.requests);
+    for (j, &idx) in seq.iter().enumerate() {
+        if let Some(dt) = interval {
+            let target = t0 + dt.mul_f64(j as f64);
+            let now = Instant::now();
+            if target > now {
+                std::thread::sleep(target - now);
+            }
+        }
+        tickets.push(server.submit(&names[idx], pool[j % X_POOL].clone())?);
+    }
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(opts.requests);
+    for t in tickets {
+        let submitted = t.submitted;
+        let resp = t.wait()?;
+        black_box(resp.output()[0]);
+        lat_ms.push(
+            resp.done.duration_since(submitted).as_secs_f64() * 1e3,
+        );
+    }
+    let batched_wall_s = t0.elapsed().as_secs_f64();
+    let (batches, rows) = server.batch_stats();
+    drop(server);
+    let cache = {
+        let reg = registry_arc.lock().unwrap_or_else(|p| p.into_inner());
+        reg.cache_stats()
+    };
+
+    lat_ms.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let mean_ms = lat_ms.iter().sum::<f64>() / lat_ms.len() as f64;
+    let seq_tp = opts.requests as f64 / seq_wall_s.max(1e-9);
+    let tp = opts.requests as f64 / batched_wall_s.max(1e-9);
+    Ok(ServeBenchReport {
+        opts: opts.clone(),
+        workers,
+        seq_wall_s,
+        batched_wall_s,
+        seq_throughput_rps: seq_tp,
+        throughput_rps: tp,
+        batched_vs_sequential: tp / seq_tp.max(1e-9),
+        mean_ms,
+        p50_ms: percentile(&lat_ms, 0.50),
+        p95_ms: percentile(&lat_ms, 0.95),
+        p99_ms: percentile(&lat_ms, 0.99),
+        mean_batch_rows: rows as f64 / (batches as f64).max(1.0),
+        cache,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let z = Zipf::new(16, 1.1);
+        let mut rng = Pcg64::new(9);
+        let mut counts = [0usize; 16];
+        for _ in 0..4000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        assert!(counts.iter().sum::<usize>() == 4000);
+        assert!(
+            counts[0] > counts[8] && counts[0] > counts[15],
+            "rank 0 must dominate: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[1.0, 2.0], 0.50), 1.0,
+                   "p50 of two samples is the lower median");
+        let d: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        assert_eq!(percentile(&d, 0.99), 99.0, "p99 is rank 99, not max");
+        assert_eq!(percentile(&d, 0.50), 50.0);
+        assert_eq!(percentile(&d, 1.0), 100.0);
+    }
+
+    #[test]
+    fn smoke_scenario_reports_consistent_numbers() {
+        let opts = ServeBenchOpts {
+            adapters: 3,
+            requests: 48,
+            zipf: 1.1,
+            rate: 0.0,
+            site: SiteShape { m: 16, n: 12 },
+            core_a: 4,
+            core_b: 3,
+            seed: 5,
+            cfg: ServeConfig {
+                cache_mb: 4.0,
+                max_batch: 4,
+                max_wait_us: 300,
+                workers: 2,
+            },
+        };
+        let rep = run(&opts).unwrap();
+        assert!(rep.throughput_rps > 0.0);
+        assert!(rep.seq_throughput_rps > 0.0);
+        assert!(rep.batched_vs_sequential > 0.0);
+        assert!(rep.p50_ms <= rep.p95_ms && rep.p95_ms <= rep.p99_ms);
+        assert!(rep.mean_batch_rows >= 1.0);
+        assert!(rep.workers >= 1);
+        // every request was batched exactly once somewhere
+        let j = rep.to_json();
+        assert_eq!(j.get("requests").unwrap().as_usize(), Some(48));
+        assert!(j.get("batched_vs_sequential").unwrap().as_f64().is_some());
+    }
+}

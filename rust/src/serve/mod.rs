@@ -1,0 +1,40 @@
+//! `serve` — multi-adapter serving engine (the paper's §4.1 deployment
+//! story at production shape).
+//!
+//! A CoSA adapter artifact is only the compact core `Y` plus a seed that
+//! regenerates the fixed projections `L`/`R` bit-identically
+//! (`adapters::cosa::regen_l` / `regen_r`).  That makes *many adapters
+//! on one base model* the natural serving workload: per-adapter state is
+//! a few KiB of core, and the expensive projections are a pure function
+//! of `(seed, tensor name, dims)` — cacheable, evictable and
+//! reconstructible at will.  This module turns that property into a
+//! serving engine:
+//!
+//! * [`registry`] — the adapter registry: checkpoints loaded by name
+//!   (hot load/evict), with regenerated `L`/`R` projections cached in a
+//!   byte-budgeted LRU keyed by `(seed, tensor, dims)`.  Evicting and
+//!   re-materializing an adapter is bit-identical by construction.
+//! * [`scheduler`] — the request scheduler: single-row requests enter a
+//!   queue, are grouped **per adapter id** into batches under a
+//!   max-batch / max-wait policy, and run on a worker pool where each
+//!   worker owns a [`linalg::Workspace`](crate::linalg::Workspace) and
+//!   drives `adapter_forward_into` — the matmul hot path performs no
+//!   allocations at steady state (the Workspace/pack-pool contract).
+//! * [`bench`] — the synthetic open-loop workload driver behind the
+//!   `serve-bench` CLI subcommand and `benches/serve_bench.rs`:
+//!   configurable adapter count, Zipf-skewed adapter popularity and
+//!   request rate, reporting throughput, p50/p95/p99 latency and the
+//!   batched-vs-sequential speedup into the `serving` section of
+//!   `BENCH_linalg.json` (gated in CI by `tools/bench_regression.py`).
+//!
+//! Knobs come from the `[serve]` config table
+//! ([`config::ServeConfig`](crate::config::ServeConfig)) with
+//! `COSA_SERVE_*` env overrides; worker count resolves through the same
+//! `plan_threads` helper the compute backends share.
+
+pub mod bench;
+pub mod registry;
+pub mod scheduler;
+
+pub use registry::{AdapterRegistry, SiteShape};
+pub use scheduler::Server;

@@ -1,0 +1,584 @@
+//! Request scheduler: queue -> per-adapter batches -> worker pool.
+//!
+//! ## Data flow
+//!
+//! ```text
+//! submit() --ingress--> batcher --batches--> workers --reply--> Ticket
+//! ```
+//!
+//! * **submit** accepts one activation row per request and returns a
+//!   [`Ticket`] the caller blocks on.
+//! * The **batcher** thread drains the ingress queue and groups pending
+//!   requests **by adapter id** — a batch never mixes adapters.  A group
+//!   flushes when it reaches `max_batch` rows or when its oldest request
+//!   has waited `max_wait_us` (each request is answered within the wait
+//!   bound plus service time, even at trickle load).
+//! * **Workers** (count resolved through the same `plan_threads` helper
+//!   the compute backends share) pull whole batches, snapshot the
+//!   adapter's `L`/`R`/`Y` handles under a brief registry lock — cache
+//!   *misses* regenerate outside the lock via the registry's two-phase
+//!   `plan`/`install` split, so a cold or thrashing projection cache
+//!   never serializes the pool — assemble the batch matrix in a
+//!   worker-owned [`Workspace`] buffer and run `adapter_forward_into`.  The matmul hot path — intermediates,
+//!   packing scratch, the assembled input — is allocation-free at steady
+//!   state (the Workspace contract); the batch *output* is allocated
+//!   once per batch and shared zero-copy with every ticket of the batch
+//!   via `Arc`, so per-request cost is an `Arc` clone, not a row copy.
+//!
+//! Batching is what buys multi-adapter throughput: a single-row forward
+//! re-reads the whole `L`/`R`/`Y` working set per request, while a
+//! k-row batch amortizes that traffic k ways (`benches/serve_bench.rs`
+//! measures the speedup; CI gates it at >= 1.5x for 64 Zipf-skewed
+//! adapters).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::adapters::cosa::adapter_forward_into;
+use crate::config::ServeConfig;
+use crate::linalg::tiled::plan_threads;
+use crate::linalg::Workspace;
+use crate::math::matrix::Matrix;
+
+use super::registry::AdapterRegistry;
+
+/// One answered request.  `out` is the whole batch's output matrix,
+/// shared by every ticket of the batch; `row` is this request's row.
+pub struct Response {
+    pub out: Arc<Matrix>,
+    pub row: usize,
+    /// Adapter id the batch ran under (every row of `out` used it).
+    pub adapter: Arc<str>,
+    /// Rows in the batch this request rode in.
+    pub batch_rows: usize,
+    /// When the worker finished the batch (latency = `done` - submit).
+    pub done: Instant,
+}
+
+impl Response {
+    /// This request's output row (width m).
+    pub fn output(&self) -> &[f32] {
+        self.out.row(self.row)
+    }
+}
+
+type Reply = Result<Response, String>;
+
+/// Handle for one in-flight request; `wait` blocks for the answer.
+pub struct Ticket {
+    rx: Receiver<Reply>,
+    /// When the request entered the queue (set by `submit`).
+    pub submitted: Instant,
+}
+
+impl Ticket {
+    pub fn wait(self) -> anyhow::Result<Response> {
+        match self.rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(msg)) => Err(anyhow::anyhow!(msg)),
+            Err(_) => Err(anyhow::anyhow!(
+                "server shut down before answering the request"
+            )),
+        }
+    }
+}
+
+struct Request {
+    adapter: Arc<str>,
+    x: Vec<f32>,
+    reply: Sender<Reply>,
+    at: Instant,
+}
+
+struct Batch {
+    adapter: Arc<str>,
+    reqs: Vec<Request>,
+}
+
+/// Scheduler counters (batch count and total batched rows — the mean
+/// batch size benches report is `rows / batches`).
+#[derive(Default)]
+struct ServerStats {
+    batches: AtomicU64,
+    batched_rows: AtomicU64,
+}
+
+/// The serving engine: registry + batcher + worker pool.  See module
+/// docs for the data flow; construction spawns the threads, `shutdown`
+/// (or drop) drains and joins them.
+pub struct Server {
+    ingress: Option<Sender<Request>>,
+    batcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    registry: Arc<Mutex<AdapterRegistry>>,
+    stats: Arc<ServerStats>,
+    site_n: usize,
+    worker_count: usize,
+}
+
+/// Ceiling on spawned workers, however configured — each worker is a
+/// real OS thread and more of them than cores only adds contention.
+const MAX_WORKERS: usize = 64;
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl Server {
+    /// Spawn the engine over `registry`.  `cfg` is used as-is — apply
+    /// `ServeConfig::env_overridden()` at the call site (the CLI and
+    /// bench drivers do), so tests stay hermetic.
+    pub fn new(registry: AdapterRegistry, cfg: &ServeConfig) -> Server {
+        let site_n = registry.site().n;
+        let max_batch = cfg.max_batch.max(1);
+        let max_wait = Duration::from_micros(cfg.max_wait_us);
+        // Same resolution rule as the compute backends: explicit count,
+        // or auto (available_parallelism, capped) — the zero-FLOP floor
+        // means serving always gets its workers.  Unlike the compute
+        // kernels (where plan_threads clamps to actual matrix rows), a
+        // server has no natural row bound, so cap explicit requests too
+        // instead of attempting an unbounded number of thread spawns.
+        let workers = if cfg.workers > MAX_WORKERS {
+            eprintln!(
+                "warning: serve workers capped at {MAX_WORKERS} \
+                 (requested {})",
+                cfg.workers
+            );
+            MAX_WORKERS
+        } else {
+            cfg.workers
+        };
+        let worker_count = plan_threads(workers, 0, usize::MAX, usize::MAX);
+
+        let registry = Arc::new(Mutex::new(registry));
+        let stats = Arc::new(ServerStats::default());
+        let (ingress_tx, ingress_rx) = channel::<Request>();
+        let (batch_tx, batch_rx) = channel::<Batch>();
+        let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+        let batcher = std::thread::spawn(move || {
+            batcher_loop(ingress_rx, batch_tx, max_batch, max_wait);
+        });
+        let mut workers = Vec::with_capacity(worker_count);
+        for _ in 0..worker_count {
+            let rx = batch_rx.clone();
+            let reg = registry.clone();
+            let st = stats.clone();
+            workers.push(std::thread::spawn(move || {
+                worker_loop(&rx, &reg, &st);
+            }));
+        }
+        Server {
+            ingress: Some(ingress_tx),
+            batcher: Some(batcher),
+            workers,
+            registry,
+            stats,
+            site_n,
+            worker_count,
+        }
+    }
+
+    /// Workers actually spawned (after auto resolution).
+    pub fn worker_count(&self) -> usize {
+        self.worker_count
+    }
+
+    /// (batches executed, total rows batched) so far.
+    pub fn batch_stats(&self) -> (u64, u64) {
+        (
+            self.stats.batches.load(Ordering::Relaxed),
+            self.stats.batched_rows.load(Ordering::Relaxed),
+        )
+    }
+
+    /// The shared registry (hot load/evict while serving, cache stats).
+    pub fn registry(&self) -> Arc<Mutex<AdapterRegistry>> {
+        self.registry.clone()
+    }
+
+    /// Enqueue one activation row for `adapter`.  Returns immediately;
+    /// block on the ticket for the answer.
+    pub fn submit(&self, adapter: &str, x: Vec<f32>) -> anyhow::Result<Ticket> {
+        anyhow::ensure!(
+            x.len() == self.site_n,
+            "request row has {} values, site expects {}",
+            x.len(),
+            self.site_n
+        );
+        let ingress = self
+            .ingress
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("server is shut down"))?;
+        let (tx, rx) = channel::<Reply>();
+        let submitted = Instant::now();
+        let req = Request {
+            adapter: Arc::from(adapter),
+            x,
+            reply: tx,
+            at: submitted,
+        };
+        ingress
+            .send(req)
+            .map_err(|_| anyhow::anyhow!("server is shut down"))?;
+        Ok(Ticket { rx, submitted })
+    }
+
+    /// Stop accepting requests, drain everything in flight, join the
+    /// threads.  Every request submitted before shutdown is answered.
+    pub fn shutdown(&mut self) {
+        self.ingress.take(); // batcher sees disconnect, flushes, exits
+        if let Some(b) = self.batcher.take() {
+            let _ = b.join(); // dropping its batch sender stops workers
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Earliest flush deadline among pending groups (oldest request per
+/// group + max_wait).
+fn earliest_deadline(
+    pending: &HashMap<Arc<str>, Vec<Request>>,
+    max_wait: Duration,
+) -> Option<Instant> {
+    pending
+        .values()
+        .filter_map(|v| v.first().map(|r| r.at + max_wait))
+        .min()
+}
+
+fn batcher_loop(
+    rx: Receiver<Request>,
+    tx: Sender<Batch>,
+    max_batch: usize,
+    max_wait: Duration,
+) {
+    let mut pending: HashMap<Arc<str>, Vec<Request>> = HashMap::new();
+    'run: loop {
+        let received = match earliest_deadline(&pending, max_wait) {
+            // Nothing pending: block until a request (or shutdown).
+            None => match rx.recv() {
+                Ok(r) => Some(r),
+                Err(_) => break 'run,
+            },
+            Some(deadline) => {
+                let timeout =
+                    deadline.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(timeout) {
+                    Ok(r) => Some(r),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => break 'run,
+                }
+            }
+        };
+        if let Some(req) = received {
+            let key = req.adapter.clone();
+            let group = pending.entry(key.clone()).or_default();
+            group.push(req);
+            if group.len() >= max_batch {
+                let reqs = pending.remove(&key).unwrap_or_default();
+                if tx.send(Batch { adapter: key, reqs }).is_err() {
+                    return; // workers gone — nothing left to answer
+                }
+            }
+        }
+        // Flush every group whose oldest request hit the wait bound.
+        let now = Instant::now();
+        let due: Vec<Arc<str>> = pending
+            .iter()
+            .filter(|(_, v)| {
+                v.first().is_some_and(|r| now >= r.at + max_wait)
+            })
+            .map(|(k, _)| k.clone())
+            .collect();
+        for key in due {
+            if let Some(reqs) = pending.remove(&key) {
+                if tx.send(Batch { adapter: key, reqs }).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+    // Ingress disconnected (shutdown): flush everything still pending so
+    // no submitted request goes unanswered.
+    for (adapter, reqs) in pending.drain() {
+        if tx.send(Batch { adapter, reqs }).is_err() {
+            return;
+        }
+    }
+}
+
+fn worker_loop(
+    rx: &Mutex<Receiver<Batch>>,
+    registry: &Mutex<AdapterRegistry>,
+    stats: &ServerStats,
+) {
+    let mut ws = Workspace::new();
+    loop {
+        // Standard Mutex<Receiver> work queue: one idle worker at a
+        // time blocks inside recv() *while holding the lock*; the guard
+        // drops at the end of this statement, so the batch itself is
+        // always processed lock-free.  Never add work to this statement
+        // chain — it would run under the lock and stall the pool.
+        let batch = match lock(rx).recv() {
+            Ok(b) => b,
+            Err(_) => return, // batcher exited and the queue is drained
+        };
+        let Batch { adapter, reqs } = batch;
+        // Two-phase handle lookup so the registry lock stays brief even
+        // on a projection-cache miss: plan under the lock (hits resolve
+        // here), regenerate any cold L/R *outside* the lock, install
+        // under a second brief lock.  A thrashing cache costs the
+        // missing worker regen time, never the whole pool.
+        let plan = lock(registry).plan(&adapter);
+        let plan = match plan {
+            Ok(p) => p,
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for req in reqs {
+                    let _ = req.reply.send(Err(msg.clone()));
+                }
+                continue;
+            }
+        };
+        let l_new = if plan.l.is_none() {
+            Some(crate::adapters::cosa::regen_l(
+                plan.seed, &plan.l_name, plan.m, plan.a,
+            ))
+        } else {
+            None
+        };
+        let r_new = if plan.r.is_none() {
+            Some(crate::adapters::cosa::regen_r(
+                plan.seed, &plan.r_name, plan.b, plan.n,
+            ))
+        } else {
+            None
+        };
+        let handles = lock(registry).install(&plan, l_new, r_new);
+        let rows = reqs.len();
+        let n = handles.r.cols;
+        let m = handles.l.rows;
+        let mut x = ws.take_matrix(rows, n);
+        for (i, req) in reqs.iter().enumerate() {
+            x.data[i * n..(i + 1) * n].copy_from_slice(&req.x);
+        }
+        // The output lives beyond this batch (tickets hold it via Arc),
+        // so it cannot come from the workspace pool.
+        let mut out = Matrix::zeros(rows, m);
+        adapter_forward_into(
+            &x,
+            &handles.l,
+            &handles.r,
+            &handles.y,
+            handles.alpha,
+            &mut ws,
+            &mut out,
+        );
+        ws.recycle_matrix(x);
+        let out = Arc::new(out);
+        let done = Instant::now();
+        stats.batches.fetch_add(1, Ordering::Relaxed);
+        stats.batched_rows.fetch_add(rows as u64, Ordering::Relaxed);
+        for (row, req) in reqs.into_iter().enumerate() {
+            let resp = Response {
+                out: out.clone(),
+                row,
+                adapter: adapter.clone(),
+                batch_rows: rows,
+                done,
+            };
+            let _ = req.reply.send(Ok(resp));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::adapters::cosa::{adapter_forward, regen_l, regen_r};
+    use crate::math::rng::Pcg64;
+    use crate::serve::registry::SiteShape;
+    use crate::util::prop;
+
+    const M: usize = 12;
+    const N: usize = 10;
+
+    fn test_cfg(max_batch: usize, max_wait_us: u64) -> ServeConfig {
+        ServeConfig {
+            cache_mb: 4.0,
+            max_batch,
+            max_wait_us,
+            workers: 2,
+        }
+    }
+
+    #[test]
+    fn absurd_worker_requests_are_capped() {
+        let reg = test_registry(&[("solo", 7)]);
+        let cfg = ServeConfig { workers: 1_000_000, ..test_cfg(4, 200) };
+        let server = Server::new(reg, &cfg);
+        assert!(server.worker_count() <= 64, "{}", server.worker_count());
+        let t = server.submit("solo", vec![0.0; N]).unwrap();
+        assert!(t.wait().is_ok());
+    }
+
+    fn test_registry(adapters: &[(&str, u64)]) -> AdapterRegistry {
+        let mut reg =
+            AdapterRegistry::new(SiteShape { m: M, n: N }, 1 << 20);
+        for (name, seed) in adapters {
+            let mut rng = Pcg64::derive(*seed, name);
+            let y = Matrix::gaussian(4, 3, 0.5, &mut rng);
+            reg.insert(name, *seed, 2.0, "adp.0.wq.l", "adp.0.wq.r", y)
+                .unwrap();
+        }
+        reg
+    }
+
+    fn reference_forward(seed: u64, name: &str, x_row: &[f32]) -> Vec<f32> {
+        let mut rng = Pcg64::derive(seed, name);
+        let y = Matrix::gaussian(4, 3, 0.5, &mut rng);
+        let l = regen_l(seed, "adp.0.wq.l", M, 4);
+        let r = regen_r(seed, "adp.0.wq.r", 3, N);
+        let x = Matrix::from_vec(1, N, x_row.to_vec());
+        adapter_forward(&x, &l, &r, &y, 2.0).data
+    }
+
+    #[test]
+    fn every_request_answered_exactly_once_and_unmixed() {
+        // Property test: random request mixes over several adapters —
+        // every ticket resolves with the right adapter's math, and the
+        // scheduler's row accounting matches the request count exactly
+        // (each request answered exactly once).
+        prop::for_all("serve answers all, batches unmixed", 5, |rng| {
+            let adapters =
+                [("alpha", 7u64), ("beta", 8u64), ("gamma", 9u64)];
+            let reg = test_registry(&adapters);
+            let server = Server::new(reg, &test_cfg(4, 500));
+            let total = prop::int_in(rng, 5, 40);
+            let mut tickets = Vec::new();
+            let mut expect = Vec::new();
+            for _ in 0..total {
+                let which = prop::int_in(rng, 0, adapters.len() - 1);
+                let (name, seed) = adapters[which];
+                let x: Vec<f32> =
+                    (0..N).map(|_| rng.normal() as f32).collect();
+                expect.push(reference_forward(seed, name, &x));
+                tickets.push((name, server.submit(name, x).unwrap()));
+            }
+            let mut answered = 0usize;
+            for ((name, ticket), want) in
+                tickets.into_iter().zip(&expect)
+            {
+                let resp = ticket.wait().expect("request must be answered");
+                answered += 1;
+                assert_eq!(&*resp.adapter, name, "batch mixed adapters");
+                assert!(resp.batch_rows >= 1 && resp.batch_rows <= 4);
+                for (got, exp) in resp.output().iter().zip(want) {
+                    assert!(
+                        (got - exp).abs() < 1e-4,
+                        "{name}: {got} vs {exp}"
+                    );
+                }
+            }
+            assert_eq!(answered, total);
+            let (batches, rows) = server.batch_stats();
+            assert_eq!(rows as usize, total,
+                       "every row batched exactly once");
+            assert!(batches >= 1);
+        });
+    }
+
+    #[test]
+    fn full_batches_flush_on_size_not_deadline() {
+        let reg = test_registry(&[("solo", 7)]);
+        // max_wait far beyond the test budget: only the size trigger can
+        // flush, so replies prove the max-batch path works.
+        let server = Server::new(reg, &test_cfg(4, 30_000_000));
+        let x = vec![0.25f32; N];
+        let tickets: Vec<Ticket> = (0..8)
+            .map(|_| server.submit("solo", x.clone()).unwrap())
+            .collect();
+        for t in tickets {
+            let resp = t.wait().unwrap();
+            assert_eq!(resp.batch_rows, 4, "size-triggered flush");
+        }
+    }
+
+    #[test]
+    fn max_wait_is_honored_for_partial_batches() {
+        let reg = test_registry(&[("solo", 7)]);
+        let wait_us = 50_000; // 50 ms
+        let server = Server::new(reg, &test_cfg(64, wait_us));
+        let t = server.submit("solo", vec![1.0; N]).unwrap();
+        let submitted = t.submitted;
+        let resp = t.wait().unwrap();
+        let waited = resp.done.duration_since(submitted);
+        // Flushed by the deadline (not by size: batch stayed at 1 row),
+        // within a generous service-time margin for slow CI machines.
+        assert_eq!(resp.batch_rows, 1);
+        assert!(
+            waited >= Duration::from_micros(wait_us / 2),
+            "flushed way before the wait bound: {waited:?}"
+        );
+        assert!(
+            waited < Duration::from_secs(20),
+            "partial batch never flushed: {waited:?}"
+        );
+    }
+
+    #[test]
+    fn unknown_adapter_and_bad_row_are_errors() {
+        let reg = test_registry(&[("solo", 7)]);
+        let server = Server::new(reg, &test_cfg(4, 200));
+        let t = server.submit("ghost", vec![0.0; N]).unwrap();
+        assert!(t.wait().is_err(), "unknown adapter must error");
+        assert!(server.submit("solo", vec![0.0; N + 1]).is_err());
+    }
+
+    #[test]
+    fn shutdown_answers_in_flight_requests() {
+        let reg = test_registry(&[("solo", 7)]);
+        // huge wait: only the shutdown drain can flush these
+        let mut server = Server::new(reg, &test_cfg(64, 30_000_000));
+        let tickets: Vec<Ticket> = (0..3)
+            .map(|_| server.submit("solo", vec![0.5; N]).unwrap())
+            .collect();
+        server.shutdown();
+        for t in tickets {
+            assert!(t.wait().is_ok(), "shutdown must drain, not drop");
+        }
+        assert!(server.submit("solo", vec![0.5; N]).is_err());
+    }
+
+    #[test]
+    fn hot_load_and_evict_while_serving() {
+        let reg = test_registry(&[("old", 7)]);
+        let server = Server::new(reg, &test_cfg(4, 200));
+        let registry = server.registry();
+        {
+            let mut reg = registry.lock().unwrap();
+            let mut rng = Pcg64::derive(11, "new");
+            let y = Matrix::gaussian(4, 3, 0.5, &mut rng);
+            reg.insert("new", 11, 2.0, "adp.0.wq.l", "adp.0.wq.r", y)
+                .unwrap();
+            reg.evict("old");
+        }
+        let t_new = server.submit("new", vec![0.1; N]).unwrap();
+        assert!(t_new.wait().is_ok(), "hot-loaded adapter must serve");
+        let t_old = server.submit("old", vec![0.1; N]).unwrap();
+        assert!(t_old.wait().is_err(), "evicted adapter must error");
+    }
+}

@@ -142,6 +142,35 @@ impl Checkpoint {
         })
     }
 
+    /// Serving entry point: resolve a bare adapter `name` to a
+    /// checkpoint file inside `dir`.  Tries `<name>`, `<name>.cosa`,
+    /// `<name>.ckpt` in that order (the trainer writes `.ckpt`, the
+    /// portability example `.cosa`), so registries can hot-load by the
+    /// id requests carry instead of a filesystem path.  Because names
+    /// may arrive from untrusted requests, anything that could escape
+    /// `dir` (path separators, `..`) is rejected.
+    pub fn load_by_name(dir: &Path, name: &str) -> anyhow::Result<Checkpoint> {
+        anyhow::ensure!(
+            !name.is_empty()
+                && !name.contains('/')
+                && !name.contains('\\')
+                && !name.contains(".."),
+            "adapter name `{name}` is not a bare name"
+        );
+        let candidates =
+            [name.to_string(), format!("{name}.cosa"), format!("{name}.ckpt")];
+        for cand in &candidates {
+            let path = dir.join(cand);
+            if path.is_file() {
+                return Checkpoint::load(&path);
+            }
+        }
+        anyhow::bail!(
+            "no checkpoint for `{name}` in {} (tried {candidates:?})",
+            dir.display()
+        )
+    }
+
     /// Bytes on disk (Figure 3 storage accounting cross-check): magic +
     /// length word + the actual serialized header + blobs.  The header
     /// grows linearly with tensor count, so a fixed fudge constant would
@@ -187,6 +216,25 @@ mod tests {
         assert_eq!(back.tensors["adp.1.w1.y"].0, vec![2, 3]);
         assert_eq!(back.tensors["adp.1.w1.y"].1[3], 7.0);
         assert_eq!(back.tensors["adp.0.wq.y"].1, vec![0.5f32; 8]);
+    }
+
+    #[test]
+    fn load_by_name_resolves_suffixes() {
+        let dir = std::env::temp_dir().join("cosa_ckpt_byname_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ck = sample();
+        ck.save(&dir.join("mathbot.cosa")).unwrap();
+        let back = Checkpoint::load_by_name(&dir, "mathbot").unwrap();
+        assert_eq!(back.adapter_seed, 1234);
+        ck.save(&dir.join("explicit.bin")).unwrap();
+        let back = Checkpoint::load_by_name(&dir, "explicit.bin").unwrap();
+        assert_eq!(back.step, 42);
+        assert!(Checkpoint::load_by_name(&dir, "missing").is_err());
+        // request-carried ids must not escape the checkpoint dir
+        for evil in ["../mathbot", "a/b", "a\\b", "..", "", "/etc/passwd"] {
+            assert!(Checkpoint::load_by_name(&dir, evil).is_err(),
+                    "`{evil}` must be rejected");
+        }
     }
 
     #[test]

@@ -26,7 +26,7 @@ impl Args {
             if let Some(flag) = a.strip_prefix("--") {
                 if let Some((k, v)) = flag.split_once('=') {
                     out.flags.insert(k.to_string(), v.to_string());
-                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
                     out.flags.insert(flag.to_string(), it.next().unwrap());
                 } else {
                     out.flags.insert(flag.to_string(), "true".to_string());
@@ -58,7 +58,7 @@ impl Args {
         self.flags.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
     pub fn bool(&self, key: &str) -> bool {
-        self.flags.get(key).map_or(false, |v| v == "true" || v == "1")
+        self.flags.get(key).is_some_and(|v| v == "true" || v == "1")
     }
 }
 

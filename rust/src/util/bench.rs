@@ -118,11 +118,32 @@ pub fn write_bench_json_at(path: &std::path::Path, section: &str,
     }
 }
 
-/// `write_bench_json_at` against the conventional `BENCH_linalg.json`
-/// in the current directory.
+/// Canonical location of the machine-readable bench report: the repo
+/// root (found by walking up from the CWD to the first directory
+/// holding `.git` or `BENCH_baseline.json`), falling back to the CWD.
+/// `cargo bench` runs binaries with CWD at the *package* root (`rust/`),
+/// which used to scatter reports across `rust/BENCH_linalg.json` and
+/// the repo root depending on how the bench was launched; every writer
+/// now resolves this single path, so CI and `tools/bench_regression.py`
+/// read one file.
+pub fn bench_report_path() -> std::path::PathBuf {
+    let mut dir = std::env::current_dir()
+        .unwrap_or_else(|_| std::path::PathBuf::from("."));
+    loop {
+        if dir.join(".git").exists() || dir.join("BENCH_baseline.json").exists()
+        {
+            return dir.join("BENCH_linalg.json");
+        }
+        if !dir.pop() {
+            return std::path::PathBuf::from("BENCH_linalg.json");
+        }
+    }
+}
+
+/// `write_bench_json_at` against the canonical repo-root report (see
+/// [`bench_report_path`]).
 pub fn write_bench_json(section: &str, entries: crate::util::json::Json) {
-    write_bench_json_at(std::path::Path::new("BENCH_linalg.json"), section,
-                        entries);
+    write_bench_json_at(&bench_report_path(), section, entries);
 }
 
 #[cfg(test)]
@@ -159,6 +180,26 @@ mod tests {
         };
         // 2 GFLOP in 1 ms = 2000 GFLOP/s
         assert!((r.gflops(2e9) - 2000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bench_report_path_is_singular_and_named() {
+        let p = bench_report_path();
+        assert!(p.ends_with("BENCH_linalg.json"), "{}", p.display());
+        // From anywhere inside the repo the path must resolve to the
+        // repo root (the dir holding BENCH_baseline.json / .git), not
+        // to the package dir cargo runs benches from.
+        if let Some(parent) = p.parent() {
+            if parent.as_os_str().is_empty() {
+                return; // fallback path (no repo markers) — fine
+            }
+            assert!(
+                parent.join(".git").exists()
+                    || parent.join("BENCH_baseline.json").exists(),
+                "not a repo root: {}",
+                parent.display()
+            );
+        }
     }
 
     #[test]

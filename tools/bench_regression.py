@@ -1,27 +1,46 @@
 #!/usr/bin/env python3
-"""Bench regression gate for the linalg kernels.
+"""Bench regression gate for the linalg kernels and the serving engine.
 
-Compares the `linalg_kernels` section of a freshly generated
-`BENCH_linalg.json` (written by `cargo bench --bench linalg_kernels`)
-against the committed `BENCH_baseline.json` and fails on a >20%
-per-kernel GFLOP/s regression.
+Compares a freshly generated `BENCH_linalg.json` (written by
+`cargo bench --bench linalg_kernels` / `--bench serve_bench` to the
+canonical repo-root path) against the committed `BENCH_baseline.json`.
 
-Two kinds of checks:
+Checks:
 
-1. **Absolute floors** — each baseline row's `gflops` value.  The
-   committed numbers are deliberately *conservative floors* (well below
-   what a healthy run produces on any recent x86_64 machine), because CI
-   runners vary wildly; they exist to catch order-of-magnitude
-   regressions (a kernel silently falling back to scalar loops, a
-   packing bug exploding the memory traffic), not single-digit drift.
-   Regenerate with `--update` on a representative machine to tighten.
+1. **Absolute kernel floors** — each `linalg_kernels` baseline row's
+   `gflops` value.  The committed numbers are deliberately *conservative
+   floors* (well below what a healthy run produces on any recent x86_64
+   machine), because CI runners vary wildly; they exist to catch
+   order-of-magnitude regressions (a kernel silently falling back to
+   scalar loops, a packing bug exploding the memory traffic), not
+   single-digit drift.  Regenerate with `--update` on a representative
+   machine to tighten.
 
-2. **Relative gate** (machine-independent): within the fresh run,
-   single-thread packed must beat single-thread tiled by >= MIN_RATIO on
-   the NN and NT kernels at every measured shape.  The acceptance target
-   is 1.5x; the gate uses 1.2x to absorb runner noise.
+2. **Relative kernel gate** (machine-independent): within the fresh
+   run, single-thread packed must beat single-thread tiled by >=
+   MIN_RATIO on the NN and NT kernels at every measured shape.  The
+   acceptance target is 1.5x; the gate uses 1.2x to absorb runner noise.
 
-Exit codes: 0 ok / skipped (no fresh file), 1 regression detected.
+3. **Serving floors** — the `serving` section (written by
+   `serve_bench`) is checked against the baseline's `serving` object:
+   `throughput_rps` >= `throughput_rps_floor` and `p99_ms` <=
+   `p99_ms_ceiling` for firehose rows (rate_rps == 0), both
+   deliberately loose for runner noise.
+
+4. **Relative serving gate** (machine-independent): the firehose row
+   with >= MIN_SERVE_ADAPTERS adapters must show
+   `batched_vs_sequential` >= `min_batched_vs_sequential` (the
+   acceptance criterion: batched serving beats sequential per-request
+   forward by 1.5x at 64 adapters).
+
+A fresh report that exists but is malformed (unparseable JSON, or none
+of the expected sections with rows) is a hard failure — a silently
+empty report must read as "the gate is off", never as "pass".  A
+missing file still skips (local runs without a bench pass); CI passes
+--require-serving so a vanished serving section fails there.
+
+Exit codes: 0 ok / skipped (no fresh file), 1 regression or malformed
+report.
 """
 
 import argparse
@@ -30,8 +49,10 @@ import os
 import sys
 
 SECTION = "linalg_kernels"
-TOLERANCE = 0.20   # max allowed drop below the baseline gflops
-MIN_RATIO = 1.2    # fresh-run packed/tiled single-thread NN+NT floor
+SERVING_SECTION = "serving"
+TOLERANCE = 0.20          # max allowed drop below the baseline gflops
+MIN_RATIO = 1.2           # fresh-run packed/tiled single-thread NN+NT floor
+MIN_SERVE_ADAPTERS = 64   # fleet size the serving ratio gate applies to
 
 KEY_FIELDS = ("kernel", "backend", "threads", "m", "k", "n")
 
@@ -40,11 +61,31 @@ def row_key(row):
     return tuple(row.get(f) for f in KEY_FIELDS)
 
 
-def load_rows(path):
-    with open(path) as f:
-        doc = json.load(f)
+def load_doc(path):
+    """Parse `path` or die loudly — a malformed report is a failure,
+    not a skip."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_regression: FAIL — cannot parse {path}: {e}")
+        sys.exit(1)
+
+
+def kernel_rows(doc):
     rows = doc.get(SECTION, [])
-    return {row_key(r): r for r in rows if "gflops" in r}
+    if not isinstance(rows, list):
+        return {}
+    return {row_key(r): r for r in rows
+            if isinstance(r, dict) and "gflops" in r}
+
+
+def serving_rows(doc):
+    rows = doc.get(SERVING_SECTION, [])
+    if not isinstance(rows, list):
+        return []
+    return [r for r in rows
+            if isinstance(r, dict) and "throughput_rps" in r]
 
 
 def find_fresh(candidates):
@@ -54,50 +95,10 @@ def find_fresh(candidates):
     return None
 
 
-def main():
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--baseline", default="BENCH_baseline.json")
-    ap.add_argument("--fresh", default=None,
-                    help="fresh BENCH_linalg.json (default: search "
-                         "rust/BENCH_linalg.json, BENCH_linalg.json)")
-    ap.add_argument("--tolerance", type=float, default=TOLERANCE)
-    ap.add_argument("--min-ratio", type=float, default=MIN_RATIO)
-    ap.add_argument("--update", action="store_true",
-                    help="rewrite the baseline from the fresh run")
-    args = ap.parse_args()
-
-    fresh_path = args.fresh or find_fresh(
-        ["rust/BENCH_linalg.json", "BENCH_linalg.json"])
-    if fresh_path is None or not os.path.exists(fresh_path):
-        print("bench_regression: no fresh BENCH_linalg.json found — "
-              "skipping (run `cargo bench --bench linalg_kernels` first)")
-        return 0
-
-    fresh = load_rows(fresh_path)
-    if not fresh:
-        print(f"bench_regression: {fresh_path} has no `{SECTION}` rows — "
-              "skipping")
-        return 0
-
-    if args.update:
-        with open(fresh_path) as f:
-            section = json.load(f).get(SECTION, [])
-        baseline_doc = {}
-        if os.path.exists(args.baseline):
-            with open(args.baseline) as f:
-                baseline_doc = json.load(f)
-        baseline_doc[SECTION] = section
-        with open(args.baseline, "w") as f:
-            json.dump(baseline_doc, f, indent=1, sort_keys=True)
-        print(f"bench_regression: baseline updated from {fresh_path} "
-              f"({len(section)} rows)")
-        return 0
-
-    failures = []
-
-    # 1. absolute floors vs the committed baseline
-    if os.path.exists(args.baseline):
-        baseline = load_rows(args.baseline)
+def check_kernels(fresh, baseline_doc, baseline_path, tolerance, min_ratio,
+                  failures):
+    if baseline_doc is not None:
+        baseline = kernel_rows(baseline_doc)
         compared = 0
         for key, base_row in sorted(baseline.items()):
             fresh_row = fresh.get(key)
@@ -105,23 +106,22 @@ def main():
                 print(f"  note: baseline row {key} missing from fresh run")
                 continue
             compared += 1
-            floor = base_row["gflops"] * (1.0 - args.tolerance)
+            floor = base_row["gflops"] * (1.0 - tolerance)
             got = fresh_row["gflops"]
             tag = "/".join(str(k) for k in key)
             if got < floor:
                 failures.append(
                     f"{tag}: {got:.2f} GFLOP/s < floor {floor:.2f} "
-                    f"(baseline {base_row['gflops']:.2f} -{args.tolerance:.0%})")
+                    f"(baseline {base_row['gflops']:.2f} -{tolerance:.0%})")
             else:
-                print(f"  ok: {tag}: {got:.2f} GFLOP/s "
-                      f"(floor {floor:.2f})")
-        print(f"bench_regression: {compared} rows compared against "
-              f"{args.baseline}")
+                print(f"  ok: {tag}: {got:.2f} GFLOP/s (floor {floor:.2f})")
+        print(f"bench_regression: {compared} kernel rows compared against "
+              f"{baseline_path}")
     else:
-        print(f"bench_regression: no {args.baseline} — absolute check "
+        print(f"bench_regression: no {baseline_path} — absolute check "
               "skipped (generate one with --update)")
 
-    # 2. machine-independent relative gate: packed vs tiled, 1 thread
+    # machine-independent relative gate: packed vs tiled, 1 thread
     relative_pairs = 0
     for key, tiled_row in sorted(fresh.items()):
         kernel, backend, threads = key[0], key[1], key[2]
@@ -137,8 +137,8 @@ def main():
         line = (f"{kernel} {shape}: packed/tiled = {ratio:.2f}x "
                 f"({packed_row['gflops']:.2f} vs "
                 f"{tiled_row['gflops']:.2f} GFLOP/s)")
-        if ratio < args.min_ratio:
-            failures.append(f"{line} — below the {args.min_ratio}x gate")
+        if ratio < min_ratio:
+            failures.append(f"{line} — below the {min_ratio}x gate")
         else:
             print(f"  ok: {line}")
     if relative_pairs == 0:
@@ -148,6 +148,162 @@ def main():
         failures.append(
             "relative gate compared 0 packed-vs-tiled single-thread "
             "nn/nt pairs — bench row keys no longer match this script")
+
+
+def check_serving(rows, baseline_doc, baseline_path, require_acceptance,
+                  failures):
+    base = {}
+    if baseline_doc is not None:
+        base = baseline_doc.get(SERVING_SECTION, {})
+    if not isinstance(base, dict):
+        failures.append(f"{baseline_path}: `{SERVING_SECTION}` must be an "
+                        "object of floors, not rows")
+        return
+    tp_floor = base.get("throughput_rps_floor", 0.0)
+    p99_ceiling = base.get("p99_ms_ceiling", float("inf"))
+    min_ratio = base.get("min_batched_vs_sequential", 1.5)
+    # Shape keys pinning the floors to the committed scenario — the
+    # analogue of the kernel checks keying rows by (m, k, n).
+    want_shape = {k: base[k] for k in ("site_m", "site_n", "core_a",
+                                       "core_b") if k in base}
+
+    ratio_rows = 0
+    for r in rows:
+        tag = (f"serving[{r.get('adapters')} adapters, "
+               f"rate {r.get('rate_rps')}]")
+        firehose = not r.get("rate_rps")
+        # Floors are calibrated for the committed acceptance workload
+        # (>= MIN_SERVE_ADAPTERS adapters, firehose, baseline-declared
+        # site/core shape).  Custom local scenarios (huge sites, paced
+        # arrivals) are reported but not held to these numbers.
+        shape_ok = all(r.get(k) == v for k, v in want_shape.items())
+        if not firehose or r.get("adapters", 0) < MIN_SERVE_ADAPTERS \
+                or not shape_ok:
+            print(f"  note: {tag}: not the acceptance workload; floors "
+                  "not applied")
+            continue
+        tp = r.get("throughput_rps", 0.0)
+        if tp < tp_floor:
+            failures.append(f"{tag}: throughput {tp:.0f} req/s < floor "
+                            f"{tp_floor:.0f}")
+        else:
+            print(f"  ok: {tag}: throughput {tp:.0f} req/s "
+                  f"(floor {tp_floor:.0f})")
+        p99 = r.get("p99_ms", 0.0)
+        if p99 > p99_ceiling:
+            failures.append(f"{tag}: p99 {p99:.1f} ms > ceiling "
+                            f"{p99_ceiling:.1f}")
+        else:
+            print(f"  ok: {tag}: p99 {p99:.1f} ms "
+                  f"(ceiling {p99_ceiling:.1f})")
+        # machine-independent ratio gate at the acceptance fleet size
+        ratio_rows += 1
+        ratio = r.get("batched_vs_sequential", 0.0)
+        line = (f"{tag}: batched/sequential = {ratio:.2f}x "
+                f"(gate {min_ratio}x)")
+        if ratio < min_ratio:
+            failures.append(f"{line} — batching no longer pays for itself")
+        else:
+            print(f"  ok: {line}")
+    if ratio_rows == 0:
+        # A local `cosa-repro serve-bench --adapters 16 ...` legitimately
+        # writes a serving section without the acceptance workload; only
+        # CI (--require-serving) insists the gate actually ran.
+        msg = (f"serving gate matched 0 firehose rows with >= "
+               f"{MIN_SERVE_ADAPTERS} adapters at the baseline shape — "
+               "the acceptance workload (serve_bench scenario 1) did "
+               "not run")
+        if require_acceptance:
+            failures.append(msg)
+        else:
+            print(f"  note: {msg}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument("--fresh", default=None,
+                    help="fresh BENCH_linalg.json (default: repo-root "
+                         "BENCH_linalg.json, then rust/BENCH_linalg.json "
+                         "for pre-canonical-path reports)")
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE)
+    ap.add_argument("--min-ratio", type=float, default=MIN_RATIO)
+    ap.add_argument("--require-serving", action="store_true",
+                    help="fail (instead of noting) when the fresh report "
+                         "has no serving rows — CI sets this")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline kernel rows from the fresh "
+                         "run (serving floors stay hand-maintained)")
+    args = ap.parse_args()
+
+    fresh_path = args.fresh or find_fresh(
+        ["BENCH_linalg.json", "rust/BENCH_linalg.json"])
+    if fresh_path is None or not os.path.exists(fresh_path):
+        if args.require_serving:
+            # CI mode: a vanished report must read as "the gate is off",
+            # never as a pass.
+            print("bench_regression: FAIL — no fresh BENCH_linalg.json "
+                  "found but --require-serving is set; the bench steps "
+                  "did not produce the canonical report")
+            return 1
+        print("bench_regression: no fresh BENCH_linalg.json found — "
+              "skipping (run `cargo bench --bench linalg_kernels` first)")
+        return 0
+
+    doc = load_doc(fresh_path)
+    fresh = kernel_rows(doc)
+    serving = serving_rows(doc)
+    if not fresh and not serving:
+        print(f"bench_regression: FAIL — {fresh_path} exists but has no "
+              f"usable `{SECTION}` or `{SERVING_SECTION}` rows; an empty "
+              "report must not pass the gate")
+        return 1
+
+    if args.update:
+        if not fresh:
+            # A serving-only report must not blow away the committed
+            # kernel floors — that would silently disable the kernel
+            # gate forever after.
+            print(f"bench_regression: FAIL — refusing --update: "
+                  f"{fresh_path} has no `{SECTION}` rows (run "
+                  "`cargo bench --bench linalg_kernels` first)")
+            return 1
+        baseline_doc = {}
+        if os.path.exists(args.baseline):
+            baseline_doc = load_doc(args.baseline)
+        baseline_doc[SECTION] = doc.get(SECTION, [])
+        with open(args.baseline, "w") as f:
+            json.dump(baseline_doc, f, indent=1, sort_keys=True)
+        print(f"bench_regression: baseline updated from {fresh_path} "
+              f"({len(baseline_doc[SECTION])} kernel rows; serving floors "
+              "left as committed)")
+        return 0
+
+    # --require-serving is effectively "CI mode": every gated section
+    # must be present.  Local runs that benched only one side get a note
+    # for the missing section instead (the both-missing case already
+    # failed above).
+    baseline_doc = (load_doc(args.baseline)
+                    if os.path.exists(args.baseline) else None)
+    failures = []
+    if fresh:
+        check_kernels(fresh, baseline_doc, args.baseline, args.tolerance,
+                      args.min_ratio, failures)
+    elif args.require_serving:
+        failures.append(f"{fresh_path}: `{SECTION}` section is missing or "
+                        "empty — did the kernel bench run?")
+    else:
+        print(f"bench_regression: note — no `{SECTION}` rows; kernel "
+              "checks skipped")
+    if serving:
+        check_serving(serving, baseline_doc, args.baseline,
+                      args.require_serving, failures)
+    elif args.require_serving:
+        failures.append(f"{fresh_path}: `{SERVING_SECTION}` section is "
+                        "missing or empty — did serve_bench run?")
+    else:
+        print(f"bench_regression: note — no `{SERVING_SECTION}` rows; "
+              "serving checks skipped (CI runs with --require-serving)")
 
     if failures:
         print("\nbench_regression: FAIL")

@@ -1,21 +1,29 @@
 //! Bench: multi-adapter serving throughput and latency — the CI-gated
-//! `serving` section of `BENCH_linalg.json`.
+//! `serving` and `serving_model` sections of `BENCH_linalg.json`.
 //!
-//! Two scenarios:
+//! Three scenarios:
 //!
-//! 1. **acceptance** — 64 adapters, Zipf 1.1 popularity, firehose
-//!    injection.  The `batched_vs_sequential` field is the acceptance
-//!    metric (target 1.5x; `tools/bench_regression.py` gates on it),
-//!    and the throughput / p99 rows feed the conservative `serving`
-//!    floors in `BENCH_baseline.json`.
+//! 1. **acceptance** — 64 adapters, one site, Zipf 1.1 popularity,
+//!    firehose injection.  The `batched_vs_sequential` field is the
+//!    acceptance metric (target 1.5x; `tools/bench_regression.py`
+//!    gates on it), and the throughput / p99 rows feed the
+//!    conservative `serving` floors in `BENCH_baseline.json`.
 //! 2. **paced** — the same fleet at a modest arrival rate, so the
 //!    latency percentiles reflect scheduling delay rather than pure
 //!    queue drain.
+//! 3. **model acceptance** — the whole-adapted-model scenario: 24
+//!    heterogeneous sites × 64 adapters, Zipf over adapters, every
+//!    request touching every site, with the projection-cache budget
+//!    under the total working set.  Gated fields: throughput floor,
+//!    p99 ceiling, and `shared_vs_persite` (one shared LRU must not
+//!    lose to statically partitioned per-site caches).
 //!
-//! Knobs come from the default `[serve]` table; `COSA_SERVE_*` env
-//! overrides apply (so a pinned CI runner can pin workers).
+//! Knobs come from the default `[serve]` / `[model]` tables;
+//! `COSA_SERVE_*` / `COSA_MODEL_*` env overrides apply (so a pinned CI
+//! runner can pin workers or shrink the fleet).
 
-use cosa::serve::bench::{run, ServeBenchOpts};
+use cosa::config::ModelConfig;
+use cosa::serve::bench::{run, run_model, ModelBenchOpts, ServeBenchOpts};
 use cosa::util::bench::write_bench_json;
 use cosa::util::json::Json;
 
@@ -51,4 +59,36 @@ fn main() {
     }
 
     write_bench_json("serving", Json::Arr(rows));
+
+    // Scenario 3: the whole-model acceptance workload (24 sites x 64
+    // adapters).  The spec honors COSA_MODEL_* so a pinned runner can
+    // reshape it; the serve knobs reuse the scenario-1 env overrides,
+    // but the cache budget stays the model default (pressure is the
+    // point of the shared-vs-per-site gate).
+    let mdefaults = ModelBenchOpts::default();
+    let model_cfg = ModelConfig::default().env_overridden();
+    let mut model_rows: Vec<Json> = Vec::new();
+    match model_cfg.to_spec("serve-bench") {
+        Ok(spec) => {
+            let mopts = ModelBenchOpts {
+                spec,
+                cfg: cosa::config::ServeConfig {
+                    cache_mb: mdefaults.cfg.cache_mb,
+                    ..acceptance.cfg.clone()
+                },
+                ..mdefaults
+            };
+            match run_model(&mopts) {
+                Ok(report) => {
+                    report.print();
+                    model_rows.push(report.to_json());
+                }
+                Err(e) => {
+                    eprintln!("serve_bench model scenario failed: {e:#}")
+                }
+            }
+        }
+        Err(e) => eprintln!("serve_bench model spec invalid: {e:#}"),
+    }
+    write_bench_json("serving_model", Json::Arr(model_rows));
 }

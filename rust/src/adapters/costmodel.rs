@@ -106,6 +106,35 @@ pub fn storage_bytes(method: Method, arch: &Arch, c: &CostCfg) -> usize {
     }
 }
 
+/// A serving [`ModelSpec`](crate::model::ModelSpec)'s sites as cost
+/// sites (`n_in = n`, `n_out = m`) — the bridge between the serving
+/// layer's shape contract and this module's Table 1 / Figure 3
+/// arithmetic.
+pub fn spec_sites(spec: &crate::model::ModelSpec) -> Vec<Site> {
+    spec.sites
+        .iter()
+        .map(|s| Site { n_in: s.shape.n, n_out: s.shape.m })
+        .collect()
+}
+
+/// Trainable parameters of one adapter across a whole served model:
+/// `Σ a_s·b_s` over its sites.  Unlike [`total_params`] (which applies
+/// one global `(a, b)` to every site), this honors the spec's per-site
+/// heterogeneous core dims.
+pub fn spec_params(spec: &crate::model::ModelSpec) -> usize {
+    spec.core_params()
+}
+
+/// Storage on disk for one whole-model CoSA adapter: every per-site
+/// core plus **one** seed — the multi-site generalization of the
+/// paper's "Y plus a seed" (§4.1).  All N sites regenerate their
+/// projections from the same 8 bytes, which is exactly why a model's
+/// adapter set stays tiny (checkpoint v2 materializes this layout; its
+/// header overhead is measured by `Checkpoint::size_bytes`, not here).
+pub fn spec_storage_bytes(spec: &crate::model::ModelSpec) -> usize {
+    spec_params(spec) * 4 + 8
+}
+
 /// Asymptotic complexity strings for Table 1.
 pub fn table1_row(method: Method) -> (&'static str, &'static str,
                                       &'static str, &'static str) {
@@ -211,5 +240,42 @@ mod tests {
         let m = &Arch::paper_models()[0];
         let p = total_params(Method::CoSA, m, &c);
         assert_eq!(storage_bytes(Method::CoSA, m, &c), p * 4 + 8);
+    }
+
+    #[test]
+    fn model_spec_aggregation_matches_uniform_arch_math() {
+        use crate::model::{ModelSpec, SiteShape, SiteSpec};
+        // A homogeneous spec must agree with the Arch-based count for
+        // the same dims, and the whole model still costs ONE seed.
+        let shape = SiteShape { m: 64, n: 48 };
+        let sites: Vec<SiteSpec> = (0..5)
+            .map(|i| SiteSpec {
+                name: format!("adp.{i}.wq"),
+                shape,
+                a: 16,
+                b: 12,
+            })
+            .collect();
+        let spec = ModelSpec::new("uniform", sites).unwrap();
+        let arch = Arch {
+            name: "uniform",
+            sites: vec![Site { n_in: 48, n_out: 64 }; 5],
+        };
+        let c = CostCfg { r: 8, a: 16, b: 12, nola_k: 8, full_params: 0 };
+        assert_eq!(spec_params(&spec), total_params(Method::CoSA, &arch, &c));
+        assert_eq!(spec_storage_bytes(&spec), 5 * 16 * 12 * 4 + 8,
+                   "N sites amortize a single 8-byte seed");
+        assert_eq!(spec_sites(&spec).len(), 5);
+        assert_eq!(spec_sites(&spec)[0].n_out, 64);
+    }
+
+    #[test]
+    fn model_spec_aggregation_honors_per_site_heterogeneity() {
+        use crate::model::{ModelSpec, SiteShape};
+        let spec =
+            ModelSpec::synthetic(4, SiteShape { m: 32, n: 32 }, 8, 6);
+        // sites 0/2 are 8x6 cores, sites 1/3 are 4x3 (KaSA-style)
+        assert_eq!(spec_params(&spec), 2 * 48 + 2 * 12);
+        assert_eq!(spec_storage_bytes(&spec), (2 * 48 + 2 * 12) * 4 + 8);
     }
 }

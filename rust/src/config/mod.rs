@@ -177,6 +177,119 @@ impl ServeConfig {
     }
 }
 
+/// Adapted-model shape knobs (TOML table `[model]`; the `COSA_MODEL_*`
+/// env vars override via [`ModelConfig::env_overridden`]).  Describes
+/// the [`model::ModelSpec`](crate::model::ModelSpec) multi-site serving
+/// and benching build: either the synthetic preset (`sites = N` plus
+/// per-site dims) or an explicit `sites_spec` list of
+/// `"name:MxN:AxB"` strings (which wins when non-empty — that is also
+/// where per-site heterogeneous core dims are expressed directly).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    /// Synthetic preset: number of sites.
+    pub sites: usize,
+    /// Synthetic preset: every site's adapted-weight dims.
+    pub site_m: usize,
+    pub site_n: usize,
+    /// Synthetic preset: base core dims (odd sites get half — see
+    /// `ModelSpec::synthetic`).
+    pub core_a: usize,
+    pub core_b: usize,
+    /// Explicit site list (`"name:MxN:AxB"` each); overrides the
+    /// synthetic preset when non-empty.
+    pub sites_spec: Vec<String>,
+}
+
+impl Default for ModelConfig {
+    fn default() -> Self {
+        // The serving_model acceptance scenario's shape (24
+        // heterogeneous sites of 96x96 with 16x12 base cores).
+        ModelConfig {
+            sites: 24,
+            site_m: 96,
+            site_n: 96,
+            core_a: 16,
+            core_b: 12,
+            sites_spec: Vec::new(),
+        }
+    }
+}
+
+impl ModelConfig {
+    /// Apply the `COSA_MODEL_*` env overrides (read fresh per call,
+    /// mirroring `COSA_SERVE_*`): `COSA_MODEL_SITES`,
+    /// `COSA_MODEL_SITE_M`, `COSA_MODEL_SITE_N`, `COSA_MODEL_CORE_A`,
+    /// `COSA_MODEL_CORE_B`, and `COSA_MODEL_SITES_SPEC` (comma-separated
+    /// `name:MxN:AxB` entries).  Unparseable values warn and fall back.
+    pub fn env_overridden(&self) -> ModelConfig {
+        fn env_num(key: &str, fallback: usize) -> usize {
+            match std::env::var(key) {
+                Ok(s) => match s.parse::<usize>() {
+                    Ok(v) => v,
+                    Err(_) => {
+                        eprintln!(
+                            "warning: ignoring {key}=`{s}` (not a valid \
+                             value)"
+                        );
+                        fallback
+                    }
+                },
+                Err(_) => fallback,
+            }
+        }
+        let mut out = self.clone();
+        out.sites = env_num("COSA_MODEL_SITES", out.sites);
+        out.site_m = env_num("COSA_MODEL_SITE_M", out.site_m);
+        out.site_n = env_num("COSA_MODEL_SITE_N", out.site_n);
+        out.core_a = env_num("COSA_MODEL_CORE_A", out.core_a);
+        out.core_b = env_num("COSA_MODEL_CORE_B", out.core_b);
+        if let Ok(s) = std::env::var("COSA_MODEL_SITES_SPEC") {
+            out.sites_spec = s
+                .split(',')
+                .map(|p| p.trim().to_string())
+                .filter(|p| !p.is_empty())
+                .collect();
+        }
+        out
+    }
+
+    /// Build the [`ModelSpec`](crate::model::ModelSpec) this config
+    /// describes: the explicit `sites_spec` list when non-empty, else
+    /// the synthetic preset.
+    pub fn to_spec(
+        &self,
+        name: &str,
+    ) -> anyhow::Result<crate::model::ModelSpec> {
+        use crate::model::{ModelSpec, SiteShape};
+        if !self.sites_spec.is_empty() {
+            return ModelSpec::from_site_list(name, &self.sites_spec);
+        }
+        anyhow::ensure!(
+            self.sites >= 1,
+            "model.sites must be >= 1 (got {})",
+            self.sites
+        );
+        anyhow::ensure!(
+            self.site_m >= 1 && self.site_n >= 1
+                && self.core_a >= 1 && self.core_b >= 1,
+            "model dims must be >= 1 (site {}x{}, core {}x{})",
+            self.site_m,
+            self.site_n,
+            self.core_a,
+            self.core_b
+        );
+        let spec = ModelSpec::synthetic(
+            self.sites,
+            SiteShape { m: self.site_m, n: self.site_n },
+            self.core_a,
+            self.core_b,
+        );
+        // give the spec the caller's name (synthetic() labels it by
+        // site count, which is right for benches but not for configs)
+        Ok(ModelSpec { name: name.to_string(), ..spec })
+    }
+}
+
 /// A full run description.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -189,6 +302,7 @@ pub struct RunConfig {
     pub train: TrainConfig,
     pub compute: ComputeConfig,
     pub serve: ServeConfig,
+    pub model: ModelConfig,
     pub base_seed: u64,
     pub adapter_seed: u64,
     pub data_seed: u64,
@@ -204,6 +318,7 @@ impl Default for RunConfig {
             train: TrainConfig::default(),
             compute: ComputeConfig::default(),
             serve: ServeConfig::default(),
+            model: ModelConfig::default(),
             base_seed: 42,
             adapter_seed: 1234,
             data_seed: 7,
@@ -270,6 +385,38 @@ impl RunConfig {
                         "serve.workers must be >= 0 (got {workers}; \
                          use 0 for auto)");
         s.workers = workers as usize;
+
+        let m = &mut cfg.model;
+        for (key, field) in [
+            ("model.sites", &mut m.sites),
+            ("model.site_m", &mut m.site_m),
+            ("model.site_n", &mut m.site_n),
+            ("model.core_a", &mut m.core_a),
+            ("model.core_b", &mut m.core_b),
+        ] {
+            let v = doc.i64_or(key, *field as i64);
+            anyhow::ensure!(v >= 1, "{key} must be >= 1 (got {v})");
+            *field = v as usize;
+        }
+        if let Some(val) = doc.get("model.sites_spec") {
+            let crate::util::toml::TomlValue::Arr(items) = val else {
+                anyhow::bail!("model.sites_spec must be an array of \
+                               \"name:MxN:AxB\" strings");
+            };
+            m.sites_spec = items
+                .iter()
+                .map(|v| {
+                    v.as_str().map(str::to_string).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "model.sites_spec entries must be strings"
+                        )
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+        }
+        // Fail fast on unbuildable model tables (bad site-spec syntax,
+        // duplicate site names) instead of at first use.
+        cfg.model.to_spec(&cfg.name)?;
         Ok(cfg)
     }
 
@@ -378,6 +525,71 @@ data = 3
         std::env::remove_var("COSA_SERVE_CACHE_MB");
         let cfg = ServeConfig::default().env_overridden();
         assert_eq!(cfg, ServeConfig::default());
+    }
+
+    #[test]
+    fn model_table_parses_and_validates() {
+        let cfg = RunConfig::from_toml(
+            "[model]\nsites = 4\nsite_m = 32\nsite_n = 24\ncore_a = 8\n\
+             core_b = 6",
+        )
+        .unwrap();
+        assert_eq!(cfg.model.sites, 4);
+        assert_eq!((cfg.model.site_m, cfg.model.site_n), (32, 24));
+        let spec = cfg.model.to_spec("run").unwrap();
+        assert_eq!(spec.len(), 4);
+        assert_eq!(spec.name, "run");
+        assert!(RunConfig::from_toml("[model]\nsites = 0").is_err());
+        assert!(RunConfig::from_toml("[model]\ncore_a = -3").is_err());
+        // defaults when the table is absent
+        let d = RunConfig::from_toml("").unwrap();
+        assert_eq!(d.model, ModelConfig::default());
+        assert_eq!(d.model.to_spec("x").unwrap().len(), 24);
+    }
+
+    #[test]
+    fn model_site_list_overrides_synthetic_preset() {
+        let cfg = RunConfig::from_toml(
+            "[model]\nsites = 9\nsites_spec = [\"adp.0.wq:16x12:4x3\", \
+             \"adp.0.wv:16x12:2x3\"]",
+        )
+        .unwrap();
+        let spec = cfg.model.to_spec("m").unwrap();
+        assert_eq!(spec.len(), 2, "explicit list wins over sites = 9");
+        assert_eq!(spec.sites[0].name, "adp.0.wq");
+        assert_eq!((spec.sites[1].a, spec.sites[1].b), (2, 3),
+                   "per-site heterogeneous cores come from the list");
+        // config parsing fails fast on malformed or duplicate entries
+        assert!(RunConfig::from_toml(
+            "[model]\nsites_spec = [\"nodims\"]").is_err());
+        assert!(RunConfig::from_toml(
+            "[model]\nsites_spec = [\"a:2x2:1x1\", \"a:2x2:1x1\"]")
+            .is_err());
+        assert!(RunConfig::from_toml(
+            "[model]\nsites_spec = 7").is_err());
+    }
+
+    #[test]
+    fn model_env_overrides_win_and_warn_on_garbage() {
+        std::env::set_var("COSA_MODEL_SITES", "3");
+        std::env::set_var("COSA_MODEL_CORE_A", "not-a-number");
+        std::env::set_var("COSA_MODEL_SITES_SPEC", "");
+        let cfg = ModelConfig::default().env_overridden();
+        assert_eq!(cfg.sites, 3, "env wins over the default");
+        assert_eq!(cfg.core_a, ModelConfig::default().core_a,
+                   "garbage env value falls back");
+        assert!(cfg.sites_spec.is_empty(),
+                "empty spec env means no explicit sites");
+        std::env::set_var("COSA_MODEL_SITES_SPEC",
+                          "adp.0.wq:8x8:2x2, adp.0.wv:8x8:2x2");
+        let cfg = ModelConfig::default().env_overridden();
+        assert_eq!(cfg.sites_spec.len(), 2);
+        assert_eq!(cfg.to_spec("m").unwrap().len(), 2);
+        std::env::remove_var("COSA_MODEL_SITES");
+        std::env::remove_var("COSA_MODEL_CORE_A");
+        std::env::remove_var("COSA_MODEL_SITES_SPEC");
+        let cfg = ModelConfig::default().env_overridden();
+        assert_eq!(cfg, ModelConfig::default());
     }
 
     #[test]

@@ -34,18 +34,25 @@
 //! `COSA_SIMD` env overrides — see the `linalg` module docs for the
 //! exact rules.
 //!
-//! ## Multi-adapter serving (`serve`)
+//! ## Adapted models and multi-adapter serving (`model`, `serve`)
 //!
 //! The paper's §4.1 deployment story — an adapter is only the compact
 //! core plus a seed that regenerates its projections — scales to *many
-//! adapters per base model*: the [`serve`] subsystem provides an
-//! adapter registry (checkpoints loaded by name, regenerated `L`/`R`
-//! cached in a byte-budgeted LRU, hot load/evict with bit-identical
-//! re-materialization), a batched request scheduler (per-adapter
-//! batches under a max-batch/max-wait policy on a Workspace-backed
-//! worker pool) and the `serve-bench` workload driver whose `serving`
-//! report section CI gates.  Knobs live in the `[serve]` config table
-//! (`config::ServeConfig`) with `COSA_SERVE_*` env overrides.
+//! adapters across every adapted site of a base model*.  The [`model`]
+//! layer defines the shape contract ([`model::ModelSpec`]: ordered
+//! named sites with per-site core dims) and [`model::AdaptedModel`]
+//! (N sites, many named adapters, one shared byte-budgeted projection
+//! LRU).  The [`serve`] subsystem builds on it: checkpoints loaded by
+//! name (v2 files carry all per-site cores under one adapter name),
+//! hot load/evict with bit-identical re-materialization, a batched
+//! request scheduler (whole multi-site requests batched per adapter
+//! under a max-batch/max-wait policy with per-request deadlines and
+//! cancellation, on a Workspace-backed worker pool with pooled output
+//! buffers) and the `serve-bench` workload driver whose `serving` and
+//! `serving_model` report sections CI gates.  Knobs live in the
+//! `[serve]` and `[model]` config tables (`config::ServeConfig`,
+//! `config::ModelConfig`) with `COSA_SERVE_*` / `COSA_MODEL_*` env
+//! overrides.
 //!
 //! ## Offline builds
 //!
@@ -61,6 +68,7 @@ pub mod eval;
 pub mod exp;
 pub mod linalg;
 pub mod math;
+pub mod model;
 pub mod rip;
 pub mod runtime;
 pub mod serve;

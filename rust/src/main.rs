@@ -114,17 +114,21 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `serve-bench`: drive the multi-adapter serving engine under a
-/// synthetic Zipf workload and write the `serving` section of the
-/// canonical `BENCH_linalg.json`.  Knob precedence, highest first:
-/// CLI flags, `COSA_SERVE_*` env, `[serve]` config table.  The preset
-/// worker hint (`ServeConfig::resolved`) is deliberately NOT applied:
-/// it describes serving a *model preset's* site, while this bench runs
-/// its own synthetic site — pinning workers to the tiny-preset hint
-/// here would silently bench single-worker and diverge from what
-/// `cargo bench --bench serve_bench` (CI) measures.
+/// `serve-bench`: drive the multi-adapter serving engine under
+/// synthetic Zipf workloads and write the `serving` (single-site) and
+/// `serving_model` (whole adapted model) sections of the canonical
+/// `BENCH_linalg.json`.  Knob precedence, highest first: CLI flags,
+/// `COSA_SERVE_*` / `COSA_MODEL_*` env, `[serve]` / `[model]` config
+/// tables.  The preset worker hint (`ServeConfig::resolved`) is
+/// deliberately NOT applied: it describes serving a *model preset's*
+/// site, while this bench runs its own synthetic shapes — pinning
+/// workers to the tiny-preset hint here would silently bench
+/// single-worker and diverge from what `cargo bench --bench
+/// serve_bench` (CI) measures.
 fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
-    use cosa::serve::bench::{run, ServeBenchOpts};
+    use cosa::serve::bench::{
+        run, run_model, ModelBenchOpts, ServeBenchOpts,
+    };
     use cosa::serve::SiteShape;
     use cosa::util::json::Json;
 
@@ -160,12 +164,48 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         core_a: args.usize("core-a", defaults.core_a),
         core_b: args.usize("core-b", defaults.core_b),
         seed: args.u64("seed", defaults.seed),
-        cfg: serve,
+        cfg: serve.clone(),
     };
     let report = run(&opts)?;
     report.print();
     cosa::util::bench::write_bench_json("serving",
                                         Json::Arr(vec![report.to_json()]));
+
+    // Whole-model scenario (the system's default shape): every request
+    // exercises every site of a [model]-described spec.  --skip-model
+    // keeps single-site explorations cheap.
+    if args.bool("skip-model") {
+        return Ok(());
+    }
+    let mut model_cfg = cfg.model.env_overridden();
+    if let Some(v) = args.opt("sites") {
+        model_cfg.sites = v.parse()?;
+        anyhow::ensure!(model_cfg.sites >= 1, "--sites must be >= 1");
+        // an explicit count asks for the synthetic preset
+        model_cfg.sites_spec.clear();
+    }
+    let mdefaults = ModelBenchOpts::default();
+    let model_serve = cosa::config::ServeConfig {
+        // model cache pressure is its own knob — the single-site
+        // default (64 MiB) would make the shared-vs-per-site
+        // comparison an everything-resident no-op
+        cache_mb: args.f64("model-cache-mb", mdefaults.cfg.cache_mb),
+        ..serve
+    };
+    anyhow::ensure!(model_serve.cache_mb >= 0.0,
+                    "--model-cache-mb must be >= 0");
+    let mopts = ModelBenchOpts {
+        spec: model_cfg.to_spec("serve-bench")?,
+        adapters: args.usize("adapters", mdefaults.adapters),
+        requests: args.usize("model-requests", mdefaults.requests),
+        zipf: args.f64("zipf", mdefaults.zipf),
+        seed: args.u64("seed", mdefaults.seed),
+        cfg: model_serve,
+    };
+    let mreport = run_model(&mopts)?;
+    mreport.print();
+    cosa::util::bench::write_bench_json(
+        "serving_model", Json::Arr(vec![mreport.to_json()]));
     Ok(())
 }
 
@@ -195,9 +235,15 @@ USAGE: cosa-repro <subcommand> [flags]
   serve-bench  [--adapters N --requests N --zipf S --rate RPS]
           [--batch N --wait-us U --workers N --cache-mb F]
           [--site-m M --site-n N --core-a A --core-b B --seed S]
-          multi-adapter serving benchmark: batched scheduler vs
-          sequential per-request forward; writes the `serving`
-          section of BENCH_linalg.json ([serve] config table and
-          COSA_SERVE_* env provide the defaults)
+          [--sites N --model-requests N --model-cache-mb F]
+          [--skip-model]
+          multi-adapter serving benchmarks: the single-site scenario
+          (batched scheduler vs sequential per-request forward ->
+          `serving` section of BENCH_linalg.json) plus the whole-model
+          scenario (N sites x M adapters, shared projection LRU vs
+          per-site-partitioned caches -> `serving_model` section).
+          [serve]/[model] config tables and COSA_SERVE_*/COSA_MODEL_*
+          env provide the defaults; --skip-model runs only the
+          single-site scenario
   list    show artifacts (build with `make artifacts`)
 ";

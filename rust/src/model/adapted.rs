@@ -1,0 +1,912 @@
+//! `AdaptedModel` — one base model, N adapted sites, many named
+//! adapters, one shared byte-budgeted [`ProjectionCache`].
+//!
+//! This is the multi-site generalization of the PR-3 single-site
+//! serving registry: an *adapter* is no longer one core but a **set of
+//! cores keyed by site** (one `a_s × b_s` core per [`SiteSpec`] of the
+//! [`ModelSpec`]), all regenerating their fixed `L`/`R` projections from
+//! **one seed** — so a whole model's adapter artifact is still just
+//! `Σ a_s·b_s` floats plus 8 bytes of seed (`adapters::costmodel`
+//! aggregates the exact numbers).  The projection LRU is deliberately
+//! shared across sites: one byte budget arbitrates residency over every
+//! `(site, adapter)` pair, so a hot adapter keeps its entire per-model
+//! projection set warm while cold sites age out — instead of each site
+//! hoarding a fixed budget slice (`serve::bench::run_model` measures
+//! shared-vs-per-site and CI gates the ratio).
+//!
+//! The two-phase [`AdaptedModel::plan`] / [`AdaptedModel::install`]
+//! lookup extends the single-site split to whole requests: one `plan`
+//! call under the lock resolves every warm site and describes **all
+//! cold sites at once**, so a scheduler worker regenerates every missing
+//! projection of a request outside the lock in one go rather than
+//! re-taking the lock per site.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::adapters::cosa::{
+    adapter_forward, adapter_forward_into, regen_l, regen_r,
+};
+use crate::linalg::Workspace;
+use crate::math::matrix::Matrix;
+use crate::model::cache::{CacheStats, ProjectionCache};
+use crate::model::spec::{ModelSpec, SiteShape};
+use crate::train::checkpoint::{Checkpoint, CkptSite};
+
+/// One site's contribution to a registered adapter: the trained core
+/// plus the tensor names its projections regenerate from.
+#[derive(Clone)]
+pub struct SiteCore {
+    /// Tensor name the `L` projection derives from (must match what
+    /// training used or the regenerated `L` differs).
+    pub l_name: String,
+    pub r_name: String,
+    /// Trained core (`a × b` per the site's spec).
+    pub y: Arc<Matrix>,
+}
+
+/// Insert-side description of one site's core.
+pub struct CoreInput {
+    pub l_name: String,
+    pub r_name: String,
+    pub y: Matrix,
+}
+
+impl CoreInput {
+    pub fn new(l_name: &str, r_name: &str, y: Matrix) -> CoreInput {
+        CoreInput {
+            l_name: l_name.to_string(),
+            r_name: r_name.to_string(),
+            y,
+        }
+    }
+}
+
+/// One registered adapter: a per-site core set under one seed/alpha.
+#[derive(Clone)]
+pub struct ModelAdapter {
+    pub name: Arc<str>,
+    pub seed: u64,
+    pub alpha: f32,
+    /// Aligned with `ModelSpec::sites` (index i adapts site i).
+    pub cores: Vec<SiteCore>,
+}
+
+/// Per-site slice of a [`ModelPlan`]: `l`/`r` are `Some` on cache hits;
+/// on a miss the remaining fields describe the regeneration to perform
+/// outside the registry lock.
+pub struct SitePlan {
+    pub seed: u64,
+    pub l_name: String,
+    pub r_name: String,
+    pub m: usize,
+    pub n: usize,
+    pub a: usize,
+    pub b: usize,
+    pub y: Arc<Matrix>,
+    pub l: Option<Arc<Matrix>>,
+    pub r: Option<Arc<Matrix>>,
+}
+
+/// First phase of a whole-request lookup: every site of one adapter,
+/// warm sites resolved, cold sites described (see module docs).
+pub struct ModelPlan {
+    pub alpha: f32,
+    pub sites: Vec<SitePlan>,
+}
+
+impl ModelPlan {
+    /// `(l, r)` regeneration slots for [`AdaptedModel::install`] —
+    /// `None`/`None` everywhere, for inline (lock-free) callers.
+    pub fn no_regen(&self) -> Vec<(Option<Matrix>, Option<Matrix>)> {
+        self.sites.iter().map(|_| (None, None)).collect()
+    }
+}
+
+/// Everything one site's forward needs, `Arc`-shared so the registry
+/// lock can be released before any compute starts.
+#[derive(Clone)]
+pub struct SiteHandles {
+    pub l: Arc<Matrix>,
+    pub r: Arc<Matrix>,
+    pub y: Arc<Matrix>,
+}
+
+/// Everything one *request's* forward needs: all sites of one adapter.
+#[derive(Clone)]
+pub struct ModelHandles {
+    pub alpha: f32,
+    pub sites: Vec<SiteHandles>,
+}
+
+/// Multi-site adapter registry over one [`ModelSpec`] (see module docs).
+pub struct AdaptedModel {
+    spec: Arc<ModelSpec>,
+    adapters: BTreeMap<Arc<str>, ModelAdapter>,
+    cache: ProjectionCache,
+}
+
+impl AdaptedModel {
+    /// Validating constructor: the spec is fixed for the model's
+    /// lifetime; every adapter must conform to it.
+    pub fn new(
+        spec: ModelSpec,
+        cache_budget_bytes: usize,
+    ) -> anyhow::Result<AdaptedModel> {
+        spec.validate()?;
+        Ok(AdaptedModel {
+            spec: Arc::new(spec),
+            adapters: BTreeMap::new(),
+            cache: ProjectionCache::new(cache_budget_bytes),
+        })
+    }
+
+    /// One-site model whose site stem is `site_name` (the PR-3 registry
+    /// shape; infallible because the 1-site spec is valid by
+    /// construction for nonzero dims — zero dims panic here, matching
+    /// the old registry's insert-time check).
+    pub fn single_site(
+        site_name: &str,
+        shape: SiteShape,
+        a: usize,
+        b: usize,
+        cache_budget_bytes: usize,
+    ) -> AdaptedModel {
+        AdaptedModel::new(ModelSpec::single(site_name, shape, a, b),
+                          cache_budget_bytes)
+            .expect("single-site spec with nonzero dims is always valid")
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    pub fn spec_arc(&self) -> Arc<ModelSpec> {
+        self.spec.clone()
+    }
+
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    pub fn reset_cache_stats(&mut self) {
+        self.cache.reset_stats();
+    }
+
+    /// Resident projection bytes (diagnostic; see `ProjectionCache`).
+    pub fn cache_bytes(&self) -> usize {
+        self.cache.bytes()
+    }
+
+    #[cfg(test)]
+    pub(crate) fn cache(&self) -> &ProjectionCache {
+        &self.cache
+    }
+
+    /// Registered adapter names (sorted — BTreeMap order).
+    pub fn names(&self) -> Vec<Arc<str>> {
+        self.adapters.keys().cloned().collect()
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.adapters.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.adapters.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.adapters.is_empty()
+    }
+
+    /// Hot-load an adapter from its parts: one core per spec site, in
+    /// spec order.  Replaces any same-named adapter.  Every core must
+    /// match its site's `(a, b)` — per-site heterogeneity lives in the
+    /// spec, not in individual adapters.
+    pub fn insert(
+        &mut self,
+        name: &str,
+        seed: u64,
+        alpha: f32,
+        cores: Vec<CoreInput>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            cores.len() == self.spec.len(),
+            "adapter `{name}`: {} cores for model `{}` with {} sites",
+            cores.len(),
+            self.spec.name,
+            self.spec.len()
+        );
+        let mut stored = Vec::with_capacity(cores.len());
+        for (core, site) in cores.into_iter().zip(&self.spec.sites) {
+            anyhow::ensure!(
+                core.y.rows == site.a && core.y.cols == site.b,
+                "adapter `{name}` site `{}`: core is {}x{}, spec wants {}x{}",
+                site.name,
+                core.y.rows,
+                core.y.cols,
+                site.a,
+                site.b
+            );
+            anyhow::ensure!(
+                !core.l_name.is_empty() && !core.r_name.is_empty(),
+                "adapter `{name}` site `{}`: empty projection tensor name",
+                site.name
+            );
+            stored.push(SiteCore {
+                l_name: core.l_name,
+                r_name: core.r_name,
+                y: Arc::new(core.y),
+            });
+        }
+        let key: Arc<str> = Arc::from(name);
+        let adapter = ModelAdapter {
+            name: key.clone(),
+            seed,
+            alpha,
+            cores: stored,
+        };
+        self.adapters.insert(key, adapter);
+        Ok(())
+    }
+
+    /// `insert` with the canonical projection names derived from the
+    /// spec's site stems (`<site>.l` / `<site>.r`) — the synthetic-bench
+    /// and freshly-trained-adapter path.
+    pub fn insert_synthetic(
+        &mut self,
+        name: &str,
+        seed: u64,
+        alpha: f32,
+        ys: Vec<Matrix>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            ys.len() == self.spec.len(),
+            "adapter `{name}`: {} cores for {} sites",
+            ys.len(),
+            self.spec.len()
+        );
+        let cores = ys
+            .into_iter()
+            .zip(&self.spec.sites)
+            .map(|(y, s)| CoreInput {
+                l_name: s.l_name(),
+                r_name: s.r_name(),
+                y,
+            })
+            .collect();
+        self.insert(name, seed, alpha, cores)
+    }
+
+    /// Hot-load from a checkpoint.
+    ///
+    /// * **v2** (site-aware header): every spec site must be covered by
+    ///   a same-named checkpoint site block with matching dims; cores
+    ///   come from the `<site>.y` tensors and projections regenerate
+    ///   from the canonical `<site>.l` / `<site>.r` names.
+    /// * **v1** (no site metadata): for a single-site model the first
+    ///   2-d `*.y` tensor (BTreeMap order) serves the site — the PR-3
+    ///   behavior, so old files keep loading as a 1-site model.  For a
+    ///   multi-site model every spec site must find a `<site>.y`
+    ///   tensor (matched **by name**, never by position — tensor
+    ///   iteration order is lexicographic and silently binding cores
+    ///   to the wrong sites would serve wrong math) with matching
+    ///   dims.
+    pub fn load_checkpoint(
+        &mut self,
+        name: &str,
+        ck: &Checkpoint,
+        alpha: f32,
+    ) -> anyhow::Result<()> {
+        let cores = if !ck.sites.is_empty() {
+            self.cores_from_v2(name, ck)?
+        } else {
+            self.cores_from_v1(name, ck)?
+        };
+        self.insert(name, ck.adapter_seed, alpha, cores)
+    }
+
+    fn cores_from_v2(
+        &self,
+        name: &str,
+        ck: &Checkpoint,
+    ) -> anyhow::Result<Vec<CoreInput>> {
+        let mut cores = Vec::with_capacity(self.spec.len());
+        for site in &self.spec.sites {
+            let blk = ck
+                .sites
+                .iter()
+                .find(|c| c.name == site.name)
+                .ok_or_else(|| anyhow::anyhow!(
+                    "checkpoint for `{name}` has no site block `{}` \
+                     (model `{}`)",
+                    site.name,
+                    self.spec.name
+                ))?;
+            anyhow::ensure!(
+                blk.m == site.shape.m
+                    && blk.n == site.shape.n
+                    && blk.a == site.a
+                    && blk.b == site.b,
+                "site `{}`: checkpoint says {}x{} core {}x{}, model spec \
+                 wants {}x{} core {}x{}",
+                site.name,
+                blk.m,
+                blk.n,
+                blk.a,
+                blk.b,
+                site.shape.m,
+                site.shape.n,
+                site.a,
+                site.b
+            );
+            let tname = format!("{}.y", site.name);
+            let (shape, vals) = ck.tensors.get(&tname).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "checkpoint for `{name}`: site `{}` has no `{tname}` \
+                     core tensor",
+                    site.name
+                )
+            })?;
+            anyhow::ensure!(
+                shape.as_slice() == [site.a, site.b],
+                "`{tname}`: shape {shape:?}, spec wants [{}, {}]",
+                site.a,
+                site.b
+            );
+            cores.push(CoreInput {
+                l_name: site.l_name(),
+                r_name: site.r_name(),
+                y: Matrix::from_vec(shape[0], shape[1], vals.clone()),
+            });
+        }
+        Ok(cores)
+    }
+
+    fn cores_from_v1(
+        &self,
+        name: &str,
+        ck: &Checkpoint,
+    ) -> anyhow::Result<Vec<CoreInput>> {
+        let ys: Vec<(&String, &(Vec<usize>, Vec<f32>))> = ck
+            .tensors
+            .iter()
+            .filter(|(n, (shape, _))| n.ends_with(".y") && shape.len() == 2)
+            .collect();
+        anyhow::ensure!(
+            !ys.is_empty(),
+            "checkpoint for `{name}` has no 2-d `*.y` core tensor"
+        );
+        let picked: Vec<_> = if self.spec.len() == 1 {
+            ys.into_iter().take(1).collect()
+        } else {
+            // Match by tensor stem == spec site name, order-independent.
+            // A v1 file whose stems don't cover the spec is ambiguous —
+            // refuse it rather than guess a positional binding.
+            self.spec
+                .sites
+                .iter()
+                .map(|site| {
+                    let want = format!("{}.y", site.name);
+                    ys.iter().find(|(n, _)| **n == want).copied().ok_or_else(
+                        || anyhow::anyhow!(
+                            "v1 checkpoint for `{name}` has no `{want}` \
+                             core for site `{}` (v1 stems must match the \
+                             model's site names; save a v2 checkpoint to \
+                             map sites explicitly)",
+                            site.name
+                        ),
+                    )
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?
+        };
+        let mut cores = Vec::with_capacity(picked.len());
+        for ((tname, (shape, vals)), site) in
+            picked.into_iter().zip(&self.spec.sites)
+        {
+            anyhow::ensure!(
+                shape.as_slice() == [site.a, site.b],
+                "`{tname}`: shape {shape:?}, site `{}` wants [{}, {}]",
+                site.name,
+                site.a,
+                site.b
+            );
+            let stem = tname.strip_suffix(".y").unwrap_or(tname);
+            cores.push(CoreInput {
+                l_name: format!("{stem}.l"),
+                r_name: format!("{stem}.r"),
+                y: Matrix::from_vec(shape[0], shape[1], vals.clone()),
+            });
+        }
+        Ok(cores)
+    }
+
+    /// Load-by-name entry point: resolve `name` to a checkpoint file in
+    /// `dir` (via [`Checkpoint::load_by_name`]) and hot-load it.
+    pub fn load_from_dir(
+        &mut self,
+        dir: &Path,
+        name: &str,
+        alpha: f32,
+    ) -> anyhow::Result<()> {
+        let ck = Checkpoint::load_by_name(dir, name)?;
+        self.load_checkpoint(name, &ck, alpha)
+    }
+
+    /// Snapshot a registered adapter as a v2 checkpoint (all per-site
+    /// cores under one name — the save half of the v2 format).  Requires
+    /// the adapter's projection names to be the canonical spec-derived
+    /// ones: a v2 file records sites, not arbitrary tensor stems, so a
+    /// custom-stem adapter would silently regenerate different
+    /// projections after a round-trip — rejected here instead.
+    pub fn checkpoint(
+        &self,
+        name: &str,
+        artifact: &str,
+    ) -> anyhow::Result<Checkpoint> {
+        let adapter = self
+            .adapters
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown adapter `{name}`"))?;
+        let mut tensors = BTreeMap::new();
+        let mut sites = Vec::with_capacity(self.spec.len());
+        for (core, site) in adapter.cores.iter().zip(&self.spec.sites) {
+            anyhow::ensure!(
+                core.l_name == site.l_name() && core.r_name == site.r_name(),
+                "adapter `{name}` site `{}`: projection names \
+                 (`{}`/`{}`) are not the canonical `<site>.l`/`<site>.r` \
+                 — a v2 checkpoint cannot represent them",
+                site.name,
+                core.l_name,
+                core.r_name
+            );
+            tensors.insert(
+                format!("{}.y", site.name),
+                (vec![site.a, site.b], core.y.data.clone()),
+            );
+            sites.push(CkptSite {
+                name: site.name.clone(),
+                m: site.shape.m,
+                n: site.shape.n,
+                a: site.a,
+                b: site.b,
+            });
+        }
+        Ok(Checkpoint {
+            version: 2,
+            method: "cosa".into(),
+            adapter_seed: adapter.seed,
+            artifact: artifact.to_string(),
+            step: 0,
+            sites,
+            tensors,
+        })
+    }
+
+    /// Drop an adapter.  Its projections stay in the LRU until the byte
+    /// budget pushes them out (another adapter may share the seed); a
+    /// later reload regenerates bit-identically either way.
+    pub fn evict(&mut self, name: &str) -> bool {
+        self.adapters.remove(name).is_some()
+    }
+
+    /// Lock-friendly first phase of a whole-request lookup: cache hits
+    /// resolve immediately into the plan; misses leave `l`/`r` as `None`
+    /// plus everything needed to regenerate them **outside** whatever
+    /// lock guards this model — all cold sites of the request described
+    /// by one call.  Hand the regenerated matrices back through
+    /// [`AdaptedModel::install`].
+    pub fn plan(&mut self, name: &str) -> anyhow::Result<ModelPlan> {
+        // Split borrows: the adapter stays borrowed from `adapters`
+        // while `cache` is touched mutably — cloning the whole adapter
+        // here would put one heap allocation per stored tensor name
+        // inside the very lock the plan/install split keeps brief.
+        let adapter = self
+            .adapters
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown adapter `{name}`"))?;
+        let cache = &mut self.cache;
+        let mut sites = Vec::with_capacity(self.spec.len());
+        for (core, site) in adapter.cores.iter().zip(&self.spec.sites) {
+            let (m, n) = (site.shape.m, site.shape.n);
+            let (a, b) = (site.a, site.b);
+            let l = cache.peek(&(adapter.seed, core.l_name.clone(), m, a));
+            let r = cache.peek(&(adapter.seed, core.r_name.clone(), b, n));
+            sites.push(SitePlan {
+                seed: adapter.seed,
+                l_name: core.l_name.clone(),
+                r_name: core.r_name.clone(),
+                m,
+                n,
+                a,
+                b,
+                y: core.y.clone(),
+                l,
+                r,
+            });
+        }
+        Ok(ModelPlan { alpha: adapter.alpha, sites })
+    }
+
+    /// Second phase: install projections regenerated outside the lock —
+    /// one `(l, r)` slot per site, `None` for anything the plan already
+    /// resolved (use [`ModelPlan::no_regen`] inline).  If two workers
+    /// raced the same cold adapter, the first install wins and the
+    /// loser's regenerated copies are dropped — both see identical bits
+    /// either way, regeneration being deterministic.
+    pub fn install(
+        &mut self,
+        plan: &ModelPlan,
+        regen: Vec<(Option<Matrix>, Option<Matrix>)>,
+    ) -> ModelHandles {
+        assert_eq!(
+            regen.len(),
+            plan.sites.len(),
+            "one regen slot per planned site"
+        );
+        let mut sites = Vec::with_capacity(plan.sites.len());
+        for (sp, (l_new, r_new)) in plan.sites.iter().zip(regen) {
+            let l = match &sp.l {
+                Some(hit) => hit.clone(),
+                None => {
+                    let (seed, m, a) = (sp.seed, sp.m, sp.a);
+                    let lname = sp.l_name.clone();
+                    self.cache.get_or((seed, lname.clone(), m, a), move || {
+                        l_new.unwrap_or_else(|| regen_l(seed, &lname, m, a))
+                    })
+                }
+            };
+            let r = match &sp.r {
+                Some(hit) => hit.clone(),
+                None => {
+                    let (seed, b, n) = (sp.seed, sp.b, sp.n);
+                    let rname = sp.r_name.clone();
+                    self.cache.get_or((seed, rname.clone(), b, n), move || {
+                        r_new.unwrap_or_else(|| regen_r(seed, &rname, b, n))
+                    })
+                }
+            };
+            sites.push(SiteHandles { l, r, y: sp.y.clone() });
+        }
+        ModelHandles { alpha: plan.alpha, sites }
+    }
+
+    /// Handles for one whole-request forward, through the LRU.  Cache
+    /// misses regenerate inline — single-owner callers (tests, the
+    /// sequential bench baselines) hold no lock, so the two-phase split
+    /// buys them nothing.
+    pub fn handles(&mut self, name: &str) -> anyhow::Result<ModelHandles> {
+        let plan = self.plan(name)?;
+        let regen = plan.no_regen();
+        Ok(self.install(&plan, regen))
+    }
+
+    /// Workspace-backed multi-site forward: `xs[i]` (`N × n_i`) runs
+    /// through site `i` into `outs[i]` (`N × m_i`) — exactly one
+    /// `adapter_forward_into` per site, so the result is bit-identical
+    /// to composing independent single-site calls (asserted in tests).
+    pub fn forward_into(
+        &mut self,
+        name: &str,
+        xs: &[Matrix],
+        ws: &mut Workspace,
+        outs: &mut [Matrix],
+    ) -> anyhow::Result<()> {
+        let h = self.handles(name)?;
+        anyhow::ensure!(
+            xs.len() == h.sites.len() && outs.len() == h.sites.len(),
+            "model `{}` has {} sites; got {} inputs / {} outputs",
+            self.spec.name,
+            h.sites.len(),
+            xs.len(),
+            outs.len()
+        );
+        for ((x, out), sh) in xs.iter().zip(outs.iter_mut()).zip(&h.sites) {
+            adapter_forward_into(x, &sh.l, &sh.r, &sh.y, h.alpha, ws, out);
+        }
+        Ok(())
+    }
+
+    /// Allocating multi-site forward (tests and the sequential bench
+    /// baselines): one output matrix per site.
+    pub fn forward(
+        &mut self,
+        name: &str,
+        xs: &[Matrix],
+    ) -> anyhow::Result<Vec<Matrix>> {
+        let h = self.handles(name)?;
+        anyhow::ensure!(
+            xs.len() == h.sites.len(),
+            "model `{}` has {} sites; got {} inputs",
+            self.spec.name,
+            h.sites.len(),
+            xs.len()
+        );
+        Ok(xs
+            .iter()
+            .zip(&h.sites)
+            .map(|(x, sh)| adapter_forward(x, &sh.l, &sh.r, &sh.y, h.alpha))
+            .collect())
+    }
+
+    /// Single-site sugar over [`AdaptedModel::forward`] for 1-site
+    /// models (the PR-3 registry surface).
+    pub fn forward_one(
+        &mut self,
+        name: &str,
+        x: &Matrix,
+    ) -> anyhow::Result<Matrix> {
+        anyhow::ensure!(
+            self.spec.len() == 1,
+            "forward_one needs a 1-site model; `{}` has {} sites",
+            self.spec.name,
+            self.spec.len()
+        );
+        let mut outs = self.forward(name, std::slice::from_ref(x))?;
+        Ok(outs.pop().expect("1-site forward yields one output"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Pcg64;
+
+    fn test_spec(sites: usize) -> ModelSpec {
+        ModelSpec::synthetic(sites, SiteShape { m: 12, n: 10 }, 4, 3)
+    }
+
+    fn add_adapter(model: &mut AdaptedModel, name: &str, seed: u64) {
+        let mut rng = Pcg64::derive(seed, name);
+        let ys: Vec<Matrix> = model
+            .spec()
+            .sites
+            .iter()
+            .map(|s| Matrix::gaussian(s.a, s.b, 0.5, &mut rng))
+            .collect();
+        model.insert_synthetic(name, seed, 2.0, ys).unwrap();
+    }
+
+    fn site_inputs(spec: &ModelSpec, rows: usize, seed: u64) -> Vec<Matrix> {
+        let mut rng = Pcg64::new(seed);
+        spec.sites
+            .iter()
+            .map(|s| Matrix::gaussian(rows, s.shape.n, 1.0, &mut rng))
+            .collect()
+    }
+
+    #[test]
+    fn multi_site_forward_is_bit_identical_to_independent_calls() {
+        // The acceptance criterion: AdaptedModel's batched forward over
+        // N heterogeneous sites == composing N independent single-site
+        // adapter_forward_into calls, bit for bit.
+        let spec = test_spec(3);
+        let mut model = AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+        add_adapter(&mut model, "a", 7);
+        let xs = site_inputs(&spec, 5, 1);
+
+        let mut ws = Workspace::new();
+        let mut outs: Vec<Matrix> = spec
+            .sites
+            .iter()
+            .map(|s| Matrix::zeros(5, s.shape.m))
+            .collect();
+        model.forward_into("a", &xs, &mut ws, &mut outs).unwrap();
+
+        let mut rng = Pcg64::derive(7, "a");
+        for (i, site) in spec.sites.iter().enumerate() {
+            let y = Matrix::gaussian(site.a, site.b, 0.5, &mut rng);
+            let l = regen_l(7, &site.l_name(), site.shape.m, site.a);
+            let r = regen_r(7, &site.r_name(), site.b, site.shape.n);
+            let mut ws2 = Workspace::new();
+            let mut want = Matrix::zeros(5, site.shape.m);
+            adapter_forward_into(&xs[i], &l, &r, &y, 2.0, &mut ws2,
+                                 &mut want);
+            for (p, q) in outs[i].data.iter().zip(&want.data) {
+                assert_eq!(p.to_bits(), q.to_bits(),
+                           "site {i} diverged from the independent call");
+            }
+        }
+
+        // the allocating forward agrees bitwise too (same kernels)
+        let alloc = model.forward("a", &xs).unwrap();
+        for (o, w) in alloc.iter().zip(&outs) {
+            for (p, q) in o.data.iter().zip(&w.data) {
+                assert_eq!(p.to_bits(), q.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn insert_enforces_spec_conformance() {
+        let mut model = AdaptedModel::new(test_spec(2), 1 << 20).unwrap();
+        let mut rng = Pcg64::new(1);
+        // wrong core count
+        let one = vec![Matrix::gaussian(4, 3, 0.5, &mut rng)];
+        assert!(model.insert_synthetic("a", 7, 2.0, one).is_err());
+        // wrong dims at site 1 (spec says 2x1 half-size core there)
+        let bad = vec![
+            Matrix::gaussian(4, 3, 0.5, &mut rng),
+            Matrix::gaussian(4, 3, 0.5, &mut rng),
+        ];
+        assert!(model.insert_synthetic("a", 7, 2.0, bad).is_err());
+        // conforming cores land
+        let good = vec![
+            Matrix::gaussian(4, 3, 0.5, &mut rng),
+            Matrix::gaussian(2, 1, 0.5, &mut rng),
+        ];
+        model.insert_synthetic("a", 7, 2.0, good).unwrap();
+        assert!(model.contains("a"));
+        assert!(model.forward("nope", &site_inputs(model.spec(), 1, 2))
+            .is_err());
+    }
+
+    #[test]
+    fn plan_resolves_all_cold_sites_at_once_and_install_dedupes() {
+        let spec = test_spec(2);
+        let mut model = AdaptedModel::new(spec, 1 << 20).unwrap();
+        add_adapter(&mut model, "a", 7);
+        // Two cold plans (as two workers would take under the lock):
+        // every site is described in one call.
+        let p1 = model.plan("a").unwrap();
+        let p2 = model.plan("a").unwrap();
+        assert_eq!(p1.sites.len(), 2);
+        assert!(p1.sites.iter().all(|s| s.l.is_none() && s.r.is_none()),
+                "cold cache must leave every site to regenerate");
+        // Both regenerate everything outside the lock...
+        let regen = |p: &ModelPlan| -> Vec<(Option<Matrix>, Option<Matrix>)> {
+            p.sites
+                .iter()
+                .map(|s| {
+                    (Some(regen_l(s.seed, &s.l_name, s.m, s.a)),
+                     Some(regen_r(s.seed, &s.r_name, s.b, s.n)))
+                })
+                .collect()
+        };
+        let (r1, r2) = (regen(&p1), regen(&p2));
+        let h1 = model.install(&p1, r1);
+        let h2 = model.install(&p2, r2);
+        for (s1, s2) in h1.sites.iter().zip(&h2.sites) {
+            assert!(Arc::ptr_eq(&s1.l, &s2.l), "raced install must dedupe");
+            assert!(Arc::ptr_eq(&s1.r, &s2.r));
+        }
+        // warm plan resolves without any regeneration step
+        let p3 = model.plan("a").unwrap();
+        assert!(p3.sites.iter().all(|s| s.l.is_some() && s.r.is_some()));
+        let no = p3.no_regen();
+        let h3 = model.install(&p3, no);
+        assert!(Arc::ptr_eq(&h1.sites[0].l, &h3.sites[0].l));
+        // inline handles() agrees with the split path
+        let h4 = model.handles("a").unwrap();
+        assert!(Arc::ptr_eq(&h1.sites[1].r, &h4.sites[1].r));
+    }
+
+    #[test]
+    fn shared_cache_accounting_is_exact_across_sites() {
+        // Tight budget + heterogeneous sites + several adapters: the
+        // shared LRU thrashes across sites, and the byte ledger must
+        // stay exact — one site's evictions never corrupt another's
+        // accounting (the satellite's cross-site cache test).
+        let spec = test_spec(3);
+        // one adapter's full projection set in bytes
+        let full: usize = spec.projection_floats() * 4;
+        let mut model = AdaptedModel::new(spec.clone(), full).unwrap();
+        for (i, name) in ["a", "b", "c"].iter().enumerate() {
+            add_adapter(&mut model, name, 7 + i as u64);
+        }
+        let xs = site_inputs(&spec, 2, 3);
+        for round in 0..3 {
+            for name in ["a", "b", "c"] {
+                model.forward(name, &xs).unwrap();
+                let c = model.cache();
+                assert_eq!(c.bytes(), c.recomputed_bytes(),
+                           "ledger drift: round {round} adapter {name}");
+                assert!(c.bytes() <= full,
+                        "budget exceeded with >1 entry resident");
+            }
+        }
+        let s = model.cache_stats();
+        assert!(s.evictions > 0, "scenario must actually thrash: {s:?}");
+        // determinism under thrash: evict + reload is bit-identical
+        let before = model.forward("a", &xs).unwrap();
+        assert!(model.evict("a"));
+        add_adapter(&mut model, "a", 7);
+        let after = model.forward("a", &xs).unwrap();
+        for (bm, am) in before.iter().zip(&after) {
+            for (p, q) in bm.data.iter().zip(&am.data) {
+                assert_eq!(p.to_bits(), q.to_bits(), "evict/reload drifted");
+            }
+        }
+    }
+
+    #[test]
+    fn v2_checkpoint_roundtrips_all_sites_bit_identically() {
+        let spec = test_spec(3);
+        let mut model = AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+        add_adapter(&mut model, "fleet", 42);
+        let ck = model.checkpoint("fleet", "tiny-lm_cosa").unwrap();
+        assert_eq!(ck.version, 2);
+        assert_eq!(ck.sites.len(), 3);
+
+        let xs = site_inputs(&spec, 4, 9);
+        let want = model.forward("fleet", &xs).unwrap();
+
+        let mut fresh = AdaptedModel::new(spec, 1 << 20).unwrap();
+        fresh.load_checkpoint("fleet", &ck, 2.0).unwrap();
+        let got = fresh.forward("fleet", &xs).unwrap();
+        for (wm, gm) in want.iter().zip(&got) {
+            for (p, q) in wm.data.iter().zip(&gm.data) {
+                assert_eq!(p.to_bits(), q.to_bits(),
+                           "v2 round-trip must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn v2_load_rejects_mismatched_and_missing_site_blocks() {
+        let spec = test_spec(2);
+        let mut model = AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+        add_adapter(&mut model, "a", 7);
+        let ck = model.checkpoint("a", "tiny-lm_cosa").unwrap();
+
+        // wrong site dims in the block
+        let mut bad = ck.clone();
+        bad.sites[0].m += 1;
+        let mut fresh = AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+        assert!(fresh.load_checkpoint("a", &bad, 2.0).is_err());
+
+        // site block present but core tensor missing
+        let mut bad = ck.clone();
+        bad.tensors.remove("site00.y");
+        assert!(fresh.load_checkpoint("a", &bad, 2.0).is_err());
+
+        // a spec site entirely absent from the checkpoint
+        let mut bad = ck.clone();
+        bad.sites.remove(1);
+        bad.tensors.remove("site01.y");
+        assert!(fresh.load_checkpoint("a", &bad, 2.0).is_err());
+    }
+
+    #[test]
+    fn v1_checkpoint_loads_as_single_site_model() {
+        // A PR-3-era file: no version/sites metadata, one core tensor.
+        let mut tensors = BTreeMap::new();
+        let mut rng = Pcg64::new(4);
+        let y = Matrix::gaussian(4, 3, 0.5, &mut rng);
+        tensors.insert("adp.0.wq.y".to_string(),
+                       (vec![4usize, 3], y.data.clone()));
+        let ck = Checkpoint {
+            version: 1,
+            method: "cosa".into(),
+            adapter_seed: 77,
+            artifact: "tiny-lm_cosa".into(),
+            step: 5,
+            sites: Vec::new(),
+            tensors,
+        };
+        let mut model = AdaptedModel::single_site(
+            "adp.0.wq", SiteShape { m: 12, n: 10 }, 4, 3, 1 << 20);
+        model.load_checkpoint("mathbot", &ck, 2.0).unwrap();
+        let x = Matrix::gaussian(2, 10, 1.0, &mut rng);
+        let got = model.forward_one("mathbot", &x).unwrap();
+        // projections derive from the *tensor* stem, not the spec name
+        let l = regen_l(77, "adp.0.wq.l", 12, 4);
+        let r = regen_r(77, "adp.0.wq.r", 3, 10);
+        let want = adapter_forward(&x, &l, &r, &y, 2.0);
+        assert_eq!(got, want, "v1 stem-derived projections must be used");
+
+        // a multi-site model refuses a core-count mismatch
+        let mut multi = AdaptedModel::new(test_spec(2), 1 << 20).unwrap();
+        assert!(multi.load_checkpoint("mathbot", &ck, 2.0).is_err());
+    }
+
+    #[test]
+    fn forward_one_requires_single_site() {
+        let mut model = AdaptedModel::new(test_spec(2), 1 << 20).unwrap();
+        add_adapter(&mut model, "a", 7);
+        let x = Matrix::zeros(1, 10);
+        assert!(model.forward_one("a", &x).is_err());
+    }
+}

@@ -1,0 +1,222 @@
+//! `ProjectionCache` — byte-budgeted LRU over regenerated `L`/`R`
+//! projections, shared by **every site** of an [`AdaptedModel`].
+//!
+//! Regeneration is O(m·a + b·n) gaussian draws — cheap enough to redo,
+//! expensive enough to cache.  The cache is keyed by
+//! `(seed, tensor name, rows, cols)`: the tensor name embeds the site
+//! stem (`adp.0.wq.l`), so one budget arbitrates residency across all
+//! sites of all adapters — a hot adapter keeps its whole per-model
+//! projection set warm while a cold site's entries age out, instead of
+//! every site hoarding a fixed slice of the budget (the per-site-cache
+//! baseline `serve::bench::run_model` measures against).  Hits bump a
+//! logical clock, misses regenerate and insert, and inserts evict
+//! least-recently-used entries until the budget holds (the newest entry
+//! is always kept resident so a single over-budget projection still
+//! serves).  Entries are `Arc<Matrix>` so scheduler workers can hold a
+//! projection across a batch while the cache concurrently evicts it for
+//! someone else.
+//!
+//! [`AdaptedModel`]: crate::model::AdaptedModel
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+use crate::math::matrix::Matrix;
+
+/// Cache key: (seed, tensor name, rows, cols).  Dims are part of the
+/// identity so two adapters sharing a seed but differing in core shape
+/// can never collide; the tensor name carries the site stem, so two
+/// sites of one adapter never collide either.
+pub type CacheKey = (u64, String, usize, usize);
+
+struct CacheEntry {
+    mat: Arc<Matrix>,
+    last_used: u64,
+}
+
+/// Counters exposed for benches and tests.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+/// Byte-budgeted LRU over regenerated projections (see module docs).
+///
+/// Recency is indexed (`order`: last-used tick → key, ticks unique), so
+/// an eviction is O(log n) instead of a full scan — a *shared* cache
+/// fronting every site of a model holds thousands of entries, and an
+/// O(n) victim scan per eviction would tax precisely the configuration
+/// this layer exists to make cheap.
+pub struct ProjectionCache {
+    budget_bytes: usize,
+    bytes: usize,
+    tick: u64,
+    entries: HashMap<CacheKey, CacheEntry>,
+    /// last-used tick → key; in lockstep with `entries`.
+    order: BTreeMap<u64, CacheKey>,
+    stats: CacheStats,
+}
+
+fn mat_bytes(m: &Matrix) -> usize {
+    m.data.len() * std::mem::size_of::<f32>()
+}
+
+impl ProjectionCache {
+    pub fn new(budget_bytes: usize) -> ProjectionCache {
+        ProjectionCache {
+            budget_bytes,
+            bytes: 0,
+            tick: 0,
+            entries: HashMap::new(),
+            order: BTreeMap::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = CacheStats::default();
+    }
+
+    /// Bytes currently resident per the incremental accounting
+    /// (diagnostic).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Bytes currently resident recomputed from the entries themselves —
+    /// must always equal [`ProjectionCache::bytes`]; the cross-site
+    /// accounting tests assert it after eviction churn so one site's
+    /// evictions can never corrupt the ledger another site's inserts
+    /// depend on.
+    pub fn recomputed_bytes(&self) -> usize {
+        self.entries.values().map(|e| mat_bytes(&e.mat)).sum()
+    }
+
+    /// Entries currently resident (diagnostic).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Hit-only lookup: bumps recency and the hit counter on a hit,
+    /// touches nothing on a miss (the caller is expected to regenerate
+    /// outside any lock and come back through [`ProjectionCache::get_or`]).
+    pub fn peek(&mut self, key: &CacheKey) -> Option<Arc<Matrix>> {
+        if let Some(e) = self.entries.get_mut(key) {
+            self.tick += 1;
+            self.order.remove(&e.last_used);
+            e.last_used = self.tick;
+            self.order.insert(self.tick, key.clone());
+            self.stats.hits += 1;
+            return Some(e.mat.clone());
+        }
+        None
+    }
+
+    /// The cached projection for `key`, regenerating via `regen` on a
+    /// miss.  Hits refresh recency; misses insert and then evict
+    /// least-recently-used entries until the budget holds (the entry
+    /// just inserted is never the victim).
+    pub fn get_or(
+        &mut self,
+        key: CacheKey,
+        regen: impl FnOnce() -> Matrix,
+    ) -> Arc<Matrix> {
+        self.tick += 1;
+        if let Some(e) = self.entries.get_mut(&key) {
+            self.order.remove(&e.last_used);
+            e.last_used = self.tick;
+            self.order.insert(self.tick, key);
+            self.stats.hits += 1;
+            return e.mat.clone();
+        }
+        self.stats.misses += 1;
+        let mat = Arc::new(regen());
+        self.bytes += mat_bytes(&mat);
+        let entry = CacheEntry { mat: mat.clone(), last_used: self.tick };
+        self.entries.insert(key.clone(), entry);
+        self.order.insert(self.tick, key.clone());
+        self.evict_to_budget(&key);
+        debug_assert_eq!(self.order.len(), self.entries.len(),
+                         "recency index out of lockstep");
+        mat
+    }
+
+    fn evict_to_budget(&mut self, keep: &CacheKey) {
+        while self.bytes > self.budget_bytes && self.entries.len() > 1 {
+            // Oldest tick whose key is not the just-inserted one — the
+            // index is ordered, so this inspects at most two entries.
+            let victim = self
+                .order
+                .iter()
+                .find(|(_, k)| *k != keep)
+                .map(|(t, k)| (*t, k.clone()));
+            let Some((t, k)) = victim else { break };
+            self.order.remove(&t);
+            if let Some(e) = self.entries.remove(&k) {
+                self.bytes -= mat_bytes(&e.mat);
+                self.stats.evictions += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mat(rows: usize, cols: usize, v: f32) -> Matrix {
+        Matrix::from_vec(rows, cols, vec![v; rows * cols])
+    }
+
+    #[test]
+    fn hit_miss_and_budget_eviction() {
+        // budget fits exactly one 10-float entry (40 bytes)
+        let mut c = ProjectionCache::new(40);
+        let k1: CacheKey = (1, "a.l".into(), 2, 5);
+        let k2: CacheKey = (1, "b.l".into(), 2, 5);
+        let m1 = c.get_or(k1.clone(), || mat(2, 5, 1.0));
+        assert_eq!(c.stats().misses, 1);
+        assert!(Arc::ptr_eq(&m1, &c.get_or(k1.clone(), || mat(2, 5, 9.0))));
+        assert_eq!(c.stats().hits, 1);
+        c.get_or(k2.clone(), || mat(2, 5, 2.0));
+        assert_eq!(c.stats().evictions, 1, "k1 evicted for k2");
+        assert!(c.peek(&k1).is_none());
+        assert!(c.peek(&k2).is_some());
+    }
+
+    #[test]
+    fn byte_ledger_survives_mixed_size_churn() {
+        // Heterogeneous entry sizes (two "sites") churning under a tight
+        // budget: the incremental ledger must equal the recomputed sum
+        // at every step — an eviction of one site's entries never
+        // corrupts the accounting the other site's inserts rely on.
+        let mut c = ProjectionCache::new(100);
+        for i in 0..40u64 {
+            let (rows, cols) = if i % 2 == 0 { (3, 4) } else { (1, 7) };
+            let key: CacheKey = (i % 5, format!("site{}.l", i % 3), rows, cols);
+            c.get_or(key, || mat(rows, cols, i as f32));
+            assert_eq!(c.bytes(), c.recomputed_bytes(), "ledger drift at {i}");
+            assert!(c.bytes() <= 100 || c.len() == 1, "over budget at {i}");
+        }
+        assert!(c.stats().evictions > 0, "churn must actually evict");
+    }
+
+    #[test]
+    fn zero_budget_keeps_only_newest() {
+        let mut c = ProjectionCache::new(0);
+        c.get_or((1, "x".into(), 1, 1), || mat(1, 1, 1.0));
+        c.get_or((2, "y".into(), 1, 1), || mat(1, 1, 2.0));
+        assert_eq!(c.len(), 1, "newest entry always resident");
+        assert_eq!(c.bytes(), c.recomputed_bytes());
+    }
+}

@@ -1,0 +1,38 @@
+//! `model` — the multi-site adapted-model layer.
+//!
+//! CoSA adapts *every* targeted projection of a transformer, and each
+//! adapted site's artifact is only a compact core plus a seed that
+//! regenerates its fixed projections (paper §4.1).  This module makes
+//! "a whole adapted model" the system's default serving shape instead
+//! of a single-matrix special case:
+//!
+//! * [`ModelSpec`] / [`SiteSpec`] — the shape contract: an ordered list
+//!   of named `m × n` sites, each with its own core dims `(a, b)`
+//!   (per-site heterogeneity is first-class — KaSA-style per-layer
+//!   compression budgets).  Site names are the tensor stems projections
+//!   regenerate from and checkpoint v2 site blocks carry.
+//! * [`AdaptedModel`] — one base, N sites, many named adapters (each a
+//!   per-site core *set* under one seed), and **one** shared
+//!   byte-budgeted [`ProjectionCache`] arbitrating `L`/`R` residency
+//!   across every `(site, adapter)` pair.  Two-phase
+//!   [`AdaptedModel::plan`] / [`AdaptedModel::install`] resolves all
+//!   cold sites of a request in one locked call and regenerates outside
+//!   the lock.
+//!
+//! `serve` builds on this layer: its registry *is* an `AdaptedModel`,
+//! its scheduler batches whole multi-site requests, and
+//! `serve::bench::run_model` measures the shared-cache-vs-per-site-cache
+//! claim CI gates.  `config`'s `[model]` table (`COSA_MODEL_*` env)
+//! constructs specs; `adapters::costmodel` aggregates per-model
+//! param/byte accounting from the same spec.
+
+pub mod adapted;
+pub mod cache;
+pub mod spec;
+
+pub use adapted::{
+    AdaptedModel, CoreInput, ModelAdapter, ModelHandles, ModelPlan,
+    SiteCore, SiteHandles, SitePlan,
+};
+pub use cache::{CacheKey, CacheStats, ProjectionCache};
+pub use spec::{ModelSpec, SiteShape, SiteSpec};

@@ -1,0 +1,278 @@
+//! `ModelSpec` — the shape contract of an adapted model: an ordered
+//! list of named sites, each an `m × n` projection with its own CoSA
+//! core dims `(a, b)`.
+//!
+//! Site names are load-bearing: they are the tensor stems the canonical
+//! projection generators key off (`<site>.l` / `<site>.r`, exactly the
+//! training-time convention `adp.<layer>.<proj>.l`), the keys checkpoint
+//! v2 site blocks carry, and the ids multi-site registries match cores
+//! against.  Per-site `(a, b)` is deliberately heterogeneous-capable
+//! (KaSA-style per-layer compression budgets): nothing in the serving
+//! stack assumes two sites share a core shape.
+
+/// One adapted weight's shape: the adapted matrix is `m × n`
+/// (activations enter as rows of width `n`, leave as rows of width `m`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SiteShape {
+    pub m: usize,
+    pub n: usize,
+}
+
+/// One named site of a model: shape plus the CoSA core dims used at it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SiteSpec {
+    /// Tensor stem, e.g. "adp.0.wq" — projections regenerate from
+    /// `<name>.l` / `<name>.r` unless an adapter overrides them.
+    pub name: String,
+    pub shape: SiteShape,
+    /// Core `Y` is `a × b` at this site.
+    pub a: usize,
+    pub b: usize,
+}
+
+impl SiteSpec {
+    /// Parse the compact `name:MxN:AxB` form used by config site lists
+    /// (e.g. `"adp.0.wq:256x256:16x12"`).
+    pub fn parse(s: &str) -> anyhow::Result<SiteSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        anyhow::ensure!(
+            parts.len() == 3,
+            "site spec `{s}` is not `name:MxN:AxB`"
+        );
+        let dims = |p: &str| -> anyhow::Result<(usize, usize)> {
+            let (x, y) = p
+                .split_once('x')
+                .ok_or_else(|| anyhow::anyhow!("`{p}` is not `XxY` in `{s}`"))?;
+            Ok((x.trim().parse()?, y.trim().parse()?))
+        };
+        let name = parts[0].trim();
+        anyhow::ensure!(!name.is_empty(), "site spec `{s}` has no name");
+        let (m, n) = dims(parts[1])?;
+        let (a, b) = dims(parts[2])?;
+        let spec = SiteSpec {
+            name: name.to_string(),
+            shape: SiteShape { m, n },
+            a,
+            b,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.name.is_empty(), "site has an empty name");
+        anyhow::ensure!(
+            self.shape.m >= 1
+                && self.shape.n >= 1
+                && self.a >= 1
+                && self.b >= 1,
+            "site `{}`: every dim must be >= 1 (m {} n {} a {} b {})",
+            self.name,
+            self.shape.m,
+            self.shape.n,
+            self.a,
+            self.b
+        );
+        Ok(())
+    }
+
+    /// Trainable parameters of one adapter at this site (`a·b`).
+    pub fn core_params(&self) -> usize {
+        self.a * self.b
+    }
+
+    /// Floats of regenerated projection state (`m·a + b·n`) — the
+    /// per-site `ProjectionCache` working set of one adapter.
+    pub fn projection_floats(&self) -> usize {
+        self.shape.m * self.a + self.b * self.shape.n
+    }
+
+    /// Canonical projection tensor names for this site.
+    pub fn l_name(&self) -> String {
+        format!("{}.l", self.name)
+    }
+    pub fn r_name(&self) -> String {
+        format!("{}.r", self.name)
+    }
+}
+
+/// An adapted model: ordered named sites.  The order is the wire order —
+/// multi-site requests carry one activation row per site in this order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub sites: Vec<SiteSpec>,
+}
+
+impl ModelSpec {
+    /// Validating constructor.
+    pub fn new(name: &str, sites: Vec<SiteSpec>) -> anyhow::Result<ModelSpec> {
+        let spec = ModelSpec { name: name.to_string(), sites };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// One-site model (the PR-3 serving shape, now a special case).
+    pub fn single(
+        name: &str,
+        shape: SiteShape,
+        a: usize,
+        b: usize,
+    ) -> ModelSpec {
+        ModelSpec {
+            name: name.to_string(),
+            sites: vec![SiteSpec { name: name.to_string(), shape, a, b }],
+        }
+    }
+
+    /// Synthetic `sites = N` preset for benches and quick configs:
+    /// `N` sites named `site00…`, all `shape`-sized, with deliberately
+    /// heterogeneous cores — odd sites get half the core dims (KaSA-style
+    /// per-layer budgets), so multi-site paths never silently assume a
+    /// uniform `(a, b)`.
+    pub fn synthetic(
+        sites: usize,
+        shape: SiteShape,
+        a: usize,
+        b: usize,
+    ) -> ModelSpec {
+        let site = |i: usize| {
+            let (aa, bb) = if i % 2 == 1 {
+                ((a / 2).max(1), (b / 2).max(1))
+            } else {
+                (a, b)
+            };
+            SiteSpec { name: format!("site{i:02}"), shape, a: aa, b: bb }
+        };
+        ModelSpec {
+            name: format!("synthetic-{sites}"),
+            sites: (0..sites).map(site).collect(),
+        }
+    }
+
+    /// Build from config site-list strings (`name:MxN:AxB` each).
+    pub fn from_site_list(
+        name: &str,
+        list: &[String],
+    ) -> anyhow::Result<ModelSpec> {
+        let sites = list
+            .iter()
+            .map(|s| SiteSpec::parse(s))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        ModelSpec::new(name, sites)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.sites.is_empty(),
+            "model `{}` has no sites",
+            self.name
+        );
+        for s in &self.sites {
+            s.validate()?;
+        }
+        for (i, s) in self.sites.iter().enumerate() {
+            let dup =
+                self.sites[..i].iter().position(|t| t.name == s.name);
+            if let Some(j) = dup {
+                anyhow::bail!(
+                    "model `{}`: sites {j} and {i} share the name `{}`",
+                    self.name,
+                    s.name
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.sites.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sites.is_empty()
+    }
+
+    pub fn site_index(&self, name: &str) -> Option<usize> {
+        self.sites.iter().position(|s| s.name == name)
+    }
+
+    /// Trainable parameters of one adapter over the whole model
+    /// (`Σ a·b` — the model-level analogue of the paper's per-site `ab`).
+    pub fn core_params(&self) -> usize {
+        self.sites.iter().map(|s| s.core_params()).sum()
+    }
+
+    /// Regenerated projection floats across all sites (`Σ m·a + b·n`) —
+    /// one adapter's full working set in the shared `ProjectionCache`.
+    pub fn projection_floats(&self) -> usize {
+        self.sites.iter().map(|s| s.projection_floats()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_dims() {
+        let s = SiteSpec::parse("adp.0.wq:256x128:16x12").unwrap();
+        assert_eq!(s.name, "adp.0.wq");
+        assert_eq!(s.shape, SiteShape { m: 256, n: 128 });
+        assert_eq!((s.a, s.b), (16, 12));
+        assert_eq!(s.core_params(), 192);
+        assert_eq!(s.projection_floats(), 256 * 16 + 12 * 128);
+        assert_eq!(s.l_name(), "adp.0.wq.l");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "", "noname", "a:2x2", ":2x2:1x1", "a:2x:1x1", "a:2x2:0x1",
+            "a:2x2:1x1:extra", "a:x2:1x1",
+        ] {
+            assert!(SiteSpec::parse(bad).is_err(), "`{bad}` must fail");
+        }
+    }
+
+    #[test]
+    fn spec_validates_names_and_dims() {
+        let shape = SiteShape { m: 4, n: 4 };
+        let dup = ModelSpec::new(
+            "m",
+            vec![
+                SiteSpec { name: "x".into(), shape, a: 1, b: 1 },
+                SiteSpec { name: "x".into(), shape, a: 1, b: 1 },
+            ],
+        );
+        assert!(dup.is_err(), "duplicate site names must fail");
+        assert!(ModelSpec::new("m", vec![]).is_err(), "zero sites");
+        let zero = ModelSpec::new(
+            "m",
+            vec![SiteSpec { name: "x".into(), shape, a: 0, b: 1 }],
+        );
+        assert!(zero.is_err(), "zero core dim");
+    }
+
+    #[test]
+    fn synthetic_is_heterogeneous_and_ordered() {
+        let spec = ModelSpec::synthetic(4, SiteShape { m: 32, n: 24 }, 8, 6);
+        assert_eq!(spec.len(), 4);
+        spec.validate().unwrap();
+        assert_eq!(spec.sites[0].name, "site00");
+        assert_eq!((spec.sites[0].a, spec.sites[0].b), (8, 6));
+        assert_eq!((spec.sites[1].a, spec.sites[1].b), (4, 3),
+                   "odd sites get half-size cores");
+        assert_eq!(spec.site_index("site03"), Some(3));
+        assert_eq!(spec.core_params(), 2 * (8 * 6) + 2 * (4 * 3));
+    }
+
+    #[test]
+    fn single_site_is_a_one_site_model() {
+        let spec =
+            ModelSpec::single("adp.0.wq", SiteShape { m: 12, n: 10 }, 4, 3);
+        assert_eq!(spec.len(), 1);
+        assert_eq!(spec.core_params(), 12);
+        assert_eq!(spec.projection_floats(), 12 * 4 + 3 * 10);
+    }
+}

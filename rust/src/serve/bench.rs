@@ -1,36 +1,50 @@
-//! Synthetic open-loop serving workload — the driver behind the
+//! Synthetic open-loop serving workloads — the drivers behind the
 //! `serve-bench` CLI subcommand and `benches/serve_bench.rs`.
 //!
-//! The workload models the paper's deployment story at traffic shape:
-//! one base-model site, many adapters, request popularity Zipf-skewed
-//! (a few hot adapters take most of the traffic, a long tail stays
-//! cold).  Each run measures the same request sequence two ways:
+//! Two scenario families:
 //!
-//! 1. **sequential** — one allocating `adapter_forward` per request on
-//!    the caller thread (the no-engine baseline);
-//! 2. **batched** — through the [`Server`](super::Server) scheduler,
-//!    which groups same-adapter requests into batches.
+//! * [`run`] — the PR-3 single-site workload (`serving` report
+//!   section): one site, many adapters, Zipf-skewed popularity.  Each
+//!   run measures the same request sequence **sequentially** (one
+//!   allocating forward per request on the caller thread — the
+//!   no-engine baseline) and **batched** (through the
+//!   [`Server`](super::Server) scheduler); the throughput ratio is the
+//!   CI acceptance gate (batched >= 1.5x sequential at 64 adapters).
+//! * [`run_model`] — the multi-site workload (`serving_model`
+//!   section): a whole [`ModelSpec`] (e.g. 24 heterogeneous sites) × N
+//!   adapters, Zipf over adapters, every request touching every site.
+//!   Besides sequential-vs-batched it measures the **shared-cache vs
+//!   per-site-cache** claim: the same request sequence driven through
+//!   one `AdaptedModel` (one LRU budget arbitrating all sites) versus
+//!   through per-site single-site models splitting the same budget
+//!   evenly.  CI gates `shared_vs_persite` — a shared budget must not
+//!   lose to static partitioning (it amortizes residency across
+//!   heterogeneous sites; the paper's seed-regenerable projections are
+//!   what make the cache cheap to refill at all).
 //!
-//! Reported: wall-clock throughput for both modes, their ratio (the CI
-//! acceptance gate: batched >= 1.5x sequential at 64 adapters), p50 /
-//! p95 / p99 request latency (submit -> worker completion), mean batch
-//! occupancy and projection-cache hit statistics.  `to_json` emits one
-//! row for the `serving` section of `BENCH_linalg.json`, which
+//! Reported per scenario: wall-clock throughput, p50/p95/p99 request
+//! latency (submit -> worker completion), mean batch occupancy,
+//! projection-cache statistics, and (for models) the
+//! `adapters::costmodel` storage aggregation.  `to_json` emits rows
+//! for the canonical `BENCH_linalg.json`, which
 //! `tools/bench_regression.py` gates against `BENCH_baseline.json`.
 
 use std::time::{Duration, Instant};
 
+use crate::adapters::costmodel;
 use crate::config::ServeConfig;
 use crate::math::matrix::Matrix;
 use crate::math::rng::Pcg64;
-use crate::serve::registry::{AdapterRegistry, CacheStats, SiteShape};
+use crate::model::{AdaptedModel, CacheStats, ModelSpec, SiteShape};
+use crate::serve::registry::CoreInput;
 use crate::serve::scheduler::{Server, Ticket};
 use crate::util::bench::black_box;
 use crate::util::json::{obj, Json};
 
-/// Workload description.  `rate = 0` means open-loop firehose: every
-/// request is enqueued as fast as `submit` allows (the throughput
-/// measurement); a positive rate paces arrivals at `rate` requests/sec.
+/// Single-site workload description.  `rate = 0` means open-loop
+/// firehose: every request is enqueued as fast as `submit` allows (the
+/// throughput measurement); a positive rate paces arrivals at `rate`
+/// requests/sec.
 #[derive(Clone, Debug)]
 pub struct ServeBenchOpts {
     pub adapters: usize,
@@ -63,7 +77,7 @@ impl Default for ServeBenchOpts {
     }
 }
 
-/// One measured scenario (the `serving` bench row).
+/// One measured single-site scenario (a `serving` bench row).
 #[derive(Clone, Debug)]
 pub struct ServeBenchReport {
     pub opts: ServeBenchOpts,
@@ -182,12 +196,13 @@ fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
     sorted_ms[rank.saturating_sub(1).min(sorted_ms.len() - 1)]
 }
 
-/// Rows of pre-generated activations the request loop cycles through
+/// Rows of pre-generated activations the request loops cycle through
 /// (so input generation never dominates the measurement).
 const X_POOL: usize = 32;
 
-/// Run one scenario (see module docs).  `opts.cfg` is taken as final —
-/// apply `env_overridden()` / preset resolution at the call site.
+/// Run one single-site scenario (see module docs).  `opts.cfg` is taken
+/// as final — apply `env_overridden()` / preset resolution at the call
+/// site.
 pub fn run(opts: &ServeBenchOpts) -> anyhow::Result<ServeBenchReport> {
     anyhow::ensure!(opts.adapters > 0, "need at least one adapter");
     anyhow::ensure!(opts.requests > 0, "need at least one request");
@@ -197,21 +212,38 @@ pub fn run(opts: &ServeBenchOpts) -> anyhow::Result<ServeBenchReport> {
         opts.site.m,
         opts.site.n
     );
-    let (m, n) = (opts.site.m, opts.site.n);
+    anyhow::ensure!(
+        opts.core_a >= 1 && opts.core_b >= 1,
+        "core must be at least 1x1 (got {}x{})",
+        opts.core_a,
+        opts.core_b
+    );
     let (a, b) = (opts.core_a, opts.core_b);
+    let n = opts.site.n;
     let mut rng = Pcg64::new(opts.seed);
 
     // Registry of synthetic adapters: distinct seeds, shared site/core
-    // shape, sparse-ish cores (the trained-Y regime).
+    // shape, sparse-ish cores (the trained-Y regime).  Per-adapter
+    // tensor stems keep every adapter's projections distinct in the
+    // shared cache even across equal seeds.
     let budget = (opts.cfg.cache_mb * (1 << 20) as f64) as usize;
-    let mut registry = AdapterRegistry::new(opts.site, budget);
+    let mut registry =
+        AdaptedModel::single_site("bench", opts.site, a, b, budget);
     let mut names = Vec::with_capacity(opts.adapters);
     for i in 0..opts.adapters {
         let name = format!("adp{i:03}");
         let seed = opts.seed.wrapping_add(1 + i as u64);
         let y = Matrix::gaussian(a, b, 0.02, &mut rng);
-        registry.insert(&name, seed, 2.0, &format!("{name}.l"),
-                        &format!("{name}.r"), y)?;
+        registry.insert(
+            &name,
+            seed,
+            2.0,
+            vec![CoreInput::new(
+                &format!("{name}.l"),
+                &format!("{name}.r"),
+                y,
+            )],
+        )?;
         names.push(name);
     }
 
@@ -228,14 +260,14 @@ pub fn run(opts: &ServeBenchOpts) -> anyhow::Result<ServeBenchReport> {
     // `benches/adapter_fwd.rs`, not here).
     for name in &names {
         let x = Matrix::from_vec(1, n, pool[0].clone());
-        black_box(registry.forward(name, &x)?);
+        black_box(registry.forward_one(name, &x)?);
     }
 
     // -- sequential baseline: one single-row forward per request --
     let t0 = Instant::now();
     for (j, &idx) in seq.iter().enumerate() {
         let x = Matrix::from_vec(1, n, pool[j % X_POOL].clone());
-        let o = registry.forward(&names[idx], &x)?;
+        let o = registry.forward_one(&names[idx], &x)?;
         black_box(o.data[0]);
     }
     let seq_wall_s = t0.elapsed().as_secs_f64();
@@ -244,7 +276,7 @@ pub fn run(opts: &ServeBenchOpts) -> anyhow::Result<ServeBenchReport> {
     registry.reset_cache_stats();
     let server = Server::new(registry, &opts.cfg);
     let workers = server.worker_count();
-    let registry_arc = server.registry();
+    let model_arc = server.model();
     let interval = if opts.rate > 0.0 {
         Some(Duration::from_secs_f64(1.0 / opts.rate))
     } else {
@@ -260,7 +292,8 @@ pub fn run(opts: &ServeBenchOpts) -> anyhow::Result<ServeBenchReport> {
                 std::thread::sleep(target - now);
             }
         }
-        tickets.push(server.submit(&names[idx], pool[j % X_POOL].clone())?);
+        tickets
+            .push(server.submit_row(&names[idx], pool[j % X_POOL].clone())?);
     }
     let mut lat_ms: Vec<f64> = Vec::with_capacity(opts.requests);
     for t in tickets {
@@ -275,7 +308,7 @@ pub fn run(opts: &ServeBenchOpts) -> anyhow::Result<ServeBenchReport> {
     let (batches, rows) = server.batch_stats();
     drop(server);
     let cache = {
-        let reg = registry_arc.lock().unwrap_or_else(|p| p.into_inner());
+        let reg = model_arc.lock().unwrap_or_else(|p| p.into_inner());
         reg.cache_stats()
     };
 
@@ -291,6 +324,289 @@ pub fn run(opts: &ServeBenchOpts) -> anyhow::Result<ServeBenchReport> {
         seq_throughput_rps: seq_tp,
         throughput_rps: tp,
         batched_vs_sequential: tp / seq_tp.max(1e-9),
+        mean_ms,
+        p50_ms: percentile(&lat_ms, 0.50),
+        p95_ms: percentile(&lat_ms, 0.95),
+        p99_ms: percentile(&lat_ms, 0.99),
+        mean_batch_rows: rows as f64 / (batches as f64).max(1.0),
+        cache,
+    })
+}
+
+/// Multi-site workload description (always firehose — the model
+/// scenario measures engine + cache behavior, not pacing).
+#[derive(Clone, Debug)]
+pub struct ModelBenchOpts {
+    pub spec: ModelSpec,
+    pub adapters: usize,
+    pub requests: usize,
+    pub zipf: f64,
+    pub seed: u64,
+    pub cfg: ServeConfig,
+}
+
+impl Default for ModelBenchOpts {
+    fn default() -> Self {
+        // The acceptance scenario: 24 heterogeneous sites × 64
+        // adapters.  The cache budget is deliberately *under* the total
+        // projection working set (~12 MiB at these dims) so the
+        // shared-vs-per-site comparison measures residency arbitration,
+        // not an everything-fits no-op.
+        ModelBenchOpts {
+            spec: ModelSpec::synthetic(
+                24, SiteShape { m: 96, n: 96 }, 16, 12),
+            adapters: 64,
+            requests: 512,
+            zipf: 1.1,
+            seed: 11,
+            cfg: ServeConfig { cache_mb: 8.0, ..ServeConfig::default() },
+        }
+    }
+}
+
+/// One measured multi-site scenario (a `serving_model` bench row).
+/// A "request" here is one whole-model forward: every site of the
+/// adapter, so `throughput_rps` counts model-requests, not site-matmuls.
+#[derive(Clone, Debug)]
+pub struct ModelBenchReport {
+    pub opts: ModelBenchOpts,
+    pub workers: usize,
+    /// Per-adapter trainable params across the model (Σ a·b).
+    pub core_params: usize,
+    /// Per-adapter storage bytes (cores + one seed —
+    /// `costmodel::spec_storage_bytes`).
+    pub adapter_bytes: usize,
+    pub seq_wall_s: f64,
+    pub persite_wall_s: f64,
+    pub batched_wall_s: f64,
+    pub seq_throughput_rps: f64,
+    pub persite_throughput_rps: f64,
+    pub throughput_rps: f64,
+    pub batched_vs_sequential: f64,
+    /// Shared-LRU sequential throughput / per-site-partitioned caches
+    /// sequential throughput (the machine-independent CI gate).
+    pub shared_vs_persite: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_batch_rows: f64,
+    pub cache: CacheStats,
+}
+
+impl ModelBenchReport {
+    pub fn to_json(&self) -> Json {
+        let o = &self.opts;
+        obj(vec![
+            ("sites", o.spec.len().into()),
+            ("adapters", o.adapters.into()),
+            ("requests", o.requests.into()),
+            ("zipf", o.zipf.into()),
+            ("rate_rps", Json::Num(0.0)),
+            ("core_params", self.core_params.into()),
+            ("adapter_bytes", self.adapter_bytes.into()),
+            ("max_batch", o.cfg.max_batch.into()),
+            ("max_wait_us", (o.cfg.max_wait_us as usize).into()),
+            ("workers", self.workers.into()),
+            ("cache_mb", o.cfg.cache_mb.into()),
+            ("seq_wall_s", self.seq_wall_s.into()),
+            ("persite_wall_s", self.persite_wall_s.into()),
+            ("batched_wall_s", self.batched_wall_s.into()),
+            ("seq_throughput_rps", self.seq_throughput_rps.into()),
+            ("persite_throughput_rps", self.persite_throughput_rps.into()),
+            ("throughput_rps", self.throughput_rps.into()),
+            ("batched_vs_sequential", self.batched_vs_sequential.into()),
+            ("shared_vs_persite", self.shared_vs_persite.into()),
+            ("mean_ms", self.mean_ms.into()),
+            ("p50_ms", self.p50_ms.into()),
+            ("p95_ms", self.p95_ms.into()),
+            ("p99_ms", self.p99_ms.into()),
+            ("mean_batch_rows", self.mean_batch_rows.into()),
+            ("cache_hits", (self.cache.hits as usize).into()),
+            ("cache_misses", (self.cache.misses as usize).into()),
+            ("cache_evictions", (self.cache.evictions as usize).into()),
+        ])
+    }
+
+    pub fn print(&self) {
+        let o = &self.opts;
+        println!(
+            "serve-model[{} sites x {} adapters, zipf {:.2}, {} reqs, \
+             batch<= {}, {} workers, cache {:.1} MiB]",
+            o.spec.len(), o.adapters, o.zipf, o.requests,
+            o.cfg.max_batch, self.workers, o.cfg.cache_mb
+        );
+        println!(
+            "  adapter: {} core params, {} bytes on disk (cores + seed)",
+            self.core_params, self.adapter_bytes
+        );
+        println!(
+            "  sequential (shared LRU)    {:>9.0} req/s  ({:.3} s wall)",
+            self.seq_throughput_rps, self.seq_wall_s
+        );
+        println!(
+            "  sequential (per-site LRU)  {:>9.0} req/s  ({:.3} s wall)  \
+             shared/persite {:.2}x",
+            self.persite_throughput_rps, self.persite_wall_s,
+            self.shared_vs_persite
+        );
+        println!(
+            "  batched                    {:>9.0} req/s  ({:.3} s wall)  \
+             => {:.2}x sequential",
+            self.throughput_rps, self.batched_wall_s,
+            self.batched_vs_sequential
+        );
+        println!(
+            "  latency ms  mean {:.3}  p50 {:.3}  p95 {:.3}  p99 {:.3}",
+            self.mean_ms, self.p50_ms, self.p95_ms, self.p99_ms
+        );
+        println!(
+            "  mean batch rows {:.2}   cache hits {} misses {} \
+             evictions {}",
+            self.mean_batch_rows, self.cache.hits, self.cache.misses,
+            self.cache.evictions
+        );
+    }
+}
+
+/// Run one multi-site scenario (see module docs).  `opts.cfg` is taken
+/// as final, exactly like [`run`].
+pub fn run_model(opts: &ModelBenchOpts) -> anyhow::Result<ModelBenchReport> {
+    anyhow::ensure!(opts.adapters > 0, "need at least one adapter");
+    anyhow::ensure!(opts.requests > 0, "need at least one request");
+    opts.spec.validate()?;
+    let spec = &opts.spec;
+    let n_sites = spec.len();
+    let budget = (opts.cfg.cache_mb * (1 << 20) as f64) as usize;
+    let mut rng = Pcg64::new(opts.seed);
+
+    // One core set per adapter, shared verbatim between the shared-LRU
+    // model and the per-site baseline models so both serve identical
+    // math.
+    let mut names = Vec::with_capacity(opts.adapters);
+    let mut cores: Vec<Vec<Matrix>> = Vec::with_capacity(opts.adapters);
+    for i in 0..opts.adapters {
+        names.push(format!("adp{i:03}"));
+        cores.push(
+            spec.sites
+                .iter()
+                .map(|s| Matrix::gaussian(s.a, s.b, 0.02, &mut rng))
+                .collect(),
+        );
+    }
+    let seed_of = |i: usize| opts.seed.wrapping_add(1 + i as u64);
+
+    let mut shared = AdaptedModel::new(spec.clone(), budget)?;
+    for (i, name) in names.iter().enumerate() {
+        shared.insert_synthetic(name, seed_of(i), 2.0, cores[i].clone())?;
+    }
+    // Per-site baseline: one single-site model per site, the same
+    // total byte budget statically partitioned.
+    let mut persite: Vec<AdaptedModel> = Vec::with_capacity(n_sites);
+    for (s_idx, site) in spec.sites.iter().enumerate() {
+        let one = ModelSpec::new(&site.name, vec![site.clone()])?;
+        let mut m = AdaptedModel::new(one, budget / n_sites.max(1))?;
+        for (i, name) in names.iter().enumerate() {
+            m.insert_synthetic(name, seed_of(i), 2.0,
+                               vec![cores[i][s_idx].clone()])?;
+        }
+        persite.push(m);
+    }
+
+    // Zipf request sequence + per-site activation row pools.
+    let zipf = Zipf::new(opts.adapters, opts.zipf);
+    let seq: Vec<usize> =
+        (0..opts.requests).map(|_| zipf.sample(&mut rng)).collect();
+    let xs_pool: Vec<Vec<Matrix>> = (0..X_POOL)
+        .map(|_| {
+            spec.sites
+                .iter()
+                .map(|s| {
+                    Matrix::from_vec(1, s.shape.n,
+                                     rng.normal_vec(s.shape.n, 1.0))
+                })
+                .collect()
+        })
+        .collect();
+
+    // Warm both variants identically (every adapter once) so the timed
+    // passes start from the same steady cache state.
+    for name in &names {
+        black_box(shared.forward(name, &xs_pool[0])?);
+        for (s, m) in persite.iter_mut().enumerate() {
+            black_box(m.forward_one(name, &xs_pool[0][s])?);
+        }
+    }
+
+    // -- sequential, shared LRU --
+    let t0 = Instant::now();
+    for (j, &idx) in seq.iter().enumerate() {
+        let outs = shared.forward(&names[idx], &xs_pool[j % X_POOL])?;
+        black_box(outs[0].data[0]);
+    }
+    let seq_wall_s = t0.elapsed().as_secs_f64();
+
+    // -- sequential, per-site partitioned LRUs --
+    let t0 = Instant::now();
+    for (j, &idx) in seq.iter().enumerate() {
+        for (s, m) in persite.iter_mut().enumerate() {
+            let o = m.forward_one(&names[idx], &xs_pool[j % X_POOL][s])?;
+            black_box(o.data[0]);
+        }
+    }
+    let persite_wall_s = t0.elapsed().as_secs_f64();
+    drop(persite);
+
+    // -- batched: the same sequence through the scheduler --
+    shared.reset_cache_stats();
+    let server = Server::new(shared, &opts.cfg);
+    let workers = server.worker_count();
+    let model_arc = server.model();
+    let t0 = Instant::now();
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(opts.requests);
+    for (j, &idx) in seq.iter().enumerate() {
+        let xs: Vec<Vec<f32>> = xs_pool[j % X_POOL]
+            .iter()
+            .map(|m| m.data.clone())
+            .collect();
+        tickets.push(server.submit(&names[idx], xs)?);
+    }
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(opts.requests);
+    for t in tickets {
+        let submitted = t.submitted;
+        let resp = t.wait()?;
+        black_box(resp.output()[0]);
+        lat_ms.push(
+            resp.done.duration_since(submitted).as_secs_f64() * 1e3,
+        );
+    }
+    let batched_wall_s = t0.elapsed().as_secs_f64();
+    let (batches, rows) = server.batch_stats();
+    drop(server);
+    let cache = {
+        let m = model_arc.lock().unwrap_or_else(|p| p.into_inner());
+        m.cache_stats()
+    };
+
+    lat_ms.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let mean_ms = lat_ms.iter().sum::<f64>() / lat_ms.len() as f64;
+    let reqs = opts.requests as f64;
+    let seq_tp = reqs / seq_wall_s.max(1e-9);
+    let persite_tp = reqs / persite_wall_s.max(1e-9);
+    let tp = reqs / batched_wall_s.max(1e-9);
+    Ok(ModelBenchReport {
+        opts: opts.clone(),
+        workers,
+        core_params: spec.core_params(),
+        adapter_bytes: costmodel::spec_storage_bytes(spec),
+        seq_wall_s,
+        persite_wall_s,
+        batched_wall_s,
+        seq_throughput_rps: seq_tp,
+        persite_throughput_rps: persite_tp,
+        throughput_rps: tp,
+        batched_vs_sequential: tp / seq_tp.max(1e-9),
+        shared_vs_persite: seq_tp / persite_tp.max(1e-9),
         mean_ms,
         p50_ms: percentile(&lat_ms, 0.50),
         p95_ms: percentile(&lat_ms, 0.95),
@@ -359,5 +675,37 @@ mod tests {
         let j = rep.to_json();
         assert_eq!(j.get("requests").unwrap().as_usize(), Some(48));
         assert!(j.get("batched_vs_sequential").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn model_smoke_scenario_reports_consistent_numbers() {
+        let opts = ModelBenchOpts {
+            spec: ModelSpec::synthetic(
+                4, SiteShape { m: 16, n: 12 }, 4, 3),
+            adapters: 3,
+            requests: 24,
+            zipf: 1.1,
+            seed: 5,
+            cfg: ServeConfig {
+                cache_mb: 1.0,
+                max_batch: 4,
+                max_wait_us: 300,
+                workers: 2,
+            },
+        };
+        let rep = run_model(&opts).unwrap();
+        assert!(rep.throughput_rps > 0.0);
+        assert!(rep.seq_throughput_rps > 0.0);
+        assert!(rep.persite_throughput_rps > 0.0);
+        assert!(rep.shared_vs_persite > 0.0);
+        assert!(rep.p50_ms <= rep.p95_ms && rep.p95_ms <= rep.p99_ms);
+        // heterogeneous synthetic spec: 2 full + 2 half cores
+        assert_eq!(rep.core_params, 2 * 12 + 2 * 2);
+        assert_eq!(rep.adapter_bytes, rep.core_params * 4 + 8,
+                   "whole-model artifact is cores + one seed");
+        let j = rep.to_json();
+        assert_eq!(j.get("sites").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("adapters").unwrap().as_usize(), Some(3));
+        assert!(j.get("shared_vs_persite").unwrap().as_f64().is_some());
     }
 }

@@ -1,40 +1,54 @@
-//! `serve` — multi-adapter serving engine (the paper's §4.1 deployment
-//! story at production shape).
+//! `serve` — multi-adapter, multi-site serving engine (the paper's
+//! §4.1 deployment story at production shape).
 //!
-//! A CoSA adapter artifact is only the compact core `Y` plus a seed that
-//! regenerates the fixed projections `L`/`R` bit-identically
-//! (`adapters::cosa::regen_l` / `regen_r`).  That makes *many adapters
-//! on one base model* the natural serving workload: per-adapter state is
-//! a few KiB of core, and the expensive projections are a pure function
-//! of `(seed, tensor name, dims)` — cacheable, evictable and
-//! reconstructible at will.  This module turns that property into a
-//! serving engine:
+//! A CoSA adapter artifact is only the compact cores `Y` plus a seed
+//! that regenerates the fixed projections `L`/`R` bit-identically
+//! (`adapters::cosa::regen_l` / `regen_r`) — and CoSA adapts *every*
+//! targeted projection of a model, so the natural serving workload is
+//! **many adapters × every adapted site of one base model**.  Per-site
+//! state is a few KiB of core; a whole model's adapter set is `Σ a·b`
+//! floats plus 8 bytes of seed.  This module turns that property into
+//! a serving engine over the [`model`](crate::model) layer:
 //!
-//! * [`registry`] — the adapter registry: checkpoints loaded by name
-//!   (hot load/evict), with regenerated `L`/`R` projections cached in a
-//!   byte-budgeted LRU keyed by `(seed, tensor, dims)`.  Evicting and
-//!   re-materializing an adapter is bit-identical by construction.
-//! * [`scheduler`] — the request scheduler: single-row requests enter a
-//!   queue, are grouped **per adapter id** into batches under a
-//!   max-batch / max-wait policy, and run on a worker pool where each
-//!   worker owns a [`linalg::Workspace`](crate::linalg::Workspace) and
-//!   drives `adapter_forward_into` — the matmul hot path performs no
-//!   allocations at steady state (the Workspace/pack-pool contract).
-//! * [`bench`] — the synthetic open-loop workload driver behind the
+//! * [`registry`] — the serving registry is a
+//!   [`model::AdaptedModel`](crate::model::AdaptedModel): adapters are
+//!   per-site core sets loaded by name (checkpoint v2 carries all cores
+//!   of one adapter; hot load/evict), with regenerated `L`/`R`
+//!   projections cached in **one** shared byte-budgeted LRU keyed by
+//!   `(seed, tensor, dims)`.  Evicting and re-materializing an adapter
+//!   is bit-identical by construction.
+//! * [`scheduler`] — the request scheduler: whole-model requests (one
+//!   activation row per site) enter a queue, are grouped **per adapter
+//!   id** into batches under a max-batch / max-wait policy — with
+//!   per-request deadlines (expired requests answer with a timeout
+//!   error instead of occupying compute) and a drop-on-cancel ticket
+//!   API — and run on a worker pool where each worker owns a
+//!   [`linalg::Workspace`](crate::linalg::Workspace) and drives one
+//!   `adapter_forward_into` per site.  The matmul hot path performs no
+//!   allocations at steady state, and batch outputs come from the
+//!   shared [`outpool::OutputPool`], recycled across workers when the
+//!   last ticket of a batch drops them.
+//! * [`bench`] — the synthetic open-loop workload drivers behind the
 //!   `serve-bench` CLI subcommand and `benches/serve_bench.rs`:
-//!   configurable adapter count, Zipf-skewed adapter popularity and
-//!   request rate, reporting throughput, p50/p95/p99 latency and the
-//!   batched-vs-sequential speedup into the `serving` section of
-//!   `BENCH_linalg.json` (gated in CI by `tools/bench_regression.py`).
+//!   [`bench::run`] (single-site `serving` section: Zipf adapter
+//!   popularity, batched-vs-sequential throughput, latency
+//!   percentiles) and [`bench::run_model`] (multi-site `serving_model`
+//!   section: N sites × M adapters, plus the shared-cache vs
+//!   per-site-cache comparison).  Both sections of
+//!   `BENCH_linalg.json` are gated in CI by
+//!   `tools/bench_regression.py`.
 //!
-//! Knobs come from the `[serve]` config table
-//! ([`config::ServeConfig`](crate::config::ServeConfig)) with
-//! `COSA_SERVE_*` env overrides; worker count resolves through the same
-//! `plan_threads` helper the compute backends share.
+//! Knobs come from the `[serve]` and `[model]` config tables
+//! ([`config::ServeConfig`](crate::config::ServeConfig),
+//! [`config::ModelConfig`](crate::config::ModelConfig)) with
+//! `COSA_SERVE_*` / `COSA_MODEL_*` env overrides; worker count resolves
+//! through the same `plan_threads` helper the compute backends share.
 
 pub mod bench;
+pub mod outpool;
 pub mod registry;
 pub mod scheduler;
 
-pub use registry::{AdapterRegistry, SiteShape};
-pub use scheduler::Server;
+pub use crate::model::{AdaptedModel, ModelSpec, SiteShape, SiteSpec};
+pub use registry::AdapterRegistry;
+pub use scheduler::{CancelHandle, Response, Server, Ticket};

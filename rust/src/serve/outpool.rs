@@ -1,0 +1,202 @@
+//! Cross-worker recycling of batch **output** buffers.
+//!
+//! A batch's outputs outlive the worker that computed them — every
+//! ticket of the batch holds them via `Arc` — so they cannot come from
+//! a worker's private `Workspace` (which would hand the buffer to the
+//! next batch while readers still hold rows).  PR 3 simply allocated a
+//! fresh output matrix per batch; at high batch rates that is an
+//! allocator round-trip per batch per site.  [`OutputPool`] closes the
+//! loop: workers take [`PooledOut`] buffers, and when the *last* ticket
+//! of a batch drops its `Arc`, the buffer's `Drop` impl returns it to
+//! the shared pool — whichever thread that happens on (hence
+//! "cross-worker": worker A's buffer is routinely recycled by a caller
+//! thread and re-taken by worker B).
+//!
+//! The pool holds plain `Vec<f32>`s behind a `Mutex`, best-fit by
+//! capacity like `linalg::Workspace`, bounded by [`MAX_POOLED`].  If
+//! the pool itself is gone (server shut down while tickets are still
+//! alive) the buffer just drops — `PooledOut` only holds a `Weak`.
+
+use std::ops::Deref;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+use crate::math::matrix::Matrix;
+
+/// Maximum buffers retained; beyond it the smallest pooled buffer is
+/// displaced only by a strictly larger incoming one (Workspace's rule).
+const MAX_POOLED: usize = 256;
+
+/// Shared pool of batch-output buffers (see module docs).
+#[derive(Default)]
+pub struct OutputPool {
+    bufs: Mutex<Vec<Vec<f32>>>,
+    allocs: AtomicU64,
+    reuses: AtomicU64,
+}
+
+impl OutputPool {
+    /// The pool is always shared (workers take, ticket drops recycle),
+    /// so the constructor hands out an `Arc` directly.
+    pub fn shared() -> Arc<OutputPool> {
+        Arc::new(OutputPool::default())
+    }
+
+    /// `(fresh allocations, pool reuses)` so far — flat `allocs` across
+    /// a steady stream of batches is the recycling proof the tests and
+    /// benches assert.
+    pub fn stats(&self) -> (u64, u64) {
+        (
+            self.allocs.load(Ordering::Relaxed),
+            self.reuses.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Buffers currently pooled (diagnostic).
+    pub fn pooled(&self) -> usize {
+        self.bufs.lock().unwrap_or_else(|p| p.into_inner()).len()
+    }
+
+    /// A zeroed `rows × cols` output backed by a pooled buffer when one
+    /// with sufficient capacity exists.  (The gemm kernels fully
+    /// overwrite their output, but zeroing keeps the contract identical
+    /// to the `Matrix::zeros` path this replaces — stale floats can
+    /// never leak to a caller even on an error path.)
+    pub fn take(self: &Arc<Self>, rows: usize, cols: usize) -> PooledOut {
+        let len = rows * cols;
+        let reused = {
+            let mut bufs =
+                self.bufs.lock().unwrap_or_else(|p| p.into_inner());
+            let best = bufs
+                .iter()
+                .enumerate()
+                .filter(|(_, b)| b.capacity() >= len)
+                .min_by_key(|(_, b)| b.capacity())
+                .map(|(i, _)| i);
+            best.map(|i| bufs.swap_remove(i))
+        };
+        let data = match reused {
+            Some(mut buf) => {
+                self.reuses.fetch_add(1, Ordering::Relaxed);
+                buf.clear();
+                buf.resize(len, 0.0);
+                buf
+            }
+            None => {
+                self.allocs.fetch_add(1, Ordering::Relaxed);
+                vec![0.0; len]
+            }
+        };
+        PooledOut {
+            mat: Some(Matrix::from_vec(rows, cols, data)),
+            pool: Arc::downgrade(self),
+        }
+    }
+
+    fn recycle(&self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut bufs = self.bufs.lock().unwrap_or_else(|p| p.into_inner());
+        if bufs.len() >= MAX_POOLED {
+            let smallest = bufs
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, b)| b.capacity())
+                .map(|(i, b)| (i, b.capacity()));
+            match smallest {
+                Some((i, cap)) if cap < buf.capacity() => {
+                    bufs.swap_remove(i);
+                }
+                _ => return, // incoming is no larger — drop it instead
+            }
+        }
+        bufs.push(buf);
+    }
+}
+
+/// A batch output matrix on loan from an [`OutputPool`]; returns its
+/// buffer to the pool when the last holder drops it.
+pub struct PooledOut {
+    mat: Option<Matrix>,
+    pool: Weak<OutputPool>,
+}
+
+impl PooledOut {
+    /// Mutable access for the worker filling the batch (before the
+    /// buffer is `Arc`-shared with tickets).
+    pub(crate) fn matrix_mut(&mut self) -> &mut Matrix {
+        self.mat.as_mut().expect("PooledOut holds its matrix until drop")
+    }
+}
+
+impl Deref for PooledOut {
+    type Target = Matrix;
+    fn deref(&self) -> &Matrix {
+        self.mat.as_ref().expect("PooledOut holds its matrix until drop")
+    }
+}
+
+impl Drop for PooledOut {
+    fn drop(&mut self) {
+        if let (Some(m), Some(pool)) = (self.mat.take(), self.pool.upgrade())
+        {
+            pool.recycle(m.data);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steady_state_reuses_instead_of_allocating() {
+        let pool = OutputPool::shared();
+        for i in 0..10 {
+            let out = pool.take(4, 8);
+            assert_eq!((out.rows, out.cols), (4, 8));
+            assert!(out.data.iter().all(|v| *v == 0.0), "must hand zeros");
+            drop(out); // recycles
+            let (allocs, reuses) = pool.stats();
+            assert_eq!(allocs, 1, "iteration {i} allocated again");
+            assert_eq!(reuses, i as u64);
+        }
+    }
+
+    #[test]
+    fn best_fit_and_heterogeneous_shapes() {
+        let pool = OutputPool::shared();
+        let big = pool.take(16, 16);
+        let small = pool.take(2, 2);
+        drop(big);
+        drop(small);
+        // best-fit: a 9-float request skips the 4-float buffer and
+        // reuses the 256-float one (smallest sufficient capacity)
+        let mid = pool.take(3, 3);
+        let (allocs, _) = pool.stats();
+        assert_eq!(allocs, 2, "mid-size fits inside the big buffer");
+        drop(mid);
+        // both original capacities are still pooled (4 and 256)
+        assert_eq!(pool.pooled(), 2);
+    }
+
+    #[test]
+    fn pool_death_is_harmless_for_live_outputs() {
+        let pool = OutputPool::shared();
+        let out = pool.take(2, 2);
+        drop(pool); // server gone, ticket still holds the output
+        assert_eq!(out.data.len(), 4);
+        drop(out); // Weak upgrade fails; buffer just drops
+    }
+
+    #[test]
+    fn zeroes_recycled_buffers() {
+        let pool = OutputPool::shared();
+        let mut out = pool.take(2, 2);
+        out.matrix_mut().data.fill(7.5);
+        drop(out);
+        let out = pool.take(2, 2);
+        assert!(out.data.iter().all(|v| *v == 0.0), "stale floats leaked");
+    }
+}

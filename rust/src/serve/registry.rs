@@ -1,445 +1,56 @@
-//! Adapter registry: named adapters + a byte-budgeted LRU over the
-//! regenerated `L`/`R` projections.
+//! Serving registry — the multi-site [`AdaptedModel`] layer fronted at
+//! the engine boundary.
 //!
-//! ## Model
-//!
-//! A registry fronts **one base-model site** ([`SiteShape`]: the adapted
-//! weight is `m × n`).  Each registered adapter contributes its trained
-//! core `Y` (`a × b`), its seed and a scale `alpha`; the fixed
-//! projections `L` (`m × a`) and `R` (`b × n`) are *never stored* — they
-//! regenerate on demand from `(seed, tensor name)` via the canonical
-//! `regen_l` / `regen_r` generators, exactly as the checkpoint loader
-//! does, so an adapter that is evicted and reloaded produces
-//! **bit-identical** forward outputs (asserted by the tests below).
-//!
-//! ## Projection cache
-//!
-//! Regeneration is O(m·a + b·n) gaussian draws — cheap enough to redo,
-//! expensive enough to cache.  [`ProjectionCache`] is an LRU keyed by
-//! `(seed, tensor name, rows, cols)` with a byte budget: hits bump a
-//! logical clock, misses regenerate and insert, and inserts evict
-//! least-recently-used entries until the budget holds (the newest entry
-//! is always kept resident so a single over-budget projection still
-//! serves).  Entries are `Arc<Matrix>` so the scheduler's workers can
-//! hold a projection across a batch while the cache concurrently evicts
-//! it for someone else.
+//! PR 3's `AdapterRegistry` served exactly one `SiteShape`; the
+//! registry is now the [`model`](crate::model) layer's `AdaptedModel`:
+//! named adapters are *sets* of cores keyed by site (one per
+//! [`ModelSpec`](crate::model::ModelSpec) site), all regenerating their
+//! `L`/`R` projections from one seed through **one** shared
+//! byte-budgeted [`ProjectionCache`].  Everything registry-shaped —
+//! hot load/evict, checkpoint load-by-name (v2 files carry every
+//! per-site core under one adapter name), the two-phase `plan` /
+//! `install` lookup that resolves **all cold sites of a request at
+//! once** outside the lock — lives on `AdaptedModel`; this module
+//! keeps the serving-facing name plus the §4.1 determinism tests
+//! (evict → reload bit-identity, disk round-trips, raced installs).
 
-use std::collections::{BTreeMap, HashMap};
-use std::path::Path;
-use std::sync::Arc;
+pub use crate::model::{
+    AdaptedModel, CacheStats, CoreInput, ModelSpec, ProjectionCache,
+    SiteShape, SiteSpec,
+};
 
-use crate::adapters::cosa::{adapter_forward_into, regen_l, regen_r};
-use crate::linalg::Workspace;
-use crate::math::matrix::Matrix;
-use crate::train::checkpoint::Checkpoint;
-
-/// The base-model site a registry serves: the adapted weight is `m × n`
-/// (activations enter as rows of width `n`, leave as rows of width `m`).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct SiteShape {
-    pub m: usize,
-    pub n: usize,
-}
-
-/// One registered adapter: everything except the regenerable projections.
-#[derive(Clone)]
-pub struct Adapter {
-    pub name: Arc<str>,
-    pub seed: u64,
-    pub alpha: f32,
-    /// Tensor names the projections derive from (e.g. "adp.0.wq.l") —
-    /// must match what training used or the regenerated L/R differ.
-    pub l_name: String,
-    pub r_name: String,
-    /// Trained core (a × b).
-    pub y: Arc<Matrix>,
-}
-
-/// Everything one forward needs, `Arc`-shared so the registry lock can
-/// be released before any compute starts.
-#[derive(Clone)]
-pub struct AdapterHandles {
-    pub l: Arc<Matrix>,
-    pub r: Arc<Matrix>,
-    pub y: Arc<Matrix>,
-    pub alpha: f32,
-}
-
-/// First phase of a two-phase lookup ([`AdapterRegistry::plan`] /
-/// [`AdapterRegistry::install`]): `l`/`r` are `Some` on cache hits;
-/// on a miss the remaining fields describe the regeneration to perform
-/// outside the registry lock.
-pub struct ProjectionPlan {
-    pub seed: u64,
-    pub l_name: String,
-    pub r_name: String,
-    pub m: usize,
-    pub n: usize,
-    pub a: usize,
-    pub b: usize,
-    pub alpha: f32,
-    pub y: Arc<Matrix>,
-    pub l: Option<Arc<Matrix>>,
-    pub r: Option<Arc<Matrix>>,
-}
-
-/// Cache key: (seed, tensor name, rows, cols).  Dims are part of the
-/// identity so two adapters sharing a seed but differing in core shape
-/// can never collide.
-type CacheKey = (u64, String, usize, usize);
-
-struct CacheEntry {
-    mat: Arc<Matrix>,
-    last_used: u64,
-}
-
-/// Counters exposed for benches and tests.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct CacheStats {
-    pub hits: u64,
-    pub misses: u64,
-    pub evictions: u64,
-}
-
-/// Byte-budgeted LRU over regenerated projections (see module docs).
-pub struct ProjectionCache {
-    budget_bytes: usize,
-    bytes: usize,
-    tick: u64,
-    entries: HashMap<CacheKey, CacheEntry>,
-    stats: CacheStats,
-}
-
-fn mat_bytes(m: &Matrix) -> usize {
-    m.data.len() * std::mem::size_of::<f32>()
-}
-
-impl ProjectionCache {
-    pub fn new(budget_bytes: usize) -> ProjectionCache {
-        ProjectionCache {
-            budget_bytes,
-            bytes: 0,
-            tick: 0,
-            entries: HashMap::new(),
-            stats: CacheStats::default(),
-        }
-    }
-
-    pub fn stats(&self) -> CacheStats {
-        self.stats
-    }
-
-    pub fn reset_stats(&mut self) {
-        self.stats = CacheStats::default();
-    }
-
-    /// Bytes currently resident (diagnostic).
-    pub fn bytes(&self) -> usize {
-        self.bytes
-    }
-
-    /// Entries currently resident (diagnostic).
-    pub fn len(&self) -> usize {
-        self.entries.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
-    }
-
-    /// Hit-only lookup: bumps recency and the hit counter on a hit,
-    /// touches nothing on a miss (the caller is expected to regenerate
-    /// outside any lock and come back through [`ProjectionCache::get_or`]).
-    pub fn peek(&mut self, key: &CacheKey) -> Option<Arc<Matrix>> {
-        if let Some(e) = self.entries.get_mut(key) {
-            self.tick += 1;
-            e.last_used = self.tick;
-            self.stats.hits += 1;
-            return Some(e.mat.clone());
-        }
-        None
-    }
-
-    /// The cached projection for `key`, regenerating via `regen` on a
-    /// miss.  Hits refresh recency; misses insert and then evict
-    /// least-recently-used entries until the budget holds (the entry
-    /// just inserted is never the victim).
-    pub fn get_or(
-        &mut self,
-        key: CacheKey,
-        regen: impl FnOnce() -> Matrix,
-    ) -> Arc<Matrix> {
-        self.tick += 1;
-        if let Some(e) = self.entries.get_mut(&key) {
-            e.last_used = self.tick;
-            self.stats.hits += 1;
-            return e.mat.clone();
-        }
-        self.stats.misses += 1;
-        let mat = Arc::new(regen());
-        self.bytes += mat_bytes(&mat);
-        let entry = CacheEntry { mat: mat.clone(), last_used: self.tick };
-        self.entries.insert(key.clone(), entry);
-        self.evict_to_budget(&key);
-        mat
-    }
-
-    fn evict_to_budget(&mut self, keep: &CacheKey) {
-        while self.bytes > self.budget_bytes && self.entries.len() > 1 {
-            let victim = self
-                .entries
-                .iter()
-                .filter(|(k, _)| *k != keep)
-                .min_by_key(|(_, e)| e.last_used)
-                .map(|(k, _)| k.clone());
-            let Some(k) = victim else { break };
-            if let Some(e) = self.entries.remove(&k) {
-                self.bytes -= mat_bytes(&e.mat);
-                self.stats.evictions += 1;
-            }
-        }
-    }
-}
-
-/// Named adapters over one site, with hot load/evict and the projection
-/// LRU (see module docs).
-pub struct AdapterRegistry {
-    site: SiteShape,
-    adapters: BTreeMap<Arc<str>, Adapter>,
-    cache: ProjectionCache,
-}
-
-impl AdapterRegistry {
-    pub fn new(site: SiteShape, cache_budget_bytes: usize) -> AdapterRegistry {
-        AdapterRegistry {
-            site,
-            adapters: BTreeMap::new(),
-            cache: ProjectionCache::new(cache_budget_bytes),
-        }
-    }
-
-    pub fn site(&self) -> SiteShape {
-        self.site
-    }
-
-    pub fn cache_stats(&self) -> CacheStats {
-        self.cache.stats()
-    }
-
-    pub fn reset_cache_stats(&mut self) {
-        self.cache.reset_stats();
-    }
-
-    /// Registered adapter names (sorted — BTreeMap order).
-    pub fn names(&self) -> Vec<Arc<str>> {
-        self.adapters.keys().cloned().collect()
-    }
-
-    pub fn contains(&self, name: &str) -> bool {
-        self.adapters.contains_key(name)
-    }
-
-    pub fn len(&self) -> usize {
-        self.adapters.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.adapters.is_empty()
-    }
-
-    /// Hot-load an adapter from its parts.  Replaces any same-named
-    /// adapter.  The core must be consistent with the site (L is
-    /// `m × a`, R is `b × n`; a/b come from the core itself).
-    pub fn insert(
-        &mut self,
-        name: &str,
-        seed: u64,
-        alpha: f32,
-        l_name: &str,
-        r_name: &str,
-        y: Matrix,
-    ) -> anyhow::Result<()> {
-        anyhow::ensure!(
-            y.rows > 0 && y.cols > 0,
-            "adapter `{name}`: empty core ({} x {})",
-            y.rows,
-            y.cols
-        );
-        let key: Arc<str> = Arc::from(name);
-        let adapter = Adapter {
-            name: key.clone(),
-            seed,
-            alpha,
-            l_name: l_name.to_string(),
-            r_name: r_name.to_string(),
-            y: Arc::new(y),
-        };
-        self.adapters.insert(key, adapter);
-        Ok(())
-    }
-
-    /// Hot-load from a checkpoint: takes the first `*.y` tensor (BTreeMap
-    /// order) as the served core and derives the projection tensor names
-    /// from it ("….y" -> "….l" / "….r" — the training-time convention),
-    /// so the regenerated projections match the ones the core was
-    /// trained against.
-    pub fn load_checkpoint(
-        &mut self,
-        name: &str,
-        ck: &Checkpoint,
-        alpha: f32,
-    ) -> anyhow::Result<()> {
-        let found = ck
-            .tensors
-            .iter()
-            .find(|(n, (shape, _))| n.ends_with(".y") && shape.len() == 2);
-        let Some((tname, (shape, vals))) = found else {
-            anyhow::bail!(
-                "checkpoint for `{name}` has no 2-d `*.y` core tensor"
-            );
-        };
-        let stem = tname.strip_suffix(".y").unwrap_or(tname).to_string();
-        let y = Matrix::from_vec(shape[0], shape[1], vals.clone());
-        self.insert(
-            name,
-            ck.adapter_seed,
-            alpha,
-            &format!("{stem}.l"),
-            &format!("{stem}.r"),
-            y,
-        )
-    }
-
-    /// Load-by-name entry point: resolve `name` to a checkpoint file in
-    /// `dir` (via [`Checkpoint::load_by_name`]) and hot-load it.
-    pub fn load_from_dir(
-        &mut self,
-        dir: &Path,
-        name: &str,
-        alpha: f32,
-    ) -> anyhow::Result<()> {
-        let ck = Checkpoint::load_by_name(dir, name)?;
-        self.load_checkpoint(name, &ck, alpha)
-    }
-
-    /// Drop an adapter.  Its projections stay in the LRU until the byte
-    /// budget pushes them out (another adapter may share the seed); a
-    /// later reload regenerates bit-identically either way.
-    pub fn evict(&mut self, name: &str) -> bool {
-        self.adapters.remove(name).is_some()
-    }
-
-    /// Lock-friendly first phase of a lookup: cache hits resolve
-    /// immediately into the plan; misses leave `l`/`r` as `None` plus
-    /// everything needed to regenerate them **outside** whatever lock
-    /// guards this registry.  Hand the regenerated matrices back through
-    /// [`AdapterRegistry::install`].  (The scheduler's workers use this
-    /// split so a cold or thrashing projection cache never serializes
-    /// the worker pool behind one regenerating thread.)
-    pub fn plan(&mut self, name: &str) -> anyhow::Result<ProjectionPlan> {
-        let (m, n) = (self.site.m, self.site.n);
-        let adapter = self
-            .adapters
-            .get(name)
-            .ok_or_else(|| anyhow::anyhow!("unknown adapter `{name}`"))?
-            .clone();
-        let (a, b) = (adapter.y.rows, adapter.y.cols);
-        let l = self.cache.peek(&(adapter.seed, adapter.l_name.clone(), m, a));
-        let r = self.cache.peek(&(adapter.seed, adapter.r_name.clone(), b, n));
-        Ok(ProjectionPlan {
-            seed: adapter.seed,
-            l_name: adapter.l_name,
-            r_name: adapter.r_name,
-            m,
-            n,
-            a,
-            b,
-            alpha: adapter.alpha,
-            y: adapter.y,
-            l,
-            r,
-        })
-    }
-
-    /// Second phase: install projections regenerated outside the lock
-    /// (pass `None` for anything the plan already resolved).  If two
-    /// workers raced the same cold adapter, the first insert wins and
-    /// the loser's regenerated copy is dropped — both see identical
-    /// bits either way, regen being deterministic.
-    pub fn install(
-        &mut self,
-        plan: &ProjectionPlan,
-        l_new: Option<Matrix>,
-        r_new: Option<Matrix>,
-    ) -> AdapterHandles {
-        let l = match &plan.l {
-            Some(hit) => hit.clone(),
-            None => {
-                let (seed, m, a) = (plan.seed, plan.m, plan.a);
-                let lname = plan.l_name.clone();
-                self.cache.get_or((seed, lname.clone(), m, a), move || {
-                    l_new.unwrap_or_else(|| regen_l(seed, &lname, m, a))
-                })
-            }
-        };
-        let r = match &plan.r {
-            Some(hit) => hit.clone(),
-            None => {
-                let (seed, b, n) = (plan.seed, plan.b, plan.n);
-                let rname = plan.r_name.clone();
-                self.cache.get_or((seed, rname.clone(), b, n), move || {
-                    r_new.unwrap_or_else(|| regen_r(seed, &rname, b, n))
-                })
-            }
-        };
-        AdapterHandles { l, r, y: plan.y.clone(), alpha: plan.alpha }
-    }
-
-    /// Projection handles for one forward, through the LRU.  Cache
-    /// misses regenerate inline — single-owner callers (tests, the
-    /// sequential bench baseline) hold no lock, so the two-phase split
-    /// buys them nothing.
-    pub fn handles(&mut self, name: &str) -> anyhow::Result<AdapterHandles> {
-        let plan = self.plan(name)?;
-        Ok(self.install(&plan, None, None))
-    }
-
-    /// Workspace-backed forward for `x` (N × n) into `out` (N × m) —
-    /// the per-request kernel the scheduler's workers run.
-    pub fn forward_into(
-        &mut self,
-        name: &str,
-        x: &Matrix,
-        ws: &mut Workspace,
-        out: &mut Matrix,
-    ) -> anyhow::Result<()> {
-        let h = self.handles(name)?;
-        adapter_forward_into(x, &h.l, &h.r, &h.y, h.alpha, ws, out);
-        Ok(())
-    }
-
-    /// Allocating forward (tests and the sequential bench baseline).
-    pub fn forward(&mut self, name: &str, x: &Matrix) -> anyhow::Result<Matrix> {
-        let h = self.handles(name)?;
-        Ok(crate::adapters::cosa::adapter_forward(
-            x, &h.l, &h.r, &h.y, h.alpha,
-        ))
-    }
-}
+/// The serving registry *is* the adapted-model layer (see module docs).
+pub type AdapterRegistry = AdaptedModel;
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::adapters::cosa::{adapter_forward, regen_l, regen_r};
+    use crate::math::matrix::Matrix;
     use crate::math::rng::Pcg64;
+    use crate::train::checkpoint::Checkpoint;
+    use std::sync::Arc;
 
     fn test_registry(budget: usize) -> AdapterRegistry {
-        AdapterRegistry::new(SiteShape { m: 12, n: 10 }, budget)
+        AdaptedModel::single_site(
+            "adp.0.wq",
+            SiteShape { m: 12, n: 10 },
+            4,
+            3,
+            budget,
+        )
     }
 
     fn add_adapter(reg: &mut AdapterRegistry, name: &str, seed: u64) {
         let mut rng = Pcg64::derive(seed, name);
         let y = Matrix::gaussian(4, 3, 0.5, &mut rng);
-        reg.insert(name, seed, 2.0, "adp.0.wq.l", "adp.0.wq.r", y).unwrap();
+        reg.insert(
+            name,
+            seed,
+            2.0,
+            vec![CoreInput::new("adp.0.wq.l", "adp.0.wq.r", y)],
+        )
+        .unwrap();
     }
 
     #[test]
@@ -448,12 +59,11 @@ mod tests {
         add_adapter(&mut reg, "a", 7);
         let mut rng = Pcg64::new(1);
         let x = Matrix::gaussian(3, 10, 1.0, &mut rng);
-        let got = reg.forward("a", &x).unwrap();
+        let got = reg.forward_one("a", &x).unwrap();
         let l = regen_l(7, "adp.0.wq.l", 12, 4);
         let r = regen_r(7, "adp.0.wq.r", 3, 10);
         let h = reg.handles("a").unwrap();
-        let want =
-            crate::adapters::cosa::adapter_forward(&x, &l, &r, &h.y, 2.0);
+        let want = adapter_forward(&x, &l, &r, &h.sites[0].y, 2.0);
         assert_eq!(got, want, "registry forward must be the canonical math");
     }
 
@@ -461,7 +71,7 @@ mod tests {
     fn unknown_adapter_is_an_error() {
         let mut reg = test_registry(1 << 20);
         let x = Matrix::zeros(1, 10);
-        assert!(reg.forward("nope", &x).is_err());
+        assert!(reg.forward_one("nope", &x).is_err());
         assert!(!reg.evict("nope"));
     }
 
@@ -470,10 +80,10 @@ mod tests {
         let mut reg = test_registry(1 << 20);
         add_adapter(&mut reg, "a", 7);
         let x = Matrix::zeros(1, 10);
-        reg.forward("a", &x).unwrap();
+        reg.forward_one("a", &x).unwrap();
         let s1 = reg.cache_stats();
         assert_eq!((s1.hits, s1.misses), (0, 2), "first touch: L and R miss");
-        reg.forward("a", &x).unwrap();
+        reg.forward_one("a", &x).unwrap();
         let s2 = reg.cache_stats();
         assert_eq!((s2.hits, s2.misses), (2, 2), "second touch: both hit");
     }
@@ -487,12 +97,12 @@ mod tests {
         add_adapter(&mut reg, "a", 7);
         add_adapter(&mut reg, "b", 8);
         let x = Matrix::zeros(1, 10);
-        reg.forward("a", &x).unwrap();
-        reg.forward("b", &x).unwrap();
+        reg.forward_one("a", &x).unwrap();
+        reg.forward_one("b", &x).unwrap();
         let s = reg.cache_stats();
         assert_eq!(s.misses, 4, "all four projections regenerate");
         assert!(s.evictions >= 2, "budget forces evictions: {s:?}");
-        reg.forward("a", &x).unwrap();
+        reg.forward_one("a", &x).unwrap();
         let s = reg.cache_stats();
         assert_eq!(s.misses, 6, "a's projections were evicted, regen again");
     }
@@ -503,8 +113,8 @@ mod tests {
         add_adapter(&mut reg, "a", 7);
         let mut rng = Pcg64::new(2);
         let x = Matrix::gaussian(2, 10, 1.0, &mut rng);
-        let o1 = reg.forward("a", &x).unwrap();
-        let o2 = reg.forward("a", &x).unwrap();
+        let o1 = reg.forward_one("a", &x).unwrap();
+        let o2 = reg.forward_one("a", &x).unwrap();
         assert_eq!(o1, o2, "regen-every-time must still be deterministic");
     }
 
@@ -517,13 +127,13 @@ mod tests {
         add_adapter(&mut reg, "a", 7);
         let mut rng = Pcg64::new(3);
         let x = Matrix::gaussian(5, 10, 1.0, &mut rng);
-        let before = reg.forward("a", &x).unwrap();
+        let before = reg.forward_one("a", &x).unwrap();
         assert!(reg.evict("a"));
         // churn the projection cache so "a" is fully cold again
         add_adapter(&mut reg, "churn", 9);
-        reg.forward("churn", &x).unwrap();
+        reg.forward_one("churn", &x).unwrap();
         add_adapter(&mut reg, "a", 7);
-        let after = reg.forward("a", &x).unwrap();
+        let after = reg.forward_one("a", &x).unwrap();
         for (p, q) in before.data.iter().zip(&after.data) {
             assert_eq!(p.to_bits(), q.to_bits(), "evict/reload drifted");
         }
@@ -540,10 +150,12 @@ mod tests {
         tensors.insert("adp.0.wq.y".to_string(),
                        (vec![4usize, 3], y.data.clone()));
         let ck = Checkpoint {
+            version: 2,
             method: "cosa".into(),
             adapter_seed: 77,
             artifact: "tiny-lm_cosa".into(),
             step: 5,
+            sites: Vec::new(),
             tensors,
         };
         ck.save(&dir.join("mathbot.cosa")).unwrap();
@@ -551,22 +163,65 @@ mod tests {
         let mut reg = test_registry(1 << 20);
         reg.load_from_dir(&dir, "mathbot", 2.0).unwrap();
         let x = Matrix::gaussian(2, 10, 1.0, &mut rng);
-        let first = reg.forward("mathbot", &x).unwrap();
+        let first = reg.forward_one("mathbot", &x).unwrap();
 
         // evict + reload from disk: same bits
         assert!(reg.evict("mathbot"));
         reg.load_from_dir(&dir, "mathbot", 2.0).unwrap();
-        let second = reg.forward("mathbot", &x).unwrap();
+        let second = reg.forward_one("mathbot", &x).unwrap();
         for (p, q) in first.data.iter().zip(&second.data) {
             assert_eq!(p.to_bits(), q.to_bits(), "disk reload drifted");
         }
 
         // and the in-memory insert with the same parts agrees too
         let mut reg2 = test_registry(1 << 20);
-        reg2.insert("mathbot", 77, 2.0, "adp.0.wq.l", "adp.0.wq.r", y)
-            .unwrap();
-        let third = reg2.forward("mathbot", &x).unwrap();
+        reg2.insert(
+            "mathbot",
+            77,
+            2.0,
+            vec![CoreInput::new("adp.0.wq.l", "adp.0.wq.r", y)],
+        )
+        .unwrap();
+        let third = reg2.forward_one("mathbot", &x).unwrap();
         assert_eq!(first, third, "checkpoint path vs direct insert");
+    }
+
+    #[test]
+    fn multi_site_checkpoint_roundtrip_from_disk() {
+        // The v2 flow end-to-end through the filesystem: one adapter
+        // name carries all per-site cores, load_from_dir reassembles
+        // the whole model-adapter bit-identically.
+        let dir = std::env::temp_dir().join("cosa_serve_registry_v2_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = ModelSpec::synthetic(
+            3, SiteShape { m: 12, n: 10 }, 4, 3);
+        let mut reg = AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+        let mut rng = Pcg64::new(8);
+        let ys: Vec<Matrix> = spec
+            .sites
+            .iter()
+            .map(|s| Matrix::gaussian(s.a, s.b, 0.5, &mut rng))
+            .collect();
+        reg.insert_synthetic("fleet", 42, 2.0, ys).unwrap();
+        let ck = reg.checkpoint("fleet", "tiny-lm_cosa").unwrap();
+        ck.save(&dir.join("fleet.cosa")).unwrap();
+
+        let xs: Vec<Matrix> = spec
+            .sites
+            .iter()
+            .map(|s| Matrix::gaussian(2, s.shape.n, 1.0, &mut rng))
+            .collect();
+        let want = reg.forward("fleet", &xs).unwrap();
+
+        let mut fresh = AdaptedModel::new(spec, 1 << 20).unwrap();
+        fresh.load_from_dir(&dir, "fleet", 2.0).unwrap();
+        let got = fresh.forward("fleet", &xs).unwrap();
+        for (wm, gm) in want.iter().zip(&got) {
+            for (p, q) in wm.data.iter().zip(&gm.data) {
+                assert_eq!(p.to_bits(), q.to_bits(),
+                           "disk v2 round-trip drifted");
+            }
+        }
     }
 
     #[test]
@@ -576,34 +231,47 @@ mod tests {
         // Two cold plans (as two workers would take under the lock).
         let p1 = reg.plan("a").unwrap();
         let p2 = reg.plan("a").unwrap();
-        assert!(p1.l.is_none() && p1.r.is_none(), "cold cache");
+        let s1 = &p1.sites[0];
+        assert!(s1.l.is_none() && s1.r.is_none(), "cold cache");
         // Both regenerate outside the lock...
-        let l1 = regen_l(p1.seed, &p1.l_name, p1.m, p1.a);
-        let r1 = regen_r(p1.seed, &p1.r_name, p1.b, p1.n);
-        let l2 = regen_l(p2.seed, &p2.l_name, p2.m, p2.a);
-        let r2 = regen_r(p2.seed, &p2.r_name, p2.b, p2.n);
+        let regen = |p: &crate::model::ModelPlan| {
+            p.sites
+                .iter()
+                .map(|s| {
+                    (Some(regen_l(s.seed, &s.l_name, s.m, s.a)),
+                     Some(regen_r(s.seed, &s.r_name, s.b, s.n)))
+                })
+                .collect::<Vec<_>>()
+        };
+        let (r1, r2) = (regen(&p1), regen(&p2));
         // ...first install wins, second gets the already-resident Arcs.
-        let h1 = reg.install(&p1, Some(l1), Some(r1));
-        let h2 = reg.install(&p2, Some(l2), Some(r2));
-        assert!(Arc::ptr_eq(&h1.l, &h2.l), "raced install must dedupe");
-        assert!(Arc::ptr_eq(&h1.r, &h2.r));
+        let h1 = reg.install(&p1, r1);
+        let h2 = reg.install(&p2, r2);
+        assert!(Arc::ptr_eq(&h1.sites[0].l, &h2.sites[0].l),
+                "raced install must dedupe");
+        assert!(Arc::ptr_eq(&h1.sites[0].r, &h2.sites[0].r));
         // and a warm plan resolves without any regeneration step
         let p3 = reg.plan("a").unwrap();
-        assert!(p3.l.is_some() && p3.r.is_some(), "warm cache");
-        let h3 = reg.install(&p3, None, None);
-        assert!(Arc::ptr_eq(&h1.l, &h3.l));
+        assert!(p3.sites[0].l.is_some() && p3.sites[0].r.is_some(),
+                "warm cache");
+        let no = p3.no_regen();
+        let h3 = reg.install(&p3, no);
+        assert!(Arc::ptr_eq(&h1.sites[0].l, &h3.sites[0].l));
         // inline handles() agrees with the split path
         let h4 = reg.handles("a").unwrap();
-        assert!(Arc::ptr_eq(&h1.l, &h4.l) && Arc::ptr_eq(&h1.r, &h4.r));
+        assert!(Arc::ptr_eq(&h1.sites[0].l, &h4.sites[0].l)
+            && Arc::ptr_eq(&h1.sites[0].r, &h4.sites[0].r));
     }
 
     #[test]
     fn load_checkpoint_requires_a_core() {
         let ck = Checkpoint {
+            version: 2,
             method: "lora".into(),
             adapter_seed: 1,
             artifact: "tiny-lm_lora".into(),
             step: 0,
+            sites: Vec::new(),
             tensors: std::collections::BTreeMap::new(),
         };
         let mut reg = test_registry(1 << 20);

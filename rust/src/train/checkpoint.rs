@@ -3,8 +3,24 @@
 //! are *not* stored, they regenerate from the seed at load time.
 //!
 //! File layout: `b"COSA"` magic, u32 header length, JSON header
-//! (method cfg, seed, ordered tensor names + shapes), then raw
-//! little-endian f32 blobs in header order.
+//! (format version, method cfg, seed, ordered tensor names + shapes,
+//! optional site blocks), then raw little-endian f32 blobs in header
+//! order.
+//!
+//! ## Format versions
+//!
+//! * **v1** (PR 0–3 era): no `version` key, no site metadata.  Tensors
+//!   only — a serving registry has to guess which `*.y` tensor adapts
+//!   which site.  Still loaded (as `version == 1`, `sites` empty); a
+//!   1-site [`model::AdaptedModel`](crate::model::AdaptedModel) accepts
+//!   such files unchanged.
+//! * **v2** (current writer): `version: 2` plus a `sites` array —
+//!   one `{name, m, n, a, b}` block per adapted site, where `name` is
+//!   the tensor stem (`<name>.y` must exist with shape `[a, b]`; the
+//!   projections regenerate from `<name>.l` / `<name>.r`).  One adapter
+//!   name thus saves/loads **all** of its per-site cores.  Loaders
+//!   reject corrupt site blocks (missing/mis-shaped core tensors,
+//!   duplicate names) instead of serving from them.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -12,17 +28,37 @@ use std::path::Path;
 
 use crate::util::json::{obj, Json};
 
+/// One v2 site block: the adapted weight is `m × n`, the core `a × b`,
+/// and `name` is the tensor stem its tensors derive from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CkptSite {
+    pub name: String,
+    pub m: usize,
+    pub n: usize,
+    pub a: usize,
+    pub b: usize,
+}
+
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
+    /// Format version this checkpoint was *loaded* from (1 for legacy
+    /// files).  `save` always writes the current format
+    /// ([`FORMAT_VERSION`]).
+    pub version: u32,
     pub method: String,
     pub adapter_seed: u64,
     pub artifact: String,
     pub step: u64,
+    /// v2 site blocks; empty for v1 files (and for site-less saves).
+    pub sites: Vec<CkptSite>,
     /// name → (shape, values), insertion-ordered by name (BTreeMap).
     pub tensors: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
 }
 
 const MAGIC: &[u8; 4] = b"COSA";
+
+/// The format `save` writes.  Readers accept 1..=FORMAT_VERSION.
+pub const FORMAT_VERSION: u32 = 2;
 
 /// Element count of a shape.  The empty shape is a scalar (1 element,
 /// the numpy convention); any zero dimension means zero elements.
@@ -50,14 +86,69 @@ impl Checkpoint {
                 ])
             })
             .collect();
-        obj(vec![
+        let mut fields = vec![
+            ("version", Json::from(FORMAT_VERSION as usize)),
             ("method", Json::Str(self.method.clone())),
             ("adapter_seed", Json::Str(self.adapter_seed.to_string())),
             ("artifact", Json::Str(self.artifact.clone())),
             ("step", Json::from(self.step as usize)),
             ("tensors", Json::Arr(names)),
-        ])
-        .to_string()
+        ];
+        if !self.sites.is_empty() {
+            let sites: Vec<Json> = self
+                .sites
+                .iter()
+                .map(|s| {
+                    obj(vec![
+                        ("name", Json::Str(s.name.clone())),
+                        ("m", Json::from(s.m)),
+                        ("n", Json::from(s.n)),
+                        ("a", Json::from(s.a)),
+                        ("b", Json::from(s.b)),
+                    ])
+                })
+                .collect();
+            fields.push(("sites", Json::Arr(sites)));
+        }
+        obj(fields).to_string()
+    }
+
+    /// Every site block must describe a real core tensor: `<name>.y`
+    /// present with shape `[a, b]`, names unique, dims nonzero.  Run on
+    /// both save (never write a corrupt block) and load (never serve
+    /// from one).
+    fn validate_sites(
+        sites: &[CkptSite],
+        tensors: &BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+    ) -> anyhow::Result<()> {
+        for (i, s) in sites.iter().enumerate() {
+            anyhow::ensure!(
+                !s.name.is_empty(),
+                "site block {i} has an empty name"
+            );
+            anyhow::ensure!(
+                s.m >= 1 && s.n >= 1 && s.a >= 1 && s.b >= 1,
+                "site `{}`: every dim must be >= 1 (m {} n {} a {} b {})",
+                s.name, s.m, s.n, s.a, s.b
+            );
+            if sites[..i].iter().any(|t| t.name == s.name) {
+                anyhow::bail!("duplicate site block `{}`", s.name);
+            }
+            let tname = format!("{}.y", s.name);
+            let Some((shape, _)) = tensors.get(&tname) else {
+                anyhow::bail!(
+                    "site `{}` declares a core but `{tname}` is missing",
+                    s.name
+                );
+            };
+            anyhow::ensure!(
+                shape.as_slice() == [s.a, s.b],
+                "site `{}`: core `{tname}` has shape {shape:?}, site block \
+                 says [{}, {}]",
+                s.name, s.a, s.b
+            );
+        }
+        Ok(())
     }
 
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
@@ -72,6 +163,7 @@ impl Checkpoint {
                 vals.len(), numel(shape)
             );
         }
+        Self::validate_sites(&self.sites, &self.tensors)?;
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
@@ -133,11 +225,39 @@ impl Checkpoint {
             })?,
             None => seed_field.as_i64().unwrap_or(0) as u64,
         };
+        // Format version: absent = v1 (the pre-site era).  A file newer
+        // than this binary is rejected rather than half-read.
+        let version = match j.get("version") {
+            Some(v) => v.as_i64().unwrap_or(0) as u32,
+            None => 1,
+        };
+        anyhow::ensure!(
+            (1..=FORMAT_VERSION).contains(&version),
+            "checkpoint format v{version} is not supported (this binary \
+             reads v1..=v{FORMAT_VERSION})"
+        );
+        let mut sites = Vec::new();
+        if let Some(arr) = j.get("sites").and_then(|s| s.as_arr()) {
+            for s in arr {
+                sites.push(CkptSite {
+                    name: s.req("name")?.as_str().unwrap_or("").to_string(),
+                    m: s.req("m")?.as_usize().unwrap_or(0),
+                    n: s.req("n")?.as_usize().unwrap_or(0),
+                    a: s.req("a")?.as_usize().unwrap_or(0),
+                    b: s.req("b")?.as_usize().unwrap_or(0),
+                });
+            }
+        }
+        // Corrupt site blocks (missing/mis-shaped cores, dup names) are
+        // a load failure, not something to serve from.
+        Self::validate_sites(&sites, &tensors)?;
         Ok(Checkpoint {
+            version,
             method: j.req("method")?.as_str().unwrap_or("").to_string(),
             adapter_seed,
             artifact: j.req("artifact")?.as_str().unwrap_or("").to_string(),
             step: j.req("step")?.as_i64().unwrap_or(0) as u64,
+            sites,
             tensors,
         })
     }
@@ -193,12 +313,24 @@ mod tests {
         tensors.insert("adp.1.w1.y".to_string(),
                        (vec![2, 3], vec![-1.25f32, 0.0, 3.5, 7.0, 8.0, 9.0]));
         Checkpoint {
+            version: FORMAT_VERSION,
             method: "cosa".into(),
             adapter_seed: 1234,
             artifact: "tiny-lm_cosa".into(),
             step: 42,
+            sites: Vec::new(),
             tensors,
         }
+    }
+
+    /// `sample()` with its two cores described by v2 site blocks.
+    fn sample_v2() -> Checkpoint {
+        let mut ck = sample();
+        ck.sites = vec![
+            CkptSite { name: "adp.0.wq".into(), m: 16, n: 16, a: 4, b: 2 },
+            CkptSite { name: "adp.1.w1".into(), m: 8, n: 12, a: 2, b: 3 },
+        ];
+        ck
     }
 
     #[test]
@@ -209,6 +341,7 @@ mod tests {
         let ck = sample();
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.version, FORMAT_VERSION);
         assert_eq!(back.method, "cosa");
         assert_eq!(back.adapter_seed, 1234);
         assert_eq!(back.step, 42);
@@ -216,6 +349,143 @@ mod tests {
         assert_eq!(back.tensors["adp.1.w1.y"].0, vec![2, 3]);
         assert_eq!(back.tensors["adp.1.w1.y"].1[3], 7.0);
         assert_eq!(back.tensors["adp.0.wq.y"].1, vec![0.5f32; 8]);
+        assert!(back.sites.is_empty(), "site-less save stays site-less");
+    }
+
+    #[test]
+    fn v2_sites_roundtrip_bit_identically() {
+        let dir = std::env::temp_dir().join("cosa_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("multisite.cosa");
+        let ck = sample_v2();
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.version, 2);
+        assert_eq!(back.sites, ck.sites, "site blocks must round-trip");
+        for (name, (shape, vals)) in &ck.tensors {
+            assert_eq!(&back.tensors[name].0, shape);
+            let got = &back.tensors[name].1;
+            for (p, q) in vals.iter().zip(got) {
+                assert_eq!(p.to_bits(), q.to_bits(),
+                           "`{name}` values drifted");
+            }
+        }
+    }
+
+    #[test]
+    fn v1_file_without_version_loads_as_v1() {
+        // Hand-assemble a PR-3-era file: header has no `version` /
+        // `sites` keys.  It must load with version == 1, empty sites,
+        // and intact tensors.
+        let dir = std::env::temp_dir().join("cosa_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("legacy_v1.cosa");
+        let header = concat!(
+            r#"{"adapter_seed":"77","artifact":"tiny-lm_cosa","#,
+            r#""method":"cosa","step":3,"#,
+            r#""tensors":[{"name":"adp.0.wq.y","shape":[2,2]}]}"#,
+        );
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"COSA");
+        bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        for v in [1.0f32, -2.0, 3.0, -4.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.version, 1, "missing version key means v1");
+        assert!(back.sites.is_empty());
+        assert_eq!(back.adapter_seed, 77);
+        assert_eq!(back.tensors["adp.0.wq.y"].1, vec![1.0, -2.0, 3.0, -4.0]);
+    }
+
+    #[test]
+    fn corrupt_site_blocks_are_rejected() {
+        let dir = std::env::temp_dir().join("cosa_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad_sites.cosa");
+
+        // save refuses: site block without its core tensor
+        let mut ck = sample_v2();
+        ck.sites.push(CkptSite {
+            name: "ghost".into(), m: 4, n: 4, a: 2, b: 2,
+        });
+        assert!(ck.save(&path).is_err(), "missing `ghost.y` must not save");
+
+        // save refuses: block dims disagreeing with the core tensor
+        let mut ck = sample_v2();
+        ck.sites[0].a = 3;
+        assert!(ck.save(&path).is_err(), "mis-shaped site must not save");
+
+        // save refuses: duplicate site names
+        let mut ck = sample_v2();
+        let dup = ck.sites[0].clone();
+        ck.sites.push(dup);
+        assert!(ck.save(&path).is_err(), "duplicate site must not save");
+
+        // load refuses a hand-corrupted header (block vs tensor shape),
+        // even though every tensor individually parses
+        let good = sample_v2();
+        good.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6],
+                                       bytes[7]]) as usize;
+        let header = std::str::from_utf8(&bytes[8..8 + hlen]).unwrap();
+        let bad_header = header.replacen(
+            r#""a":4,"b":2"#, r#""a":2,"b":4"#, 1);
+        assert_ne!(header, bad_header, "corruption must actually apply");
+        let mut corrupted = Vec::new();
+        corrupted.extend_from_slice(&bytes[..4]);
+        corrupted
+            .extend_from_slice(&(bad_header.len() as u32).to_le_bytes());
+        corrupted.extend_from_slice(bad_header.as_bytes());
+        corrupted.extend_from_slice(&bytes[8 + hlen..]);
+        let bad_path = dir.join("bad_sites_corrupted.cosa");
+        std::fs::write(&bad_path, &corrupted).unwrap();
+        assert!(Checkpoint::load(&bad_path).is_err(),
+                "mis-shaped site block must not load");
+    }
+
+    #[test]
+    fn truncated_blob_section_is_rejected() {
+        let dir = std::env::temp_dir().join("cosa_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("truncated.cosa");
+        let ck = sample_v2();
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // chop the last core's blob short
+        std::fs::write(&path, &bytes[..bytes.len() - 6]).unwrap();
+        assert!(Checkpoint::load(&path).is_err(),
+                "truncated site core must not load");
+    }
+
+    #[test]
+    fn future_format_versions_are_rejected() {
+        let dir = std::env::temp_dir().join("cosa_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("future.cosa");
+        let ck = sample();
+        ck.save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let hlen = u32::from_le_bytes([bytes[4], bytes[5], bytes[6],
+                                       bytes[7]]) as usize;
+        let header = std::str::from_utf8(&bytes[8..8 + hlen]).unwrap();
+        let bumped = header.replacen(
+            &format!(r#""version":{FORMAT_VERSION}"#),
+            r#""version":99"#,
+            1,
+        );
+        assert_ne!(header, bumped);
+        let mut out = Vec::new();
+        out.extend_from_slice(&bytes[..4]);
+        out.extend_from_slice(&(bumped.len() as u32).to_le_bytes());
+        out.extend_from_slice(bumped.as_bytes());
+        out.extend_from_slice(&bytes[8 + hlen..]);
+        std::fs::write(&path, &out).unwrap();
+        assert!(Checkpoint::load(&path).is_err(),
+                "v99 must be rejected, not half-read");
     }
 
     #[test]
@@ -285,10 +555,12 @@ mod tests {
         tensors.insert("c.real.y".to_string(),
                        (vec![2, 2], vec![1.0f32, -2.0, 3.0, -4.0]));
         let ck = Checkpoint {
+            version: FORMAT_VERSION,
             method: "cosa".into(),
             adapter_seed: 7,
             artifact: "tiny-lm_cosa".into(),
             step: 1,
+            sites: Vec::new(),
             tensors,
         };
         ck.save(&path).unwrap();

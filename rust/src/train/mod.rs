@@ -205,19 +205,58 @@ impl Trainer {
         Ok(&self.log)
     }
 
-    /// Save the adapter checkpoint (trainables + adapter seed).
+    /// Save the adapter checkpoint (trainables + adapter seed).  CoSA
+    /// artifacts get v2 site blocks: every trainable `<stem>.y` whose
+    /// frozen `<stem>.l` (m × a) and `<stem>.r` (b × n) companions are
+    /// in the artifact is recorded as an adapted site, so one file
+    /// carries the whole model's per-site cores and a multi-site
+    /// registry can load them without guessing (other methods' tensor
+    /// layouts don't match the pattern and save site-less, as before).
     pub fn save_checkpoint(&self, path: &Path) -> anyhow::Result<PathBuf> {
+        use crate::train::checkpoint::{CkptSite, FORMAT_VERSION};
         let meta = &self.train_exec.meta;
         let mut tensors = BTreeMap::new();
         for spec in meta.inputs_with_role("trainable") {
             tensors.insert(spec.name.clone(),
                            (spec.shape.clone(), self.state.read(&spec.name)?));
         }
+        let mut sites = Vec::new();
+        for spec in meta.inputs_with_role("trainable") {
+            let Some(stem) = spec.name.strip_suffix(".y") else { continue };
+            if spec.shape.len() != 2 {
+                continue;
+            }
+            let (a, b) = (spec.shape[0], spec.shape[1]);
+            let find = |suffix: &str| {
+                meta.inputs.iter().find(|t| {
+                    t.role == "frozen"
+                        && t.shape.len() == 2
+                        && t.name == format!("{stem}{suffix}")
+                })
+            };
+            let (Some(l), Some(r)) = (find(".l"), find(".r")) else {
+                continue;
+            };
+            // L is m × a, R is b × n — skip anything inconsistent
+            // rather than record a corrupt site block.
+            if l.shape[1] != a || r.shape[0] != b {
+                continue;
+            }
+            sites.push(CkptSite {
+                name: stem.to_string(),
+                m: l.shape[0],
+                n: r.shape[1],
+                a,
+                b,
+            });
+        }
         let ck = Checkpoint {
+            version: FORMAT_VERSION,
             method: meta.method.method.clone(),
             adapter_seed: self.cfg.adapter_seed,
             artifact: self.cfg.artifact.clone(),
             step: self.state.step,
+            sites,
             tensors,
         };
         ck.save(path)?;

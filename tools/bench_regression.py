@@ -33,11 +33,21 @@ Checks:
    acceptance criterion: batched serving beats sequential per-request
    forward by 1.5x at 64 adapters).
 
+5. **Model serving floors + shared-cache gate** — the `serving_model`
+   section (written by serve_bench scenario 3: a whole adapted model,
+   N sites x M adapters) is checked against the baseline's
+   `serving_model` object: `throughput_rps` >= floor, `p99_ms` <=
+   ceiling, and — machine-independent — `shared_vs_persite` >=
+   `min_shared_vs_persite`: one shared projection-LRU budget across
+   all sites must not lose to the same budget statically partitioned
+   per site (the multi-site layer's reason to exist).
+
 A fresh report that exists but is malformed (unparseable JSON, or none
 of the expected sections with rows) is a hard failure — a silently
 empty report must read as "the gate is off", never as "pass".  A
 missing file still skips (local runs without a bench pass); CI passes
---require-serving so a vanished serving section fails there.
+--require-serving so a vanished serving or serving_model section fails
+there.
 
 Exit codes: 0 ok / skipped (no fresh file), 1 regression or malformed
 report.
@@ -50,6 +60,7 @@ import sys
 
 SECTION = "linalg_kernels"
 SERVING_SECTION = "serving"
+MODEL_SECTION = "serving_model"
 TOLERANCE = 0.20          # max allowed drop below the baseline gflops
 MIN_RATIO = 1.2           # fresh-run packed/tiled single-thread NN+NT floor
 MIN_SERVE_ADAPTERS = 64   # fleet size the serving ratio gate applies to
@@ -82,6 +93,14 @@ def kernel_rows(doc):
 
 def serving_rows(doc):
     rows = doc.get(SERVING_SECTION, [])
+    if not isinstance(rows, list):
+        return []
+    return [r for r in rows
+            if isinstance(r, dict) and "throughput_rps" in r]
+
+
+def model_rows(doc):
+    rows = doc.get(MODEL_SECTION, [])
     if not isinstance(rows, list):
         return []
     return [r for r in rows
@@ -219,6 +238,65 @@ def check_serving(rows, baseline_doc, baseline_path, require_acceptance,
             print(f"  note: {msg}")
 
 
+def check_serving_model(rows, baseline_doc, baseline_path,
+                        require_acceptance, failures):
+    base = {}
+    if baseline_doc is not None:
+        base = baseline_doc.get(MODEL_SECTION, {})
+    if not isinstance(base, dict):
+        failures.append(f"{baseline_path}: `{MODEL_SECTION}` must be an "
+                        "object of floors, not rows")
+        return
+    tp_floor = base.get("throughput_rps_floor", 0.0)
+    p99_ceiling = base.get("p99_ms_ceiling", float("inf"))
+    min_shared = base.get("min_shared_vs_persite", 0.9)
+    # Shape keys pinning the floors to the committed scenario.
+    want_shape = {k: base[k] for k in ("sites", "adapters") if k in base}
+
+    gated_rows = 0
+    for r in rows:
+        tag = (f"serving_model[{r.get('sites')} sites x "
+               f"{r.get('adapters')} adapters]")
+        shape_ok = all(r.get(k) == v for k, v in want_shape.items())
+        if not shape_ok or r.get("rate_rps"):
+            print(f"  note: {tag}: not the acceptance workload; floors "
+                  "not applied")
+            continue
+        gated_rows += 1
+        tp = r.get("throughput_rps", 0.0)
+        if tp < tp_floor:
+            failures.append(f"{tag}: throughput {tp:.0f} req/s < floor "
+                            f"{tp_floor:.0f}")
+        else:
+            print(f"  ok: {tag}: throughput {tp:.0f} req/s "
+                  f"(floor {tp_floor:.0f})")
+        p99 = r.get("p99_ms", 0.0)
+        if p99 > p99_ceiling:
+            failures.append(f"{tag}: p99 {p99:.1f} ms > ceiling "
+                            f"{p99_ceiling:.1f}")
+        else:
+            print(f"  ok: {tag}: p99 {p99:.1f} ms "
+                  f"(ceiling {p99_ceiling:.1f})")
+        # machine-independent: one shared LRU budget must not lose to
+        # the same budget statically partitioned per site
+        ratio = r.get("shared_vs_persite", 0.0)
+        line = (f"{tag}: shared/persite cache = {ratio:.2f}x "
+                f"(gate {min_shared}x)")
+        if ratio < min_shared:
+            failures.append(f"{line} — the shared projection cache lost "
+                            "to static per-site partitioning")
+        else:
+            print(f"  ok: {line}")
+    if gated_rows == 0:
+        msg = (f"serving_model gate matched 0 firehose rows at the "
+               f"baseline shape {want_shape} — the model acceptance "
+               "workload (serve_bench scenario 3) did not run")
+        if require_acceptance:
+            failures.append(msg)
+        else:
+            print(f"  note: {msg}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default="BENCH_baseline.json")
@@ -253,10 +331,12 @@ def main():
     doc = load_doc(fresh_path)
     fresh = kernel_rows(doc)
     serving = serving_rows(doc)
-    if not fresh and not serving:
+    model = model_rows(doc)
+    if not fresh and not serving and not model:
         print(f"bench_regression: FAIL — {fresh_path} exists but has no "
-              f"usable `{SECTION}` or `{SERVING_SECTION}` rows; an empty "
-              "report must not pass the gate")
+              f"usable `{SECTION}`, `{SERVING_SECTION}` or "
+              f"`{MODEL_SECTION}` rows; an empty report must not pass "
+              "the gate")
         return 1
 
     if args.update:
@@ -304,6 +384,17 @@ def main():
     else:
         print(f"bench_regression: note — no `{SERVING_SECTION}` rows; "
               "serving checks skipped (CI runs with --require-serving)")
+    if model:
+        check_serving_model(model, baseline_doc, args.baseline,
+                            args.require_serving, failures)
+    elif args.require_serving:
+        failures.append(f"{fresh_path}: `{MODEL_SECTION}` section is "
+                        "missing or empty — did serve_bench scenario 3 "
+                        "run?")
+    else:
+        print(f"bench_regression: note — no `{MODEL_SECTION}` rows; "
+              "model serving checks skipped (CI runs with "
+              "--require-serving)")
 
     if failures:
         print("\nbench_regression: FAIL")

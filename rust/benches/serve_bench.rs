@@ -17,15 +17,23 @@
 //!    under the total working set.  Gated fields: throughput floor,
 //!    p99 ceiling, and `shared_vs_persite` (one shared LRU must not
 //!    lose to statically partitioned per-site caches).
+//! 4. **wire acceptance** — the scenario-1 workload through a loopback
+//!    HTTP gateway: closed-loop keep-alive clients vs the in-process
+//!    engine at equal concurrency.  Gated fields: throughput floor,
+//!    p99 ceiling, zero request errors, and `wire_vs_inprocess` (the
+//!    HTTP + streaming-JSON edge must keep >= 0.5x the engine's
+//!    closed-loop throughput).
 //!
-//! Knobs come from the default `[serve]` / `[model]` tables;
-//! `COSA_SERVE_*` / `COSA_MODEL_*` env overrides apply (so a pinned CI
-//! runner can pin workers or shrink the fleet).
+//! Knobs come from the default `[serve]` / `[model]` / `[wire]`
+//! tables; `COSA_SERVE_*` / `COSA_MODEL_*` / `COSA_WIRE_*` env
+//! overrides apply (so a pinned CI runner can pin workers or shrink
+//! the fleet).
 
-use cosa::config::ModelConfig;
+use cosa::config::{ModelConfig, WireConfig};
 use cosa::serve::bench::{run, run_model, ModelBenchOpts, ServeBenchOpts};
 use cosa::util::bench::write_bench_json;
 use cosa::util::json::Json;
+use cosa::wire::bench::{run_wire, WireBenchOpts};
 
 fn main() {
     println!("== serve_bench: multi-adapter serving engine ==");
@@ -91,4 +99,27 @@ fn main() {
         Err(e) => eprintln!("serve_bench model spec invalid: {e:#}"),
     }
     write_bench_json("serving_model", Json::Arr(model_rows));
+
+    // Scenario 4: the wire acceptance workload — scenario 1's fleet
+    // served over a loopback HTTP gateway on an ephemeral port.  The
+    // serve knobs reuse the scenario-1 env overrides; COSA_WIRE_* can
+    // reshape the transport (the port is always ephemeral here).
+    let wdefaults = WireBenchOpts::default();
+    let wopts = WireBenchOpts {
+        serve: acceptance.cfg.clone(),
+        wire: WireConfig {
+            port: 0,
+            ..WireConfig::default().env_overridden()
+        },
+        ..wdefaults
+    };
+    let mut wire_rows: Vec<Json> = Vec::new();
+    match run_wire(&wopts) {
+        Ok(report) => {
+            report.print();
+            wire_rows.push(report.to_json());
+        }
+        Err(e) => eprintln!("serve_bench wire scenario failed: {e:#}"),
+    }
+    write_bench_json("serving_wire", Json::Arr(wire_rows));
 }

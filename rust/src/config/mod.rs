@@ -86,6 +86,25 @@ impl ComputeConfig {
     }
 }
 
+/// Shared env-override reader: parse `key` if set, warn and fall back
+/// on garbage — the one warn-and-fallback behavior every
+/// `env_overridden()` (`COSA_SERVE_*` / `COSA_WIRE_*` /
+/// `COSA_MODEL_*`) shares.
+fn env_num<T: std::str::FromStr>(key: &str, fallback: T) -> T {
+    match std::env::var(key) {
+        Ok(s) => match s.parse::<T>() {
+            Ok(v) => v,
+            Err(_) => {
+                eprintln!(
+                    "warning: ignoring {key}=`{s}` (not a valid value)"
+                );
+                fallback
+            }
+        },
+        Err(_) => fallback,
+    }
+}
+
 /// Multi-adapter serving engine knobs (TOML table `[serve]`; the
 /// `COSA_SERVE_*` env vars override via [`ServeConfig::env_overridden`]).
 /// Consumed by `serve::Server` and the `serve-bench` CLI subcommand.
@@ -99,6 +118,11 @@ pub struct ServeConfig {
     pub max_wait_us: u64,
     /// Worker threads; 0 = auto (same cap as the compute backends).
     pub workers: usize,
+    /// Warm pre-loading: every checkpoint in this directory is loaded
+    /// into the served `AdaptedModel` at gateway startup (empty =
+    /// disabled).  The same directory is the default for the wire
+    /// `/v1/adapters/{name}/load` endpoint.
+    pub preload_dir: String,
 }
 
 impl Default for ServeConfig {
@@ -108,38 +132,35 @@ impl Default for ServeConfig {
             max_batch: 16,
             max_wait_us: 200,
             workers: 0,
+            preload_dir: String::new(),
         }
     }
 }
 
 impl ServeConfig {
+    /// The projection-LRU budget in bytes (`cache_mb` is MiB).  The
+    /// one conversion every consumer shares — callers must not
+    /// hand-roll it, or rounding/clamping will diverge.
+    pub fn cache_budget_bytes(&self) -> usize {
+        (self.cache_mb.max(0.0) * (1 << 20) as f64) as usize
+    }
+
     /// Apply the `COSA_SERVE_*` env overrides (read fresh on every call
     /// so long-lived processes can be steered per-invocation):
     /// `COSA_SERVE_CACHE_MB`, `COSA_SERVE_MAX_BATCH`,
-    /// `COSA_SERVE_MAX_WAIT_US`, `COSA_SERVE_WORKERS`.  Unparseable
+    /// `COSA_SERVE_MAX_WAIT_US`, `COSA_SERVE_WORKERS`,
+    /// `COSA_SERVE_PRELOAD_DIR`.  Unparseable
     /// values warn and fall back to the config value, mirroring the
     /// `COSA_BACKEND` / `COSA_THREADS` behavior.
     pub fn env_overridden(&self) -> ServeConfig {
-        fn env_num<T: std::str::FromStr>(key: &str, fallback: T) -> T {
-            match std::env::var(key) {
-                Ok(s) => match s.parse::<T>() {
-                    Ok(v) => v,
-                    Err(_) => {
-                        eprintln!(
-                            "warning: ignoring {key}=`{s}` (not a valid \
-                             value)"
-                        );
-                        fallback
-                    }
-                },
-                Err(_) => fallback,
-            }
-        }
         let mut out = self.clone();
         out.cache_mb = env_num("COSA_SERVE_CACHE_MB", out.cache_mb);
         out.max_batch = env_num("COSA_SERVE_MAX_BATCH", out.max_batch);
         out.max_wait_us = env_num("COSA_SERVE_MAX_WAIT_US", out.max_wait_us);
         out.workers = env_num("COSA_SERVE_WORKERS", out.workers);
+        if let Ok(dir) = std::env::var("COSA_SERVE_PRELOAD_DIR") {
+            out.preload_dir = dir;
+        }
         if out.max_batch == 0 {
             eprintln!("warning: COSA_SERVE_MAX_BATCH=0 is invalid; using 1");
             out.max_batch = 1;
@@ -174,6 +195,126 @@ impl ServeConfig {
             },
             ..self.clone()
         }
+    }
+}
+
+/// Network gateway knobs (TOML table `[wire]`; the `COSA_WIRE_*` env
+/// vars override via [`WireConfig::env_overridden`]).  Consumed by
+/// `wire::Gateway` (the HTTP/1.1 + JSON front-end over the serve
+/// scheduler) and the `serve` / `serve-bench --wire` CLI subcommands.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireConfig {
+    /// Bind address (the listener binds `host:port`).
+    pub host: String,
+    /// Bind port; 0 = ephemeral (the gateway reports the bound port).
+    pub port: u16,
+    /// HTTP worker threads draining the accept queue; 0 = auto.
+    pub http_workers: usize,
+    /// Largest accepted request body; beyond it the request is
+    /// answered 413 without reading the remainder.
+    pub max_body_bytes: usize,
+    /// Socket read timeout per request, in milliseconds (0 = none).
+    pub read_timeout_ms: u64,
+    /// Socket write timeout per response, in milliseconds (0 = none).
+    pub write_timeout_ms: u64,
+    /// Honor `keep-alive` (false closes every connection after one
+    /// exchange).
+    pub keep_alive: bool,
+    /// Accepted-connection queue bound; overflow is answered 503 and
+    /// closed without occupying a worker.
+    pub max_pending_conns: usize,
+    /// Admission control: shed forwards with 429 once the scheduler
+    /// queue depth reaches this watermark (0 = disabled).
+    pub shed_queue_depth: usize,
+    /// Admission control: shed forwards with 429 while the projection
+    /// LRU evicts faster than this per second (0 = disabled).
+    pub shed_evictions_per_s: f64,
+    /// `Retry-After` seconds attached to 429 sheds.
+    pub retry_after_s: u64,
+    /// Default per-request deadline for `/v1/forward` bodies that do
+    /// not carry `deadline_ms` (0 = no deadline).
+    pub deadline_ms: u64,
+}
+
+impl Default for WireConfig {
+    fn default() -> Self {
+        WireConfig {
+            host: "127.0.0.1".into(),
+            port: 7080,
+            http_workers: 0,
+            max_body_bytes: 8 << 20,
+            read_timeout_ms: 5_000,
+            write_timeout_ms: 5_000,
+            keep_alive: true,
+            max_pending_conns: 64,
+            shed_queue_depth: 1024,
+            shed_evictions_per_s: 0.0,
+            retry_after_s: 1,
+            deadline_ms: 0,
+        }
+    }
+}
+
+impl WireConfig {
+    /// Apply the `COSA_WIRE_*` env overrides (read fresh per call,
+    /// mirroring `COSA_SERVE_*`): `COSA_WIRE_HOST`, `COSA_WIRE_PORT`,
+    /// `COSA_WIRE_HTTP_WORKERS`, `COSA_WIRE_MAX_BODY_BYTES`,
+    /// `COSA_WIRE_READ_TIMEOUT_MS`, `COSA_WIRE_WRITE_TIMEOUT_MS`,
+    /// `COSA_WIRE_KEEP_ALIVE`, `COSA_WIRE_MAX_PENDING_CONNS`,
+    /// `COSA_WIRE_SHED_QUEUE_DEPTH`, `COSA_WIRE_SHED_EVICTIONS_PER_S`,
+    /// `COSA_WIRE_RETRY_AFTER_S`, `COSA_WIRE_DEADLINE_MS`.
+    /// Unparseable values warn and fall back.
+    pub fn env_overridden(&self) -> WireConfig {
+        let mut out = self.clone();
+        if let Ok(h) = std::env::var("COSA_WIRE_HOST") {
+            out.host = h;
+        }
+        out.port = env_num("COSA_WIRE_PORT", out.port);
+        out.http_workers =
+            env_num("COSA_WIRE_HTTP_WORKERS", out.http_workers);
+        out.max_body_bytes =
+            env_num("COSA_WIRE_MAX_BODY_BYTES", out.max_body_bytes);
+        out.read_timeout_ms =
+            env_num("COSA_WIRE_READ_TIMEOUT_MS", out.read_timeout_ms);
+        out.write_timeout_ms =
+            env_num("COSA_WIRE_WRITE_TIMEOUT_MS", out.write_timeout_ms);
+        out.keep_alive = env_num("COSA_WIRE_KEEP_ALIVE", out.keep_alive);
+        out.max_pending_conns =
+            env_num("COSA_WIRE_MAX_PENDING_CONNS", out.max_pending_conns);
+        out.shed_queue_depth =
+            env_num("COSA_WIRE_SHED_QUEUE_DEPTH", out.shed_queue_depth);
+        out.shed_evictions_per_s = env_num(
+            "COSA_WIRE_SHED_EVICTIONS_PER_S",
+            out.shed_evictions_per_s,
+        );
+        out.retry_after_s =
+            env_num("COSA_WIRE_RETRY_AFTER_S", out.retry_after_s);
+        out.deadline_ms = env_num("COSA_WIRE_DEADLINE_MS", out.deadline_ms);
+        if out.max_body_bytes == 0 {
+            eprintln!(
+                "warning: COSA_WIRE_MAX_BODY_BYTES=0 is invalid; using {}",
+                self.max_body_bytes
+            );
+            out.max_body_bytes = self.max_body_bytes;
+        }
+        if out.max_pending_conns == 0 {
+            eprintln!(
+                "warning: COSA_WIRE_MAX_PENDING_CONNS=0 is invalid; \
+                 using {}",
+                self.max_pending_conns
+            );
+            out.max_pending_conns = self.max_pending_conns;
+        }
+        if out.shed_evictions_per_s.is_nan() || out.shed_evictions_per_s < 0.0
+        {
+            eprintln!(
+                "warning: COSA_WIRE_SHED_EVICTIONS_PER_S={} is not a \
+                 valid rate; using {}",
+                out.shed_evictions_per_s, self.shed_evictions_per_s
+            );
+            out.shed_evictions_per_s = self.shed_evictions_per_s;
+        }
+        out
     }
 }
 
@@ -222,21 +363,6 @@ impl ModelConfig {
     /// `COSA_MODEL_CORE_B`, and `COSA_MODEL_SITES_SPEC` (comma-separated
     /// `name:MxN:AxB` entries).  Unparseable values warn and fall back.
     pub fn env_overridden(&self) -> ModelConfig {
-        fn env_num(key: &str, fallback: usize) -> usize {
-            match std::env::var(key) {
-                Ok(s) => match s.parse::<usize>() {
-                    Ok(v) => v,
-                    Err(_) => {
-                        eprintln!(
-                            "warning: ignoring {key}=`{s}` (not a valid \
-                             value)"
-                        );
-                        fallback
-                    }
-                },
-                Err(_) => fallback,
-            }
-        }
         let mut out = self.clone();
         out.sites = env_num("COSA_MODEL_SITES", out.sites);
         out.site_m = env_num("COSA_MODEL_SITE_M", out.site_m);
@@ -302,6 +428,7 @@ pub struct RunConfig {
     pub train: TrainConfig,
     pub compute: ComputeConfig,
     pub serve: ServeConfig,
+    pub wire: WireConfig,
     pub model: ModelConfig,
     pub base_seed: u64,
     pub adapter_seed: u64,
@@ -318,6 +445,7 @@ impl Default for RunConfig {
             train: TrainConfig::default(),
             compute: ComputeConfig::default(),
             serve: ServeConfig::default(),
+            wire: WireConfig::default(),
             model: ModelConfig::default(),
             base_seed: 42,
             adapter_seed: 1234,
@@ -385,6 +513,44 @@ impl RunConfig {
                         "serve.workers must be >= 0 (got {workers}; \
                          use 0 for auto)");
         s.workers = workers as usize;
+        s.preload_dir = doc.str_or("serve.preload_dir", &s.preload_dir);
+
+        let w = &mut cfg.wire;
+        w.host = doc.str_or("wire.host", &w.host);
+        let port = doc.i64_or("wire.port", w.port as i64);
+        anyhow::ensure!((0..=u16::MAX as i64).contains(&port),
+                        "wire.port must be in 0..=65535 (got {port}; \
+                         use 0 for ephemeral)");
+        w.port = port as u16;
+        for (key, field, min) in [
+            ("wire.http_workers", &mut w.http_workers, 0i64),
+            ("wire.max_body_bytes", &mut w.max_body_bytes, 1),
+            ("wire.max_pending_conns", &mut w.max_pending_conns, 1),
+            ("wire.shed_queue_depth", &mut w.shed_queue_depth, 0),
+        ] {
+            let v = doc.i64_or(key, *field as i64);
+            anyhow::ensure!(v >= min, "{key} must be >= {min} (got {v})");
+            *field = v as usize;
+        }
+        for (key, field) in [
+            ("wire.read_timeout_ms", &mut w.read_timeout_ms),
+            ("wire.write_timeout_ms", &mut w.write_timeout_ms),
+            ("wire.retry_after_s", &mut w.retry_after_s),
+            ("wire.deadline_ms", &mut w.deadline_ms),
+        ] {
+            let v = doc.i64_or(key, *field as i64);
+            anyhow::ensure!(v >= 0, "{key} must be >= 0 (got {v})");
+            *field = v as u64;
+        }
+        w.keep_alive = doc.bool_or("wire.keep_alive", w.keep_alive);
+        w.shed_evictions_per_s =
+            doc.f64_or("wire.shed_evictions_per_s", w.shed_evictions_per_s);
+        anyhow::ensure!(
+            w.shed_evictions_per_s >= 0.0,
+            "wire.shed_evictions_per_s must be >= 0 (got {}; use 0 to \
+             disable)",
+            w.shed_evictions_per_s
+        );
 
         let m = &mut cfg.model;
         for (key, field) in [
@@ -514,17 +680,87 @@ data = 3
         std::env::set_var("COSA_SERVE_MAX_BATCH", "9");
         std::env::set_var("COSA_SERVE_MAX_WAIT_US", "not-a-number");
         std::env::set_var("COSA_SERVE_CACHE_MB", "-3.0");
+        std::env::set_var("COSA_SERVE_PRELOAD_DIR", "env/dir");
         let cfg = ServeConfig::default().env_overridden();
         assert_eq!(cfg.max_batch, 9, "env wins over the default");
         assert_eq!(cfg.max_wait_us, ServeConfig::default().max_wait_us,
                    "garbage env value falls back");
         assert_eq!(cfg.cache_mb, ServeConfig::default().cache_mb,
                    "negative cache budget falls back like the TOML path");
+        assert_eq!(cfg.preload_dir, "env/dir",
+                   "preload dir env wins over the (empty) default");
         std::env::remove_var("COSA_SERVE_MAX_BATCH");
         std::env::remove_var("COSA_SERVE_MAX_WAIT_US");
         std::env::remove_var("COSA_SERVE_CACHE_MB");
+        std::env::remove_var("COSA_SERVE_PRELOAD_DIR");
         let cfg = ServeConfig::default().env_overridden();
         assert_eq!(cfg, ServeConfig::default());
+    }
+
+    #[test]
+    fn serve_preload_dir_parses_from_toml() {
+        let cfg = RunConfig::from_toml(
+            "[serve]\npreload_dir = \"ckpts/fleet\"",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.preload_dir, "ckpts/fleet");
+        // absent -> disabled (empty)
+        let d = RunConfig::from_toml("").unwrap();
+        assert!(d.serve.preload_dir.is_empty());
+    }
+
+    #[test]
+    fn wire_table_parses_and_validates() {
+        let cfg = RunConfig::from_toml(
+            "[wire]\nhost = \"0.0.0.0\"\nport = 9090\nhttp_workers = 2\n\
+             max_body_bytes = 1048576\nread_timeout_ms = 250\n\
+             keep_alive = false\nshed_queue_depth = 32\n\
+             shed_evictions_per_s = 100.0\ndeadline_ms = 50",
+        )
+        .unwrap();
+        assert_eq!(cfg.wire.host, "0.0.0.0");
+        assert_eq!(cfg.wire.port, 9090);
+        assert_eq!(cfg.wire.http_workers, 2);
+        assert_eq!(cfg.wire.max_body_bytes, 1 << 20);
+        assert_eq!(cfg.wire.read_timeout_ms, 250);
+        assert!(!cfg.wire.keep_alive);
+        assert_eq!(cfg.wire.shed_queue_depth, 32);
+        assert_eq!(cfg.wire.shed_evictions_per_s, 100.0);
+        assert_eq!(cfg.wire.deadline_ms, 50);
+        assert!(RunConfig::from_toml("[wire]\nport = 70000").is_err());
+        assert!(RunConfig::from_toml("[wire]\nport = -1").is_err());
+        assert!(RunConfig::from_toml("[wire]\nmax_body_bytes = 0").is_err());
+        assert!(RunConfig::from_toml("[wire]\nmax_pending_conns = 0")
+            .is_err());
+        assert!(RunConfig::from_toml("[wire]\nread_timeout_ms = -5")
+            .is_err());
+        assert!(RunConfig::from_toml(
+            "[wire]\nshed_evictions_per_s = -1.0").is_err());
+        // defaults when the table is absent
+        let d = RunConfig::from_toml("").unwrap();
+        assert_eq!(d.wire, WireConfig::default());
+    }
+
+    #[test]
+    fn wire_env_overrides_win_and_warn_on_garbage() {
+        std::env::set_var("COSA_WIRE_PORT", "8123");
+        std::env::set_var("COSA_WIRE_MAX_BODY_BYTES", "not-a-number");
+        std::env::set_var("COSA_WIRE_MAX_PENDING_CONNS", "0");
+        std::env::set_var("COSA_WIRE_KEEP_ALIVE", "false");
+        let cfg = WireConfig::default().env_overridden();
+        assert_eq!(cfg.port, 8123, "env wins over the default");
+        assert_eq!(cfg.max_body_bytes, WireConfig::default().max_body_bytes,
+                   "garbage env value falls back");
+        assert_eq!(cfg.max_pending_conns,
+                   WireConfig::default().max_pending_conns,
+                   "a zero accept-queue bound falls back");
+        assert!(!cfg.keep_alive);
+        std::env::remove_var("COSA_WIRE_PORT");
+        std::env::remove_var("COSA_WIRE_MAX_BODY_BYTES");
+        std::env::remove_var("COSA_WIRE_MAX_PENDING_CONNS");
+        std::env::remove_var("COSA_WIRE_KEEP_ALIVE");
+        let cfg = WireConfig::default().env_overridden();
+        assert_eq!(cfg, WireConfig::default());
     }
 
     #[test]

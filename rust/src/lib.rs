@@ -54,6 +54,20 @@
 //! `config::ModelConfig`) with `COSA_SERVE_*` / `COSA_MODEL_*` env
 //! overrides.
 //!
+//! ## Network edge (`wire`)
+//!
+//! The [`wire`] subsystem is the production ingress over the serve
+//! scheduler, built entirely on `std` (the workspace is offline): a
+//! strict streaming JSON codec with precise `f32` round-trips, a
+//! minimal HTTP/1.1 server (bounded accept/worker model, keep-alive,
+//! `Content-Length` framing, timeouts), the `/v1/forward`,
+//! `/v1/adapters/{name}/load` + `DELETE`, `/v1/stats` and `/healthz`
+//! endpoints, and a gateway that warm pre-loads checkpoint
+//! directories, sheds with `429 + Retry-After` under queue or
+//! projection-LRU pressure, and drains in-flight tickets on shutdown.
+//! The `serve` CLI subcommand runs it; `serve-bench --wire` measures
+//! it (`serving_wire` report section, CI-gated).
+//!
 //! ## Offline builds
 //!
 //! The workspace compiles with no network: `anyhow` and `xla` resolve to
@@ -74,6 +88,7 @@ pub mod runtime;
 pub mod serve;
 pub mod train;
 pub mod util;
+pub mod wire;
 
 /// Crate-wide result type (anyhow-backed, like the rest of the stack).
 pub type Result<T> = anyhow::Result<T>;

@@ -6,6 +6,7 @@
 //!   exp         <table1|table2|...|fig2|fig3|...> regenerate a paper table
 //!   rip         [--samples N] [--trials K]        RIP validation (Table 4)
 //!   params      [--rank R --a A --b B]            cost model (Fig 3)
+//!   serve       [--port P --preload-dir D ...]    HTTP/JSON serving gateway
 //!   serve-bench [--adapters N --requests N ...]   multi-adapter serving bench
 //!   list                                          available artifacts
 //!
@@ -13,6 +14,7 @@
 //!   cosa-repro exp table4
 //!   cosa-repro train --config configs/quickstart.toml
 //!   cosa-repro exp table2 --steps 60 --seeds 2
+//!   cosa-repro serve --port 7080 --preload-dir runs/adapters
 //!   cosa-repro serve-bench --adapters 64 --zipf 1.1 --requests 2048
 
 use cosa::config::RunConfig;
@@ -44,6 +46,7 @@ fn dispatch(args: &Args) -> anyhow::Result<()> {
         }
         "rip" => exp::run("table4", args),
         "params" => exp::run("fig3", args),
+        "serve" => cmd_serve(args),
         "serve-bench" => cmd_serve_bench(args),
         "list" => cmd_list(),
         "" | "help" | "--help" => {
@@ -114,6 +117,66 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `serve`: run the HTTP/1.1 + JSON gateway over the multi-adapter
+/// serving engine in the foreground.  The served `ModelSpec` comes
+/// from the `[model]` table, engine knobs from `[serve]`, transport
+/// knobs from `[wire]` — each env-overridable (`COSA_MODEL_*`,
+/// `COSA_SERVE_*`, `COSA_WIRE_*`) with CLI flags taking highest
+/// precedence.  `[serve] preload_dir` warm-loads every checkpoint in
+/// the directory before the listener opens.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use cosa::model::AdaptedModel;
+    use cosa::wire::Gateway;
+
+    let cfg = match args.opt("config") {
+        Some(path) => RunConfig::load(path)?,
+        None => RunConfig::default(),
+    };
+    let mut serve = cfg.serve.env_overridden();
+    if let Some(v) = args.opt("batch") {
+        serve.max_batch = v.parse()?;
+        anyhow::ensure!(serve.max_batch >= 1, "--batch must be >= 1");
+    }
+    if let Some(v) = args.opt("wait-us") {
+        serve.max_wait_us = v.parse()?;
+    }
+    if let Some(v) = args.opt("workers") {
+        serve.workers = v.parse()?;
+    }
+    if let Some(v) = args.opt("cache-mb") {
+        serve.cache_mb = v.parse()?;
+        anyhow::ensure!(serve.cache_mb >= 0.0, "--cache-mb must be >= 0");
+    }
+    if let Some(v) = args.opt("preload-dir") {
+        serve.preload_dir = v.to_string();
+    }
+    let mut wire = cfg.wire.env_overridden();
+    if let Some(v) = args.opt("host") {
+        wire.host = v.to_string();
+    }
+    if let Some(v) = args.opt("port") {
+        wire.port = v.parse()?;
+    }
+    if let Some(v) = args.opt("http-workers") {
+        wire.http_workers = v.parse()?;
+    }
+    let model_cfg = cfg.model.env_overridden();
+    let spec = model_cfg.to_spec(&cfg.name)?;
+    let model = AdaptedModel::new(spec, serve.cache_budget_bytes())?;
+    let gateway = Gateway::start(model, &serve, &wire)?;
+    info!(
+        "gateway up on http://{} — POST /v1/forward, \
+         POST /v1/adapters/{{name}}/load, DELETE /v1/adapters/{{name}}, \
+         GET /v1/stats, GET /healthz (Ctrl-C to stop)",
+        gateway.addr()
+    );
+    // Foreground server: park until killed (no signal handling in a
+    // zero-dependency std build; the OS reclaims the sockets).
+    loop {
+        std::thread::park();
+    }
+}
+
 /// `serve-bench`: drive the multi-adapter serving engine under
 /// synthetic Zipf workloads and write the `serving` (single-site) and
 /// `serving_model` (whole adapted model) sections of the canonical
@@ -174,38 +237,68 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
     // Whole-model scenario (the system's default shape): every request
     // exercises every site of a [model]-described spec.  --skip-model
     // keeps single-site explorations cheap.
-    if args.bool("skip-model") {
-        return Ok(());
+    if !args.bool("skip-model") {
+        let mut model_cfg = cfg.model.env_overridden();
+        if let Some(v) = args.opt("sites") {
+            model_cfg.sites = v.parse()?;
+            anyhow::ensure!(model_cfg.sites >= 1, "--sites must be >= 1");
+            // an explicit count asks for the synthetic preset
+            model_cfg.sites_spec.clear();
+        }
+        let mdefaults = ModelBenchOpts::default();
+        let model_serve = cosa::config::ServeConfig {
+            // model cache pressure is its own knob — the single-site
+            // default (64 MiB) would make the shared-vs-per-site
+            // comparison an everything-resident no-op
+            cache_mb: args.f64("model-cache-mb", mdefaults.cfg.cache_mb),
+            ..serve.clone()
+        };
+        anyhow::ensure!(model_serve.cache_mb >= 0.0,
+                        "--model-cache-mb must be >= 0");
+        let mopts = ModelBenchOpts {
+            spec: model_cfg.to_spec("serve-bench")?,
+            adapters: args.usize("adapters", mdefaults.adapters),
+            requests: args.usize("model-requests", mdefaults.requests),
+            zipf: args.f64("zipf", mdefaults.zipf),
+            seed: args.u64("seed", mdefaults.seed),
+            cfg: model_serve,
+        };
+        let mreport = run_model(&mopts)?;
+        mreport.print();
+        cosa::util::bench::write_bench_json(
+            "serving_model", Json::Arr(vec![mreport.to_json()]));
     }
-    let mut model_cfg = cfg.model.env_overridden();
-    if let Some(v) = args.opt("sites") {
-        model_cfg.sites = v.parse()?;
-        anyhow::ensure!(model_cfg.sites >= 1, "--sites must be >= 1");
-        // an explicit count asks for the synthetic preset
-        model_cfg.sites_spec.clear();
+
+    // Wire scenario (opt-in: --wire): the same single-site workload
+    // through a loopback HTTP gateway vs the in-process engine at
+    // equal concurrency -> `serving_wire` section.
+    if args.bool("wire") {
+        use cosa::wire::bench::{run_wire, WireBenchOpts};
+        let wdefaults = WireBenchOpts::default();
+        let wopts = WireBenchOpts {
+            adapters: args.usize("adapters", wdefaults.adapters),
+            requests: args.usize("wire-requests", wdefaults.requests),
+            clients: args.usize("wire-clients", wdefaults.clients),
+            zipf: args.f64("zipf", wdefaults.zipf),
+            site: SiteShape {
+                m: args.usize("site-m", wdefaults.site.m),
+                n: args.usize("site-n", wdefaults.site.n),
+            },
+            core_a: args.usize("core-a", wdefaults.core_a),
+            core_b: args.usize("core-b", wdefaults.core_b),
+            seed: args.u64("seed", wdefaults.seed),
+            serve: serve.clone(),
+            wire: cosa::config::WireConfig {
+                port: 0,
+                ..cfg.wire.env_overridden()
+            },
+        };
+        anyhow::ensure!(wopts.clients >= 1, "--wire-clients must be >= 1");
+        let wreport = run_wire(&wopts)?;
+        wreport.print();
+        cosa::util::bench::write_bench_json(
+            "serving_wire", Json::Arr(vec![wreport.to_json()]));
     }
-    let mdefaults = ModelBenchOpts::default();
-    let model_serve = cosa::config::ServeConfig {
-        // model cache pressure is its own knob — the single-site
-        // default (64 MiB) would make the shared-vs-per-site
-        // comparison an everything-resident no-op
-        cache_mb: args.f64("model-cache-mb", mdefaults.cfg.cache_mb),
-        ..serve
-    };
-    anyhow::ensure!(model_serve.cache_mb >= 0.0,
-                    "--model-cache-mb must be >= 0");
-    let mopts = ModelBenchOpts {
-        spec: model_cfg.to_spec("serve-bench")?,
-        adapters: args.usize("adapters", mdefaults.adapters),
-        requests: args.usize("model-requests", mdefaults.requests),
-        zipf: args.f64("zipf", mdefaults.zipf),
-        seed: args.u64("seed", mdefaults.seed),
-        cfg: model_serve,
-    };
-    let mreport = run_model(&mopts)?;
-    mreport.print();
-    cosa::util::bench::write_bench_json(
-        "serving_model", Json::Arr(vec![mreport.to_json()]));
     Ok(())
 }
 
@@ -232,11 +325,21 @@ USAGE: cosa-repro <subcommand> [flags]
                        table7 table8 fig2 fig3 ystruct
   rip     [--samples N --trials K --seed S]     alias for `exp table4`
   params  [--rank R --a A --b B]                alias for `exp fig3`
+  serve   [--config <toml> --host H --port P --http-workers N]
+          [--preload-dir D --batch N --wait-us U --workers N
+           --cache-mb F]
+          run the HTTP/1.1 + streaming-JSON gateway over the serving
+          engine in the foreground: POST /v1/forward,
+          POST /v1/adapters/{name}/load, DELETE /v1/adapters/{name},
+          GET /v1/stats, GET /healthz.  [wire]/[serve]/[model] config
+          tables and COSA_WIRE_*/COSA_SERVE_*/COSA_MODEL_* env provide
+          the defaults; --preload-dir warm-loads every checkpoint in a
+          directory before the listener opens
   serve-bench  [--adapters N --requests N --zipf S --rate RPS]
           [--batch N --wait-us U --workers N --cache-mb F]
           [--site-m M --site-n N --core-a A --core-b B --seed S]
           [--sites N --model-requests N --model-cache-mb F]
-          [--skip-model]
+          [--skip-model] [--wire --wire-requests N --wire-clients N]
           multi-adapter serving benchmarks: the single-site scenario
           (batched scheduler vs sequential per-request forward ->
           `serving` section of BENCH_linalg.json) plus the whole-model
@@ -244,6 +347,8 @@ USAGE: cosa-repro <subcommand> [flags]
           per-site-partitioned caches -> `serving_model` section).
           [serve]/[model] config tables and COSA_SERVE_*/COSA_MODEL_*
           env provide the defaults; --skip-model runs only the
-          single-site scenario
+          single-site scenario; --wire adds the loopback HTTP gateway
+          scenario (closed-loop clients vs the in-process engine ->
+          `serving_wire` section)
   list    show artifacts (build with `make artifacts`)
 ";

@@ -188,7 +188,7 @@ impl Zipf {
 /// the distribution at or below it (`ceil(n*p)` ranks, 1-based — so
 /// p50 of [a, b] is `a`, and p99 of 100 samples is rank 99, not the
 /// single worst outlier).
-fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+pub(crate) fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
     if sorted_ms.is_empty() {
         return 0.0;
     }
@@ -198,7 +198,45 @@ fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
 
 /// Rows of pre-generated activations the request loops cycle through
 /// (so input generation never dominates the measurement).
-const X_POOL: usize = 32;
+pub(crate) const X_POOL: usize = 32;
+
+/// Build the synthetic single-site registry the single-site scenarios
+/// (and the wire bench) serve: `adapters` distinct-seeded adapters
+/// with sparse-ish cores and per-adapter projection stems.  The build
+/// is deterministic in `seed`, so two calls produce bit-identical
+/// registries — the wire bench relies on that to compare an
+/// in-process engine against a gateway-served copy.
+pub(crate) fn synthetic_registry(
+    adapters: usize,
+    site: SiteShape,
+    core_a: usize,
+    core_b: usize,
+    seed: u64,
+    cache_budget_bytes: usize,
+) -> anyhow::Result<(AdaptedModel, Vec<String>)> {
+    let mut registry = AdaptedModel::single_site(
+        "bench", site, core_a, core_b, cache_budget_bytes,
+    );
+    let mut rng = Pcg64::new(seed);
+    let mut names = Vec::with_capacity(adapters);
+    for i in 0..adapters {
+        let name = format!("adp{i:03}");
+        let aseed = seed.wrapping_add(1 + i as u64);
+        let y = Matrix::gaussian(core_a, core_b, 0.02, &mut rng);
+        registry.insert(
+            &name,
+            aseed,
+            2.0,
+            vec![CoreInput::new(
+                &format!("{name}.l"),
+                &format!("{name}.r"),
+                y,
+            )],
+        )?;
+        names.push(name);
+    }
+    Ok((registry, names))
+}
 
 /// Run one single-site scenario (see module docs).  `opts.cfg` is taken
 /// as final — apply `env_overridden()` / preset resolution at the call
@@ -218,34 +256,26 @@ pub fn run(opts: &ServeBenchOpts) -> anyhow::Result<ServeBenchReport> {
         opts.core_a,
         opts.core_b
     );
-    let (a, b) = (opts.core_a, opts.core_b);
     let n = opts.site.n;
-    let mut rng = Pcg64::new(opts.seed);
+    // The workload stream is distinct from the registry-construction
+    // stream (`synthetic_registry` starts its own `Pcg64::new(seed)`),
+    // so the request pattern never re-reads the raw u64s behind the
+    // adapter weights.
+    let mut rng = Pcg64::with_stream(opts.seed, 1);
 
     // Registry of synthetic adapters: distinct seeds, shared site/core
     // shape, sparse-ish cores (the trained-Y regime).  Per-adapter
     // tensor stems keep every adapter's projections distinct in the
     // shared cache even across equal seeds.
-    let budget = (opts.cfg.cache_mb * (1 << 20) as f64) as usize;
-    let mut registry =
-        AdaptedModel::single_site("bench", opts.site, a, b, budget);
-    let mut names = Vec::with_capacity(opts.adapters);
-    for i in 0..opts.adapters {
-        let name = format!("adp{i:03}");
-        let seed = opts.seed.wrapping_add(1 + i as u64);
-        let y = Matrix::gaussian(a, b, 0.02, &mut rng);
-        registry.insert(
-            &name,
-            seed,
-            2.0,
-            vec![CoreInput::new(
-                &format!("{name}.l"),
-                &format!("{name}.r"),
-                y,
-            )],
-        )?;
-        names.push(name);
-    }
+    let budget = opts.cfg.cache_budget_bytes();
+    let (mut registry, names) = synthetic_registry(
+        opts.adapters,
+        opts.site,
+        opts.core_a,
+        opts.core_b,
+        opts.seed,
+        budget,
+    )?;
 
     // Zipf-skewed request sequence + a small pool of activation rows.
     let zipf = Zipf::new(opts.adapters, opts.zipf);
@@ -477,7 +507,7 @@ pub fn run_model(opts: &ModelBenchOpts) -> anyhow::Result<ModelBenchReport> {
     opts.spec.validate()?;
     let spec = &opts.spec;
     let n_sites = spec.len();
-    let budget = (opts.cfg.cache_mb * (1 << 20) as f64) as usize;
+    let budget = opts.cfg.cache_budget_bytes();
     let mut rng = Pcg64::new(opts.seed);
 
     // One core set per adapter, shared verbatim between the shared-LRU
@@ -662,6 +692,7 @@ mod tests {
                 max_batch: 4,
                 max_wait_us: 300,
                 workers: 2,
+                ..ServeConfig::default()
             },
         };
         let rep = run(&opts).unwrap();
@@ -691,6 +722,7 @@ mod tests {
                 max_batch: 4,
                 max_wait_us: 300,
                 workers: 2,
+                ..ServeConfig::default()
             },
         };
         let rep = run_model(&opts).unwrap();

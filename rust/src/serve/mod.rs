@@ -51,4 +51,6 @@ pub mod scheduler;
 
 pub use crate::model::{AdaptedModel, ModelSpec, SiteShape, SiteSpec};
 pub use registry::AdapterRegistry;
-pub use scheduler::{CancelHandle, Response, Server, Ticket};
+pub use scheduler::{
+    CancelHandle, Response, SchedulerStats, Server, Ticket,
+};

@@ -139,6 +139,20 @@ impl Ticket {
     }
 }
 
+/// Decrements the in-flight gauge exactly once, whenever its request
+/// leaves the engine — answered by a worker, dropped with a batch on a
+/// teardown race, or never sent at all.  Tying the decrement to `Drop`
+/// (instead of sprinkling it over every reply path) is what keeps the
+/// [`SchedulerStats::queue_depth`] gauge exact: a `Request` is dropped
+/// exactly once, no matter which path answered it.
+struct InflightGuard(Arc<ServerStats>);
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.0.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
 struct Request {
     adapter: Arc<str>,
     /// One activation row per site, spec order.
@@ -148,6 +162,7 @@ struct Request {
     /// Absolute expiry; `None` = never.
     deadline: Option<Instant>,
     cancelled: Arc<AtomicBool>,
+    _inflight: InflightGuard,
 }
 
 struct Batch {
@@ -156,13 +171,46 @@ struct Batch {
 }
 
 /// Scheduler counters (mean batch size benches report is
-/// `rows / batches`; `expired`/`cancelled` count dropped requests).
+/// `rows / batches`; `expired`/`cancelled` count dropped requests;
+/// `inflight` is the live queue-depth gauge maintained by
+/// [`InflightGuard`]; `by_adapter` counts submissions per adapter name).
 #[derive(Default)]
 struct ServerStats {
     batches: AtomicU64,
     batched_rows: AtomicU64,
     expired: AtomicU64,
     cancelled: AtomicU64,
+    submitted: AtomicU64,
+    inflight: AtomicU64,
+    by_adapter: Mutex<HashMap<Arc<str>, u64>>,
+    /// Submissions not counted in `by_adapter` because the name cap
+    /// was reached (see `MAX_TRACKED_ADAPTERS`).
+    untracked: AtomicU64,
+}
+
+/// Distinct adapter names the per-adapter counter map will track.
+/// Submission names are caller-controlled (the wire gateway forwards
+/// client strings), so an unbounded map would be a remote
+/// memory-exhaustion vector; overflow lands in
+/// [`SchedulerStats::per_adapter_untracked`] instead.
+const MAX_TRACKED_ADAPTERS: usize = 1024;
+
+/// Cheap point-in-time snapshot of the engine's counters — the surface
+/// behind the wire `/v1/stats` endpoint and queue-depth admission
+/// control.  `queue_depth` counts requests submitted but not yet
+/// answered (queued in the batcher, riding a batch, or mid-compute);
+/// `per_adapter` is (name, submitted) sorted by name.
+#[derive(Clone, Debug, Default)]
+pub struct SchedulerStats {
+    pub queue_depth: u64,
+    pub submitted: u64,
+    pub batches: u64,
+    pub batched_rows: u64,
+    pub expired: u64,
+    pub cancelled: u64,
+    pub per_adapter: Vec<(String, u64)>,
+    /// Submissions under names beyond the tracked-adapter cap.
+    pub per_adapter_untracked: u64,
 }
 
 /// The serving engine: adapted model + batcher + worker pool.  See
@@ -273,6 +321,37 @@ impl Server {
         self.out_pool.stats()
     }
 
+    /// Point-in-time snapshot of every scheduler counter (see
+    /// [`SchedulerStats`]).  Cheap: atomic loads plus one brief lock to
+    /// copy the per-adapter map — safe to call on every wire request
+    /// (queue-depth admission control does).
+    pub fn scheduler_stats(&self) -> SchedulerStats {
+        let mut per_adapter: Vec<(String, u64)> = lock(&self.stats.by_adapter)
+            .iter()
+            .map(|(k, v)| (k.to_string(), *v))
+            .collect();
+        per_adapter.sort();
+        SchedulerStats {
+            queue_depth: self.stats.inflight.load(Ordering::Relaxed),
+            submitted: self.stats.submitted.load(Ordering::Relaxed),
+            batches: self.stats.batches.load(Ordering::Relaxed),
+            batched_rows: self.stats.batched_rows.load(Ordering::Relaxed),
+            expired: self.stats.expired.load(Ordering::Relaxed),
+            cancelled: self.stats.cancelled.load(Ordering::Relaxed),
+            per_adapter,
+            per_adapter_untracked: self
+                .stats
+                .untracked
+                .load(Ordering::Relaxed),
+        }
+    }
+
+    /// The queue-depth gauge alone (requests submitted but not yet
+    /// answered) — the admission-control fast path, no map copy.
+    pub fn queue_depth(&self) -> u64 {
+        self.stats.inflight.load(Ordering::Relaxed)
+    }
+
     /// The shared adapted model (hot load/evict while serving, cache
     /// stats).
     pub fn model(&self) -> Arc<Mutex<AdaptedModel>> {
@@ -305,13 +384,29 @@ impl Server {
         let (tx, rx) = channel::<Reply>();
         let submitted = Instant::now();
         let cancelled = Arc::new(AtomicBool::new(false));
+        let key: Arc<str> = Arc::from(adapter);
+        self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        self.stats.inflight.fetch_add(1, Ordering::Relaxed);
+        {
+            let mut map = lock(&self.stats.by_adapter);
+            match map.get_mut(&key) {
+                Some(count) => *count += 1,
+                None if map.len() < MAX_TRACKED_ADAPTERS => {
+                    map.insert(key.clone(), 1);
+                }
+                None => {
+                    self.stats.untracked.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
         let req = Request {
-            adapter: Arc::from(adapter),
+            adapter: key,
             xs,
             reply: tx,
             at: submitted,
             deadline: deadline.map(|d| submitted + d),
             cancelled: cancelled.clone(),
+            _inflight: InflightGuard(self.stats.clone()),
         };
         ingress
             .send(req)
@@ -619,6 +714,7 @@ mod tests {
             max_batch,
             max_wait_us,
             workers: 2,
+            ..ServeConfig::default()
         }
     }
 
@@ -893,6 +989,52 @@ mod tests {
                 "steady single-row batches must reuse, not allocate: \
                  {allocs} allocs");
         assert!(reuses >= 8, "pool must actually be reused: {reuses}");
+    }
+
+    #[test]
+    fn scheduler_stats_track_depth_and_per_adapter_counts() {
+        let model = test_model(&[("alpha", 7), ("beta", 8)]);
+        let server = Server::new(model, &test_cfg(4, 200));
+        assert_eq!(server.queue_depth(), 0, "idle engine has empty queue");
+        let mut tickets = Vec::new();
+        for _ in 0..3 {
+            tickets.push(server.submit_row("alpha", vec![0.1; N]).unwrap());
+        }
+        tickets.push(server.submit_row("beta", vec![0.2; N]).unwrap());
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        // Every answered ticket's Request is dropped by the worker right
+        // after the reply lands, so the gauge drains to zero promptly;
+        // a bounded spin absorbs the reply-then-drop window.
+        let t0 = Instant::now();
+        while server.queue_depth() > 0
+            && t0.elapsed() < Duration::from_secs(10)
+        {
+            std::thread::yield_now();
+        }
+        let stats = server.scheduler_stats();
+        assert_eq!(stats.queue_depth, 0, "answered requests must drain");
+        assert_eq!(stats.submitted, 4);
+        assert_eq!(stats.batched_rows, 4);
+        assert!(stats.batches >= 1);
+        assert_eq!(
+            stats.per_adapter,
+            vec![("alpha".to_string(), 3), ("beta".to_string(), 1)],
+            "per-adapter counters sorted by name"
+        );
+        // errors drain the gauge too (the guard rides the Request)
+        let t = server.submit_row("ghost", vec![0.0; N]).unwrap();
+        assert!(t.wait().is_err());
+        let t0 = Instant::now();
+        while server.queue_depth() > 0
+            && t0.elapsed() < Duration::from_secs(10)
+        {
+            std::thread::yield_now();
+        }
+        assert_eq!(server.queue_depth(), 0);
+        assert_eq!(server.scheduler_stats().per_adapter.len(), 3,
+                   "unknown adapters still count submissions");
     }
 
     #[test]

@@ -1,0 +1,424 @@
+//! The gateway's JSON endpoints (see the [`wire`](crate::wire) module
+//! docs for the route list).  Every handler is a pure function of
+//! (shared gateway state, parsed request) → response; the HTTP layer
+//! owns framing and the 413/503 transport errors, this layer owns the
+//! API semantics: strict body parsing (400), adapter resolution (404),
+//! admission control (429 + `Retry-After`), scheduler deadline
+//! expiries (504), and drain-time refusals (503).
+
+use std::borrow::Cow;
+use std::sync::atomic::Ordering;
+
+use crate::wire::gateway::GatewayState;
+use crate::wire::http::{Request, Response};
+use crate::wire::json::{Event, JsonWriter, Tokenizer};
+
+/// Route one request.  Unknown paths are 404, known paths with the
+/// wrong verb 405.
+pub fn handle(state: &GatewayState, req: &Request) -> Response {
+    let segs: Vec<&str> =
+        req.path.split('/').filter(|s| !s.is_empty()).collect();
+    match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => healthz(state),
+        ("GET", ["v1", "stats"]) => stats(state),
+        ("POST", ["v1", "forward"]) => forward(state, req),
+        ("POST", ["v1", "adapters", name, "load"]) => {
+            load_adapter(state, name, req)
+        }
+        ("DELETE", ["v1", "adapters", name]) => evict_adapter(state, name),
+        (_, ["healthz"])
+        | (_, ["v1", "stats"])
+        | (_, ["v1", "forward"])
+        | (_, ["v1", "adapters", _, "load"])
+        | (_, ["v1", "adapters", _]) => Response::error(
+            405,
+            &format!("method {} not allowed here", req.method),
+        ),
+        _ => Response::error(404, &format!("no route for {}", req.path)),
+    }
+}
+
+fn healthz(state: &GatewayState) -> Response {
+    let mut w = JsonWriter::new();
+    w.begin_obj();
+    w.key("status").str_val(if state.is_draining() {
+        "draining"
+    } else {
+        "ok"
+    });
+    w.key("adapters").u64_val(state.adapter_count() as u64);
+    w.end_obj();
+    Response::json(200, w.finish())
+}
+
+fn stats(state: &GatewayState) -> Response {
+    let sched = state.server().scheduler_stats();
+    let (cache, cache_bytes, adapters) = {
+        let model = state.model();
+        let m = model.lock().unwrap_or_else(|p| p.into_inner());
+        (m.cache_stats(), m.cache_bytes(), m.len())
+    };
+    let mut w = JsonWriter::new();
+    w.begin_obj();
+    w.key("adapters").u64_val(adapters as u64);
+    w.key("queue_depth").u64_val(sched.queue_depth);
+    w.key("submitted").u64_val(sched.submitted);
+    w.key("batches").u64_val(sched.batches);
+    w.key("batched_rows").u64_val(sched.batched_rows);
+    w.key("expired").u64_val(sched.expired);
+    w.key("cancelled").u64_val(sched.cancelled);
+    w.key("shed_429").u64_val(state.shed_429.load(Ordering::Relaxed));
+    w.key("cache").begin_obj();
+    w.key("hits").u64_val(cache.hits);
+    w.key("misses").u64_val(cache.misses);
+    w.key("evictions").u64_val(cache.evictions);
+    w.key("resident_bytes").u64_val(cache_bytes as u64);
+    w.end_obj();
+    w.key("per_adapter").begin_obj();
+    for (name, count) in &sched.per_adapter {
+        w.key(name).u64_val(*count);
+    }
+    w.end_obj();
+    w.key("per_adapter_untracked")
+        .u64_val(sched.per_adapter_untracked);
+    if let Some(hs) = state.http_stats() {
+        w.key("http").begin_obj();
+        w.key("accepted").u64_val(hs.accepted.load(Ordering::Relaxed));
+        w.key("requests").u64_val(hs.requests.load(Ordering::Relaxed));
+        w.key("shed_503").u64_val(hs.shed_503.load(Ordering::Relaxed));
+        w.key("bad_requests")
+            .u64_val(hs.bad_requests.load(Ordering::Relaxed));
+        w.end_obj();
+    }
+    w.end_obj();
+    Response::json(200, w.finish())
+}
+
+/// Parsed `/v1/forward` body.
+struct ForwardReq {
+    adapter: String,
+    /// One row per site, spec order (widths validated by the caller).
+    rows: Vec<Vec<f32>>,
+    deadline_ms: Option<u64>,
+}
+
+/// Strict streaming parse — numbers flow straight off the tokenizer
+/// into typed row vectors, no DOM in between.
+fn parse_forward(
+    body: &[u8],
+    limits: &crate::wire::json::Limits,
+) -> anyhow::Result<ForwardReq> {
+    let mut tok = Tokenizer::new(body, limits)?;
+    anyhow::ensure!(
+        matches!(tok.next()?, Some(Event::ObjBegin)),
+        "request body must be a json object"
+    );
+    let mut adapter: Option<String> = None;
+    let mut rows: Option<Vec<Vec<f32>>> = None;
+    let mut deadline_ms: Option<u64> = None;
+    loop {
+        let key: Cow<'_, str> = match tok.next()? {
+            Some(Event::Key(k)) => k,
+            Some(Event::ObjEnd) => break,
+            _ => anyhow::bail!("malformed request object"),
+        };
+        match key.as_ref() {
+            "adapter" => match tok.next()? {
+                Some(Event::Str(s)) => adapter = Some(s.into_owned()),
+                _ => anyhow::bail!("`adapter` must be a string"),
+            },
+            "deadline_ms" => match tok.next()? {
+                Some(Event::Num(n)) => {
+                    anyhow::ensure!(
+                        n >= 0.0 && n.fract() == 0.0 && n <= 9.0e15,
+                        "`deadline_ms` must be a whole non-negative \
+                         number of milliseconds (got {n})"
+                    );
+                    deadline_ms = Some(n as u64);
+                }
+                _ => anyhow::bail!("`deadline_ms` must be a number"),
+            },
+            "rows" => {
+                anyhow::ensure!(
+                    matches!(tok.next()?, Some(Event::ArrBegin)),
+                    "`rows` must be an array of per-site rows"
+                );
+                let mut rs: Vec<Vec<f32>> = Vec::new();
+                loop {
+                    match tok.next()? {
+                        Some(Event::ArrBegin) => {
+                            let mut row: Vec<f32> = Vec::new();
+                            loop {
+                                match tok.next()? {
+                                    Some(Event::Num(n)) => {
+                                        let v = n as f32;
+                                        anyhow::ensure!(
+                                            v.is_finite(),
+                                            "row value {n} is outside \
+                                             the f32 range"
+                                        );
+                                        row.push(v);
+                                    }
+                                    Some(Event::ArrEnd) => break,
+                                    _ => anyhow::bail!(
+                                        "rows must contain only numbers"
+                                    ),
+                                }
+                            }
+                            rs.push(row);
+                        }
+                        Some(Event::ArrEnd) => break,
+                        _ => anyhow::bail!(
+                            "`rows` must be an array of arrays of \
+                             numbers"
+                        ),
+                    }
+                }
+                rows = Some(rs);
+            }
+            other => anyhow::bail!(
+                "unknown field `{other}` (expected `adapter`, `rows`, \
+                 `deadline_ms`)"
+            ),
+        }
+    }
+    anyhow::ensure!(tok.next()?.is_none(), "trailing data after body");
+    Ok(ForwardReq {
+        adapter: adapter
+            .ok_or_else(|| anyhow::anyhow!("missing field `adapter`"))?,
+        rows: rows
+            .ok_or_else(|| anyhow::anyhow!("missing field `rows`"))?,
+        deadline_ms,
+    })
+}
+
+fn forward(state: &GatewayState, req: &Request) -> Response {
+    if state.is_draining() {
+        return Response::error(503, "gateway is draining");
+    }
+    // Admission control first — shedding must stay cheap under the
+    // very overload it exists for, so it runs before body parsing.
+    if let Some(why) = state.should_shed() {
+        state.shed_429.fetch_add(1, Ordering::Relaxed);
+        return Response::error(429, &why).with_header(
+            "retry-after",
+            &state.cfg.retry_after_s.to_string(),
+        );
+    }
+    let fwd = match parse_forward(&req.body, &state.limits) {
+        Ok(f) => f,
+        Err(e) => return Response::error(400, &format!("{e:#}")),
+    };
+    // Validate shape here (400) instead of surfacing the scheduler's
+    // submit error as a server-side failure.
+    let site_ns = state.site_ns();
+    if fwd.rows.len() != site_ns.len() {
+        return Response::error(
+            400,
+            &format!(
+                "request has {} site rows, model has {} sites",
+                fwd.rows.len(),
+                site_ns.len()
+            ),
+        );
+    }
+    for (i, (row, n)) in fwd.rows.iter().zip(site_ns).enumerate() {
+        if row.len() != *n {
+            return Response::error(
+                400,
+                &format!(
+                    "site {i}: row has {} values, site expects {n}",
+                    row.len()
+                ),
+            );
+        }
+    }
+    // Resolve the adapter at the edge: client-chosen names must not
+    // reach the scheduler's per-adapter accounting (or occupy batch
+    // plumbing) when they cannot possibly serve.  A concurrent
+    // hot-evict can still race this check — the scheduler answers
+    // those with the same "unknown adapter" error, mapped 404 below.
+    let known = {
+        let model = state.model();
+        let m = model.lock().unwrap_or_else(|p| p.into_inner());
+        m.contains(&fwd.adapter)
+    };
+    if !known {
+        return Response::error(
+            404,
+            &format!("unknown adapter `{}`", fwd.adapter),
+        );
+    }
+    let deadline_ms = match fwd.deadline_ms {
+        Some(ms) => ms, // explicit (0 = no deadline)
+        None => state.cfg.deadline_ms,
+    };
+    let ticket = {
+        let server = state.server();
+        let result = if deadline_ms > 0 {
+            server.submit_with_deadline(
+                &fwd.adapter,
+                fwd.rows,
+                std::time::Duration::from_millis(deadline_ms),
+            )
+        } else {
+            server.submit(&fwd.adapter, fwd.rows)
+        };
+        match result {
+            Ok(t) => t,
+            Err(e) => {
+                return Response::error(503, &format!("{e:#}"));
+            }
+        }
+    }; // scheduler read guard drops before the blocking wait
+    match ticket.wait() {
+        Ok(resp) => {
+            let mut w = JsonWriter::new();
+            w.begin_obj();
+            w.key("adapter").str_val(&fwd.adapter);
+            w.key("batch_rows").u64_val(resp.batch_rows as u64);
+            w.key("outputs").begin_arr();
+            for site in 0..resp.sites() {
+                w.begin_arr();
+                for &v in resp.site_output(site) {
+                    w.f32_val(v);
+                }
+                w.end_arr();
+            }
+            w.end_arr();
+            w.end_obj();
+            Response::json(200, w.finish())
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let status = if msg.contains("unknown adapter") {
+                404
+            } else if msg.contains("timed out") {
+                504
+            } else if msg.contains("shut down") {
+                503
+            } else {
+                500
+            };
+            Response::error(status, &msg)
+        }
+    }
+}
+
+fn load_adapter(
+    state: &GatewayState,
+    name: &str,
+    req: &Request,
+) -> Response {
+    // Optional body: {"dir": "...", "alpha": 2.0}.  The directory
+    // falls back to `[serve] preload_dir`.
+    let mut dir: Option<String> = None;
+    let mut alpha: f32 = GatewayState::DEFAULT_ALPHA;
+    if !req.body.is_empty() {
+        let doc = match crate::wire::json::parse_value(
+            &req.body,
+            &state.limits,
+        ) {
+            Ok(d) => d,
+            Err(e) => return Response::error(400, &format!("{e:#}")),
+        };
+        let Some(obj) = doc.as_obj() else {
+            return Response::error(400, "body must be a json object");
+        };
+        for (k, v) in obj {
+            match k.as_str() {
+                "dir" => match v.as_str() {
+                    Some(s) => dir = Some(s.to_string()),
+                    None => {
+                        return Response::error(
+                            400,
+                            "`dir` must be a string",
+                        )
+                    }
+                },
+                "alpha" => match v.as_f64() {
+                    Some(a) if (a as f32).is_finite() => alpha = a as f32,
+                    _ => {
+                        return Response::error(
+                            400,
+                            "`alpha` must be a finite number",
+                        )
+                    }
+                },
+                other => {
+                    return Response::error(
+                        400,
+                        &format!(
+                            "unknown field `{other}` (expected `dir`, \
+                             `alpha`)"
+                        ),
+                    )
+                }
+            }
+        }
+    }
+    let dir = match dir.or_else(|| state.default_dir()) {
+        Some(d) => d,
+        None => {
+            return Response::error(
+                400,
+                "no checkpoint directory: pass `dir` in the body or \
+                 set [serve] preload_dir",
+            )
+        }
+    };
+    let t0 = std::time::Instant::now();
+    // Disk I/O happens OUTSIDE the model mutex — a multi-megabyte
+    // checkpoint read under the lock would stall every concurrent
+    // forward (and every scheduler worker's plan/install) for the
+    // duration; only the in-memory insert needs exclusivity.
+    let loaded = crate::train::checkpoint::Checkpoint::load_by_name(
+        std::path::Path::new(&dir),
+        name,
+    )
+    .and_then(|ck| {
+        let model = state.model();
+        let mut m = model.lock().unwrap_or_else(|p| p.into_inner());
+        m.load_checkpoint(name, &ck, alpha).map(|()| m.spec().len())
+    });
+    match loaded {
+        Ok(sites) => {
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            crate::info!(
+                "wire: loaded adapter `{name}` from {dir} \
+                 ({sites} sites) in {ms:.1} ms"
+            );
+            let mut w = JsonWriter::new();
+            w.begin_obj();
+            w.key("adapter").str_val(name);
+            w.key("sites").u64_val(sites as u64);
+            w.key("load_ms").f64_val(ms);
+            w.end_obj();
+            Response::json(200, w.finish())
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            let status =
+                if msg.contains("no checkpoint") { 404 } else { 400 };
+            Response::error(status, &msg)
+        }
+    }
+}
+
+fn evict_adapter(state: &GatewayState, name: &str) -> Response {
+    let evicted = {
+        let model = state.model();
+        let mut m = model.lock().unwrap_or_else(|p| p.into_inner());
+        m.evict(name)
+    };
+    if evicted {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("adapter").str_val(name);
+        w.key("evicted").bool_val(true);
+        w.end_obj();
+        Response::json(200, w.finish())
+    } else {
+        Response::error(404, &format!("unknown adapter `{name}`"))
+    }
+}

@@ -1,0 +1,389 @@
+//! Loopback wire benchmark — the `serving_wire` report section behind
+//! `serve-bench --wire` and `benches/serve_bench.rs` scenario 4.
+//!
+//! Two passes over the same Zipf-skewed single-site workload, built
+//! from bit-identical synthetic registries:
+//!
+//! 1. **in-process** — `clients` closed-loop submitter threads drive
+//!    the batched [`Server`](crate::serve::Server) directly
+//!    (submit → wait per request).  This is the ceiling: the same
+//!    engine at the same concurrency, minus the wire.
+//! 2. **wire** — a [`Gateway`] on a loopback ephemeral port, the same
+//!    thread count each owning one keep-alive [`HttpClient`]
+//!    connection, every request paying the full serialize → HTTP →
+//!    parse → forward → serialize → HTTP round trip.
+//!
+//! `wire_vs_inprocess` (wire throughput / in-process throughput) is
+//! the machine-independent CI gate: the HTTP + JSON edge must keep at
+//! least half the engine's closed-loop throughput (floors live in
+//! `BENCH_baseline.json`, gated by `tools/bench_regression.py`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::config::{ServeConfig, WireConfig};
+use crate::model::SiteShape;
+use crate::serve::bench::{percentile, synthetic_registry, Zipf, X_POOL};
+use crate::serve::Server;
+use crate::util::json::{obj, Json};
+use crate::wire::gateway::Gateway;
+use crate::wire::http::HttpClient;
+use crate::wire::json::JsonWriter;
+
+/// Wire workload description (always firehose / closed-loop — the
+/// wire scenario measures edge overhead, not pacing).
+#[derive(Clone, Debug)]
+pub struct WireBenchOpts {
+    pub adapters: usize,
+    pub requests: usize,
+    /// Concurrent keep-alive connections (and in-process submitter
+    /// threads — both passes run at this concurrency).
+    pub clients: usize,
+    pub zipf: f64,
+    pub site: SiteShape,
+    pub core_a: usize,
+    pub core_b: usize,
+    pub seed: u64,
+    pub serve: ServeConfig,
+    pub wire: WireConfig,
+}
+
+impl Default for WireBenchOpts {
+    fn default() -> Self {
+        WireBenchOpts {
+            adapters: 64,
+            requests: 2048,
+            clients: 8,
+            zipf: 1.1,
+            site: SiteShape { m: 256, n: 256 },
+            core_a: 64,
+            core_b: 48,
+            seed: 11,
+            serve: ServeConfig::default(),
+            wire: WireConfig {
+                port: 0, // never collide with a real deployment
+                ..WireConfig::default()
+            },
+        }
+    }
+}
+
+/// One measured wire scenario (a `serving_wire` bench row).
+#[derive(Clone, Debug)]
+pub struct WireBenchReport {
+    pub opts: WireBenchOpts,
+    pub workers: usize,
+    pub inproc_wall_s: f64,
+    pub wire_wall_s: f64,
+    pub inproc_throughput_rps: f64,
+    pub throughput_rps: f64,
+    /// The machine-independent CI gate: wire / in-process throughput.
+    pub wire_vs_inprocess: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_batch_rows: f64,
+    /// Non-200 responses seen by the bench clients (must be 0).
+    pub errors: u64,
+    /// 429 sheds observed (admission control must stay quiet under
+    /// the default watermarks).
+    pub shed_429: u64,
+}
+
+impl WireBenchReport {
+    pub fn to_json(&self) -> Json {
+        let o = &self.opts;
+        obj(vec![
+            ("adapters", o.adapters.into()),
+            ("requests", o.requests.into()),
+            ("clients", o.clients.into()),
+            ("zipf", o.zipf.into()),
+            ("rate_rps", Json::Num(0.0)),
+            ("site_m", o.site.m.into()),
+            ("site_n", o.site.n.into()),
+            ("core_a", o.core_a.into()),
+            ("core_b", o.core_b.into()),
+            ("max_batch", o.serve.max_batch.into()),
+            ("max_wait_us", (o.serve.max_wait_us as usize).into()),
+            ("workers", self.workers.into()),
+            ("inproc_wall_s", self.inproc_wall_s.into()),
+            ("wire_wall_s", self.wire_wall_s.into()),
+            (
+                "inproc_throughput_rps",
+                self.inproc_throughput_rps.into(),
+            ),
+            ("throughput_rps", self.throughput_rps.into()),
+            ("wire_vs_inprocess", self.wire_vs_inprocess.into()),
+            ("mean_ms", self.mean_ms.into()),
+            ("p50_ms", self.p50_ms.into()),
+            ("p95_ms", self.p95_ms.into()),
+            ("p99_ms", self.p99_ms.into()),
+            ("mean_batch_rows", self.mean_batch_rows.into()),
+            ("errors", (self.errors as usize).into()),
+            ("shed_429", (self.shed_429 as usize).into()),
+        ])
+    }
+
+    pub fn print(&self) {
+        let o = &self.opts;
+        println!(
+            "serve-wire[{} adapters, zipf {:.2}, {} reqs, {} clients, \
+             batch<= {}, {} workers]",
+            o.adapters, o.zipf, o.requests, o.clients,
+            o.serve.max_batch, self.workers
+        );
+        println!(
+            "  in-process  {:>10.0} req/s   ({:.3} s wall)",
+            self.inproc_throughput_rps, self.inproc_wall_s
+        );
+        println!(
+            "  wire        {:>10.0} req/s   ({:.3} s wall)  => {:.2}x \
+             in-process",
+            self.throughput_rps, self.wire_wall_s, self.wire_vs_inprocess
+        );
+        println!(
+            "  latency ms  mean {:.3}  p50 {:.3}  p95 {:.3}  p99 {:.3}",
+            self.mean_ms, self.p50_ms, self.p95_ms, self.p99_ms
+        );
+        println!(
+            "  mean batch rows {:.2}   errors {}   shed_429 {}",
+            self.mean_batch_rows, self.errors, self.shed_429
+        );
+    }
+}
+
+/// Interleave the request sequence across `clients` lanes.
+fn lanes(seq: &[usize], clients: usize) -> Vec<Vec<usize>> {
+    let mut out = vec![Vec::new(); clients.max(1)];
+    for (j, &idx) in seq.iter().enumerate() {
+        out[j % clients.max(1)].push(idx);
+    }
+    out
+}
+
+/// Serialize one `/v1/forward` body.
+fn forward_body(adapter: &str, row: &[f32]) -> String {
+    let mut w = JsonWriter::new();
+    w.begin_obj();
+    w.key("adapter").str_val(adapter);
+    w.key("rows").begin_arr();
+    w.begin_arr();
+    for &v in row {
+        w.f32_val(v);
+    }
+    w.end_arr();
+    w.end_arr();
+    w.end_obj();
+    w.finish()
+}
+
+/// Run one wire scenario (see module docs).  Configs are taken as
+/// final — apply `env_overridden()` at the call site.
+pub fn run_wire(opts: &WireBenchOpts) -> anyhow::Result<WireBenchReport> {
+    anyhow::ensure!(opts.adapters > 0, "need at least one adapter");
+    anyhow::ensure!(opts.requests > 0, "need at least one request");
+    anyhow::ensure!(opts.clients > 0, "need at least one client");
+    anyhow::ensure!(
+        opts.clients <= crate::wire::http::MAX_HTTP_WORKERS,
+        "--wire-clients is capped at {} (each closed-loop client holds \
+         one keep-alive connection, and a connection holds its HTTP \
+         worker)",
+        crate::wire::http::MAX_HTTP_WORKERS
+    );
+    // The bench must measure a hermetic synthetic fleet: a configured
+    // warm-preload directory (meant for real gateways) would load
+    // foreign checkpoints into the wire pass only — or fail the run on
+    // a missing dir — skewing the wire-vs-in-process comparison.
+    let mut serve_cfg = opts.serve.clone();
+    serve_cfg.preload_dir.clear();
+    let budget = serve_cfg.cache_budget_bytes();
+    let n = opts.site.n;
+
+    // Zipf request sequence + input pool, shared by both passes.
+    let mut rng = crate::math::rng::Pcg64::new(opts.seed ^ 0x5eed);
+    let zipf = Zipf::new(opts.adapters, opts.zipf);
+    let seq: Vec<usize> =
+        (0..opts.requests).map(|_| zipf.sample(&mut rng)).collect();
+    let pool: Vec<Vec<f32>> =
+        (0..X_POOL).map(|_| rng.normal_vec(n, 1.0)).collect();
+    let lane_idx = lanes(&seq, opts.clients);
+
+    // -- pass 1: in-process closed loop at the same concurrency --
+    let (registry, names) = synthetic_registry(
+        opts.adapters,
+        opts.site,
+        opts.core_a,
+        opts.core_b,
+        opts.seed,
+        budget,
+    )?;
+    let server = Server::new(registry, &serve_cfg);
+    let workers = server.worker_count();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for lane in &lane_idx {
+            let server = &server;
+            let names = &names;
+            let pool = &pool;
+            s.spawn(move || {
+                for (j, &idx) in lane.iter().enumerate() {
+                    let x = pool[j % X_POOL].clone();
+                    let ticket = server
+                        .submit_row(&names[idx], x)
+                        .expect("in-process submit");
+                    let _ = ticket.wait().expect("in-process answer");
+                }
+            });
+        }
+    });
+    let inproc_wall_s = t0.elapsed().as_secs_f64();
+    drop(server);
+
+    // -- pass 2: the same workload over HTTP --
+    let (registry, _) = synthetic_registry(
+        opts.adapters,
+        opts.site,
+        opts.core_a,
+        opts.core_b,
+        opts.seed,
+        budget,
+    )?;
+    // The transport is thread-per-connection: every closed-loop bench
+    // client holds one keep-alive connection for the whole run, so a
+    // pool smaller than `clients` — auto-sized OR explicitly
+    // configured — would strand lanes in the accept queue until their
+    // 30 s client timeouts count as errors.  Pin at least one HTTP
+    // worker per lane.
+    let mut wire_cfg = opts.wire.clone();
+    wire_cfg.http_workers = wire_cfg.http_workers.max(opts.clients);
+    let mut gw = Gateway::start(registry, &serve_cfg, &wire_cfg)?;
+    let addr = gw.addr();
+    let errors = AtomicU64::new(0);
+    let mut lat_by_lane: Vec<Vec<f64>> = Vec::new();
+    let t0 = Instant::now();
+    std::thread::scope(|s| -> anyhow::Result<()> {
+        let mut handles = Vec::new();
+        for lane in &lane_idx {
+            let names = &names;
+            let pool = &pool;
+            let errors = &errors;
+            handles.push(s.spawn(move || -> Vec<f64> {
+                let mut client = match HttpClient::connect(addr) {
+                    Ok(c) => c,
+                    Err(_) => {
+                        errors.fetch_add(
+                            lane.len() as u64,
+                            Ordering::Relaxed,
+                        );
+                        return Vec::new();
+                    }
+                };
+                let mut lat = Vec::with_capacity(lane.len());
+                for (j, &idx) in lane.iter().enumerate() {
+                    let body = forward_body(
+                        &names[idx],
+                        &pool[j % X_POOL],
+                    );
+                    let t = Instant::now();
+                    match client.request(
+                        "POST",
+                        "/v1/forward",
+                        Some(body.as_bytes()),
+                    ) {
+                        Ok(resp) if resp.status == 200 => {
+                            lat.push(
+                                t.elapsed().as_secs_f64() * 1e3,
+                            );
+                        }
+                        _ => {
+                            errors
+                                .fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                lat
+            }));
+        }
+        for h in handles {
+            lat_by_lane.push(h.join().expect("bench client thread"));
+        }
+        Ok(())
+    })?;
+    let wire_wall_s = t0.elapsed().as_secs_f64();
+    let stats = gw.state().server().scheduler_stats();
+    let (batches, rows) = (stats.batches, stats.batched_rows);
+    let shed_429 = gw.state().shed_429.load(Ordering::Relaxed);
+    gw.shutdown();
+
+    let mut lat_ms: Vec<f64> =
+        lat_by_lane.into_iter().flatten().collect();
+    lat_ms.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    let mean_ms = if lat_ms.is_empty() {
+        0.0
+    } else {
+        lat_ms.iter().sum::<f64>() / lat_ms.len() as f64
+    };
+    let reqs = opts.requests as f64;
+    let inproc_tp = reqs / inproc_wall_s.max(1e-9);
+    let tp = reqs / wire_wall_s.max(1e-9);
+    Ok(WireBenchReport {
+        opts: opts.clone(),
+        workers,
+        inproc_wall_s,
+        wire_wall_s,
+        inproc_throughput_rps: inproc_tp,
+        throughput_rps: tp,
+        wire_vs_inprocess: tp / inproc_tp.max(1e-9),
+        mean_ms,
+        p50_ms: percentile(&lat_ms, 0.50),
+        p95_ms: percentile(&lat_ms, 0.95),
+        p99_ms: percentile(&lat_ms, 0.99),
+        mean_batch_rows: rows as f64 / (batches as f64).max(1.0),
+        errors: errors.load(Ordering::Relaxed),
+        shed_429,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_smoke_scenario_reports_consistent_numbers() {
+        let opts = WireBenchOpts {
+            adapters: 3,
+            requests: 32,
+            clients: 2,
+            zipf: 1.1,
+            site: SiteShape { m: 16, n: 12 },
+            core_a: 4,
+            core_b: 3,
+            seed: 5,
+            serve: ServeConfig {
+                cache_mb: 4.0,
+                max_batch: 4,
+                max_wait_us: 300,
+                workers: 2,
+                ..ServeConfig::default()
+            },
+            wire: WireConfig {
+                port: 0,
+                http_workers: 2,
+                ..WireConfig::default()
+            },
+        };
+        let rep = run_wire(&opts).unwrap();
+        assert_eq!(rep.errors, 0, "every wire request must succeed");
+        assert_eq!(rep.shed_429, 0);
+        assert!(rep.throughput_rps > 0.0);
+        assert!(rep.inproc_throughput_rps > 0.0);
+        assert!(rep.wire_vs_inprocess > 0.0);
+        assert!(rep.p50_ms <= rep.p95_ms && rep.p95_ms <= rep.p99_ms);
+        let j = rep.to_json();
+        assert_eq!(j.get("requests").unwrap().as_usize(), Some(32));
+        assert_eq!(j.get("clients").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("errors").unwrap().as_usize(), Some(0));
+        assert!(j.get("wire_vs_inprocess").unwrap().as_f64().is_some());
+    }
+}

@@ -1,0 +1,804 @@
+//! Gateway lifecycle: owns the serve scheduler behind the HTTP edge,
+//! warm pre-loads checkpoints, sheds load, and drains on shutdown.
+//!
+//! * **Startup** — `[serve] preload_dir` (env
+//!   `COSA_SERVE_PRELOAD_DIR`) names a checkpoint directory; every
+//!   loadable checkpoint in it is inserted into the [`AdaptedModel`]
+//!   before the scheduler spawns, with per-adapter load times logged
+//!   (a cold fleet answering its first Zipf burst from disk is the
+//!   failure mode this prevents).
+//! * **Admission control** — `POST /v1/forward` is shed with `429 +
+//!   Retry-After` when the scheduler queue depth reaches
+//!   `[wire] shed_queue_depth`, or when the projection LRU is
+//!   evicting faster than `[wire] shed_evictions_per_s` over a
+//!   sliding one-second window (a thrashing cache means every queued
+//!   request regenerates projections — more queue only multiplies the
+//!   regeneration storm).  Either watermark set to 0 disables that
+//!   check.
+//! * **Shutdown** — the gateway first refuses new forwards (503
+//!   "draining"), then shuts the scheduler down — which *answers*
+//!   every in-flight ticket, so blocked HTTP handlers complete their
+//!   responses — and only then joins the HTTP threads.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock, RwLockReadGuard};
+use std::time::{Duration, Instant};
+
+use crate::config::{ServeConfig, WireConfig};
+use crate::model::AdaptedModel;
+use crate::serve::Server;
+use crate::train::checkpoint::Checkpoint;
+use crate::wire::http::{
+    Handler, HttpOptions, HttpServer, HttpStats, Request, Response,
+};
+use crate::wire::json::Limits;
+use crate::{info, warn};
+
+/// Sliding-window tracker for the LRU-thrash watermark.
+struct ThrashWindow {
+    window_start: Instant,
+    evictions_at_start: u64,
+}
+
+/// Shared state behind every route handler.
+pub struct GatewayState {
+    server: RwLock<Server>,
+    model: Arc<Mutex<AdaptedModel>>,
+    pub cfg: WireConfig,
+    pub limits: Limits,
+    site_ns: Vec<usize>,
+    draining: AtomicBool,
+    /// Forwards shed by admission control.
+    pub shed_429: AtomicU64,
+    http_stats: OnceLock<Arc<HttpStats>>,
+    thrash: Mutex<ThrashWindow>,
+    /// Default checkpoint directory for `/v1/adapters/{name}/load`
+    /// (from `[serve] preload_dir`; empty = none).
+    preload_dir: String,
+}
+
+impl GatewayState {
+    /// Alpha applied to checkpoint loads that do not specify one (the
+    /// checkpoint format does not carry alpha; this matches the
+    /// serving benches and examples).
+    pub const DEFAULT_ALPHA: f32 = 2.0;
+
+    /// Read access to the scheduler (submit paths).  The guard must
+    /// drop before blocking on a ticket — shutdown takes the write
+    /// side.
+    pub fn server(&self) -> RwLockReadGuard<'_, Server> {
+        self.server.read().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// The shared adapted model (hot load/evict, cache stats).
+    pub fn model(&self) -> Arc<Mutex<AdaptedModel>> {
+        self.model.clone()
+    }
+
+    /// Per-site input widths, spec order (request validation).
+    pub fn site_ns(&self) -> &[usize] {
+        &self.site_ns
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Relaxed)
+    }
+
+    pub fn adapter_count(&self) -> usize {
+        self.model
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .len()
+    }
+
+    pub fn http_stats(&self) -> Option<&HttpStats> {
+        self.http_stats.get().map(|a| a.as_ref())
+    }
+
+    pub fn default_dir(&self) -> Option<String> {
+        if self.preload_dir.is_empty() {
+            None
+        } else {
+            Some(self.preload_dir.clone())
+        }
+    }
+
+    /// Admission control: `Some(reason)` when the next forward should
+    /// be shed with 429 (see module docs for the two watermarks).
+    pub fn should_shed(&self) -> Option<String> {
+        let depth_mark = self.cfg.shed_queue_depth as u64;
+        if depth_mark > 0 {
+            let depth = self.server().queue_depth();
+            if depth >= depth_mark {
+                return Some(format!(
+                    "queue depth {depth} at the shed watermark \
+                     {depth_mark}; retry later"
+                ));
+            }
+        }
+        if self.cfg.shed_evictions_per_s > 0.0 {
+            let evictions = {
+                let m =
+                    self.model.lock().unwrap_or_else(|p| p.into_inner());
+                m.cache_stats().evictions
+            };
+            let mut w =
+                self.thrash.lock().unwrap_or_else(|p| p.into_inner());
+            let elapsed = w.window_start.elapsed();
+            if elapsed >= Duration::from_secs(1) {
+                w.window_start = Instant::now();
+                w.evictions_at_start = evictions;
+                return None; // fresh window: admit and re-measure
+            }
+            let in_window =
+                evictions.saturating_sub(w.evictions_at_start) as f64;
+            let budget =
+                self.cfg.shed_evictions_per_s * elapsed.as_secs_f64();
+            if in_window > budget.max(1.0) {
+                return Some(format!(
+                    "projection cache thrashing: {in_window:.0} \
+                     evictions in the last {:.2}s (watermark {}/s); \
+                     retry later",
+                    elapsed.as_secs_f64(),
+                    self.cfg.shed_evictions_per_s
+                ));
+            }
+        }
+        None
+    }
+}
+
+/// Load every checkpoint in `dir` into `model`, logging per-adapter
+/// load times.  Files that are not loadable checkpoints are skipped
+/// with a warning (one corrupt file must not keep a whole fleet
+/// offline); an unreadable directory is an error.  Returns the loaded
+/// adapter names.
+pub fn preload_checkpoints(
+    model: &mut AdaptedModel,
+    dir: &Path,
+    alpha: f32,
+) -> anyhow::Result<Vec<String>> {
+    let entries = std::fs::read_dir(dir).map_err(|e| {
+        anyhow::anyhow!("preload dir {}: {e}", dir.display())
+    })?;
+    let mut names = Vec::new();
+    let mut paths: Vec<_> = entries
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.is_file())
+        .collect();
+    paths.sort(); // deterministic load order
+    for path in paths {
+        let file = match path.file_name().and_then(|s| s.to_str()) {
+            Some(f) => f.to_string(),
+            None => continue,
+        };
+        // `<name>.ckpt` / `<name>.cosa` resolve back to `name`, the
+        // same mapping Checkpoint::load_by_name uses.
+        let name = file
+            .strip_suffix(".ckpt")
+            .or_else(|| file.strip_suffix(".cosa"))
+            .unwrap_or(&file)
+            .to_string();
+        let t0 = Instant::now();
+        let loaded = Checkpoint::load(&path)
+            .and_then(|ck| model.load_checkpoint(&name, &ck, alpha));
+        match loaded {
+            Ok(()) => {
+                info!(
+                    "wire: preloaded adapter `{name}` from {} in \
+                     {:.1} ms",
+                    path.display(),
+                    t0.elapsed().as_secs_f64() * 1e3
+                );
+                names.push(name);
+            }
+            Err(e) => {
+                warn!(
+                    "wire: skipping {} during preload: {e:#}",
+                    path.display()
+                );
+            }
+        }
+    }
+    info!(
+        "wire: preload complete — {} adapter(s) from {}",
+        names.len(),
+        dir.display()
+    );
+    Ok(names)
+}
+
+/// The running gateway: HTTP edge + scheduler + shared model.
+pub struct Gateway {
+    http: Option<HttpServer>,
+    state: Arc<GatewayState>,
+}
+
+impl Gateway {
+    /// Preload checkpoints (if `[serve] preload_dir` is set), spawn
+    /// the scheduler over `model`, and bind the HTTP edge.  Configs
+    /// are taken as-is — apply `env_overridden()` at the call site.
+    pub fn start(
+        mut model: AdaptedModel,
+        serve_cfg: &ServeConfig,
+        wire_cfg: &WireConfig,
+    ) -> anyhow::Result<Gateway> {
+        if !serve_cfg.preload_dir.is_empty() {
+            preload_checkpoints(
+                &mut model,
+                Path::new(&serve_cfg.preload_dir),
+                GatewayState::DEFAULT_ALPHA,
+            )?;
+        }
+        let site_ns: Vec<usize> =
+            model.spec().sites.iter().map(|s| s.shape.n).collect();
+        let server = Server::new(model, serve_cfg);
+        let shared_model = server.model();
+        let limits = Limits {
+            max_bytes: wire_cfg.max_body_bytes,
+            ..Limits::default()
+        };
+        let state = Arc::new(GatewayState {
+            server: RwLock::new(server),
+            model: shared_model,
+            cfg: wire_cfg.clone(),
+            limits,
+            site_ns,
+            draining: AtomicBool::new(false),
+            shed_429: AtomicU64::new(0),
+            http_stats: OnceLock::new(),
+            thrash: Mutex::new(ThrashWindow {
+                window_start: Instant::now(),
+                evictions_at_start: 0,
+            }),
+            preload_dir: serve_cfg.preload_dir.clone(),
+        });
+        let handler: Handler = {
+            let st = state.clone();
+            Arc::new(move |req: &Request| -> Response {
+                crate::wire::api::handle(&st, req)
+            })
+        };
+        let opts = HttpOptions {
+            workers: wire_cfg.http_workers,
+            max_body_bytes: wire_cfg.max_body_bytes,
+            read_timeout: Duration::from_millis(wire_cfg.read_timeout_ms),
+            write_timeout: Duration::from_millis(
+                wire_cfg.write_timeout_ms,
+            ),
+            keep_alive: wire_cfg.keep_alive,
+            max_pending_conns: wire_cfg.max_pending_conns,
+        };
+        let http =
+            HttpServer::bind(&wire_cfg.host, wire_cfg.port, &opts, handler)?;
+        let _ = state.http_stats.set(http.stats_arc());
+        info!("wire: gateway listening on {}", http.addr());
+        Ok(Gateway { http: Some(http), state })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.http
+            .as_ref()
+            .expect("gateway is running")
+            .addr()
+    }
+
+    pub fn state(&self) -> &Arc<GatewayState> {
+        &self.state
+    }
+
+    /// The shared adapted model (hot load/evict while serving).
+    pub fn model(&self) -> Arc<Mutex<AdaptedModel>> {
+        self.state.model()
+    }
+
+    /// Drain and stop: refuse new forwards (503), answer every
+    /// in-flight ticket via the scheduler's shutdown drain, then join
+    /// the HTTP threads.  Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.state.draining.store(true, Ordering::SeqCst);
+        {
+            // Write access waits for submit-side read guards, which
+            // are never held across a blocking ticket wait.
+            let mut server = self
+                .state
+                .server
+                .write()
+                .unwrap_or_else(|p| p.into_inner());
+            server.shutdown();
+        }
+        if let Some(mut http) = self.http.take() {
+            http.shutdown();
+        }
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::matrix::Matrix;
+    use crate::math::rng::Pcg64;
+    use crate::model::{ModelSpec, SiteShape};
+    use crate::util::json::Json;
+    use crate::wire::http::HttpClient;
+    use crate::wire::json::parse_value;
+
+    fn test_spec(sites: usize) -> ModelSpec {
+        ModelSpec::synthetic(sites, SiteShape { m: 12, n: 10 }, 4, 3)
+    }
+
+    fn add_adapter(model: &mut AdaptedModel, name: &str, seed: u64) {
+        let mut rng = Pcg64::derive(seed, name);
+        let ys: Vec<Matrix> = model
+            .spec()
+            .sites
+            .iter()
+            .map(|s| Matrix::gaussian(s.a, s.b, 0.5, &mut rng))
+            .collect();
+        model.insert_synthetic(name, seed, 2.0, ys).unwrap();
+    }
+
+    fn test_wire_cfg() -> WireConfig {
+        WireConfig {
+            port: 0,
+            http_workers: 2,
+            max_body_bytes: 1 << 16,
+            // Short poll so shutdown never waits out a worker blocked
+            // on an idle keep-alive client (tests drop gateways with
+            // their clients still connected).
+            read_timeout_ms: 250,
+            ..WireConfig::default()
+        }
+    }
+
+    fn test_serve_cfg() -> ServeConfig {
+        ServeConfig {
+            cache_mb: 4.0,
+            max_batch: 4,
+            max_wait_us: 200,
+            workers: 2,
+            ..ServeConfig::default()
+        }
+    }
+
+    fn forward_body(adapter: &str, xs: &[Vec<f32>]) -> String {
+        let mut w = crate::wire::json::JsonWriter::new();
+        w.begin_obj();
+        w.key("adapter").str_val(adapter);
+        w.key("rows").begin_arr();
+        for row in xs {
+            w.begin_arr();
+            for &v in row {
+                w.f32_val(v);
+            }
+            w.end_arr();
+        }
+        w.end_arr();
+        w.end_obj();
+        w.finish()
+    }
+
+    fn outputs_of(resp_body: &[u8]) -> Vec<Vec<f32>> {
+        let doc =
+            parse_value(resp_body, &Limits::default()).unwrap();
+        doc.get("outputs")
+            .expect("outputs field")
+            .as_arr()
+            .expect("outputs array")
+            .iter()
+            .map(|row| {
+                row.as_arr()
+                    .expect("site row")
+                    .iter()
+                    .map(|v| v.as_f64().expect("number") as f32)
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn loopback_forward_is_bit_identical_to_inprocess() {
+        // The acceptance criterion: JSON-over-HTTP forward on a live
+        // gateway == direct AdaptedModel::forward, bit for bit.
+        let spec = test_spec(3);
+        let mut model = AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+        add_adapter(&mut model, "alpha", 7);
+        let mut reference =
+            AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+        add_adapter(&mut reference, "alpha", 7);
+
+        let mut gw =
+            Gateway::start(model, &test_serve_cfg(), &test_wire_cfg())
+                .unwrap();
+        let mut client = HttpClient::connect(gw.addr()).unwrap();
+        let mut rng = Pcg64::new(3);
+        for round in 0..3 {
+            let xs_mat: Vec<Matrix> = spec
+                .sites
+                .iter()
+                .map(|s| Matrix::gaussian(1, s.shape.n, 1.0, &mut rng))
+                .collect();
+            let xs: Vec<Vec<f32>> =
+                xs_mat.iter().map(|m| m.data.clone()).collect();
+            let body = forward_body("alpha", &xs);
+            let resp = client
+                .request("POST", "/v1/forward", Some(body.as_bytes()))
+                .unwrap();
+            assert_eq!(
+                resp.status,
+                200,
+                "{}",
+                String::from_utf8_lossy(&resp.body)
+            );
+            let got = outputs_of(&resp.body);
+            let want = reference.forward("alpha", &xs_mat).unwrap();
+            assert_eq!(got.len(), want.len());
+            for (site, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.len(), w.data.len());
+                for (p, q) in g.iter().zip(&w.data) {
+                    assert_eq!(
+                        p.to_bits(),
+                        q.to_bits(),
+                        "round {round} site {site}: wire {p:?} != \
+                         in-process {q:?}"
+                    );
+                }
+            }
+        }
+        gw.shutdown();
+        gw.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn malformed_and_mismatched_requests_map_to_4xx() {
+        let spec = test_spec(2);
+        let mut model = AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+        add_adapter(&mut model, "alpha", 7);
+        let gw =
+            Gateway::start(model, &test_serve_cfg(), &test_wire_cfg())
+                .unwrap();
+        let mut client = HttpClient::connect(gw.addr()).unwrap();
+        let cases: Vec<(&str, String, u16)> = vec![
+            ("garbage json", "{not json".into(), 400),
+            ("wrong top-level", "[1,2]".into(), 400),
+            (
+                "unknown field",
+                r#"{"adapter":"alpha","rows":[[0]],"x":1}"#.into(),
+                400,
+            ),
+            ("missing rows", r#"{"adapter":"alpha"}"#.into(), 400),
+            (
+                "missing adapter",
+                r#"{"rows":[[0.0],[0.0]]}"#.into(),
+                400,
+            ),
+            (
+                "non-number row value",
+                r#"{"adapter":"alpha","rows":[["a"],[0]]}"#.into(),
+                400,
+            ),
+            (
+                "row value beyond f32",
+                format!(
+                    r#"{{"adapter":"alpha","rows":[[1e300{}],[0]]}}"#,
+                    ",0".repeat(9)
+                ),
+                400,
+            ),
+            (
+                "wrong site count",
+                forward_body("alpha", &[vec![0.0; 10]]),
+                400,
+            ),
+            (
+                "wrong row width",
+                forward_body("alpha", &[vec![0.0; 10], vec![0.0; 9]]),
+                400,
+            ),
+            (
+                "unknown adapter",
+                forward_body("ghost", &[vec![0.0; 10], vec![0.0; 10]]),
+                404,
+            ),
+        ];
+        for (what, body, want_status) in cases {
+            let resp = client
+                .request("POST", "/v1/forward", Some(body.as_bytes()))
+                .unwrap();
+            assert_eq!(
+                resp.status,
+                want_status,
+                "{what}: {}",
+                String::from_utf8_lossy(&resp.body)
+            );
+        }
+        // worker threads survived all of that
+        let ok = forward_body("alpha", &[vec![0.1; 10], vec![0.2; 10]]);
+        let resp = client
+            .request("POST", "/v1/forward", Some(ok.as_bytes()))
+            .unwrap();
+        assert_eq!(resp.status, 200, "workers must outlive bad requests");
+        // unknown route and wrong method
+        let resp = client.request("GET", "/v1/nope", None).unwrap();
+        assert_eq!(resp.status, 404);
+        let resp = client.request("GET", "/v1/forward", None).unwrap();
+        assert_eq!(resp.status, 405);
+        // oversized body (max_body_bytes = 64 KiB in the test config)
+        let huge = [b'x'].repeat((1 << 16) + 1);
+        let mut fresh = HttpClient::connect(gw.addr()).unwrap();
+        let resp =
+            fresh.request("POST", "/v1/forward", Some(&huge)).unwrap();
+        assert_eq!(resp.status, 413);
+    }
+
+    #[test]
+    fn deadlines_expire_as_504_and_queue_watermark_sheds_429() {
+        let spec = test_spec(1);
+        let mut model = AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+        add_adapter(&mut model, "alpha", 7);
+        // max_wait far beyond the test budget: only deadlines can
+        // answer queued requests, and queued requests stay queued for
+        // the shed check.
+        let serve_cfg = ServeConfig {
+            max_wait_us: 30_000_000,
+            ..test_serve_cfg()
+        };
+        let wire_cfg = WireConfig {
+            shed_queue_depth: 2,
+            ..test_wire_cfg()
+        };
+        let gw = Gateway::start(model, &serve_cfg, &wire_cfg).unwrap();
+        let mut client = HttpClient::connect(gw.addr()).unwrap();
+
+        // deadline-carrying request: answered 504 near its deadline
+        let body = format!(
+            r#"{{"adapter":"alpha","deadline_ms":20,"rows":[[{}]]}}"#,
+            ["0.5"; 10].join(",")
+        );
+        let t0 = Instant::now();
+        let resp = client
+            .request("POST", "/v1/forward", Some(body.as_bytes()))
+            .unwrap();
+        assert_eq!(
+            resp.status,
+            504,
+            "{}",
+            String::from_utf8_lossy(&resp.body)
+        );
+        assert!(
+            t0.elapsed() < Duration::from_secs(20),
+            "504 must arrive near the deadline, not at max_wait"
+        );
+
+        // fill the queue to the watermark with in-process submits
+        // that can never flush (huge max_wait, no deadline) ...
+        let t1 = gw
+            .state()
+            .server()
+            .submit("alpha", vec![vec![0.1; 10]])
+            .unwrap();
+        let t2 = gw
+            .state()
+            .server()
+            .submit("alpha", vec![vec![0.2; 10]])
+            .unwrap();
+        // ... then the wire sheds
+        let resp = client
+            .request("POST", "/v1/forward", Some(body.as_bytes()))
+            .unwrap();
+        assert_eq!(
+            resp.status,
+            429,
+            "{}",
+            String::from_utf8_lossy(&resp.body)
+        );
+        let retry = resp
+            .headers
+            .iter()
+            .find(|(k, _)| k == "retry-after")
+            .map(|(_, v)| v.as_str());
+        assert_eq!(retry, Some("1"), "429 must carry Retry-After");
+        assert!(
+            gw.state().shed_429.load(Ordering::Relaxed) >= 1,
+            "shed counter must move"
+        );
+        // shutdown drains the two parked submits (answered, not lost)
+        drop(gw);
+        assert!(t1.wait().is_ok());
+        assert!(t2.wait().is_ok());
+    }
+
+    #[test]
+    fn load_evict_stats_and_healthz_round_trip() {
+        let dir = std::env::temp_dir().join("cosa_wire_load_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = test_spec(2);
+        // author a checkpoint for `beta` out-of-band
+        let mut author = AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+        add_adapter(&mut author, "beta", 11);
+        let ck = author.checkpoint("beta", "tiny-lm_cosa").unwrap();
+        ck.save(&dir.join("beta.ckpt")).unwrap();
+
+        let mut model = AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+        add_adapter(&mut model, "alpha", 7);
+        let gw =
+            Gateway::start(model, &test_serve_cfg(), &test_wire_cfg())
+                .unwrap();
+        let mut client = HttpClient::connect(gw.addr()).unwrap();
+
+        let resp = client.request("GET", "/healthz", None).unwrap();
+        assert_eq!(resp.status, 200);
+        let doc = parse_value(&resp.body, &Limits::default()).unwrap();
+        assert_eq!(doc.get("status").unwrap().as_str(), Some("ok"));
+
+        // hot-load beta through the wire, then serve it
+        let body = format!(r#"{{"dir":"{}"}}"#, dir.display());
+        let resp = client
+            .request(
+                "POST",
+                "/v1/adapters/beta/load",
+                Some(body.as_bytes()),
+            )
+            .unwrap();
+        assert_eq!(
+            resp.status,
+            200,
+            "{}",
+            String::from_utf8_lossy(&resp.body)
+        );
+        let fwd = forward_body("beta", &[vec![0.1; 10], vec![0.2; 10]]);
+        let resp = client
+            .request("POST", "/v1/forward", Some(fwd.as_bytes()))
+            .unwrap();
+        assert_eq!(resp.status, 200);
+
+        // load of a checkpoint that does not exist
+        let resp = client
+            .request(
+                "POST",
+                "/v1/adapters/ghost/load",
+                Some(body.as_bytes()),
+            )
+            .unwrap();
+        assert_eq!(resp.status, 404);
+        // load with neither body dir nor preload_dir configured
+        let resp = client
+            .request("POST", "/v1/adapters/beta/load", None)
+            .unwrap();
+        assert_eq!(resp.status, 400);
+
+        // stats reflect the traffic
+        let resp = client.request("GET", "/v1/stats", None).unwrap();
+        assert_eq!(resp.status, 200);
+        let doc = parse_value(&resp.body, &Limits::default()).unwrap();
+        assert_eq!(doc.get("adapters").unwrap().as_usize(), Some(2));
+        assert_eq!(doc.get("queue_depth").unwrap().as_usize(), Some(0));
+        assert!(
+            doc.get("submitted").unwrap().as_usize().unwrap() >= 1
+        );
+        assert!(doc.get("cache").unwrap().get("hits").is_some());
+        assert_eq!(
+            doc.get("per_adapter").unwrap().get("beta").and_then(
+                Json::as_usize
+            ),
+            Some(1)
+        );
+        assert!(
+            doc.get("http").unwrap().get("requests").unwrap().as_usize()
+                .unwrap() >= 5
+        );
+
+        // evict beta; it stops serving
+        let resp = client
+            .request("DELETE", "/v1/adapters/beta", None)
+            .unwrap();
+        assert_eq!(resp.status, 200);
+        let resp = client
+            .request("POST", "/v1/forward", Some(fwd.as_bytes()))
+            .unwrap();
+        assert_eq!(resp.status, 404, "evicted adapter must 404");
+        let resp = client
+            .request("DELETE", "/v1/adapters/beta", None)
+            .unwrap();
+        assert_eq!(resp.status, 404, "double evict must 404");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn preload_dir_warms_every_checkpoint_at_startup() {
+        let dir = std::env::temp_dir().join("cosa_wire_preload_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let spec = test_spec(2);
+        let mut author = AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+        for (name, seed) in [("warm-a", 21u64), ("warm-b", 22u64)] {
+            add_adapter(&mut author, name, seed);
+            let ck = author.checkpoint(name, "tiny-lm_cosa").unwrap();
+            ck.save(&dir.join(format!("{name}.ckpt"))).unwrap();
+        }
+        // a non-checkpoint file is skipped, not fatal
+        std::fs::write(dir.join("notes.txt"), b"not a checkpoint")
+            .unwrap();
+
+        let model = AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+        let serve_cfg = ServeConfig {
+            preload_dir: dir.display().to_string(),
+            ..test_serve_cfg()
+        };
+        let gw =
+            Gateway::start(model, &serve_cfg, &test_wire_cfg()).unwrap();
+        assert_eq!(gw.state().adapter_count(), 2, "both warmed");
+        let mut client = HttpClient::connect(gw.addr()).unwrap();
+        for name in ["warm-a", "warm-b"] {
+            let fwd =
+                forward_body(name, &[vec![0.1; 10], vec![0.2; 10]]);
+            let resp = client
+                .request("POST", "/v1/forward", Some(fwd.as_bytes()))
+                .unwrap();
+            assert_eq!(resp.status, 200, "preloaded `{name}` must serve");
+        }
+        // a missing preload dir fails startup loudly
+        let bad = ServeConfig {
+            preload_dir: dir.join("missing").display().to_string(),
+            ..test_serve_cfg()
+        };
+        let fresh = AdaptedModel::new(spec, 1 << 20).unwrap();
+        assert!(Gateway::start(fresh, &bad, &test_wire_cfg()).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_thrash_watermark_sheds() {
+        let spec = test_spec(1);
+        // A ~1 KiB budget holds barely three L/R projections (one pair
+        // is ~312 bytes at these dims), so round-robining 8 adapters
+        // evicts on nearly every forward — a genuine thrash storm.
+        let mut model = AdaptedModel::new(spec, 1024).unwrap();
+        for i in 0..8u64 {
+            add_adapter(&mut model, &format!("c{i}"), 7 + i);
+        }
+        let wire_cfg = WireConfig {
+            shed_queue_depth: 0, // isolate the thrash check
+            // effectively "any sustained eviction in the current
+            // window sheds" — the window budget floors at 1 eviction
+            shed_evictions_per_s: 0.0001,
+            ..test_wire_cfg()
+        };
+        let gw =
+            Gateway::start(model, &test_serve_cfg(), &wire_cfg).unwrap();
+        assert!(
+            gw.state().should_shed().is_none(),
+            "an idle gateway with zero evictions must admit"
+        );
+        let mut client = HttpClient::connect(gw.addr()).unwrap();
+        let mut shed = false;
+        'out: for round in 0..3 {
+            for i in 0..8 {
+                let fwd =
+                    forward_body(&format!("c{i}"), &[vec![0.1; 10]]);
+                let resp = client
+                    .request("POST", "/v1/forward", Some(fwd.as_bytes()))
+                    .unwrap();
+                if resp.status == 429 {
+                    shed = true;
+                    break 'out;
+                }
+                assert_eq!(resp.status, 200, "round {round}");
+            }
+        }
+        assert!(
+            shed,
+            "a 1 KiB cache serving 8 adapters must trip the thrash \
+             watermark"
+        );
+        assert!(gw.state().shed_429.load(Ordering::Relaxed) >= 1);
+    }
+}

@@ -1,0 +1,945 @@
+//! Minimal HTTP/1.1 over `std::net` — the gateway's transport.
+//!
+//! One accept thread feeds a **bounded** connection queue drained by a
+//! fixed worker pool; overflow is answered `503` straight from the
+//! accept thread (a full engine must shed at the door, not grow an
+//! unbounded backlog).  Workers speak enough HTTP/1.1 for a JSON API:
+//! `Content-Length` framing (no chunked bodies — `501`), keep-alive
+//! with pipelining-safe carry-over buffers, per-socket read/write
+//! timeouts, and bounded heads/bodies (`400`/`413`).  Shutdown stops
+//! the listener, drains queued connections, and joins every thread.
+//!
+//! The module also ships [`HttpClient`], the matching loopback client
+//! used by the end-to-end tests and the `serve-bench --wire` driver —
+//! the bench must pay the same serialize/parse cost a remote caller
+//! would.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Longest accepted request head (request line + headers).
+const MAX_HEAD_BYTES: usize = 16 << 10;
+/// Most headers accepted per request.
+const MAX_HEADERS: usize = 100;
+/// Ceiling on HTTP worker threads, however configured (the wire bench
+/// checks its client count against this — a keep-alive connection
+/// holds its worker, so more closed-loop clients than workers strand).
+pub(crate) const MAX_HTTP_WORKERS: usize = 64;
+/// Idle keep-alive poll interval when no read timeout is configured —
+/// workers must wake to observe shutdown.
+const IDLE_POLL: Duration = Duration::from_millis(500);
+/// Longest a keep-alive connection may sit idle (no request bytes)
+/// before the worker closes it.  Workers are a bounded pool and a
+/// connection holds its worker, so unbounded idling would let a
+/// handful of idle sockets pin the whole pool forever.
+const MAX_KEEP_ALIVE_IDLE: Duration = Duration::from_secs(60);
+
+/// One parsed request.  Header names are lowercased; `path` carries no
+/// query string (that lands in `query`, raw).
+#[derive(Debug, Default)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Case-insensitive header lookup (names are stored lowercased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// One response.  `headers` carries extras (e.g. `Retry-After`);
+/// `Content-Length`, `Content-Type` and `Connection` are written by
+/// the server.
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    pub content_type: &'static str,
+}
+
+impl Response {
+    pub fn json(status: u16, body: String) -> Response {
+        Response {
+            status,
+            headers: Vec::new(),
+            body: body.into_bytes(),
+            content_type: "application/json",
+        }
+    }
+
+    /// The uniform error shape: `{"error": "..."}` with the mapped
+    /// status.
+    pub fn error(status: u16, msg: &str) -> Response {
+        let mut w = super::json::JsonWriter::new();
+        w.begin_obj();
+        w.key("error").str_val(msg);
+        w.end_obj();
+        Response::json(status, w.finish())
+    }
+
+    pub fn with_header(mut self, name: &str, value: &str) -> Response {
+        self.headers.push((name.to_string(), value.to_string()));
+        self
+    }
+}
+
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        204 => "No Content",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "",
+    }
+}
+
+pub type Handler = Arc<dyn Fn(&Request) -> Response + Send + Sync>;
+
+/// Transport knobs (the gateway maps `config::WireConfig` onto this).
+#[derive(Clone, Debug)]
+pub struct HttpOptions {
+    /// Worker threads; 0 = auto (available parallelism, capped at 8).
+    pub workers: usize,
+    pub max_body_bytes: usize,
+    /// 0 = no stall timeout (idle keep-alive waits poll regardless).
+    pub read_timeout: Duration,
+    /// 0 = no write timeout.
+    pub write_timeout: Duration,
+    pub keep_alive: bool,
+    /// Bounded accept-queue capacity; overflow is shed with 503.
+    pub max_pending_conns: usize,
+}
+
+impl Default for HttpOptions {
+    fn default() -> Self {
+        HttpOptions {
+            workers: 0,
+            max_body_bytes: 8 << 20,
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            keep_alive: true,
+            max_pending_conns: 64,
+        }
+    }
+}
+
+/// Transport counters (surfaced through `/v1/stats`).
+#[derive(Default)]
+pub struct HttpStats {
+    pub accepted: AtomicU64,
+    pub shed_503: AtomicU64,
+    pub requests: AtomicU64,
+    pub bad_requests: AtomicU64,
+}
+
+struct ConnQueue {
+    q: Mutex<(VecDeque<TcpStream>, bool)>, // (queue, closed)
+    cv: Condvar,
+    cap: usize,
+}
+
+impl ConnQueue {
+    /// Enqueue, or hand the connection back on overflow/close so the
+    /// caller can answer 503 on it.
+    fn push(&self, s: TcpStream) -> Result<(), TcpStream> {
+        let mut g = self.q.lock().unwrap_or_else(|p| p.into_inner());
+        if g.1 || g.0.len() >= self.cap {
+            return Err(s);
+        }
+        g.0.push_back(s);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    fn pop(&self) -> Option<TcpStream> {
+        let mut g = self.q.lock().unwrap_or_else(|p| p.into_inner());
+        loop {
+            if let Some(s) = g.0.pop_front() {
+                return Some(s);
+            }
+            if g.1 {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    fn close(&self) {
+        let mut g = self.q.lock().unwrap_or_else(|p| p.into_inner());
+        g.1 = true;
+        self.cv.notify_all();
+    }
+}
+
+/// The bounded accept/worker HTTP server (see module docs).
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    queue: Arc<ConnQueue>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    stats: Arc<HttpStats>,
+}
+
+fn resolve_workers(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2)
+            .clamp(2, 8)
+    } else {
+        requested.min(MAX_HTTP_WORKERS)
+    }
+}
+
+impl HttpServer {
+    /// Bind `host:port` (port 0 = ephemeral; `addr()` reports the
+    /// outcome) and start the accept thread + worker pool.
+    pub fn bind(
+        host: &str,
+        port: u16,
+        opts: &HttpOptions,
+        handler: Handler,
+    ) -> anyhow::Result<HttpServer> {
+        let listener = TcpListener::bind((host, port)).map_err(|e| {
+            anyhow::anyhow!("cannot bind {host}:{port}: {e}")
+        })?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(HttpStats::default());
+        let queue = Arc::new(ConnQueue {
+            q: Mutex::new((VecDeque::new(), false)),
+            cv: Condvar::new(),
+            cap: opts.max_pending_conns.max(1),
+        });
+
+        let worker_count = resolve_workers(opts.workers);
+        let mut workers = Vec::with_capacity(worker_count);
+        for _ in 0..worker_count {
+            let q = queue.clone();
+            let h = handler.clone();
+            let o = opts.clone();
+            let st = stop.clone();
+            let hs = stats.clone();
+            workers.push(std::thread::spawn(move || {
+                while let Some(conn) = q.pop() {
+                    serve_conn(conn, &h, &o, &st, &hs);
+                }
+            }));
+        }
+
+        let accept = {
+            let q = queue.clone();
+            let st = stop.clone();
+            let hs = stats.clone();
+            std::thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if st.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let conn = match conn {
+                        Ok(c) => c,
+                        Err(_) => continue,
+                    };
+                    hs.accepted.fetch_add(1, Ordering::Relaxed);
+                    let _ = conn.set_nodelay(true);
+                    if let Err(mut conn) = q.push(conn) {
+                        // Shed at the door: the queue bound is the
+                        // backpressure contract — answer 503 from the
+                        // accept thread without occupying a worker.
+                        hs.shed_503.fetch_add(1, Ordering::Relaxed);
+                        let _ = conn.set_write_timeout(Some(
+                            Duration::from_millis(500),
+                        ));
+                        let _ = write_response(
+                            &mut conn,
+                            &Response::error(
+                                503,
+                                "connection queue is full",
+                            ),
+                            false,
+                        );
+                    }
+                }
+            })
+        };
+        Ok(HttpServer {
+            addr,
+            stop,
+            queue,
+            accept: Some(accept),
+            workers,
+            stats,
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> &HttpStats {
+        &self.stats
+    }
+
+    /// Shared handle to the counters (outlives the server's borrow —
+    /// the gateway stores it next to its own state).
+    pub fn stats_arc(&self) -> Arc<HttpStats> {
+        self.stats.clone()
+    }
+
+    /// Stop accepting, drain queued connections, join every thread.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect_timeout(
+            &self.addr,
+            Duration::from_millis(200),
+        );
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Where `\r\n\r\n` ends, if present.
+fn head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n").map(|p| p + 4)
+}
+
+/// Briefly drain unread request bytes before an early close so the
+/// peer receives the error response instead of a reset (closing a
+/// socket with unread data RSTs, which can discard the in-flight
+/// answer).  Bounded in both bytes and time.
+fn drain_before_close(conn: &mut TcpStream) {
+    let _ = conn.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut sink = [0u8; 8192];
+    let mut drained = 0usize;
+    while drained < (1 << 20) {
+        match conn.read(&mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => drained += n,
+        }
+    }
+}
+
+fn serve_conn(
+    conn: TcpStream,
+    handler: &Handler,
+    opts: &HttpOptions,
+    stop: &AtomicBool,
+    stats: &HttpStats,
+) {
+    let mut conn = conn;
+    // A real timeout is always installed so workers wake to observe
+    // shutdown; with no configured timeout the poll never closes a
+    // stalled request, it only re-checks the flag.
+    let stall_closes = !opts.read_timeout.is_zero();
+    let poll = if stall_closes { opts.read_timeout } else { IDLE_POLL };
+    let _ = conn.set_read_timeout(Some(poll));
+    if !opts.write_timeout.is_zero() {
+        let _ = conn.set_write_timeout(Some(opts.write_timeout));
+    }
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 8192];
+    loop {
+        // -- read one request head (keep-alive carry-over aware) --
+        // `wait_start` anchors two budgets: a request, once its first
+        // byte arrives, must complete within `read_timeout` *total*
+        // (a per-read clock would let a trickle-feeding client hold
+        // the worker forever — one byte per poll resets nothing
+        // here), and an idle connection is closed after
+        // MAX_KEEP_ALIVE_IDLE.
+        let mut wait_start = Instant::now();
+        let mut started = !buf.is_empty(); // pipelined carry-over
+        let head_len = loop {
+            if let Some(end) = head_end(&buf) {
+                break end;
+            }
+            if buf.len() > MAX_HEAD_BYTES {
+                stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                let _ = write_response(
+                    &mut conn,
+                    &Response::error(400, "request head too large"),
+                    false,
+                );
+                drain_before_close(&mut conn);
+                return;
+            }
+            if started
+                && stall_closes
+                && wait_start.elapsed() >= opts.read_timeout
+            {
+                // Total-budget stall: answer and give up.
+                let _ = write_response(
+                    &mut conn,
+                    &Response::error(408, "request timed out"),
+                    false,
+                );
+                drain_before_close(&mut conn);
+                return;
+            }
+            match conn.read(&mut chunk) {
+                Ok(0) => return, // peer closed
+                Ok(n) => {
+                    if !started {
+                        started = true;
+                        wait_start = Instant::now();
+                    }
+                    buf.extend_from_slice(&chunk[..n]);
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if stop.load(Ordering::Relaxed) {
+                        return; // shutting down; drop idle connection
+                    }
+                    if !started
+                        && wait_start.elapsed() >= MAX_KEEP_ALIVE_IDLE
+                    {
+                        return; // idle too long; free the worker
+                    }
+                }
+                Err(_) => return,
+            }
+        };
+
+        // -- parse the head --
+        let (mut req, content_length) =
+            match parse_head(&buf[..head_len]) {
+                Ok(ok) => ok,
+                Err(msg) => {
+                    stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    let _ = write_response(
+                        &mut conn,
+                        &Response::error(400, &msg),
+                        false,
+                    );
+                    drain_before_close(&mut conn);
+                    return;
+                }
+            };
+        if req.header("transfer-encoding").is_some() {
+            stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+            let _ = write_response(
+                &mut conn,
+                &Response::error(
+                    501,
+                    "chunked transfer encoding is not supported; \
+                     send Content-Length",
+                ),
+                false,
+            );
+            drain_before_close(&mut conn);
+            return;
+        }
+        if content_length > opts.max_body_bytes {
+            // Answer without reading the remainder — the connection
+            // cannot be reused after an unread body.
+            let _ = write_response(
+                &mut conn,
+                &Response::error(
+                    413,
+                    &format!(
+                        "body of {content_length} bytes exceeds the \
+                         {}-byte limit",
+                        opts.max_body_bytes
+                    ),
+                ),
+                false,
+            );
+            drain_before_close(&mut conn);
+            return;
+        }
+
+        // -- read the body (some of it may already be buffered) --
+        let total = head_len + content_length;
+        while buf.len() < total {
+            if stall_closes && wait_start.elapsed() >= opts.read_timeout {
+                // Same total budget as the head: trickled bodies must
+                // not hold the worker past the request's clock.
+                let _ = write_response(
+                    &mut conn,
+                    &Response::error(408, "request timed out"),
+                    false,
+                );
+                drain_before_close(&mut conn);
+                return;
+            }
+            match conn.read(&mut chunk) {
+                Ok(0) => return, // truncated body; nothing to answer
+                Ok(n) => buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    if stall_closes {
+                        let _ = write_response(
+                            &mut conn,
+                            &Response::error(408, "request timed out"),
+                            false,
+                        );
+                        drain_before_close(&mut conn);
+                        return;
+                    }
+                }
+                Err(_) => return,
+            }
+        }
+        req.body = buf[head_len..total].to_vec();
+        // Pipelining-safe carry-over for the next request.
+        buf.drain(..total);
+
+        // -- dispatch --
+        stats.requests.fetch_add(1, Ordering::Relaxed);
+        let resp = handler(&req);
+        let client_close = req
+            .header("connection")
+            .is_some_and(|v| v.eq_ignore_ascii_case("close"));
+        let keep = opts.keep_alive
+            && !client_close
+            && !stop.load(Ordering::Relaxed);
+        match write_response(&mut conn, &resp, keep) {
+            Ok(()) if keep => continue,
+            _ => return,
+        }
+    }
+}
+
+/// Parse the request line + headers; returns the request (body empty)
+/// and the declared content length.
+fn parse_head(head: &[u8]) -> Result<(Request, usize), String> {
+    let text = std::str::from_utf8(head)
+        .map_err(|_| "request head is not valid utf-8".to_string())?;
+    let mut lines = text.split("\r\n");
+    let line = lines.next().unwrap_or("");
+    let mut parts = line.split(' ');
+    let (method, target, version) = (
+        parts.next().unwrap_or(""),
+        parts.next().unwrap_or(""),
+        parts.next().unwrap_or(""),
+    );
+    if method.is_empty()
+        || target.is_empty()
+        || parts.next().is_some()
+        || !matches!(version, "HTTP/1.1" | "HTTP/1.0")
+    {
+        return Err(format!("malformed request line `{line}`"));
+    }
+    if !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(format!("malformed method `{method}`"));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (target, ""),
+    };
+    if !path.starts_with('/') {
+        return Err(format!("target `{target}` is not an absolute path"));
+    }
+    let mut req = Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        query: query.to_string(),
+        ..Request::default()
+    };
+    let mut content_length: Option<usize> = None;
+    for line in lines {
+        if line.is_empty() {
+            continue; // the blank line terminating the head
+        }
+        if req.headers.len() >= MAX_HEADERS {
+            return Err("too many headers".to_string());
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| format!("malformed header `{line}`"))?;
+        // Whitespace or controls inside a header name are the classic
+        // proxy-disagreement smuggling shape (`content-length\t:`) —
+        // reject, don't reinterpret.
+        if name.is_empty()
+            || name
+                .bytes()
+                .any(|b| b.is_ascii_whitespace() || b.is_ascii_control())
+        {
+            return Err(format!("malformed header name `{name}`"));
+        }
+        let name = name.to_ascii_lowercase();
+        let value = value.trim().to_string();
+        if name == "content-length" {
+            // Duplicate Content-Length headers are a request-smuggling
+            // vector behind a framing-disagreeing proxy (RFC 7230
+            // §3.3.2 requires rejecting conflicts) — refuse them
+            // outright rather than pick one.  The value must be
+            // 1*DIGIT exactly: `+5`/`0x5` forms parse differently
+            // across implementations, same vector.
+            if content_length.is_some() {
+                return Err("duplicate content-length header".to_string());
+            }
+            if value.is_empty()
+                || !value.bytes().all(|b| b.is_ascii_digit())
+            {
+                return Err(format!("bad content-length `{value}`"));
+            }
+            content_length = Some(value.parse::<usize>().map_err(
+                |_| format!("bad content-length `{value}`"),
+            )?);
+        }
+        req.headers.push((name, value));
+    }
+    Ok((req, content_length.unwrap_or(0)))
+}
+
+fn write_response(
+    conn: &mut TcpStream,
+    resp: &Response,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let mut out = Vec::with_capacity(resp.body.len() + 256);
+    out.extend_from_slice(
+        format!(
+            "HTTP/1.1 {} {}\r\n",
+            resp.status,
+            reason(resp.status)
+        )
+        .as_bytes(),
+    );
+    out.extend_from_slice(
+        format!("content-type: {}\r\n", resp.content_type).as_bytes(),
+    );
+    out.extend_from_slice(
+        format!("content-length: {}\r\n", resp.body.len()).as_bytes(),
+    );
+    for (k, v) in &resp.headers {
+        out.extend_from_slice(format!("{k}: {v}\r\n").as_bytes());
+    }
+    out.extend_from_slice(if keep_alive {
+        b"connection: keep-alive\r\n"
+    } else {
+        b"connection: close\r\n"
+    });
+    out.extend_from_slice(b"\r\n");
+    out.extend_from_slice(&resp.body);
+    conn.write_all(&out)?;
+    conn.flush()
+}
+
+/// Blocking keep-alive client for the loopback tests and the wire
+/// bench.  Speaks exactly the server's subset: `Content-Length`
+/// framing, no chunked bodies.
+pub struct HttpClient {
+    conn: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl HttpClient {
+    pub fn connect(addr: SocketAddr) -> anyhow::Result<HttpClient> {
+        let conn = TcpStream::connect_timeout(
+            &addr,
+            Duration::from_secs(5),
+        )?;
+        let _ = conn.set_nodelay(true);
+        conn.set_read_timeout(Some(Duration::from_secs(30)))?;
+        conn.set_write_timeout(Some(Duration::from_secs(30)))?;
+        Ok(HttpClient { conn, buf: Vec::new() })
+    }
+
+    /// One request/response exchange on the persistent connection.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&[u8]>,
+    ) -> anyhow::Result<Response> {
+        let mut out = Vec::with_capacity(
+            body.map_or(0, <[u8]>::len) + 128,
+        );
+        out.extend_from_slice(
+            format!("{method} {path} HTTP/1.1\r\n").as_bytes(),
+        );
+        out.extend_from_slice(b"host: localhost\r\n");
+        if let Some(b) = body {
+            out.extend_from_slice(
+                b"content-type: application/json\r\n",
+            );
+            out.extend_from_slice(
+                format!("content-length: {}\r\n", b.len()).as_bytes(),
+            );
+        }
+        out.extend_from_slice(b"\r\n");
+        if let Some(b) = body {
+            out.extend_from_slice(b);
+        }
+        self.conn.write_all(&out)?;
+        self.conn.flush()?;
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> anyhow::Result<Response> {
+        let mut chunk = [0u8; 8192];
+        let head_len = loop {
+            if let Some(end) = head_end(&self.buf) {
+                break end;
+            }
+            anyhow::ensure!(
+                self.buf.len() <= MAX_HEAD_BYTES,
+                "response head too large"
+            );
+            let n = self.conn.read(&mut chunk)?;
+            anyhow::ensure!(n > 0, "server closed mid-response");
+            self.buf.extend_from_slice(&chunk[..n]);
+        };
+        let text = std::str::from_utf8(&self.buf[..head_len])?;
+        let mut lines = text.split("\r\n");
+        let status_line = lines.next().unwrap_or("");
+        let status: u16 = status_line
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| {
+                anyhow::anyhow!("bad status line `{status_line}`")
+            })?;
+        let mut headers = Vec::new();
+        let mut content_length = 0usize;
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            if let Some((k, v)) = line.split_once(':') {
+                let k = k.to_ascii_lowercase();
+                let v = v.trim().to_string();
+                if k == "content-length" {
+                    content_length = v.parse()?;
+                }
+                headers.push((k, v));
+            }
+        }
+        let total = head_len + content_length;
+        while self.buf.len() < total {
+            let n = self.conn.read(&mut chunk)?;
+            anyhow::ensure!(n > 0, "server closed mid-body");
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+        let body = self.buf[head_len..total].to_vec();
+        self.buf.drain(..total);
+        Ok(Response {
+            status,
+            headers,
+            body,
+            content_type: "application/json",
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server(opts: HttpOptions) -> HttpServer {
+        let handler: Handler = Arc::new(|req: &Request| {
+            match (req.method.as_str(), req.path.as_str()) {
+                ("GET", "/ping") => Response::json(200, "\"pong\"".into()),
+                ("POST", "/echo") => Response {
+                    status: 200,
+                    headers: Vec::new(),
+                    body: req.body.clone(),
+                    content_type: "application/json",
+                },
+                _ => Response::error(404, "no such route"),
+            }
+        });
+        HttpServer::bind("127.0.0.1", 0, &opts, handler).unwrap()
+    }
+
+    #[test]
+    fn keep_alive_serves_multiple_requests_per_connection() {
+        let mut server = echo_server(HttpOptions::default());
+        let mut client = HttpClient::connect(server.addr()).unwrap();
+        for i in 0..3 {
+            let body = format!("[{i},{i}]");
+            let resp = client
+                .request("POST", "/echo", Some(body.as_bytes()))
+                .unwrap();
+            assert_eq!(resp.status, 200);
+            assert_eq!(resp.body, body.as_bytes());
+        }
+        let resp = client.request("GET", "/ping", None).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(
+            server.stats().requests.load(Ordering::Relaxed),
+            4,
+            "all four requests must ride one accepted connection"
+        );
+        assert_eq!(server.stats().accepted.load(Ordering::Relaxed), 1);
+        let resp = client.request("GET", "/nope", None).unwrap();
+        assert_eq!(resp.status, 404);
+        drop(client); // EOF frees the worker before the join below
+        server.shutdown();
+        server.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn oversized_bodies_get_413_without_reading_them() {
+        let opts =
+            HttpOptions { max_body_bytes: 64, ..HttpOptions::default() };
+        let server = echo_server(opts);
+        let mut client = HttpClient::connect(server.addr()).unwrap();
+        let oversize = [b'x'].repeat(65);
+        let resp = client
+            .request("POST", "/echo", Some(&oversize))
+            .unwrap();
+        assert_eq!(resp.status, 413);
+        let small = client.request("POST", "/echo", Some(b"ok"));
+        assert!(
+            small.is_err(),
+            "413 must close the connection (body was never read)"
+        );
+    }
+
+    #[test]
+    fn malformed_heads_get_400() {
+        let server = echo_server(HttpOptions::default());
+        for bad in [
+            "GARBAGE\r\n\r\n",
+            "GET /ping HTTP/2.0\r\n\r\n",
+            "GET /ping HTTP/1.1 extra\r\n\r\n",
+            "get /ping HTTP/1.1\r\n\r\n",
+            "GET ping HTTP/1.1\r\n\r\n",
+            "GET /ping HTTP/1.1\r\nbad header\r\n\r\n",
+            "POST /echo HTTP/1.1\r\ncontent-length: -1\r\n\r\n",
+            "POST /echo HTTP/1.1\r\ncontent-length: +2\r\n\r\nok",
+            "POST /echo HTTP/1.1\r\ncontent-length\t: 2\r\n\r\nok",
+            "POST /echo HTTP/1.1\r\ncontent-length: 2\r\n\
+             content-length: 0\r\n\r\nok",
+        ] {
+            let mut conn =
+                TcpStream::connect(server.addr()).unwrap();
+            conn.write_all(bad.as_bytes()).unwrap();
+            let mut out = Vec::new();
+            conn.read_to_end(&mut out).unwrap();
+            let text = String::from_utf8_lossy(&out);
+            assert!(
+                text.starts_with("HTTP/1.1 400"),
+                "`{bad:?}` got: {text}"
+            );
+        }
+        assert!(
+            server.stats().bad_requests.load(Ordering::Relaxed) >= 7
+        );
+    }
+
+    #[test]
+    fn chunked_bodies_are_501() {
+        let server = echo_server(HttpOptions::default());
+        let mut conn = TcpStream::connect(server.addr()).unwrap();
+        conn.write_all(
+            b"POST /echo HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n",
+        )
+        .unwrap();
+        let mut out = Vec::new();
+        conn.read_to_end(&mut out).unwrap();
+        assert!(String::from_utf8_lossy(&out)
+            .starts_with("HTTP/1.1 501"));
+    }
+
+    #[test]
+    fn connection_close_is_honored() {
+        let server = echo_server(HttpOptions::default());
+        let mut conn = TcpStream::connect(server.addr()).unwrap();
+        conn.write_all(
+            b"GET /ping HTTP/1.1\r\nconnection: close\r\n\r\n",
+        )
+        .unwrap();
+        let mut out = Vec::new();
+        conn.read_to_end(&mut out).unwrap(); // EOF: server closed
+        let text = String::from_utf8_lossy(&out);
+        assert!(text.starts_with("HTTP/1.1 200"), "{text}");
+        assert!(text.contains("connection: close"), "{text}");
+    }
+
+    #[test]
+    fn pipelined_requests_are_served_in_order() {
+        let server = echo_server(HttpOptions::default());
+        let mut conn = TcpStream::connect(server.addr()).unwrap();
+        conn.write_all(
+            b"POST /echo HTTP/1.1\r\ncontent-length: 3\r\n\r\n\
+              [1]POST /echo HTTP/1.1\r\ncontent-length: 3\r\n\r\n[2]",
+        )
+        .unwrap();
+        let mut got = Vec::new();
+        let mut chunk = [0u8; 4096];
+        while !String::from_utf8_lossy(&got).contains("[2]") {
+            let n = conn.read(&mut chunk).unwrap();
+            assert!(n > 0, "server closed before both answers");
+            got.extend_from_slice(&chunk[..n]);
+        }
+        let text = String::from_utf8_lossy(&got);
+        let first = text.find("[1]").expect("first answer");
+        let second = text.find("[2]").expect("second answer");
+        assert!(first < second, "answers out of order: {text}");
+        drop(conn); // EOF frees the worker before the drop-join
+    }
+
+    #[test]
+    fn shutdown_with_idle_keepalive_connection_joins() {
+        let opts = HttpOptions {
+            read_timeout: Duration::ZERO, // poll path must still wake
+            ..HttpOptions::default()
+        };
+        let mut server = echo_server(opts);
+        let mut client = HttpClient::connect(server.addr()).unwrap();
+        let resp = client.request("GET", "/ping", None).unwrap();
+        assert_eq!(resp.status, 200);
+        // client now idles; shutdown must not hang on the worker
+        let t0 = std::time::Instant::now();
+        server.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "shutdown hung on an idle keep-alive connection"
+        );
+    }
+}

@@ -1,0 +1,972 @@
+//! Strict, streaming JSON for the wire gateway — tokenizer, DOM
+//! bridge, and an escaping writer with precise `f32` round-trips.
+//!
+//! The repo's [`util::json`](crate::util::json) codec is a trusting
+//! DOM parser for files the repo itself writes (bench reports,
+//! artifact manifests).  A network edge parses *adversarial* bytes, so
+//! this module is a separate, hardened codec in the spirit of
+//! picojson-rs:
+//!
+//! * **Pull tokenizer** ([`Tokenizer`]) — a grammar-validating event
+//!   stream over a byte slice: the caller drains [`Event`]s and
+//!   malformed input errors at the offending byte.  Strings borrow
+//!   from the input when escape-free (no allocation on the hot path);
+//!   numbers are parsed in place.  Enforced [`Limits`]: total input
+//!   bytes, nesting depth, per-string raw length.
+//! * **Strictness** — exact JSON grammar (no `01`, `+1`, `.5`, `1.`,
+//!   trailing data, or bare control characters in strings), full
+//!   UTF-8 validation of raw string spans, `\uXXXX` escapes with
+//!   mandatory surrogate pairing, and rejection of numbers that
+//!   overflow `f64` (`1e999` is an error, not `inf` — JSON cannot
+//!   express the round-trip).
+//! * **DOM bridge** ([`parse_value`]) — builds the shared
+//!   [`Json`](crate::util::json::Json) value iteratively (no
+//!   recursion, so hostile depth can never touch the thread stack
+//!   even with custom limits).
+//! * **Writer** ([`JsonWriter`]) — escaping, comma/colon-managing
+//!   builder.  `f32` row payloads serialize via Rust's shortest
+//!   round-trip `Display`, so every finite activation value survives
+//!   HTTP bit-identically (`parse(fmt(x)) as f32 == x`, asserted by a
+//!   property test); non-finite values become `null` (JSON has no
+//!   spelling for them).
+
+use std::borrow::Cow;
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// Hard bounds the tokenizer enforces while scanning untrusted input.
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    /// Largest accepted input, in bytes (the HTTP layer also bounds
+    /// bodies; this guards direct callers).
+    pub max_bytes: usize,
+    /// Deepest accepted container nesting.
+    pub max_depth: usize,
+    /// Longest accepted string token, in raw (escaped) bytes.
+    pub max_string_bytes: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits {
+            max_bytes: 8 << 20,
+            max_depth: 64,
+            max_string_bytes: 1 << 20,
+        }
+    }
+}
+
+/// One step of the event stream.  String data borrows from the input
+/// whenever the token carries no escapes.
+#[derive(Debug, PartialEq)]
+pub enum Event<'a> {
+    ObjBegin,
+    ObjEnd,
+    ArrBegin,
+    ArrEnd,
+    /// An object member's key (always followed by that member's value
+    /// events — the tokenizer validates the `:`).
+    Key(Cow<'a, str>),
+    Str(Cow<'a, str>),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Frame {
+    Obj,
+    Arr,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Expect {
+    /// A value (top level, after `:`, after `[` or array `,`).
+    Value,
+    /// `}` or the first key of an object.
+    FirstKeyOrEnd,
+    /// `,` (then a key) or `}`.
+    ObjNext,
+    /// `]` or the first value of an array.
+    FirstValueOrEnd,
+    /// `,` (then a value) or `]`.
+    ArrNext,
+    /// One complete top-level value consumed; only whitespace may
+    /// remain.
+    Done,
+}
+
+/// Grammar-validating pull tokenizer (see module docs).  `next()`
+/// yields `Ok(Some(event))` until the single top-level value is
+/// complete, then `Ok(None)` exactly once input is exhausted.
+pub struct Tokenizer<'a> {
+    b: &'a [u8],
+    i: usize,
+    stack: Vec<Frame>,
+    expect: Expect,
+    limits: Limits,
+}
+
+impl<'a> Tokenizer<'a> {
+    pub fn new(b: &'a [u8], limits: &Limits) -> anyhow::Result<Tokenizer<'a>> {
+        anyhow::ensure!(
+            b.len() <= limits.max_bytes,
+            "json input is {} bytes; limit is {}",
+            b.len(),
+            limits.max_bytes
+        );
+        Ok(Tokenizer {
+            b,
+            i: 0,
+            stack: Vec::new(),
+            expect: Expect::Value,
+            limits: *limits,
+        })
+    }
+
+    /// Byte offset of the scan head (error context for callers).
+    pub fn pos(&self) -> usize {
+        self.i
+    }
+
+    fn ws(&mut self) {
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r')
+        {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> anyhow::Result<u8> {
+        self.b.get(self.i).copied().ok_or_else(|| {
+            anyhow::anyhow!("unexpected end of json at byte {}", self.i)
+        })
+    }
+
+    fn bad(&self, what: &str) -> anyhow::Error {
+        match self.b.get(self.i) {
+            Some(c) if c.is_ascii_graphic() => anyhow::anyhow!(
+                "expected {what} at byte {}, found `{}`",
+                self.i,
+                *c as char
+            ),
+            Some(c) => anyhow::anyhow!(
+                "expected {what} at byte {}, found byte 0x{c:02x}",
+                self.i
+            ),
+            None => anyhow::anyhow!(
+                "expected {what} at byte {}, found end of input",
+                self.i
+            ),
+        }
+    }
+
+    /// State after a complete value: back to the enclosing container's
+    /// separator state, or `Done` at top level.
+    fn after_value(&self) -> Expect {
+        match self.stack.last() {
+            None => Expect::Done,
+            Some(Frame::Obj) => Expect::ObjNext,
+            Some(Frame::Arr) => Expect::ArrNext,
+        }
+    }
+
+    fn push(&mut self, f: Frame) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.stack.len() < self.limits.max_depth,
+            "json nesting exceeds the depth limit of {} at byte {}",
+            self.limits.max_depth,
+            self.i
+        );
+        self.stack.push(f);
+        Ok(())
+    }
+
+    /// Next event, `Ok(None)` exactly at clean end of input.
+    #[allow(clippy::should_implement_trait)] // fallible, not an Iterator
+    pub fn next(&mut self) -> anyhow::Result<Option<Event<'a>>> {
+        loop {
+            self.ws();
+            match self.expect {
+                Expect::Done => {
+                    anyhow::ensure!(
+                        self.i == self.b.len(),
+                        "trailing data after the json value at byte {}",
+                        self.i
+                    );
+                    return Ok(None);
+                }
+                Expect::Value => return self.value().map(Some),
+                Expect::FirstKeyOrEnd => {
+                    if self.peek()? == b'}' {
+                        self.i += 1;
+                        self.stack.pop();
+                        self.expect = self.after_value();
+                        return Ok(Some(Event::ObjEnd));
+                    }
+                    return self.key().map(Some);
+                }
+                Expect::ObjNext => match self.peek()? {
+                    b',' => {
+                        self.i += 1;
+                        self.ws();
+                        return self.key().map(Some);
+                    }
+                    b'}' => {
+                        self.i += 1;
+                        self.stack.pop();
+                        self.expect = self.after_value();
+                        return Ok(Some(Event::ObjEnd));
+                    }
+                    _ => return Err(self.bad("`,` or `}`")),
+                },
+                Expect::FirstValueOrEnd => {
+                    if self.peek()? == b']' {
+                        self.i += 1;
+                        self.stack.pop();
+                        self.expect = self.after_value();
+                        return Ok(Some(Event::ArrEnd));
+                    }
+                    self.expect = Expect::Value;
+                    continue;
+                }
+                Expect::ArrNext => match self.peek()? {
+                    b',' => {
+                        self.i += 1;
+                        self.expect = Expect::Value;
+                        continue;
+                    }
+                    b']' => {
+                        self.i += 1;
+                        self.stack.pop();
+                        self.expect = self.after_value();
+                        return Ok(Some(Event::ArrEnd));
+                    }
+                    _ => return Err(self.bad("`,` or `]`")),
+                },
+            }
+        }
+    }
+
+    fn key(&mut self) -> anyhow::Result<Event<'a>> {
+        anyhow::ensure!(self.peek()? == b'"', "{}", self.bad("a string key"));
+        let k = self.string()?;
+        self.ws();
+        anyhow::ensure!(self.peek()? == b':', "{}", self.bad("`:`"));
+        self.i += 1;
+        self.expect = Expect::Value;
+        Ok(Event::Key(k))
+    }
+
+    fn value(&mut self) -> anyhow::Result<Event<'a>> {
+        match self.peek()? {
+            b'{' => {
+                self.i += 1;
+                self.push(Frame::Obj)?;
+                self.expect = Expect::FirstKeyOrEnd;
+                Ok(Event::ObjBegin)
+            }
+            b'[' => {
+                self.i += 1;
+                self.push(Frame::Arr)?;
+                self.expect = Expect::FirstValueOrEnd;
+                Ok(Event::ArrBegin)
+            }
+            b'"' => {
+                let s = self.string()?;
+                self.expect = self.after_value();
+                Ok(Event::Str(s))
+            }
+            b't' => self.lit("true", Event::Bool(true)),
+            b'f' => self.lit("false", Event::Bool(false)),
+            b'n' => self.lit("null", Event::Null),
+            b'-' | b'0'..=b'9' => {
+                let n = self.number()?;
+                self.expect = self.after_value();
+                Ok(Event::Num(n))
+            }
+            _ => Err(self.bad("a json value")),
+        }
+    }
+
+    fn lit(&mut self, s: &str, ev: Event<'a>) -> anyhow::Result<Event<'a>> {
+        anyhow::ensure!(
+            self.b[self.i..].starts_with(s.as_bytes()),
+            "bad literal at byte {}",
+            self.i
+        );
+        self.i += s.len();
+        self.expect = self.after_value();
+        Ok(ev)
+    }
+
+    /// Strict number grammar: `-?(0|[1-9][0-9]*)(\.[0-9]+)?([eE][+-]?
+    /// [0-9]+)?`, rejected when the parsed value overflows `f64`.
+    fn number(&mut self) -> anyhow::Result<f64> {
+        let start = self.i;
+        if self.peek()? == b'-' {
+            self.i += 1;
+        }
+        match self.peek().map_err(|_| self.bad("a digit"))? {
+            b'0' => self.i += 1,
+            b'1'..=b'9' => {
+                while matches!(self.b.get(self.i), Some(b'0'..=b'9')) {
+                    self.i += 1;
+                }
+            }
+            _ => return Err(self.bad("a digit")),
+        }
+        if self.b.get(self.i) == Some(&b'.') {
+            self.i += 1;
+            anyhow::ensure!(
+                matches!(self.b.get(self.i), Some(b'0'..=b'9')),
+                "{}",
+                self.bad("a fraction digit")
+            );
+            while matches!(self.b.get(self.i), Some(b'0'..=b'9')) {
+                self.i += 1;
+            }
+        }
+        if matches!(self.b.get(self.i), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.b.get(self.i), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            anyhow::ensure!(
+                matches!(self.b.get(self.i), Some(b'0'..=b'9')),
+                "{}",
+                self.bad("an exponent digit")
+            );
+            while matches!(self.b.get(self.i), Some(b'0'..=b'9')) {
+                self.i += 1;
+            }
+        }
+        // The slice is ASCII by construction.
+        let s = std::str::from_utf8(&self.b[start..self.i])?;
+        let v: f64 = s
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad number `{s}`: {e}"))?;
+        anyhow::ensure!(
+            v.is_finite(),
+            "number `{s}` at byte {start} overflows f64"
+        );
+        Ok(v)
+    }
+
+    /// Strict string: full UTF-8 validation of raw spans, escape
+    /// decoding with mandatory surrogate pairing, raw control bytes
+    /// rejected.  Borrows when escape-free.
+    fn string(&mut self) -> anyhow::Result<Cow<'a, str>> {
+        debug_assert_eq!(self.b[self.i], b'"');
+        self.i += 1;
+        let start = self.i;
+        let mut owned: Option<String> = None;
+        let mut span = start; // start of the current raw (unescaped) run
+        loop {
+            anyhow::ensure!(
+                self.i - start <= self.limits.max_string_bytes,
+                "string starting at byte {} exceeds the {}-byte limit",
+                start - 1,
+                self.limits.max_string_bytes
+            );
+            let c = self.peek()?;
+            match c {
+                b'"' => {
+                    let tail = self.raw_span(span, self.i)?;
+                    self.i += 1;
+                    return Ok(match owned {
+                        None => Cow::Borrowed(tail),
+                        Some(mut s) => {
+                            s.push_str(tail);
+                            Cow::Owned(s)
+                        }
+                    });
+                }
+                b'\\' => {
+                    let tail = self.raw_span(span, self.i)?;
+                    if owned.is_none() {
+                        owned = Some(String::new());
+                    }
+                    let out = owned.as_mut().expect("just initialized");
+                    out.push_str(tail);
+                    self.i += 1;
+                    self.escape(out)?;
+                    span = self.i;
+                }
+                0x00..=0x1f => {
+                    anyhow::bail!(
+                        "raw control byte 0x{c:02x} in string at byte {} \
+                         (escape it)",
+                        self.i
+                    );
+                }
+                _ => self.i += 1,
+            }
+        }
+    }
+
+    /// Validate one raw (escape-free) span as UTF-8.
+    fn raw_span(&self, from: usize, to: usize) -> anyhow::Result<&'a str> {
+        std::str::from_utf8(&self.b[from..to]).map_err(|e| {
+            anyhow::anyhow!(
+                "invalid utf-8 in string near byte {}: {e}",
+                from + e.valid_up_to()
+            )
+        })
+    }
+
+    /// Decode one escape sequence (the `\` is already consumed).
+    fn escape(&mut self, out: &mut String) -> anyhow::Result<()> {
+        let e = self.peek()?;
+        self.i += 1;
+        match e {
+            b'"' => out.push('"'),
+            b'\\' => out.push('\\'),
+            b'/' => out.push('/'),
+            b'b' => out.push('\u{8}'),
+            b'f' => out.push('\u{c}'),
+            b'n' => out.push('\n'),
+            b'r' => out.push('\r'),
+            b't' => out.push('\t'),
+            b'u' => {
+                let hi = self.hex4()?;
+                let cp = match hi {
+                    0xd800..=0xdbff => {
+                        // High surrogate: a low one must follow.
+                        anyhow::ensure!(
+                            self.b.get(self.i) == Some(&b'\\')
+                                && self.b.get(self.i + 1) == Some(&b'u'),
+                            "unpaired high surrogate \\u{hi:04x} at byte {}",
+                            self.i
+                        );
+                        self.i += 2;
+                        let lo = self.hex4()?;
+                        anyhow::ensure!(
+                            (0xdc00..=0xdfff).contains(&lo),
+                            "\\u{hi:04x} must pair with a low surrogate, \
+                             got \\u{lo:04x}"
+                        );
+                        0x10000 + ((hi - 0xd800) << 10) + (lo - 0xdc00)
+                    }
+                    0xdc00..=0xdfff => anyhow::bail!(
+                        "lone low surrogate \\u{hi:04x} at byte {}",
+                        self.i
+                    ),
+                    cp => cp,
+                };
+                out.push(char::from_u32(cp).ok_or_else(|| {
+                    anyhow::anyhow!("escape \\u decodes to invalid \
+                                     scalar 0x{cp:x}")
+                })?);
+            }
+            _ => anyhow::bail!("bad escape `\\{}` at byte {}",
+                               if e.is_ascii_graphic() {
+                                   (e as char).to_string()
+                               } else {
+                                   format!("x{e:02x}")
+                               },
+                               self.i - 1),
+        }
+        Ok(())
+    }
+
+    fn hex4(&mut self) -> anyhow::Result<u32> {
+        let end = self.i.checked_add(4).filter(|&e| e <= self.b.len());
+        let end = end.ok_or_else(|| {
+            anyhow::anyhow!("truncated \\u escape at byte {}", self.i)
+        })?;
+        let s = std::str::from_utf8(&self.b[self.i..end])
+            .map_err(|_| anyhow::anyhow!("non-ascii \\u escape"))?;
+        // Exactly four hex digits — from_str_radix alone would also
+        // accept a sign (`+041`), which no JSON grammar allows.
+        anyhow::ensure!(
+            s.bytes().all(|b| b.is_ascii_hexdigit()),
+            "bad \\u escape `{s}` at byte {}",
+            self.i
+        );
+        let v = u32::from_str_radix(s, 16).map_err(|_| {
+            anyhow::anyhow!("bad \\u escape `{s}` at byte {}", self.i)
+        })?;
+        self.i = end;
+        Ok(v)
+    }
+}
+
+/// Parse one complete value into the shared DOM, iteratively (hostile
+/// depth can never touch the thread stack).
+pub fn parse_value(b: &[u8], limits: &Limits) -> anyhow::Result<Json> {
+    enum Holder {
+        Arr(Vec<Json>),
+        Obj(std::collections::BTreeMap<String, Json>, Option<String>),
+    }
+    let mut tok = Tokenizer::new(b, limits)?;
+    let mut stack: Vec<Holder> = Vec::new();
+    let mut root: Option<Json> = None;
+    while let Some(ev) = tok.next()? {
+        let done: Option<Json> = match ev {
+            Event::ObjBegin => {
+                stack.push(Holder::Obj(Default::default(), None));
+                None
+            }
+            Event::ArrBegin => {
+                stack.push(Holder::Arr(Vec::new()));
+                None
+            }
+            Event::Key(k) => {
+                match stack.last_mut() {
+                    Some(Holder::Obj(_, slot)) => *slot = Some(k.into_owned()),
+                    _ => unreachable!("tokenizer keys only appear in objects"),
+                }
+                None
+            }
+            Event::ObjEnd | Event::ArrEnd => match stack.pop() {
+                Some(Holder::Obj(m, _)) => Some(Json::Obj(m)),
+                Some(Holder::Arr(a)) => Some(Json::Arr(a)),
+                None => unreachable!("tokenizer balances containers"),
+            },
+            Event::Str(s) => Some(Json::Str(s.into_owned())),
+            Event::Num(n) => Some(Json::Num(n)),
+            Event::Bool(v) => Some(Json::Bool(v)),
+            Event::Null => Some(Json::Null),
+        };
+        if let Some(v) = done {
+            match stack.last_mut() {
+                None => root = Some(v),
+                Some(Holder::Arr(a)) => a.push(v),
+                Some(Holder::Obj(m, slot)) => {
+                    let k = slot.take().expect("key precedes member value");
+                    m.insert(k, v);
+                }
+            }
+        }
+    }
+    root.ok_or_else(|| anyhow::anyhow!("empty json input"))
+}
+
+/// Escaping, comma/colon-managing response builder (see module docs).
+/// Misuse (a value where a key is due, unclosed containers at
+/// `finish`) panics — the wire handlers are the only writers and their
+/// shapes are static.
+#[derive(Default)]
+pub struct JsonWriter {
+    out: String,
+    /// (is_object, item_count) per open container.
+    stack: Vec<(bool, usize)>,
+    /// A key was just written; the next value takes no comma.
+    keyed: bool,
+}
+
+impl JsonWriter {
+    pub fn new() -> JsonWriter {
+        JsonWriter::default()
+    }
+
+    /// Bytes written so far (admission for streaming writers).
+    pub fn len(&self) -> usize {
+        self.out.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.out.is_empty()
+    }
+
+    fn pre_value(&mut self) {
+        if self.keyed {
+            self.keyed = false;
+            return;
+        }
+        if let Some((is_obj, count)) = self.stack.last_mut() {
+            assert!(!*is_obj, "object members need a key first");
+            if *count > 0 {
+                self.out.push(',');
+            }
+            *count += 1;
+        }
+    }
+
+    pub fn begin_obj(&mut self) -> &mut Self {
+        self.pre_value();
+        self.out.push('{');
+        self.stack.push((true, 0));
+        self
+    }
+
+    pub fn end_obj(&mut self) -> &mut Self {
+        let frame = self.stack.pop();
+        assert!(matches!(frame, Some((true, _))), "end_obj without obj");
+        self.out.push('}');
+        self
+    }
+
+    pub fn begin_arr(&mut self) -> &mut Self {
+        self.pre_value();
+        self.out.push('[');
+        self.stack.push((false, 0));
+        self
+    }
+
+    pub fn end_arr(&mut self) -> &mut Self {
+        let frame = self.stack.pop();
+        assert!(matches!(frame, Some((false, _))), "end_arr without arr");
+        self.out.push(']');
+        self
+    }
+
+    pub fn key(&mut self, k: &str) -> &mut Self {
+        let (is_obj, count) = self
+            .stack
+            .last_mut()
+            .expect("key outside any container");
+        assert!(*is_obj, "key inside an array");
+        if *count > 0 {
+            self.out.push(',');
+        }
+        *count += 1;
+        write_escaped(k, &mut self.out);
+        self.out.push(':');
+        self.keyed = true;
+        self
+    }
+
+    pub fn str_val(&mut self, s: &str) -> &mut Self {
+        self.pre_value();
+        write_escaped(s, &mut self.out);
+        self
+    }
+
+    pub fn bool_val(&mut self, v: bool) -> &mut Self {
+        self.pre_value();
+        self.out.push_str(if v { "true" } else { "false" });
+        self
+    }
+
+    pub fn null_val(&mut self) -> &mut Self {
+        self.pre_value();
+        self.out.push_str("null");
+        self
+    }
+
+    pub fn u64_val(&mut self, v: u64) -> &mut Self {
+        self.pre_value();
+        let _ = write!(self.out, "{v}");
+        self
+    }
+
+    pub fn f64_val(&mut self, v: f64) -> &mut Self {
+        self.pre_value();
+        if v.is_finite() {
+            let _ = write!(self.out, "{v}");
+        } else {
+            self.out.push_str("null");
+        }
+        self
+    }
+
+    /// Shortest round-trip serialization: parsing the emitted decimal
+    /// back (through f64, as JSON readers do) recovers `v` bit for
+    /// bit for every finite f32.  Non-finite values emit `null`.
+    pub fn f32_val(&mut self, v: f32) -> &mut Self {
+        self.pre_value();
+        if v.is_finite() {
+            let _ = write!(self.out, "{v}");
+        } else {
+            self.out.push_str("null");
+        }
+        self
+    }
+
+    /// The finished document (panics on unclosed containers).
+    pub fn finish(self) -> String {
+        assert!(self.stack.is_empty(), "unclosed json container");
+        self.out
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Pcg64;
+    use crate::util::prop;
+
+    fn parse(s: &str) -> anyhow::Result<Json> {
+        parse_value(s.as_bytes(), &Limits::default())
+    }
+
+    fn parse_bytes(b: &[u8]) -> anyhow::Result<Json> {
+        parse_value(b, &Limits::default())
+    }
+
+    #[test]
+    fn accepts_the_grammar() {
+        assert_eq!(parse("null").unwrap(), Json::Null);
+        assert_eq!(parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(parse("-0.5e2").unwrap(), Json::Num(-50.0));
+        assert_eq!(parse("\"a\\u0041\"").unwrap(), Json::Str("aA".into()));
+        let j = parse(r#" {"a": [1, 2.5, {"b": "x"}], "c": null} "#).unwrap();
+        assert_eq!(j.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(parse("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(parse("{}").unwrap(), Json::Obj(Default::default()));
+    }
+
+    #[test]
+    fn rejects_malformed_structure() {
+        for bad in [
+            "", "{", "}", "[1,]", "{\"a\":}", "{\"a\"}", "{a:1}",
+            "[1 2]", "12 34", "true false", "nul", "truex", "[,1]",
+            "{\"a\":1,}", "\"unterminated", "[1]]", "{{}}",
+        ] {
+            assert!(parse(bad).is_err(), "must reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_numbers_and_huge_values() {
+        for bad in ["01", "+1", ".5", "1.", "-", "--1", "1e", "1e+",
+                    "0x10", "NaN", "Infinity", "1e999", "-1e999"] {
+            assert!(parse(bad).is_err(), "must reject number: {bad}");
+        }
+        // large-but-representable values parse
+        assert_eq!(parse("1e308").unwrap(), Json::Num(1e308));
+        let long = "123456789012345678901234567890";
+        assert_eq!(parse(long).unwrap(),
+                   Json::Num(1.2345678901234568e29));
+    }
+
+    #[test]
+    fn rejects_malformed_utf8_and_raw_controls() {
+        // invalid start byte, truncated multibyte, overlong encoding,
+        // bare surrogate encoding
+        for bad in [
+            b"\"\xff\"".as_slice(),
+            b"\"\xe2\x82\"".as_slice(),
+            b"\"\xc0\x80\"".as_slice(),
+            b"\"\xed\xa0\x80\"".as_slice(),
+        ] {
+            assert!(parse_bytes(bad).is_err(), "must reject: {bad:?}");
+        }
+        assert!(parse_bytes(b"\"a\x01b\"").is_err(),
+                "raw control chars must be escaped");
+        assert!(parse_bytes(b"\"a\nb\"").is_err(),
+                "raw newline must be escaped");
+        // valid multibyte passes, borrowed or not
+        assert_eq!(parse("\"δ_s ΔW\"").unwrap(), Json::Str("δ_s ΔW".into()));
+    }
+
+    #[test]
+    fn surrogate_escapes_must_pair() {
+        assert_eq!(parse(r#""😀""#).unwrap(),
+                   Json::Str("😀".into()));
+        for bad in [r#""\ud83d""#, r#""\ud83dx""#, r#""\ud83dA""#,
+                    r#""\ude00""#, r#""\u12"#, r#""\uzzzz""#,
+                    r#""\u+041""#, r#""\u-041""#] {
+            assert!(parse(bad).is_err(), "must reject: {bad}");
+        }
+    }
+
+    #[test]
+    fn depth_limit_holds() {
+        let limits = Limits { max_depth: 8, ..Limits::default() };
+        let ok = "[".repeat(8) + &"]".repeat(8);
+        assert!(parse_value(ok.as_bytes(), &limits).is_ok());
+        let deep = "[".repeat(9) + &"]".repeat(9);
+        let err = parse_value(deep.as_bytes(), &limits).unwrap_err();
+        assert!(err.to_string().contains("depth"), "{err}");
+        // hostile depth with huge limits must not touch the thread
+        // stack (iterative DOM build)
+        let hostile = "[".repeat(100_000) + &"]".repeat(100_000);
+        let loose = Limits { max_depth: usize::MAX, ..Limits::default() };
+        assert!(parse_value(hostile.as_bytes(), &loose).is_ok());
+    }
+
+    #[test]
+    fn size_limits_hold() {
+        let limits = Limits { max_bytes: 16, ..Limits::default() };
+        assert!(parse_value(b"[1,2,3]", &limits).is_ok());
+        assert!(parse_value(b"[1,2,3,4,5,6,7,8]", &limits).is_err());
+        let limits = Limits { max_string_bytes: 4, ..Limits::default() };
+        assert!(parse_value(b"\"abcd\"", &limits).is_ok());
+        assert!(parse_value(b"\"abcdef\"", &limits).is_err());
+    }
+
+    #[test]
+    fn truncated_bodies_error_at_every_cut() {
+        let doc = br#"{"adapter":"aA","rows":[[1.5,-2e-3,0]]}"#;
+        for cut in 1..doc.len() {
+            assert!(
+                parse_bytes(&doc[..cut]).is_err(),
+                "prefix of {cut} bytes must not parse"
+            );
+        }
+        assert!(parse_bytes(doc).is_ok());
+    }
+
+    #[test]
+    fn strings_borrow_when_escape_free() {
+        let b = br#"["plain", "esc\n"]"#;
+        let mut tok = Tokenizer::new(b, &Limits::default()).unwrap();
+        assert_eq!(tok.next().unwrap(), Some(Event::ArrBegin));
+        match tok.next().unwrap().unwrap() {
+            Event::Str(Cow::Borrowed(s)) => assert_eq!(s, "plain"),
+            other => panic!("expected borrowed str, got {other:?}"),
+        }
+        match tok.next().unwrap().unwrap() {
+            Event::Str(Cow::Owned(s)) => assert_eq!(s, "esc\n"),
+            other => panic!("expected owned str, got {other:?}"),
+        }
+        assert_eq!(tok.next().unwrap(), Some(Event::ArrEnd));
+        assert_eq!(tok.next().unwrap(), None);
+    }
+
+    #[test]
+    fn f32_round_trips_bit_exactly() {
+        // Random bit patterns (finite only) survive write -> parse ->
+        // `as f32` unchanged — the wire contract for row payloads.
+        prop::for_all("f32 json round-trip", 2000, |rng| {
+            let bits = rng.next_u64() as u32;
+            let v = f32::from_bits(bits);
+            if !v.is_finite() {
+                return;
+            }
+            let mut w = JsonWriter::new();
+            w.f32_val(v);
+            let s = w.finish();
+            let back = match parse(&s).unwrap() {
+                Json::Num(n) => n as f32,
+                other => panic!("{other:?}"),
+            };
+            assert_eq!(back.to_bits(), v.to_bits(),
+                       "{v:?} -> `{s}` -> {back:?}");
+        });
+        // the edge cases worth pinning explicitly
+        for v in [0.0f32, -0.0, f32::MIN_POSITIVE, 1e-45, f32::MAX,
+                  f32::MIN, 1.0 + f32::EPSILON] {
+            let mut w = JsonWriter::new();
+            w.f32_val(v);
+            let back = match parse(&w.finish()).unwrap() {
+                Json::Num(n) => n as f32,
+                other => panic!("{other:?}"),
+            };
+            assert_eq!(back.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn non_finite_writes_null() {
+        let mut w = JsonWriter::new();
+        w.begin_arr()
+            .f32_val(f32::NAN)
+            .f32_val(f32::INFINITY)
+            .f64_val(f64::NEG_INFINITY)
+            .end_arr();
+        assert_eq!(w.finish(), "[null,null,null]");
+    }
+
+    #[test]
+    fn writer_builds_and_escapes_documents() {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("name").str_val("a\"b\\c\nd");
+        w.key("n").u64_val(42);
+        w.key("ok").bool_val(true);
+        w.key("none").null_val();
+        w.key("rows").begin_arr();
+        w.begin_arr().f32_val(1.5).f32_val(-0.25).end_arr();
+        w.begin_arr().end_arr();
+        w.end_arr();
+        w.end_obj();
+        let s = w.finish();
+        assert_eq!(
+            s,
+            "{\"name\":\"a\\\"b\\\\c\\nd\",\"n\":42,\"ok\":true,\
+             \"none\":null,\"rows\":[[1.5,-0.25],[]]}"
+        );
+        // and the strict parser accepts its own writer's output
+        let j = parse(&s).unwrap();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("a\"b\\c\nd"));
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn tokenizer_streams_rows_without_dom() {
+        // The /v1/forward hot path: numbers pulled straight off the
+        // tokenizer into typed vectors.
+        let b = br#"{"rows":[[1,2],[3,4,5]]}"#;
+        let mut tok = Tokenizer::new(b, &Limits::default()).unwrap();
+        assert_eq!(tok.next().unwrap(), Some(Event::ObjBegin));
+        assert!(matches!(tok.next().unwrap(), Some(Event::Key(k))
+                         if k == "rows"));
+        assert_eq!(tok.next().unwrap(), Some(Event::ArrBegin));
+        let mut rows: Vec<Vec<f64>> = Vec::new();
+        loop {
+            match tok.next().unwrap().unwrap() {
+                Event::ArrBegin => rows.push(Vec::new()),
+                Event::Num(n) => rows.last_mut().unwrap().push(n),
+                Event::ArrEnd => {
+                    if rows.last().is_none() {
+                        break;
+                    }
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+            if rows.len() == 2 && rows[1].len() == 3 {
+                break;
+            }
+        }
+        assert_eq!(rows, vec![vec![1.0, 2.0], vec![3.0, 4.0, 5.0]]);
+    }
+
+    #[test]
+    fn property_random_valid_documents_round_trip() {
+        // Generate random DOM values, write them with the (trusted)
+        // util writer, and require the strict parser to accept and
+        // reproduce them.
+        fn gen(rng: &mut Pcg64, depth: usize) -> Json {
+            match prop::int_in(rng, 0, if depth == 0 { 3 } else { 5 }) {
+                0 => Json::Null,
+                1 => Json::Bool(rng.uniform() < 0.5),
+                2 => Json::Num((rng.normal() * 100.0 * 2f64.powi(
+                    prop::int_in(rng, 0, 20) as i32 - 10)).round()
+                    / 1024.0),
+                3 => {
+                    let n = prop::int_in(rng, 0, 8);
+                    Json::Str((0..n).map(|_| {
+                        ['a', 'δ', '"', '\\', '\n', '😀', ' ', '\t']
+                            [prop::int_in(rng, 0, 7)]
+                    }).collect())
+                }
+                4 => Json::Arr((0..prop::int_in(rng, 0, 4))
+                    .map(|_| gen(rng, depth - 1)).collect()),
+                _ => Json::Obj((0..prop::int_in(rng, 0, 4))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect()),
+            }
+        }
+        prop::for_all("strict parser accepts valid docs", 200, |rng| {
+            let doc = gen(rng, 3);
+            let s = doc.to_string();
+            let back = parse(&s).unwrap_or_else(|e| {
+                panic!("strict parser rejected `{s}`: {e}")
+            });
+            assert_eq!(back, doc, "round-trip changed `{s}`");
+        });
+    }
+}

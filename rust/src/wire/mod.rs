@@ -1,0 +1,44 @@
+//! `wire` — the zero-dependency network edge over the serve scheduler.
+//!
+//! CoSA's deployment story (§4 scalability) is many cheap adapters —
+//! a compact core set plus a seed per task — multiplexed over one base
+//! model.  That only pays off if remote clients can reach the engine:
+//! [`serve`](crate::serve) is transport-agnostic, and this subsystem
+//! is its production ingress, built entirely on `std` (the workspace
+//! is offline/vendored — no hyper, no serde):
+//!
+//! * [`json`] — a strict, streaming JSON tokenizer/parser and an
+//!   escaping writer with precise `f32` round-trips for row payloads
+//!   (hardened separately from the trusting `util::json` file codec).
+//! * [`http`] — a minimal HTTP/1.1 server over `std::net`: bounded
+//!   accept/worker model, keep-alive, `Content-Length` framing,
+//!   read/write timeouts, and the 400/404/413/429/503 error mapping.
+//! * [`api`] — the JSON endpoints: `POST /v1/forward` (adapter name +
+//!   per-site rows → per-site output rows, honoring per-request
+//!   deadlines through the scheduler's ticket API),
+//!   `POST /v1/adapters/{name}/load` + `DELETE /v1/adapters/{name}`
+//!   (checkpoint hot load / evict through the shared
+//!   [`AdaptedModel`](crate::model::AdaptedModel)), `GET /v1/stats`,
+//!   and `GET /healthz`.
+//! * [`gateway`] — lifecycle glue: owns the scheduler, warm pre-loads
+//!   `[serve] preload_dir` checkpoints at startup, sheds with `429 +
+//!   Retry-After` when the batch queue or the projection LRU thrashes
+//!   past the `[wire]` watermarks, and drains in-flight tickets on
+//!   shutdown.
+//! * [`bench`] — the loopback wire workload behind `serve-bench
+//!   --wire` (`serving_wire` report section, CI-gated: wire throughput
+//!   must hold ≥ 0.5× the in-process batched engine).
+//!
+//! Knobs live in the `[wire]` config table
+//! ([`config::WireConfig`](crate::config::WireConfig)) with
+//! `COSA_WIRE_*` env overrides; the `serve` CLI subcommand runs a
+//! gateway in the foreground.
+
+pub mod api;
+pub mod bench;
+pub mod gateway;
+pub mod http;
+pub mod json;
+
+pub use gateway::Gateway;
+pub use http::{HttpClient, HttpServer};

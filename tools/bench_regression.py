@@ -42,6 +42,15 @@ Checks:
    all sites must not lose to the same budget statically partitioned
    per site (the multi-site layer's reason to exist).
 
+6. **Wire floors + edge-overhead gate** — the `serving_wire` section
+   (written by serve_bench scenario 4: the single-site fleet served
+   through a loopback HTTP gateway) is checked against the baseline's
+   `serving_wire` object: `throughput_rps` >= floor, `p99_ms` <=
+   ceiling, `errors` == 0 (every bench request must get a 200), and —
+   machine-independent — `wire_vs_inprocess` >=
+   `min_wire_vs_inprocess`: the HTTP + streaming-JSON edge must keep
+   at least half the in-process engine's closed-loop throughput.
+
 A fresh report that exists but is malformed (unparseable JSON, or none
 of the expected sections with rows) is a hard failure — a silently
 empty report must read as "the gate is off", never as "pass".  A
@@ -61,6 +70,7 @@ import sys
 SECTION = "linalg_kernels"
 SERVING_SECTION = "serving"
 MODEL_SECTION = "serving_model"
+WIRE_SECTION = "serving_wire"
 TOLERANCE = 0.20          # max allowed drop below the baseline gflops
 MIN_RATIO = 1.2           # fresh-run packed/tiled single-thread NN+NT floor
 MIN_SERVE_ADAPTERS = 64   # fleet size the serving ratio gate applies to
@@ -101,6 +111,14 @@ def serving_rows(doc):
 
 def model_rows(doc):
     rows = doc.get(MODEL_SECTION, [])
+    if not isinstance(rows, list):
+        return []
+    return [r for r in rows
+            if isinstance(r, dict) and "throughput_rps" in r]
+
+
+def wire_rows(doc):
+    rows = doc.get(WIRE_SECTION, [])
     if not isinstance(rows, list):
         return []
     return [r for r in rows
@@ -297,6 +315,73 @@ def check_serving_model(rows, baseline_doc, baseline_path,
             print(f"  note: {msg}")
 
 
+def check_serving_wire(rows, baseline_doc, baseline_path,
+                       require_acceptance, failures):
+    base = {}
+    if baseline_doc is not None:
+        base = baseline_doc.get(WIRE_SECTION, {})
+    if not isinstance(base, dict):
+        failures.append(f"{baseline_path}: `{WIRE_SECTION}` must be an "
+                        "object of floors, not rows")
+        return
+    tp_floor = base.get("throughput_rps_floor", 0.0)
+    p99_ceiling = base.get("p99_ms_ceiling", float("inf"))
+    min_ratio = base.get("min_wire_vs_inprocess", 0.5)
+    # Shape keys pinning the floors to the committed scenario.
+    want_shape = {k: base[k] for k in ("adapters", "site_m", "site_n",
+                                      "core_a", "core_b", "clients")
+                  if k in base}
+
+    gated_rows = 0
+    for r in rows:
+        tag = (f"serving_wire[{r.get('adapters')} adapters, "
+               f"{r.get('clients')} clients]")
+        shape_ok = all(r.get(k) == v for k, v in want_shape.items())
+        if not shape_ok:
+            print(f"  note: {tag}: not the acceptance workload; floors "
+                  "not applied")
+            continue
+        gated_rows += 1
+        errors = r.get("errors", 0)
+        if errors:
+            failures.append(f"{tag}: {errors} request error(s) — every "
+                            "wire bench request must get a 200")
+        else:
+            print(f"  ok: {tag}: 0 request errors")
+        tp = r.get("throughput_rps", 0.0)
+        if tp < tp_floor:
+            failures.append(f"{tag}: throughput {tp:.0f} req/s < floor "
+                            f"{tp_floor:.0f}")
+        else:
+            print(f"  ok: {tag}: throughput {tp:.0f} req/s "
+                  f"(floor {tp_floor:.0f})")
+        p99 = r.get("p99_ms", 0.0)
+        if p99 > p99_ceiling:
+            failures.append(f"{tag}: p99 {p99:.1f} ms > ceiling "
+                            f"{p99_ceiling:.1f}")
+        else:
+            print(f"  ok: {tag}: p99 {p99:.1f} ms "
+                  f"(ceiling {p99_ceiling:.1f})")
+        # machine-independent: the HTTP + JSON edge must keep at least
+        # min_ratio of the in-process engine's closed-loop throughput
+        ratio = r.get("wire_vs_inprocess", 0.0)
+        line = (f"{tag}: wire/in-process = {ratio:.2f}x "
+                f"(gate {min_ratio}x)")
+        if ratio < min_ratio:
+            failures.append(f"{line} — the wire edge eats too much of "
+                            "the engine's throughput")
+        else:
+            print(f"  ok: {line}")
+    if gated_rows == 0:
+        msg = (f"serving_wire gate matched 0 rows at the baseline shape "
+               f"{want_shape} — the wire acceptance workload "
+               "(serve_bench scenario 4) did not run")
+        if require_acceptance:
+            failures.append(msg)
+        else:
+            print(f"  note: {msg}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default="BENCH_baseline.json")
@@ -332,11 +417,12 @@ def main():
     fresh = kernel_rows(doc)
     serving = serving_rows(doc)
     model = model_rows(doc)
-    if not fresh and not serving and not model:
+    wire = wire_rows(doc)
+    if not fresh and not serving and not model and not wire:
         print(f"bench_regression: FAIL — {fresh_path} exists but has no "
-              f"usable `{SECTION}`, `{SERVING_SECTION}` or "
-              f"`{MODEL_SECTION}` rows; an empty report must not pass "
-              "the gate")
+              f"usable `{SECTION}`, `{SERVING_SECTION}`, "
+              f"`{MODEL_SECTION}` or `{WIRE_SECTION}` rows; an empty "
+              "report must not pass the gate")
         return 1
 
     if args.update:
@@ -394,6 +480,17 @@ def main():
     else:
         print(f"bench_regression: note — no `{MODEL_SECTION}` rows; "
               "model serving checks skipped (CI runs with "
+              "--require-serving)")
+    if wire:
+        check_serving_wire(wire, baseline_doc, args.baseline,
+                           args.require_serving, failures)
+    elif args.require_serving:
+        failures.append(f"{fresh_path}: `{WIRE_SECTION}` section is "
+                        "missing or empty — did serve_bench scenario 4 "
+                        "run?")
+    else:
+        print(f"bench_regression: note — no `{WIRE_SECTION}` rows; "
+              "wire serving checks skipped (CI runs with "
               "--require-serving)")
 
     if failures:

@@ -4,8 +4,9 @@
 //! Unlike `adapter_fwd` (which times the chained adapter products), this
 //! times each GEMM kernel (NN / NT / TN) in isolation, per backend, at
 //! paper shapes, single-threaded (the acceptance metric: packed ≥ 1.5×
-//! tiled on NN/NT) and with auto threads.  A sparse-left section covers
-//! the threaded nonzero-row-index kernel.  Everything lands in the
+//! tiled on NN/NT/TN) and with auto threads.  A deep-k TN section
+//! covers the packed A-operand path at the gradient shape, and a
+//! sparse-left section covers the threaded nonzero-row-index kernel.  Everything lands in the
 //! `linalg_kernels` section of `BENCH_linalg.json`, which
 //! `tools/bench_regression.py` compares against the committed
 //! `BENCH_baseline.json`.
@@ -119,6 +120,37 @@ fn main() {
             push_row(&mut rows_json, "tn", bk.name, bk.threads, m, k, n,
                      r.mean_ns, r.min_ns, r.gflops(flops));
         }
+    }
+
+    // Deep-k TN: the gradient shape (k >> m, n) where the blocked
+    // A-transpose pack pays for itself — the TN kernel streams the
+    // packed A row-major instead of striding the k-major original.
+    // These rows feed the relative packed-vs-tiled TN gate in
+    // tools/bench_regression.py.
+    println!("\n== deep-k tn (packed A operand) ==");
+    let (m, k, n) = (256usize, 3072usize, 64usize);
+    let at_deep = Matrix::gaussian(k, m, 1.0, &mut rng);
+    let b_deep = Matrix::gaussian(k, n, 1.0, &mut rng);
+    let flops = 2.0 * (m * k * n) as f64;
+    for bk in backends() {
+        // serial tiled/packed only: this section exists for the
+        // single-threaded packed-vs-tiled ratio
+        if bk.threads != 1 || bk.name == "reference" {
+            continue;
+        }
+        let be = (bk.make)(bk.threads);
+        let mut out = Matrix::zeros(m, n);
+        let r = bench(
+            &format!("tn[{}/t1] {m}x{k}x{n}", bk.name),
+            300,
+            || {
+                be.gemm_tn_into(&at_deep, &b_deep, &mut out);
+                black_box(out.data[0]);
+            },
+        );
+        r.report_gflops(flops);
+        push_row(&mut rows_json, "tn", bk.name, 1, m, k, n,
+                 r.mean_ns, r.min_ns, r.gflops(flops));
     }
 
     // Sparse-left: a ~10%-dense core against a wide B; thread count is

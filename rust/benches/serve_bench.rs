@@ -1,7 +1,8 @@
 //! Bench: multi-adapter serving throughput and latency — the CI-gated
-//! `serving` and `serving_model` sections of `BENCH_linalg.json`.
+//! `serving`, `serving_model`, `serving_wire`, and `serving_tail`
+//! sections of `BENCH_linalg.json`.
 //!
-//! Three scenarios:
+//! Five scenarios:
 //!
 //! 1. **acceptance** — 64 adapters, one site, Zipf 1.1 popularity,
 //!    firehose injection.  The `batched_vs_sequential` field is the
@@ -23,6 +24,11 @@
 //!    p99 ceiling, zero request errors, and `wire_vs_inprocess` (the
 //!    HTTP + streaming-JSON edge must keep >= 0.5x the engine's
 //!    closed-loop throughput).
+//! 5. **tail acceptance** — 24 sites × 512 adapters at Zipf s=1.0:
+//!    the identical heavy-tail stream through a fused cross-adapter
+//!    server and a `fused = false` per-adapter-segment server.  Gated
+//!    field: `fused_vs_per_adapter >= 1.5` (machine-independent),
+//!    plus conservative throughput / p99 floors.
 //!
 //! Knobs come from the default `[serve]` / `[model]` / `[wire]`
 //! tables; `COSA_SERVE_*` / `COSA_MODEL_*` / `COSA_WIRE_*` env
@@ -30,7 +36,10 @@
 //! the fleet).
 
 use cosa::config::{ModelConfig, WireConfig};
-use cosa::serve::bench::{run, run_model, ModelBenchOpts, ServeBenchOpts};
+use cosa::serve::bench::{
+    run, run_model, run_tail, ModelBenchOpts, ServeBenchOpts,
+    TailBenchOpts,
+};
 use cosa::util::bench::write_bench_json;
 use cosa::util::json::Json;
 use cosa::wire::bench::{run_wire, WireBenchOpts};
@@ -122,4 +131,28 @@ fn main() {
         Err(e) => eprintln!("serve_bench wire scenario failed: {e:#}"),
     }
     write_bench_json("serving_wire", Json::Arr(wire_rows));
+
+    // Scenario 5: the tail acceptance workload — fused cross-adapter
+    // batching vs per-adapter-segment batching on the identical Zipf
+    // s=1.0 stream over 512 adapters.  Batch/wait knobs come from the
+    // TailBenchOpts defaults (the fleet shape is the scenario), but
+    // COSA_SERVE_WORKERS still applies through env_overridden so a
+    // pinned runner can fix parallelism.
+    let tdefaults = TailBenchOpts::default();
+    let topts = TailBenchOpts {
+        cfg: cosa::config::ServeConfig {
+            workers: acceptance.cfg.workers,
+            ..tdefaults.cfg.clone()
+        },
+        ..tdefaults
+    };
+    let mut tail_rows: Vec<Json> = Vec::new();
+    match run_tail(&topts) {
+        Ok(report) => {
+            report.print();
+            tail_rows.push(report.to_json());
+        }
+        Err(e) => eprintln!("serve_bench tail scenario failed: {e:#}"),
+    }
+    write_bench_json("serving_tail", Json::Arr(tail_rows));
 }

@@ -65,6 +65,54 @@ pub fn adapter_forward_into(x: &Matrix, l: &Matrix, r: &Matrix, y: &Matrix,
     ws.recycle_matrix(u);
 }
 
+/// Grouped multi-adapter forward: consecutive row segments of `x`
+/// (`segs[g]` rows each) run against their own `(ls[g], rs[g], ys[g],
+/// alphas[g])` operand set in three grouped block-diagonal NT sweeps
+/// ([`linalg::gemm_grouped_nt_into`]) — one thread fan-out per product
+/// for the whole group instead of one per adapter.  All segments must
+/// share the site shape (m × n) and core dims (a × b): the serving
+/// invariant, one model spec × many adapters.  Bit-identical to
+/// calling [`adapter_forward_into`] once per segment (the grouped
+/// kernel computes each output row from only its own activation row).
+#[allow(clippy::too_many_arguments)]
+pub fn adapter_forward_grouped_into(
+    x: &Matrix,
+    ls: &[&Matrix],
+    rs: &[&Matrix],
+    ys: &[&Matrix],
+    alphas: &[f32],
+    segs: &[usize],
+    ws: &mut Workspace,
+    out: &mut Matrix,
+) {
+    assert!(
+        ls.len() == segs.len()
+            && rs.len() == segs.len()
+            && ys.len() == segs.len()
+            && alphas.len() == segs.len(),
+        "adapter_forward_grouped_into: operand/segment count mismatch"
+    );
+    let b = rs.first().map_or(0, |r| r.rows);
+    let a = ys.first().map_or(0, |y| y.rows);
+    let mut u = ws.take_matrix(x.rows, b);
+    linalg::gemm_grouped_nt_into(x, rs, segs, &mut u);
+    let mut v = ws.take_matrix(x.rows, a);
+    linalg::gemm_grouped_nt_into(&u, ys, segs, &mut v);
+    linalg::gemm_grouped_nt_into(&v, ls, segs, out);
+    // per-segment α, applied exactly like `Matrix::scale` does in the
+    // per-adapter path (unconditional multiply ⇒ identical bits)
+    let m = out.cols;
+    let mut row = 0usize;
+    for (g, &rows) in segs.iter().enumerate() {
+        for o in out.data[row * m..(row + rows) * m].iter_mut() {
+            *o *= alphas[g];
+        }
+        row += rows;
+    }
+    ws.recycle_matrix(v);
+    ws.recycle_matrix(u);
+}
+
 /// Analytic VJP of the adapter forward (host mirror of the Pallas
 /// kernel's Eq. 10 backward): given upstream gradients `g = ∂L/∂o`
 /// (N × m), returns
@@ -201,6 +249,57 @@ mod tests {
             adapter_forward_into(&x, &l, &r, &y, 1.5, &mut ws, &mut out);
         }
         assert_eq!(ws.fresh_allocs(), warm);
+    }
+
+    #[test]
+    fn grouped_forward_is_bit_identical_to_per_adapter_forwards() {
+        let mut rng = Pcg64::new(12);
+        let (m, nn, a, b) = (10usize, 12usize, 4usize, 3usize);
+        let segs = [3usize, 1, 0, 5, 2];
+        let alphas = [2.0f32, 0.5, 1.0, 1.5, 3.0];
+        let total: usize = segs.iter().sum();
+        let x = Matrix::gaussian(total, nn, 1.0, &mut rng);
+        let ls: Vec<Matrix> = segs
+            .iter()
+            .map(|_| Matrix::gaussian(m, a, 1.0, &mut rng))
+            .collect();
+        let rs: Vec<Matrix> = segs
+            .iter()
+            .map(|_| Matrix::gaussian(b, nn, 1.0, &mut rng))
+            .collect();
+        let ys: Vec<Matrix> = segs
+            .iter()
+            .map(|_| Matrix::gaussian(a, b, 1.0, &mut rng))
+            .collect();
+        let (lr, rr, yr): (Vec<&Matrix>, Vec<&Matrix>, Vec<&Matrix>) = (
+            ls.iter().collect(),
+            rs.iter().collect(),
+            ys.iter().collect(),
+        );
+        let mut ws = crate::linalg::Workspace::new();
+        let mut fused = Matrix::zeros(total, m);
+        adapter_forward_grouped_into(&x, &lr, &rr, &yr, &alphas, &segs,
+                                     &mut ws, &mut fused);
+        let mut row = 0usize;
+        for (g, &rows) in segs.iter().enumerate() {
+            if rows == 0 {
+                continue;
+            }
+            let xs = Matrix::from_vec(
+                rows, nn, x.data[row * nn..(row + rows) * nn].to_vec());
+            let mut o = Matrix::zeros(rows, m);
+            adapter_forward_into(&xs, &ls[g], &rs[g], &ys[g], alphas[g],
+                                 &mut ws, &mut o);
+            for (i, (p, q)) in fused.data[row * m..(row + rows) * m]
+                .iter()
+                .zip(&o.data)
+                .enumerate()
+            {
+                assert_eq!(p.to_bits(), q.to_bits(),
+                           "seg {g} elem {i}: {p} vs {q}");
+            }
+            row += rows;
+        }
     }
 
     #[test]

@@ -105,6 +105,24 @@ fn env_num<T: std::str::FromStr>(key: &str, fallback: T) -> T {
     }
 }
 
+/// WFQ weights for the scheduler's three QoS classes (TOML table
+/// `[serve.classes]`).  A class with weight `w` boards up to `w` rows
+/// per deficit-round-robin rotation while backlogged, so relative
+/// weights are relative shares of fused-batch slots under load; every
+/// weight must be >= 1 (0 would stall a class's queue forever).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClassWeights {
+    pub interactive: u64,
+    pub batch: u64,
+    pub background: u64,
+}
+
+impl Default for ClassWeights {
+    fn default() -> Self {
+        ClassWeights { interactive: 8, batch: 4, background: 1 }
+    }
+}
+
 /// Multi-adapter serving engine knobs (TOML table `[serve]`; the
 /// `COSA_SERVE_*` env vars override via [`ServeConfig::env_overridden`]).
 /// Consumed by `serve::Server` and the `serve-bench` CLI subcommand.
@@ -112,7 +130,7 @@ fn env_num<T: std::str::FromStr>(key: &str, fallback: T) -> T {
 pub struct ServeConfig {
     /// Byte budget for the regenerated-projection LRU, in MiB.
     pub cache_mb: f64,
-    /// Max rows batched per adapter before a flush.
+    /// Max rows per fused batch before a flush.
     pub max_batch: usize,
     /// Max time a partial batch waits before flushing, in microseconds.
     pub max_wait_us: u64,
@@ -123,6 +141,13 @@ pub struct ServeConfig {
     /// disabled).  The same directory is the default for the wire
     /// `/v1/adapters/{name}/load` endpoint.
     pub preload_dir: String,
+    /// Cross-adapter fused batching: rows for different adapters ride
+    /// one grouped block-diagonal dispatch.  `false` computes each
+    /// adapter segment independently (the pre-fusion per-adapter path,
+    /// kept as the serving-tail bench baseline).
+    pub fused: bool,
+    /// Per-class WFQ weights (see [`ClassWeights`]).
+    pub classes: ClassWeights,
 }
 
 impl Default for ServeConfig {
@@ -133,6 +158,8 @@ impl Default for ServeConfig {
             max_wait_us: 200,
             workers: 0,
             preload_dir: String::new(),
+            fused: true,
+            classes: ClassWeights::default(),
         }
     }
 }
@@ -149,9 +176,11 @@ impl ServeConfig {
     /// so long-lived processes can be steered per-invocation):
     /// `COSA_SERVE_CACHE_MB`, `COSA_SERVE_MAX_BATCH`,
     /// `COSA_SERVE_MAX_WAIT_US`, `COSA_SERVE_WORKERS`,
-    /// `COSA_SERVE_PRELOAD_DIR`.  Unparseable
-    /// values warn and fall back to the config value, mirroring the
-    /// `COSA_BACKEND` / `COSA_THREADS` behavior.
+    /// `COSA_SERVE_PRELOAD_DIR`, `COSA_SERVE_FUSED`, and the class
+    /// weights `COSA_SERVE_CLASS_INTERACTIVE` /
+    /// `COSA_SERVE_CLASS_BATCH` / `COSA_SERVE_CLASS_BACKGROUND`.
+    /// Unparseable values warn and fall back to the config value,
+    /// mirroring the `COSA_BACKEND` / `COSA_THREADS` behavior.
     pub fn env_overridden(&self) -> ServeConfig {
         let mut out = self.clone();
         out.cache_mb = env_num("COSA_SERVE_CACHE_MB", out.cache_mb);
@@ -160,6 +189,25 @@ impl ServeConfig {
         out.workers = env_num("COSA_SERVE_WORKERS", out.workers);
         if let Ok(dir) = std::env::var("COSA_SERVE_PRELOAD_DIR") {
             out.preload_dir = dir;
+        }
+        out.fused = env_num("COSA_SERVE_FUSED", out.fused);
+        let cw = &mut out.classes;
+        cw.interactive =
+            env_num("COSA_SERVE_CLASS_INTERACTIVE", cw.interactive);
+        cw.batch = env_num("COSA_SERVE_CLASS_BATCH", cw.batch);
+        cw.background =
+            env_num("COSA_SERVE_CLASS_BACKGROUND", cw.background);
+        for (name, w) in [
+            ("COSA_SERVE_CLASS_INTERACTIVE", &mut cw.interactive),
+            ("COSA_SERVE_CLASS_BATCH", &mut cw.batch),
+            ("COSA_SERVE_CLASS_BACKGROUND", &mut cw.background),
+        ] {
+            if *w == 0 {
+                eprintln!(
+                    "warning: {name}=0 would stall the class; using 1"
+                );
+                *w = 1;
+            }
         }
         if out.max_batch == 0 {
             eprintln!("warning: COSA_SERVE_MAX_BATCH=0 is invalid; using 1");
@@ -514,6 +562,20 @@ impl RunConfig {
                          use 0 for auto)");
         s.workers = workers as usize;
         s.preload_dir = doc.str_or("serve.preload_dir", &s.preload_dir);
+        s.fused = doc.bool_or("serve.fused", s.fused);
+        for (key, field) in [
+            ("serve.classes.interactive", &mut s.classes.interactive),
+            ("serve.classes.batch", &mut s.classes.batch),
+            ("serve.classes.background", &mut s.classes.background),
+        ] {
+            let v = doc.i64_or(key, *field as i64);
+            anyhow::ensure!(
+                v >= 1,
+                "{key} must be >= 1 (got {v}; a zero weight would stall \
+                 the class)"
+            );
+            *field = v as u64;
+        }
 
         let w = &mut cfg.wire;
         w.host = doc.str_or("wire.host", &w.host);
@@ -674,13 +736,41 @@ data = 3
     }
 
     #[test]
+    fn serve_fused_and_class_weights_parse_and_validate() {
+        let cfg = RunConfig::from_toml(
+            "[serve]\nfused = false\n[serve.classes]\ninteractive = 10\n\
+             batch = 5\nbackground = 2",
+        )
+        .unwrap();
+        assert!(!cfg.serve.fused);
+        assert_eq!(
+            cfg.serve.classes,
+            ClassWeights { interactive: 10, batch: 5, background: 2 }
+        );
+        // zero/negative weights would stall a class — rejected
+        assert!(RunConfig::from_toml(
+            "[serve.classes]\nbackground = 0").is_err());
+        assert!(RunConfig::from_toml(
+            "[serve.classes]\ninteractive = -2").is_err());
+        // defaults when absent: fused on, 8/4/1 weights
+        let d = RunConfig::from_toml("").unwrap();
+        assert!(d.serve.fused);
+        assert_eq!(d.serve.classes, ClassWeights::default());
+    }
+
+    #[test]
     fn serve_env_overrides_win_and_warn_on_garbage() {
         // Unique var values so a parallel test reading the same keys is
-        // the only possible interference (none does today).
+        // the only possible interference (none does today — this is the
+        // only test that mutates COSA_SERVE_*, so the full-equality
+        // check at the end cannot race another test's vars).
         std::env::set_var("COSA_SERVE_MAX_BATCH", "9");
         std::env::set_var("COSA_SERVE_MAX_WAIT_US", "not-a-number");
         std::env::set_var("COSA_SERVE_CACHE_MB", "-3.0");
         std::env::set_var("COSA_SERVE_PRELOAD_DIR", "env/dir");
+        std::env::set_var("COSA_SERVE_FUSED", "false");
+        std::env::set_var("COSA_SERVE_CLASS_BATCH", "6");
+        std::env::set_var("COSA_SERVE_CLASS_BACKGROUND", "0");
         let cfg = ServeConfig::default().env_overridden();
         assert_eq!(cfg.max_batch, 9, "env wins over the default");
         assert_eq!(cfg.max_wait_us, ServeConfig::default().max_wait_us,
@@ -689,10 +779,21 @@ data = 3
                    "negative cache budget falls back like the TOML path");
         assert_eq!(cfg.preload_dir, "env/dir",
                    "preload dir env wins over the (empty) default");
-        std::env::remove_var("COSA_SERVE_MAX_BATCH");
-        std::env::remove_var("COSA_SERVE_MAX_WAIT_US");
-        std::env::remove_var("COSA_SERVE_CACHE_MB");
-        std::env::remove_var("COSA_SERVE_PRELOAD_DIR");
+        assert!(!cfg.fused, "COSA_SERVE_FUSED=false disables fusion");
+        assert_eq!(cfg.classes.batch, 6);
+        assert_eq!(cfg.classes.background, 1,
+                   "a zero weight clamps to 1 instead of stalling");
+        for key in [
+            "COSA_SERVE_MAX_BATCH",
+            "COSA_SERVE_MAX_WAIT_US",
+            "COSA_SERVE_CACHE_MB",
+            "COSA_SERVE_PRELOAD_DIR",
+            "COSA_SERVE_FUSED",
+            "COSA_SERVE_CLASS_BATCH",
+            "COSA_SERVE_CLASS_BACKGROUND",
+        ] {
+            std::env::remove_var(key);
+        }
         let cfg = ServeConfig::default().env_overridden();
         assert_eq!(cfg, ServeConfig::default());
     }

@@ -18,10 +18,14 @@
 //! * [`Packed`] — packed-panel micro-kernel GEMM: B is packed into
 //!   NR-column strips ([`pack`], buffers from a thread-local
 //!   [`Workspace`] pool so packing is allocation-free after warmup), the
-//!   NN/TN kernels hold an MR×NR register block across KC-deep k-blocks,
-//!   and every hot body runs at a runtime-selected SIMD level ([`simd`]:
-//!   AVX2+FMA clone on capable x86_64, portable auto-vectorized body
-//!   elsewhere; `COSA_SIMD=scalar` forces the portable body).
+//!   NN/TN kernels hold an MR×NR register block across KC-deep k-blocks
+//!   (TN additionally packs A — a one-time blocked transpose — and then
+//!   runs the NN kernel on contiguous rows), and every hot body runs at
+//!   a runtime-selected SIMD level ([`simd`]: AVX2+FMA clone on capable
+//!   x86_64, portable auto-vectorized body elsewhere; `COSA_SIMD=scalar`
+//!   forces the portable body).  Also overrides the grouped
+//!   block-diagonal NT entry ([`Backend::gemm_grouped_nt_into`]) with a
+//!   single fused thread fan-out over all segments.
 //!
 //! Sparse cores use the dedicated [`sparse`] kernels instead of a branch
 //! inside the dense path; the sparse-left kernel threads above the same
@@ -82,6 +86,33 @@ pub trait Backend {
     fn gemm_nt_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix);
     /// `out = aᵀ · b` — a (k×m), b (k×n), out (m×n).
     fn gemm_tn_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix);
+    /// Grouped (block-diagonal) NT: consecutive row segments of `a`
+    /// (`segs[g]` rows each, summing to `a.rows`) each multiply their
+    /// own `bs[g]` (`n×k`), writing the matching rows of `out` (m×n) —
+    /// `out[seg g] = a[seg g] · bs[g]ᵀ`.  Must be **bit-identical** to
+    /// calling [`Backend::gemm_nt_into`] once per segment; the serving
+    /// layer relies on that to fuse same-site rows from different
+    /// adapters into one dispatch.  This default composes exactly that
+    /// way (allocating per-segment temporaries — correct, not fast);
+    /// [`Packed`] overrides it with a fused single-fan-out sweep.
+    fn gemm_grouped_nt_into(&self, a: &Matrix, bs: &[&Matrix],
+                            segs: &[usize], out: &mut Matrix) {
+        shape_grouped_nt(a, bs, segs, out);
+        let (k, n) = (a.cols, out.cols);
+        let mut row = 0usize;
+        for (g, &rows) in segs.iter().enumerate() {
+            if rows == 0 {
+                continue;
+            }
+            let asub = Matrix::from_vec(
+                rows, k, a.data[row * k..(row + rows) * k].to_vec());
+            let mut osub = Matrix::zeros(rows, n);
+            self.gemm_nt_into(&asub, bs[g], &mut osub);
+            out.data[row * n..(row + rows) * n]
+                .copy_from_slice(&osub.data);
+            row += rows;
+        }
+    }
     /// `y += alpha · x` (serial default shared by every backend — the
     /// compiler auto-vectorizes this shape; override only to specialize).
     fn axpy(&self, alpha: f32, x: &[f32], y: &mut [f32]) {
@@ -130,6 +161,29 @@ pub(crate) fn shape_tn(a: &Matrix, b: &Matrix, out: &Matrix) {
     assert_eq!((out.rows, out.cols), (a.cols, b.cols),
                "gemm_tn out shape: have {}x{}, want {}x{}",
                out.rows, out.cols, a.cols, b.cols);
+}
+
+pub(crate) fn shape_grouped_nt(a: &Matrix, bs: &[&Matrix],
+                               segs: &[usize], out: &Matrix) {
+    assert_eq!(bs.len(), segs.len(),
+               "gemm_grouped_nt: {} B operands vs {} segments",
+               bs.len(), segs.len());
+    let total: usize = segs.iter().sum();
+    assert_eq!(total, a.rows,
+               "gemm_grouped_nt: segments cover {total} rows, a has {}",
+               a.rows);
+    assert_eq!(out.rows, a.rows,
+               "gemm_grouped_nt out rows: have {}, want {}",
+               out.rows, a.rows);
+    for (g, b) in bs.iter().enumerate() {
+        assert_eq!(b.cols, a.cols,
+                   "gemm_grouped_nt segment {g}: ({}x{})·({}x{})ᵀ",
+                   a.rows, a.cols, b.rows, b.cols);
+        assert_eq!(b.rows, out.cols,
+                   "gemm_grouped_nt segment {g}: b has {} rows, out has \
+                    {} cols",
+                   b.rows, out.cols);
+    }
 }
 
 /// Backend selector.
@@ -297,6 +351,14 @@ pub fn gemm_tn_into(a: &Matrix, b: &Matrix, out: &mut Matrix) {
     dispatch(|bk| bk.gemm_tn_into(a, b, out))
 }
 
+/// Grouped block-diagonal NT on the active backend (see
+/// [`Backend::gemm_grouped_nt_into`]): row segment `g` of `a`
+/// multiplies `bs[g]ᵀ` into the matching rows of `out`.
+pub fn gemm_grouped_nt_into(a: &Matrix, bs: &[&Matrix], segs: &[usize],
+                            out: &mut Matrix) {
+    dispatch(|bk| bk.gemm_grouped_nt_into(a, bs, segs, out))
+}
+
 /// `y += alpha · x` on the active backend.
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     dispatch(|bk| bk.axpy(alpha, x, y))
@@ -455,8 +517,9 @@ mod tests {
     #[test]
     fn packed_crosses_kc_block_boundary() {
         // k around KC=256 (and 2×KC±1) exercises the multi-k-block
-        // accumulation path of nn_body/tn_body — the path every paper
-        // shape (k ≥ 512) runs but the small property dims never reach.
+        // accumulation path of nn_body (which TN also runs, on the
+        // transpose-packed A) — the path every paper shape (k ≥ 512)
+        // runs but the small property dims never reach.
         let mut rng = Pcg64::new(29);
         for k in [255usize, 256, 257, 511, 513] {
             let (m, n) = (5, 19);
@@ -479,6 +542,96 @@ mod tests {
                              &format!("{ctx} tn"));
             }
         }
+    }
+
+    #[test]
+    fn grouped_nt_is_bit_identical_to_per_segment_calls() {
+        // The fused-batching acceptance property: grouped output ==
+        // composing today's per-adapter NT batches, to the bit, on both
+        // the serial and the forced-parallel packed paths.  Layouts
+        // cross chunk boundaries and include zero-length segments and
+        // single-row tails (the Zipf-tail serving shape).
+        let mut rng = Pcg64::new(31);
+        let layouts: [&[usize]; 5] = [&[4], &[1, 1, 1, 1, 1], &[3, 0, 5],
+                                      &[0, 0, 2], &[7, 1, 4, 9]];
+        for segs in layouts {
+            let m: usize = segs.iter().sum();
+            let (k, n) = (13, 11);
+            let a = Matrix::gaussian(m, k, 1.0, &mut rng);
+            let bs: Vec<Matrix> = segs
+                .iter()
+                .map(|_| Matrix::gaussian(n, k, 1.0, &mut rng))
+                .collect();
+            let brefs: Vec<&Matrix> = bs.iter().collect();
+            for packed in [Packed::new(1), forced_parallel_packed()] {
+                let mut fused = Matrix::zeros(m, n);
+                packed.gemm_grouped_nt_into(&a, &brefs, segs, &mut fused);
+                let mut composed = Matrix::zeros(m, n);
+                let mut row = 0;
+                for (g, &rows) in segs.iter().enumerate() {
+                    if rows == 0 {
+                        continue;
+                    }
+                    let asub = Matrix::from_vec(
+                        rows, k, a.data[row * k..(row + rows) * k].to_vec());
+                    let mut osub = Matrix::zeros(rows, n);
+                    packed.gemm_nt_into(&asub, &bs[g], &mut osub);
+                    composed.data[row * n..(row + rows) * n]
+                        .copy_from_slice(&osub.data);
+                    row += rows;
+                }
+                for (i, (x, y)) in
+                    fused.data.iter().zip(&composed.data).enumerate()
+                {
+                    assert_eq!(x.to_bits(), y.to_bits(),
+                               "segs {segs:?} elem {i}: {x} vs {y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn grouped_nt_matches_reference_on_every_backend() {
+        prop::for_all("grouped nt == composed nt", 15, |rng| {
+            let g = prop::int_in(rng, 1, 4);
+            let segs: Vec<usize> =
+                (0..g).map(|_| prop::int_in(rng, 0, 6)).collect();
+            let m: usize = segs.iter().sum();
+            let k = prop::int_in(rng, 1, 12);
+            let n = prop::int_in(rng, 1, 10);
+            let a = Matrix::gaussian(m, k, 1.0, rng);
+            let bs: Vec<Matrix> = segs
+                .iter()
+                .map(|_| Matrix::gaussian(n, k, 1.0, rng))
+                .collect();
+            let brefs: Vec<&Matrix> = bs.iter().collect();
+            let mut want = Matrix::zeros(m, n);
+            let mut row = 0;
+            for (gi, &rows) in segs.iter().enumerate() {
+                for i in 0..rows {
+                    for j in 0..n {
+                        let mut s = 0.0f32;
+                        for kk in 0..k {
+                            s += a.data[(row + i) * k + kk]
+                                * bs[gi].data[j * k + kk];
+                        }
+                        want.data[(row + i) * n + j] = s;
+                    }
+                }
+                row += rows;
+            }
+            for bk in [&Reference as &dyn Backend, &Tiled::new(1),
+                       &forced_parallel(), &Packed::new(1),
+                       &forced_parallel_packed()] {
+                // stale output: every live row must be overwritten
+                let mut out = Matrix::from_vec(m, n, vec![9.0; m * n]);
+                bk.gemm_grouped_nt_into(&a, &brefs, &segs, &mut out);
+                assert_close(&out, &want, 1e-4, "grouped nt");
+            }
+            let mut out = Matrix::zeros(m, n);
+            gemm_grouped_nt_into(&a, &brefs, &segs, &mut out);
+            assert_close(&out, &want, 1e-4, "grouped nt dispatch");
+        });
     }
 
     #[test]

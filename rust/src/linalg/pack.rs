@@ -1,4 +1,4 @@
-//! B-panel packing for the packed micro-kernel backend.
+//! Operand packing for the packed micro-kernel backend.
 //!
 //! The NN/TN micro-kernels in [`super::packed`] read B through
 //! [`NR`]-column strips laid out contiguously in k: strip `s` holds
@@ -8,6 +8,14 @@
 //! (one cache line every other k-step) instead of striding across B's
 //! full row width, and the zero padding lets the kernel stay branch-free
 //! at the column remainder.
+//!
+//! The TN kernel additionally packs its A operand ([`pack_a_tn`]): a
+//! `k×mo` A is transposed once into a row-major `mo×k` image, after
+//! which `aᵀ·B` is exactly `A'·B` on contiguous rows and the whole TN
+//! entry point reuses the NN micro-kernel.  The old TN body read an
+//! A *column* per output row — `mo`-strided loads repeated for every
+//! NR-column strip of B — while the one-time blocked transpose touches
+//! each A element once and every kernel read after it is dense.
 //!
 //! ## Allocation contract
 //!
@@ -82,6 +90,49 @@ pub fn with_packed_b<R>(
     r
 }
 
+/// Transpose row-major `a` (`k×mo`) into row-major `at` (`mo×k`) so the
+/// TN kernel can run the NN micro-kernel on contiguous rows.  Blocked
+/// 32×32 so both the source rows and the destination rows stay
+/// cache-resident across a block.  `at` must hold at least `k·mo`
+/// elements; every element is written (scratch draws are fine).
+pub fn pack_a_tn(a: &[f32], k: usize, mo: usize, at: &mut [f32]) {
+    assert!(at.len() >= k * mo, "pack buffer too small");
+    const TB: usize = 32;
+    let mut i0 = 0;
+    while i0 < k {
+        let iend = (i0 + TB).min(k);
+        let mut j0 = 0;
+        while j0 < mo {
+            let jend = (j0 + TB).min(mo);
+            for i in i0..iend {
+                for j in j0..jend {
+                    at[j * k + i] = a[i * mo + j];
+                }
+            }
+            j0 = jend;
+        }
+        i0 = iend;
+    }
+}
+
+/// Run `f` against the transposed image of `a` (`k×mo` → row-major
+/// `mo×k`), drawing and returning the buffer from the thread-local
+/// pool.  Nests inside [`with_packed_b`] (the borrow is released
+/// before `f` runs).
+pub fn with_packed_a_tn<R>(
+    a: &[f32],
+    k: usize,
+    mo: usize,
+    f: impl FnOnce(&[f32]) -> R,
+) -> R {
+    // Scratch draw: pack_a_tn writes all k·mo elements.
+    let mut buf = PACK_POOL.with(|ws| ws.borrow_mut().take_scratch(k * mo));
+    pack_a_tn(a, k, mo, &mut buf);
+    let r = f(&buf);
+    PACK_POOL.with(|ws| ws.borrow_mut().recycle(buf));
+    r
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -108,6 +159,36 @@ mod tests {
         let s1 = &packed[2 * NR..]; // strip 1: k rows of NR
         assert_eq!(&s1[..4], &b[16..20]);
         assert_eq!(&s1[NR..NR + 4], &b[36..40]);
+    }
+
+    #[test]
+    fn a_transpose_pack_is_exact_at_odd_shapes() {
+        // shapes crossing the 32-block boundary in both dimensions
+        for (k, mo) in [(1usize, 1usize), (3, 5), (31, 33), (40, 64),
+                        (65, 7)] {
+            let a: Vec<f32> = (0..k * mo).map(|v| v as f32).collect();
+            let mut at = vec![-1.0f32; k * mo];
+            pack_a_tn(&a, k, mo, &mut at);
+            for i in 0..k {
+                for j in 0..mo {
+                    assert_eq!(at[j * k + i], a[i * mo + j],
+                               "({k}x{mo}) at [{i},{j}]");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn a_transpose_pool_reuses_buffers_after_warmup() {
+        let a = vec![2.0f32; 24 * 24];
+        with_packed_a_tn(&a, 24, 24, |at| assert_eq!(at.len(), 24 * 24));
+        let warm = pool_fresh_allocs();
+        for _ in 0..8 {
+            with_packed_a_tn(&a, 24, 24, |at| {
+                assert_eq!(at[0], 2.0);
+            });
+        }
+        assert_eq!(pool_fresh_allocs(), warm, "steady-state pack allocated");
     }
 
     #[test]

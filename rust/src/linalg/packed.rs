@@ -10,6 +10,21 @@
 //!   at the column remainder.  Pack buffers come from a thread-local
 //!   [`Workspace`](super::Workspace) pool — no fresh allocations after
 //!   warmup.
+//! * **Packed A for TN** ([`super::pack::pack_a_tn`]): the TN entry
+//!   point transposes A once (blocked, on the dispatching thread) and
+//!   then runs the NN micro-kernel on contiguous rows — the strided
+//!   per-strip A-column reads of the old dedicated TN body are gone,
+//!   and accumulation order (ascending k per KC-block) is unchanged,
+//!   so results stay bit-identical.
+//! * **Grouped (block-diagonal) NT** (`gemm_grouped_nt_into`): one
+//!   activation batch against K per-segment B operands in a single
+//!   thread fan-out — consecutive row segments of A each multiply
+//!   their own B.  Because the NT kernel computes every output row
+//!   from only its own A row, the fused sweep is bit-identical to K
+//!   independent `gemm_nt_into` calls; it exists so the serving layer
+//!   can fuse same-site rows from *different* adapters into one
+//!   dispatch (one `plan_threads`, one scoped-thread spawn for the
+//!   whole group instead of per adapter).
 //! * **A register-blocked micro-kernel**: [`MR`]×[`NR`] outputs (4 rows ×
 //!   two 8-lanes) accumulate entirely in registers across a [`KC`]-deep
 //!   k-block before touching `out` — 8 independent accumulator vectors,
@@ -33,7 +48,9 @@
 use crate::linalg::pack::{self, NR};
 use crate::linalg::simd::{self, F32x8};
 use crate::linalg::tiled::{parallel_rows, plan_threads, DEFAULT_MIN_PAR_FLOPS};
-use crate::linalg::{shape_nn, shape_nt, shape_tn, Backend};
+use crate::linalg::{
+    shape_grouped_nt, shape_nn, shape_nt, shape_tn, Backend,
+};
 use crate::math::matrix::Matrix;
 
 /// Micro-kernel height (output rows held in registers).
@@ -64,13 +81,8 @@ impl Packed {
 // Kernel bodies.  Each is written once, generic over `FMA`, marked
 // `#[inline(always)]` so it folds into the `#[target_feature]` clones
 // below and vectorizes with their instruction set (see `simd` docs).
-//
-// nn_body and tn_body deliberately duplicate their block structure
-// instead of sharing it through an A-element accessor closure: the
-// whole dispatch scheme depends on every body inlining completely into
-// its feature clone, and an extra indirection layer is exactly the kind
-// of thing that quietly breaks that.  Fixes to the shared remainder /
-// padding logic must be applied to both.
+// There is no dedicated TN body: `gemm_tn_into` transposes A via
+// `pack::pack_a_tn` and runs `nn_body` on the contiguous result.
 // ---------------------------------------------------------------------
 
 /// Accumulator spill: `out[i0..i0+mr) × [j0..j0+jw) += acc`.
@@ -137,56 +149,6 @@ fn nn_body<const FMA: bool>(
                     p += NR;
                     for r in 0..MR {
                         let av = F32x8::splat(a[base[r] + kk]);
-                        acc[r][0] = acc[r][0].fma::<FMA>(av, b0);
-                        acc[r][1] = acc[r][1].fma::<FMA>(av, b1);
-                    }
-                }
-                store_acc(&acc, out, i0, mr, j0, jw, n);
-                i0 += MR;
-            }
-        }
-        kb = kend;
-    }
-}
-
-/// TN: `out rows [row0, row0+rows) of aᵀ·B` — `a` is the full k×mo
-/// matrix (TN reads A columns, which are strided), B pre-packed k×n.
-#[inline(always)]
-fn tn_body<const FMA: bool>(
-    a: &[f32],
-    packed: &[f32],
-    out: &mut [f32],
-    row0: usize,
-    rows: usize,
-    mo: usize,
-    k: usize,
-    n: usize,
-) {
-    out.fill(0.0);
-    let strips = n.div_ceil(NR);
-    let mut kb = 0;
-    while kb < k {
-        let kend = (kb + KC).min(k);
-        for s in 0..strips {
-            let j0 = s * NR;
-            let jw = NR.min(n - j0);
-            let panel = &packed[(s * k + kb) * NR..(s * k + kend) * NR];
-            let mut i0 = 0;
-            while i0 < rows {
-                let mr = MR.min(rows - i0);
-                let mut cols = [0usize; MR];
-                for (r, co) in cols.iter_mut().enumerate() {
-                    *co = row0 + i0 + r.min(mr - 1);
-                }
-                let mut acc = [[F32x8::ZERO; 2]; MR];
-                let mut p = 0;
-                for kk in kb..kend {
-                    let b0 = F32x8::load(&panel[p..p + 8]);
-                    let b1 = F32x8::load(&panel[p + 8..p + 16]);
-                    p += NR;
-                    let arow = &a[kk * mo..(kk + 1) * mo];
-                    for r in 0..MR {
-                        let av = F32x8::splat(arow[cols[r]]);
                         acc[r][0] = acc[r][0].fma::<FMA>(av, b0);
                         acc[r][1] = acc[r][1].fma::<FMA>(av, b1);
                     }
@@ -296,15 +258,6 @@ unsafe fn nn_avx2fma(a: &[f32], packed: &[f32], out: &mut [f32],
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 #[target_feature(enable = "fma")]
-unsafe fn tn_avx2fma(a: &[f32], packed: &[f32], out: &mut [f32],
-                     row0: usize, rows: usize, mo: usize, k: usize,
-                     n: usize) {
-    tn_body::<true>(a, packed, out, row0, rows, mo, k, n);
-}
-
-#[cfg(target_arch = "x86_64")]
-#[target_feature(enable = "avx2")]
-#[target_feature(enable = "fma")]
 unsafe fn nt_avx2fma(a: &[f32], b: &[f32], out: &mut [f32], rows: usize,
                      k: usize, n: usize) {
     nt_body::<true>(a, b, out, rows, k, n);
@@ -319,18 +272,6 @@ fn nn_kernel(a: &[f32], packed: &[f32], out: &mut [f32], rows: usize,
             nn_avx2fma(a, packed, out, rows, k, n)
         },
         _ => nn_body::<false>(a, packed, out, rows, k, n),
-    }
-}
-
-fn tn_kernel(a: &[f32], packed: &[f32], out: &mut [f32], row0: usize,
-             rows: usize, mo: usize, k: usize, n: usize) {
-    match simd::level() {
-        #[cfg(target_arch = "x86_64")]
-        simd::Level::Avx2Fma => unsafe {
-            // SAFETY: level() returned Avx2Fma ⇒ CPU has avx2+fma.
-            tn_avx2fma(a, packed, out, row0, rows, mo, k, n)
-        },
-        _ => tn_body::<false>(a, packed, out, row0, rows, mo, k, n),
     }
 }
 
@@ -404,10 +345,58 @@ impl Backend for Packed {
         let (ad, bd) = (&a.data, &b.data);
         let od = &mut out.data;
         pack::with_packed_b(bd, k, n, |packed| {
-            parallel_rows(od, mo, n, nt, |row0, chunk| {
-                let rows_here = chunk.len() / n;
-                tn_kernel(ad, packed, chunk, row0, rows_here, mo, k, n);
+            // Transpose A once into row-major mo×k; aᵀ·B on strided
+            // columns becomes A'·B on contiguous rows — the NN kernel
+            // verbatim, with identical accumulation order.
+            pack::with_packed_a_tn(ad, k, mo, |at| {
+                parallel_rows(od, mo, n, nt, |row0, chunk| {
+                    let rows_here = chunk.len() / n;
+                    nn_kernel(&at[row0 * k..(row0 + rows_here) * k],
+                              packed, chunk, rows_here, k, n);
+                });
             });
+        });
+    }
+
+    fn gemm_grouped_nt_into(&self, a: &Matrix, bs: &[&Matrix],
+                            segs: &[usize], out: &mut Matrix) {
+        shape_grouped_nt(a, bs, segs, out);
+        let (m, k) = (a.rows, a.cols);
+        let n = out.cols;
+        if m == 0 || n == 0 {
+            return;
+        }
+        let nt = plan_threads(self.threads, self.min_par_flops, m,
+                              m * k.max(1) * n);
+        let mut starts = Vec::with_capacity(segs.len());
+        let mut acc = 0usize;
+        for &s in segs {
+            starts.push(acc);
+            acc += s;
+        }
+        let ad = &a.data;
+        // One fan-out for the whole group.  Each chunk walks the
+        // segments it overlaps; the NT kernel computes every output
+        // row from only its own A row, so splitting a segment across
+        // chunks (or fusing many segments into one sweep) is
+        // bit-identical to per-segment gemm_nt_into calls.
+        parallel_rows(&mut out.data, m, n, nt, |row0, chunk| {
+            let rows_here = chunk.len() / n;
+            let end = row0 + rows_here;
+            let mut seg = starts.partition_point(|&s| s <= row0) - 1;
+            let mut r = row0;
+            while r < end {
+                let seg_end = starts[seg] + segs[seg];
+                if seg_end <= r {
+                    seg += 1; // skip zero-length segments
+                    continue;
+                }
+                let take = seg_end.min(end) - r;
+                let co = (r - row0) * n;
+                nt_kernel(&ad[r * k..(r + take) * k], &bs[seg].data,
+                          &mut chunk[co..co + take * n], take, k, n);
+                r += take;
+            }
         });
     }
 }

@@ -178,9 +178,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 }
 
 /// `serve-bench`: drive the multi-adapter serving engine under
-/// synthetic Zipf workloads and write the `serving` (single-site) and
-/// `serving_model` (whole adapted model) sections of the canonical
-/// `BENCH_linalg.json`.  Knob precedence, highest first: CLI flags,
+/// synthetic Zipf workloads and write the `serving` (single-site),
+/// `serving_model` (whole adapted model), and opt-in `serving_wire` /
+/// `serving_tail` (fused vs per-adapter batching) sections of the
+/// canonical `BENCH_linalg.json`.  Knob precedence, highest first: CLI flags,
 /// `COSA_SERVE_*` / `COSA_MODEL_*` env, `[serve]` / `[model]` config
 /// tables.  The preset worker hint (`ServeConfig::resolved`) is
 /// deliberately NOT applied: it describes serving a *model preset's*
@@ -299,6 +300,34 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         cosa::util::bench::write_bench_json(
             "serving_wire", Json::Arr(vec![wreport.to_json()]));
     }
+
+    // Tail scenario (opt-in: --tail): the heavy-tail fused-batching
+    // acceptance workload — the identical Zipf s=1.0 stream over a
+    // 512-adapter fleet through a fused server and a `fused = false`
+    // per-adapter-segment server -> `serving_tail` section.  The fleet
+    // shape has its own flags (the default IS the acceptance
+    // scenario); engine knobs reuse the scenario-1 CLI/env overrides.
+    if args.bool("tail") {
+        use cosa::serve::bench::{run_tail, TailBenchOpts};
+        let tdefaults = TailBenchOpts::default();
+        let topts = TailBenchOpts {
+            adapters: args.usize("tail-adapters", tdefaults.adapters),
+            requests: args.usize("tail-requests", tdefaults.requests),
+            zipf: args.f64("tail-zipf", tdefaults.zipf),
+            seed: args.u64("seed", tdefaults.seed),
+            cfg: cosa::config::ServeConfig {
+                workers: serve.workers,
+                ..tdefaults.cfg.clone()
+            },
+            ..tdefaults
+        };
+        anyhow::ensure!(topts.adapters >= 1,
+                        "--tail-adapters must be >= 1");
+        let treport = run_tail(&topts)?;
+        treport.print();
+        cosa::util::bench::write_bench_json(
+            "serving_tail", Json::Arr(vec![treport.to_json()]));
+    }
     Ok(())
 }
 
@@ -340,6 +369,7 @@ USAGE: cosa-repro <subcommand> [flags]
           [--site-m M --site-n N --core-a A --core-b B --seed S]
           [--sites N --model-requests N --model-cache-mb F]
           [--skip-model] [--wire --wire-requests N --wire-clients N]
+          [--tail --tail-adapters N --tail-requests N --tail-zipf S]
           multi-adapter serving benchmarks: the single-site scenario
           (batched scheduler vs sequential per-request forward ->
           `serving` section of BENCH_linalg.json) plus the whole-model
@@ -349,6 +379,9 @@ USAGE: cosa-repro <subcommand> [flags]
           env provide the defaults; --skip-model runs only the
           single-site scenario; --wire adds the loopback HTTP gateway
           scenario (closed-loop clients vs the in-process engine ->
-          `serving_wire` section)
+          `serving_wire` section); --tail adds the heavy-tail fused
+          cross-adapter batching scenario (fused vs per-adapter
+          batching on an identical Zipf s=1.0 stream ->
+          `serving_tail` section)
   list    show artifacts (build with `make artifacts`)
 ";

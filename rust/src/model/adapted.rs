@@ -26,7 +26,8 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::adapters::cosa::{
-    adapter_forward, adapter_forward_into, regen_l, regen_r,
+    adapter_forward, adapter_forward_grouped_into, adapter_forward_into,
+    regen_l, regen_r,
 };
 use crate::linalg::Workspace;
 use crate::math::matrix::Matrix;
@@ -583,6 +584,98 @@ impl AdaptedModel {
         Ok(self.install(&plan, regen))
     }
 
+    /// [`AdaptedModel::plan`] for every adapter of a fused cross-adapter
+    /// batch — one call under the lock describes **all** cold adapters
+    /// at once, so a scheduler worker takes one lock round-trip per
+    /// fused batch instead of one per adapter.  Per-name errors
+    /// (unknown adapters) come back in place so one bad segment cannot
+    /// sink its batchmates.
+    pub fn plan_many(
+        &mut self,
+        names: &[&str],
+    ) -> Vec<anyhow::Result<ModelPlan>> {
+        names.iter().map(|n| self.plan(n)).collect()
+    }
+
+    /// [`AdaptedModel::install`] for a fused batch: one `(plan, regen)`
+    /// pair per adapter segment, handles returned in order — again one
+    /// locked call for the whole batch.
+    pub fn install_many(
+        &mut self,
+        plans: &[ModelPlan],
+        regens: Vec<Vec<(Option<Matrix>, Option<Matrix>)>>,
+    ) -> Vec<ModelHandles> {
+        assert_eq!(plans.len(), regens.len(), "one regen set per plan");
+        plans
+            .iter()
+            .zip(regens)
+            .map(|(p, r)| self.install(p, r))
+            .collect()
+    }
+
+    /// Fused cross-adapter forward: row segment `g` of every `xs[i]`
+    /// belongs to adapter `names[g]` (`segs[g]` rows, stacked in
+    /// order), and all K adapters run through each site in **one**
+    /// grouped block-diagonal dispatch
+    /// ([`adapter_forward_grouped_into`]) instead of K per-adapter
+    /// sweeps.  Bit-identical to slicing the rows apart and composing
+    /// [`AdaptedModel::forward_into`] per adapter (asserted in tests).
+    /// Duplicate names are fine (their segments just share handles);
+    /// any unknown name fails the whole call before outputs are
+    /// touched.
+    pub fn forward_grouped_into(
+        &mut self,
+        names: &[&str],
+        segs: &[usize],
+        xs: &[Matrix],
+        ws: &mut Workspace,
+        outs: &mut [Matrix],
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            names.len() == segs.len(),
+            "{} adapters for {} row segments",
+            names.len(),
+            segs.len()
+        );
+        let nsites = self.spec.len();
+        anyhow::ensure!(
+            xs.len() == nsites && outs.len() == nsites,
+            "model `{}` has {} sites; got {} inputs / {} outputs",
+            self.spec.name,
+            nsites,
+            xs.len(),
+            outs.len()
+        );
+        let total: usize = segs.iter().sum();
+        let mut handles = Vec::with_capacity(names.len());
+        for name in names {
+            let plan = self.plan(name)?;
+            let regen = plan.no_regen();
+            handles.push(self.install(&plan, regen));
+        }
+        let alphas: Vec<f32> = handles.iter().map(|h| h.alpha).collect();
+        for (s, (x, out)) in xs.iter().zip(outs.iter_mut()).enumerate() {
+            anyhow::ensure!(
+                x.rows == total && out.rows == total,
+                "site {s}: {} input rows / {} output rows for {} \
+                 segment rows",
+                x.rows,
+                out.rows,
+                total
+            );
+            let ls: Vec<&Matrix> =
+                handles.iter().map(|h| h.sites[s].l.as_ref()).collect();
+            let rs: Vec<&Matrix> =
+                handles.iter().map(|h| h.sites[s].r.as_ref()).collect();
+            let ys: Vec<&Matrix> =
+                handles.iter().map(|h| h.sites[s].y.as_ref()).collect();
+            adapter_forward_grouped_into(
+                x, &ls, &rs, &ys, &alphas, segs, ws, out,
+            );
+        }
+        Ok(())
+    }
+
     /// Workspace-backed multi-site forward: `xs[i]` (`N × n_i`) runs
     /// through site `i` into `outs[i]` (`N × m_i`) — exactly one
     /// `adapter_forward_into` per site, so the result is bit-identical
@@ -717,6 +810,88 @@ mod tests {
                 assert_eq!(p.to_bits(), q.to_bits());
             }
         }
+    }
+
+    #[test]
+    fn grouped_forward_is_bit_identical_to_per_adapter_batches() {
+        // The fused-batching acceptance criterion: one grouped forward
+        // over K adapters' stacked row segments == slicing the rows
+        // apart and composing today's per-adapter forward_into calls,
+        // bit for bit — zero-row segments included.
+        let spec = test_spec(3);
+        let mut model = AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+        for (i, name) in ["a", "b", "c", "d"].iter().enumerate() {
+            add_adapter(&mut model, name, 7 + i as u64);
+        }
+        let names = ["a", "b", "c", "d"];
+        let segs = [2usize, 1, 0, 3];
+        let total: usize = segs.iter().sum();
+        let xs = site_inputs(&spec, total, 5);
+        let mut ws = Workspace::new();
+        let mut outs: Vec<Matrix> = spec
+            .sites
+            .iter()
+            .map(|s| Matrix::zeros(total, s.shape.m))
+            .collect();
+        model
+            .forward_grouped_into(&names, &segs, &xs, &mut ws, &mut outs)
+            .unwrap();
+
+        let mut row = 0usize;
+        for (g, &rows) in segs.iter().enumerate() {
+            if rows == 0 {
+                continue;
+            }
+            let sub_xs: Vec<Matrix> = xs
+                .iter()
+                .map(|x| Matrix::from_vec(
+                    rows,
+                    x.cols,
+                    x.data[row * x.cols..(row + rows) * x.cols].to_vec(),
+                ))
+                .collect();
+            let mut sub_outs: Vec<Matrix> = spec
+                .sites
+                .iter()
+                .map(|s| Matrix::zeros(rows, s.shape.m))
+                .collect();
+            model
+                .forward_into(names[g], &sub_xs, &mut ws, &mut sub_outs)
+                .unwrap();
+            for (s, so) in sub_outs.iter().enumerate() {
+                let m = spec.sites[s].shape.m;
+                let fused = &outs[s].data[row * m..(row + rows) * m];
+                for (e, (p, q)) in fused.iter().zip(&so.data).enumerate() {
+                    assert_eq!(p.to_bits(), q.to_bits(),
+                               "adapter {g} site {s} elem {e} diverged");
+                }
+            }
+            row += rows;
+        }
+
+        // an unknown name fails the whole call before outputs move
+        assert!(model
+            .forward_grouped_into(&["a", "ghost"], &[1, 1],
+                                  &site_inputs(&spec, 2, 6), &mut ws,
+                                  &mut outs)
+            .is_err());
+    }
+
+    #[test]
+    fn plan_many_reports_per_name_errors_in_place() {
+        let mut model = AdaptedModel::new(test_spec(2), 1 << 20).unwrap();
+        add_adapter(&mut model, "a", 7);
+        let plans = model.plan_many(&["a", "ghost", "a"]);
+        assert!(plans[0].is_ok());
+        assert!(plans[1].is_err(), "unknown name must error in place");
+        assert!(plans[2].is_ok(), "a bad segment must not sink batchmates");
+        let ok: Vec<ModelPlan> =
+            plans.into_iter().filter_map(|p| p.ok()).collect();
+        let regens: Vec<_> = ok.iter().map(|p| p.no_regen()).collect();
+        let hs = model.install_many(&ok, regens);
+        assert_eq!(hs.len(), 2);
+        // duplicate names in one batch share cache entries
+        assert!(Arc::ptr_eq(&hs[0].sites[0].l, &hs[1].sites[0].l));
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Synthetic open-loop serving workloads — the drivers behind the
 //! `serve-bench` CLI subcommand and `benches/serve_bench.rs`.
 //!
-//! Two scenario families:
+//! Three scenario families:
 //!
 //! * [`run`] — the PR-3 single-site workload (`serving` report
 //!   section): one site, many adapters, Zipf-skewed popularity.  Each
@@ -21,6 +21,15 @@
 //!   lose to static partitioning (it amortizes residency across
 //!   heterogeneous sites; the paper's seed-regenerable projections are
 //!   what make the cache cheap to refill at all).
+//! * [`run_tail`] — the tail-heavy fused-batching workload
+//!   (`serving_tail` section): 24 sites × 512 adapters at Zipf s=1.0,
+//!   where most adapters see a handful of requests.  The identical
+//!   request stream runs through a **fused** server (cross-adapter
+//!   rows share grouped block-diagonal GEMM batches) and a
+//!   `fused = false` server that emulates the old per-adapter-segment
+//!   batching; CI gates `fused_vs_per_adapter >= 1.5`
+//!   machine-independently (two walls of the same binary on the same
+//!   box).
 //!
 //! Reported per scenario: wall-clock throughput, p50/p95/p99 request
 //! latency (submit -> worker completion), mean batch occupancy,
@@ -646,6 +655,270 @@ pub fn run_model(opts: &ModelBenchOpts) -> anyhow::Result<ModelBenchReport> {
     })
 }
 
+/// Tail-heavy fused-batching workload description (always firehose).
+/// The scenario this measures: a long Zipf tail of adapters, where the
+/// old per-adapter batcher degenerates to single-row batches (a tail
+/// adapter rarely has a queue-mate of its own id) while the fused
+/// batcher boards rows from *different* adapters into one grouped
+/// block-diagonal GEMM sweep.
+#[derive(Clone, Debug)]
+pub struct TailBenchOpts {
+    pub spec: ModelSpec,
+    pub adapters: usize,
+    pub requests: usize,
+    pub zipf: f64,
+    pub seed: u64,
+    /// `cfg.fused` is overridden per measured variant (true for the
+    /// fused pass, false for the per-adapter-segment baseline).
+    pub cfg: ServeConfig,
+}
+
+impl Default for TailBenchOpts {
+    fn default() -> Self {
+        // The acceptance scenario: 24 heterogeneous sites × 512
+        // adapters at Zipf s=1.0 — a heavy tail where most adapters
+        // see a handful of requests.  The cache holds the whole
+        // projection working set (~130 MiB), so the comparison
+        // isolates batching policy rather than cache behavior.
+        TailBenchOpts {
+            spec: ModelSpec::synthetic(
+                24, SiteShape { m: 96, n: 96 }, 16, 12),
+            adapters: 512,
+            requests: 2048,
+            zipf: 1.0,
+            seed: 17,
+            cfg: ServeConfig {
+                cache_mb: 256.0,
+                max_batch: 32,
+                max_wait_us: 500,
+                ..ServeConfig::default()
+            },
+        }
+    }
+}
+
+/// One measured tail scenario (a `serving_tail` bench row).
+#[derive(Clone, Debug)]
+pub struct TailBenchReport {
+    pub opts: TailBenchOpts,
+    pub workers: usize,
+    pub fused_wall_s: f64,
+    pub per_adapter_wall_s: f64,
+    /// Fused throughput (model-requests/sec).
+    pub throughput_rps: f64,
+    pub per_adapter_throughput_rps: f64,
+    /// The acceptance metric: fused / per-adapter throughput on the
+    /// identical request stream.
+    pub fused_vs_per_adapter: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub per_adapter_p99_ms: f64,
+    pub mean_batch_rows: f64,
+    pub per_adapter_mean_batch_rows: f64,
+    pub cache: CacheStats,
+}
+
+impl TailBenchReport {
+    pub fn to_json(&self) -> Json {
+        let o = &self.opts;
+        obj(vec![
+            ("sites", o.spec.len().into()),
+            ("adapters", o.adapters.into()),
+            ("requests", o.requests.into()),
+            ("zipf", o.zipf.into()),
+            ("max_batch", o.cfg.max_batch.into()),
+            ("max_wait_us", (o.cfg.max_wait_us as usize).into()),
+            ("workers", self.workers.into()),
+            ("cache_mb", o.cfg.cache_mb.into()),
+            ("fused_wall_s", self.fused_wall_s.into()),
+            ("per_adapter_wall_s", self.per_adapter_wall_s.into()),
+            ("throughput_rps", self.throughput_rps.into()),
+            (
+                "per_adapter_throughput_rps",
+                self.per_adapter_throughput_rps.into(),
+            ),
+            ("fused_vs_per_adapter", self.fused_vs_per_adapter.into()),
+            ("mean_ms", self.mean_ms.into()),
+            ("p50_ms", self.p50_ms.into()),
+            ("p95_ms", self.p95_ms.into()),
+            ("p99_ms", self.p99_ms.into()),
+            ("per_adapter_p99_ms", self.per_adapter_p99_ms.into()),
+            ("mean_batch_rows", self.mean_batch_rows.into()),
+            (
+                "per_adapter_mean_batch_rows",
+                self.per_adapter_mean_batch_rows.into(),
+            ),
+            ("cache_hits", (self.cache.hits as usize).into()),
+            ("cache_misses", (self.cache.misses as usize).into()),
+            ("cache_evictions", (self.cache.evictions as usize).into()),
+        ])
+    }
+
+    pub fn print(&self) {
+        let o = &self.opts;
+        println!(
+            "serve-tail[{} sites x {} adapters, zipf {:.2}, {} reqs, \
+             batch<= {}, {} workers, cache {:.0} MiB]",
+            o.spec.len(), o.adapters, o.zipf, o.requests,
+            o.cfg.max_batch, self.workers, o.cfg.cache_mb
+        );
+        println!(
+            "  per-adapter  {:>9.0} req/s  ({:.3} s wall)  p99 {:.3} ms  \
+             mean batch rows {:.2}",
+            self.per_adapter_throughput_rps, self.per_adapter_wall_s,
+            self.per_adapter_p99_ms, self.per_adapter_mean_batch_rows
+        );
+        println!(
+            "  fused        {:>9.0} req/s  ({:.3} s wall)  p99 {:.3} ms  \
+             mean batch rows {:.2}  => {:.2}x",
+            self.throughput_rps, self.fused_wall_s, self.p99_ms,
+            self.mean_batch_rows, self.fused_vs_per_adapter
+        );
+        println!(
+            "  fused latency ms  mean {:.3}  p50 {:.3}  p95 {:.3}  \
+             p99 {:.3}",
+            self.mean_ms, self.p50_ms, self.p95_ms, self.p99_ms
+        );
+    }
+}
+
+/// Submit the whole Zipf sequence to `server` firehose-style and wait
+/// every ticket out.  Returns (wall seconds, sorted latencies ms,
+/// mean batch rows).
+fn drive_tail(
+    server: &Server,
+    names: &[String],
+    seq: &[usize],
+    xs_pool: &[Vec<Matrix>],
+) -> anyhow::Result<(f64, Vec<f64>, f64)> {
+    let t0 = Instant::now();
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(seq.len());
+    for (j, &idx) in seq.iter().enumerate() {
+        let xs: Vec<Vec<f32>> = xs_pool[j % X_POOL]
+            .iter()
+            .map(|m| m.data.clone())
+            .collect();
+        tickets.push(server.submit(&names[idx], xs)?);
+    }
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(seq.len());
+    for t in tickets {
+        let submitted = t.submitted;
+        let resp = t.wait()?;
+        black_box(resp.output()[0]);
+        lat_ms.push(
+            resp.done.duration_since(submitted).as_secs_f64() * 1e3,
+        );
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let (batches, rows) = server.batch_stats();
+    lat_ms.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    Ok((wall_s, lat_ms, rows as f64 / (batches as f64).max(1.0)))
+}
+
+/// Run one tail-heavy scenario: the identical Zipf request stream
+/// through a fused server and a per-adapter-segment (`fused = false`)
+/// server over two identically built models.  `opts.cfg` is taken as
+/// final except for `fused`, which this function owns.
+pub fn run_tail(opts: &TailBenchOpts) -> anyhow::Result<TailBenchReport> {
+    anyhow::ensure!(opts.adapters > 0, "need at least one adapter");
+    anyhow::ensure!(opts.requests > 0, "need at least one request");
+    opts.spec.validate()?;
+    let spec = &opts.spec;
+    let budget = opts.cfg.cache_budget_bytes();
+    let seed_of = |i: usize| opts.seed.wrapping_add(1 + i as u64);
+    let names: Vec<String> =
+        (0..opts.adapters).map(|i| format!("adp{i:03}")).collect();
+
+    // Both variants serve bit-identically built models; the build is
+    // deterministic in `opts.seed`.
+    let build = || -> anyhow::Result<AdaptedModel> {
+        let mut rng = Pcg64::new(opts.seed);
+        let mut m = AdaptedModel::new(spec.clone(), budget)?;
+        for (i, name) in names.iter().enumerate() {
+            let cores: Vec<Matrix> = spec
+                .sites
+                .iter()
+                .map(|s| Matrix::gaussian(s.a, s.b, 0.02, &mut rng))
+                .collect();
+            m.insert_synthetic(name, seed_of(i), 2.0, cores)?;
+        }
+        Ok(m)
+    };
+
+    // Shared Zipf sequence + activation pool, from a stream distinct
+    // from the model build.
+    let mut rng = Pcg64::with_stream(opts.seed, 1);
+    let zipf = Zipf::new(opts.adapters, opts.zipf);
+    let seq: Vec<usize> =
+        (0..opts.requests).map(|_| zipf.sample(&mut rng)).collect();
+    let xs_pool: Vec<Vec<Matrix>> = (0..X_POOL)
+        .map(|_| {
+            spec.sites
+                .iter()
+                .map(|s| {
+                    Matrix::from_vec(1, s.shape.n,
+                                     rng.normal_vec(s.shape.n, 1.0))
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut walls = [0.0f64; 2]; // [per-adapter, fused]
+    let mut lats: [Vec<f64>; 2] = [Vec::new(), Vec::new()];
+    let mut mean_rows = [0.0f64; 2];
+    let mut workers = 0usize;
+    let mut cache = CacheStats::default();
+    for (slot, fused) in [(0usize, false), (1usize, true)] {
+        let mut model = build()?;
+        // Warm every adapter once so both passes start from the same
+        // fully resident cache state.
+        for name in &names {
+            black_box(model.forward(name, &xs_pool[0])?);
+        }
+        model.reset_cache_stats();
+        let cfg = ServeConfig { fused, ..opts.cfg.clone() };
+        let server = Server::new(model, &cfg);
+        workers = server.worker_count();
+        let model_arc = server.model();
+        let (wall, lat, rows) =
+            drive_tail(&server, &names, &seq, &xs_pool)?;
+        walls[slot] = wall;
+        lats[slot] = lat;
+        mean_rows[slot] = rows;
+        drop(server);
+        if fused {
+            let m = model_arc.lock().unwrap_or_else(|p| p.into_inner());
+            cache = m.cache_stats();
+        }
+    }
+
+    let reqs = opts.requests as f64;
+    let per_tp = reqs / walls[0].max(1e-9);
+    let fused_tp = reqs / walls[1].max(1e-9);
+    let fused_lat = &lats[1];
+    let mean_ms =
+        fused_lat.iter().sum::<f64>() / (fused_lat.len() as f64).max(1.0);
+    Ok(TailBenchReport {
+        opts: opts.clone(),
+        workers,
+        fused_wall_s: walls[1],
+        per_adapter_wall_s: walls[0],
+        throughput_rps: fused_tp,
+        per_adapter_throughput_rps: per_tp,
+        fused_vs_per_adapter: fused_tp / per_tp.max(1e-9),
+        mean_ms,
+        p50_ms: percentile(fused_lat, 0.50),
+        p95_ms: percentile(fused_lat, 0.95),
+        p99_ms: percentile(fused_lat, 0.99),
+        per_adapter_p99_ms: percentile(&lats[0], 0.99),
+        mean_batch_rows: mean_rows[1],
+        per_adapter_mean_batch_rows: mean_rows[0],
+        cache,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -706,6 +979,37 @@ mod tests {
         let j = rep.to_json();
         assert_eq!(j.get("requests").unwrap().as_usize(), Some(48));
         assert!(j.get("batched_vs_sequential").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn tail_smoke_scenario_reports_consistent_numbers() {
+        let opts = TailBenchOpts {
+            spec: ModelSpec::synthetic(
+                3, SiteShape { m: 16, n: 12 }, 4, 3),
+            adapters: 6,
+            requests: 48,
+            zipf: 1.0,
+            seed: 5,
+            cfg: ServeConfig {
+                cache_mb: 4.0,
+                max_batch: 8,
+                max_wait_us: 300,
+                workers: 2,
+                ..ServeConfig::default()
+            },
+        };
+        let rep = run_tail(&opts).unwrap();
+        assert!(rep.throughput_rps > 0.0);
+        assert!(rep.per_adapter_throughput_rps > 0.0);
+        assert!(rep.fused_vs_per_adapter > 0.0);
+        assert!(rep.p50_ms <= rep.p95_ms && rep.p95_ms <= rep.p99_ms);
+        assert!(rep.mean_batch_rows >= 1.0);
+        assert!(rep.per_adapter_mean_batch_rows >= 1.0);
+        let j = rep.to_json();
+        assert_eq!(j.get("sites").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("adapters").unwrap().as_usize(), Some(6));
+        assert_eq!(j.get("zipf").unwrap().as_f64(), Some(1.0));
+        assert!(j.get("fused_vs_per_adapter").unwrap().as_f64().is_some());
     }
 
     #[test]

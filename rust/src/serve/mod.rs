@@ -18,16 +18,26 @@
 //!   `(seed, tensor, dims)`.  Evicting and re-materializing an adapter
 //!   is bit-identical by construction.
 //! * [`scheduler`] — the request scheduler: whole-model requests (one
-//!   activation row per site) enter a queue, are grouped **per adapter
-//!   id** into batches under a max-batch / max-wait policy — with
-//!   per-request deadlines (expired requests answer with a timeout
-//!   error instead of occupying compute) and a drop-on-cancel ticket
-//!   API — and run on a worker pool where each worker owns a
-//!   [`linalg::Workspace`](crate::linalg::Workspace) and drives one
-//!   `adapter_forward_into` per site.  The matmul hot path performs no
-//!   allocations at steady state, and batch outputs come from the
-//!   shared [`outpool::OutputPool`], recycled across workers when the
-//!   last ticket of a batch drops them.
+//!   activation row per site) enter class-tiered queues
+//!   ([`RequestClass`]: interactive / batch / background under
+//!   weighted fair queuing, so sustained interactive load can delay
+//!   but never starve background work) and board **fused cross-adapter
+//!   batches** under a max-batch / max-wait policy — all requests of
+//!   one server share site shapes, so rows from *different* adapters
+//!   ride one batch, segmented by adapter and executed with one
+//!   grouped block-diagonal GEMM sweep per site
+//!   ([`linalg::gemm_grouped_nt_into`](crate::linalg::gemm_grouped_nt_into)).
+//!   Per-request deadlines (expired requests answer with a timeout
+//!   error instead of occupying fused-batch slots) and a
+//!   drop-on-cancel ticket API are layered on top, and the worker pool
+//!   plans/installs all cold adapters of a batch in two model-lock
+//!   round-trips (`plan_many` / `install_many`).  Each worker owns a
+//!   [`linalg::Workspace`](crate::linalg::Workspace); the matmul hot
+//!   path performs no allocations at steady state, and batch outputs
+//!   come from the shared [`outpool::OutputPool`], recycled across
+//!   workers when the last ticket of a batch drops them.  Per-class
+//!   submission/latency accounting (p99) is surfaced in
+//!   [`SchedulerStats::per_class`].
 //! * [`bench`] — the synthetic open-loop workload drivers behind the
 //!   `serve-bench` CLI subcommand and `benches/serve_bench.rs`:
 //!   [`bench::run`] (single-site `serving` section: Zipf adapter
@@ -52,5 +62,6 @@ pub mod scheduler;
 pub use crate::model::{AdaptedModel, ModelSpec, SiteShape, SiteSpec};
 pub use registry::AdapterRegistry;
 pub use scheduler::{
-    CancelHandle, Response, SchedulerStats, Server, Ticket,
+    CancelHandle, ClassStats, RequestClass, Response, SchedulerStats,
+    Server, Ticket,
 };

@@ -1,9 +1,10 @@
-//! Request scheduler: queue -> per-adapter batches -> worker pool.
+//! Request scheduler: class-fair queue -> fused cross-adapter batches
+//! -> worker pool.
 //!
 //! ## Data flow
 //!
 //! ```text
-//! submit() --ingress--> batcher --batches--> workers --reply--> Ticket
+//! submit() --ingress--> WFQ batcher --fused batches--> workers --> Ticket
 //! ```
 //!
 //! * **submit** accepts one whole-model request — one activation row
@@ -12,53 +13,119 @@
 //!   keep the PR-3 ergonomics via [`Server::submit_row`].  Requests may
 //!   carry a **deadline** ([`Server::submit_with_deadline`]): an
 //!   expired request is answered with a timeout error instead of
-//!   occupying compute in a batch, and the batcher flushes its group
-//!   early so the timeout answer arrives near the deadline rather than
-//!   at `max_wait`.  A [`Ticket::cancel_handle`] drops the request the
+//!   occupying compute in a batch, and the batcher flushes early so the
+//!   timeout answer arrives near the deadline rather than at
+//!   `max_wait`.  A [`Ticket::cancel_handle`] drops the request the
 //!   same way from any thread; cancelled requests are flushed by a
 //!   bounded batcher sweep (`CANCEL_SWEEP`), so the "cancelled" answer
-//!   also never waits out a long `max_wait`.
-//! * The **batcher** thread drains the ingress queue and groups pending
-//!   requests **by adapter id** — a batch never mixes adapters.  A
-//!   group flushes when it reaches `max_batch` rows or when a member
-//!   reaches its effective wait bound (`min(arrival + max_wait,
-//!   deadline)`).
+//!   also never waits out a long `max_wait`.  Every submit surface may
+//!   also carry a **QoS class** ([`Server::submit_classed`]).
+//! * The **batcher** thread groups pending requests **by site shape**,
+//!   not by adapter id — and since submit-time validation pins every
+//!   accepted request to the served model's site shapes, the whole
+//!   pending set is one fusable group: rows bound for *different
+//!   adapters* ride one fused batch.  What the class queues decide is
+//!   the *boarding order*: deficit-weighted fair queuing over the three
+//!   [`RequestClass`] tiers (weights from `[serve.classes]`), so
+//!   interactive rows board first in proportion to their weight while a
+//!   backlogged background class still boards at least one row per
+//!   rotation — between two consecutive background rows at most
+//!   `w_interactive + w_batch` rows from the other classes board
+//!   (asserted by the starvation test).  A batch flushes when it
+//!   reaches `max_batch` rows or when a member reaches its effective
+//!   wait bound (`min(arrival + max_wait, deadline)`).
 //! * **Workers** (count resolved through the same `plan_threads` helper
-//!   the compute backends share) pull whole batches, take one
-//!   [`AdaptedModel::plan`] under a brief model lock — cache *misses*
-//!   for **every cold site of the request** are described by that one
-//!   call and regenerated outside the lock, then installed under a
-//!   second brief lock — so a cold or thrashing projection cache never
-//!   serializes the pool.  The worker then assembles one batch matrix
-//!   per site in worker-owned [`Workspace`] buffers and runs one
-//!   `adapter_forward_into` per site.  The matmul hot path is
-//!   allocation-free at steady state (the Workspace contract), and the
-//!   per-site batch *outputs* come from the shared
+//!   the compute backends share) pull whole fused batches, segment them
+//!   by adapter in first-seen order, and resolve **all** adapters of
+//!   the batch through one [`AdaptedModel::plan_many`] under a brief
+//!   model lock — cache misses for every cold site of every segment are
+//!   described by that one call and regenerated outside the lock, then
+//!   installed under a second brief lock
+//!   ([`AdaptedModel::install_many`]) — so a cold or thrashing
+//!   projection cache never serializes the pool, and a K-adapter batch
+//!   costs two lock round-trips instead of 2·K.  The worker then
+//!   assembles one segment-stacked batch matrix per site in
+//!   worker-owned [`Workspace`] buffers and runs one **grouped
+//!   block-diagonal** `adapter_forward_grouped_into` per site — one
+//!   micro-kernel dispatch sweep over every adapter's row segment,
+//!   bit-identical to composing per-adapter batches.  The matmul hot
+//!   path is allocation-free at steady state (the Workspace contract),
+//!   and the per-site batch *outputs* come from the shared
 //!   [`OutputPool`](super::outpool::OutputPool) — recycled across
 //!   workers when the last ticket of a batch drops them — so a batch
-//!   allocates nothing after warmup, end to end.
+//!   allocates nothing after warmup, end to end.  Setting
+//!   `[serve] fused = false` keeps the ingress/batcher identical but
+//!   computes each adapter segment independently — the pre-fusion
+//!   per-adapter path, kept as the serving-tail bench baseline.
 //!
-//! Batching is what buys multi-adapter throughput: a single-row forward
-//! re-reads the whole per-site `L`/`R`/`Y` working set per request,
-//! while a k-row batch amortizes that traffic k ways across **all
-//! sites at once** (`benches/serve_bench.rs` measures both the
-//! single-site and the multi-site scenario; CI gates them).
+//! Fused batching is what buys multi-adapter throughput at heavy-tail
+//! adapter popularity: per-adapter grouping leaves most batches at one
+//! or two rows once requests spread over hundreds of cold adapters,
+//! re-paying per-batch overheads (locks, pool draws, dispatch) per row,
+//! while the fused batch amortizes them across every adapter at once
+//! (`benches/serve_bench.rs` measures the tail-heavy scenario; CI gates
+//! the fused-vs-per-adapter ratio machine-independently).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::adapters::cosa::{adapter_forward_into, regen_l, regen_r};
+use crate::adapters::cosa::{
+    adapter_forward_grouped_into, adapter_forward_into, regen_l, regen_r,
+};
 use crate::config::ServeConfig;
 use crate::linalg::tiled::plan_threads;
 use crate::linalg::Workspace;
 use crate::math::matrix::Matrix;
-use crate::model::AdaptedModel;
+use crate::model::{AdaptedModel, ModelHandles};
 
 use super::outpool::{OutputPool, PooledOut};
+
+/// QoS class of one request — the weighted-fair-queuing tier its row
+/// boards fused batches under (see module docs).  `Interactive` is the
+/// default on every legacy submit surface.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RequestClass {
+    #[default]
+    Interactive,
+    Batch,
+    Background,
+}
+
+impl RequestClass {
+    /// Every class, scheduling order (index == internal queue index).
+    pub const ALL: [RequestClass; 3] = [
+        RequestClass::Interactive,
+        RequestClass::Batch,
+        RequestClass::Background,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RequestClass::Interactive => "interactive",
+            RequestClass::Batch => "batch",
+            RequestClass::Background => "background",
+        }
+    }
+
+    /// Parse a wire-facing class name.  `None` on anything unknown —
+    /// the gateway turns that into a 400, never a silent default.
+    pub fn parse(s: &str) -> Option<RequestClass> {
+        match s {
+            "interactive" => Some(RequestClass::Interactive),
+            "batch" => Some(RequestClass::Batch),
+            "background" => Some(RequestClass::Background),
+            _ => None,
+        }
+    }
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
 
 /// One answered request.  `outs` holds the whole batch's per-site
 /// output matrices, shared by every ticket of the batch; `row` is this
@@ -66,7 +133,8 @@ use super::outpool::{OutputPool, PooledOut};
 pub struct Response {
     pub outs: Arc<Vec<PooledOut>>,
     pub row: usize,
-    /// Adapter id the batch ran under (every row of `outs` used it).
+    /// Adapter id this request's row segment ran under (a fused batch
+    /// mixes adapters; `row` always lands inside its own segment).
     pub adapter: Arc<str>,
     /// Rows in the batch this request rode in.
     pub batch_rows: usize,
@@ -162,18 +230,69 @@ struct Request {
     /// Absolute expiry; `None` = never.
     deadline: Option<Instant>,
     cancelled: Arc<AtomicBool>,
+    class: RequestClass,
     _inflight: InflightGuard,
 }
 
+/// One fused batch: rows for possibly many adapters, in boarding order
+/// (the worker segments them by adapter, first-seen order).
 struct Batch {
-    adapter: Arc<str>,
     reqs: Vec<Request>,
+}
+
+/// Buckets of the per-class latency histogram — log₂ µs up to ~9 days,
+/// far past any latency a request can live to see.
+const HIST_BUCKETS: usize = 40;
+
+/// Lock-free log₂-bucketed latency histogram (µs): bucket `b` holds
+/// samples in `[2^(b-1), 2^b)`, so the p99 readout is exact to a factor
+/// of two — plenty for a tail gate — and recording stays one atomic
+/// increment on the reply path.
+struct LatencyHist {
+    counts: Box<[AtomicU64]>,
+}
+
+impl Default for LatencyHist {
+    fn default() -> LatencyHist {
+        LatencyHist {
+            counts: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+}
+
+impl LatencyHist {
+    fn record(&self, d: Duration) {
+        let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
+        let b = (64 - us.leading_zeros() as usize).min(HIST_BUCKETS - 1);
+        self.counts[b].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Upper edge of the bucket holding the 99th percentile; 0 until a
+    /// sample lands.
+    fn p99_us(&self) -> u64 {
+        let counts: Vec<u64> =
+            self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = (total * 99).div_ceil(100);
+        let mut cum = 0u64;
+        for (b, c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return if b == 0 { 0 } else { (1u64 << b) - 1 };
+            }
+        }
+        (1u64 << (HIST_BUCKETS - 1)) - 1
+    }
 }
 
 /// Scheduler counters (mean batch size benches report is
 /// `rows / batches`; `expired`/`cancelled` count dropped requests;
 /// `inflight` is the live queue-depth gauge maintained by
-/// [`InflightGuard`]; `by_adapter` counts submissions per adapter name).
+/// [`InflightGuard`]; `by_adapter` counts submissions per adapter name;
+/// the `class_*` triples index by [`RequestClass`]).
 #[derive(Default)]
 struct ServerStats {
     batches: AtomicU64,
@@ -186,6 +305,9 @@ struct ServerStats {
     /// Submissions not counted in `by_adapter` because the name cap
     /// was reached (see `MAX_TRACKED_ADAPTERS`).
     untracked: AtomicU64,
+    class_submitted: [AtomicU64; 3],
+    class_answered: [AtomicU64; 3],
+    class_latency: [LatencyHist; 3],
 }
 
 /// Distinct adapter names the per-adapter counter map will track.
@@ -195,11 +317,24 @@ struct ServerStats {
 /// [`SchedulerStats::per_adapter_untracked`] instead.
 const MAX_TRACKED_ADAPTERS: usize = 1024;
 
+/// Per-class QoS counters in a [`SchedulerStats`] snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct ClassStats {
+    pub class: String,
+    pub submitted: u64,
+    /// Requests answered with computed output (errors excluded).
+    pub answered: u64,
+    /// p99 service latency (submit → computed reply) in µs, as the
+    /// log₂-bucket upper edge; 0 until the class answers a request.
+    pub p99_us: u64,
+}
+
 /// Cheap point-in-time snapshot of the engine's counters — the surface
 /// behind the wire `/v1/stats` endpoint and queue-depth admission
 /// control.  `queue_depth` counts requests submitted but not yet
 /// answered (queued in the batcher, riding a batch, or mid-compute);
-/// `per_adapter` is (name, submitted) sorted by name.
+/// `per_adapter` is (name, submitted) sorted by name; `per_class` is
+/// always [`RequestClass::ALL`] order.
 #[derive(Clone, Debug, Default)]
 pub struct SchedulerStats {
     pub queue_depth: u64,
@@ -211,9 +346,10 @@ pub struct SchedulerStats {
     pub per_adapter: Vec<(String, u64)>,
     /// Submissions under names beyond the tracked-adapter cap.
     pub per_adapter_untracked: u64,
+    pub per_class: Vec<ClassStats>,
 }
 
-/// The serving engine: adapted model + batcher + worker pool.  See
+/// The serving engine: adapted model + WFQ batcher + worker pool.  See
 /// module docs for the data flow; construction spawns the threads,
 /// `shutdown` (or drop) drains and joins them.
 pub struct Server {
@@ -245,6 +381,15 @@ impl Server {
             model.spec().sites.iter().map(|s| s.shape.n).collect();
         let max_batch = cfg.max_batch.max(1);
         let max_wait = Duration::from_micros(cfg.max_wait_us);
+        // Zero weights would stall a class's queue forever; config
+        // validation rejects them at load time, this clamp covers
+        // hand-built configs.
+        let weights = [
+            cfg.classes.interactive.max(1),
+            cfg.classes.batch.max(1),
+            cfg.classes.background.max(1),
+        ];
+        let fused = cfg.fused;
         // Same resolution rule as the compute backends: explicit count,
         // or auto (available_parallelism, capped) — the zero-FLOP floor
         // means serving always gets its workers.  Unlike the compute
@@ -271,7 +416,7 @@ impl Server {
         let batch_rx = Arc::new(Mutex::new(batch_rx));
 
         let batcher = std::thread::spawn(move || {
-            batcher_loop(ingress_rx, batch_tx, max_batch, max_wait);
+            batcher_loop(ingress_rx, batch_tx, max_batch, max_wait, weights);
         });
         let mut workers = Vec::with_capacity(worker_count);
         for _ in 0..worker_count {
@@ -280,7 +425,7 @@ impl Server {
             let st = stats.clone();
             let pool = out_pool.clone();
             workers.push(std::thread::spawn(move || {
-                worker_loop(&rx, &mdl, &st, &pool);
+                worker_loop(&rx, &mdl, &st, &pool, fused);
             }));
         }
         Server {
@@ -331,6 +476,17 @@ impl Server {
             .map(|(k, v)| (k.to_string(), *v))
             .collect();
         per_adapter.sort();
+        let per_class = RequestClass::ALL
+            .iter()
+            .map(|&c| ClassStats {
+                class: c.as_str().to_string(),
+                submitted: self.stats.class_submitted[c.idx()]
+                    .load(Ordering::Relaxed),
+                answered: self.stats.class_answered[c.idx()]
+                    .load(Ordering::Relaxed),
+                p99_us: self.stats.class_latency[c.idx()].p99_us(),
+            })
+            .collect();
         SchedulerStats {
             queue_depth: self.stats.inflight.load(Ordering::Relaxed),
             submitted: self.stats.submitted.load(Ordering::Relaxed),
@@ -343,6 +499,7 @@ impl Server {
                 .stats
                 .untracked
                 .load(Ordering::Relaxed),
+            per_class,
         }
     }
 
@@ -362,6 +519,7 @@ impl Server {
         &self,
         adapter: &str,
         xs: Vec<Vec<f32>>,
+        class: RequestClass,
         deadline: Option<Duration>,
     ) -> anyhow::Result<Ticket> {
         anyhow::ensure!(
@@ -386,6 +544,8 @@ impl Server {
         let cancelled = Arc::new(AtomicBool::new(false));
         let key: Arc<str> = Arc::from(adapter);
         self.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        self.stats.class_submitted[class.idx()]
+            .fetch_add(1, Ordering::Relaxed);
         self.stats.inflight.fetch_add(1, Ordering::Relaxed);
         {
             let mut map = lock(&self.stats.by_adapter);
@@ -406,6 +566,7 @@ impl Server {
             at: submitted,
             deadline: deadline.map(|d| submitted + d),
             cancelled: cancelled.clone(),
+            class,
             _inflight: InflightGuard(self.stats.clone()),
         };
         ingress
@@ -421,7 +582,20 @@ impl Server {
         adapter: &str,
         xs: Vec<Vec<f32>>,
     ) -> anyhow::Result<Ticket> {
-        self.submit_inner(adapter, xs, None)
+        self.submit_inner(adapter, xs, RequestClass::default(), None)
+    }
+
+    /// [`Server::submit`] with an explicit QoS class and optional
+    /// relative deadline — the full-control surface the wire gateway
+    /// uses.
+    pub fn submit_classed(
+        &self,
+        adapter: &str,
+        xs: Vec<Vec<f32>>,
+        class: RequestClass,
+        deadline: Option<Duration>,
+    ) -> anyhow::Result<Ticket> {
+        self.submit_inner(adapter, xs, class, deadline)
     }
 
     /// [`Server::submit`] with a relative deadline: if the request is
@@ -433,7 +607,12 @@ impl Server {
         xs: Vec<Vec<f32>>,
         deadline: Duration,
     ) -> anyhow::Result<Ticket> {
-        self.submit_inner(adapter, xs, Some(deadline))
+        self.submit_inner(
+            adapter,
+            xs,
+            RequestClass::default(),
+            Some(deadline),
+        )
     }
 
     /// Single-row sugar for 1-site models (the PR-3 surface).
@@ -447,7 +626,7 @@ impl Server {
             "submit_row needs a 1-site model; this one has {} sites",
             self.site_ns.len()
         );
-        self.submit_inner(adapter, vec![x], None)
+        self.submit_inner(adapter, vec![x], RequestClass::default(), None)
     }
 
     /// Stop accepting requests, drain everything in flight, join the
@@ -481,20 +660,115 @@ fn effective_flush_at(r: &Request, max_wait: Duration) -> Instant {
     }
 }
 
-/// How often the batcher sweeps pending groups for cancelled members
+/// How often the batcher sweeps pending queues for cancelled members
 /// while anything is pending.  Cancellation is an async flag with no
 /// wake channel (a `Sender`-holding cancel handle would keep the
 /// ingress alive and hang shutdown), so a bounded poll keeps
 /// drop-on-cancel prompt even under a multi-second `max_wait`.
 const CANCEL_SWEEP: Duration = Duration::from_millis(5);
 
-/// One adapter's pending requests plus the earliest instant any member
-/// must leave the batcher.  The cached minimum is exact: members only
-/// join (the min is monotone under `min`) and leave wholesale, so the
-/// per-arrival scans stay O(groups), not O(total pending requests).
-struct Group {
-    min_flush: Instant,
-    reqs: Vec<Request>,
+/// The batcher's pending set: one FIFO per QoS class plus the
+/// deficit-round-robin state that drains them in weighted fair order.
+/// Every request the server accepts shares the served model's site
+/// shapes (submit validates the widths), so the whole set is one
+/// fusable group — the class queues only decide the order rows *board*
+/// a fused batch.
+///
+/// DRR with quantum = configured class weight: a backlogged class
+/// boards up to its weight per rotation before the cursor moves on, so
+/// between two consecutive background rows at most
+/// `w_interactive + w_batch` rows from the other classes board — the
+/// bounded-wait guarantee the starvation test asserts.
+struct ClassQueues {
+    queues: [VecDeque<(Instant, Request)>; 3],
+    /// Cached per-class minimum of the members' flush instants; exact
+    /// after every [`ClassQueues::refresh_min`].
+    min_flush: [Option<Instant>; 3],
+    weights: [u64; 3],
+    deficit: [u64; 3],
+    cursor: usize,
+    len: usize,
+}
+
+impl ClassQueues {
+    fn new(weights: [u64; 3]) -> ClassQueues {
+        ClassQueues {
+            queues: Default::default(),
+            min_flush: [None; 3],
+            weights,
+            deficit: [0; 3],
+            cursor: 0,
+            len: 0,
+        }
+    }
+
+    fn push(&mut self, req: Request, flush_at: Instant) {
+        let c = req.class.idx();
+        self.min_flush[c] = Some(match self.min_flush[c] {
+            Some(t) => t.min(flush_at),
+            None => flush_at,
+        });
+        self.queues[c].push_back((flush_at, req));
+        self.len += 1;
+    }
+
+    /// Earliest instant any pending member must leave the batcher.
+    fn earliest(&self) -> Option<Instant> {
+        self.min_flush.iter().flatten().copied().min()
+    }
+
+    /// Must a batch flush now?  True when any member reached its wait
+    /// bound, or — on sweep ticks — when any member was cancelled (so
+    /// the "cancelled" answer never waits out `max_wait`).
+    fn due(&self, now: Instant, sweep: bool) -> bool {
+        if self.len == 0 {
+            return false;
+        }
+        if self.min_flush.iter().flatten().any(|&t| now >= t) {
+            return true;
+        }
+        sweep
+            && self
+                .queues
+                .iter()
+                .flatten()
+                .any(|(_, r)| r.cancelled.load(Ordering::Relaxed))
+    }
+
+    /// Next boarding request in weighted fair order (see struct docs).
+    fn pop_next(&mut self) -> Option<Request> {
+        if self.len == 0 {
+            return None;
+        }
+        loop {
+            let c = self.cursor;
+            if self.queues[c].is_empty() {
+                // standard DRR: an idle class banks no credit
+                self.deficit[c] = 0;
+                self.cursor = (c + 1) % 3;
+                continue;
+            }
+            if self.deficit[c] == 0 {
+                self.deficit[c] = self.weights[c];
+            }
+            self.deficit[c] -= 1;
+            if self.deficit[c] == 0 {
+                self.cursor = (c + 1) % 3;
+            }
+            let (_, req) = self.queues[c].pop_front().expect("non-empty");
+            self.len -= 1;
+            return Some(req);
+        }
+    }
+
+    /// Recompute the cached flush minima after a partial drain —
+    /// members leave in WFQ order, not FIFO-wholesale, so the
+    /// join-monotone cache stops being exact once a batch boards.
+    fn refresh_min(&mut self) {
+        for (c, q) in self.queues.iter().enumerate() {
+            self.min_flush[c] = q.iter().map(|(t, _)| *t).min();
+        }
+    }
 }
 
 fn batcher_loop(
@@ -502,11 +776,11 @@ fn batcher_loop(
     tx: Sender<Batch>,
     max_batch: usize,
     max_wait: Duration,
+    weights: [u64; 3],
 ) {
-    let mut pending: HashMap<Arc<str>, Group> = HashMap::new();
+    let mut pending = ClassQueues::new(weights);
     'run: loop {
-        let earliest = pending.values().map(|g| g.min_flush).min();
-        let received = match earliest {
+        let received = match pending.earliest() {
             // Nothing pending: block until a request (or shutdown).
             None => match rx.recv() {
                 Ok(r) => Some(r),
@@ -528,55 +802,54 @@ fn batcher_loop(
         let sweep = received.is_none();
         if let Some(req) = received {
             let eff = effective_flush_at(&req, max_wait);
-            let key = req.adapter.clone();
-            let group =
-                pending.entry(key.clone()).or_insert_with(|| Group {
-                    min_flush: eff,
-                    reqs: Vec::new(),
-                });
-            group.min_flush = group.min_flush.min(eff);
-            group.reqs.push(req);
-            if group.reqs.len() >= max_batch {
-                if let Some(g) = pending.remove(&key) {
-                    let batch = Batch { adapter: key, reqs: g.reqs };
-                    if tx.send(batch).is_err() {
-                        return; // workers gone — nothing left to answer
-                    }
-                }
+            pending.push(req, eff);
+            if pending.len >= max_batch
+                && !flush_one(&mut pending, &tx, max_batch)
+            {
+                return; // workers gone — nothing left to answer
             }
         }
-        // Flush every group at its wait/deadline bound (the worker
-        // answers expired members with the timeout error), plus — on
-        // sweep ticks — any group holding a cancelled member, so the
-        // "cancelled" answer arrives within ~CANCEL_SWEEP rather than
-        // at max_wait.
+        // Flush at the wait/deadline bound (the worker answers expired
+        // members with the timeout error), plus — on sweep ticks —
+        // whenever a cancelled member is pending, so the "cancelled"
+        // answer arrives within ~CANCEL_SWEEP rather than at max_wait.
+        // Each flush boards up to max_batch rows; loop until nothing
+        // due remains (a due row beyond one batch boards the next).
         let now = Instant::now();
-        let due: Vec<Arc<str>> = pending
-            .iter()
-            .filter(|(_, g)| {
-                now >= g.min_flush
-                    || (sweep
-                        && g.reqs.iter().any(|r| {
-                            r.cancelled.load(Ordering::Relaxed)
-                        }))
-            })
-            .map(|(k, _)| k.clone())
-            .collect();
-        for key in due {
-            if let Some(g) = pending.remove(&key) {
-                if tx.send(Batch { adapter: key, reqs: g.reqs }).is_err() {
-                    return;
-                }
+        while pending.due(now, sweep) {
+            if !flush_one(&mut pending, &tx, max_batch) {
+                return;
             }
         }
     }
     // Ingress disconnected (shutdown): flush everything still pending so
     // no submitted request goes unanswered.
-    for (adapter, g) in pending.drain() {
-        if tx.send(Batch { adapter, reqs: g.reqs }).is_err() {
+    while pending.len > 0 {
+        if !flush_one(&mut pending, &tx, max_batch) {
             return;
         }
     }
+}
+
+/// Board up to `max_batch` rows in WFQ order into one fused batch and
+/// ship it; false when the workers are gone.
+fn flush_one(
+    pending: &mut ClassQueues,
+    tx: &Sender<Batch>,
+    max_batch: usize,
+) -> bool {
+    let mut reqs = Vec::with_capacity(max_batch.min(pending.len));
+    while reqs.len() < max_batch {
+        match pending.pop_next() {
+            Some(r) => reqs.push(r),
+            None => break,
+        }
+    }
+    pending.refresh_min();
+    if reqs.is_empty() {
+        return true;
+    }
+    tx.send(Batch { reqs }).is_ok()
 }
 
 fn worker_loop(
@@ -584,6 +857,7 @@ fn worker_loop(
     model: &Mutex<AdaptedModel>,
     stats: &ServerStats,
     pool: &Arc<OutputPool>,
+    fused: bool,
 ) {
     let mut ws = Workspace::new();
     loop {
@@ -596,22 +870,23 @@ fn worker_loop(
             Ok(b) => b,
             Err(_) => return, // batcher exited and the queue is drained
         };
-        let Batch { adapter, reqs } = batch;
         // Dropped requests first: cancelled or past-deadline members
-        // are answered with their error and never occupy compute.
+        // are answered with their error and never occupy a fused slot.
         let now = Instant::now();
-        let mut live = Vec::with_capacity(reqs.len());
-        for req in reqs {
+        let mut live = Vec::with_capacity(batch.reqs.len());
+        for req in batch.reqs {
             if req.cancelled.load(Ordering::Relaxed) {
                 stats.cancelled.fetch_add(1, Ordering::Relaxed);
                 let _ = req.reply.send(Err(format!(
-                    "request for `{adapter}` was cancelled"
+                    "request for `{}` was cancelled",
+                    req.adapter
                 )));
             } else if req.deadline.is_some_and(|d| now >= d) {
                 stats.expired.fetch_add(1, Ordering::Relaxed);
                 let _ = req.reply.send(Err(format!(
-                    "request for `{adapter}` timed out: deadline exceeded \
+                    "request for `{}` timed out: deadline exceeded \
                      after {:?} in queue",
+                    req.adapter,
                     now.duration_since(req.at)
                 )));
             } else {
@@ -621,80 +896,195 @@ fn worker_loop(
         if live.is_empty() {
             continue;
         }
-        // Two-phase handle lookup so the model lock stays brief even on
-        // projection-cache misses: one plan under the lock describes
-        // every cold site of the request, all of them regenerate
-        // *outside* the lock, then install under a second brief lock.
-        // A thrashing cache costs the missing worker regen time, never
-        // the whole pool.
-        let plan = lock(model).plan(&adapter);
-        let plan = match plan {
-            Ok(p) => p,
-            Err(e) => {
-                let msg = format!("{e:#}");
-                for req in live {
-                    let _ = req.reply.send(Err(msg.clone()));
+        // Segment the fused batch by adapter, first-seen order — rows
+        // keep their class-fair boarding order within each segment.
+        let mut names: Vec<Arc<str>> = Vec::new();
+        let mut groups: Vec<Vec<Request>> = Vec::new();
+        for req in live {
+            match names.iter().position(|n| *n == req.adapter) {
+                Some(g) => groups[g].push(req),
+                None => {
+                    names.push(req.adapter.clone());
+                    groups.push(vec![req]);
                 }
-                continue;
             }
+        }
+        // Two-phase handle lookup, batched across adapters: ONE brief
+        // model lock plans every adapter of the fused batch (all cold
+        // sites of all segments described at once), regeneration runs
+        // outside the lock, then ONE more brief lock installs
+        // everything — 2 lock round-trips per batch instead of 2·K.
+        let plans = {
+            let name_refs: Vec<&str> = names.iter().map(|n| &**n).collect();
+            lock(model).plan_many(&name_refs)
         };
-        let regen: Vec<(Option<Matrix>, Option<Matrix>)> = plan
-            .sites
+        let mut seg_plans = Vec::with_capacity(plans.len());
+        let mut seg_groups = Vec::with_capacity(plans.len());
+        for (plan, group) in plans.into_iter().zip(groups) {
+            match plan {
+                Ok(p) => {
+                    seg_plans.push(p);
+                    seg_groups.push(group);
+                }
+                Err(e) => {
+                    // a bad segment answers its own rows with the error;
+                    // its batchmates ride on
+                    let msg = format!("{e:#}");
+                    for req in group {
+                        let _ = req.reply.send(Err(msg.clone()));
+                    }
+                }
+            }
+        }
+        if seg_plans.is_empty() {
+            continue;
+        }
+        let regens: Vec<Vec<(Option<Matrix>, Option<Matrix>)>> = seg_plans
             .iter()
-            .map(|sp| {
-                let l = sp
-                    .l
-                    .is_none()
-                    .then(|| regen_l(sp.seed, &sp.l_name, sp.m, sp.a));
-                let r = sp
-                    .r
-                    .is_none()
-                    .then(|| regen_r(sp.seed, &sp.r_name, sp.b, sp.n));
-                (l, r)
+            .map(|plan| {
+                plan.sites
+                    .iter()
+                    .map(|sp| {
+                        let l = sp.l.is_none().then(|| {
+                            regen_l(sp.seed, &sp.l_name, sp.m, sp.a)
+                        });
+                        let r = sp.r.is_none().then(|| {
+                            regen_r(sp.seed, &sp.r_name, sp.b, sp.n)
+                        });
+                        (l, r)
+                    })
+                    .collect()
             })
             .collect();
-        let handles = lock(model).install(&plan, regen);
-        let rows = live.len();
-        // One batch matrix and one pooled output per site: inputs come
-        // from the worker's Workspace (allocation-free after warmup),
-        // outputs from the shared pool (recycled when the batch's last
-        // ticket drops them).
-        let mut outs = Vec::with_capacity(handles.sites.len());
-        for (s, sh) in handles.sites.iter().enumerate() {
-            let n = sh.r.cols;
-            let m = sh.l.rows;
-            let mut x = ws.take_matrix(rows, n);
-            for (i, req) in live.iter().enumerate() {
-                x.data[i * n..(i + 1) * n].copy_from_slice(&req.xs[s]);
+        let handles = lock(model).install_many(&seg_plans, regens);
+        if fused {
+            run_fused(&handles, seg_groups, stats, pool, &mut ws);
+        } else {
+            // `[serve] fused = false`: identical ingress and batches,
+            // each adapter segment computed independently — the
+            // pre-fusion per-adapter path the tail bench baselines on.
+            for (h, group) in handles.iter().zip(seg_groups) {
+                run_segment(h, group, stats, pool, &mut ws);
             }
-            let mut out = pool.take(rows, m);
-            adapter_forward_into(
-                &x,
-                &sh.l,
-                &sh.r,
-                &sh.y,
-                handles.alpha,
-                &mut ws,
-                out.matrix_mut(),
-            );
-            ws.recycle_matrix(x);
-            outs.push(out);
-        }
-        let outs = Arc::new(outs);
-        let done = Instant::now();
-        stats.batches.fetch_add(1, Ordering::Relaxed);
-        stats.batched_rows.fetch_add(rows as u64, Ordering::Relaxed);
-        for (row, req) in live.into_iter().enumerate() {
-            let resp = Response {
-                outs: outs.clone(),
-                row,
-                adapter: adapter.clone(),
-                batch_rows: rows,
-                done,
-            };
-            let _ = req.reply.send(Ok(resp));
         }
     }
+}
+
+/// The fused path: one grouped block-diagonal dispatch per site over
+/// every adapter segment of the batch (see module docs).
+fn run_fused(
+    handles: &[ModelHandles],
+    groups: Vec<Vec<Request>>,
+    stats: &ServerStats,
+    pool: &Arc<OutputPool>,
+    ws: &mut Workspace,
+) {
+    let segs: Vec<usize> = groups.iter().map(|g| g.len()).collect();
+    let rows: usize = segs.iter().sum();
+    let alphas: Vec<f32> = handles.iter().map(|h| h.alpha).collect();
+    let nsites = handles[0].sites.len();
+    let mut outs = Vec::with_capacity(nsites);
+    for s in 0..nsites {
+        // every adapter shares the spec's site dims — read them off the
+        // first segment's handles
+        let n = handles[0].sites[s].r.cols;
+        let m = handles[0].sites[s].l.rows;
+        let mut x = ws.take_matrix(rows, n);
+        let mut row = 0usize;
+        for group in &groups {
+            for req in group {
+                x.data[row * n..(row + 1) * n].copy_from_slice(&req.xs[s]);
+                row += 1;
+            }
+        }
+        let ls: Vec<&Matrix> =
+            handles.iter().map(|h| h.sites[s].l.as_ref()).collect();
+        let rs: Vec<&Matrix> =
+            handles.iter().map(|h| h.sites[s].r.as_ref()).collect();
+        let ys: Vec<&Matrix> =
+            handles.iter().map(|h| h.sites[s].y.as_ref()).collect();
+        let mut out = pool.take(rows, m);
+        adapter_forward_grouped_into(
+            &x, &ls, &rs, &ys, &alphas, &segs, ws, out.matrix_mut(),
+        );
+        ws.recycle_matrix(x);
+        outs.push(out);
+    }
+    let outs = Arc::new(outs);
+    let done = Instant::now();
+    stats.batches.fetch_add(1, Ordering::Relaxed);
+    stats.batched_rows.fetch_add(rows as u64, Ordering::Relaxed);
+    let mut row = 0usize;
+    for group in groups {
+        for req in group {
+            reply_ok(req, &outs, row, rows, done, stats);
+            row += 1;
+        }
+    }
+}
+
+/// One adapter segment computed on its own batch matrices and pooled
+/// outputs — the `[serve] fused = false` per-adapter path.
+fn run_segment(
+    h: &ModelHandles,
+    group: Vec<Request>,
+    stats: &ServerStats,
+    pool: &Arc<OutputPool>,
+    ws: &mut Workspace,
+) {
+    let rows = group.len();
+    let mut outs = Vec::with_capacity(h.sites.len());
+    for (s, sh) in h.sites.iter().enumerate() {
+        let n = sh.r.cols;
+        let m = sh.l.rows;
+        let mut x = ws.take_matrix(rows, n);
+        for (i, req) in group.iter().enumerate() {
+            x.data[i * n..(i + 1) * n].copy_from_slice(&req.xs[s]);
+        }
+        let mut out = pool.take(rows, m);
+        adapter_forward_into(
+            &x,
+            &sh.l,
+            &sh.r,
+            &sh.y,
+            h.alpha,
+            ws,
+            out.matrix_mut(),
+        );
+        ws.recycle_matrix(x);
+        outs.push(out);
+    }
+    let outs = Arc::new(outs);
+    let done = Instant::now();
+    stats.batches.fetch_add(1, Ordering::Relaxed);
+    stats.batched_rows.fetch_add(rows as u64, Ordering::Relaxed);
+    for (row, req) in group.into_iter().enumerate() {
+        reply_ok(req, &outs, row, rows, done, stats);
+    }
+}
+
+/// Send one computed answer, recording per-class QoS accounting
+/// (exactly one reply per live request — the exactly-once property the
+/// tests pin down).
+fn reply_ok(
+    req: Request,
+    outs: &Arc<Vec<PooledOut>>,
+    row: usize,
+    batch_rows: usize,
+    done: Instant,
+    stats: &ServerStats,
+) {
+    let c = req.class.idx();
+    stats.class_answered[c].fetch_add(1, Ordering::Relaxed);
+    stats.class_latency[c].record(done.duration_since(req.at));
+    let resp = Response {
+        outs: outs.clone(),
+        row,
+        adapter: req.adapter.clone(),
+        batch_rows,
+        done,
+    };
+    let _ = req.reply.send(Ok(resp));
 }
 
 #[cfg(test)]
@@ -763,12 +1153,13 @@ mod tests {
     }
 
     #[test]
-    fn every_request_answered_exactly_once_and_unmixed() {
+    fn every_request_answered_exactly_once_with_its_own_adapters_math() {
         // Property test: random request mixes over several adapters —
-        // every ticket resolves with the right adapter's math, and the
-        // scheduler's row accounting matches the request count exactly
-        // (each request answered exactly once).
-        prop::for_all("serve answers all, batches unmixed", 5, |rng| {
+        // every ticket resolves with the right adapter's math even when
+        // a fused batch mixes adapters, and the scheduler's row
+        // accounting matches the request count exactly (each request
+        // answered exactly once).
+        prop::for_all("serve answers all, rows unmixed", 5, |rng| {
             let adapters =
                 [("alpha", 7u64), ("beta", 8u64), ("gamma", 9u64)];
             let model = test_model(&adapters);
@@ -790,7 +1181,7 @@ mod tests {
             {
                 let resp = ticket.wait().expect("request must be answered");
                 answered += 1;
-                assert_eq!(&*resp.adapter, name, "batch mixed adapters");
+                assert_eq!(&*resp.adapter, name, "wrong adapter's segment");
                 assert!(resp.batch_rows >= 1 && resp.batch_rows <= 4);
                 assert_eq!(resp.sites(), 1);
                 for (got, exp) in resp.output().iter().zip(want) {
@@ -809,10 +1200,125 @@ mod tests {
     }
 
     #[test]
+    fn fused_batches_mix_adapters_with_exact_per_row_outputs() {
+        // The tentpole end to end: four requests for four *different*
+        // adapters board ONE fused batch (size-triggered — max_wait is
+        // far beyond the test budget, so nothing else can flush), and
+        // every ticket gets exactly its own adapter's math.
+        let adapters = [
+            ("alpha", 7u64),
+            ("beta", 8u64),
+            ("gamma", 9u64),
+            ("delta", 10u64),
+        ];
+        let model = test_model(&adapters);
+        let server = Server::new(model, &test_cfg(4, 30_000_000));
+        let mut rng = Pcg64::new(3);
+        let mut tickets = Vec::new();
+        let mut expect = Vec::new();
+        for (name, seed) in adapters {
+            let x: Vec<f32> = (0..N).map(|_| rng.normal() as f32).collect();
+            expect.push(reference_forward(seed, name, &x));
+            tickets.push((name, server.submit_row(name, x).unwrap()));
+        }
+        for ((name, t), want) in tickets.into_iter().zip(&expect) {
+            let resp = t.wait().unwrap();
+            assert_eq!(&*resp.adapter, name);
+            assert_eq!(resp.batch_rows, 4,
+                       "four adapters must ride one fused batch");
+            for (got, exp) in resp.output().iter().zip(want) {
+                assert!((got - exp).abs() < 1e-4, "{name}: {got} vs {exp}");
+            }
+        }
+        let (batches, rows) = server.batch_stats();
+        assert_eq!((batches, rows), (1, 4), "one fused batch, all rows");
+    }
+
+    #[test]
+    fn unfused_mode_serves_per_adapter_segment_batches() {
+        // `[serve] fused = false` keeps ingress/batching identical but
+        // computes per-adapter segments independently — each segment
+        // counts as its own batch (the tail bench's baseline shape).
+        let adapters = [("alpha", 7u64), ("beta", 8u64)];
+        let model = test_model(&adapters);
+        let cfg = ServeConfig { fused: false, ..test_cfg(4, 30_000_000) };
+        let server = Server::new(model, &cfg);
+        let mut tickets = Vec::new();
+        for i in 0..4 {
+            let (name, _) = adapters[i % 2];
+            tickets
+                .push((name, server.submit_row(name, vec![0.5; N]).unwrap()));
+        }
+        for (name, t) in tickets {
+            let resp = t.wait().unwrap();
+            assert_eq!(&*resp.adapter, name);
+            assert_eq!(resp.batch_rows, 2, "two rows per adapter segment");
+        }
+        let (batches, rows) = server.batch_stats();
+        assert_eq!((batches, rows), (2, 4),
+                   "one batch per adapter segment when unfused");
+    }
+
+    #[test]
+    fn wfq_pop_order_bounds_background_wait() {
+        // The non-starvation invariant, deterministically on the DRR
+        // queue itself: with background backlogged, at most
+        // w_interactive + w_batch rows from the other classes board
+        // between two consecutive background rows — sustained
+        // interactive load cannot starve background.
+        let stats = Arc::new(ServerStats::default());
+        let mk = |class: RequestClass| {
+            let (tx, _rx) = channel::<Reply>();
+            stats.inflight.fetch_add(1, Ordering::Relaxed);
+            Request {
+                adapter: Arc::from("a"),
+                xs: vec![Vec::new()],
+                reply: tx,
+                at: Instant::now(),
+                deadline: None,
+                cancelled: Arc::new(AtomicBool::new(false)),
+                class,
+                _inflight: InflightGuard(stats.clone()),
+            }
+        };
+        let weights = [8u64, 4, 1];
+        let mut q = ClassQueues::new(weights);
+        let now = Instant::now();
+        for _ in 0..200 {
+            q.push(mk(RequestClass::Interactive), now);
+        }
+        for _ in 0..100 {
+            q.push(mk(RequestClass::Batch), now);
+        }
+        for _ in 0..20 {
+            q.push(mk(RequestClass::Background), now);
+        }
+        let bound = (weights[0] + weights[1]) as usize;
+        let (mut popped, mut bg_seen, mut since_bg) = (0usize, 0usize, 0);
+        while let Some(r) = q.pop_next() {
+            popped += 1;
+            if r.class == RequestClass::Background {
+                bg_seen += 1;
+                since_bg = 0;
+            } else {
+                since_bg += 1;
+                assert!(
+                    bg_seen == 20 || since_bg <= bound,
+                    "background starved: {since_bg} foreign rows in a \
+                     row with backlog present"
+                );
+            }
+        }
+        assert_eq!(popped, 320, "every pushed request must pop");
+        assert_eq!(bg_seen, 20);
+    }
+
+    #[test]
     fn multi_site_requests_route_every_site_bit_identically() {
         // Serial requests (each waited before the next) pin batch_rows
         // to 1, so the engine's per-site outputs must match the
-        // AdaptedModel's own 1-row forward bit for bit.
+        // AdaptedModel's own 1-row forward bit for bit — through the
+        // grouped single-segment compute path.
         let spec =
             ModelSpec::synthetic(3, SiteShape { m: 16, n: 14 }, 4, 3);
         let mut model = AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
@@ -974,6 +1480,63 @@ mod tests {
     }
 
     #[test]
+    fn cancelled_rows_never_occupy_fused_slots() {
+        // Cancel one member of a pending cross-adapter group: the
+        // fused batch that flushes must hold only the live rows.
+        let adapters = [("alpha", 7u64), ("beta", 8u64), ("gamma", 9u64)];
+        let model = test_model(&adapters);
+        // max_wait far beyond the budget: only the cancel sweep flushes.
+        let server = Server::new(model, &test_cfg(64, 30_000_000));
+        let ta = server.submit_row("alpha", vec![0.1; N]).unwrap();
+        let tb = server.submit_row("beta", vec![0.2; N]).unwrap();
+        let tc = server.submit_row("gamma", vec![0.3; N]).unwrap();
+        tb.cancel();
+        let err = tb.wait().expect_err("cancelled request must error");
+        assert!(err.to_string().contains("cancelled"), "{err}");
+        let ra = ta.wait().unwrap();
+        let rc = tc.wait().unwrap();
+        assert_eq!(ra.batch_rows, 2,
+                   "the fused batch must hold only live rows");
+        assert_eq!(rc.batch_rows, 2);
+        assert_eq!(&*ra.adapter, "alpha");
+        assert_eq!(&*rc.adapter, "gamma");
+        let (batches, rows) = server.batch_stats();
+        assert_eq!((batches, rows), (1, 2),
+                   "cancelled rows must not occupy fused slots");
+        let (_, cancelled) = server.drop_stats();
+        assert_eq!(cancelled, 1);
+    }
+
+    #[test]
+    fn per_class_stats_track_submissions_and_latency() {
+        let model = test_model(&[("solo", 7)]);
+        let server = Server::new(model, &test_cfg(4, 200));
+        for (i, &c) in RequestClass::ALL.iter().enumerate() {
+            for _ in 0..=i {
+                let t = server
+                    .submit_classed("solo", vec![vec![0.5; N]], c, None)
+                    .unwrap();
+                t.wait().unwrap();
+            }
+        }
+        let stats = server.scheduler_stats();
+        assert_eq!(stats.per_class.len(), 3);
+        for (i, cs) in stats.per_class.iter().enumerate() {
+            assert_eq!(cs.class, RequestClass::ALL[i].as_str());
+            assert_eq!(cs.submitted, i as u64 + 1);
+            assert_eq!(cs.answered, i as u64 + 1);
+            assert!(cs.p99_us > 0,
+                    "an answered class must show a latency tail");
+        }
+        // legacy surfaces default to interactive
+        server.submit_row("solo", vec![0.5; N]).unwrap().wait().unwrap();
+        let stats = server.scheduler_stats();
+        assert_eq!(stats.per_class[0].submitted, 2);
+        assert_eq!(stats.per_class[1].submitted, 2);
+        assert_eq!(stats.per_class[2].submitted, 3);
+    }
+
+    #[test]
     fn output_buffers_recycle_across_batches() {
         let model = test_model(&[("solo", 7)]);
         let server = Server::new(model, &test_cfg(4, 200));
@@ -1044,6 +1607,21 @@ mod tests {
         let t = server.submit_row("ghost", vec![0.0; N]).unwrap();
         assert!(t.wait().is_err(), "unknown adapter must error");
         assert!(server.submit_row("solo", vec![0.0; N + 1]).is_err());
+    }
+
+    #[test]
+    fn unknown_adapter_in_fused_batch_spares_its_batchmates() {
+        // A bad segment answers its own rows with the error while the
+        // rest of the fused batch computes normally.
+        let model = test_model(&[("alpha", 7)]);
+        let server = Server::new(model, &test_cfg(2, 30_000_000));
+        let good = server.submit_row("alpha", vec![0.5; N]).unwrap();
+        let bad = server.submit_row("ghost", vec![0.5; N]).unwrap();
+        assert!(bad.wait().is_err(), "unknown adapter must error");
+        let resp = good.wait().expect("batchmate must still be served");
+        assert_eq!(&*resp.adapter, "alpha");
+        assert_eq!(resp.batch_rows, 1,
+                   "the failed segment's row must not pad the batch");
     }
 
     #[test]

@@ -3,12 +3,16 @@
 //! (shared gateway state, parsed request) → response; the HTTP layer
 //! owns framing and the 413/503 transport errors, this layer owns the
 //! API semantics: strict body parsing (400), adapter resolution (404),
-//! admission control (429 + `Retry-After`), scheduler deadline
-//! expiries (504), and drain-time refusals (503).
+//! class-tiered admission control (429 + `Retry-After`; the optional
+//! `"class"` key maps to a QoS tier — `interactive` (default) /
+//! `batch` / `background` — with lower tiers shedding earlier and the
+//! scheduler weighting boarding by class), scheduler deadline expiries
+//! (504), and drain-time refusals (503).
 
 use std::borrow::Cow;
 use std::sync::atomic::Ordering;
 
+use crate::serve::RequestClass;
 use crate::wire::gateway::GatewayState;
 use crate::wire::http::{Request, Response};
 use crate::wire::json::{Event, JsonWriter, Tokenizer};
@@ -81,6 +85,15 @@ fn stats(state: &GatewayState) -> Response {
     w.end_obj();
     w.key("per_adapter_untracked")
         .u64_val(sched.per_adapter_untracked);
+    w.key("classes").begin_obj();
+    for c in &sched.per_class {
+        w.key(&c.class).begin_obj();
+        w.key("submitted").u64_val(c.submitted);
+        w.key("answered").u64_val(c.answered);
+        w.key("p99_us").u64_val(c.p99_us);
+        w.end_obj();
+    }
+    w.end_obj();
     if let Some(hs) = state.http_stats() {
         w.key("http").begin_obj();
         w.key("accepted").u64_val(hs.accepted.load(Ordering::Relaxed));
@@ -100,6 +113,8 @@ struct ForwardReq {
     /// One row per site, spec order (widths validated by the caller).
     rows: Vec<Vec<f32>>,
     deadline_ms: Option<u64>,
+    /// QoS class (optional `"class"` key; defaults to interactive).
+    class: RequestClass,
 }
 
 /// Strict streaming parse — numbers flow straight off the tokenizer
@@ -116,6 +131,7 @@ fn parse_forward(
     let mut adapter: Option<String> = None;
     let mut rows: Option<Vec<Vec<f32>>> = None;
     let mut deadline_ms: Option<u64> = None;
+    let mut class = RequestClass::default();
     loop {
         let key: Cow<'_, str> = match tok.next()? {
             Some(Event::Key(k)) => k,
@@ -137,6 +153,17 @@ fn parse_forward(
                     deadline_ms = Some(n as u64);
                 }
                 _ => anyhow::bail!("`deadline_ms` must be a number"),
+            },
+            "class" => match tok.next()? {
+                Some(Event::Str(s)) => {
+                    class = RequestClass::parse(&s).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "unknown `class` `{s}` (expected \
+                             `interactive`, `batch`, or `background`)"
+                        )
+                    })?;
+                }
+                _ => anyhow::bail!("`class` must be a string"),
             },
             "rows" => {
                 anyhow::ensure!(
@@ -178,7 +205,7 @@ fn parse_forward(
             }
             other => anyhow::bail!(
                 "unknown field `{other}` (expected `adapter`, `rows`, \
-                 `deadline_ms`)"
+                 `deadline_ms`, `class`)"
             ),
         }
     }
@@ -189,6 +216,7 @@ fn parse_forward(
         rows: rows
             .ok_or_else(|| anyhow::anyhow!("missing field `rows`"))?,
         deadline_ms,
+        class,
     })
 }
 
@@ -209,6 +237,15 @@ fn forward(state: &GatewayState, req: &Request) -> Response {
         Ok(f) => f,
         Err(e) => return Response::error(400, &format!("{e:#}")),
     };
+    // Class-tier admission runs once the class is known: batch and
+    // background requests shed at 75% / 50% of the depth watermark.
+    if let Some(why) = state.should_shed_class(fwd.class) {
+        state.shed_429.fetch_add(1, Ordering::Relaxed);
+        return Response::error(429, &why).with_header(
+            "retry-after",
+            &state.cfg.retry_after_s.to_string(),
+        );
+    }
     // Validate shape here (400) instead of surfacing the scheduler's
     // submit error as a server-side failure.
     let site_ns = state.site_ns();
@@ -255,15 +292,14 @@ fn forward(state: &GatewayState, req: &Request) -> Response {
     };
     let ticket = {
         let server = state.server();
-        let result = if deadline_ms > 0 {
-            server.submit_with_deadline(
-                &fwd.adapter,
-                fwd.rows,
-                std::time::Duration::from_millis(deadline_ms),
-            )
-        } else {
-            server.submit(&fwd.adapter, fwd.rows)
-        };
+        let deadline = (deadline_ms > 0)
+            .then(|| std::time::Duration::from_millis(deadline_ms));
+        let result = server.submit_classed(
+            &fwd.adapter,
+            fwd.rows,
+            fwd.class,
+            deadline,
+        );
         match result {
             Ok(t) => t,
             Err(e) => {

@@ -14,7 +14,10 @@
 //!   sliding one-second window (a thrashing cache means every queued
 //!   request regenerates projections — more queue only multiplies the
 //!   regeneration storm).  Either watermark set to 0 disables that
-//!   check.
+//!   check.  Admission is class-tiered: `"class": "background"`
+//!   requests stop boarding at 50% of the depth watermark and
+//!   `"batch"` at 75%, so only interactive traffic rides the queue to
+//!   the full mark.
 //! * **Shutdown** — the gateway first refuses new forwards (503
 //!   "draining"), then shuts the scheduler down — which *answers*
 //!   every in-flight ticket, so blocked HTTP handlers complete their
@@ -118,32 +121,71 @@ impl GatewayState {
             }
         }
         if self.cfg.shed_evictions_per_s > 0.0 {
-            let evictions = {
-                let m =
-                    self.model.lock().unwrap_or_else(|p| p.into_inner());
-                m.cache_stats().evictions
-            };
-            let mut w =
-                self.thrash.lock().unwrap_or_else(|p| p.into_inner());
-            let elapsed = w.window_start.elapsed();
-            if elapsed >= Duration::from_secs(1) {
-                w.window_start = Instant::now();
-                w.evictions_at_start = evictions;
-                return None; // fresh window: admit and re-measure
+            if let Some(why) = self.thrash_shed() {
+                return Some(why);
             }
-            let in_window =
-                evictions.saturating_sub(w.evictions_at_start) as f64;
-            let budget =
-                self.cfg.shed_evictions_per_s * elapsed.as_secs_f64();
-            if in_window > budget.max(1.0) {
-                return Some(format!(
-                    "projection cache thrashing: {in_window:.0} \
-                     evictions in the last {:.2}s (watermark {}/s); \
-                     retry later",
-                    elapsed.as_secs_f64(),
-                    self.cfg.shed_evictions_per_s
-                ));
-            }
+        }
+        None
+    }
+
+    /// Class-tier admission: lower QoS classes stop boarding before
+    /// the full `[wire] shed_queue_depth` watermark, so a backlog of
+    /// batch/background work can never crowd interactive traffic out
+    /// of the queue.  Background admits below 50% of the watermark,
+    /// batch below 75%, interactive all the way to it (that full mark
+    /// is [`should_shed`](Self::should_shed)'s job).  `Some(reason)`
+    /// means shed with 429.
+    pub fn should_shed_class(
+        &self,
+        class: crate::serve::RequestClass,
+    ) -> Option<String> {
+        use crate::serve::RequestClass;
+        let full = self.cfg.shed_queue_depth as u64;
+        if full == 0 {
+            return None; // depth shedding disabled entirely
+        }
+        let mark = match class {
+            // the plain should_shed() check already enforced `full`
+            RequestClass::Interactive => return None,
+            RequestClass::Batch => (full * 3 / 4).max(1),
+            RequestClass::Background => (full / 2).max(1),
+        };
+        let depth = self.server().queue_depth();
+        if depth >= mark {
+            return Some(format!(
+                "queue depth {depth} at the `{}` admission tier \
+                 {mark} (full watermark {full}); retry later",
+                class.as_str()
+            ));
+        }
+        None
+    }
+
+    /// The eviction-storm watermark half of admission control.
+    fn thrash_shed(&self) -> Option<String> {
+        let evictions = {
+            let m = self.model.lock().unwrap_or_else(|p| p.into_inner());
+            m.cache_stats().evictions
+        };
+        let mut w = self.thrash.lock().unwrap_or_else(|p| p.into_inner());
+        let elapsed = w.window_start.elapsed();
+        if elapsed >= Duration::from_secs(1) {
+            w.window_start = Instant::now();
+            w.evictions_at_start = evictions;
+            return None; // fresh window: admit and re-measure
+        }
+        let in_window =
+            evictions.saturating_sub(w.evictions_at_start) as f64;
+        let budget =
+            self.cfg.shed_evictions_per_s * elapsed.as_secs_f64();
+        if in_window > budget.max(1.0) {
+            return Some(format!(
+                "projection cache thrashing: {in_window:.0} \
+                 evictions in the last {:.2}s (watermark {}/s); \
+                 retry later",
+                elapsed.as_secs_f64(),
+                self.cfg.shed_evictions_per_s
+            ));
         }
         None
     }
@@ -454,6 +496,63 @@ mod tests {
         }
         gw.shutdown();
         gw.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn class_field_routes_qos_and_rejects_unknown() {
+        let spec = test_spec(1);
+        let mut model = AdaptedModel::new(spec, 1 << 20).unwrap();
+        add_adapter(&mut model, "alpha", 7);
+        let gw =
+            Gateway::start(model, &test_serve_cfg(), &test_wire_cfg())
+                .unwrap();
+        let mut client = HttpClient::connect(gw.addr()).unwrap();
+        let row = vec!["0.5"; 10].join(",");
+        // one forward per QoS tier: all admitted and answered
+        for class in ["interactive", "batch", "background"] {
+            let body = format!(
+                r#"{{"adapter":"alpha","class":"{class}","rows":[[{row}]]}}"#
+            );
+            let resp = client
+                .request("POST", "/v1/forward", Some(body.as_bytes()))
+                .unwrap();
+            assert_eq!(
+                resp.status,
+                200,
+                "class {class}: {}",
+                String::from_utf8_lossy(&resp.body)
+            );
+        }
+        // unknown class is a 400 before anything reaches the scheduler
+        let bad = format!(
+            r#"{{"adapter":"alpha","class":"turbo","rows":[[{row}]]}}"#
+        );
+        let resp = client
+            .request("POST", "/v1/forward", Some(bad.as_bytes()))
+            .unwrap();
+        assert_eq!(resp.status, 400);
+        assert!(
+            String::from_utf8_lossy(&resp.body).contains("turbo"),
+            "error must name the rejected class"
+        );
+        // per-class accounting shows up in /v1/stats
+        let resp = client.request("GET", "/v1/stats", None).unwrap();
+        assert_eq!(resp.status, 200);
+        let doc = parse_value(&resp.body, &Limits::default()).unwrap();
+        let classes = doc.get("classes").expect("classes object");
+        for class in ["interactive", "batch", "background"] {
+            let c = classes.get(class).expect("per-class entry");
+            assert_eq!(
+                c.get("submitted").and_then(Json::as_usize),
+                Some(1),
+                "class {class} must record its one submission"
+            );
+            assert_eq!(
+                c.get("answered").and_then(Json::as_usize),
+                Some(1),
+                "class {class} must record its one answer"
+            );
+        }
     }
 
     #[test]

@@ -18,8 +18,10 @@ Checks:
 
 2. **Relative kernel gate** (machine-independent): within the fresh
    run, single-thread packed must beat single-thread tiled by >=
-   MIN_RATIO on the NN and NT kernels at every measured shape.  The
-   acceptance target is 1.5x; the gate uses 1.2x to absorb runner noise.
+   MIN_RATIO on the NN, NT, and TN kernels at every measured shape
+   (TN rides the same packed micro-kernel via a blocked A-operand
+   transpose pack).  The acceptance target is 1.5x; the gate uses 1.2x
+   to absorb runner noise.
 
 3. **Serving floors** — the `serving` section (written by
    `serve_bench`) is checked against the baseline's `serving` object:
@@ -51,6 +53,17 @@ Checks:
    `min_wire_vs_inprocess`: the HTTP + streaming-JSON edge must keep
    at least half the in-process engine's closed-loop throughput.
 
+7. **Tail floors + fused-batching gate** — the `serving_tail` section
+   (written by serve_bench scenario 5: the identical heavy-tail Zipf
+   s=1.0 stream over a 512-adapter fleet through a fused cross-adapter
+   server and a `fused = false` per-adapter-segment server) is checked
+   against the baseline's `serving_tail` object: `throughput_rps` >=
+   floor, `p99_ms` <= ceiling, and — machine-independent —
+   `fused_vs_per_adapter` >= `min_fused_vs_per_adapter` (the
+   acceptance criterion: fused batching beats per-adapter batching by
+   1.5x on the tail workload; both walls come from the same binary on
+   the same box, so the ratio is runner-independent).
+
 A fresh report that exists but is malformed (unparseable JSON, or none
 of the expected sections with rows) is a hard failure — a silently
 empty report must read as "the gate is off", never as "pass".  A
@@ -71,6 +84,7 @@ SECTION = "linalg_kernels"
 SERVING_SECTION = "serving"
 MODEL_SECTION = "serving_model"
 WIRE_SECTION = "serving_wire"
+TAIL_SECTION = "serving_tail"
 TOLERANCE = 0.20          # max allowed drop below the baseline gflops
 MIN_RATIO = 1.2           # fresh-run packed/tiled single-thread NN+NT floor
 MIN_SERVE_ADAPTERS = 64   # fleet size the serving ratio gate applies to
@@ -125,6 +139,14 @@ def wire_rows(doc):
             if isinstance(r, dict) and "throughput_rps" in r]
 
 
+def tail_rows(doc):
+    rows = doc.get(TAIL_SECTION, [])
+    if not isinstance(rows, list):
+        return []
+    return [r for r in rows
+            if isinstance(r, dict) and "throughput_rps" in r]
+
+
 def find_fresh(candidates):
     for p in candidates:
         if os.path.exists(p):
@@ -162,7 +184,8 @@ def check_kernels(fresh, baseline_doc, baseline_path, tolerance, min_ratio,
     relative_pairs = 0
     for key, tiled_row in sorted(fresh.items()):
         kernel, backend, threads = key[0], key[1], key[2]
-        if backend != "tiled" or threads != 1 or kernel not in ("nn", "nt"):
+        if backend != "tiled" or threads != 1 \
+                or kernel not in ("nn", "nt", "tn"):
             continue
         packed_key = (kernel, "packed") + key[2:]
         packed_row = fresh.get(packed_key)
@@ -184,7 +207,7 @@ def check_kernels(fresh, baseline_doc, baseline_path, tolerance, min_ratio,
         # of silently no longer enforcing the acceptance criterion.
         failures.append(
             "relative gate compared 0 packed-vs-tiled single-thread "
-            "nn/nt pairs — bench row keys no longer match this script")
+            "nn/nt/tn pairs — bench row keys no longer match this script")
 
 
 def check_serving(rows, baseline_doc, baseline_path, require_acceptance,
@@ -382,6 +405,67 @@ def check_serving_wire(rows, baseline_doc, baseline_path,
             print(f"  note: {msg}")
 
 
+def check_serving_tail(rows, baseline_doc, baseline_path,
+                       require_acceptance, failures):
+    base = {}
+    if baseline_doc is not None:
+        base = baseline_doc.get(TAIL_SECTION, {})
+    if not isinstance(base, dict):
+        failures.append(f"{baseline_path}: `{TAIL_SECTION}` must be an "
+                        "object of floors, not rows")
+        return
+    tp_floor = base.get("throughput_rps_floor", 0.0)
+    p99_ceiling = base.get("p99_ms_ceiling", float("inf"))
+    min_fused = base.get("min_fused_vs_per_adapter", 1.5)
+    # Shape keys pinning the floors to the committed scenario (the
+    # fused ratio only means something on the heavy-tail fleet).
+    want_shape = {k: base[k] for k in ("sites", "adapters", "zipf")
+                  if k in base}
+
+    gated_rows = 0
+    for r in rows:
+        tag = (f"serving_tail[{r.get('sites')} sites x "
+               f"{r.get('adapters')} adapters, zipf {r.get('zipf')}]")
+        shape_ok = all(r.get(k) == v for k, v in want_shape.items())
+        if not shape_ok:
+            print(f"  note: {tag}: not the acceptance workload; floors "
+                  "not applied")
+            continue
+        gated_rows += 1
+        tp = r.get("throughput_rps", 0.0)
+        if tp < tp_floor:
+            failures.append(f"{tag}: throughput {tp:.0f} req/s < floor "
+                            f"{tp_floor:.0f}")
+        else:
+            print(f"  ok: {tag}: throughput {tp:.0f} req/s "
+                  f"(floor {tp_floor:.0f})")
+        p99 = r.get("p99_ms", 0.0)
+        if p99 > p99_ceiling:
+            failures.append(f"{tag}: p99 {p99:.1f} ms > ceiling "
+                            f"{p99_ceiling:.1f}")
+        else:
+            print(f"  ok: {tag}: p99 {p99:.1f} ms "
+                  f"(ceiling {p99_ceiling:.1f})")
+        # machine-independent: fused cross-adapter batching must beat
+        # per-adapter-segment batching on the identical tail stream
+        ratio = r.get("fused_vs_per_adapter", 0.0)
+        line = (f"{tag}: fused/per-adapter = {ratio:.2f}x "
+                f"(gate {min_fused}x)")
+        if ratio < min_fused:
+            failures.append(f"{line} — cross-adapter fusion no longer "
+                            "pays for itself on the tail workload")
+        else:
+            print(f"  ok: {line}")
+    if gated_rows == 0:
+        msg = (f"serving_tail gate matched 0 rows at the baseline shape "
+               f"{want_shape} — the tail acceptance workload "
+               "(serve_bench scenario 5) did not run")
+        if require_acceptance:
+            failures.append(msg)
+        else:
+            print(f"  note: {msg}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default="BENCH_baseline.json")
@@ -418,11 +502,12 @@ def main():
     serving = serving_rows(doc)
     model = model_rows(doc)
     wire = wire_rows(doc)
-    if not fresh and not serving and not model and not wire:
+    tail = tail_rows(doc)
+    if not fresh and not serving and not model and not wire and not tail:
         print(f"bench_regression: FAIL — {fresh_path} exists but has no "
               f"usable `{SECTION}`, `{SERVING_SECTION}`, "
-              f"`{MODEL_SECTION}` or `{WIRE_SECTION}` rows; an empty "
-              "report must not pass the gate")
+              f"`{MODEL_SECTION}`, `{WIRE_SECTION}` or `{TAIL_SECTION}` "
+              "rows; an empty report must not pass the gate")
         return 1
 
     if args.update:
@@ -491,6 +576,17 @@ def main():
     else:
         print(f"bench_regression: note — no `{WIRE_SECTION}` rows; "
               "wire serving checks skipped (CI runs with "
+              "--require-serving)")
+    if tail:
+        check_serving_tail(tail, baseline_doc, args.baseline,
+                           args.require_serving, failures)
+    elif args.require_serving:
+        failures.append(f"{fresh_path}: `{TAIL_SECTION}` section is "
+                        "missing or empty — did serve_bench scenario 5 "
+                        "run?")
+    else:
+        print(f"bench_regression: note — no `{TAIL_SECTION}` rows; "
+              "fused-batching tail checks skipped (CI runs with "
               "--require-serving)")
 
     if failures:

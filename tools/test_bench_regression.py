@@ -1,0 +1,163 @@
+#!/usr/bin/env python3
+"""Unit tests for the bench_regression gate, runnable with no test
+framework beyond the standard library:
+
+    python3 tools/test_bench_regression.py
+
+They feed synthetic reports to the check functions (and one end-to-end
+main() run over temp files) so a gate regression — a renamed key
+silently disabling a check, a ratio gate that stopped failing — is
+caught without needing a Rust toolchain or a bench run.
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import bench_regression as br  # noqa: E402
+
+
+def tail_row(**over):
+    """A healthy serving_tail row at the acceptance shape."""
+    row = {
+        "sites": 24,
+        "adapters": 512,
+        "zipf": 1.0,
+        "throughput_rps": 4000.0,
+        "p99_ms": 30.0,
+        "fused_vs_per_adapter": 3.0,
+    }
+    row.update(over)
+    return row
+
+
+TAIL_BASE = {
+    "serving_tail": {
+        "throughput_rps_floor": 100.0,
+        "p99_ms_ceiling": 5000.0,
+        "min_fused_vs_per_adapter": 1.5,
+        "sites": 24,
+        "adapters": 512,
+        "zipf": 1.0,
+    }
+}
+
+
+class TailGate(unittest.TestCase):
+    def check(self, rows, base=TAIL_BASE, require=True):
+        failures = []
+        br.check_serving_tail(rows, base, "BENCH_baseline.json",
+                              require, failures)
+        return failures
+
+    def test_healthy_row_passes(self):
+        self.assertEqual(self.check([tail_row()]), [])
+
+    def test_low_fused_ratio_fails(self):
+        failures = self.check([tail_row(fused_vs_per_adapter=1.2)])
+        self.assertEqual(len(failures), 1)
+        self.assertIn("fused/per-adapter", failures[0])
+
+    def test_ratio_gate_defaults_to_1_5_without_baseline(self):
+        # No baseline floors at all: the machine-independent ratio gate
+        # must still enforce its built-in 1.5x default.
+        failures = self.check([tail_row(fused_vs_per_adapter=1.2)],
+                              base=None)
+        self.assertTrue(any("fused/per-adapter" in f for f in failures))
+        self.assertEqual(self.check([tail_row()], base=None), [])
+
+    def test_throughput_floor_and_p99_ceiling(self):
+        failures = self.check([tail_row(throughput_rps=5.0)])
+        self.assertTrue(any("throughput" in f for f in failures))
+        failures = self.check([tail_row(p99_ms=9999.0)])
+        self.assertTrue(any("p99" in f for f in failures))
+
+    def test_off_shape_rows_are_not_gated(self):
+        # A local 8-adapter exploration must not be held to the fleet
+        # floors — but then zero gated rows must fail under CI mode.
+        rows = [tail_row(adapters=8, fused_vs_per_adapter=0.5)]
+        self.assertEqual(self.check(rows, require=False), [])
+        failures = self.check(rows, require=True)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("matched 0 rows", failures[0])
+
+    def test_malformed_baseline_section_fails(self):
+        failures = self.check([tail_row()],
+                              base={"serving_tail": [tail_row()]})
+        self.assertTrue(any("object of floors" in f for f in failures))
+
+
+def kernel_row(kernel, backend, gflops, m=256, k=3072, n=64):
+    return {"kernel": kernel, "backend": backend, "threads": 1,
+            "m": m, "k": k, "n": n, "mean_ns": 1.0, "min_ns": 1.0,
+            "gflops": gflops}
+
+
+class RelativeKernelGate(unittest.TestCase):
+    def check(self, rows):
+        fresh = {br.row_key(r): r for r in rows}
+        failures = []
+        br.check_kernels(fresh, None, "BENCH_baseline.json", 0.2, 1.2,
+                         failures)
+        return failures
+
+    def test_tn_pair_is_gated(self):
+        # A packed TN that lost its A-pack advantage must fail the gate.
+        failures = self.check([
+            kernel_row("tn", "tiled", 10.0),
+            kernel_row("tn", "packed", 10.5),
+        ])
+        self.assertTrue(any("tn" in f and "1.2x gate" in f
+                            for f in failures))
+
+    def test_fast_tn_pair_passes(self):
+        failures = self.check([
+            kernel_row("tn", "tiled", 10.0),
+            kernel_row("tn", "packed", 20.0),
+        ])
+        self.assertEqual(failures, [])
+
+
+class EndToEnd(unittest.TestCase):
+    def run_main(self, fresh_doc, baseline_doc, argv_tail):
+        with tempfile.TemporaryDirectory() as td:
+            fresh = os.path.join(td, "BENCH_linalg.json")
+            baseline = os.path.join(td, "BENCH_baseline.json")
+            with open(fresh, "w") as f:
+                json.dump(fresh_doc, f)
+            with open(baseline, "w") as f:
+                json.dump(baseline_doc, f)
+            old_argv = sys.argv
+            sys.argv = ["bench_regression.py", "--fresh", fresh,
+                        "--baseline", baseline] + argv_tail
+            try:
+                return br.main()
+            finally:
+                sys.argv = old_argv
+
+    def test_tail_only_report_passes_without_require(self):
+        rc = self.run_main({"serving_tail": [tail_row()]}, TAIL_BASE, [])
+        self.assertEqual(rc, 0)
+
+    def test_missing_tail_section_fails_under_require(self):
+        # CI mode: a report whose serving_tail section vanished must
+        # fail, not silently skip the fused-batching gate.
+        doc = {"serving_tail": [tail_row()]}
+        rc = self.run_main(doc, TAIL_BASE, ["--require-serving"])
+        self.assertEqual(rc, 1, "other sections missing -> CI failure")
+        del doc["serving_tail"]
+        doc["serving"] = []
+        rc = self.run_main(doc, TAIL_BASE, [])
+        self.assertEqual(rc, 1, "an effectively empty report must fail")
+
+    def test_degraded_tail_row_fails(self):
+        doc = {"serving_tail": [tail_row(fused_vs_per_adapter=0.9)]}
+        rc = self.run_main(doc, TAIL_BASE, [])
+        self.assertEqual(rc, 1)
+
+
+if __name__ == "__main__":
+    unittest.main()

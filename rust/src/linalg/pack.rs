@@ -1,3 +1,4 @@
+// lint: hot-path
 //! Operand packing for the packed micro-kernel backend.
 //!
 //! The NN/TN micro-kernels in [`super::packed`] read B through

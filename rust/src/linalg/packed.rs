@@ -1,3 +1,4 @@
+// lint: hot-path
 //! Packed backend: register-blocked micro-kernels over packed B panels
 //! with runtime-selected wide-lane SIMD.
 //!
@@ -247,6 +248,8 @@ fn nt_body<const FMA: bool>(
 // by `simd::level()`'s `is_x86_feature_detected!` probe.
 // ---------------------------------------------------------------------
 
+// SAFETY: callers must guarantee avx2+fma support — upheld at every
+// call site by dispatching only when `simd::level()` probes Avx2Fma.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 #[target_feature(enable = "fma")]
@@ -255,6 +258,8 @@ unsafe fn nn_avx2fma(a: &[f32], packed: &[f32], out: &mut [f32],
     nn_body::<true>(a, packed, out, rows, k, n);
 }
 
+// SAFETY: callers must guarantee avx2+fma support — upheld at every
+// call site by dispatching only when `simd::level()` probes Avx2Fma.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 #[target_feature(enable = "fma")]

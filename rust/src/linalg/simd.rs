@@ -1,3 +1,4 @@
+// lint: hot-path
 //! Portable wide-lane SIMD primitives for the packed backend.
 //!
 //! `std::simd` is nightly-only, so the vector type here is a plain

@@ -156,6 +156,7 @@ impl AdaptedModel {
     ) -> AdaptedModel {
         AdaptedModel::new(ModelSpec::single(site_name, shape, a, b),
                           cache_budget_bytes)
+            // lint: allow(panic) — documented contract: zero dims panic at insert time (old registry behavior); a 1-site spec is otherwise valid by construction.
             .expect("single-site spec with nonzero dims is always valid")
     }
 
@@ -738,7 +739,9 @@ impl AdaptedModel {
             self.spec.len()
         );
         let mut outs = self.forward(name, std::slice::from_ref(x))?;
-        Ok(outs.pop().expect("1-site forward yields one output"))
+        outs.pop().ok_or_else(|| {
+            anyhow::anyhow!("1-site forward yielded no output")
+        })
     }
 }
 

@@ -7,6 +7,9 @@ use crate::runtime::artifact::TensorSpec;
 /// f32 tensor → Literal with the given dims.
 pub fn lit_f32(shape: &[usize], data: &[f32]) -> anyhow::Result<Literal> {
     debug_assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+    // SAFETY: reinterpreting &[f32] as &[u8] — u8 has alignment 1, the
+    // byte length covers exactly the borrowed buffer (4 bytes per f32,
+    // no padding), and the slice's lifetime is bounded by `data`.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8,
                                    data.len() * 4)
@@ -21,6 +24,8 @@ pub fn lit_f32(shape: &[usize], data: &[f32]) -> anyhow::Result<Literal> {
 /// i32 tensor → Literal.
 pub fn lit_i32(shape: &[usize], data: &[i32]) -> anyhow::Result<Literal> {
     debug_assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+    // SAFETY: same as `lit_f32` — &[i32] viewed as bytes, alignment 1,
+    // exact length, lifetime bounded by the `data` borrow.
     let bytes: &[u8] = unsafe {
         std::slice::from_raw_parts(data.as_ptr() as *const u8,
                                    data.len() * 4)

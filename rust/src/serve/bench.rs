@@ -1,3 +1,4 @@
+// lint: allow-file(panic) — bench driver, not a request path: a panic aborts the measurement run loudly instead of producing a silently wrong report.
 //! Synthetic open-loop serving workloads — the drivers behind the
 //! `serve-bench` CLI subcommand and `benches/serve_bench.rs`.
 //!

@@ -1,3 +1,4 @@
+// lint: hot-path
 //! Cross-worker recycling of batch **output** buffers.
 //!
 //! A batch's outputs outlive the worker that computed them — every
@@ -84,6 +85,7 @@ impl OutputPool {
             }
             None => {
                 self.allocs.fetch_add(1, Ordering::Relaxed);
+                // lint: allow(alloc) — pool-miss cold path: the whole point of the pool is that this arm stops running at steady state (the `allocs` counter is the proof the tests assert).
                 vec![0.0; len]
             }
         };
@@ -126,6 +128,7 @@ impl PooledOut {
     /// Mutable access for the worker filling the batch (before the
     /// buffer is `Arc`-shared with tickets).
     pub(crate) fn matrix_mut(&mut self) -> &mut Matrix {
+        // lint: allow(panic) — `mat` is Some from construction until Drop::drop; no API hands out the None state.
         self.mat.as_mut().expect("PooledOut holds its matrix until drop")
     }
 }
@@ -133,6 +136,7 @@ impl PooledOut {
 impl Deref for PooledOut {
     type Target = Matrix;
     fn deref(&self) -> &Matrix {
+        // lint: allow(panic) — Deref cannot return Result; `mat` is Some until Drop::drop as above.
         self.mat.as_ref().expect("PooledOut holds its matrix until drop")
     }
 }

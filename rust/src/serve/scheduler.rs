@@ -755,7 +755,13 @@ impl ClassQueues {
             if self.deficit[c] == 0 {
                 self.cursor = (c + 1) % 3;
             }
-            let (_, req) = self.queues[c].pop_front().expect("non-empty");
+            // Checked-empty above, but degrade to "no request" rather
+            // than panicking the batcher if `len` ever drifts from the
+            // queue contents.
+            let Some((_, req)) = self.queues[c].pop_front() else {
+                self.len = self.queues.iter().map(|q| q.len()).sum();
+                return None;
+            };
             self.len -= 1;
             return Some(req);
         }
@@ -1637,6 +1643,49 @@ mod tests {
             assert!(t.wait().is_ok(), "shutdown must drain, not drop");
         }
         assert!(server.submit_row("solo", vec![0.5; N]).is_err());
+    }
+
+    #[test]
+    fn poisoned_model_lock_still_answers_every_ticket() {
+        // A client thread panicking while holding the shared model
+        // mutex poisons it.  The workers' poison-recovering `lock()`
+        // must keep serving: every ticket submitted afterwards has to
+        // resolve (with an answer, not a hang or a dropped channel).
+        let model = test_model(&[("solo", 7)]);
+        let server = Server::new(model, &test_cfg(4, 200));
+        let shared = server.model();
+        let poisoner = std::thread::spawn(move || {
+            let _guard = shared.lock().unwrap();
+            panic!("poisoning the model lock on purpose");
+        });
+        assert!(poisoner.join().is_err(), "poisoner must panic");
+        assert!(
+            server.model().lock().is_err(),
+            "the model mutex must actually be poisoned"
+        );
+        let tickets: Vec<Ticket> = (0..8)
+            .map(|_| server.submit_row("solo", vec![0.5; N]).unwrap())
+            .collect();
+        // Wait with a hang guard: a regression here would block recv()
+        // forever, so the waits run on the side and are given 10s.
+        let waiter = std::thread::spawn(move || {
+            tickets.into_iter().map(Ticket::wait).collect::<Vec<_>>()
+        });
+        let t0 = std::time::Instant::now();
+        while !waiter.is_finished()
+            && t0.elapsed() < Duration::from_secs(10)
+        {
+            std::thread::yield_now();
+        }
+        assert!(
+            waiter.is_finished(),
+            "tickets hung after the model lock was poisoned"
+        );
+        for r in waiter.join().expect("waiter thread") {
+            let resp =
+                r.expect("poisoned lock must not lose the ticket");
+            assert_eq!(&*resp.adapter, "solo");
+        }
     }
 
     #[test]

@@ -1,3 +1,4 @@
+// lint: allow-file(panic) — bench driver, not a request path: a panic aborts the measurement run loudly instead of producing a silently wrong report.
 //! Loopback wire benchmark — the `serving_wire` report section behind
 //! `serve-bench --wire` and `benches/serve_bench.rs` scenario 4.
 //!

@@ -254,6 +254,9 @@ pub fn preload_checkpoints(
 /// The running gateway: HTTP edge + scheduler + shared model.
 pub struct Gateway {
     http: Option<HttpServer>,
+    /// Bound address, cached at startup so `addr()` stays answerable
+    /// (and panic-free) after `shutdown()` takes the server.
+    addr: std::net::SocketAddr,
     state: Arc<GatewayState>,
 }
 
@@ -315,15 +318,13 @@ impl Gateway {
         let http =
             HttpServer::bind(&wire_cfg.host, wire_cfg.port, &opts, handler)?;
         let _ = state.http_stats.set(http.stats_arc());
-        info!("wire: gateway listening on {}", http.addr());
-        Ok(Gateway { http: Some(http), state })
+        let addr = http.addr();
+        info!("wire: gateway listening on {addr}");
+        Ok(Gateway { http: Some(http), addr, state })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
-        self.http
-            .as_ref()
-            .expect("gateway is running")
-            .addr()
+        self.addr
     }
 
     pub fn state(&self) -> &Arc<GatewayState> {

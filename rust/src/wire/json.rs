@@ -385,10 +385,7 @@ impl<'a> Tokenizer<'a> {
                 }
                 b'\\' => {
                     let tail = self.raw_span(span, self.i)?;
-                    if owned.is_none() {
-                        owned = Some(String::new());
-                    }
-                    let out = owned.as_mut().expect("just initialized");
+                    let out = owned.get_or_insert_with(String::new);
                     out.push_str(tail);
                     self.i += 1;
                     self.escape(out)?;
@@ -516,14 +513,17 @@ pub fn parse_value(b: &[u8], limits: &Limits) -> anyhow::Result<Json> {
             Event::Key(k) => {
                 match stack.last_mut() {
                     Some(Holder::Obj(_, slot)) => *slot = Some(k.into_owned()),
-                    _ => unreachable!("tokenizer keys only appear in objects"),
+                    // The tokenizer only emits Key inside an object,
+                    // but a malformed event stream degrades to a parse
+                    // error rather than a worker abort.
+                    _ => anyhow::bail!("json key outside an object"),
                 }
                 None
             }
             Event::ObjEnd | Event::ArrEnd => match stack.pop() {
                 Some(Holder::Obj(m, _)) => Some(Json::Obj(m)),
                 Some(Holder::Arr(a)) => Some(Json::Arr(a)),
-                None => unreachable!("tokenizer balances containers"),
+                None => anyhow::bail!("unbalanced json container close"),
             },
             Event::Str(s) => Some(Json::Str(s.into_owned())),
             Event::Num(n) => Some(Json::Num(n)),
@@ -534,10 +534,12 @@ pub fn parse_value(b: &[u8], limits: &Limits) -> anyhow::Result<Json> {
             match stack.last_mut() {
                 None => root = Some(v),
                 Some(Holder::Arr(a)) => a.push(v),
-                Some(Holder::Obj(m, slot)) => {
-                    let k = slot.take().expect("key precedes member value");
-                    m.insert(k, v);
-                }
+                Some(Holder::Obj(m, slot)) => match slot.take() {
+                    Some(k) => {
+                        m.insert(k, v);
+                    }
+                    None => anyhow::bail!("json member value without key"),
+                },
             }
         }
     }
@@ -617,6 +619,7 @@ impl JsonWriter {
         let (is_obj, count) = self
             .stack
             .last_mut()
+            // lint: allow(panic) — documented builder contract (see type docs): misuse by a handler is a programming error caught by the wire tests, exactly like the asserts beside it.
             .expect("key outside any container");
         assert!(*is_obj, "key inside an array");
         if *count > 0 {

@@ -537,7 +537,9 @@ def main():
     baseline_doc = (load_doc(args.baseline)
                     if os.path.exists(args.baseline) else None)
     failures = []
+    evaluated = []  # gate sections actually checked this run
     if fresh:
+        evaluated.append(SECTION)
         check_kernels(fresh, baseline_doc, args.baseline, args.tolerance,
                       args.min_ratio, failures)
     elif args.require_serving:
@@ -547,6 +549,7 @@ def main():
         print(f"bench_regression: note — no `{SECTION}` rows; kernel "
               "checks skipped")
     if serving:
+        evaluated.append(SERVING_SECTION)
         check_serving(serving, baseline_doc, args.baseline,
                       args.require_serving, failures)
     elif args.require_serving:
@@ -556,6 +559,7 @@ def main():
         print(f"bench_regression: note — no `{SERVING_SECTION}` rows; "
               "serving checks skipped (CI runs with --require-serving)")
     if model:
+        evaluated.append(MODEL_SECTION)
         check_serving_model(model, baseline_doc, args.baseline,
                             args.require_serving, failures)
     elif args.require_serving:
@@ -567,6 +571,7 @@ def main():
               "model serving checks skipped (CI runs with "
               "--require-serving)")
     if wire:
+        evaluated.append(WIRE_SECTION)
         check_serving_wire(wire, baseline_doc, args.baseline,
                            args.require_serving, failures)
     elif args.require_serving:
@@ -578,6 +583,7 @@ def main():
               "wire serving checks skipped (CI runs with "
               "--require-serving)")
     if tail:
+        evaluated.append(TAIL_SECTION)
         check_serving_tail(tail, baseline_doc, args.baseline,
                            args.require_serving, failures)
     elif args.require_serving:
@@ -594,7 +600,10 @@ def main():
         for f in failures:
             print(f"  regression: {f}")
         return 1
-    print("\nbench_regression: PASS")
+    # Name the gates that actually ran: a PASS that silently evaluated
+    # fewer sections than expected should be visible in the CI log.
+    print("\nbench_regression: PASS — gates evaluated: "
+          + ", ".join(evaluated))
     return 0
 
 

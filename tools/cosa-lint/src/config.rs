@@ -1,0 +1,195 @@
+//! `lock_order.toml` loading — a purpose-built TOML subset so the
+//! crate stays zero-dependency.  Supported grammar: `#` comments,
+//! `[section]` headers, `[[level]]` array-of-tables headers, and
+//! `key = "string"` / `key = ["a", "b", ...]` pairs (arrays may span
+//! lines).  Anything else is a hard error: the config is part of the
+//! gate, so a typo must fail loudly, not parse as an empty rule set.
+
+use std::path::Path;
+
+/// One level of the declared lock hierarchy, outermost-first.
+#[derive(Debug, Clone)]
+pub struct Level {
+    pub name: String,
+    /// Receiver-path components matched lexically against
+    /// `.lock()/.read()/.write()` receivers.
+    pub receivers: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Config {
+    pub families: Vec<String>,
+    pub levels: Vec<Level>,
+}
+
+/// Removing any of these from `[rules] families` is a config error
+/// (exit 2), so CI fails when a rule family is switched off.
+pub const REQUIRED_FAMILIES: [&str; 4] =
+    ["unsafe-audit", "panic-freedom", "lock-order", "hot-path-alloc"];
+
+fn strip_line(raw: &str) -> &str {
+    match raw.find('#') {
+        Some(p) => raw[..p].trim(),
+        None => raw.trim(),
+    }
+}
+
+fn quoted_items(val: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut inside = false;
+    for chunk in val.split('"') {
+        if inside {
+            out.push(chunk.to_string());
+        }
+        inside = !inside;
+    }
+    out
+}
+
+impl Config {
+    pub fn load(path: &Path) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+        Config::parse(&text)
+            .map_err(|e| format!("{}: {e}", path.display()))
+    }
+
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let lines: Vec<&str> = text.lines().collect();
+        let mut families: Vec<String> = Vec::new();
+        let mut levels: Vec<Level> = Vec::new();
+        let mut section = String::new();
+        let mut i = 0usize;
+        while i < lines.len() {
+            let lineno = i + 1;
+            let ln = strip_line(lines[i]).to_string();
+            i += 1;
+            if ln.is_empty() {
+                continue;
+            }
+            if ln == "[[level]]" {
+                levels.push(Level {
+                    name: String::new(),
+                    receivers: Vec::new(),
+                });
+                section = "level".to_string();
+                continue;
+            }
+            if ln.starts_with('[') {
+                section =
+                    ln.trim_matches(|c| c == '[' || c == ']').to_string();
+                continue;
+            }
+            let eq = ln.find('=').ok_or_else(|| {
+                format!("line {lineno}: expected `key = value`")
+            })?;
+            let key = ln[..eq].trim().to_string();
+            let mut val = ln[eq + 1..].trim().to_string();
+            if val.starts_with('[') {
+                while !val.contains(']') && i < lines.len() {
+                    val.push(' ');
+                    val.push_str(strip_line(lines[i]));
+                    i += 1;
+                }
+                if !val.contains(']') {
+                    return Err(format!(
+                        "line {lineno}: unterminated array for `{key}`"
+                    ));
+                }
+                let items = quoted_items(&val);
+                match (section.as_str(), key.as_str()) {
+                    ("rules", "families") => families = items,
+                    ("level", "receivers") => {
+                        match levels.last_mut() {
+                            Some(l) => l.receivers = items,
+                            None => {
+                                return Err(format!(
+                                    "line {lineno}: `receivers` outside \
+                                     [[level]]"
+                                ))
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            } else if val.starts_with('"') {
+                let s = val.trim_matches('"').to_string();
+                if section == "level" && key == "name" {
+                    match levels.last_mut() {
+                        Some(l) => l.name = s,
+                        None => {
+                            return Err(format!(
+                                "line {lineno}: `name` outside [[level]]"
+                            ))
+                        }
+                    }
+                }
+            } else {
+                return Err(format!(
+                    "line {lineno}: unsupported value `{val}` (this \
+                     config reader takes strings and string arrays only)"
+                ));
+            }
+        }
+        for fam in REQUIRED_FAMILIES {
+            if !families.iter().any(|f| f == fam) {
+                return Err(format!(
+                    "rule family `{fam}` missing from [rules] families — \
+                     removing a family disables the gate, which is \
+                     exactly what this check exists to catch"
+                ));
+            }
+        }
+        if levels.len() < 2 {
+            return Err(
+                "lock hierarchy needs at least two [[level]] tables"
+                    .to_string(),
+            );
+        }
+        Ok(Config { families, levels })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = r#"
+[rules]
+families = [
+    "unsafe-audit",
+    "panic-freedom",
+    "lock-order",
+    "hot-path-alloc",
+]
+
+[[level]]
+name = "outer"
+receivers = ["server"]
+
+[[level]]
+name = "inner"
+receivers = ["model", "mdl"]
+"#;
+
+    #[test]
+    fn parses_levels_in_order() {
+        let cfg = Config::parse(GOOD).unwrap();
+        assert_eq!(cfg.levels.len(), 2);
+        assert_eq!(cfg.levels[0].name, "outer");
+        assert_eq!(cfg.levels[1].receivers, vec!["model", "mdl"]);
+    }
+
+    #[test]
+    fn missing_family_is_an_error() {
+        let bad = GOOD.replace("\"panic-freedom\",", "");
+        let err = Config::parse(&bad).unwrap_err();
+        assert!(err.contains("panic-freedom"), "err: {err}");
+    }
+
+    #[test]
+    fn too_few_levels_is_an_error() {
+        let bad = GOOD.split("[[level]]").next().unwrap().to_string();
+        assert!(Config::parse(&bad).is_err());
+    }
+}

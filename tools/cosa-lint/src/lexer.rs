@@ -1,0 +1,336 @@
+//! A hand-rolled Rust lexer — deliberately *not* a full grammar, just
+//! enough token fidelity for lexical lint rules to be exact where it
+//! matters: comments (line + nested block), strings (plain, raw with
+//! `#` fences, byte), char literals disambiguated from lifetimes,
+//! identifiers, numbers, and single-character punctuation.  Multi-char
+//! operators arrive as adjacent punct tokens (`::` is `:` `:`), which
+//! the rules handle explicitly.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Punct,
+    Str,
+    Char,
+    Lifetime,
+    Num,
+    Comment,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    /// 1-based line the token starts on.
+    pub line: u32,
+    /// Last line the token touches (differs from `line` only for
+    /// multi-line block comments and strings).
+    pub end_line: u32,
+}
+
+impl Tok {
+    pub fn is_punct(&self, ch: char) -> bool {
+        self.kind == Kind::Punct && self.text.chars().next() == Some(ch)
+    }
+
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == Kind::Ident && self.text == s
+    }
+}
+
+fn push(toks: &mut Vec<Tok>, kind: Kind, text: &[char], line: u32, end: u32) {
+    toks.push(Tok { kind, text: text.iter().collect(), line, end_line: end });
+}
+
+/// Scan a raw/byte string starting at a `r`/`b` prefix.  Returns the
+/// index just past the closing quote and the end line, or None if the
+/// characters at `i` are not actually a string prefix (e.g. the ident
+/// `break` starts with `b`, `r` may be a plain variable).
+fn str_prefix(cs: &[char], i: usize, line: u32) -> Option<(usize, u32)> {
+    let n = cs.len();
+    let mut j = i;
+    let mut pre = String::new();
+    while j < n
+        && (cs[j] == 'r' || cs[j] == 'b')
+        && pre.len() < 2
+        && !pre.contains(cs[j])
+    {
+        pre.push(cs[j]);
+        j += 1;
+    }
+    let mut hashes = 0usize;
+    if pre.contains('r') {
+        while j < n && cs[j] == '#' {
+            hashes += 1;
+            j += 1;
+        }
+    }
+    if j >= n || cs[j] != '"' {
+        return None;
+    }
+    j += 1;
+    let mut nl = line;
+    if pre.contains('r') {
+        // Raw string: no escapes; ends at `"` followed by `hashes` #s.
+        while j < n {
+            if cs[j] == '\n' {
+                nl += 1;
+                j += 1;
+                continue;
+            }
+            if cs[j] == '"' {
+                let mut h = 0usize;
+                while h < hashes && j + 1 + h < n && cs[j + 1 + h] == '#' {
+                    h += 1;
+                }
+                if h == hashes {
+                    return Some((j + 1 + hashes, nl));
+                }
+            }
+            j += 1;
+        }
+        return Some((j, nl));
+    }
+    // Byte string: ordinary escape rules.
+    while j < n {
+        match cs[j] {
+            '\\' => {
+                // A `\` at end-of-line is a line continuation — the
+                // escaped newline still advances the line counter.
+                if j + 1 < n && cs[j + 1] == '\n' {
+                    nl += 1;
+                }
+                j += 2;
+            }
+            '\n' => {
+                nl += 1;
+                j += 1;
+            }
+            '"' => return Some((j + 1, nl)),
+            _ => j += 1,
+        }
+    }
+    Some((j, nl))
+}
+
+fn scan_dq(cs: &[char], i: usize, line: u32) -> (usize, u32) {
+    let n = cs.len();
+    let mut j = i + 1;
+    let mut nl = line;
+    while j < n {
+        match cs[j] {
+            '\\' => {
+                if j + 1 < n && cs[j + 1] == '\n' {
+                    nl += 1;
+                }
+                j += 2;
+            }
+            '\n' => {
+                nl += 1;
+                j += 1;
+            }
+            '"' => return (j + 1, nl),
+            _ => j += 1,
+        }
+    }
+    (j, nl)
+}
+
+pub fn lex(src: &str) -> Vec<Tok> {
+    let cs: Vec<char> = src.chars().collect();
+    let n = cs.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < n {
+        let c = cs[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment (also doc `///` and inner `//!`).
+        if c == '/' && i + 1 < n && cs[i + 1] == '/' {
+            let start = i;
+            while i < n && cs[i] != '\n' {
+                i += 1;
+            }
+            push(&mut toks, Kind::Comment, &cs[start..i], line, line);
+            continue;
+        }
+        // Block comment, nested.
+        if c == '/' && i + 1 < n && cs[i + 1] == '*' {
+            let start = i;
+            let sl = line;
+            let mut depth = 1u32;
+            i += 2;
+            while i < n && depth > 0 {
+                if cs[i] == '/' && i + 1 < n && cs[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if cs[i] == '*' && i + 1 < n && cs[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if cs[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+            }
+            push(&mut toks, Kind::Comment, &cs[start..i], sl, line);
+            continue;
+        }
+        // Raw / byte strings (r"..", r#".."#, b"..", br".."), before
+        // the generic ident scan so the prefix letters don't lex as an
+        // ident.
+        if c == 'r' || c == 'b' {
+            if let Some((j, nl)) = str_prefix(&cs, i, line) {
+                push(&mut toks, Kind::Str, &cs[i..j], line, nl);
+                i = j;
+                line = nl;
+                continue;
+            }
+        }
+        if c == '"' {
+            let (j, nl) = scan_dq(&cs, i, line);
+            push(&mut toks, Kind::Str, &cs[i..j], line, nl);
+            i = j;
+            line = nl;
+            continue;
+        }
+        // `'`: lifetime (`'a`) vs char literal (`'a'`, `'\n'`, `'{'`).
+        if c == '\'' {
+            let j = i + 1;
+            if j < n && (cs[j] == '_' || cs[j].is_alphabetic()) {
+                let mut k = j;
+                while k < n && (cs[k] == '_' || cs[k].is_alphanumeric()) {
+                    k += 1;
+                }
+                if k < n && cs[k] == '\'' {
+                    push(&mut toks, Kind::Char, &cs[i..=k], line, line);
+                    i = k + 1;
+                } else {
+                    push(&mut toks, Kind::Lifetime, &cs[i..k], line, line);
+                    i = k;
+                }
+                continue;
+            }
+            if j < n && cs[j] == '\\' {
+                let mut k = j + 1;
+                if k < n && cs[k] == 'u' {
+                    while k < n && cs[k] != '}' {
+                        k += 1;
+                    }
+                    k += 1;
+                } else {
+                    k += 1;
+                }
+                while k < n && cs[k] != '\'' {
+                    k += 1;
+                }
+                let end = (k + 1).min(n);
+                push(&mut toks, Kind::Char, &cs[i..end], line, line);
+                i = end;
+                continue;
+            }
+            if j + 1 < n && cs[j + 1] == '\'' {
+                push(&mut toks, Kind::Char, &cs[i..j + 2], line, line);
+                i = j + 2;
+                continue;
+            }
+            push(&mut toks, Kind::Punct, &cs[i..=i], line, line);
+            i += 1;
+            continue;
+        }
+        if c == '_' || c.is_alphabetic() {
+            let start = i;
+            while i < n && (cs[i] == '_' || cs[i].is_alphanumeric()) {
+                i += 1;
+            }
+            push(&mut toks, Kind::Ident, &cs[start..i], line, line);
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n && (cs[i] == '_' || cs[i].is_alphanumeric()) {
+                i += 1;
+            }
+            // A fractional part only when `.` is followed by a digit —
+            // never swallow `..` ranges or `1.max(2)` method calls.
+            if i < n
+                && cs[i] == '.'
+                && i + 1 < n
+                && cs[i + 1].is_ascii_digit()
+            {
+                i += 1;
+                while i < n && (cs[i] == '_' || cs[i].is_alphanumeric()) {
+                    i += 1;
+                }
+            }
+            push(&mut toks, Kind::Num, &cs[start..i], line, line);
+            continue;
+        }
+        push(&mut toks, Kind::Punct, &cs[i..=i], line, line);
+        i += 1;
+    }
+    toks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(Kind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let ks = kinds("fn f<'a>(x: &'a str) -> char { 'x' }");
+        assert!(ks.iter().any(|(k, t)| *k == Kind::Lifetime && t == "'a"));
+        assert!(ks.iter().any(|(k, t)| *k == Kind::Char && t == "'x'"));
+    }
+
+    #[test]
+    fn raw_strings_do_not_escape() {
+        let ks = kinds(r##"let s = r#"a \" b"#; let t = 1;"##);
+        assert!(ks.iter().any(|(k, _)| *k == Kind::Str));
+        assert!(ks.iter().any(|(k, t)| *k == Kind::Ident && t == "t"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let ks = kinds("/* outer /* inner */ still */ fn");
+        assert_eq!(ks.len(), 2);
+        assert_eq!(ks[0].0, Kind::Comment);
+        assert!(ks[1].1 == "fn");
+    }
+
+    #[test]
+    fn idents_starting_with_r_and_b() {
+        let ks = kinds("let broken = result; break;");
+        assert!(ks.iter().any(|(k, t)| *k == Kind::Ident && t == "broken"));
+        assert!(ks.iter().any(|(k, t)| *k == Kind::Ident && t == "break"));
+    }
+
+    #[test]
+    fn string_line_continuations_advance_the_line_counter() {
+        let src = "let s = \"a \\\n   b\";\nlet t = 1;";
+        let toks = lex(src);
+        let t = toks.iter().find(|t| t.is_ident("t")).unwrap();
+        assert_eq!(t.line, 3);
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges() {
+        let ks = kinds("for i in 0..10 { let x = 1.5; }");
+        assert!(ks.iter().any(|(k, t)| *k == Kind::Num && t == "0"));
+        assert!(ks.iter().any(|(k, t)| *k == Kind::Num && t == "10"));
+        assert!(ks.iter().any(|(k, t)| *k == Kind::Num && t == "1.5"));
+    }
+}

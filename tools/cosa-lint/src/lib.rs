@@ -1,0 +1,94 @@
+//! cosa-lint — repo-invariant static analysis for the CoSA serving
+//! stack, kept deliberately lexical and zero-dependency so the gate
+//! itself can never rot behind a dependency bump or a compiler
+//! upgrade.  Four rule families (see `rules`): unsafe-audit,
+//! panic-freedom, lock-order (+ lock-hygiene), hot-path-alloc.
+//!
+//! The library surface exists so the golden-fixture tests can drive
+//! `check_source` with virtual paths; the binary in `main.rs` is the
+//! CI entry point.
+
+pub mod config;
+pub mod lexer;
+pub mod rules;
+
+pub use config::{Config, REQUIRED_FAMILIES};
+pub use rules::{check_source, Finding};
+
+use std::path::{Path, PathBuf};
+
+/// Expand the `--check` argument into the directories to walk.
+/// Accepts either the repo root (walks `rust/src`, `rust/benches`,
+/// `examples`), the `rust` crate dir (walks its `src`/`benches` plus
+/// a sibling `examples`), or any plain directory (walked as-is).
+pub fn resolve_roots(arg: &Path) -> Vec<PathBuf> {
+    let mut roots = Vec::new();
+    if arg.join("rust/src").is_dir() {
+        roots.push(arg.join("rust/src"));
+        roots.push(arg.join("rust/benches"));
+        roots.push(arg.join("examples"));
+    } else if arg.join("src").is_dir() {
+        roots.push(arg.join("src"));
+        roots.push(arg.join("benches"));
+        if let Some(parent) = arg.parent() {
+            roots.push(parent.join("examples"));
+        }
+    } else {
+        roots.push(arg.to_path_buf());
+    }
+    roots.retain(|r| r.is_dir());
+    roots
+}
+
+/// All `.rs` files under `root`, recursively, in sorted order so the
+/// report is deterministic.
+pub fn collect_rs_files(root: &Path) -> Vec<PathBuf> {
+    fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+        let Ok(rd) = std::fs::read_dir(dir) else { return };
+        let mut entries: Vec<PathBuf> =
+            rd.flatten().map(|e| e.path()).collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                walk(&p, out);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    let mut out = Vec::new();
+    walk(root, &mut out);
+    out
+}
+
+/// Lint every `.rs` file reachable from `check_arg`.  Returns the
+/// findings (sorted by file then line) and the number of files
+/// inspected.
+pub fn run_check(
+    check_arg: &Path,
+    cfg: &Config,
+) -> Result<(Vec<Finding>, usize), String> {
+    let roots = resolve_roots(check_arg);
+    if roots.is_empty() {
+        return Err(format!(
+            "--check {}: no lintable directories found",
+            check_arg.display()
+        ));
+    }
+    let mut files = Vec::new();
+    for r in &roots {
+        files.extend(collect_rs_files(r));
+    }
+    files.sort();
+    files.dedup();
+    let mut findings = Vec::new();
+    for f in &files {
+        let src = std::fs::read_to_string(f)
+            .map_err(|e| format!("cannot read {}: {e}", f.display()))?;
+        findings.extend(check_source(&f.display().to_string(), &src, cfg));
+    }
+    findings.sort_by(|a, b| {
+        a.file.cmp(&b.file).then(a.line.cmp(&b.line))
+    });
+    Ok((findings, files.len()))
+}

@@ -1,0 +1,116 @@
+//! CI entry point: `cargo run -p cosa-lint -- --check rust`.
+//!
+//! Exit codes: 0 clean, 1 findings (printed `file:line: [rule] msg`),
+//! 2 usage or configuration error.  A config that drops a required
+//! rule family is a *config* error (exit 2), so CI fails loudly if
+//! someone switches a family off instead of fixing its findings.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use cosa_lint::{run_check, Config};
+
+const USAGE: &str = "usage: cosa-lint --check <dir> [--config <lock_order.toml>]
+
+  --check <dir>    repo root, the rust crate dir, or any directory of
+                   .rs files to lint
+  --config <path>  lock hierarchy + enabled rule families
+                   (default: tools/cosa-lint/lock_order.toml, searched
+                   upward from the checked directory)";
+
+/// Find `tools/cosa-lint/lock_order.toml` next to the checked tree:
+/// try the CWD first, then every ancestor of the `--check` path.
+fn default_config(check: &Path) -> Option<PathBuf> {
+    let rel = Path::new("tools/cosa-lint/lock_order.toml");
+    if rel.is_file() {
+        return Some(rel.to_path_buf());
+    }
+    let abs = check.canonicalize().unwrap_or_else(|_| check.to_path_buf());
+    let mut cur: Option<&Path> = Some(&abs);
+    while let Some(dir) = cur {
+        let cand = dir.join(rel);
+        if cand.is_file() {
+            return Some(cand);
+        }
+        cur = dir.parent();
+    }
+    None
+}
+
+fn main() -> ExitCode {
+    let mut check: Option<PathBuf> = None;
+    let mut config: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--check" => match args.next() {
+                Some(v) => check = Some(PathBuf::from(v)),
+                None => {
+                    eprintln!("cosa-lint: --check needs a directory");
+                    return ExitCode::from(2);
+                }
+            },
+            "--config" => match args.next() {
+                Some(v) => config = Some(PathBuf::from(v)),
+                None => {
+                    eprintln!("cosa-lint: --config needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("cosa-lint: unknown argument `{other}`");
+                eprintln!("{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let Some(check) = check else {
+        eprintln!("{USAGE}");
+        return ExitCode::from(2);
+    };
+    let config = match config.or_else(|| default_config(&check)) {
+        Some(c) => c,
+        None => {
+            eprintln!(
+                "cosa-lint: no lock_order.toml found (pass --config)"
+            );
+            return ExitCode::from(2);
+        }
+    };
+    let cfg = match Config::load(&config) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("cosa-lint: config error: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    match run_check(&check, &cfg) {
+        Ok((findings, nfiles)) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            if findings.is_empty() {
+                println!(
+                    "cosa-lint: clean — {nfiles} file(s), 0 findings \
+                     ({} families)",
+                    cfg.families.len()
+                );
+                ExitCode::SUCCESS
+            } else {
+                println!(
+                    "cosa-lint: {} finding(s) in {nfiles} file(s)",
+                    findings.len()
+                );
+                ExitCode::from(1)
+            }
+        }
+        Err(e) => {
+            eprintln!("cosa-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

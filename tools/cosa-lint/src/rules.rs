@@ -1,0 +1,1008 @@
+//! The four rule families, all lexical by design: cosa-lint never
+//! type-checks — it enforces *textual* invariants that survive
+//! refactors (a `// SAFETY:` comment travels with its `unsafe`, a
+//! lock receiver keeps its field name) and fails closed on the
+//! patterns it cannot see.  See README "Static analysis gates" for
+//! the rule semantics and the `// lint:` annotation grammar.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use crate::config::Config;
+use crate::lexer::{lex, Kind, Tok};
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule,
+               self.msg)
+    }
+}
+
+// ---------------------------------------------------------- helpers
+
+fn next_sig(toks: &[Tok], mut i: usize) -> Option<usize> {
+    while i < toks.len() {
+        if toks[i].kind != Kind::Comment {
+            return Some(i);
+        }
+        i += 1;
+    }
+    None
+}
+
+fn prev_sig(toks: &[Tok], i: usize) -> Option<usize> {
+    let mut k = i;
+    while k > 0 {
+        k -= 1;
+        if toks[k].kind != Kind::Comment {
+            return Some(k);
+        }
+    }
+    None
+}
+
+fn punct_at(toks: &[Tok], i: Option<usize>, ch: char) -> bool {
+    matches!(i, Some(j) if toks[j].is_punct(ch))
+}
+
+/// Forward scan from an opening delimiter to its match.
+fn match_fwd(toks: &[Tok], mut i: usize, open: char, close: char) -> usize {
+    let mut depth = 0i64;
+    while i < toks.len() {
+        if toks[i].is_punct(open) {
+            depth += 1;
+        } else if toks[i].is_punct(close) {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        i += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Backward scan from a closing delimiter to its match.
+fn match_back(toks: &[Tok], mut i: usize, open: char, close: char) -> usize {
+    let mut depth = 0i64;
+    loop {
+        if toks[i].is_punct(close) {
+            depth += 1;
+        } else if toks[i].is_punct(open) {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        if i == 0 {
+            return 0;
+        }
+        i -= 1;
+    }
+}
+
+fn in_spans(i: usize, spans: &[(usize, usize)]) -> bool {
+    spans.iter().any(|&(a, b)| a <= i && i <= b)
+}
+
+fn line_map(toks: &[Tok]) -> BTreeMap<u32, Vec<usize>> {
+    let mut lm: BTreeMap<u32, Vec<usize>> = BTreeMap::new();
+    for (idx, t) in toks.iter().enumerate() {
+        for l in t.line..=t.end_line {
+            lm.entry(l).or_default().push(idx);
+        }
+    }
+    lm
+}
+
+/// Token ranges covered by `#[cfg(test)]` items (the attribute's
+/// following brace block).
+fn test_spans(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        if toks[i].is_punct('#') && i + 1 < n {
+            let mut j = i + 1;
+            if toks[j].is_punct('!') {
+                j += 1;
+            }
+            if j < n && toks[j].is_punct('[') {
+                let mut depth = 1i64;
+                let mut k = j + 1;
+                let mut idents: Vec<&str> = Vec::new();
+                while k < n && depth > 0 {
+                    let t = &toks[k];
+                    if t.is_punct('[') {
+                        depth += 1;
+                    } else if t.is_punct(']') {
+                        depth -= 1;
+                    } else if t.kind == Kind::Ident {
+                        idents.push(&t.text);
+                    }
+                    k += 1;
+                }
+                if idents.contains(&"cfg") && idents.contains(&"test") {
+                    let mut m = k;
+                    while m < n {
+                        if toks[m].is_punct(';') {
+                            break;
+                        }
+                        if toks[m].is_punct('{') {
+                            spans.push((m, match_fwd(toks, m, '{', '}')));
+                            break;
+                        }
+                        m += 1;
+                    }
+                }
+                i = k;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    spans
+}
+
+struct FnSpan {
+    name: String,
+    /// Index of the `fn` keyword token.
+    ftok: usize,
+    /// Index of the body `{`.
+    b0: usize,
+    /// Index of the matching `}`.
+    b1: usize,
+}
+
+fn fn_spans(toks: &[Tok]) -> Vec<FnSpan> {
+    let mut res = Vec::new();
+    let n = toks.len();
+    for i in 0..n {
+        if !toks[i].is_ident("fn") {
+            continue;
+        }
+        let Some(j) = next_sig(toks, i + 1) else { continue };
+        if toks[j].kind != Kind::Ident {
+            continue; // `fn(..)` pointer type, not an item
+        }
+        let name = toks[j].text.clone();
+        let mut k = j + 1;
+        let mut pd = 0i64;
+        while k < n {
+            let t = &toks[k];
+            if t.is_punct('(') || t.is_punct('[') {
+                pd += 1;
+            } else if t.is_punct(')') || t.is_punct(']') {
+                pd -= 1;
+            } else if t.is_punct(';') && pd == 0 {
+                break; // trait method declaration without a body
+            } else if t.is_punct('{') && pd == 0 {
+                res.push(FnSpan {
+                    name,
+                    ftok: i,
+                    b0: k,
+                    b1: match_fwd(toks, k, '{', '}'),
+                });
+                break;
+            }
+            k += 1;
+        }
+    }
+    res
+}
+
+// ------------------------------------------------------- directives
+
+const KNOWN_RULES: [&str; 4] = ["panic", "alloc", "lock", "unsafe"];
+
+/// Strip comment sigils: `// `, `/* */`, `///`, `//!`, leading `*`s.
+fn strip_comment(text: &str) -> &str {
+    let mut t = text;
+    if let Some(s) = t.strip_prefix("/*") {
+        t = s.strip_suffix("*/").unwrap_or(s);
+    }
+    t.trim_start_matches(|c| matches!(c, '/' | '*' | '!' | ' ' | '\t'))
+}
+
+fn is_safety(text: &str) -> bool {
+    strip_comment(text).lines().any(|ln| {
+        ln.trim()
+            .trim_start_matches(|c| {
+                matches!(c, '/' | '*' | '!' | ' ' | '\t')
+            })
+            .starts_with("SAFETY:")
+    })
+}
+
+#[derive(Default)]
+struct Directives {
+    file_allows: HashSet<String>,
+    line_allows: HashMap<String, HashSet<u32>>,
+    hot_path: bool,
+    setup_marks: Vec<usize>,
+}
+
+impl Directives {
+    fn allowed(&self, rule: &str, line: u32) -> bool {
+        self.file_allows.contains(rule)
+            || self
+                .line_allows
+                .get(rule)
+                .is_some_and(|s| s.contains(&line))
+    }
+}
+
+/// `allow(rule) reason` / `allow-file(rule) reason` after `lint:`.
+fn parse_allow(rest: &str) -> Option<(bool, String, String)> {
+    let (filewide, tail) = if let Some(t) = rest.strip_prefix("allow-file(")
+    {
+        (true, t)
+    } else if let Some(t) = rest.strip_prefix("allow(") {
+        (false, t)
+    } else {
+        return None;
+    };
+    let close = tail.find(')')?;
+    let rule = tail[..close].trim().to_string();
+    if rule.is_empty()
+        || !rule
+            .chars()
+            .all(|c| c.is_alphanumeric() || c == '-' || c == '_')
+    {
+        return None;
+    }
+    Some((filewide, rule, tail[close + 1..].to_string()))
+}
+
+fn clean_reason(raw: &str) -> String {
+    raw.trim()
+        .trim_start_matches(|c| {
+            matches!(c, '\u{2014}' | '\u{2013}' | ':' | '-' | ' ' | '\t')
+        })
+        .trim()
+        .to_string()
+}
+
+fn parse_directives(
+    toks: &[Tok],
+    findings: &mut Vec<Finding>,
+    path: &str,
+) -> Directives {
+    let mut d = Directives::default();
+    let first_code = next_sig(toks, 0).unwrap_or(toks.len());
+    for (idx, t) in toks.iter().enumerate() {
+        if t.kind != Kind::Comment {
+            continue;
+        }
+        let body = strip_comment(&t.text).trim();
+        let Some(rest) = body.strip_prefix("lint:") else { continue };
+        let rest = rest.trim();
+        if rest == "hot-path" {
+            if idx < first_code {
+                d.hot_path = true;
+            } else {
+                findings.push(Finding {
+                    file: path.to_string(),
+                    line: t.line,
+                    rule: "allowlist",
+                    msg: "`lint: hot-path` must precede all code (put \
+                          it in the file header)"
+                        .to_string(),
+                });
+            }
+            continue;
+        }
+        if rest == "setup" {
+            d.setup_marks.push(idx);
+            continue;
+        }
+        let Some((filewide, rule, raw_reason)) = parse_allow(rest) else {
+            findings.push(Finding {
+                file: path.to_string(),
+                line: t.line,
+                rule: "allowlist",
+                msg: format!("unrecognized `lint:` directive `{rest}`"),
+            });
+            continue;
+        };
+        if !KNOWN_RULES.contains(&rule.as_str()) {
+            findings.push(Finding {
+                file: path.to_string(),
+                line: t.line,
+                rule: "allowlist",
+                msg: format!(
+                    "unknown rule `{rule}` in allow (expected one of \
+                     {KNOWN_RULES:?})"
+                ),
+            });
+            continue;
+        }
+        if clean_reason(&raw_reason).is_empty() {
+            findings.push(Finding {
+                file: path.to_string(),
+                line: t.line,
+                rule: "allowlist",
+                msg: format!(
+                    "allow({rule}) without a reason — write `// lint: \
+                     allow({rule}) — <why>`"
+                ),
+            });
+            continue;
+        }
+        if filewide {
+            if idx < first_code {
+                d.file_allows.insert(rule);
+            } else {
+                findings.push(Finding {
+                    file: path.to_string(),
+                    line: t.line,
+                    rule: "allowlist",
+                    msg: "allow-file must precede all code".to_string(),
+                });
+            }
+        } else {
+            let s = d.line_allows.entry(rule).or_default();
+            s.insert(t.line);
+            s.insert(t.end_line + 1);
+        }
+    }
+    d
+}
+
+// ----------------------------------------------- rule: unsafe-audit
+
+/// Walk backwards from `unsafe`, skipping attribute groups,
+/// visibility qualifiers, and comments, looking for a `// SAFETY:`.
+fn backward_safety(toks: &[Tok], i: usize) -> bool {
+    let mut k = i as i64 - 1;
+    while k >= 0 {
+        let t = &toks[k as usize];
+        if t.kind == Kind::Comment {
+            if is_safety(&t.text) {
+                return true;
+            }
+            k -= 1;
+            continue;
+        }
+        if t.is_punct(']') {
+            let mut m = match_back(toks, k as usize, '[', ']') as i64 - 1;
+            if m >= 0 && toks[m as usize].is_punct('!') {
+                m -= 1;
+            }
+            if m >= 0 && toks[m as usize].is_punct('#') {
+                k = m - 1;
+                continue;
+            }
+            return false;
+        }
+        if t.kind == Kind::Ident
+            && matches!(t.text.as_str(), "pub" | "const" | "extern")
+        {
+            k -= 1;
+            continue;
+        }
+        if t.is_punct(')') {
+            // `pub(crate)` and friends
+            let m = match_back(toks, k as usize, '(', ')');
+            match prev_sig(toks, m) {
+                Some(p) if toks[p].is_ident("pub") => {
+                    k = p as i64 - 1;
+                    continue;
+                }
+                _ => return false,
+            }
+        }
+        return false;
+    }
+    false
+}
+
+/// Accept a SAFETY comment on the contiguous run of comment-only (or
+/// attribute) lines directly above — covers `let x = unsafe { .. }`
+/// where the comment sits above the whole statement.
+fn lines_above_safety(
+    toks: &[Tok],
+    lm: &BTreeMap<u32, Vec<usize>>,
+    start_line: u32,
+) -> bool {
+    let mut l = start_line.saturating_sub(1);
+    while l >= 1 {
+        let Some(idxs) = lm.get(&l) else { return false };
+        if idxs.iter().all(|&k| toks[k].kind == Kind::Comment) {
+            if idxs.iter().any(|&k| is_safety(&toks[k].text)) {
+                return true;
+            }
+            l -= 1;
+            continue;
+        }
+        if toks[idxs[0]].is_punct('#') {
+            l -= 1;
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+fn rule_unsafe(
+    toks: &[Tok],
+    lm: &BTreeMap<u32, Vec<usize>>,
+    d: &Directives,
+    findings: &mut Vec<Finding>,
+    path: &str,
+) {
+    let n = toks.len();
+    for i in 0..n {
+        let t = &toks[i];
+        if !t.is_ident("unsafe") || d.allowed("unsafe", t.line) {
+            continue;
+        }
+        let mut ok = false;
+        // `unsafe { // SAFETY: ... }` — comment as first block token.
+        if let Some(j) = next_sig(toks, i + 1) {
+            if toks[j].is_punct('{')
+                && j + 1 < n
+                && toks[j + 1].kind == Kind::Comment
+                && is_safety(&toks[j + 1].text)
+            {
+                ok = true;
+            }
+        }
+        if !ok {
+            ok = backward_safety(toks, i);
+        }
+        if !ok {
+            ok = lines_above_safety(toks, lm, t.line);
+        }
+        if !ok {
+            findings.push(Finding {
+                file: path.to_string(),
+                line: t.line,
+                rule: "unsafe-audit",
+                msg: "`unsafe` without an immediately preceding \
+                      `// SAFETY:` comment"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------- rule: panic-freedom
+
+const PANIC_MACROS: [&str; 4] =
+    ["panic", "unreachable", "todo", "unimplemented"];
+
+fn rule_panic(
+    toks: &[Tok],
+    tspans: &[(usize, usize)],
+    d: &Directives,
+    findings: &mut Vec<Finding>,
+    path: &str,
+) {
+    for i in 0..toks.len() {
+        let t = &toks[i];
+        if t.kind != Kind::Ident || in_spans(i, tspans) {
+            continue;
+        }
+        let name = t.text.as_str();
+        if name == "unwrap" || name == "expect" {
+            let p = prev_sig(toks, i);
+            let nx = next_sig(toks, i + 1);
+            if punct_at(toks, p, '.')
+                && punct_at(toks, nx, '(')
+                && !d.allowed("panic", t.line)
+            {
+                findings.push(Finding {
+                    file: path.to_string(),
+                    line: t.line,
+                    rule: "panic-freedom",
+                    msg: format!(
+                        "`.{name}()` in a request-path module (convert \
+                         to error propagation or `// lint: \
+                         allow(panic) — <why>`)"
+                    ),
+                });
+            }
+        } else if PANIC_MACROS.contains(&name) {
+            let nx = next_sig(toks, i + 1);
+            if punct_at(toks, nx, '!') && !d.allowed("panic", t.line) {
+                findings.push(Finding {
+                    file: path.to_string(),
+                    line: t.line,
+                    rule: "panic-freedom",
+                    msg: format!(
+                        "`{name}!` in a request-path module"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+// ------------------------------------- rule: lock-order + hygiene
+
+/// The receiver path left of a `.lock()` dot: `self.stats.by_adapter`
+/// → `["self", "stats", "by_adapter"]`.  Method calls and index
+/// expressions in the chain are traversed (`self.inner().lock()`,
+/// `queues[c].lock()`).
+fn receiver_chain(toks: &[Tok], dot_idx: usize) -> Vec<String> {
+    let mut comps: Vec<String> = Vec::new();
+    let mut k = prev_sig(toks, dot_idx);
+    while let Some(ki) = k {
+        let t = &toks[ki];
+        if t.is_punct(')') {
+            let m = match_back(toks, ki, '(', ')');
+            k = prev_sig(toks, m);
+            continue;
+        }
+        if t.is_punct(']') {
+            let m = match_back(toks, ki, '[', ']');
+            match prev_sig(toks, m) {
+                Some(p) if toks[p].kind == Kind::Ident => k = Some(p),
+                _ => break,
+            }
+            continue;
+        }
+        if t.kind == Kind::Ident {
+            comps.push(t.text.clone());
+            let p = prev_sig(toks, ki);
+            if punct_at(toks, p, '.') {
+                k = prev_sig(toks, p.unwrap_or(0));
+                continue;
+            }
+            if punct_at(toks, p, ':') {
+                let p2 = prev_sig(toks, p.unwrap_or(0));
+                if punct_at(toks, p2, ':') {
+                    k = prev_sig(toks, p2.unwrap_or(0));
+                    continue;
+                }
+            }
+            break;
+        }
+        break;
+    }
+    comps.reverse();
+    comps
+}
+
+/// Detect a lock acquisition at ident `i`.  Returns the receiver
+/// components and the index just past the call's closing paren.
+fn detect_acquisition(
+    toks: &[Tok],
+    i: usize,
+) -> Option<(Vec<String>, usize)> {
+    let tx = toks[i].text.as_str();
+    if !matches!(tx, "lock" | "read" | "write") {
+        return None;
+    }
+    let p = prev_sig(toks, i);
+    let o = next_sig(toks, i + 1)?;
+    if !toks[o].is_punct('(') {
+        return None;
+    }
+    if punct_at(toks, p, '.') {
+        let c = next_sig(toks, o + 1)?;
+        if !toks[c].is_punct(')') {
+            return None; // has args → io::Read::read etc., not a lock
+        }
+        let dot = p.unwrap_or(0);
+        return Some((receiver_chain(toks, dot), c + 1));
+    }
+    if tx == "lock" {
+        // The scheduler's free-fn poison-recovering helper:
+        // `lock(&self.rx)`.  Skip the helper's own definition and any
+        // path-qualified call.
+        if let Some(pi) = p {
+            if toks[pi].is_ident("fn")
+                || toks[pi].is_punct('.')
+                || toks[pi].is_punct(':')
+            {
+                return None;
+            }
+        }
+        let close = match_fwd(toks, o, '(', ')');
+        let comps: Vec<String> = toks[o + 1..close]
+            .iter()
+            .filter(|t| t.kind == Kind::Ident && t.text != "mut")
+            .map(|t| t.text.clone())
+            .collect();
+        if comps.is_empty() {
+            return None;
+        }
+        return Some((comps, close + 1));
+    }
+    None
+}
+
+fn classify<'c>(
+    comps: &[String],
+    cfg: &'c Config,
+) -> Option<(usize, &'c str)> {
+    for c in comps.iter().rev() {
+        for (rank, lvl) in cfg.levels.iter().enumerate() {
+            if lvl.receivers.iter().any(|r| r == c) {
+                return Some((rank, &lvl.name));
+            }
+        }
+    }
+    None
+}
+
+struct Guard {
+    rank: usize,
+    lname: String,
+    recv: String,
+    /// `Some(v)` when bound by `let v = ...` (lives until `drop(v)`
+    /// or block end); `None` for statement temporaries.
+    var: Option<String>,
+    adepth: i64,
+    line: u32,
+}
+
+/// Calls whose result is still the guard (`.lock().unwrap_or_else(..)`
+/// hands the guard through); anything else chained after an
+/// acquisition consumes the guard within the statement.
+const GUARD_ADAPTERS: [&str; 4] =
+    ["unwrap", "expect", "unwrap_or_else", "unwrap_or_default"];
+
+#[allow(clippy::too_many_arguments)]
+fn analyze_fn(
+    toks: &[Tok],
+    b0: usize,
+    b1: usize,
+    nested: &[(usize, usize)],
+    cfg: &Config,
+    d: &Directives,
+    findings: &mut Vec<Finding>,
+    path: &str,
+) {
+    let mut depth = 0i64;
+    let mut guards: Vec<Guard> = Vec::new();
+    let mut pending_let: Option<(String, i64)> = None;
+    let mut i = b0;
+    while i <= b1 && i < toks.len() {
+        if let Some(&(_, e)) = nested.iter().find(|&&(s, _)| s == i) {
+            i = e + 1;
+            continue;
+        }
+        let t = &toks[i];
+        match t.kind {
+            Kind::Comment => {
+                i += 1;
+                continue;
+            }
+            Kind::Punct => {
+                if t.is_punct('{') {
+                    depth += 1;
+                } else if t.is_punct('}') {
+                    depth -= 1;
+                    guards.retain(|g| g.adepth <= depth);
+                    if pending_let.as_ref().is_some_and(|p| p.1 > depth) {
+                        pending_let = None;
+                    }
+                } else if t.is_punct(';') {
+                    guards.retain(|g| {
+                        !(g.var.is_none() && g.adepth >= depth)
+                    });
+                    if pending_let.as_ref().is_some_and(|p| p.1 == depth)
+                    {
+                        pending_let = None;
+                    }
+                }
+                i += 1;
+                continue;
+            }
+            Kind::Ident => {}
+            _ => {
+                i += 1;
+                continue;
+            }
+        }
+        let tx = t.text.as_str();
+        if tx == "let" {
+            let mut j = next_sig(toks, i + 1);
+            if let Some(ji) = j {
+                if toks[ji].is_ident("mut") {
+                    j = next_sig(toks, ji + 1);
+                }
+            }
+            if let Some(ji) = j {
+                if toks[ji].kind == Kind::Ident {
+                    pending_let = Some((toks[ji].text.clone(), depth));
+                }
+            }
+            i += 1;
+            continue;
+        }
+        if tx == "drop" {
+            if let Some(j) = next_sig(toks, i + 1) {
+                if toks[j].is_punct('(') {
+                    if let Some(j2) = next_sig(toks, j + 1) {
+                        if toks[j2].kind == Kind::Ident {
+                            let vn = toks[j2].text.clone();
+                            guards.retain(|g| {
+                                g.var.as_deref() != Some(vn.as_str())
+                            });
+                        }
+                    }
+                }
+            }
+            i += 1;
+            continue;
+        }
+        if let Some((comps, after)) = detect_acquisition(toks, i) {
+            if let Some((rank, lname)) = classify(&comps, cfg) {
+                let recv = comps.join(".");
+                for g in &guards {
+                    if rank < g.rank && !d.allowed("lock", t.line) {
+                        findings.push(Finding {
+                            file: path.to_string(),
+                            line: t.line,
+                            rule: "lock-order",
+                            msg: format!(
+                                "acquired `{lname}` lock (`{recv}`) \
+                                 while holding `{}` lock (`{}`, line \
+                                 {}) — hierarchy is outermost-first \
+                                 in lock_order.toml",
+                                g.lname, g.recv, g.line
+                            ),
+                        });
+                    }
+                }
+                // Skip guard-preserving adapters, then decide whether
+                // the guard is let-bound or a statement temporary.
+                let mut j = after;
+                let mut jj = next_sig(toks, j);
+                loop {
+                    if punct_at(toks, jj, '.') {
+                        let nm = next_sig(toks, jj.unwrap_or(0) + 1);
+                        if let Some(nmi) = nm {
+                            if toks[nmi].kind == Kind::Ident
+                                && GUARD_ADAPTERS
+                                    .contains(&toks[nmi].text.as_str())
+                            {
+                                if let Some(op) = next_sig(toks, nmi + 1)
+                                {
+                                    if toks[op].is_punct('(') {
+                                        j = match_fwd(
+                                            toks, op, '(', ')',
+                                        ) + 1;
+                                        jj = next_sig(toks, j);
+                                        continue;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    break;
+                }
+                let chained = punct_at(toks, jj, '.');
+                let var = if !chained {
+                    pending_let
+                        .as_ref()
+                        .filter(|p| p.1 == depth)
+                        .map(|p| p.0.clone())
+                } else {
+                    None
+                };
+                guards.push(Guard {
+                    rank,
+                    lname: lname.to_string(),
+                    recv,
+                    var,
+                    adepth: depth,
+                    line: t.line,
+                });
+            }
+            i += 1;
+            continue;
+        }
+        if !guards.is_empty() {
+            let held = &guards[guards.len() - 1];
+            if tx == "File" {
+                let nx = next_sig(toks, i + 1);
+                if punct_at(toks, nx, ':') && !d.allowed("lock", t.line) {
+                    findings.push(Finding {
+                        file: path.to_string(),
+                        line: t.line,
+                        rule: "lock-hygiene",
+                        msg: format!(
+                            "`File::` I/O while holding the `{}` lock \
+                             (`{}`, line {})",
+                            held.lname, held.recv, held.line
+                        ),
+                    });
+                }
+            } else if tx.starts_with("read_") || tx.starts_with("regen_")
+            {
+                let nx = next_sig(toks, i + 1);
+                if punct_at(toks, nx, '(') && !d.allowed("lock", t.line)
+                {
+                    findings.push(Finding {
+                        file: path.to_string(),
+                        line: t.line,
+                        rule: "lock-hygiene",
+                        msg: format!(
+                            "`{tx}()` (I/O / regen) while holding the \
+                             `{}` lock (`{}`, line {})",
+                            held.lname, held.recv, held.line
+                        ),
+                    });
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+fn rule_lock(
+    toks: &[Tok],
+    tspans: &[(usize, usize)],
+    fns: &[FnSpan],
+    cfg: &Config,
+    d: &Directives,
+    findings: &mut Vec<Finding>,
+    path: &str,
+) {
+    for f in fns {
+        if in_spans(f.b0, tspans) {
+            continue;
+        }
+        let nested: Vec<(usize, usize)> = fns
+            .iter()
+            .filter(|g| g.b0 > f.b0 && g.b1 < f.b1)
+            .map(|g| (g.b0, g.b1))
+            .collect();
+        analyze_fn(toks, f.b0, f.b1, &nested, cfg, d, findings, path);
+    }
+}
+
+// ------------------------------------------ rule: hot-path allocs
+
+const SETUP_PREFIXES: [&str; 7] =
+    ["new_", "with_", "from_", "setup", "init", "prepare", "prealloc"];
+
+fn is_setup_name(name: &str) -> bool {
+    name == "new"
+        || name == "default"
+        || SETUP_PREFIXES.iter().any(|p| name.starts_with(p))
+}
+
+fn rule_alloc(
+    toks: &[Tok],
+    tspans: &[(usize, usize)],
+    fns: &[FnSpan],
+    d: &Directives,
+    findings: &mut Vec<Finding>,
+    path: &str,
+) {
+    if !d.hot_path {
+        return;
+    }
+    let mut setup_ranges: Vec<(usize, usize)> = Vec::new();
+    for f in fns {
+        let marked = d.setup_marks.iter().any(|&m| {
+            m < f.ftok
+                && fns.iter().all(|g| !(m < g.ftok && g.ftok < f.ftok))
+        });
+        if is_setup_name(&f.name) || marked {
+            setup_ranges.push((f.b0, f.b1));
+        }
+    }
+    let n = toks.len();
+    let mut flag =
+        |findings: &mut Vec<Finding>, line: u32, what: &str| {
+            if !d.allowed("alloc", line) {
+                findings.push(Finding {
+                    file: path.to_string(),
+                    line,
+                    rule: "hot-path-alloc",
+                    msg: format!(
+                        "`{what}` in a `lint: hot-path` file outside a \
+                         setup fn"
+                    ),
+                });
+            }
+        };
+    for i in 0..n {
+        let t = &toks[i];
+        if t.kind != Kind::Ident
+            || in_spans(i, tspans)
+            || in_spans(i, &setup_ranges)
+        {
+            continue;
+        }
+        let tx = t.text.as_str();
+        if tx == "Vec" || tx == "Box" {
+            let a = next_sig(toks, i + 1);
+            if !punct_at(toks, a, ':') {
+                continue;
+            }
+            let b = next_sig(toks, a.unwrap_or(0) + 1);
+            if !punct_at(toks, b, ':') {
+                continue;
+            }
+            let c = next_sig(toks, b.unwrap_or(0) + 1);
+            if let Some(ci) = c {
+                if toks[ci].is_ident("new") {
+                    let o = next_sig(toks, ci + 1);
+                    if punct_at(toks, o, '(') {
+                        flag(findings, t.line, &format!("{tx}::new()"));
+                    }
+                }
+            }
+        } else if tx == "vec" {
+            let a = next_sig(toks, i + 1);
+            if punct_at(toks, a, '!') {
+                flag(findings, t.line, "vec![]");
+            }
+        } else if tx == "to_vec" || tx == "collect" {
+            let p = prev_sig(toks, i);
+            if !punct_at(toks, p, '.') {
+                continue;
+            }
+            let a = next_sig(toks, i + 1);
+            if punct_at(toks, a, '(') {
+                flag(findings, t.line, &format!(".{tx}()"));
+            } else if punct_at(toks, a, ':') {
+                let b = next_sig(toks, a.unwrap_or(0) + 1);
+                if !punct_at(toks, b, ':') {
+                    continue;
+                }
+                let c = next_sig(toks, b.unwrap_or(0) + 1);
+                if punct_at(toks, c, '<') {
+                    // skip the turbofish
+                    let mut depth = 1i64;
+                    let mut k = c.unwrap_or(0) + 1;
+                    while k < n && depth > 0 {
+                        if toks[k].is_punct('<') {
+                            depth += 1;
+                        } else if toks[k].is_punct('>') {
+                            depth -= 1;
+                        }
+                        k += 1;
+                    }
+                    let o = next_sig(toks, k);
+                    if punct_at(toks, o, '(') {
+                        flag(findings, t.line, &format!(".{tx}::<..>()"));
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------- driver
+
+/// Lint one file.  `path` decides rule scoping (request-path modules,
+/// `tests/` exemption), so callers may pass a virtual path when the
+/// source does not live where it is pretended to (fixtures do this).
+pub fn check_source(path: &str, src: &str, cfg: &Config) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let toks = lex(src);
+    let lm = line_map(&toks);
+    let tspans = test_spans(&toks);
+    let fns = fn_spans(&toks);
+    let d = parse_directives(&toks, &mut findings, path);
+    let norm = path.replace('\\', "/");
+    let comps: Vec<&str> = norm.split('/').collect();
+    let dirs = &comps[..comps.len().saturating_sub(1)];
+    let in_tests = dirs.iter().any(|c| *c == "tests");
+    let request_path = dirs
+        .iter()
+        .any(|c| matches!(*c, "serve" | "wire" | "model" | "linalg"));
+    rule_unsafe(&toks, &lm, &d, &mut findings, path);
+    if request_path && !in_tests {
+        rule_panic(&toks, &tspans, &d, &mut findings, path);
+    }
+    rule_lock(&toks, &tspans, &fns, cfg, &d, &mut findings, path);
+    rule_alloc(&toks, &tspans, &fns, &d, &mut findings, path);
+    findings
+}

@@ -1,0 +1,19 @@
+//! Fixture: the `lint:` directive grammar.  A reasoned allow
+//! suppresses its finding; a reason-less allow and an unknown rule
+//! each produce an `allowlist` finding AND leave the original
+//! finding in place.
+
+pub fn good(v: Option<u32>) -> u32 {
+    // lint: allow(panic) — invariant: caller checked is_some().
+    v.unwrap()
+}
+
+pub fn missing_reason(v: Option<u32>) -> u32 {
+    // lint: allow(panic)
+    v.unwrap()
+}
+
+pub fn unknown_rule(v: Option<u32>) -> u32 {
+    // lint: allow(crashes) — not a rule family.
+    v.unwrap()
+}

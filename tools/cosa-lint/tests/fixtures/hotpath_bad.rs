@@ -1,0 +1,17 @@
+// lint: hot-path
+//! Fixture: five allocation sites on the hot path — Vec::new, vec!,
+//! .to_vec(), Box::new, and a turbofish .collect::<..>().
+
+pub fn step(xs: &[f32]) -> Vec<f32> {
+    let mut out = Vec::new();
+    out.extend(xs.iter().map(|v| v * 2.0));
+    let tail = vec![0.0f32; 2];
+    let copied = xs.to_vec();
+    let boxed = Box::new(1.0f32);
+    let squares = xs.iter().map(|v| v * v).collect::<Vec<f32>>();
+    out.extend(tail);
+    out.extend(copied);
+    out.push(*boxed);
+    out.extend(squares);
+    out
+}

@@ -1,0 +1,8 @@
+//! Fixture: the same allocation patterns, but the file never opts in
+//! with `// lint: hot-path`, so the alloc rule stays silent.
+
+pub fn step(xs: &[f32]) -> Vec<f32> {
+    let mut out = Vec::new();
+    out.extend(xs.to_vec());
+    out
+}

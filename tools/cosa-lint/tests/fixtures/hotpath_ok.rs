@@ -1,0 +1,31 @@
+// lint: hot-path
+//! Fixture: a hot-path file where every allocation lives in a setup
+//! fn (recognized by name or by a `// lint: setup` mark).
+
+pub struct Scratch {
+    buf: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new(n: usize) -> Scratch {
+        Scratch { buf: vec![0.0; n] }
+    }
+
+    pub fn with_capacity(n: usize) -> Scratch {
+        let mut buf = Vec::new();
+        buf.reserve(n);
+        Scratch { buf }
+    }
+
+    pub fn step(&mut self) -> f32 {
+        for v in self.buf.iter_mut() {
+            *v *= 2.0;
+        }
+        self.buf.iter().sum()
+    }
+}
+
+// lint: setup
+fn warm() -> Vec<f32> {
+    vec![1.0; 8]
+}

@@ -1,0 +1,27 @@
+//! Fixture: one hierarchy inversion plus two hygiene violations
+//! (filesystem I/O and a `read_*` call while a guard is live).
+
+use std::sync::Mutex;
+
+pub struct State {
+    pub queue: Mutex<Vec<u32>>,
+    pub model: Mutex<u32>,
+}
+
+fn read_checkpoint(path: &str) -> u32 {
+    path.len() as u32
+}
+
+pub fn inverted(s: &State) -> u32 {
+    let m = s.model.lock().unwrap_or_else(|p| p.into_inner());
+    let q = s.queue.lock().unwrap_or_else(|p| p.into_inner());
+    *m + q.len() as u32
+}
+
+pub fn io_under_lock(s: &State) -> u32 {
+    let m = s.model.lock().unwrap_or_else(|p| p.into_inner());
+    let side = read_checkpoint("ckpt.bin");
+    let f = std::fs::File::open("ckpt.bin");
+    drop(f);
+    *m + side
+}

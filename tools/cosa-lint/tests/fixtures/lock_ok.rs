@@ -1,0 +1,33 @@
+//! Fixture: lock acquisitions that respect the declared hierarchy —
+//! outermost-first nesting, drop-before-reacquire, and statement
+//! temporaries that die at the `;`.
+
+use std::sync::{Mutex, RwLock};
+
+pub struct State {
+    pub server: RwLock<u32>,
+    pub queue: Mutex<Vec<u32>>,
+    pub model: Mutex<u32>,
+    pub bufs: Mutex<Vec<f32>>,
+}
+
+pub fn outermost_first(s: &State) -> u32 {
+    let srv = s.server.read().unwrap_or_else(|p| p.into_inner());
+    let q = s.queue.lock().unwrap_or_else(|p| p.into_inner());
+    let m = s.model.lock().unwrap_or_else(|p| p.into_inner());
+    *srv + q.len() as u32 + *m
+}
+
+pub fn drop_before_reacquire(s: &State) -> u32 {
+    let m = s.model.lock().unwrap_or_else(|p| p.into_inner());
+    let v = *m;
+    drop(m);
+    let q = s.queue.lock().unwrap_or_else(|p| p.into_inner());
+    v + q.len() as u32
+}
+
+pub fn temporary_guard_then_outer(s: &State) -> u32 {
+    let len = s.bufs.lock().unwrap_or_else(|p| p.into_inner()).len();
+    let q = s.queue.lock().unwrap_or_else(|p| p.into_inner());
+    len as u32 + q.len() as u32
+}

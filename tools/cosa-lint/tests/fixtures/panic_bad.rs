@@ -1,0 +1,28 @@
+//! Fixture: five distinct panic sites — all must be reported when the
+//! file sits in a request-path module, none when it does not.
+
+pub fn f1(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+pub fn f2(v: Option<u32>) -> u32 {
+    v.expect("present")
+}
+
+pub fn f3(x: u32) -> u32 {
+    if x > 10 {
+        panic!("too big");
+    }
+    x
+}
+
+pub fn f4(x: u32) -> u32 {
+    match x {
+        0 => 1,
+        _ => unreachable!(),
+    }
+}
+
+pub fn f5() -> u32 {
+    todo!()
+}

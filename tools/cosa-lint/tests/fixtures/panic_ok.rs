@@ -1,0 +1,24 @@
+//! Fixture: a request-path module with no panic findings — errors
+//! propagate, one panic is reason-allowed, and test code is exempt.
+
+pub fn get(v: &[u32], i: usize) -> Result<u32, String> {
+    v.get(i).copied().ok_or_else(|| format!("index {i} out of range"))
+}
+
+pub fn fallback(v: Option<u32>) -> u32 {
+    v.unwrap_or_default()
+}
+
+pub fn justified(v: Option<u32>) -> u32 {
+    // lint: allow(panic) — fixture demonstrating a reasoned allow.
+    v.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap() {
+        let v: Option<u32> = Some(3);
+        assert_eq!(v.unwrap(), 3);
+    }
+}

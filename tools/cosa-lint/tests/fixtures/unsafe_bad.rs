@@ -1,0 +1,13 @@
+//! Fixture: two `unsafe` sites with no justification — both must be
+//! reported by unsafe-audit.
+
+pub fn naked(data: &[f32]) -> &[u8] {
+    let n = data.len() * 4;
+    unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, n) }
+}
+
+pub unsafe fn kernel(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v += 1.0;
+    }
+}

@@ -1,0 +1,29 @@
+//! Fixture: every `unsafe` carries a `// SAFETY:` justification in
+//! one of the three accepted placements.
+
+/// Comment on the lines directly above the statement.
+pub fn bytes(data: &[f32]) -> &[u8] {
+    // SAFETY: f32 has no padding, u8 has alignment 1, and the length
+    // covers exactly the borrowed buffer.
+    unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    }
+}
+
+/// Comment as the first token inside the unsafe block.
+pub fn inner_comment(data: &[f32]) -> &[u8] {
+    unsafe {
+        // SAFETY: same invariants as `bytes` above.
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    }
+}
+
+// SAFETY: callers must verify the `avx2` feature at runtime before
+// dispatching here — the comment may sit above the attribute stack.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+pub unsafe fn kernel(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v += 1.0;
+    }
+}

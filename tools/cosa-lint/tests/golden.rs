@@ -1,0 +1,252 @@
+//! Golden-fixture suite: one passing and one failing fixture per rule
+//! family, checked through the library with *virtual paths* (so the
+//! path-scoped rules behave as if the fixture lived in a request-path
+//! module, regardless of where `tests/fixtures/` actually sits), plus
+//! end-to-end exit-code tests against the compiled binary.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use cosa_lint::{check_source, Config, Finding};
+
+fn manifest_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture(name: &str) -> String {
+    let p = manifest_dir().join("tests/fixtures").join(name);
+    std::fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("read {}: {e}", p.display()))
+}
+
+fn repo_config() -> Config {
+    Config::load(&manifest_dir().join("lock_order.toml")).unwrap()
+}
+
+fn check(name: &str, vpath: &str) -> Vec<Finding> {
+    check_source(vpath, &fixture(name), &repo_config())
+}
+
+fn count_rule(fs: &[Finding], rule: &str) -> usize {
+    fs.iter().filter(|f| f.rule == rule).count()
+}
+
+// ------------------------------------------------------ unsafe-audit
+
+#[test]
+fn unsafe_ok_is_clean() {
+    let fs = check("unsafe_ok.rs", "rust/src/linalg/unsafe_ok.rs");
+    assert!(fs.is_empty(), "unexpected findings: {fs:?}");
+}
+
+#[test]
+fn unsafe_bad_reports_both_sites() {
+    let fs = check("unsafe_bad.rs", "rust/src/linalg/unsafe_bad.rs");
+    assert_eq!(count_rule(&fs, "unsafe-audit"), 2, "findings: {fs:?}");
+    assert_eq!(fs.len(), 2);
+    let lines: Vec<u32> = fs.iter().map(|f| f.line).collect();
+    assert_eq!(lines, vec![6, 9]);
+}
+
+// ----------------------------------------------------- panic-freedom
+
+#[test]
+fn panic_ok_is_clean() {
+    let fs = check("panic_ok.rs", "rust/src/serve/panic_ok.rs");
+    assert!(fs.is_empty(), "unexpected findings: {fs:?}");
+}
+
+#[test]
+fn panic_bad_reports_all_five_forms() {
+    let fs = check("panic_bad.rs", "rust/src/serve/panic_bad.rs");
+    assert_eq!(count_rule(&fs, "panic-freedom"), 5, "findings: {fs:?}");
+    assert_eq!(fs.len(), 5);
+}
+
+#[test]
+fn panic_rule_only_applies_to_request_path_modules() {
+    // The exact same source outside serve/wire/model/linalg is fine.
+    let fs = check("panic_bad.rs", "rust/src/exp/panic_bad.rs");
+    assert!(fs.is_empty(), "unexpected findings: {fs:?}");
+}
+
+// -------------------------------------------- lock-order + hygiene
+
+#[test]
+fn lock_ok_is_clean() {
+    let fs = check("lock_ok.rs", "rust/src/serve/lock_ok.rs");
+    assert!(fs.is_empty(), "unexpected findings: {fs:?}");
+}
+
+#[test]
+fn lock_bad_reports_inversion_and_hygiene() {
+    let fs = check("lock_bad.rs", "rust/src/serve/lock_bad.rs");
+    assert_eq!(count_rule(&fs, "lock-order"), 1, "findings: {fs:?}");
+    assert_eq!(count_rule(&fs, "lock-hygiene"), 2, "findings: {fs:?}");
+    assert_eq!(fs.len(), 3);
+    let inv = fs.iter().find(|f| f.rule == "lock-order").unwrap();
+    assert!(
+        inv.msg.contains("`scheduler`") && inv.msg.contains("`model`"),
+        "msg: {}",
+        inv.msg
+    );
+}
+
+// --------------------------------------------------- hot-path-alloc
+
+#[test]
+fn hotpath_ok_is_clean() {
+    let fs = check("hotpath_ok.rs", "rust/src/linalg/hotpath_ok.rs");
+    assert!(fs.is_empty(), "unexpected findings: {fs:?}");
+}
+
+#[test]
+fn hotpath_bad_reports_all_five_alloc_forms() {
+    let fs = check("hotpath_bad.rs", "rust/src/linalg/hotpath_bad.rs");
+    assert_eq!(count_rule(&fs, "hot-path-alloc"), 5, "findings: {fs:?}");
+    assert_eq!(fs.len(), 5);
+}
+
+#[test]
+fn alloc_rule_is_opt_in_per_file() {
+    let fs =
+        check("hotpath_nomark.rs", "rust/src/linalg/hotpath_nomark.rs");
+    assert!(fs.is_empty(), "unexpected findings: {fs:?}");
+}
+
+// -------------------------------------------------- allow grammar
+
+#[test]
+fn allow_grammar_requires_reasons_and_known_rules() {
+    let fs = check("allow_grammar.rs", "rust/src/serve/allow_grammar.rs");
+    // Reason-less allow and unknown-rule allow each yield an
+    // `allowlist` finding AND fail to suppress the panic finding;
+    // the reasoned allow in `good()` suppresses its unwrap.
+    assert_eq!(count_rule(&fs, "allowlist"), 2, "findings: {fs:?}");
+    assert_eq!(count_rule(&fs, "panic-freedom"), 2, "findings: {fs:?}");
+    assert_eq!(fs.len(), 4);
+    assert!(
+        fs.iter().any(|f| f.msg.contains("without a reason")),
+        "findings: {fs:?}"
+    );
+    assert!(
+        fs.iter().any(|f| f.msg.contains("unknown rule `crashes`")),
+        "findings: {fs:?}"
+    );
+}
+
+// ------------------------------------------------ config tamper gate
+
+#[test]
+fn removing_a_rule_family_is_a_config_error() {
+    let toml = std::fs::read_to_string(
+        manifest_dir().join("lock_order.toml"),
+    )
+    .unwrap();
+    for fam in cosa_lint::REQUIRED_FAMILIES {
+        let cut = toml.replace(&format!("\"{fam}\","), "");
+        let err = Config::parse(&cut)
+            .expect_err("family removal must not parse");
+        assert!(err.contains(fam), "err for {fam}: {err}");
+    }
+}
+
+// --------------------------------------------- binary exit codes
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_cosa-lint")
+}
+
+/// A scratch tree under the workspace target dir (no temp-dir races,
+/// cleaned by `cargo clean`, ignored by git).
+fn scratch(tag: &str) -> PathBuf {
+    let d = manifest_dir().join("../../target/lint-scratch").join(tag);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn write(p: &Path, content: &str) {
+    std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+    std::fs::write(p, content).unwrap();
+}
+
+#[test]
+fn binary_exits_one_and_prints_findings_on_a_dirty_tree() {
+    let d = scratch("dirty");
+    write(
+        &d.join("src/linalg/bad.rs"),
+        &fixture("unsafe_bad.rs"),
+    );
+    let out = Command::new(bin())
+        .args(["--check"])
+        .arg(&d)
+        .args(["--config"])
+        .arg(manifest_dir().join("lock_order.toml"))
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(1), "out: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("[unsafe-audit]"), "stdout: {stdout}");
+    assert!(stdout.contains("bad.rs:6"), "stdout: {stdout}");
+}
+
+#[test]
+fn binary_exits_zero_on_a_clean_tree() {
+    let d = scratch("clean");
+    write(&d.join("src/serve/ok.rs"), &fixture("panic_ok.rs"));
+    let out = Command::new(bin())
+        .args(["--check"])
+        .arg(&d)
+        .args(["--config"])
+        .arg(manifest_dir().join("lock_order.toml"))
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(0), "out: {out:?}");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("clean"), "stdout: {stdout}");
+}
+
+#[test]
+fn binary_exits_two_on_a_tampered_config() {
+    let d = scratch("tampered");
+    write(&d.join("src/serve/ok.rs"), &fixture("panic_ok.rs"));
+    let toml = std::fs::read_to_string(
+        manifest_dir().join("lock_order.toml"),
+    )
+    .unwrap();
+    let cfg = d.join("lock_order.toml");
+    write(&cfg, &toml.replace("\"lock-order\",", ""));
+    let out = Command::new(bin())
+        .args(["--check"])
+        .arg(&d)
+        .args(["--config"])
+        .arg(&cfg)
+        .output()
+        .unwrap();
+    assert_eq!(out.status.code(), Some(2), "out: {out:?}");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("lock-order"), "stderr: {stderr}");
+}
+
+// ------------------------------------------------- repo self-check
+
+#[test]
+fn the_repo_itself_is_lint_clean() {
+    // The CI gate in miniature: the committed tree must stay clean
+    // (every remaining panic/unsafe carries a reasoned annotation).
+    let repo = manifest_dir().join("../..");
+    let out = Command::new(bin())
+        .args(["--check"])
+        .arg(&repo)
+        .args(["--config"])
+        .arg(manifest_dir().join("lock_order.toml"))
+        .output()
+        .unwrap();
+    assert_eq!(
+        out.status.code(),
+        Some(0),
+        "stdout:\n{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+}

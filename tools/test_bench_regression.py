@@ -158,6 +158,22 @@ class EndToEnd(unittest.TestCase):
         rc = self.run_main(doc, TAIL_BASE, [])
         self.assertEqual(rc, 1)
 
+    def test_pass_names_the_gates_it_evaluated(self):
+        # A PASS must say which gate sections actually ran, so a CI log
+        # where a section silently vanished is distinguishable from a
+        # full evaluation.
+        import contextlib
+        import io
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            rc = self.run_main({"serving_tail": [tail_row()]},
+                               TAIL_BASE, [])
+        self.assertEqual(rc, 0)
+        out = buf.getvalue()
+        self.assertIn("gates evaluated: serving_tail", out)
+        self.assertNotIn("serving_wire", out.split("PASS")[-1],
+                         "sections that did not run must not be listed")
+
 
 if __name__ == "__main__":
     unittest.main()

@@ -1,8 +1,8 @@
 //! Bench: multi-adapter serving throughput and latency — the CI-gated
-//! `serving`, `serving_model`, `serving_wire`, and `serving_tail`
-//! sections of `BENCH_linalg.json`.
+//! `serving`, `serving_model`, `serving_wire`, `serving_tail`, and
+//! `serving_methods` sections of `BENCH_linalg.json`.
 //!
-//! Five scenarios:
+//! Six scenarios:
 //!
 //! 1. **acceptance** — 64 adapters, one site, Zipf 1.1 popularity,
 //!    firehose injection.  The `batched_vs_sequential` field is the
@@ -29,6 +29,12 @@
 //!    server and a `fused = false` per-adapter-segment server.  Gated
 //!    field: `fused_vs_per_adapter >= 1.5` (machine-independent),
 //!    plus conservative throughput / p99 floors.
+//! 6. **methods acceptance** — the adapter-zoo cross-method table: a
+//!    mixed-method 24-site model (CoSA + RoSA + LoRA fleets side by
+//!    side in one engine), per-method Zipf streams plus a mixed
+//!    stream whose fused batches interleave methods.  Gated field per
+//!    row: `batched_vs_sequential >= 1.2` (machine-independent), plus
+//!    conservative CoSA floors carried over unchanged.
 //!
 //! Knobs come from the default `[serve]` / `[model]` / `[wire]`
 //! tables; `COSA_SERVE_*` / `COSA_MODEL_*` / `COSA_WIRE_*` env
@@ -37,8 +43,8 @@
 
 use cosa::config::{ModelConfig, WireConfig};
 use cosa::serve::bench::{
-    run, run_model, run_tail, ModelBenchOpts, ServeBenchOpts,
-    TailBenchOpts,
+    run, run_methods, run_model, run_tail, MethodsBenchOpts,
+    ModelBenchOpts, ServeBenchOpts, TailBenchOpts,
 };
 use cosa::util::bench::write_bench_json;
 use cosa::util::json::Json;
@@ -155,4 +161,26 @@ fn main() {
         Err(e) => eprintln!("serve_bench tail scenario failed: {e:#}"),
     }
     write_bench_json("serving_tail", Json::Arr(tail_rows));
+
+    // Scenario 6: the cross-method acceptance workload — CoSA, RoSA,
+    // and LoRA fleets in one mixed-method model, per-method streams
+    // plus a method-interleaved mixed stream.  The serve knobs reuse
+    // the scenario-1 env overrides; the fleet shape is the scenario.
+    let medefaults = MethodsBenchOpts::default();
+    let meopts = MethodsBenchOpts {
+        cfg: cosa::config::ServeConfig {
+            cache_mb: medefaults.cfg.cache_mb,
+            ..acceptance.cfg.clone()
+        },
+        ..medefaults
+    };
+    let mut method_rows: Vec<Json> = Vec::new();
+    match run_methods(&meopts) {
+        Ok(report) => {
+            report.print();
+            method_rows.extend(report.to_json_rows());
+        }
+        Err(e) => eprintln!("serve_bench methods scenario failed: {e:#}"),
+    }
+    write_bench_json("serving_methods", Json::Arr(method_rows));
 }

@@ -7,6 +7,12 @@
 //! checkpoint loader and the portability example all call them, so a
 //! stored adapter reproduces bit-identical projections forever.
 
+use std::any::Any;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::adapters::traits::{Adapter, RegenSpec};
+use crate::adapters::Method;
 use crate::linalg::{self, Workspace};
 use crate::math::matrix::Matrix;
 use crate::math::rng::Pcg64;
@@ -172,6 +178,149 @@ pub fn materialize_delta(l: &Matrix, y: &Matrix, r: &Matrix,
 /// `ab`, independent of the site's (m, n).
 pub fn param_count(a: usize, b: usize) -> usize {
     a * b
+}
+
+/// The [`Adapter`] impl over this module's free-function math: one
+/// adapted `m × n` site storing only the core `Y` (a × b) plus the
+/// seed/tensor-name description that regenerates `L` and `R`.  Every
+/// trait entry point delegates to the free functions above, so serving
+/// through the trait is bit-identical to the pre-trait engine.
+pub struct CosaAdapter {
+    seed: u64,
+    l_name: String,
+    r_name: String,
+    m: usize,
+    n: usize,
+    y: Arc<Matrix>,
+}
+
+impl CosaAdapter {
+    /// `y` is the trained core (a × b); `l_name` / `r_name` are the
+    /// projection tensor names the seed regenerates under (canonical:
+    /// `<site>.l` / `<site>.r`).
+    pub fn new(
+        seed: u64,
+        l_name: String,
+        r_name: String,
+        m: usize,
+        n: usize,
+        y: Arc<Matrix>,
+    ) -> CosaAdapter {
+        CosaAdapter { seed, l_name, r_name, m, n, y }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn l_name(&self) -> &str {
+        &self.l_name
+    }
+
+    pub fn r_name(&self) -> &str {
+        &self.r_name
+    }
+
+    /// The trained core Y (a × b).
+    pub fn core(&self) -> &Matrix {
+        &self.y
+    }
+
+    pub fn core_arc(&self) -> Arc<Matrix> {
+        self.y.clone()
+    }
+}
+
+impl Adapter for CosaAdapter {
+    fn method(&self) -> Method {
+        Method::CoSA
+    }
+
+    fn out_dim(&self) -> usize {
+        self.m
+    }
+
+    fn in_dim(&self) -> usize {
+        self.n
+    }
+
+    fn core_dims(&self) -> (usize, usize) {
+        (self.y.rows, self.y.cols)
+    }
+
+    fn param_count(&self) -> usize {
+        param_count(self.y.rows, self.y.cols)
+    }
+
+    fn resident_bytes(&self) -> usize {
+        // the §4.1 artifact: the core plus 8 bytes of seed
+        self.y.data.len() * 4 + 8
+    }
+
+    fn regen_bytes(&self) -> usize {
+        self.regen_specs().iter().map(RegenSpec::bytes).sum()
+    }
+
+    /// `[L, R]` — in exactly the order the model layer has always
+    /// resolved the shared projection cache (peek L then R per site),
+    /// so the trait refactor preserves the cache-key sequence.
+    fn regen_specs(&self) -> Vec<RegenSpec> {
+        vec![
+            RegenSpec {
+                seed: self.seed,
+                name: self.l_name.clone(),
+                rows: self.m,
+                cols: self.y.rows,
+                regen: regen_l,
+            },
+            RegenSpec {
+                seed: self.seed,
+                name: self.r_name.clone(),
+                rows: self.y.cols,
+                cols: self.n,
+                regen: regen_r,
+            },
+        ]
+    }
+
+    fn forward_into(
+        &self,
+        x: &Matrix,
+        regen: &[Arc<Matrix>],
+        alpha: f32,
+        ws: &mut Workspace,
+        out: &mut Matrix,
+    ) {
+        adapter_forward_into(x, &regen[0], &regen[1], &self.y, alpha, ws,
+                             out);
+    }
+
+    fn vjp(
+        &self,
+        x: &Matrix,
+        regen: &[Arc<Matrix>],
+        g: &Matrix,
+        alpha: f32,
+    ) -> (Vec<Matrix>, Matrix) {
+        let (dy, dx) =
+            adapter_vjp(x, &regen[0], &regen[1], &self.y, g, alpha);
+        (vec![dy], dx)
+    }
+
+    fn encode_tensors(
+        &self,
+        site: &str,
+        out: &mut BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+    ) {
+        out.insert(
+            format!("{site}.y"),
+            (vec![self.y.rows, self.y.cols], self.y.data.clone()),
+        );
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
 }
 
 #[cfg(test)]
@@ -363,5 +512,52 @@ mod tests {
         assert_eq!(param_count(1024, 256), 262_144);
         // same count regardless of whether the site is 2048×2048 or
         // 8192×2048 — the paper's Table 1 property.
+    }
+
+    #[test]
+    fn trait_impl_is_bit_identical_to_free_functions() {
+        // The acceptance anchor at the adapter level: CosaAdapter's
+        // trait entry points must reproduce the free-function math bit
+        // for bit, and its regen specs must rebuild the exact cache
+        // keys (seed, tensor name, dims) the pre-trait model used.
+        let mut rng = Pcg64::new(21);
+        let (m, nn, a, b, rows) = (12usize, 10usize, 4usize, 3usize, 5);
+        let y = Matrix::gaussian(a, b, 0.5, &mut rng);
+        let ad = CosaAdapter::new(
+            7,
+            "adp.0.wq.l".into(),
+            "adp.0.wq.r".into(),
+            m,
+            nn,
+            Arc::new(y.clone()),
+        );
+        let specs = ad.regen_specs();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].key(), (7, "adp.0.wq.l".to_string(), m, a));
+        assert_eq!(specs[1].key(), (7, "adp.0.wq.r".to_string(), b, nn));
+        let l = specs[0].materialize();
+        let r = specs[1].materialize();
+        assert_eq!(l, regen_l(7, "adp.0.wq.l", m, a));
+        assert_eq!(r, regen_r(7, "adp.0.wq.r", b, nn));
+
+        let x = Matrix::gaussian(rows, nn, 1.0, &mut rng);
+        let want = adapter_forward(&x, &l, &r, &y, 2.0);
+        let regen = vec![Arc::new(l.clone()), Arc::new(r.clone())];
+        let got = ad.forward(&x, &regen, 2.0);
+        for (p, q) in want.data.iter().zip(&got.data) {
+            assert_eq!(p.to_bits(), q.to_bits(), "trait forward drifted");
+        }
+
+        let g = Matrix::gaussian(rows, m, 0.5, &mut rng);
+        let (want_dy, want_dx) = adapter_vjp(&x, &l, &r, &y, &g, 2.0);
+        let (grads, dx) = ad.vjp(&x, &regen, &g, 2.0);
+        assert_eq!(grads.len(), 1);
+        assert_eq!(grads[0], want_dy);
+        assert_eq!(dx, want_dx);
+
+        assert_eq!(ad.param_count(), a * b);
+        assert_eq!(ad.resident_bytes(), a * b * 4 + 8);
+        assert_eq!(ad.regen_bytes(), (m * a + b * nn) * 4);
+        assert_eq!(ad.core_dims(), (a, b));
     }
 }

@@ -78,6 +78,9 @@ pub fn site_params(method: Method, s: Site, c: &CostCfg) -> usize {
         // AdaLoRA's P/λ/Q at the initial rank.
         Method::AdaLoRA => (m + n + 1) * c.r,
         Method::NoLA => 2 * c.nola_k,
+        // RoSA's low-rank half; its sparse half's nnz is a serving-time
+        // knob, not part of this table's fixed (r, a, b) configuration.
+        Method::RoSA => (m + n) * c.r,
         Method::CoSA => c.a * c.b,
     }
 }
@@ -147,6 +150,8 @@ pub fn table1_row(method: Method) -> (&'static str, &'static str,
         Method::Full => ("mn", "O(mn)", "O(mn)", "O(mn)"),
         Method::AdaLoRA => ("(m+n+1)r", "O((m+n)r)", "O(mn)", "O((m+n)r)"),
         Method::NoLA => ("2k", "O(k)", "O(mn)", "O(k)"),
+        Method::RoSA =>
+            ("(m+n)r+nnz", "O((m+n)r+nnz)", "O(mn)", "O((m+n)r+nnz)"),
     }
 }
 

@@ -1,0 +1,289 @@
+//! Plain LoRA — the `ΔW = B·A` low-rank baseline (Hu et al.), served
+//! through the method-agnostic [`Adapter`] trait.
+//!
+//! The paper's §4 comparison pits CoSA against low-rank adaptation on
+//! identical tasks; this impl is the serving-side half of that
+//! comparison.  Unlike CoSA there is **no projection regeneration**:
+//! both factors are trainable, both are stored, and
+//! [`Adapter::regen_specs`] is empty — the projection cache never sees
+//! a LoRA adapter.  Forward is two transpose-free NT products
+//! (`o = α · x Aᵀ Bᵀ`), grouped-servable via the same block-diagonal
+//! kernel sweeps CoSA batches use (see
+//! [`crate::adapters::traits::forward_grouped_into`]).
+
+use std::any::Any;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::adapters::traits::{Adapter, RegenSpec};
+use crate::adapters::Method;
+use crate::linalg::{self, Workspace};
+use crate::math::matrix::Matrix;
+
+/// One adapted `m × n` site under plain LoRA: `B` (m × r) and `A`
+/// (r × n), both stored, both trainable.
+pub struct LoraAdapter {
+    b: Arc<Matrix>,
+    a: Arc<Matrix>,
+}
+
+impl LoraAdapter {
+    /// Validates the factor shapes agree on the rank.
+    pub fn try_new(
+        b: Arc<Matrix>,
+        a: Arc<Matrix>,
+    ) -> anyhow::Result<LoraAdapter> {
+        anyhow::ensure!(
+            b.cols == a.rows && b.cols >= 1,
+            "lora factors disagree: B is {}x{}, A is {}x{}",
+            b.rows, b.cols, a.rows, a.cols
+        );
+        anyhow::ensure!(
+            b.rows >= 1 && a.cols >= 1,
+            "lora site dims must be >= 1 (B {}x{}, A {}x{})",
+            b.rows, b.cols, a.rows, a.cols
+        );
+        Ok(LoraAdapter { b, a })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.b.cols
+    }
+
+    pub fn b_ref(&self) -> &Matrix {
+        &self.b
+    }
+
+    pub fn a_ref(&self) -> &Matrix {
+        &self.a
+    }
+}
+
+impl Adapter for LoraAdapter {
+    fn method(&self) -> Method {
+        Method::LoRA
+    }
+
+    fn out_dim(&self) -> usize {
+        self.b.rows
+    }
+
+    fn in_dim(&self) -> usize {
+        self.a.cols
+    }
+
+    fn core_dims(&self) -> (usize, usize) {
+        (self.rank(), self.rank())
+    }
+
+    fn param_count(&self) -> usize {
+        self.b.data.len() + self.a.data.len()
+    }
+
+    fn resident_bytes(&self) -> usize {
+        (self.b.data.len() + self.a.data.len()) * 4
+    }
+
+    fn regen_bytes(&self) -> usize {
+        0
+    }
+
+    /// Nothing regenerates — LoRA stores every tensor.
+    fn regen_specs(&self) -> Vec<RegenSpec> {
+        Vec::new()
+    }
+
+    /// `out = α · x Aᵀ Bᵀ` — two NT products through workspace
+    /// intermediates, no transpose copies.
+    fn forward_into(
+        &self,
+        x: &Matrix,
+        _regen: &[Arc<Matrix>],
+        alpha: f32,
+        ws: &mut Workspace,
+        out: &mut Matrix,
+    ) {
+        let mut u = ws.take_matrix(x.rows, self.rank());
+        linalg::gemm_nt_into(x, &self.a, &mut u);
+        linalg::gemm_nt_into(&u, &self.b, out);
+        out.scale(alpha);
+        ws.recycle_matrix(u);
+    }
+
+    /// Gradients in encode order `[dB, dA]` plus `dX`:
+    /// `dB = α · gᵀ (x Aᵀ)`, `dA = α · (g B)ᵀ x`, `dX = α · g B A`.
+    fn vjp(
+        &self,
+        x: &Matrix,
+        _regen: &[Arc<Matrix>],
+        g: &Matrix,
+        alpha: f32,
+    ) -> (Vec<Matrix>, Matrix) {
+        let u = linalg::gemm_nt(x, &self.a); // x Aᵀ   (N × r)
+        let mut db = linalg::gemm_tn(g, &u); // gᵀ(xAᵀ) (m × r)
+        db.scale(alpha);
+        let t = linalg::gemm(g, &self.b); //   g B    (N × r)
+        let mut da = linalg::gemm_tn(&t, x); // (gB)ᵀx (r × n)
+        da.scale(alpha);
+        let mut dx = linalg::gemm(&t, &self.a); //    (N × n)
+        dx.scale(alpha);
+        (vec![db, da], dx)
+    }
+
+    fn encode_tensors(
+        &self,
+        site: &str,
+        out: &mut BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+    ) {
+        out.insert(
+            format!("{site}.lora_b"),
+            (vec![self.b.rows, self.b.cols], self.b.data.clone()),
+        );
+        out.insert(
+            format!("{site}.lora_a"),
+            (vec![self.a.rows, self.a.cols], self.a.data.clone()),
+        );
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Pcg64;
+
+    fn sample(m: usize, n: usize, r: usize, seed: u64) -> LoraAdapter {
+        let mut rng = Pcg64::derive(seed, "lora-test");
+        let b = Matrix::gaussian(m, r, 0.5, &mut rng);
+        let a = Matrix::gaussian(r, n, 0.5, &mut rng);
+        LoraAdapter::try_new(Arc::new(b), Arc::new(a)).unwrap()
+    }
+
+    #[test]
+    fn forward_matches_materialized_ba() {
+        let (m, n, r, rows) = (10usize, 12usize, 3usize, 6usize);
+        let ad = sample(m, n, r, 1);
+        let mut rng = Pcg64::new(2);
+        let x = Matrix::gaussian(rows, n, 1.0, &mut rng);
+        let got = ad.forward(&x, &[], 1.5);
+        // slow path: ΔW = B·A, o = α · x · ΔWᵀ
+        let mut delta = linalg::gemm(ad.b_ref(), ad.a_ref());
+        delta.scale(1.5);
+        let want = x.matmul(&delta.transpose());
+        for (p, q) in got.data.iter().zip(&want.data) {
+            assert!((p - q).abs() < 1e-4, "{p} vs {q}");
+        }
+    }
+
+    #[test]
+    fn vjp_matches_finite_differences() {
+        // Forward is linear in both factors, so central differences on
+        // the scalar loss Σ o⊙g recover each gradient up to rounding.
+        let (m, n, r, rows) = (6usize, 8usize, 3usize, 5usize);
+        let ad = sample(m, n, r, 3);
+        let mut rng = Pcg64::new(4);
+        let x = Matrix::gaussian(rows, n, 1.0, &mut rng);
+        let g = Matrix::gaussian(rows, m, 0.5, &mut rng);
+        let alpha = 1.3f32;
+        let loss = |bb: &Matrix, aa: &Matrix| -> f64 {
+            let tmp = LoraAdapter::try_new(
+                Arc::new(bb.clone()),
+                Arc::new(aa.clone()),
+            )
+            .unwrap();
+            let o = tmp.forward(&x, &[], alpha);
+            o.data.iter().zip(&g.data)
+                .map(|(ov, gv)| *ov as f64 * *gv as f64).sum()
+        };
+        let (grads, dx) = ad.vjp(&x, &[], &g, alpha);
+        let (db, da) = (&grads[0], &grads[1]);
+        let eps = 1e-2f32;
+        for idx in [0usize, 3, m * r - 1] {
+            let mut bp = ad.b_ref().clone();
+            bp.data[idx] += eps;
+            let mut bm = ad.b_ref().clone();
+            bm.data[idx] -= eps;
+            let fd = (loss(&bp, ad.a_ref()) - loss(&bm, ad.a_ref()))
+                / (2.0 * eps as f64);
+            assert!(
+                (fd - db.data[idx] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                "dB[{idx}]: fd {fd} vs analytic {}", db.data[idx]
+            );
+        }
+        for idx in [0usize, 5, r * n - 1] {
+            let mut ap = ad.a_ref().clone();
+            ap.data[idx] += eps;
+            let mut am = ad.a_ref().clone();
+            am.data[idx] -= eps;
+            let fd = (loss(ad.b_ref(), &ap) - loss(ad.b_ref(), &am))
+                / (2.0 * eps as f64);
+            assert!(
+                (fd - da.data[idx] as f64).abs() < 2e-2 * (1.0 + fd.abs()),
+                "dA[{idx}]: fd {fd} vs analytic {}", da.data[idx]
+            );
+        }
+        // dX against the materialized ΔW: dX = α · g · (B A)
+        let delta = linalg::gemm(ad.b_ref(), ad.a_ref());
+        let mut dx_ref = g.matmul(&delta);
+        dx_ref.scale(alpha);
+        for (p, q) in dx.data.iter().zip(&dx_ref.data) {
+            assert!((p - q).abs() < 1e-3, "{p} vs {q}");
+        }
+    }
+
+    #[test]
+    fn grouped_forward_is_bit_identical_to_single_calls() {
+        // Same-rank LoRA segments fuse through two grouped NT sweeps;
+        // the result must equal composed forward_into calls bitwise.
+        use crate::adapters::traits::forward_grouped_into;
+        let (m, n, r) = (10usize, 12usize, 3usize);
+        let ads: Vec<LoraAdapter> =
+            (0..4).map(|i| sample(m, n, r, 10 + i)).collect();
+        let segs = [2usize, 0, 3, 1];
+        let alphas = [2.0f32, 1.0, 0.5, 3.0];
+        let total: usize = segs.iter().sum();
+        let mut rng = Pcg64::new(5);
+        let x = Matrix::gaussian(total, n, 1.0, &mut rng);
+        let refs: Vec<&dyn Adapter> =
+            ads.iter().map(|a| a as &dyn Adapter).collect();
+        let regens: Vec<&[Arc<Matrix>]> =
+            ads.iter().map(|_| &[] as &[Arc<Matrix>]).collect();
+        let mut ws = Workspace::new();
+        let mut fused = Matrix::zeros(total, m);
+        forward_grouped_into(&refs, &regens, &alphas, &x, &segs, &mut ws,
+                             &mut fused);
+        let mut row = 0usize;
+        for (g, &rows) in segs.iter().enumerate() {
+            if rows == 0 {
+                continue;
+            }
+            let xs = Matrix::from_vec(
+                rows, n, x.data[row * n..(row + rows) * n].to_vec());
+            let mut o = Matrix::zeros(rows, m);
+            ads[g].forward_into(&xs, &[], alphas[g], &mut ws, &mut o);
+            for (p, q) in fused.data[row * m..(row + rows) * m]
+                .iter()
+                .zip(&o.data)
+            {
+                assert_eq!(p.to_bits(), q.to_bits(), "seg {g}: {p} vs {q}");
+            }
+            row += rows;
+        }
+    }
+
+    #[test]
+    fn accounting_and_shape_validation() {
+        let ad = sample(10, 12, 3, 6);
+        assert_eq!(ad.param_count(), 10 * 3 + 3 * 12);
+        assert_eq!(ad.resident_bytes(), ad.param_count() * 4);
+        assert_eq!(ad.regen_bytes(), 0);
+        assert!(ad.regen_specs().is_empty());
+        assert_eq!(ad.core_dims(), (3, 3));
+        let b = Arc::new(Matrix::zeros(10, 3));
+        let a = Arc::new(Matrix::zeros(4, 12));
+        assert!(LoraAdapter::try_new(b, a).is_err(), "rank mismatch");
+    }
+}

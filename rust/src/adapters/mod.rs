@@ -1,17 +1,34 @@
 //! Adapter methods: CoSA and every baseline the paper evaluates.
 //!
-//! Three concerns live here:
+//! Five concerns live here:
 //! * `init` — deterministic tensor initialization for every artifact input
 //!   (synthetic "pretrained" trunks, Gaussian L/R projections, PiSSA SVD
 //!   init, VeRA/NoLA shared banks, DoRA magnitudes);
+//! * `traits` — the method-agnostic [`Adapter`] serving contract
+//!   (forward / grouped forward / VJP / cost accounting / seed-regen
+//!   description / checkpoint encode-decode) the model and serve layers
+//!   program against;
 //! * `cosa` — the host-side mirror of the adapter math plus the paper's
-//!   seed-regeneration storage trick (store Y + seed, regenerate L and R);
+//!   seed-regeneration storage trick (store Y + seed, regenerate L and R),
+//!   and [`cosa::CosaAdapter`], the trait impl over that math;
+//! * `lora` / `rosa` — the §4 baseline impls served by the same engine:
+//!   plain BA ([`lora::LoraAdapter`]) and sparse + low-rank
+//!   ([`rosa::RosaAdapter`], sparse half on the threaded
+//!   `linalg::sparse` kernel);
 //! * `costmodel` — trainable-parameter and memory accounting against real
 //!   LLM architectures (Table 1, Figure 3).
 
 pub mod cosa;
 pub mod costmodel;
 pub mod init;
+pub mod lora;
+pub mod rosa;
+pub mod traits;
+
+pub use traits::{
+    decode_site, forward_grouped_into, Adapter, RegenSpec,
+    SERVABLE_METHODS,
+};
 
 /// The PEFT methods implemented across L2/L3.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -23,6 +40,7 @@ pub enum Method {
     VeRA,
     AdaLoRA,
     NoLA,
+    RoSA,
     CoSA,
 }
 
@@ -36,6 +54,7 @@ impl Method {
             "vera" => Method::VeRA,
             "adalora" => Method::AdaLoRA,
             "nola" => Method::NoLA,
+            "rosa" => Method::RoSA,
             "cosa" => Method::CoSA,
             other => anyhow::bail!("unknown method `{other}`"),
         })
@@ -50,6 +69,7 @@ impl Method {
             Method::VeRA => "vera",
             Method::AdaLoRA => "adalora",
             Method::NoLA => "nola",
+            Method::RoSA => "rosa",
             Method::CoSA => "cosa",
         }
     }
@@ -64,6 +84,7 @@ impl Method {
             Method::VeRA => "VeRA",
             Method::AdaLoRA => "AdaLoRA",
             Method::NoLA => "NoLA",
+            Method::RoSA => "RoSA",
             Method::CoSA => "CoSA",
         }
     }
@@ -76,7 +97,8 @@ mod tests {
     #[test]
     fn roundtrip_names() {
         for m in [Method::Full, Method::LoRA, Method::PiSSA, Method::DoRA,
-                  Method::VeRA, Method::AdaLoRA, Method::NoLA, Method::CoSA] {
+                  Method::VeRA, Method::AdaLoRA, Method::NoLA, Method::RoSA,
+                  Method::CoSA] {
             assert_eq!(Method::from_str(m.name()).unwrap(), m);
         }
         assert!(Method::from_str("qlora").is_err());

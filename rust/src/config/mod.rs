@@ -387,6 +387,10 @@ pub struct ModelConfig {
     /// Explicit site list (`"name:MxN:AxB"` each); overrides the
     /// synthetic preset when non-empty.
     pub sites_spec: Vec<String>,
+    /// Adapter method synthetic/preset adapters are built with:
+    /// `"cosa"` (default), `"rosa"`, or `"lora"` — the servable
+    /// subset of [`adapters::Method`](crate::adapters::Method).
+    pub method: String,
 }
 
 impl Default for ModelConfig {
@@ -400,6 +404,7 @@ impl Default for ModelConfig {
             core_a: 16,
             core_b: 12,
             sites_spec: Vec::new(),
+            method: "cosa".to_string(),
         }
     }
 }
@@ -408,8 +413,9 @@ impl ModelConfig {
     /// Apply the `COSA_MODEL_*` env overrides (read fresh per call,
     /// mirroring `COSA_SERVE_*`): `COSA_MODEL_SITES`,
     /// `COSA_MODEL_SITE_M`, `COSA_MODEL_SITE_N`, `COSA_MODEL_CORE_A`,
-    /// `COSA_MODEL_CORE_B`, and `COSA_MODEL_SITES_SPEC` (comma-separated
-    /// `name:MxN:AxB` entries).  Unparseable values warn and fall back.
+    /// `COSA_MODEL_CORE_B`, `COSA_MODEL_METHOD`, and
+    /// `COSA_MODEL_SITES_SPEC` (comma-separated `name:MxN:AxB`
+    /// entries).  Unparseable values warn and fall back.
     pub fn env_overridden(&self) -> ModelConfig {
         let mut out = self.clone();
         out.sites = env_num("COSA_MODEL_SITES", out.sites);
@@ -417,6 +423,9 @@ impl ModelConfig {
         out.site_n = env_num("COSA_MODEL_SITE_N", out.site_n);
         out.core_a = env_num("COSA_MODEL_CORE_A", out.core_a);
         out.core_b = env_num("COSA_MODEL_CORE_B", out.core_b);
+        if let Ok(s) = std::env::var("COSA_MODEL_METHOD") {
+            out.method = s.trim().to_ascii_lowercase();
+        }
         if let Ok(s) = std::env::var("COSA_MODEL_SITES_SPEC") {
             out.sites_spec = s
                 .split(',')
@@ -425,6 +434,23 @@ impl ModelConfig {
                 .collect();
         }
         out
+    }
+
+    /// Resolve the `[model] method` knob to a servable
+    /// [`Method`](crate::adapters::Method) — one of
+    /// [`SERVABLE_METHODS`](crate::adapters::SERVABLE_METHODS); other
+    /// method tags (trainable baselines like `dora`) are rejected
+    /// here because the serving engine cannot decode them.
+    pub fn to_method(&self) -> anyhow::Result<crate::adapters::Method> {
+        let m = crate::adapters::Method::from_str(&self.method)
+            .map_err(|e| anyhow::anyhow!("model.method: {e:#}"))?;
+        anyhow::ensure!(
+            crate::adapters::SERVABLE_METHODS.contains(&m),
+            "model.method `{}` is not servable (expected one of: \
+             cosa, rosa, lora)",
+            self.method
+        );
+        Ok(m)
     }
 
     /// Build the [`ModelSpec`](crate::model::ModelSpec) this config
@@ -642,9 +668,12 @@ impl RunConfig {
                 })
                 .collect::<anyhow::Result<Vec<_>>>()?;
         }
+        m.method = doc.str_or("model.method", &m.method);
         // Fail fast on unbuildable model tables (bad site-spec syntax,
-        // duplicate site names) instead of at first use.
+        // duplicate site names, unservable method) instead of at
+        // first use.
         cfg.model.to_spec(&cfg.name)?;
+        cfg.model.to_method()?;
         Ok(cfg)
     }
 
@@ -658,6 +687,11 @@ impl RunConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// Tests that set `COSA_MODEL_*` vars serialize on this lock —
+    /// env vars are process-global, and the model env tests read each
+    /// other's vars through `env_overridden()`.
+    static MODEL_ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
 
     #[test]
     fn defaults_fill_missing_fields() {
@@ -885,6 +919,40 @@ data = 3
     }
 
     #[test]
+    fn model_method_selects_servable_adapter_zoo_members() {
+        use crate::adapters::Method;
+        let d = RunConfig::from_toml("").unwrap();
+        assert_eq!(d.model.method, "cosa", "cosa is the default");
+        assert_eq!(d.model.to_method().unwrap(), Method::CoSA);
+        for (tag, want) in [
+            ("cosa", Method::CoSA),
+            ("rosa", Method::RoSA),
+            ("lora", Method::LoRA),
+        ] {
+            let cfg = RunConfig::from_toml(&format!(
+                "[model]\nmethod = \"{tag}\""
+            ))
+            .unwrap();
+            assert_eq!(cfg.model.to_method().unwrap(), want);
+        }
+        // unknown tags and known-but-unservable baselines fail fast
+        assert!(RunConfig::from_toml(
+            "[model]\nmethod = \"qlora\"").is_err());
+        assert!(RunConfig::from_toml(
+            "[model]\nmethod = \"dora\"").is_err());
+        // env override (normalized to lowercase)
+        let _env = MODEL_ENV_LOCK
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
+        std::env::set_var("COSA_MODEL_METHOD", "RoSA");
+        let cfg = ModelConfig::default().env_overridden();
+        assert_eq!(cfg.method, "rosa");
+        assert_eq!(cfg.to_method().unwrap(), Method::RoSA);
+        std::env::remove_var("COSA_MODEL_METHOD");
+        assert_eq!(ModelConfig::default().env_overridden().method, "cosa");
+    }
+
+    #[test]
     fn model_site_list_overrides_synthetic_preset() {
         let cfg = RunConfig::from_toml(
             "[model]\nsites = 9\nsites_spec = [\"adp.0.wq:16x12:4x3\", \
@@ -908,6 +976,9 @@ data = 3
 
     #[test]
     fn model_env_overrides_win_and_warn_on_garbage() {
+        let _env = MODEL_ENV_LOCK
+            .lock()
+            .unwrap_or_else(|p| p.into_inner());
         std::env::set_var("COSA_MODEL_SITES", "3");
         std::env::set_var("COSA_MODEL_CORE_A", "not-a-number");
         std::env::set_var("COSA_MODEL_SITES_SPEC", "");

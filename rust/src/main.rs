@@ -180,7 +180,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 /// `serve-bench`: drive the multi-adapter serving engine under
 /// synthetic Zipf workloads and write the `serving` (single-site),
 /// `serving_model` (whole adapted model), and opt-in `serving_wire` /
-/// `serving_tail` (fused vs per-adapter batching) sections of the
+/// `serving_tail` (fused vs per-adapter batching) / `serving_methods`
+/// (cross-method adapter-zoo table) sections of the
 /// canonical `BENCH_linalg.json`.  Knob precedence, highest first: CLI flags,
 /// `COSA_SERVE_*` / `COSA_MODEL_*` env, `[serve]` / `[model]` config
 /// tables.  The preset worker hint (`ServeConfig::resolved`) is
@@ -328,6 +329,45 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         cosa::util::bench::write_bench_json(
             "serving_tail", Json::Arr(vec![treport.to_json()]));
     }
+
+    // Methods scenario (opt-in: --methods): the adapter-zoo
+    // cross-method comparison — CoSA, RoSA, and LoRA fleets side by
+    // side in one mixed-method model, per-method Zipf streams plus a
+    // method-interleaved mixed stream -> `serving_methods` section
+    // (one row per method + the mixed row).  The model shape reuses
+    // the `[model]` spec; engine knobs reuse the scenario-1 CLI/env
+    // overrides.
+    if args.bool("methods") {
+        use cosa::serve::bench::{run_methods, MethodsBenchOpts};
+        let medefaults = MethodsBenchOpts::default();
+        let mut model_cfg = cfg.model.env_overridden();
+        if let Some(v) = args.opt("sites") {
+            model_cfg.sites = v.parse()?;
+            anyhow::ensure!(model_cfg.sites >= 1, "--sites must be >= 1");
+            model_cfg.sites_spec.clear();
+        }
+        let meopts = MethodsBenchOpts {
+            spec: model_cfg.to_spec("serve-bench")?,
+            adapters_per_method: args.usize(
+                "methods-adapters",
+                medefaults.adapters_per_method,
+            ),
+            requests: args
+                .usize("methods-requests", medefaults.requests),
+            zipf: args.f64("zipf", medefaults.zipf),
+            seed: args.u64("seed", medefaults.seed),
+            cfg: cosa::config::ServeConfig {
+                cache_mb: medefaults.cfg.cache_mb,
+                ..serve.clone()
+            },
+        };
+        anyhow::ensure!(meopts.adapters_per_method >= 1,
+                        "--methods-adapters must be >= 1");
+        let mereport = run_methods(&meopts)?;
+        mereport.print();
+        cosa::util::bench::write_bench_json(
+            "serving_methods", Json::Arr(mereport.to_json_rows()));
+    }
     Ok(())
 }
 
@@ -360,7 +400,8 @@ USAGE: cosa-repro <subcommand> [flags]
           run the HTTP/1.1 + streaming-JSON gateway over the serving
           engine in the foreground: POST /v1/forward,
           POST /v1/adapters/{name}/load, DELETE /v1/adapters/{name},
-          GET /v1/stats, GET /healthz.  [wire]/[serve]/[model] config
+          GET /v1/adapters, GET /v1/stats, GET /healthz.
+          [wire]/[serve]/[model] config
           tables and COSA_WIRE_*/COSA_SERVE_*/COSA_MODEL_* env provide
           the defaults; --preload-dir warm-loads every checkpoint in a
           directory before the listener opens
@@ -370,6 +411,7 @@ USAGE: cosa-repro <subcommand> [flags]
           [--sites N --model-requests N --model-cache-mb F]
           [--skip-model] [--wire --wire-requests N --wire-clients N]
           [--tail --tail-adapters N --tail-requests N --tail-zipf S]
+          [--methods --methods-adapters N --methods-requests N]
           multi-adapter serving benchmarks: the single-site scenario
           (batched scheduler vs sequential per-request forward ->
           `serving` section of BENCH_linalg.json) plus the whole-model
@@ -382,6 +424,9 @@ USAGE: cosa-repro <subcommand> [flags]
           `serving_wire` section); --tail adds the heavy-tail fused
           cross-adapter batching scenario (fused vs per-adapter
           batching on an identical Zipf s=1.0 stream ->
-          `serving_tail` section)
+          `serving_tail` section); --methods adds the adapter-zoo
+          cross-method table (CoSA vs RoSA vs LoRA fleets plus a
+          mixed-method stream in one engine ->
+          `serving_methods` section)
   list    show artifacts (build with `make artifacts`)
 ";

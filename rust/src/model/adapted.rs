@@ -1,53 +1,46 @@
 //! `AdaptedModel` — one base model, N adapted sites, many named
-//! adapters, one shared byte-budgeted [`ProjectionCache`].
+//! adapters of *any servable method*, one shared byte-budgeted
+//! [`ProjectionCache`].
 //!
-//! This is the multi-site generalization of the PR-3 single-site
-//! serving registry: an *adapter* is no longer one core but a **set of
-//! cores keyed by site** (one `a_s × b_s` core per [`SiteSpec`] of the
-//! [`ModelSpec`]), all regenerating their fixed `L`/`R` projections from
-//! **one seed** — so a whole model's adapter artifact is still just
-//! `Σ a_s·b_s` floats plus 8 bytes of seed (`adapters::costmodel`
-//! aggregates the exact numbers).  The projection LRU is deliberately
+//! The model layer programs against the method-agnostic
+//! [`Adapter`] trait: a registered adapter is a **per-site set of
+//! trait objects** (one `Arc<dyn Adapter>` per [`SiteSpec`] of the
+//! [`ModelSpec`]), and everything residency-related keys on each
+//! method's *declared* regenerable tensors ([`Adapter::regen_specs`])
+//! rather than hard-coding CoSA's `L`/`R` pair.  CoSA sites declare
+//! `[L, R]` in exactly the order the pre-trait code peeked the cache,
+//! so its key sequence — and therefore its bit-identical serving — is
+//! preserved by construction; LoRA/RoSA sites declare nothing and
+//! simply never touch the cache.  The projection LRU stays deliberately
 //! shared across sites: one byte budget arbitrates residency over every
 //! `(site, adapter)` pair, so a hot adapter keeps its entire per-model
-//! projection set warm while cold sites age out — instead of each site
-//! hoarding a fixed budget slice (`serve::bench::run_model` measures
-//! shared-vs-per-site and CI gates the ratio).
+//! projection set warm while cold sites age out (`serve::bench`
+//! measures shared-vs-per-site and CI gates the ratio).
 //!
 //! The two-phase [`AdaptedModel::plan`] / [`AdaptedModel::install`]
 //! lookup extends the single-site split to whole requests: one `plan`
-//! call under the lock resolves every warm site and describes **all
-//! cold sites at once**, so a scheduler worker regenerates every missing
-//! projection of a request outside the lock in one go rather than
-//! re-taking the lock per site.
+//! call under the lock resolves every warm regenerable tensor and
+//! describes **all cold ones at once** (as [`RegenSpec`]s), so a
+//! scheduler worker materializes every missing tensor of a request
+//! outside the lock in one go ([`ModelPlan::regen_missing`]) rather
+//! than re-taking the lock per site.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::Arc;
 
-use crate::adapters::cosa::{
-    adapter_forward, adapter_forward_grouped_into, adapter_forward_into,
-    regen_l, regen_r,
-};
+use crate::adapters::cosa::CosaAdapter;
+use crate::adapters::traits::{self, Adapter, RegenSpec};
+use crate::adapters::Method;
 use crate::linalg::Workspace;
 use crate::math::matrix::Matrix;
 use crate::model::cache::{CacheStats, ProjectionCache};
 use crate::model::spec::{ModelSpec, SiteShape};
-use crate::train::checkpoint::{Checkpoint, CkptSite};
+use crate::train::checkpoint::{Checkpoint, CkptSite, FORMAT_VERSION};
 
-/// One site's contribution to a registered adapter: the trained core
-/// plus the tensor names its projections regenerate from.
-#[derive(Clone)]
-pub struct SiteCore {
-    /// Tensor name the `L` projection derives from (must match what
-    /// training used or the regenerated `L` differs).
-    pub l_name: String,
-    pub r_name: String,
-    /// Trained core (`a × b` per the site's spec).
-    pub y: Arc<Matrix>,
-}
-
-/// Insert-side description of one site's core.
+/// Insert-side description of one CoSA site core: the trained `Y` plus
+/// the tensor names its projections regenerate from (must match what
+/// training used or the regenerated `L`/`R` differ).
 pub struct CoreInput {
     pub l_name: String,
     pub r_name: String,
@@ -64,44 +57,84 @@ impl CoreInput {
     }
 }
 
-/// One registered adapter: a per-site core set under one seed/alpha.
+/// One registered adapter: a per-site trait-object set under one
+/// seed/alpha, all sites running the same method (the engine serves
+/// uniform-method adapters; a *model* mixes methods by loading several
+/// adapters).
 #[derive(Clone)]
 pub struct ModelAdapter {
     pub name: Arc<str>,
     pub seed: u64,
     pub alpha: f32,
+    pub method: Method,
     /// Aligned with `ModelSpec::sites` (index i adapts site i).
-    pub cores: Vec<SiteCore>,
+    pub sites: Vec<Arc<dyn Adapter>>,
 }
 
-/// Per-site slice of a [`ModelPlan`]: `l`/`r` are `Some` on cache hits;
-/// on a miss the remaining fields describe the regeneration to perform
-/// outside the registry lock.
+impl ModelAdapter {
+    /// Trainable parameters across all sites.
+    pub fn param_count(&self) -> usize {
+        self.sites.iter().map(|s| s.param_count()).sum()
+    }
+
+    /// Stored (checkpoint-resident) bytes across all sites.
+    pub fn resident_bytes(&self) -> usize {
+        self.sites.iter().map(|s| s.resident_bytes()).sum()
+    }
+
+    /// Seed-regenerable bytes across all sites (the projection-cache
+    /// working set; 0 for fully-stored methods).
+    pub fn regen_bytes(&self) -> usize {
+        self.sites.iter().map(|s| s.regen_bytes()).sum()
+    }
+}
+
+/// Per-site slice of a [`ModelPlan`]: `have[i]` is `Some` where
+/// `specs[i]` was warm in the cache at plan time; cold slots carry the
+/// [`RegenSpec`] to materialize outside the registry lock.
 pub struct SitePlan {
-    pub seed: u64,
-    pub l_name: String,
-    pub r_name: String,
-    pub m: usize,
-    pub n: usize,
-    pub a: usize,
-    pub b: usize,
-    pub y: Arc<Matrix>,
-    pub l: Option<Arc<Matrix>>,
-    pub r: Option<Arc<Matrix>>,
+    pub adapter: Arc<dyn Adapter>,
+    /// The site's declared regenerable tensors, in declaration order
+    /// (= the order `forward_into` expects and the cache is keyed).
+    pub specs: Vec<RegenSpec>,
+    /// Aligned with `specs`: cache hits resolved at plan time.
+    pub have: Vec<Option<Arc<Matrix>>>,
 }
 
 /// First phase of a whole-request lookup: every site of one adapter,
-/// warm sites resolved, cold sites described (see module docs).
+/// warm tensors resolved, cold tensors described (see module docs).
 pub struct ModelPlan {
     pub alpha: f32,
+    pub method: Method,
     pub sites: Vec<SitePlan>,
 }
 
 impl ModelPlan {
-    /// `(l, r)` regeneration slots for [`AdaptedModel::install`] —
-    /// `None`/`None` everywhere, for inline (lock-free) callers.
-    pub fn no_regen(&self) -> Vec<(Option<Matrix>, Option<Matrix>)> {
-        self.sites.iter().map(|_| (None, None)).collect()
+    /// Regeneration slots for [`AdaptedModel::install`] — `None`
+    /// everywhere, for inline (lock-free) callers.
+    pub fn no_regen(&self) -> Vec<Vec<Option<Matrix>>> {
+        self.sites
+            .iter()
+            .map(|s| s.specs.iter().map(|_| None).collect())
+            .collect()
+    }
+
+    /// Materialize exactly the tensors the plan found cold — the
+    /// outside-the-lock step of the plan/install split, method-agnostic
+    /// (each slot regenerates from its own [`RegenSpec`]).
+    pub fn regen_missing(&self) -> Vec<Vec<Option<Matrix>>> {
+        self.sites
+            .iter()
+            .map(|s| {
+                s.specs
+                    .iter()
+                    .zip(&s.have)
+                    .map(|(spec, have)| {
+                        have.is_none().then(|| spec.materialize())
+                    })
+                    .collect()
+            })
+            .collect()
     }
 }
 
@@ -109,19 +142,22 @@ impl ModelPlan {
 /// lock can be released before any compute starts.
 #[derive(Clone)]
 pub struct SiteHandles {
-    pub l: Arc<Matrix>,
-    pub r: Arc<Matrix>,
-    pub y: Arc<Matrix>,
+    pub adapter: Arc<dyn Adapter>,
+    /// Materialized regenerable tensors in spec-declaration order
+    /// (CoSA: `[L, R]`; LoRA/RoSA: empty).
+    pub regen: Vec<Arc<Matrix>>,
 }
 
 /// Everything one *request's* forward needs: all sites of one adapter.
 #[derive(Clone)]
 pub struct ModelHandles {
     pub alpha: f32,
+    pub method: Method,
     pub sites: Vec<SiteHandles>,
 }
 
-/// Multi-site adapter registry over one [`ModelSpec`] (see module docs).
+/// Multi-site, multi-method adapter registry over one [`ModelSpec`]
+/// (see module docs).
 pub struct AdaptedModel {
     spec: Arc<ModelSpec>,
     adapters: BTreeMap<Arc<str>, ModelAdapter>,
@@ -203,10 +239,73 @@ impl AdaptedModel {
         self.adapters.is_empty()
     }
 
-    /// Hot-load an adapter from its parts: one core per spec site, in
-    /// spec order.  Replaces any same-named adapter.  Every core must
-    /// match its site's `(a, b)` — per-site heterogeneity lives in the
-    /// spec, not in individual adapters.
+    /// Look up one registered adapter (wire stats/listing surface).
+    pub fn get(&self, name: &str) -> Option<&ModelAdapter> {
+        self.adapters.get(name)
+    }
+
+    /// Registered adapters in name order (wire listing surface).
+    pub fn adapters(&self) -> impl Iterator<Item = &ModelAdapter> {
+        self.adapters.values()
+    }
+
+    /// Hot-load an adapter from per-site trait objects, in spec order.
+    /// Replaces any same-named adapter.  Every site must match the
+    /// spec's `(m, n)` and all sites must run one method — the engine
+    /// serves uniform-method adapters (mixed-method *models* are
+    /// several adapters side by side).
+    pub fn insert_sites(
+        &mut self,
+        name: &str,
+        seed: u64,
+        alpha: f32,
+        sites: Vec<Arc<dyn Adapter>>,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            sites.len() == self.spec.len(),
+            "adapter `{name}`: {} sites for model `{}` with {} sites",
+            sites.len(),
+            self.spec.name,
+            self.spec.len()
+        );
+        anyhow::ensure!(!sites.is_empty(), "adapter `{name}` has no sites");
+        let method = sites[0].method();
+        for (ad, site) in sites.iter().zip(&self.spec.sites) {
+            anyhow::ensure!(
+                ad.out_dim() == site.shape.m && ad.in_dim() == site.shape.n,
+                "adapter `{name}` site `{}`: adapts {}x{}, spec wants \
+                 {}x{}",
+                site.name,
+                ad.out_dim(),
+                ad.in_dim(),
+                site.shape.m,
+                site.shape.n
+            );
+            anyhow::ensure!(
+                ad.method() == method,
+                "adapter `{name}` site `{}`: method `{}` differs from \
+                 `{}` — one adapter serves one method",
+                site.name,
+                ad.method().name(),
+                method.name()
+            );
+        }
+        let key: Arc<str> = Arc::from(name);
+        let adapter = ModelAdapter {
+            name: key.clone(),
+            seed,
+            alpha,
+            method,
+            sites,
+        };
+        self.adapters.insert(key, adapter);
+        Ok(())
+    }
+
+    /// Hot-load a CoSA adapter from its parts: one core per spec site,
+    /// in spec order.  Every core must match its site's `(a, b)` —
+    /// per-site heterogeneity lives in the spec, not in individual
+    /// adapters.
     pub fn insert(
         &mut self,
         name: &str,
@@ -221,7 +320,8 @@ impl AdaptedModel {
             self.spec.name,
             self.spec.len()
         );
-        let mut stored = Vec::with_capacity(cores.len());
+        let mut sites: Vec<Arc<dyn Adapter>> =
+            Vec::with_capacity(cores.len());
         for (core, site) in cores.into_iter().zip(&self.spec.sites) {
             anyhow::ensure!(
                 core.y.rows == site.a && core.y.cols == site.b,
@@ -237,21 +337,16 @@ impl AdaptedModel {
                 "adapter `{name}` site `{}`: empty projection tensor name",
                 site.name
             );
-            stored.push(SiteCore {
-                l_name: core.l_name,
-                r_name: core.r_name,
-                y: Arc::new(core.y),
-            });
+            sites.push(Arc::new(CosaAdapter::new(
+                seed,
+                core.l_name,
+                core.r_name,
+                site.shape.m,
+                site.shape.n,
+                Arc::new(core.y),
+            )));
         }
-        let key: Arc<str> = Arc::from(name);
-        let adapter = ModelAdapter {
-            name: key.clone(),
-            seed,
-            alpha,
-            cores: stored,
-        };
-        self.adapters.insert(key, adapter);
-        Ok(())
+        self.insert_sites(name, seed, alpha, sites)
     }
 
     /// `insert` with the canonical projection names derived from the
@@ -282,40 +377,57 @@ impl AdaptedModel {
         self.insert(name, seed, alpha, cores)
     }
 
+    /// Deterministic synthetic adapter of any servable method — the
+    /// bench and `[model] method` config path.  CoSA sites get gaussian
+    /// `a × b` cores; LoRA/RoSA sites get rank-`a` factors (RoSA with a
+    /// ~1/3-dense sparse residual on exact zeros).
+    pub fn insert_synthetic_method(
+        &mut self,
+        name: &str,
+        seed: u64,
+        alpha: f32,
+        method: Method,
+    ) -> anyhow::Result<()> {
+        let sites = synthetic_sites(&self.spec, method, seed, name)?;
+        self.insert_sites(name, seed, alpha, sites)
+    }
+
     /// Hot-load from a checkpoint.
     ///
-    /// * **v2** (site-aware header): every spec site must be covered by
-    ///   a same-named checkpoint site block with matching dims; cores
-    ///   come from the `<site>.y` tensors and projections regenerate
-    ///   from the canonical `<site>.l` / `<site>.r` names.
-    /// * **v1** (no site metadata): for a single-site model the first
-    ///   2-d `*.y` tensor (BTreeMap order) serves the site — the PR-3
-    ///   behavior, so old files keep loading as a 1-site model.  For a
-    ///   multi-site model every spec site must find a `<site>.y`
-    ///   tensor (matched **by name**, never by position — tensor
-    ///   iteration order is lexicographic and silently binding cores
-    ///   to the wrong sites would serve wrong math) with matching
-    ///   dims.
+    /// * **v2/v3** (site-aware header): every spec site must be covered
+    ///   by a same-named checkpoint site block with matching `(m, n)`;
+    ///   the per-site method tag (v3; v2 blocks are implicitly
+    ///   `"cosa"`) picks the decoder, and CoSA blocks must additionally
+    ///   match the spec's `(a, b)` core dims.
+    /// * **v1** (no site metadata): CoSA only.  For a single-site model
+    ///   the first 2-d `*.y` tensor (BTreeMap order) serves the site —
+    ///   the PR-3 behavior, so old files keep loading as a 1-site
+    ///   model.  For a multi-site model every spec site must find a
+    ///   `<site>.y` tensor (matched **by name**, never by position —
+    ///   tensor iteration order is lexicographic and silently binding
+    ///   cores to the wrong sites would serve wrong math) with
+    ///   matching dims.
     pub fn load_checkpoint(
         &mut self,
         name: &str,
         ck: &Checkpoint,
         alpha: f32,
     ) -> anyhow::Result<()> {
-        let cores = if !ck.sites.is_empty() {
-            self.cores_from_v2(name, ck)?
+        let sites = if !ck.sites.is_empty() {
+            self.sites_from_v2(name, ck)?
         } else {
-            self.cores_from_v1(name, ck)?
+            self.sites_from_v1(name, ck)?
         };
-        self.insert(name, ck.adapter_seed, alpha, cores)
+        self.insert_sites(name, ck.adapter_seed, alpha, sites)
     }
 
-    fn cores_from_v2(
+    fn sites_from_v2(
         &self,
         name: &str,
         ck: &Checkpoint,
-    ) -> anyhow::Result<Vec<CoreInput>> {
-        let mut cores = Vec::with_capacity(self.spec.len());
+    ) -> anyhow::Result<Vec<Arc<dyn Adapter>>> {
+        let mut sites: Vec<Arc<dyn Adapter>> =
+            Vec::with_capacity(self.spec.len());
         for site in &self.spec.sites {
             let blk = ck
                 .sites
@@ -328,50 +440,56 @@ impl AdaptedModel {
                     self.spec.name
                 ))?;
             anyhow::ensure!(
-                blk.m == site.shape.m
-                    && blk.n == site.shape.n
-                    && blk.a == site.a
-                    && blk.b == site.b,
-                "site `{}`: checkpoint says {}x{} core {}x{}, model spec \
-                 wants {}x{} core {}x{}",
+                blk.m == site.shape.m && blk.n == site.shape.n,
+                "site `{}`: checkpoint adapts {}x{}, model spec wants \
+                 {}x{}",
                 site.name,
                 blk.m,
                 blk.n,
-                blk.a,
-                blk.b,
+                site.shape.m,
+                site.shape.n
+            );
+            let method = Method::from_str(&blk.method)?;
+            if method == Method::CoSA {
+                anyhow::ensure!(
+                    blk.a == site.a && blk.b == site.b,
+                    "site `{}`: checkpoint core is {}x{}, model spec \
+                     wants {}x{}",
+                    site.name,
+                    blk.a,
+                    blk.b,
+                    site.a,
+                    site.b
+                );
+            }
+            let ad = traits::decode_site(
+                method,
+                &site.name,
                 site.shape.m,
                 site.shape.n,
-                site.a,
-                site.b
-            );
-            let tname = format!("{}.y", site.name);
-            let (shape, vals) = ck.tensors.get(&tname).ok_or_else(|| {
-                anyhow::anyhow!(
-                    "checkpoint for `{name}`: site `{}` has no `{tname}` \
-                     core tensor",
-                    site.name
-                )
-            })?;
+                ck.adapter_seed,
+                &ck.tensors,
+            )?;
             anyhow::ensure!(
-                shape.as_slice() == [site.a, site.b],
-                "`{tname}`: shape {shape:?}, spec wants [{}, {}]",
-                site.a,
-                site.b
+                ad.core_dims() == (blk.a, blk.b),
+                "site `{}`: tensors decode to a {}x{} core, site block \
+                 says {}x{}",
+                site.name,
+                ad.core_dims().0,
+                ad.core_dims().1,
+                blk.a,
+                blk.b
             );
-            cores.push(CoreInput {
-                l_name: site.l_name(),
-                r_name: site.r_name(),
-                y: Matrix::from_vec(shape[0], shape[1], vals.clone()),
-            });
+            sites.push(ad);
         }
-        Ok(cores)
+        Ok(sites)
     }
 
-    fn cores_from_v1(
+    fn sites_from_v1(
         &self,
         name: &str,
         ck: &Checkpoint,
-    ) -> anyhow::Result<Vec<CoreInput>> {
+    ) -> anyhow::Result<Vec<Arc<dyn Adapter>>> {
         let ys: Vec<(&String, &(Vec<usize>, Vec<f32>))> = ck
             .tensors
             .iter()
@@ -396,7 +514,7 @@ impl AdaptedModel {
                         || anyhow::anyhow!(
                             "v1 checkpoint for `{name}` has no `{want}` \
                              core for site `{}` (v1 stems must match the \
-                             model's site names; save a v2 checkpoint to \
+                             model's site names; save a v2+ checkpoint to \
                              map sites explicitly)",
                             site.name
                         ),
@@ -404,8 +522,9 @@ impl AdaptedModel {
                 })
                 .collect::<anyhow::Result<Vec<_>>>()?
         };
-        let mut cores = Vec::with_capacity(picked.len());
-        for ((tname, (shape, vals)), site) in
+        let mut sites: Vec<Arc<dyn Adapter>> =
+            Vec::with_capacity(picked.len());
+        for ((tname, (shape, _)), site) in
             picked.into_iter().zip(&self.spec.sites)
         {
             anyhow::ensure!(
@@ -415,14 +534,19 @@ impl AdaptedModel {
                 site.a,
                 site.b
             );
+            // v1 projections derive from the *tensor* stem, not the
+            // spec name — decode_site keys off whatever stem we pass
             let stem = tname.strip_suffix(".y").unwrap_or(tname);
-            cores.push(CoreInput {
-                l_name: format!("{stem}.l"),
-                r_name: format!("{stem}.r"),
-                y: Matrix::from_vec(shape[0], shape[1], vals.clone()),
-            });
+            sites.push(traits::decode_site(
+                Method::CoSA,
+                stem,
+                site.shape.m,
+                site.shape.n,
+                ck.adapter_seed,
+                &ck.tensors,
+            )?);
         }
-        Ok(cores)
+        Ok(sites)
     }
 
     /// Load-by-name entry point: resolve `name` to a checkpoint file in
@@ -437,11 +561,11 @@ impl AdaptedModel {
         self.load_checkpoint(name, &ck, alpha)
     }
 
-    /// Snapshot a registered adapter as a v2 checkpoint (all per-site
-    /// cores under one name — the save half of the v2 format).  Requires
-    /// the adapter's projection names to be the canonical spec-derived
-    /// ones: a v2 file records sites, not arbitrary tensor stems, so a
-    /// custom-stem adapter would silently regenerate different
+    /// Snapshot a registered adapter as a v3 checkpoint (all per-site
+    /// tensors under one name, one method tag per site block).  CoSA
+    /// adapters must carry the canonical spec-derived projection names:
+    /// a site-aware file records sites, not arbitrary tensor stems, so
+    /// a custom-stem adapter would silently regenerate different
     /// projections after a round-trip — rejected here instead.
     pub fn checkpoint(
         &self,
@@ -454,31 +578,34 @@ impl AdaptedModel {
             .ok_or_else(|| anyhow::anyhow!("unknown adapter `{name}`"))?;
         let mut tensors = BTreeMap::new();
         let mut sites = Vec::with_capacity(self.spec.len());
-        for (core, site) in adapter.cores.iter().zip(&self.spec.sites) {
-            anyhow::ensure!(
-                core.l_name == site.l_name() && core.r_name == site.r_name(),
-                "adapter `{name}` site `{}`: projection names \
-                 (`{}`/`{}`) are not the canonical `<site>.l`/`<site>.r` \
-                 — a v2 checkpoint cannot represent them",
-                site.name,
-                core.l_name,
-                core.r_name
-            );
-            tensors.insert(
-                format!("{}.y", site.name),
-                (vec![site.a, site.b], core.y.data.clone()),
-            );
+        for (ad, site) in adapter.sites.iter().zip(&self.spec.sites) {
+            if let Some(c) = ad.as_any().downcast_ref::<CosaAdapter>() {
+                anyhow::ensure!(
+                    c.l_name() == site.l_name()
+                        && c.r_name() == site.r_name(),
+                    "adapter `{name}` site `{}`: projection names \
+                     (`{}`/`{}`) are not the canonical \
+                     `<site>.l`/`<site>.r` — a site-aware checkpoint \
+                     cannot represent them",
+                    site.name,
+                    c.l_name(),
+                    c.r_name()
+                );
+            }
+            ad.encode_tensors(&site.name, &mut tensors);
+            let (a, b) = ad.core_dims();
             sites.push(CkptSite {
                 name: site.name.clone(),
                 m: site.shape.m,
                 n: site.shape.n,
-                a: site.a,
-                b: site.b,
+                a,
+                b,
+                method: ad.method().name().to_string(),
             });
         }
         Ok(Checkpoint {
-            version: 2,
-            method: "cosa".into(),
+            version: FORMAT_VERSION,
+            method: adapter.method.name().to_string(),
             adapter_seed: adapter.seed,
             artifact: artifact.to_string(),
             step: 0,
@@ -495,84 +622,86 @@ impl AdaptedModel {
     }
 
     /// Lock-friendly first phase of a whole-request lookup: cache hits
-    /// resolve immediately into the plan; misses leave `l`/`r` as `None`
-    /// plus everything needed to regenerate them **outside** whatever
-    /// lock guards this model — all cold sites of the request described
-    /// by one call.  Hand the regenerated matrices back through
-    /// [`AdaptedModel::install`].
+    /// resolve immediately into the plan; misses leave `have` slots as
+    /// `None` plus the [`RegenSpec`] needed to materialize them
+    /// **outside** whatever lock guards this model — all cold tensors
+    /// of the request described by one call.  Hand the regenerated
+    /// matrices back through [`AdaptedModel::install`].
     pub fn plan(&mut self, name: &str) -> anyhow::Result<ModelPlan> {
         // Split borrows: the adapter stays borrowed from `adapters`
         // while `cache` is touched mutably — cloning the whole adapter
-        // here would put one heap allocation per stored tensor name
-        // inside the very lock the plan/install split keeps brief.
+        // here would put heap allocations inside the very lock the
+        // plan/install split keeps brief.
         let adapter = self
             .adapters
             .get(name)
             .ok_or_else(|| anyhow::anyhow!("unknown adapter `{name}`"))?;
         let cache = &mut self.cache;
         let mut sites = Vec::with_capacity(self.spec.len());
-        for (core, site) in adapter.cores.iter().zip(&self.spec.sites) {
-            let (m, n) = (site.shape.m, site.shape.n);
-            let (a, b) = (site.a, site.b);
-            let l = cache.peek(&(adapter.seed, core.l_name.clone(), m, a));
-            let r = cache.peek(&(adapter.seed, core.r_name.clone(), b, n));
-            sites.push(SitePlan {
-                seed: adapter.seed,
-                l_name: core.l_name.clone(),
-                r_name: core.r_name.clone(),
-                m,
-                n,
-                a,
-                b,
-                y: core.y.clone(),
-                l,
-                r,
-            });
+        for ad in &adapter.sites {
+            let specs = ad.regen_specs();
+            let have = specs
+                .iter()
+                .map(|spec| cache.peek(&spec.key()))
+                .collect();
+            sites.push(SitePlan { adapter: ad.clone(), specs, have });
         }
-        Ok(ModelPlan { alpha: adapter.alpha, sites })
+        Ok(ModelPlan {
+            alpha: adapter.alpha,
+            method: adapter.method,
+            sites,
+        })
     }
 
-    /// Second phase: install projections regenerated outside the lock —
-    /// one `(l, r)` slot per site, `None` for anything the plan already
-    /// resolved (use [`ModelPlan::no_regen`] inline).  If two workers
-    /// raced the same cold adapter, the first install wins and the
-    /// loser's regenerated copies are dropped — both see identical bits
-    /// either way, regeneration being deterministic.
+    /// Second phase: install tensors regenerated outside the lock —
+    /// one slot per declared spec per site, `None` for anything the
+    /// plan already resolved (use [`ModelPlan::no_regen`] inline,
+    /// [`ModelPlan::regen_missing`] for the outside-the-lock path).
+    /// If two workers raced the same cold adapter, the first install
+    /// wins and the loser's regenerated copies are dropped — both see
+    /// identical bits either way, regeneration being deterministic.
     pub fn install(
         &mut self,
         plan: &ModelPlan,
-        regen: Vec<(Option<Matrix>, Option<Matrix>)>,
+        regen: Vec<Vec<Option<Matrix>>>,
     ) -> ModelHandles {
         assert_eq!(
             regen.len(),
             plan.sites.len(),
-            "one regen slot per planned site"
+            "one regen slot set per planned site"
         );
         let mut sites = Vec::with_capacity(plan.sites.len());
-        for (sp, (l_new, r_new)) in plan.sites.iter().zip(regen) {
-            let l = match &sp.l {
-                Some(hit) => hit.clone(),
-                None => {
-                    let (seed, m, a) = (sp.seed, sp.m, sp.a);
-                    let lname = sp.l_name.clone();
-                    self.cache.get_or((seed, lname.clone(), m, a), move || {
-                        l_new.unwrap_or_else(|| regen_l(seed, &lname, m, a))
-                    })
-                }
-            };
-            let r = match &sp.r {
-                Some(hit) => hit.clone(),
-                None => {
-                    let (seed, b, n) = (sp.seed, sp.b, sp.n);
-                    let rname = sp.r_name.clone();
-                    self.cache.get_or((seed, rname.clone(), b, n), move || {
-                        r_new.unwrap_or_else(|| regen_r(seed, &rname, b, n))
-                    })
-                }
-            };
-            sites.push(SiteHandles { l, r, y: sp.y.clone() });
+        for (sp, slots) in plan.sites.iter().zip(regen) {
+            assert_eq!(
+                slots.len(),
+                sp.specs.len(),
+                "one regen slot per declared spec"
+            );
+            let mut mats = Vec::with_capacity(sp.specs.len());
+            for ((spec, have), slot) in
+                sp.specs.iter().zip(&sp.have).zip(slots)
+            {
+                let mat = match have {
+                    Some(hit) => hit.clone(),
+                    None => {
+                        let spec = spec.clone();
+                        self.cache.get_or(spec.key(), move || {
+                            slot.unwrap_or_else(|| spec.materialize())
+                        })
+                    }
+                };
+                mats.push(mat);
+            }
+            sites.push(SiteHandles {
+                adapter: sp.adapter.clone(),
+                regen: mats,
+            });
         }
-        ModelHandles { alpha: plan.alpha, sites }
+        ModelHandles {
+            alpha: plan.alpha,
+            method: plan.method,
+            sites,
+        }
     }
 
     /// Handles for one whole-request forward, through the LRU.  Cache
@@ -604,7 +733,7 @@ impl AdaptedModel {
     pub fn install_many(
         &mut self,
         plans: &[ModelPlan],
-        regens: Vec<Vec<(Option<Matrix>, Option<Matrix>)>>,
+        regens: Vec<Vec<Vec<Option<Matrix>>>>,
     ) -> Vec<ModelHandles> {
         assert_eq!(plans.len(), regens.len(), "one regen set per plan");
         plans
@@ -617,13 +746,14 @@ impl AdaptedModel {
     /// Fused cross-adapter forward: row segment `g` of every `xs[i]`
     /// belongs to adapter `names[g]` (`segs[g]` rows, stacked in
     /// order), and all K adapters run through each site in **one**
-    /// grouped block-diagonal dispatch
-    /// ([`adapter_forward_grouped_into`]) instead of K per-adapter
-    /// sweeps.  Bit-identical to slicing the rows apart and composing
-    /// [`AdaptedModel::forward_into`] per adapter (asserted in tests).
-    /// Duplicate names are fine (their segments just share handles);
-    /// any unknown name fails the whole call before outputs are
-    /// touched.
+    /// grouped dispatch ([`traits::forward_grouped_into`]) — maximal
+    /// same-method segment runs take their method's grouped kernel
+    /// path, so an all-CoSA batch executes exactly the pre-trait
+    /// grouped block-diagonal sweep.  Bit-identical to slicing the
+    /// rows apart and composing [`AdaptedModel::forward_into`] per
+    /// adapter (asserted in tests).  Duplicate names are fine (their
+    /// segments just share handles); any unknown name fails the whole
+    /// call before outputs are touched.
     pub fn forward_grouped_into(
         &mut self,
         names: &[&str],
@@ -664,14 +794,16 @@ impl AdaptedModel {
                 out.rows,
                 total
             );
-            let ls: Vec<&Matrix> =
-                handles.iter().map(|h| h.sites[s].l.as_ref()).collect();
-            let rs: Vec<&Matrix> =
-                handles.iter().map(|h| h.sites[s].r.as_ref()).collect();
-            let ys: Vec<&Matrix> =
-                handles.iter().map(|h| h.sites[s].y.as_ref()).collect();
-            adapter_forward_grouped_into(
-                x, &ls, &rs, &ys, &alphas, segs, ws, out,
+            let adapters: Vec<&dyn Adapter> = handles
+                .iter()
+                .map(|h| h.sites[s].adapter.as_ref())
+                .collect();
+            let regens: Vec<&[Arc<Matrix>]> = handles
+                .iter()
+                .map(|h| h.sites[s].regen.as_slice())
+                .collect();
+            traits::forward_grouped_into(
+                &adapters, &regens, &alphas, x, segs, ws, out,
             );
         }
         Ok(())
@@ -679,8 +811,9 @@ impl AdaptedModel {
 
     /// Workspace-backed multi-site forward: `xs[i]` (`N × n_i`) runs
     /// through site `i` into `outs[i]` (`N × m_i`) — exactly one
-    /// `adapter_forward_into` per site, so the result is bit-identical
-    /// to composing independent single-site calls (asserted in tests).
+    /// [`Adapter::forward_into`] per site, so the result is
+    /// bit-identical to composing independent single-site calls
+    /// (asserted in tests).
     pub fn forward_into(
         &mut self,
         name: &str,
@@ -698,7 +831,7 @@ impl AdaptedModel {
             outs.len()
         );
         for ((x, out), sh) in xs.iter().zip(outs.iter_mut()).zip(&h.sites) {
-            adapter_forward_into(x, &sh.l, &sh.r, &sh.y, h.alpha, ws, out);
+            sh.adapter.forward_into(x, &sh.regen, h.alpha, ws, out);
         }
         Ok(())
     }
@@ -721,7 +854,7 @@ impl AdaptedModel {
         Ok(xs
             .iter()
             .zip(&h.sites)
-            .map(|(x, sh)| adapter_forward(x, &sh.l, &sh.r, &sh.y, h.alpha))
+            .map(|(x, sh)| sh.adapter.forward(x, &sh.regen, h.alpha))
             .collect())
     }
 
@@ -745,9 +878,76 @@ impl AdaptedModel {
     }
 }
 
+/// Deterministic synthetic per-site adapters of one method for a spec —
+/// shared by [`AdaptedModel::insert_synthetic_method`], the serving
+/// bench's mixed-method models, and tests.  LoRA/RoSA use each site's
+/// CoSA `a` as the rank (clamped to the site dims); RoSA keeps every
+/// third residual entry (exact zeros elsewhere).
+pub fn synthetic_sites(
+    spec: &ModelSpec,
+    method: Method,
+    seed: u64,
+    salt: &str,
+) -> anyhow::Result<Vec<Arc<dyn Adapter>>> {
+    use crate::adapters::lora::LoraAdapter;
+    use crate::adapters::rosa::RosaAdapter;
+    use crate::math::rng::Pcg64;
+
+    let mut sites: Vec<Arc<dyn Adapter>> = Vec::with_capacity(spec.len());
+    for site in &spec.sites {
+        let salted = format!("{salt}/{}", site.name);
+        let mut rng = Pcg64::derive(seed, &salted);
+        let (m, n) = (site.shape.m, site.shape.n);
+        let r = site.a.min(m).min(n).max(1);
+        let ad: Arc<dyn Adapter> = match method {
+            Method::CoSA => {
+                let y = Matrix::gaussian(site.a, site.b, 0.5, &mut rng);
+                Arc::new(CosaAdapter::new(
+                    seed,
+                    site.l_name(),
+                    site.r_name(),
+                    m,
+                    n,
+                    Arc::new(y),
+                ))
+            }
+            Method::LoRA => {
+                let b = Matrix::gaussian(m, r, 0.5, &mut rng);
+                let a = Matrix::gaussian(r, n, 0.5, &mut rng);
+                Arc::new(LoraAdapter::try_new(Arc::new(b), Arc::new(a))?)
+            }
+            Method::RoSA => {
+                let mut s = Matrix::gaussian(m, n, 0.5, &mut rng);
+                for (i, v) in s.data.iter_mut().enumerate() {
+                    if i % 3 != 0 {
+                        *v = 0.0;
+                    }
+                }
+                let b = Matrix::gaussian(m, r, 0.5, &mut rng);
+                let a = Matrix::gaussian(r, n, 0.5, &mut rng);
+                Arc::new(RosaAdapter::try_new(
+                    Arc::new(s),
+                    Arc::new(b),
+                    Arc::new(a),
+                )?)
+            }
+            other => anyhow::bail!(
+                "method `{}` has no serving adapter implementation \
+                 (servable: cosa, rosa, lora)",
+                other.name()
+            ),
+        };
+        sites.push(ad);
+    }
+    Ok(sites)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::adapters::cosa::{
+        adapter_forward, adapter_forward_into, regen_l, regen_r,
+    };
     use crate::math::rng::Pcg64;
 
     fn test_spec(sites: usize) -> ModelSpec {
@@ -881,6 +1081,66 @@ mod tests {
     }
 
     #[test]
+    fn mixed_method_grouped_forward_matches_per_adapter_batches() {
+        // A model serving one adapter per method: the fused grouped
+        // path must stay bit-identical to composed per-adapter calls
+        // even when segment runs switch methods mid-batch.
+        let spec = test_spec(2);
+        let mut model = AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+        for (name, method) in [
+            ("c1", Method::CoSA),
+            ("l1", Method::LoRA),
+            ("r1", Method::RoSA),
+            ("c2", Method::CoSA),
+        ] {
+            model
+                .insert_synthetic_method(name, 40, 1.5, method)
+                .unwrap();
+        }
+        let names = ["c1", "l1", "r1", "c2"];
+        let segs = [2usize, 3, 1, 2];
+        let total: usize = segs.iter().sum();
+        let xs = site_inputs(&spec, total, 11);
+        let mut ws = Workspace::new();
+        let mut outs: Vec<Matrix> = spec
+            .sites
+            .iter()
+            .map(|s| Matrix::zeros(total, s.shape.m))
+            .collect();
+        model
+            .forward_grouped_into(&names, &segs, &xs, &mut ws, &mut outs)
+            .unwrap();
+
+        let mut row = 0usize;
+        for (g, &rows) in segs.iter().enumerate() {
+            let sub_xs: Vec<Matrix> = xs
+                .iter()
+                .map(|x| Matrix::from_vec(
+                    rows,
+                    x.cols,
+                    x.data[row * x.cols..(row + rows) * x.cols].to_vec(),
+                ))
+                .collect();
+            let sub = model.forward(names[g], &sub_xs).unwrap();
+            for (s, so) in sub.iter().enumerate() {
+                let m = spec.sites[s].shape.m;
+                let fused = &outs[s].data[row * m..(row + rows) * m];
+                for (p, q) in fused.iter().zip(&so.data) {
+                    assert_eq!(p.to_bits(), q.to_bits(),
+                               "adapter {g} site {s} diverged");
+                }
+            }
+            row += rows;
+        }
+        // method is visible per adapter (the wire stats surface)
+        assert_eq!(model.get("l1").unwrap().method, Method::LoRA);
+        assert_eq!(model.get("r1").unwrap().method, Method::RoSA);
+        assert!(model.get("r1").unwrap().param_count() > 0);
+        assert_eq!(model.get("l1").unwrap().regen_bytes(), 0);
+        assert!(model.get("c1").unwrap().regen_bytes() > 0);
+    }
+
+    #[test]
     fn plan_many_reports_per_name_errors_in_place() {
         let mut model = AdaptedModel::new(test_spec(2), 1 << 20).unwrap();
         add_adapter(&mut model, "a", 7);
@@ -894,7 +1154,8 @@ mod tests {
         let hs = model.install_many(&ok, regens);
         assert_eq!(hs.len(), 2);
         // duplicate names in one batch share cache entries
-        assert!(Arc::ptr_eq(&hs[0].sites[0].l, &hs[1].sites[0].l));
+        assert!(Arc::ptr_eq(&hs[0].sites[0].regen[0],
+                            &hs[1].sites[0].regen[0]));
     }
 
     #[test]
@@ -922,6 +1183,30 @@ mod tests {
     }
 
     #[test]
+    fn insert_sites_enforces_dims_and_uniform_method() {
+        let spec = test_spec(2);
+        let mut model = AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+        // mixed methods within one adapter are refused
+        let mut mixed = synthetic_sites(&spec, Method::CoSA, 7, "x")
+            .unwrap();
+        mixed[1] =
+            synthetic_sites(&spec, Method::LoRA, 7, "x").unwrap()[1]
+                .clone();
+        assert!(model.insert_sites("x", 7, 2.0, mixed).is_err());
+        // wrong site dims are refused (build against a wider spec)
+        let wide =
+            ModelSpec::synthetic(2, SiteShape { m: 12, n: 11 }, 4, 3);
+        let bad = synthetic_sites(&wide, Method::LoRA, 7, "x").unwrap();
+        assert!(model.insert_sites("x", 7, 2.0, bad).is_err());
+        // unservable synthetic methods are refused up front
+        assert!(synthetic_sites(&spec, Method::DoRA, 7, "x").is_err());
+        // conforming uniform-method sites land
+        let good = synthetic_sites(&spec, Method::RoSA, 7, "x").unwrap();
+        model.insert_sites("x", 7, 2.0, good).unwrap();
+        assert_eq!(model.get("x").unwrap().method, Method::RoSA);
+    }
+
+    #[test]
     fn plan_resolves_all_cold_sites_at_once_and_install_dedupes() {
         let spec = test_spec(2);
         let mut model = AdaptedModel::new(spec, 1 << 20).unwrap();
@@ -931,34 +1216,36 @@ mod tests {
         let p1 = model.plan("a").unwrap();
         let p2 = model.plan("a").unwrap();
         assert_eq!(p1.sites.len(), 2);
-        assert!(p1.sites.iter().all(|s| s.l.is_none() && s.r.is_none()),
-                "cold cache must leave every site to regenerate");
+        assert!(p1.sites.iter()
+                    .all(|s| s.have.iter().all(|h| h.is_none())),
+                "cold cache must leave every tensor to regenerate");
+        assert!(p1.sites.iter().all(|s| s.specs.len() == 2),
+                "CoSA sites declare [L, R]");
         // Both regenerate everything outside the lock...
-        let regen = |p: &ModelPlan| -> Vec<(Option<Matrix>, Option<Matrix>)> {
-            p.sites
-                .iter()
-                .map(|s| {
-                    (Some(regen_l(s.seed, &s.l_name, s.m, s.a)),
-                     Some(regen_r(s.seed, &s.r_name, s.b, s.n)))
-                })
-                .collect()
-        };
-        let (r1, r2) = (regen(&p1), regen(&p2));
+        let (r1, r2) = (p1.regen_missing(), p2.regen_missing());
+        assert!(r1.iter().flatten().all(|slot| slot.is_some()));
         let h1 = model.install(&p1, r1);
         let h2 = model.install(&p2, r2);
         for (s1, s2) in h1.sites.iter().zip(&h2.sites) {
-            assert!(Arc::ptr_eq(&s1.l, &s2.l), "raced install must dedupe");
-            assert!(Arc::ptr_eq(&s1.r, &s2.r));
+            for (m1, m2) in s1.regen.iter().zip(&s2.regen) {
+                assert!(Arc::ptr_eq(m1, m2), "raced install must dedupe");
+            }
         }
         // warm plan resolves without any regeneration step
         let p3 = model.plan("a").unwrap();
-        assert!(p3.sites.iter().all(|s| s.l.is_some() && s.r.is_some()));
+        assert!(p3.sites.iter()
+                    .all(|s| s.have.iter().all(|h| h.is_some())));
+        assert!(p3.regen_missing().iter().flatten()
+                    .all(|slot| slot.is_none()),
+                "warm plans regenerate nothing");
         let no = p3.no_regen();
         let h3 = model.install(&p3, no);
-        assert!(Arc::ptr_eq(&h1.sites[0].l, &h3.sites[0].l));
+        assert!(Arc::ptr_eq(&h1.sites[0].regen[0],
+                            &h3.sites[0].regen[0]));
         // inline handles() agrees with the split path
         let h4 = model.handles("a").unwrap();
-        assert!(Arc::ptr_eq(&h1.sites[1].r, &h4.sites[1].r));
+        assert!(Arc::ptr_eq(&h1.sites[1].regen[1],
+                            &h4.sites[1].regen[1]));
     }
 
     #[test]
@@ -1000,13 +1287,14 @@ mod tests {
     }
 
     #[test]
-    fn v2_checkpoint_roundtrips_all_sites_bit_identically() {
+    fn v3_checkpoint_roundtrips_all_sites_bit_identically() {
         let spec = test_spec(3);
         let mut model = AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
         add_adapter(&mut model, "fleet", 42);
         let ck = model.checkpoint("fleet", "tiny-lm_cosa").unwrap();
-        assert_eq!(ck.version, 2);
+        assert_eq!(ck.version, FORMAT_VERSION);
         assert_eq!(ck.sites.len(), 3);
+        assert!(ck.sites.iter().all(|s| s.method == "cosa"));
 
         let xs = site_inputs(&spec, 4, 9);
         let want = model.forward("fleet", &xs).unwrap();
@@ -1017,7 +1305,39 @@ mod tests {
         for (wm, gm) in want.iter().zip(&got) {
             for (p, q) in wm.data.iter().zip(&gm.data) {
                 assert_eq!(p.to_bits(), q.to_bits(),
-                           "v2 round-trip must be bit-identical");
+                           "v3 round-trip must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn v3_checkpoint_roundtrips_lora_and_rosa() {
+        let spec = test_spec(2);
+        let mut model = AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+        for (name, method) in
+            [("lo", Method::LoRA), ("ro", Method::RoSA)]
+        {
+            model
+                .insert_synthetic_method(name, 42, 2.0, method)
+                .unwrap();
+            let ck = model.checkpoint(name, "tiny-lm").unwrap();
+            assert_eq!(ck.version, FORMAT_VERSION);
+            assert!(ck.sites.iter()
+                        .all(|s| s.method == method.name()));
+
+            let xs = site_inputs(&spec, 4, 9);
+            let want = model.forward(name, &xs).unwrap();
+            let mut fresh =
+                AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+            fresh.load_checkpoint(name, &ck, 2.0).unwrap();
+            assert_eq!(fresh.get(name).unwrap().method, method);
+            let got = fresh.forward(name, &xs).unwrap();
+            for (wm, gm) in want.iter().zip(&got) {
+                for (p, q) in wm.data.iter().zip(&gm.data) {
+                    assert_eq!(p.to_bits(), q.to_bits(),
+                               "{} round-trip must be bit-identical",
+                               method.name());
+                }
             }
         }
     }
@@ -1044,6 +1364,11 @@ mod tests {
         let mut bad = ck.clone();
         bad.sites.remove(1);
         bad.tensors.remove("site01.y");
+        assert!(fresh.load_checkpoint("a", &bad, 2.0).is_err());
+
+        // an unknown per-site method tag is refused
+        let mut bad = ck.clone();
+        bad.sites[0].method = "qlora".into();
         assert!(fresh.load_checkpoint("a", &bad, 2.0).is_err());
     }
 

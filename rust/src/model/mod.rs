@@ -10,29 +10,35 @@
 //!   of named `m × n` sites, each with its own core dims `(a, b)`
 //!   (per-site heterogeneity is first-class — KaSA-style per-layer
 //!   compression budgets).  Site names are the tensor stems projections
-//!   regenerate from and checkpoint v2 site blocks carry.
+//!   regenerate from and checkpoint site blocks carry.
 //! * [`AdaptedModel`] — one base, N sites, many named adapters (each a
-//!   per-site core *set* under one seed), and **one** shared
-//!   byte-budgeted [`ProjectionCache`] arbitrating `L`/`R` residency
-//!   across every `(site, adapter)` pair.  Two-phase
-//!   [`AdaptedModel::plan`] / [`AdaptedModel::install`] resolves all
-//!   cold sites of a request in one locked call and regenerates outside
-//!   the lock.
+//!   per-site set of [`crate::adapters::Adapter`] trait objects under
+//!   one seed — CoSA, RoSA, and LoRA are served by the same engine),
+//!   and **one** shared byte-budgeted [`ProjectionCache`] arbitrating
+//!   residency over every regenerable tensor each method *declares*
+//!   (CoSA's `L`/`R`; fully-stored methods declare none and bypass the
+//!   cache entirely).  Two-phase [`AdaptedModel::plan`] /
+//!   [`AdaptedModel::install`] resolves all cold tensors of a request
+//!   in one locked call and regenerates outside the lock
+//!   ([`ModelPlan::regen_missing`]).
 //!
-//! `serve` builds on this layer: its registry *is* an `AdaptedModel`,
-//! its scheduler batches whole multi-site requests, and
-//! `serve::bench::run_model` measures the shared-cache-vs-per-site-cache
-//! claim CI gates.  `config`'s `[model]` table (`COSA_MODEL_*` env)
-//! constructs specs; `adapters::costmodel` aggregates per-model
-//! param/byte accounting from the same spec.
+//! `serve` builds on this layer: its scheduler batches whole multi-site
+//! requests and segments fused batches by (adapter, method), and
+//! `serve::bench::run_model` measures the
+//! shared-cache-vs-per-site-cache claim CI gates.  `config`'s `[model]`
+//! table (`COSA_MODEL_*` env) constructs specs; `adapters::costmodel`
+//! aggregates per-model param/byte accounting from the same spec.
 
 pub mod adapted;
 pub mod cache;
 pub mod spec;
 
+#[cfg(test)]
+mod tests_determinism;
+
 pub use adapted::{
-    AdaptedModel, CoreInput, ModelAdapter, ModelHandles, ModelPlan,
-    SiteCore, SiteHandles, SitePlan,
+    synthetic_sites, AdaptedModel, CoreInput, ModelAdapter, ModelHandles,
+    ModelPlan, SiteHandles, SitePlan,
 };
 pub use cache::{CacheKey, CacheStats, ProjectionCache};
 pub use spec::{ModelSpec, SiteShape, SiteSpec};

@@ -1,0 +1,280 @@
+// lint: allow-file(panic) — `#[cfg(test)]`-only module (gated at the `mod` declaration, which per-file lexing cannot see): test asserts are the contract here.
+//! The §4.1 serving-determinism suite, migrated from the retired
+//! `serve::registry` shim (the registry *was* [`AdaptedModel`] behind a
+//! type alias; the model layer owns its contract tests directly now):
+//! evict → reload bit-identity, disk round-trips, cache-stats
+//! accounting, raced plan/install splits.
+
+use std::sync::Arc;
+
+use crate::adapters::cosa::{
+    adapter_forward, regen_l, regen_r, CosaAdapter,
+};
+use crate::math::matrix::Matrix;
+use crate::math::rng::Pcg64;
+use crate::model::{AdaptedModel, CoreInput, ModelSpec, SiteShape};
+use crate::train::checkpoint::Checkpoint;
+
+fn test_registry(budget: usize) -> AdaptedModel {
+    AdaptedModel::single_site(
+        "adp.0.wq",
+        SiteShape { m: 12, n: 10 },
+        4,
+        3,
+        budget,
+    )
+}
+
+fn add_adapter(reg: &mut AdaptedModel, name: &str, seed: u64) {
+    let mut rng = Pcg64::derive(seed, name);
+    let y = Matrix::gaussian(4, 3, 0.5, &mut rng);
+    reg.insert(
+        name,
+        seed,
+        2.0,
+        vec![CoreInput::new("adp.0.wq.l", "adp.0.wq.r", y)],
+    )
+    .unwrap();
+}
+
+#[test]
+fn forward_matches_direct_adapter_math() {
+    let mut reg = test_registry(1 << 20);
+    add_adapter(&mut reg, "a", 7);
+    let mut rng = Pcg64::new(1);
+    let x = Matrix::gaussian(3, 10, 1.0, &mut rng);
+    let got = reg.forward_one("a", &x).unwrap();
+    let l = regen_l(7, "adp.0.wq.l", 12, 4);
+    let r = regen_r(7, "adp.0.wq.r", 3, 10);
+    let h = reg.handles("a").unwrap();
+    let y = h.sites[0]
+        .adapter
+        .as_any()
+        .downcast_ref::<CosaAdapter>()
+        .unwrap()
+        .core_arc();
+    let want = adapter_forward(&x, &l, &r, &y, 2.0);
+    assert_eq!(got, want, "registry forward must be the canonical math");
+}
+
+#[test]
+fn unknown_adapter_is_an_error() {
+    let mut reg = test_registry(1 << 20);
+    let x = Matrix::zeros(1, 10);
+    assert!(reg.forward_one("nope", &x).is_err());
+    assert!(!reg.evict("nope"));
+}
+
+#[test]
+fn cache_hits_after_first_touch() {
+    let mut reg = test_registry(1 << 20);
+    add_adapter(&mut reg, "a", 7);
+    let x = Matrix::zeros(1, 10);
+    reg.forward_one("a", &x).unwrap();
+    let s1 = reg.cache_stats();
+    assert_eq!((s1.hits, s1.misses), (0, 2), "first touch: L and R miss");
+    reg.forward_one("a", &x).unwrap();
+    let s2 = reg.cache_stats();
+    assert_eq!((s2.hits, s2.misses), (2, 2), "second touch: both hit");
+}
+
+#[test]
+fn cache_is_never_touched_by_storage_free_methods() {
+    // LoRA declares no regenerable tensors: serving it must leave the
+    // shared projection cache completely untouched — no hits, no
+    // misses, no resident bytes.
+    use crate::adapters::Method;
+    let mut reg = test_registry(1 << 20);
+    reg.insert_synthetic_method("lo", 7, 2.0, Method::LoRA).unwrap();
+    let x = Matrix::zeros(1, 10);
+    reg.forward_one("lo", &x).unwrap();
+    reg.forward_one("lo", &x).unwrap();
+    let s = reg.cache_stats();
+    assert_eq!((s.hits, s.misses), (0, 0), "lora must bypass the cache");
+    assert_eq!(reg.cache_bytes(), 0);
+}
+
+#[test]
+fn lru_evicts_by_byte_budget_and_keeps_newest() {
+    // Budget fits exactly one adapter's projections: L 12x4 + R 3x10
+    // = 78 floats = 312 bytes.  Two adapters must thrash; the newest
+    // projections always stay resident.
+    let mut reg = test_registry(312);
+    add_adapter(&mut reg, "a", 7);
+    add_adapter(&mut reg, "b", 8);
+    let x = Matrix::zeros(1, 10);
+    reg.forward_one("a", &x).unwrap();
+    reg.forward_one("b", &x).unwrap();
+    let s = reg.cache_stats();
+    assert_eq!(s.misses, 4, "all four projections regenerate");
+    assert!(s.evictions >= 2, "budget forces evictions: {s:?}");
+    reg.forward_one("a", &x).unwrap();
+    let s = reg.cache_stats();
+    assert_eq!(s.misses, 6, "a's projections were evicted, regen again");
+}
+
+#[test]
+fn zero_budget_still_serves() {
+    let mut reg = test_registry(0);
+    add_adapter(&mut reg, "a", 7);
+    let mut rng = Pcg64::new(2);
+    let x = Matrix::gaussian(2, 10, 1.0, &mut rng);
+    let o1 = reg.forward_one("a", &x).unwrap();
+    let o2 = reg.forward_one("a", &x).unwrap();
+    assert_eq!(o1, o2, "regen-every-time must still be deterministic");
+}
+
+#[test]
+fn evict_reload_is_bit_identical() {
+    // The §4.1 determinism contract end-to-end: load -> forward,
+    // evict (adapter AND cached projections via a tiny budget),
+    // reload -> forward must agree bit-for-bit.
+    let mut reg = test_registry(312);
+    add_adapter(&mut reg, "a", 7);
+    let mut rng = Pcg64::new(3);
+    let x = Matrix::gaussian(5, 10, 1.0, &mut rng);
+    let before = reg.forward_one("a", &x).unwrap();
+    assert!(reg.evict("a"));
+    // churn the projection cache so "a" is fully cold again
+    add_adapter(&mut reg, "churn", 9);
+    reg.forward_one("churn", &x).unwrap();
+    add_adapter(&mut reg, "a", 7);
+    let after = reg.forward_one("a", &x).unwrap();
+    for (p, q) in before.data.iter().zip(&after.data) {
+        assert_eq!(p.to_bits(), q.to_bits(), "evict/reload drifted");
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_load_by_name_bit_identical() {
+    use std::collections::BTreeMap;
+    let dir = std::env::temp_dir().join("cosa_serve_registry_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Pcg64::new(4);
+    let y = Matrix::gaussian(4, 3, 0.5, &mut rng);
+    let mut tensors = BTreeMap::new();
+    tensors.insert("adp.0.wq.y".to_string(),
+                   (vec![4usize, 3], y.data.clone()));
+    let ck = Checkpoint {
+        version: 2,
+        method: "cosa".into(),
+        adapter_seed: 77,
+        artifact: "tiny-lm_cosa".into(),
+        step: 5,
+        sites: Vec::new(),
+        tensors,
+    };
+    ck.save(&dir.join("mathbot.cosa")).unwrap();
+
+    let mut reg = test_registry(1 << 20);
+    reg.load_from_dir(&dir, "mathbot", 2.0).unwrap();
+    let x = Matrix::gaussian(2, 10, 1.0, &mut rng);
+    let first = reg.forward_one("mathbot", &x).unwrap();
+
+    // evict + reload from disk: same bits
+    assert!(reg.evict("mathbot"));
+    reg.load_from_dir(&dir, "mathbot", 2.0).unwrap();
+    let second = reg.forward_one("mathbot", &x).unwrap();
+    for (p, q) in first.data.iter().zip(&second.data) {
+        assert_eq!(p.to_bits(), q.to_bits(), "disk reload drifted");
+    }
+
+    // and the in-memory insert with the same parts agrees too
+    let mut reg2 = test_registry(1 << 20);
+    reg2.insert(
+        "mathbot",
+        77,
+        2.0,
+        vec![CoreInput::new("adp.0.wq.l", "adp.0.wq.r", y)],
+    )
+    .unwrap();
+    let third = reg2.forward_one("mathbot", &x).unwrap();
+    assert_eq!(first, third, "checkpoint path vs direct insert");
+}
+
+#[test]
+fn multi_site_checkpoint_roundtrip_from_disk() {
+    // The site-aware flow end-to-end through the filesystem: one
+    // adapter name carries all per-site cores, load_from_dir
+    // reassembles the whole model-adapter bit-identically.
+    let dir = std::env::temp_dir().join("cosa_serve_registry_v2_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let spec = ModelSpec::synthetic(
+        3, SiteShape { m: 12, n: 10 }, 4, 3);
+    let mut reg = AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+    let mut rng = Pcg64::new(8);
+    let ys: Vec<Matrix> = spec
+        .sites
+        .iter()
+        .map(|s| Matrix::gaussian(s.a, s.b, 0.5, &mut rng))
+        .collect();
+    reg.insert_synthetic("fleet", 42, 2.0, ys).unwrap();
+    let ck = reg.checkpoint("fleet", "tiny-lm_cosa").unwrap();
+    ck.save(&dir.join("fleet.cosa")).unwrap();
+
+    let xs: Vec<Matrix> = spec
+        .sites
+        .iter()
+        .map(|s| Matrix::gaussian(2, s.shape.n, 1.0, &mut rng))
+        .collect();
+    let want = reg.forward("fleet", &xs).unwrap();
+
+    let mut fresh = AdaptedModel::new(spec, 1 << 20).unwrap();
+    fresh.load_from_dir(&dir, "fleet", 2.0).unwrap();
+    let got = fresh.forward("fleet", &xs).unwrap();
+    for (wm, gm) in want.iter().zip(&got) {
+        for (p, q) in wm.data.iter().zip(&gm.data) {
+            assert_eq!(p.to_bits(), q.to_bits(),
+                       "disk site-aware round-trip drifted");
+        }
+    }
+}
+
+#[test]
+fn plan_install_split_matches_inline_and_survives_races() {
+    let mut reg = test_registry(1 << 20);
+    add_adapter(&mut reg, "a", 7);
+    // Two cold plans (as two workers would take under the lock).
+    let p1 = reg.plan("a").unwrap();
+    let p2 = reg.plan("a").unwrap();
+    let s1 = &p1.sites[0];
+    assert!(s1.have.iter().all(|h| h.is_none()), "cold cache");
+    assert_eq!(s1.specs.len(), 2, "CoSA declares [L, R]");
+    // Both regenerate outside the lock (regen_missing materializes
+    // through the canonical generators the specs carry)...
+    let (r1, r2) = (p1.regen_missing(), p2.regen_missing());
+    // ...first install wins, second gets the already-resident Arcs.
+    let h1 = reg.install(&p1, r1);
+    let h2 = reg.install(&p2, r2);
+    assert!(Arc::ptr_eq(&h1.sites[0].regen[0], &h2.sites[0].regen[0]),
+            "raced install must dedupe");
+    assert!(Arc::ptr_eq(&h1.sites[0].regen[1], &h2.sites[0].regen[1]));
+    // the specs name the canonical generators' keys
+    assert_eq!(s1.specs[0].key(), (7, "adp.0.wq.l".to_string(), 12, 4));
+    assert_eq!(s1.specs[1].key(), (7, "adp.0.wq.r".to_string(), 3, 10));
+    // and a warm plan resolves without any regeneration step
+    let p3 = reg.plan("a").unwrap();
+    assert!(p3.sites[0].have.iter().all(|h| h.is_some()), "warm cache");
+    let no = p3.no_regen();
+    let h3 = reg.install(&p3, no);
+    assert!(Arc::ptr_eq(&h1.sites[0].regen[0], &h3.sites[0].regen[0]));
+    // inline handles() agrees with the split path
+    let h4 = reg.handles("a").unwrap();
+    assert!(Arc::ptr_eq(&h1.sites[0].regen[0], &h4.sites[0].regen[0])
+        && Arc::ptr_eq(&h1.sites[0].regen[1], &h4.sites[0].regen[1]));
+}
+
+#[test]
+fn load_checkpoint_requires_a_core() {
+    let ck = Checkpoint {
+        version: 2,
+        method: "lora".into(),
+        adapter_seed: 1,
+        artifact: "tiny-lm_lora".into(),
+        step: 0,
+        sites: Vec::new(),
+        tensors: std::collections::BTreeMap::new(),
+    };
+    let mut reg = test_registry(1 << 20);
+    assert!(reg.load_checkpoint("x", &ck, 2.0).is_err());
+}

@@ -22,6 +22,15 @@
 //!   lose to static partitioning (it amortizes residency across
 //!   heterogeneous sites; the paper's seed-regenerable projections are
 //!   what make the cache cheap to refill at all).
+//! * [`run_methods`] — the cross-method comparison table (the
+//!   `serving_methods` section): one mixed-method model (24 sites ×
+//!   N adapters *per method*: CoSA, RoSA, LoRA — the paper's baseline
+//!   set) serving per-method Zipf streams plus a mixed stream whose
+//!   fused batches interleave all three methods.  One row per method
+//!   and one `mixed` row, each with its own
+//!   sequential-vs-batched ratio (CI gates every row's
+//!   `batched_vs_sequential`) and the per-adapter
+//!   param/resident/regen-byte accounting the methods differ on.
 //! * [`run_tail`] — the tail-heavy fused-batching workload
 //!   (`serving_tail` section): 24 sites × 512 adapters at Zipf s=1.0,
 //!   where most adapters see a handful of requests.  The identical
@@ -41,12 +50,12 @@
 
 use std::time::{Duration, Instant};
 
-use crate::adapters::costmodel;
+use crate::adapters::{costmodel, Method};
 use crate::config::ServeConfig;
 use crate::math::matrix::Matrix;
 use crate::math::rng::Pcg64;
 use crate::model::{AdaptedModel, CacheStats, ModelSpec, SiteShape};
-use crate::serve::registry::CoreInput;
+use crate::model::CoreInput;
 use crate::serve::scheduler::{Server, Ticket};
 use crate::util::bench::black_box;
 use crate::util::json::{obj, Json};
@@ -920,6 +929,320 @@ pub fn run_tail(opts: &TailBenchOpts) -> anyhow::Result<TailBenchReport> {
     })
 }
 
+/// Cross-method comparison workload description (always firehose).
+/// One model holds `adapters_per_method` adapters of *each* servable
+/// method; the scenario measures every method under the same engine
+/// plus a mixed stream whose fused batches interleave methods.
+#[derive(Clone, Debug)]
+pub struct MethodsBenchOpts {
+    pub spec: ModelSpec,
+    /// Adapters inserted per servable method (CoSA, RoSA, LoRA).
+    pub adapters_per_method: usize,
+    /// Requests per measured stream (each per-method stream and the
+    /// mixed stream submit this many whole-model requests).
+    pub requests: usize,
+    pub zipf: f64,
+    pub seed: u64,
+    pub cfg: ServeConfig,
+}
+
+impl Default for MethodsBenchOpts {
+    fn default() -> Self {
+        // The acceptance scenario: the 24-site model-bench spec, a
+        // small fleet per method.  The cache holds CoSA's whole
+        // projection working set — the comparison isolates each
+        // method's compute path, not residency arbitration (that is
+        // `run_model`'s job).
+        MethodsBenchOpts {
+            spec: ModelSpec::synthetic(
+                24, SiteShape { m: 96, n: 96 }, 16, 12),
+            adapters_per_method: 8,
+            requests: 256,
+            zipf: 1.1,
+            seed: 13,
+            cfg: ServeConfig { cache_mb: 64.0, ..ServeConfig::default() },
+        }
+    }
+}
+
+/// One measured stream of the cross-method scenario (a
+/// `serving_methods` bench row): one servable method's Zipf stream,
+/// or the `mixed` stream spanning every adapter of every method.
+#[derive(Clone, Debug)]
+pub struct MethodBenchRow {
+    /// `"cosa"` / `"rosa"` / `"lora"` / `"mixed"`.
+    pub label: String,
+    pub adapters: usize,
+    pub requests: usize,
+    /// Whole-model trainable params of one adapter of this method
+    /// (summed over every adapter for the mixed row).
+    pub param_count: usize,
+    /// Bytes the method must keep resident per adapter (mixed: sum).
+    pub resident_bytes: usize,
+    /// Bytes the method re-derives from seeds per adapter (mixed: sum).
+    pub regen_bytes: usize,
+    pub seq_wall_s: f64,
+    pub batched_wall_s: f64,
+    pub seq_throughput_rps: f64,
+    pub throughput_rps: f64,
+    /// The per-row acceptance metric: batched / sequential throughput
+    /// on this stream.
+    pub batched_vs_sequential: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub mean_batch_rows: f64,
+}
+
+/// The full cross-method report: one row per servable method plus the
+/// mixed row, all served by one engine instance.
+#[derive(Clone, Debug)]
+pub struct MethodsBenchReport {
+    pub opts: MethodsBenchOpts,
+    pub workers: usize,
+    pub rows: Vec<MethodBenchRow>,
+    pub cache: CacheStats,
+}
+
+impl MethodsBenchReport {
+    /// One self-contained JSON object per row — the `serving_methods`
+    /// section is their array, mirroring the other serving sections.
+    pub fn to_json_rows(&self) -> Vec<Json> {
+        let o = &self.opts;
+        self.rows
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("method", Json::Str(r.label.clone())),
+                    ("sites", o.spec.len().into()),
+                    ("adapters", r.adapters.into()),
+                    ("requests", r.requests.into()),
+                    ("zipf", o.zipf.into()),
+                    ("max_batch", o.cfg.max_batch.into()),
+                    ("workers", self.workers.into()),
+                    ("cache_mb", o.cfg.cache_mb.into()),
+                    ("param_count", r.param_count.into()),
+                    ("resident_bytes", r.resident_bytes.into()),
+                    ("regen_bytes", r.regen_bytes.into()),
+                    ("seq_wall_s", r.seq_wall_s.into()),
+                    ("batched_wall_s", r.batched_wall_s.into()),
+                    ("seq_throughput_rps", r.seq_throughput_rps.into()),
+                    ("throughput_rps", r.throughput_rps.into()),
+                    (
+                        "batched_vs_sequential",
+                        r.batched_vs_sequential.into(),
+                    ),
+                    ("p50_ms", r.p50_ms.into()),
+                    ("p99_ms", r.p99_ms.into()),
+                    ("mean_batch_rows", r.mean_batch_rows.into()),
+                ])
+            })
+            .collect()
+    }
+
+    pub fn print(&self) {
+        let o = &self.opts;
+        println!(
+            "serve-methods[{} sites x {} adapters/method, zipf {:.2}, \
+             {} reqs/stream, batch<= {}, {} workers]",
+            o.spec.len(), o.adapters_per_method, o.zipf, o.requests,
+            o.cfg.max_batch, self.workers
+        );
+        for r in &self.rows {
+            println!(
+                "  {:<5} seq {:>9.0} req/s  batched {:>9.0} req/s  \
+                 => {:.2}x   p99 {:.3} ms   {} params \
+                 ({} resident B, {} regen B)",
+                r.label, r.seq_throughput_rps, r.throughput_rps,
+                r.batched_vs_sequential, r.p99_ms, r.param_count,
+                r.resident_bytes, r.regen_bytes
+            );
+        }
+        println!(
+            "  cache hits {} misses {} evictions {}",
+            self.cache.hits, self.cache.misses, self.cache.evictions
+        );
+    }
+}
+
+/// Submit one stream (indices into `names`) firehose-style and wait
+/// every ticket out.  Returns (wall seconds, sorted latencies ms).
+fn drive_stream(
+    server: &Server,
+    names: &[&str],
+    seq: &[usize],
+    xs_pool: &[Vec<Matrix>],
+) -> anyhow::Result<(f64, Vec<f64>)> {
+    let t0 = Instant::now();
+    let mut tickets: Vec<Ticket> = Vec::with_capacity(seq.len());
+    for (j, &idx) in seq.iter().enumerate() {
+        let xs: Vec<Vec<f32>> = xs_pool[j % X_POOL]
+            .iter()
+            .map(|m| m.data.clone())
+            .collect();
+        tickets.push(server.submit(names[idx], xs)?);
+    }
+    let mut lat_ms: Vec<f64> = Vec::with_capacity(seq.len());
+    for t in tickets {
+        let submitted = t.submitted;
+        let resp = t.wait()?;
+        black_box(resp.output()[0]);
+        lat_ms.push(
+            resp.done.duration_since(submitted).as_secs_f64() * 1e3,
+        );
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    lat_ms.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    Ok((wall_s, lat_ms))
+}
+
+/// Run the cross-method comparison (see module docs): per-method Zipf
+/// streams plus a mixed stream, sequential and batched, all against
+/// one mixed-method model.  `opts.cfg` is taken as final, exactly like
+/// [`run`].
+pub fn run_methods(
+    opts: &MethodsBenchOpts,
+) -> anyhow::Result<MethodsBenchReport> {
+    anyhow::ensure!(
+        opts.adapters_per_method > 0,
+        "need at least one adapter per method"
+    );
+    anyhow::ensure!(opts.requests > 0, "need at least one request");
+    opts.spec.validate()?;
+    let spec = &opts.spec;
+    let budget = opts.cfg.cache_budget_bytes();
+    let methods = [Method::CoSA, Method::RoSA, Method::LoRA];
+    let apm = opts.adapters_per_method;
+
+    // One model carries every method's fleet side by side — the point
+    // of the trait layer.  Synthetic adapters are deterministic in
+    // (seed, name), so the build reproduces bit-identically.
+    let mut model = AdaptedModel::new(spec.clone(), budget)?;
+    let mut names: Vec<String> = Vec::with_capacity(methods.len() * apm);
+    for (k, &method) in methods.iter().enumerate() {
+        for i in 0..apm {
+            let name = format!("{}{i:03}", method.name());
+            let aseed =
+                opts.seed.wrapping_add(1 + (k * apm + i) as u64);
+            model.insert_synthetic_method(&name, aseed, 2.0, method)?;
+            names.push(name);
+        }
+    }
+    // Per-adapter accounting, read off the first adapter of each
+    // method (every adapter of a method shares its shape here).
+    let accounting: Vec<(usize, usize, usize)> = (0..methods.len())
+        .map(|k| {
+            let a = model.get(&names[k * apm]).unwrap();
+            (a.param_count(), a.resident_bytes(), a.regen_bytes())
+        })
+        .collect();
+    let totals = (
+        accounting.iter().map(|a| a.0).sum::<usize>() * apm,
+        accounting.iter().map(|a| a.1).sum::<usize>() * apm,
+        accounting.iter().map(|a| a.2).sum::<usize>() * apm,
+    );
+
+    // Streams: one Zipf sequence per method (indices into that
+    // method's block of `names`) and one mixed sequence over the whole
+    // fleet, all from a stream distinct from the model build.
+    let mut rng = Pcg64::with_stream(opts.seed, 1);
+    let zipf_m = Zipf::new(apm, opts.zipf);
+    let per_seq: Vec<Vec<usize>> = (0..methods.len())
+        .map(|k| {
+            (0..opts.requests)
+                .map(|_| k * apm + zipf_m.sample(&mut rng))
+                .collect()
+        })
+        .collect();
+    let zipf_all = Zipf::new(methods.len() * apm, opts.zipf);
+    let mixed_seq: Vec<usize> = (0..opts.requests)
+        .map(|_| zipf_all.sample(&mut rng))
+        .collect();
+    let xs_pool: Vec<Vec<Matrix>> = (0..X_POOL)
+        .map(|_| {
+            spec.sites
+                .iter()
+                .map(|s| {
+                    Matrix::from_vec(1, s.shape.n,
+                                     rng.normal_vec(s.shape.n, 1.0))
+                })
+                .collect()
+        })
+        .collect();
+
+    // Warm every adapter once: all timed passes start from the same
+    // resident state (CoSA projections cached; RoSA/LoRA carry their
+    // tensors and never touch the cache).
+    for name in &names {
+        black_box(model.forward(name, &xs_pool[0])?);
+    }
+
+    // -- sequential passes: per-method streams, then mixed --
+    let streams: Vec<&[usize]> = per_seq
+        .iter()
+        .map(Vec::as_slice)
+        .chain(std::iter::once(mixed_seq.as_slice()))
+        .collect();
+    let mut seq_walls = Vec::with_capacity(streams.len());
+    for seq in &streams {
+        let t0 = Instant::now();
+        for (j, &idx) in seq.iter().enumerate() {
+            let outs =
+                model.forward(&names[idx], &xs_pool[j % X_POOL])?;
+            black_box(outs[0].data[0]);
+        }
+        seq_walls.push(t0.elapsed().as_secs_f64());
+    }
+
+    // -- batched passes: the same streams through one server --
+    model.reset_cache_stats();
+    let server = Server::new(model, &opts.cfg);
+    let workers = server.worker_count();
+    let model_arc = server.model();
+    let name_refs: Vec<&str> = names.iter().map(String::as_str).collect();
+    let mut rows = Vec::with_capacity(streams.len());
+    for (s_idx, seq) in streams.iter().enumerate() {
+        let (b0, r0) = server.batch_stats();
+        let (wall, lat) =
+            drive_stream(&server, &name_refs, seq, &xs_pool)?;
+        let (b1, r1) = server.batch_stats();
+        let reqs = seq.len() as f64;
+        let seq_tp = reqs / seq_walls[s_idx].max(1e-9);
+        let tp = reqs / wall.max(1e-9);
+        let (label, adapters, acct) = if s_idx < methods.len() {
+            (
+                methods[s_idx].name().to_string(),
+                apm,
+                accounting[s_idx],
+            )
+        } else {
+            ("mixed".to_string(), methods.len() * apm, totals)
+        };
+        rows.push(MethodBenchRow {
+            label,
+            adapters,
+            requests: seq.len(),
+            param_count: acct.0,
+            resident_bytes: acct.1,
+            regen_bytes: acct.2,
+            seq_wall_s: seq_walls[s_idx],
+            batched_wall_s: wall,
+            seq_throughput_rps: seq_tp,
+            throughput_rps: tp,
+            batched_vs_sequential: tp / seq_tp.max(1e-9),
+            p50_ms: percentile(&lat, 0.50),
+            p99_ms: percentile(&lat, 0.99),
+            mean_batch_rows: (r1 - r0) as f64
+                / ((b1 - b0) as f64).max(1.0),
+        });
+    }
+    drop(server);
+    let cache = {
+        let m = model_arc.lock().unwrap_or_else(|p| p.into_inner());
+        m.cache_stats()
+    };
+    Ok(MethodsBenchReport { opts: opts.clone(), workers, rows, cache })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1011,6 +1334,62 @@ mod tests {
         assert_eq!(j.get("adapters").unwrap().as_usize(), Some(6));
         assert_eq!(j.get("zipf").unwrap().as_f64(), Some(1.0));
         assert!(j.get("fused_vs_per_adapter").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn methods_smoke_scenario_covers_every_method_and_mixed() {
+        let opts = MethodsBenchOpts {
+            spec: ModelSpec::synthetic(
+                3, SiteShape { m: 16, n: 12 }, 4, 3),
+            adapters_per_method: 2,
+            requests: 24,
+            zipf: 1.1,
+            seed: 5,
+            cfg: ServeConfig {
+                cache_mb: 4.0,
+                max_batch: 4,
+                max_wait_us: 300,
+                workers: 2,
+                ..ServeConfig::default()
+            },
+        };
+        let rep = run_methods(&opts).unwrap();
+        let labels: Vec<&str> =
+            rep.rows.iter().map(|r| r.label.as_str()).collect();
+        assert_eq!(labels, ["cosa", "rosa", "lora", "mixed"]);
+        for r in &rep.rows {
+            assert!(r.throughput_rps > 0.0, "{}: dead batched", r.label);
+            assert!(r.seq_throughput_rps > 0.0, "{}: dead seq", r.label);
+            assert!(r.batched_vs_sequential > 0.0);
+            assert!(r.param_count > 0 && r.resident_bytes > 0);
+        }
+        let by = |l: &str| {
+            rep.rows.iter().find(|r| r.label == l).unwrap()
+        };
+        // The accounting the methods differ on: CoSA stores cores and
+        // regenerates projections; LoRA/RoSA store everything.
+        assert!(by("cosa").regen_bytes > 0, "cosa regenerates L/R");
+        assert_eq!(by("lora").regen_bytes, 0);
+        assert_eq!(by("rosa").regen_bytes, 0);
+        assert!(by("rosa").param_count > by("lora").param_count,
+                "rosa adds a sparse component on top of BA");
+        assert!(by("lora").param_count > by("cosa").param_count,
+                "cosa's core is smaller than full BA factors");
+        // mixed row aggregates the whole fleet
+        assert_eq!(by("mixed").adapters, 6);
+        assert_eq!(
+            by("mixed").param_count,
+            2 * (by("cosa").param_count + by("rosa").param_count
+                + by("lora").param_count)
+        );
+        let js = rep.to_json_rows();
+        assert_eq!(js.len(), 4);
+        assert_eq!(js[3].get("method").unwrap().as_str(), Some("mixed"));
+        assert!(js[0]
+            .get("batched_vs_sequential")
+            .unwrap()
+            .as_f64()
+            .is_some());
     }
 
     #[test]

@@ -10,13 +10,16 @@
 //! floats plus 8 bytes of seed.  This module turns that property into
 //! a serving engine over the [`model`](crate::model) layer:
 //!
-//! * [`registry`] — the serving registry is a
-//!   [`model::AdaptedModel`](crate::model::AdaptedModel): adapters are
-//!   per-site core sets loaded by name (checkpoint v2 carries all cores
-//!   of one adapter; hot load/evict), with regenerated `L`/`R`
-//!   projections cached in **one** shared byte-budgeted LRU keyed by
-//!   `(seed, tensor, dims)`.  Evicting and re-materializing an adapter
-//!   is bit-identical by construction.
+//! * the serving registry is the
+//!   [`model::AdaptedModel`](crate::model::AdaptedModel) layer
+//!   directly: adapters are per-site [`Adapter`](crate::adapters::
+//!   Adapter) trait-object sets loaded by name (site-aware checkpoints
+//!   carry all tensors of one adapter under per-site method tags; hot
+//!   load/evict), with seed-regenerable tensors cached in **one**
+//!   shared byte-budgeted LRU keyed by `(seed, tensor, dims)`.
+//!   Evicting and re-materializing an adapter is bit-identical by
+//!   construction, and one engine serves CoSA, RoSA, and LoRA
+//!   adapters side by side.
 //! * [`scheduler`] — the request scheduler: whole-model requests (one
 //!   activation row per site) enter class-tiered queues
 //!   ([`RequestClass`]: interactive / batch / background under
@@ -56,11 +59,9 @@
 
 pub mod bench;
 pub mod outpool;
-pub mod registry;
 pub mod scheduler;
 
 pub use crate::model::{AdaptedModel, ModelSpec, SiteShape, SiteSpec};
-pub use registry::AdapterRegistry;
 pub use scheduler::{
     CancelHandle, ClassStats, RequestClass, Response, SchedulerStats,
     Server, Ticket,

@@ -36,18 +36,22 @@
 //!   wait bound (`min(arrival + max_wait, deadline)`).
 //! * **Workers** (count resolved through the same `plan_threads` helper
 //!   the compute backends share) pull whole fused batches, segment them
-//!   by adapter in first-seen order, and resolve **all** adapters of
-//!   the batch through one [`AdaptedModel::plan_many`] under a brief
-//!   model lock — cache misses for every cold site of every segment are
-//!   described by that one call and regenerated outside the lock, then
-//!   installed under a second brief lock
-//!   ([`AdaptedModel::install_many`]) — so a cold or thrashing
+//!   by (adapter, method) in first-seen order — every adapter is
+//!   uniform-method, so adapter segmentation *is* method segmentation —
+//!   and resolve **all** adapters of the batch through one
+//!   [`AdaptedModel::plan_many`] under a brief model lock: cache misses
+//!   for every cold regenerable tensor of every segment are described
+//!   by that one call ([`ModelPlan::regen_missing`] materializes them
+//!   through each method's declared [`RegenSpec`](crate::adapters::
+//!   RegenSpec)s outside the lock), then installed under a second brief
+//!   lock ([`AdaptedModel::install_many`]) — so a cold or thrashing
 //!   projection cache never serializes the pool, and a K-adapter batch
 //!   costs two lock round-trips instead of 2·K.  The worker then
 //!   assembles one segment-stacked batch matrix per site in
 //!   worker-owned [`Workspace`] buffers and runs one **grouped
-//!   block-diagonal** `adapter_forward_grouped_into` per site — one
-//!   micro-kernel dispatch sweep over every adapter's row segment,
+//!   block-diagonal** [`forward_grouped_into`] sweep per site — maximal
+//!   same-method segment runs dispatch through each method's grouped
+//!   kernel (all-CoSA batches take the exact pre-trait grouped path),
 //!   bit-identical to composing per-adapter batches.  The matmul hot
 //!   path is allocation-free at steady state (the Workspace contract),
 //!   and the per-site batch *outputs* come from the shared
@@ -73,14 +77,12 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::adapters::cosa::{
-    adapter_forward_grouped_into, adapter_forward_into, regen_l, regen_r,
-};
+use crate::adapters::{forward_grouped_into, Adapter};
 use crate::config::ServeConfig;
 use crate::linalg::tiled::plan_threads;
 use crate::linalg::Workspace;
 use crate::math::matrix::Matrix;
-use crate::model::{AdaptedModel, ModelHandles};
+use crate::model::{AdaptedModel, ModelHandles, ModelPlan};
 
 use super::outpool::{OutputPool, PooledOut};
 
@@ -945,23 +947,11 @@ fn worker_loop(
         if seg_plans.is_empty() {
             continue;
         }
-        let regens: Vec<Vec<(Option<Matrix>, Option<Matrix>)>> = seg_plans
-            .iter()
-            .map(|plan| {
-                plan.sites
-                    .iter()
-                    .map(|sp| {
-                        let l = sp.l.is_none().then(|| {
-                            regen_l(sp.seed, &sp.l_name, sp.m, sp.a)
-                        });
-                        let r = sp.r.is_none().then(|| {
-                            regen_r(sp.seed, &sp.r_name, sp.b, sp.n)
-                        });
-                        (l, r)
-                    })
-                    .collect()
-            })
-            .collect();
+        // Each plan carries the RegenSpecs its adapter method declares
+        // (CoSA: [L, R] per site; fully-stored methods: none), so this
+        // regeneration step is method-agnostic by construction.
+        let regens: Vec<Vec<Vec<Option<Matrix>>>> =
+            seg_plans.iter().map(ModelPlan::regen_missing).collect();
         let handles = lock(model).install_many(&seg_plans, regens);
         if fused {
             run_fused(&handles, seg_groups, stats, pool, &mut ws);
@@ -993,8 +983,8 @@ fn run_fused(
     for s in 0..nsites {
         // every adapter shares the spec's site dims — read them off the
         // first segment's handles
-        let n = handles[0].sites[s].r.cols;
-        let m = handles[0].sites[s].l.rows;
+        let n = handles[0].sites[s].adapter.in_dim();
+        let m = handles[0].sites[s].adapter.out_dim();
         let mut x = ws.take_matrix(rows, n);
         let mut row = 0usize;
         for group in &groups {
@@ -1003,15 +993,23 @@ fn run_fused(
                 row += 1;
             }
         }
-        let ls: Vec<&Matrix> =
-            handles.iter().map(|h| h.sites[s].l.as_ref()).collect();
-        let rs: Vec<&Matrix> =
-            handles.iter().map(|h| h.sites[s].r.as_ref()).collect();
-        let ys: Vec<&Matrix> =
-            handles.iter().map(|h| h.sites[s].y.as_ref()).collect();
+        let adapters: Vec<&dyn Adapter> = handles
+            .iter()
+            .map(|h| h.sites[s].adapter.as_ref())
+            .collect();
+        let regens: Vec<&[Arc<Matrix>]> = handles
+            .iter()
+            .map(|h| h.sites[s].regen.as_slice())
+            .collect();
         let mut out = pool.take(rows, m);
-        adapter_forward_grouped_into(
-            &x, &ls, &rs, &ys, &alphas, &segs, ws, out.matrix_mut(),
+        forward_grouped_into(
+            &adapters,
+            &regens,
+            &alphas,
+            &x,
+            &segs,
+            ws,
+            out.matrix_mut(),
         );
         ws.recycle_matrix(x);
         outs.push(out);
@@ -1041,22 +1039,15 @@ fn run_segment(
     let rows = group.len();
     let mut outs = Vec::with_capacity(h.sites.len());
     for (s, sh) in h.sites.iter().enumerate() {
-        let n = sh.r.cols;
-        let m = sh.l.rows;
+        let n = sh.adapter.in_dim();
+        let m = sh.adapter.out_dim();
         let mut x = ws.take_matrix(rows, n);
         for (i, req) in group.iter().enumerate() {
             x.data[i * n..(i + 1) * n].copy_from_slice(&req.xs[s]);
         }
         let mut out = pool.take(rows, m);
-        adapter_forward_into(
-            &x,
-            &sh.l,
-            &sh.r,
-            &sh.y,
-            h.alpha,
-            ws,
-            out.matrix_mut(),
-        );
+        sh.adapter
+            .forward_into(&x, &sh.regen, h.alpha, ws, out.matrix_mut());
         ws.recycle_matrix(x);
         outs.push(out);
     }

@@ -14,13 +14,20 @@
 //!   which site.  Still loaded (as `version == 1`, `sites` empty); a
 //!   1-site [`model::AdaptedModel`](crate::model::AdaptedModel) accepts
 //!   such files unchanged.
-//! * **v2** (current writer): `version: 2` plus a `sites` array —
-//!   one `{name, m, n, a, b}` block per adapted site, where `name` is
-//!   the tensor stem (`<name>.y` must exist with shape `[a, b]`; the
+//! * **v2**: `version: 2` plus a `sites` array — one
+//!   `{name, m, n, a, b}` block per adapted site, where `name` is the
+//!   tensor stem (`<name>.y` must exist with shape `[a, b]`; the
 //!   projections regenerate from `<name>.l` / `<name>.r`).  One adapter
 //!   name thus saves/loads **all** of its per-site cores.  Loaders
 //!   reject corrupt site blocks (missing/mis-shaped core tensors,
 //!   duplicate names) instead of serving from them.
+//! * **v3** (current writer): each site block additionally carries a
+//!   `method` tag (`"cosa"` / `"lora"` / `"rosa"`), and the tensors a
+//!   block must describe depend on it — CoSA stores `<name>.y`
+//!   `[a, b]`, LoRA `<name>.lora_b` `[m, r]` + `<name>.lora_a`
+//!   `[r, n]`, RoSA those two plus `<name>.rosa_s` `[m, n]` (low-rank
+//!   blocks record `a = b = r`).  An absent `method` key reads as
+//!   `"cosa"`, which is exactly how v2 files load unchanged.
 
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
@@ -28,8 +35,10 @@ use std::path::Path;
 
 use crate::util::json::{obj, Json};
 
-/// One v2 site block: the adapted weight is `m × n`, the core `a × b`,
-/// and `name` is the tensor stem its tensors derive from.
+/// One site block (v2+): the adapted weight is `m × n`, the core
+/// `a × b` (low-rank methods record `a = b = r`), `name` is the tensor
+/// stem its tensors derive from, and `method` (v3; `"cosa"` when the
+/// key is absent) picks which tensors the stem must carry.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CkptSite {
     pub name: String,
@@ -37,6 +46,7 @@ pub struct CkptSite {
     pub n: usize,
     pub a: usize,
     pub b: usize,
+    pub method: String,
 }
 
 #[derive(Debug, Clone)]
@@ -49,7 +59,7 @@ pub struct Checkpoint {
     pub adapter_seed: u64,
     pub artifact: String,
     pub step: u64,
-    /// v2 site blocks; empty for v1 files (and for site-less saves).
+    /// Site blocks (v2+); empty for v1 files (and for site-less saves).
     pub sites: Vec<CkptSite>,
     /// name → (shape, values), insertion-ordered by name (BTreeMap).
     pub tensors: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
@@ -58,7 +68,7 @@ pub struct Checkpoint {
 const MAGIC: &[u8; 4] = b"COSA";
 
 /// The format `save` writes.  Readers accept 1..=FORMAT_VERSION.
-pub const FORMAT_VERSION: u32 = 2;
+pub const FORMAT_VERSION: u32 = 3;
 
 /// Element count of a shape.  The empty shape is a scalar (1 element,
 /// the numpy convention); any zero dimension means zero elements.
@@ -105,6 +115,7 @@ impl Checkpoint {
                         ("n", Json::from(s.n)),
                         ("a", Json::from(s.a)),
                         ("b", Json::from(s.b)),
+                        ("method", Json::Str(s.method.clone())),
                     ])
                 })
                 .collect();
@@ -113,14 +124,31 @@ impl Checkpoint {
         obj(fields).to_string()
     }
 
-    /// Every site block must describe a real core tensor: `<name>.y`
-    /// present with shape `[a, b]`, names unique, dims nonzero.  Run on
-    /// both save (never write a corrupt block) and load (never serve
-    /// from one).
+    /// Every site block must describe the real tensors its method
+    /// stores — names unique, dims nonzero, shapes agreeing with the
+    /// block.  Run on both save (never write a corrupt block) and load
+    /// (never serve from one).
     fn validate_sites(
         sites: &[CkptSite],
         tensors: &BTreeMap<String, (Vec<usize>, Vec<f32>)>,
     ) -> anyhow::Result<()> {
+        let want = |site: &str,
+                    tname: String,
+                    rows: usize,
+                    cols: usize|
+         -> anyhow::Result<()> {
+            let Some((shape, _)) = tensors.get(&tname) else {
+                anyhow::bail!(
+                    "site `{site}` declares `{tname}` but it is missing"
+                );
+            };
+            anyhow::ensure!(
+                shape.as_slice() == [rows, cols],
+                "site `{site}`: `{tname}` has shape {shape:?}, site block \
+                 says [{rows}, {cols}]"
+            );
+            Ok(())
+        };
         for (i, s) in sites.iter().enumerate() {
             anyhow::ensure!(
                 !s.name.is_empty(),
@@ -134,19 +162,32 @@ impl Checkpoint {
             if sites[..i].iter().any(|t| t.name == s.name) {
                 anyhow::bail!("duplicate site block `{}`", s.name);
             }
-            let tname = format!("{}.y", s.name);
-            let Some((shape, _)) = tensors.get(&tname) else {
-                anyhow::bail!(
-                    "site `{}` declares a core but `{tname}` is missing",
+            match s.method.as_str() {
+                "cosa" => {
+                    want(&s.name, format!("{}.y", s.name), s.a, s.b)?;
+                }
+                "lora" | "rosa" => {
+                    // low-rank blocks record a = b = r
+                    anyhow::ensure!(
+                        s.a == s.b,
+                        "site `{}`: {} blocks record a = b = rank, got \
+                         a {} b {}",
+                        s.name, s.method, s.a, s.b
+                    );
+                    let p = &s.method;
+                    want(&s.name, format!("{}.{p}_b", s.name), s.m, s.a)?;
+                    want(&s.name, format!("{}.{p}_a", s.name), s.b, s.n)?;
+                    if s.method == "rosa" {
+                        want(&s.name, format!("{}.rosa_s", s.name), s.m,
+                             s.n)?;
+                    }
+                }
+                other => anyhow::bail!(
+                    "site `{}`: unknown method tag `{other}` (this binary \
+                     knows cosa, lora, rosa)",
                     s.name
-                );
-            };
-            anyhow::ensure!(
-                shape.as_slice() == [s.a, s.b],
-                "site `{}`: core `{tname}` has shape {shape:?}, site block \
-                 says [{}, {}]",
-                s.name, s.a, s.b
-            );
+                ),
+            }
         }
         Ok(())
     }
@@ -245,6 +286,12 @@ impl Checkpoint {
                     n: s.req("n")?.as_usize().unwrap_or(0),
                     a: s.req("a")?.as_usize().unwrap_or(0),
                     b: s.req("b")?.as_usize().unwrap_or(0),
+                    // v2 blocks predate per-site methods: always CoSA
+                    method: s
+                        .get("method")
+                        .and_then(|m| m.as_str())
+                        .unwrap_or("cosa")
+                        .to_string(),
                 });
             }
         }
@@ -323,12 +370,26 @@ mod tests {
         }
     }
 
-    /// `sample()` with its two cores described by v2 site blocks.
+    /// `sample()` with its two cores described by site blocks.
     fn sample_v2() -> Checkpoint {
         let mut ck = sample();
         ck.sites = vec![
-            CkptSite { name: "adp.0.wq".into(), m: 16, n: 16, a: 4, b: 2 },
-            CkptSite { name: "adp.1.w1".into(), m: 8, n: 12, a: 2, b: 3 },
+            CkptSite {
+                name: "adp.0.wq".into(),
+                m: 16,
+                n: 16,
+                a: 4,
+                b: 2,
+                method: "cosa".into(),
+            },
+            CkptSite {
+                name: "adp.1.w1".into(),
+                m: 8,
+                n: 12,
+                a: 2,
+                b: 3,
+                method: "cosa".into(),
+            },
         ];
         ck
     }
@@ -360,7 +421,7 @@ mod tests {
         let ck = sample_v2();
         ck.save(&path).unwrap();
         let back = Checkpoint::load(&path).unwrap();
-        assert_eq!(back.version, 2);
+        assert_eq!(back.version, FORMAT_VERSION);
         assert_eq!(back.sites, ck.sites, "site blocks must round-trip");
         for (name, (shape, vals)) in &ck.tensors {
             assert_eq!(&back.tensors[name].0, shape);
@@ -401,6 +462,91 @@ mod tests {
     }
 
     #[test]
+    fn v2_file_without_method_tags_loads_as_cosa() {
+        // Hand-assemble a v2-era file: site blocks carry no `method`
+        // key.  It must load with every block tagged "cosa".
+        let dir = std::env::temp_dir().join("cosa_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("legacy_v2.cosa");
+        let header = concat!(
+            r#"{"adapter_seed":"9","artifact":"tiny-lm_cosa","#,
+            r#""method":"cosa","#,
+            r#""sites":[{"a":2,"b":2,"m":4,"n":4,"name":"adp.0.wq"}],"#,
+            r#""step":3,"#,
+            r#""tensors":[{"name":"adp.0.wq.y","shape":[2,2]}],"#,
+            r#""version":2}"#,
+        );
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"COSA");
+        bytes.extend_from_slice(&(header.len() as u32).to_le_bytes());
+        bytes.extend_from_slice(header.as_bytes());
+        for v in [1.0f32, -2.0, 3.0, -4.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(&path, &bytes).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.version, 2);
+        assert_eq!(back.sites.len(), 1);
+        assert_eq!(back.sites[0].method, "cosa",
+                   "absent method tag must read as cosa");
+        assert_eq!(back.tensors["adp.0.wq.y"].1, vec![1.0, -2.0, 3.0, -4.0]);
+    }
+
+    #[test]
+    fn v3_lora_and_rosa_site_blocks_roundtrip_and_validate() {
+        let dir = std::env::temp_dir().join("cosa_ckpt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("methods_v3.cosa");
+        let mut tensors = BTreeMap::new();
+        tensors.insert("s0.lora_b".to_string(),
+                       (vec![4, 2], vec![0.5f32; 8]));
+        tensors.insert("s0.lora_a".to_string(),
+                       (vec![2, 6], vec![0.25f32; 12]));
+        tensors.insert("s1.rosa_s".to_string(),
+                       (vec![4, 6], vec![0.0f32; 24]));
+        tensors.insert("s1.rosa_b".to_string(),
+                       (vec![4, 2], vec![1.0f32; 8]));
+        tensors.insert("s1.rosa_a".to_string(),
+                       (vec![2, 6], vec![-1.0f32; 12]));
+        let site = |name: &str, method: &str| CkptSite {
+            name: name.into(),
+            m: 4,
+            n: 6,
+            a: 2,
+            b: 2,
+            method: method.into(),
+        };
+        let ck = Checkpoint {
+            version: FORMAT_VERSION,
+            method: "lora".into(),
+            adapter_seed: 11,
+            artifact: "tiny-lm".into(),
+            step: 0,
+            sites: vec![site("s0", "lora"), site("s1", "rosa")],
+            tensors,
+        };
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.sites, ck.sites, "method tags must round-trip");
+
+        // lora blocks must record a == b == rank
+        let mut bad = ck.clone();
+        bad.sites[0].b = 3;
+        assert!(bad.save(&path).is_err(), "a != b must not save");
+
+        // a rosa block without its sparse residual is corrupt
+        let mut bad = ck.clone();
+        bad.tensors.remove("s1.rosa_s");
+        assert!(bad.save(&path).is_err(), "missing rosa_s must not save");
+
+        // a lora block whose factor disagrees with the header is corrupt
+        let mut bad = ck.clone();
+        bad.tensors.insert("s0.lora_a".to_string(),
+                           (vec![3, 6], vec![0.25f32; 18]));
+        assert!(bad.save(&path).is_err(), "mis-shaped factor must not save");
+    }
+
+    #[test]
     fn corrupt_site_blocks_are_rejected() {
         let dir = std::env::temp_dir().join("cosa_ckpt_test");
         std::fs::create_dir_all(&dir).unwrap();
@@ -409,9 +555,19 @@ mod tests {
         // save refuses: site block without its core tensor
         let mut ck = sample_v2();
         ck.sites.push(CkptSite {
-            name: "ghost".into(), m: 4, n: 4, a: 2, b: 2,
+            name: "ghost".into(),
+            m: 4,
+            n: 4,
+            a: 2,
+            b: 2,
+            method: "cosa".into(),
         });
         assert!(ck.save(&path).is_err(), "missing `ghost.y` must not save");
+
+        // save refuses: a method tag this binary doesn't know
+        let mut ck = sample_v2();
+        ck.sites[0].method = "qlora".into();
+        assert!(ck.save(&path).is_err(), "unknown method must not save");
 
         // save refuses: block dims disagreeing with the core tensor
         let mut ck = sample_v2();

@@ -206,7 +206,8 @@ impl Trainer {
     }
 
     /// Save the adapter checkpoint (trainables + adapter seed).  CoSA
-    /// artifacts get v2 site blocks: every trainable `<stem>.y` whose
+    /// artifacts get method-tagged site blocks: every trainable
+    /// `<stem>.y` whose
     /// frozen `<stem>.l` (m × a) and `<stem>.r` (b × n) companions are
     /// in the artifact is recorded as an adapted site, so one file
     /// carries the whole model's per-site cores and a multi-site
@@ -242,12 +243,16 @@ impl Trainer {
             if l.shape[1] != a || r.shape[0] != b {
                 continue;
             }
+            // The `.y` + frozen `.l`/`.r` pattern is CoSA's layout by
+            // construction, so the site block carries that tag
+            // regardless of the artifact's configured method string.
             sites.push(CkptSite {
                 name: stem.to_string(),
                 m: l.shape[0],
                 n: r.shape[1],
                 a,
                 b,
+                method: "cosa".to_string(),
             });
         }
         let ck = Checkpoint {

@@ -25,6 +25,7 @@ pub fn handle(state: &GatewayState, req: &Request) -> Response {
     match (req.method.as_str(), segs.as_slice()) {
         ("GET", ["healthz"]) => healthz(state),
         ("GET", ["v1", "stats"]) => stats(state),
+        ("GET", ["v1", "adapters"]) => list_adapters(state),
         ("POST", ["v1", "forward"]) => forward(state, req),
         ("POST", ["v1", "adapters", name, "load"]) => {
             load_adapter(state, name, req)
@@ -33,6 +34,7 @@ pub fn handle(state: &GatewayState, req: &Request) -> Response {
         (_, ["healthz"])
         | (_, ["v1", "stats"])
         | (_, ["v1", "forward"])
+        | (_, ["v1", "adapters"])
         | (_, ["v1", "adapters", _, "load"])
         | (_, ["v1", "adapters", _]) => Response::error(
             405,
@@ -57,11 +59,28 @@ fn healthz(state: &GatewayState) -> Response {
 
 fn stats(state: &GatewayState) -> Response {
     let sched = state.server().scheduler_stats();
-    let (cache, cache_bytes, adapters) = {
+    let (cache, cache_bytes, adapters, method_of) = {
         let model = state.model();
         let m = model.lock().unwrap_or_else(|p| p.into_inner());
-        (m.cache_stats(), m.cache_bytes(), m.len())
+        let method_of: std::collections::BTreeMap<String, &'static str> =
+            m.adapters()
+                .map(|a| (a.name.to_string(), a.method.name()))
+                .collect();
+        (m.cache_stats(), m.cache_bytes(), m.len(), method_of)
     };
+    // Per-method rollup: adapters currently loaded and requests
+    // submitted under each method (evicted adapters' request counts
+    // survive in per_adapter but no longer map to a method).
+    let mut methods: std::collections::BTreeMap<&str, (u64, u64)> =
+        std::collections::BTreeMap::new();
+    for name in method_of.values() {
+        methods.entry(name).or_insert((0, 0)).0 += 1;
+    }
+    for (name, count) in &sched.per_adapter {
+        if let Some(meth) = method_of.get(name) {
+            methods.entry(meth).or_insert((0, 0)).1 += count;
+        }
+    }
     let mut w = JsonWriter::new();
     w.begin_obj();
     w.key("adapters").u64_val(adapters as u64);
@@ -80,11 +99,24 @@ fn stats(state: &GatewayState) -> Response {
     w.end_obj();
     w.key("per_adapter").begin_obj();
     for (name, count) in &sched.per_adapter {
-        w.key(name).u64_val(*count);
+        w.key(name).begin_obj();
+        w.key("requests").u64_val(*count);
+        w.key("method").str_val(
+            method_of.get(name).copied().unwrap_or("unknown"),
+        );
+        w.end_obj();
     }
     w.end_obj();
     w.key("per_adapter_untracked")
         .u64_val(sched.per_adapter_untracked);
+    w.key("methods").begin_obj();
+    for (meth, (loaded, requests)) in &methods {
+        w.key(meth).begin_obj();
+        w.key("adapters").u64_val(*loaded);
+        w.key("requests").u64_val(*requests);
+        w.end_obj();
+    }
+    w.end_obj();
     w.key("classes").begin_obj();
     for c in &sched.per_class {
         w.key(&c.class).begin_obj();
@@ -103,6 +135,46 @@ fn stats(state: &GatewayState) -> Response {
             .u64_val(hs.bad_requests.load(Ordering::Relaxed));
         w.end_obj();
     }
+    w.end_obj();
+    Response::json(200, w.finish())
+}
+
+/// `GET /v1/adapters`: the loaded adapter zoo — per adapter its
+/// method kind, per-site dims (`[out, in, core_a, core_b]` in spec
+/// order), and the param/byte accounting the methods differ on.
+/// Sorted by name (the model's own iteration order).
+fn list_adapters(state: &GatewayState) -> Response {
+    let mut w = JsonWriter::new();
+    w.begin_obj();
+    let count = {
+        let model = state.model();
+        let m = model.lock().unwrap_or_else(|p| p.into_inner());
+        w.key("adapters").begin_arr();
+        for a in m.adapters() {
+            w.begin_obj();
+            w.key("name").str_val(&a.name);
+            w.key("method").str_val(a.method.name());
+            w.key("sites").u64_val(a.sites.len() as u64);
+            w.key("param_count").u64_val(a.param_count() as u64);
+            w.key("resident_bytes").u64_val(a.resident_bytes() as u64);
+            w.key("regen_bytes").u64_val(a.regen_bytes() as u64);
+            w.key("site_dims").begin_arr();
+            for s in &a.sites {
+                let (ca, cb) = s.core_dims();
+                w.begin_arr();
+                w.u64_val(s.out_dim() as u64);
+                w.u64_val(s.in_dim() as u64);
+                w.u64_val(ca as u64);
+                w.u64_val(cb as u64);
+                w.end_arr();
+            }
+            w.end_arr();
+            w.end_obj();
+        }
+        w.end_arr();
+        m.len()
+    };
+    w.key("count").u64_val(count as u64);
     w.end_obj();
     Response::json(200, w.finish())
 }
@@ -346,10 +418,14 @@ fn load_adapter(
     name: &str,
     req: &Request,
 ) -> Response {
-    // Optional body: {"dir": "...", "alpha": 2.0}.  The directory
-    // falls back to `[serve] preload_dir`.
+    // Optional body: {"dir": "...", "alpha": 2.0, "method": "cosa"}.
+    // The directory falls back to `[serve] preload_dir`; `method`
+    // asserts what the checkpoint contains (400 on mismatch, nothing
+    // loaded) — a client expecting a CoSA artifact never silently
+    // serves a LoRA one.
     let mut dir: Option<String> = None;
     let mut alpha: f32 = GatewayState::DEFAULT_ALPHA;
+    let mut want_method: Option<crate::adapters::Method> = None;
     if !req.body.is_empty() {
         let doc = match crate::wire::json::parse_value(
             &req.body,
@@ -381,12 +457,29 @@ fn load_adapter(
                         )
                     }
                 },
+                "method" => match v.as_str().map(|s| {
+                    crate::adapters::Method::from_str(s)
+                }) {
+                    Some(Ok(m)) => want_method = Some(m),
+                    Some(Err(e)) => {
+                        return Response::error(
+                            400,
+                            &format!("bad `method`: {e:#}"),
+                        )
+                    }
+                    None => {
+                        return Response::error(
+                            400,
+                            "`method` must be a string",
+                        )
+                    }
+                },
                 other => {
                     return Response::error(
                         400,
                         &format!(
                             "unknown field `{other}` (expected `dir`, \
-                             `alpha`)"
+                             `alpha`, `method`)"
                         ),
                     )
                 }
@@ -413,20 +506,41 @@ fn load_adapter(
         name,
     )
     .and_then(|ck| {
+        // The method assertion runs before the insert: a mismatched
+        // checkpoint must leave the model untouched.  Site blocks
+        // carry the authoritative per-site tag (v3); siteless v1
+        // files fall back to the header method.
+        let tag = ck
+            .sites
+            .first()
+            .map(|s| s.method.clone())
+            .unwrap_or_else(|| ck.method.clone());
+        let got = crate::adapters::Method::from_str(&tag)?;
+        if let Some(want) = want_method {
+            anyhow::ensure!(
+                want == got,
+                "checkpoint for `{name}` is method `{}`, request \
+                 asserted `{}`",
+                got.name(),
+                want.name()
+            );
+        }
         let model = state.model();
         let mut m = model.lock().unwrap_or_else(|p| p.into_inner());
-        m.load_checkpoint(name, &ck, alpha).map(|()| m.spec().len())
+        m.load_checkpoint(name, &ck, alpha)
+            .map(|()| (m.spec().len(), got.name()))
     });
     match loaded {
-        Ok(sites) => {
+        Ok((sites, method)) => {
             let ms = t0.elapsed().as_secs_f64() * 1e3;
             crate::info!(
-                "wire: loaded adapter `{name}` from {dir} \
+                "wire: loaded {method} adapter `{name}` from {dir} \
                  ({sites} sites) in {ms:.1} ms"
             );
             let mut w = JsonWriter::new();
             w.begin_obj();
             w.key("adapter").str_val(name);
+            w.key("method").str_val(method);
             w.key("sites").u64_val(sites as u64);
             w.key("load_ms").f64_val(ms);
             w.end_obj();

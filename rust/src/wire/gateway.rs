@@ -754,6 +754,33 @@ mod tests {
             "{}",
             String::from_utf8_lossy(&resp.body)
         );
+        let doc = parse_value(&resp.body, &Limits::default()).unwrap();
+        assert_eq!(doc.get("method").unwrap().as_str(), Some("cosa"));
+        // a wrong method assertion is refused; the right one reloads
+        let body_lora = format!(
+            r#"{{"dir":"{}","method":"lora"}}"#,
+            dir.display()
+        );
+        let resp = client
+            .request(
+                "POST",
+                "/v1/adapters/beta/load",
+                Some(body_lora.as_bytes()),
+            )
+            .unwrap();
+        assert_eq!(resp.status, 400, "method mismatch must refuse");
+        let body_cosa = format!(
+            r#"{{"dir":"{}","method":"cosa"}}"#,
+            dir.display()
+        );
+        let resp = client
+            .request(
+                "POST",
+                "/v1/adapters/beta/load",
+                Some(body_cosa.as_bytes()),
+            )
+            .unwrap();
+        assert_eq!(resp.status, 200, "matching method must load");
         let fwd = forward_body("beta", &[vec![0.1; 10], vec![0.2; 10]]);
         let resp = client
             .request("POST", "/v1/forward", Some(fwd.as_bytes()))
@@ -785,16 +812,43 @@ mod tests {
             doc.get("submitted").unwrap().as_usize().unwrap() >= 1
         );
         assert!(doc.get("cache").unwrap().get("hits").is_some());
+        let beta = doc.get("per_adapter").unwrap().get("beta").unwrap();
         assert_eq!(
-            doc.get("per_adapter").unwrap().get("beta").and_then(
-                Json::as_usize
-            ),
+            beta.get("requests").and_then(Json::as_usize),
             Some(1)
+        );
+        assert_eq!(beta.get("method").and_then(Json::as_str), Some("cosa"));
+        let cosa = doc.get("methods").unwrap().get("cosa").unwrap();
+        assert_eq!(cosa.get("adapters").and_then(Json::as_usize), Some(2));
+        assert!(
+            cosa.get("requests").unwrap().as_usize().unwrap() >= 1,
+            "beta's request must roll up under its method"
         );
         assert!(
             doc.get("http").unwrap().get("requests").unwrap().as_usize()
                 .unwrap() >= 5
         );
+
+        // the adapter-zoo listing: both adapters, per-site dims
+        let resp = client.request("GET", "/v1/adapters", None).unwrap();
+        assert_eq!(resp.status, 200);
+        let doc = parse_value(&resp.body, &Limits::default()).unwrap();
+        assert_eq!(doc.get("count").unwrap().as_usize(), Some(2));
+        let listed = doc.get("adapters").unwrap().as_arr().unwrap();
+        assert_eq!(listed.len(), 2);
+        let alpha = &listed[0]; // BTreeMap order: alpha before beta
+        assert_eq!(alpha.get("name").and_then(Json::as_str), Some("alpha"));
+        assert_eq!(
+            alpha.get("method").and_then(Json::as_str),
+            Some("cosa")
+        );
+        assert_eq!(alpha.get("sites").and_then(Json::as_usize), Some(2));
+        assert!(
+            alpha.get("param_count").unwrap().as_usize().unwrap() > 0
+        );
+        let dims = alpha.get("site_dims").unwrap().as_arr().unwrap();
+        assert_eq!(dims.len(), 2, "one dim quad per site");
+        assert_eq!(dims[0].as_arr().unwrap().len(), 4);
 
         // evict beta; it stops serving
         let resp = client

@@ -64,6 +64,19 @@ Checks:
    1.5x on the tail workload; both walls come from the same binary on
    the same box, so the ratio is runner-independent).
 
+8. **Cross-method gate** — the `serving_methods` section (written by
+   serve_bench scenario 6: a mixed-method model serving CoSA, RoSA,
+   and LoRA fleets side by side, one row per method plus a `mixed`
+   row) is checked against the baseline's `serving_methods` object.
+   Machine-independent and enforced by default: every acceptance row's
+   `batched_vs_sequential` >= `min_batched_vs_sequential` (default
+   1.2 — each method must still profit from the scheduler when the
+   zoo shares one engine), and the `mixed` row must be present (the
+   method-interleaved fused path is the acceptance criterion).
+   Optional per-method `throughput_rps_floors` apply when committed.
+   The CoSA-only `serving` / `serving_model` floors stay unchanged —
+   this section gates the zoo, not the original single-method path.
+
 A fresh report that exists but is malformed (unparseable JSON, or none
 of the expected sections with rows) is a hard failure — a silently
 empty report must read as "the gate is off", never as "pass".  A
@@ -85,6 +98,7 @@ SERVING_SECTION = "serving"
 MODEL_SECTION = "serving_model"
 WIRE_SECTION = "serving_wire"
 TAIL_SECTION = "serving_tail"
+METHODS_SECTION = "serving_methods"
 TOLERANCE = 0.20          # max allowed drop below the baseline gflops
 MIN_RATIO = 1.2           # fresh-run packed/tiled single-thread NN+NT floor
 MIN_SERVE_ADAPTERS = 64   # fleet size the serving ratio gate applies to
@@ -145,6 +159,15 @@ def tail_rows(doc):
         return []
     return [r for r in rows
             if isinstance(r, dict) and "throughput_rps" in r]
+
+
+def methods_rows(doc):
+    rows = doc.get(METHODS_SECTION, [])
+    if not isinstance(rows, list):
+        return []
+    return [r for r in rows
+            if isinstance(r, dict) and "throughput_rps" in r
+            and "method" in r]
 
 
 def find_fresh(candidates):
@@ -466,6 +489,70 @@ def check_serving_tail(rows, baseline_doc, baseline_path,
             print(f"  note: {msg}")
 
 
+def check_serving_methods(rows, baseline_doc, baseline_path,
+                          require_acceptance, failures):
+    base = {}
+    if baseline_doc is not None:
+        base = baseline_doc.get(METHODS_SECTION, {})
+    if not isinstance(base, dict):
+        failures.append(f"{baseline_path}: `{METHODS_SECTION}` must be an "
+                        "object of floors, not rows")
+        return
+    # The ratio gate is on even with no committed baseline object —
+    # each method profiting from batching is the acceptance criterion,
+    # not a tunable floor.
+    min_ratio = base.get("min_batched_vs_sequential", 1.2)
+    tp_floors = base.get("throughput_rps_floors", {})
+    if not isinstance(tp_floors, dict):
+        failures.append(f"{baseline_path}: `{METHODS_SECTION}."
+                        "throughput_rps_floors` must map method -> floor")
+        return
+    # Shape keys pinning the gate to the committed scenario.
+    want_shape = {k: base[k] for k in ("sites", "zipf") if k in base}
+
+    gated = []
+    for r in rows:
+        method = r.get("method")
+        tag = (f"serving_methods[{method}, {r.get('sites')} sites x "
+               f"{r.get('adapters')} adapters]")
+        shape_ok = all(r.get(k) == v for k, v in want_shape.items())
+        if not shape_ok:
+            print(f"  note: {tag}: not the acceptance workload; gate "
+                  "not applied")
+            continue
+        gated.append(method)
+        ratio = r.get("batched_vs_sequential", 0.0)
+        line = (f"{tag}: batched/sequential = {ratio:.2f}x "
+                f"(gate {min_ratio}x)")
+        if ratio < min_ratio:
+            failures.append(f"{line} — method `{method}` no longer "
+                            "profits from the shared engine's batching")
+        else:
+            print(f"  ok: {line}")
+        floor = tp_floors.get(method)
+        if floor is not None:
+            tp = r.get("throughput_rps", 0.0)
+            if tp < floor:
+                failures.append(f"{tag}: throughput {tp:.0f} req/s < "
+                                f"floor {floor:.0f}")
+            else:
+                print(f"  ok: {tag}: throughput {tp:.0f} req/s "
+                      f"(floor {floor:.0f})")
+    if gated and "mixed" not in gated:
+        failures.append(
+            "serving_methods: no `mixed` row at the acceptance shape — "
+            "the method-interleaved fused path (the reason the zoo "
+            "shares one engine) was not measured")
+    if not gated:
+        msg = (f"serving_methods gate matched 0 rows at the baseline "
+               f"shape {want_shape} — the cross-method acceptance "
+               "workload (serve_bench scenario 6) did not run")
+        if require_acceptance:
+            failures.append(msg)
+        else:
+            print(f"  note: {msg}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default="BENCH_baseline.json")
@@ -503,11 +590,14 @@ def main():
     model = model_rows(doc)
     wire = wire_rows(doc)
     tail = tail_rows(doc)
-    if not fresh and not serving and not model and not wire and not tail:
+    methods = methods_rows(doc)
+    if (not fresh and not serving and not model and not wire and not tail
+            and not methods):
         print(f"bench_regression: FAIL — {fresh_path} exists but has no "
               f"usable `{SECTION}`, `{SERVING_SECTION}`, "
-              f"`{MODEL_SECTION}`, `{WIRE_SECTION}` or `{TAIL_SECTION}` "
-              "rows; an empty report must not pass the gate")
+              f"`{MODEL_SECTION}`, `{WIRE_SECTION}`, `{TAIL_SECTION}` "
+              f"or `{METHODS_SECTION}` rows; an empty report must not "
+              "pass the gate")
         return 1
 
     if args.update:
@@ -593,6 +683,18 @@ def main():
     else:
         print(f"bench_regression: note — no `{TAIL_SECTION}` rows; "
               "fused-batching tail checks skipped (CI runs with "
+              "--require-serving)")
+    if methods:
+        evaluated.append(METHODS_SECTION)
+        check_serving_methods(methods, baseline_doc, args.baseline,
+                              args.require_serving, failures)
+    elif args.require_serving:
+        failures.append(f"{fresh_path}: `{METHODS_SECTION}` section is "
+                        "missing or empty — did serve_bench scenario 6 "
+                        "run?")
+    else:
+        print(f"bench_regression: note — no `{METHODS_SECTION}` rows; "
+              "cross-method checks skipped (CI runs with "
               "--require-serving)")
 
     if failures:

@@ -24,8 +24,13 @@ pub struct Config {
 
 /// Removing any of these from `[rules] families` is a config error
 /// (exit 2), so CI fails when a rule family is switched off.
-pub const REQUIRED_FAMILIES: [&str; 4] =
-    ["unsafe-audit", "panic-freedom", "lock-order", "hot-path-alloc"];
+pub const REQUIRED_FAMILIES: [&str; 5] = [
+    "unsafe-audit",
+    "panic-freedom",
+    "lock-order",
+    "hot-path-alloc",
+    "condvar-wait",
+];
 
 fn strip_line(raw: &str) -> &str {
     match raw.find('#') {
@@ -161,6 +166,7 @@ families = [
     "panic-freedom",
     "lock-order",
     "hot-path-alloc",
+    "condvar-wait",
 ]
 
 [[level]]

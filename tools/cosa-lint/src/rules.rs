@@ -1,4 +1,4 @@
-//! The four rule families, all lexical by design: cosa-lint never
+//! The five rule families, all lexical by design: cosa-lint never
 //! type-checks — it enforces *textual* invariants that survive
 //! refactors (a `// SAFETY:` comment travels with its `unsafe`, a
 //! lock receiver keeps its field name) and fails closed on the
@@ -200,7 +200,8 @@ fn fn_spans(toks: &[Tok]) -> Vec<FnSpan> {
 
 // ------------------------------------------------------- directives
 
-const KNOWN_RULES: [&str; 4] = ["panic", "alloc", "lock", "unsafe"];
+const KNOWN_RULES: [&str; 5] =
+    ["panic", "alloc", "lock", "unsafe", "condvar"];
 
 /// Strip comment sigils: `// `, `/* */`, `///`, `//!`, leading `*`s.
 fn strip_comment(text: &str) -> &str {
@@ -652,6 +653,13 @@ struct Guard {
 const GUARD_ADAPTERS: [&str; 4] =
     ["unwrap", "expect", "unwrap_or_else", "unwrap_or_default"];
 
+/// Condvar parking calls.  Each releases exactly ONE lock — the guard
+/// it is passed — for the duration of the sleep; any other guard the
+/// thread holds stays locked while it sleeps, starving contenders.
+/// Arg-less `.wait()` (tickets, child processes) is out of scope: the
+/// rule keys on a guard being handed to the condvar.
+const CONDVAR_WAITS: [&str; 3] = ["wait", "wait_timeout", "wait_while"];
+
 #[allow(clippy::too_many_arguments)]
 fn analyze_fn(
     toks: &[Tok],
@@ -800,6 +808,42 @@ fn analyze_fn(
                     adepth: depth,
                     line: t.line,
                 });
+            }
+            i += 1;
+            continue;
+        }
+        if !guards.is_empty() && CONDVAR_WAITS.contains(&tx) {
+            let p = prev_sig(toks, i);
+            let nx = next_sig(toks, i + 1);
+            if punct_at(toks, p, '.') && punct_at(toks, nx, '(') {
+                let open = nx.unwrap_or(i);
+                let close = match_fwd(toks, open, '(', ')');
+                // The guard handed to the condvar — the one lock the
+                // wait actually releases while the thread sleeps.
+                let waited: Option<&str> = toks[open + 1..close]
+                    .iter()
+                    .find(|a| a.kind == Kind::Ident && a.text != "mut")
+                    .map(|a| a.text.as_str());
+                if waited.is_some() {
+                    for g in &guards {
+                        let released = g.var.as_deref() == waited;
+                        if !released && !d.allowed("condvar", t.line) {
+                            findings.push(Finding {
+                                file: path.to_string(),
+                                line: t.line,
+                                rule: "condvar-wait",
+                                msg: format!(
+                                    "`.{tx}()` parks the thread while \
+                                     still holding the `{}` lock \
+                                     (`{}`, line {}) — a condvar wait \
+                                     releases only the guard it is \
+                                     passed",
+                                    g.lname, g.recv, g.line
+                                ),
+                            });
+                        }
+                    }
+                }
             }
             i += 1;
             continue;

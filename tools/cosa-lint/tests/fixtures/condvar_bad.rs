@@ -1,0 +1,42 @@
+//! Fixture: condvar waits that park the thread while a *different*
+//! guard stays held.  The condvar releases only the guard it is
+//! passed; every other live lock blocks its contenders for the whole
+//! sleep.  One violation per wait form, each with correctly-ordered
+//! acquisitions so only the condvar rule fires.
+
+use std::sync::{Condvar, Mutex};
+
+pub struct State {
+    pub queue: Mutex<(Vec<u32>, bool)>,
+    pub ingress: Mutex<Vec<u32>>,
+    pub model: Mutex<u32>,
+    pub bufs: Mutex<Vec<f32>>,
+    pub cv: Condvar,
+}
+
+pub fn wait_holding_model(s: &State) -> u32 {
+    let g = s.queue.lock().unwrap_or_else(|p| p.into_inner());
+    let m = s.model.lock().unwrap_or_else(|p| p.into_inner());
+    let g = s.cv.wait(g).unwrap_or_else(|p| p.into_inner());
+    g.0.len() as u32 + *m
+}
+
+pub fn timeout_holding_pool(s: &State) -> u32 {
+    let g = s.queue.lock().unwrap_or_else(|p| p.into_inner());
+    let b = s.bufs.lock().unwrap_or_else(|p| p.into_inner());
+    let (g, _timed_out) = s
+        .cv
+        .wait_timeout(g, std::time::Duration::from_millis(5))
+        .unwrap_or_else(|p| p.into_inner());
+    g.0.len() as u32 + b.len() as u32
+}
+
+pub fn wait_while_holding_peer(s: &State) -> u32 {
+    let a = s.ingress.lock().unwrap_or_else(|p| p.into_inner());
+    let g = s.queue.lock().unwrap_or_else(|p| p.into_inner());
+    let g = s
+        .cv
+        .wait_while(g, |q| q.0.is_empty())
+        .unwrap_or_else(|p| p.into_inner());
+    a.len() as u32 + g.0.len() as u32
+}

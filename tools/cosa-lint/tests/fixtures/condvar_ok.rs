@@ -1,0 +1,52 @@
+//! Fixture: condvar waits whose only live guard is the one handed to
+//! the condvar (the lock the wait actually releases), plus the two
+//! deliberate scope edges — drop-before-wait for an unrelated guard,
+//! and an arg-less `.wait()` that is not a condvar call at all.
+
+use std::sync::{Condvar, Mutex};
+
+pub struct State {
+    pub queue: Mutex<(Vec<u32>, bool)>,
+    pub model: Mutex<u32>,
+    pub cv: Condvar,
+}
+
+pub struct Ticket;
+
+impl Ticket {
+    pub fn wait(&self) -> u32 {
+        7
+    }
+}
+
+pub fn wait_sole_guard(s: &State) -> u32 {
+    let mut g = s.queue.lock().unwrap_or_else(|p| p.into_inner());
+    loop {
+        if let Some(v) = g.0.pop() {
+            return v;
+        }
+        if g.1 {
+            return 0;
+        }
+        g = s.cv.wait(g).unwrap_or_else(|p| p.into_inner());
+    }
+}
+
+pub fn drop_other_guard_before_wait(s: &State) -> u32 {
+    let m = s.model.lock().unwrap_or_else(|p| p.into_inner());
+    let seed = *m;
+    drop(m);
+    let g = s.queue.lock().unwrap_or_else(|p| p.into_inner());
+    let g = s
+        .cv
+        .wait_while(g, |q| q.0.is_empty())
+        .unwrap_or_else(|p| p.into_inner());
+    seed + g.0.len() as u32
+}
+
+pub fn argless_wait_is_not_a_condvar(s: &State, t: &Ticket) -> u32 {
+    // `Ticket::wait()` takes no guard — nothing for a condvar to
+    // release, so the condvar rule does not apply.
+    let m = s.model.lock().unwrap_or_else(|p| p.into_inner());
+    *m + t.wait()
+}

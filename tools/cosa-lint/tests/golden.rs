@@ -92,6 +92,29 @@ fn lock_bad_reports_inversion_and_hygiene() {
     );
 }
 
+// --------------------------------------------------- condvar-wait
+
+#[test]
+fn condvar_ok_is_clean() {
+    let fs = check("condvar_ok.rs", "rust/src/serve/condvar_ok.rs");
+    assert!(fs.is_empty(), "unexpected findings: {fs:?}");
+}
+
+#[test]
+fn condvar_bad_reports_each_wait_form_once() {
+    let fs = check("condvar_bad.rs", "rust/src/serve/condvar_bad.rs");
+    assert_eq!(count_rule(&fs, "condvar-wait"), 3, "findings: {fs:?}");
+    assert_eq!(fs.len(), 3, "only the condvar rule may fire: {fs:?}");
+    for (finding, lock) in fs.iter().zip(["model", "outpool",
+                                          "scheduler"]) {
+        assert!(
+            finding.msg.contains(&format!("`{lock}`")),
+            "expected the held `{lock}` lock in: {}",
+            finding.msg
+        );
+    }
+}
+
 // --------------------------------------------------- hot-path-alloc
 
 #[test]

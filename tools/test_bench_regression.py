@@ -90,6 +90,95 @@ class TailGate(unittest.TestCase):
         self.assertTrue(any("object of floors" in f for f in failures))
 
 
+def method_row(method, **over):
+    """A healthy serving_methods row at the acceptance shape."""
+    row = {
+        "method": method,
+        "sites": 24,
+        "adapters": 8,
+        "zipf": 1.1,
+        "throughput_rps": 900.0,
+        "seq_throughput_rps": 400.0,
+        "batched_vs_sequential": 2.2,
+        "p99_ms": 40.0,
+    }
+    row.update(over)
+    return row
+
+
+def methods_rows_all(**over):
+    return [method_row(m, **over)
+            for m in ("cosa", "rosa", "lora", "mixed")]
+
+
+METHODS_BASE = {
+    "serving_methods": {
+        "sites": 24,
+        "zipf": 1.1,
+        "min_batched_vs_sequential": 1.2,
+        "throughput_rps_floors": {
+            "cosa": 50.0, "rosa": 50.0, "lora": 50.0, "mixed": 50.0,
+        },
+    }
+}
+
+
+class MethodsGate(unittest.TestCase):
+    def check(self, rows, base=METHODS_BASE, require=True):
+        failures = []
+        br.check_serving_methods(rows, base, "BENCH_baseline.json",
+                                 require, failures)
+        return failures
+
+    def test_healthy_zoo_passes(self):
+        self.assertEqual(self.check(methods_rows_all()), [])
+
+    def test_one_method_below_ratio_gate_fails(self):
+        rows = methods_rows_all()
+        rows[1]["batched_vs_sequential"] = 1.05  # rosa regressed
+        failures = self.check(rows)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("rosa", failures[0])
+        self.assertIn("batching", failures[0])
+
+    def test_ratio_gate_defaults_to_1_2_without_baseline(self):
+        # The per-method batching-profit gate is the acceptance
+        # criterion — it must hold even with no committed floors.
+        rows = methods_rows_all()
+        rows[3]["batched_vs_sequential"] = 1.1  # mixed regressed
+        failures = self.check(rows, base=None)
+        self.assertTrue(any("mixed" in f for f in failures))
+        self.assertEqual(self.check(methods_rows_all(), base=None), [])
+
+    def test_per_method_throughput_floor(self):
+        rows = methods_rows_all()
+        rows[2]["throughput_rps"] = 10.0  # lora below its 50 req/s floor
+        failures = self.check(rows)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("lora", failures[0])
+        self.assertIn("floor", failures[0])
+
+    def test_missing_mixed_row_fails(self):
+        # The method-interleaved stream is the reason the zoo shares
+        # one engine; dropping it must not read as a pass.
+        rows = [method_row(m) for m in ("cosa", "rosa", "lora")]
+        failures = self.check(rows)
+        self.assertTrue(any("`mixed`" in f for f in failures))
+
+    def test_off_shape_rows_are_not_gated(self):
+        rows = methods_rows_all(sites=3, batched_vs_sequential=0.5)
+        self.assertEqual(self.check(rows, require=False), [])
+        failures = self.check(rows, require=True)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("matched 0 rows", failures[0])
+
+    def test_malformed_baseline_section_fails(self):
+        failures = self.check(
+            methods_rows_all(),
+            base={"serving_methods": methods_rows_all()})
+        self.assertTrue(any("object of floors" in f for f in failures))
+
+
 def kernel_row(kernel, backend, gflops, m=256, k=3072, n=64):
     return {"kernel": kernel, "backend": backend, "threads": 1,
             "m": m, "k": k, "n": n, "mean_ns": 1.0, "min_ns": 1.0,
@@ -152,6 +241,22 @@ class EndToEnd(unittest.TestCase):
         doc["serving"] = []
         rc = self.run_main(doc, TAIL_BASE, [])
         self.assertEqual(rc, 1, "an effectively empty report must fail")
+
+    def test_methods_only_report_passes_and_is_named(self):
+        import contextlib
+        import io
+        buf = io.StringIO()
+        doc = {"serving_methods": methods_rows_all()}
+        with contextlib.redirect_stdout(buf):
+            rc = self.run_main(doc, METHODS_BASE, [])
+        self.assertEqual(rc, 0)
+        self.assertIn("gates evaluated: serving_methods", buf.getvalue())
+
+    def test_degraded_method_row_fails_end_to_end(self):
+        doc = {"serving_methods": methods_rows_all(
+            batched_vs_sequential=1.0)}
+        rc = self.run_main(doc, METHODS_BASE, [])
+        self.assertEqual(rc, 1)
 
     def test_degraded_tail_row_fails(self):
         doc = {"serving_tail": [tail_row(fused_vs_per_adapter=0.9)]}

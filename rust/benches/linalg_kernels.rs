@@ -5,8 +5,11 @@
 //! times each GEMM kernel (NN / NT / TN) in isolation, per backend, at
 //! paper shapes, single-threaded (the acceptance metric: packed ≥ 1.5×
 //! tiled on NN/NT/TN) and with auto threads.  A deep-k TN section
-//! covers the packed A-operand path at the gradient shape, and a
-//! sparse-left section covers the threaded nonzero-row-index kernel.  Everything lands in the
+//! covers the packed A-operand path at the gradient shape, a
+//! wide-short NT section covers the packed backend's per-block column
+//! parallelism (rows too few to split — columns carry the threads),
+//! and a sparse-left section covers the threaded nonzero-row-index
+//! kernel.  Everything lands in the
 //! `linalg_kernels` section of `BENCH_linalg.json`, which
 //! `tools/bench_regression.py` compares against the committed
 //! `BENCH_baseline.json`.
@@ -150,6 +153,38 @@ fn main() {
         );
         r.report_gflops(flops);
         push_row(&mut rows_json, "tn", bk.name, 1, m, k, n,
+                 r.mean_ns, r.min_ns, r.gflops(flops));
+    }
+
+    // Wide-short NT: the serving decode shape (a handful of activation
+    // rows against a wide weight panel, n >> m) where row-based
+    // parallelism has nothing to split — the packed backend's
+    // per-block column parallelism is what keeps every thread busy.
+    // These rows feed the relative packed-vs-tiled wide-short gate in
+    // tools/bench_regression.py (serial AND threaded: the threaded
+    // ratio is the one the column split actually moves).
+    println!("\n== wide-short nt (per-block column parallelism) ==");
+    let (m, k, n) = (4usize, 512usize, 3072usize);
+    let a_wide = Matrix::gaussian(m, k, 1.0, &mut rng);
+    let bt_wide = Matrix::gaussian(n, k, 1.0, &mut rng);
+    let flops = 2.0 * (m * k * n) as f64;
+    for bk in backends() {
+        // tiled/packed only, serial and auto-threaded
+        if bk.name == "reference" {
+            continue;
+        }
+        let be = (bk.make)(bk.threads);
+        let mut out = Matrix::zeros(m, n);
+        let r = bench(
+            &format!("nt[{}/t{}] {m}x{k}x{n}", bk.name, bk.threads),
+            300,
+            || {
+                be.gemm_nt_into(&a_wide, &bt_wide, &mut out);
+                black_box(out.data[0]);
+            },
+        );
+        r.report_gflops(flops);
+        push_row(&mut rows_json, "nt", bk.name, bk.threads, m, k, n,
                  r.mean_ns, r.min_ns, r.gflops(flops));
     }
 

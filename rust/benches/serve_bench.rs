@@ -1,8 +1,9 @@
 //! Bench: multi-adapter serving throughput and latency — the CI-gated
-//! `serving`, `serving_model`, `serving_wire`, `serving_tail`, and
-//! `serving_methods` sections of `BENCH_linalg.json`.
+//! `serving`, `serving_model`, `serving_wire`, `serving_tail`,
+//! `serving_methods`, and `serving_quant` sections of
+//! `BENCH_linalg.json`.
 //!
-//! Six scenarios:
+//! Seven scenarios:
 //!
 //! 1. **acceptance** — 64 adapters, one site, Zipf 1.1 popularity,
 //!    firehose injection.  The `batched_vs_sequential` field is the
@@ -35,6 +36,14 @@
 //!    stream whose fused batches interleave methods.  Gated field per
 //!    row: `batched_vs_sequential >= 1.2` (machine-independent), plus
 //!    conservative CoSA floors carried over unchanged.
+//! 7. **quant acceptance** — the scenario-3 fleet (24 sites × 64
+//!    adapters, Zipf 1.1) served at a deliberately thrashing LRU
+//!    budget three times: f32, bf16, and int8 cache codecs.  Gated
+//!    fields, all machine-independent: bf16 `capacity_vs_f32 >= 1.8`
+//!    (quantized residents must nearly double effective cache
+//!    capacity at the identical byte budget) and per-codec
+//!    `rmse_vs_f32` bounds (bf16 <= 0.03, int8 <= 0.08) — the output
+//!    error each codec pays relative to bit-exact f32 serving.
 //!
 //! Knobs come from the default `[serve]` / `[model]` / `[wire]`
 //! tables; `COSA_SERVE_*` / `COSA_MODEL_*` / `COSA_WIRE_*` env
@@ -43,8 +52,8 @@
 
 use cosa::config::{ModelConfig, WireConfig};
 use cosa::serve::bench::{
-    run, run_methods, run_model, run_tail, MethodsBenchOpts,
-    ModelBenchOpts, ServeBenchOpts, TailBenchOpts,
+    run, run_methods, run_model, run_quant, run_tail, MethodsBenchOpts,
+    ModelBenchOpts, QuantBenchOpts, ServeBenchOpts, TailBenchOpts,
 };
 use cosa::util::bench::write_bench_json;
 use cosa::util::json::Json;
@@ -183,4 +192,29 @@ fn main() {
         Err(e) => eprintln!("serve_bench methods scenario failed: {e:#}"),
     }
     write_bench_json("serving_methods", Json::Arr(method_rows));
+
+    // Scenario 7: the quantized-cache acceptance workload — the
+    // scenario-3 fleet driven three times at one thrashing LRU budget,
+    // once per cache codec.  The fleet shape and cache budget ARE the
+    // scenario (QuantBenchOpts defaults); only the worker override
+    // carries over so a pinned runner can fix parallelism.  The gated
+    // fields (capacity_vs_f32, rmse_vs_f32) are exact counts and
+    // deterministic arithmetic — machine-independent by construction.
+    let qdefaults = QuantBenchOpts::default();
+    let qopts = QuantBenchOpts {
+        cfg: cosa::config::ServeConfig {
+            workers: acceptance.cfg.workers,
+            ..qdefaults.cfg.clone()
+        },
+        ..qdefaults
+    };
+    let mut quant_rows: Vec<Json> = Vec::new();
+    match run_quant(&qopts) {
+        Ok(report) => {
+            report.print();
+            quant_rows.extend(report.to_json_rows());
+        }
+        Err(e) => eprintln!("serve_bench quant scenario failed: {e:#}"),
+    }
+    write_bench_json("serving_quant", Json::Arr(quant_rows));
 }

@@ -13,7 +13,7 @@ use std::sync::Arc;
 
 use crate::adapters::traits::{Adapter, RegenSpec};
 use crate::adapters::Method;
-use crate::linalg::{self, Workspace};
+use crate::linalg::{self, QuantMat, Workspace};
 use crate::math::matrix::Matrix;
 use crate::math::rng::Pcg64;
 
@@ -71,6 +71,30 @@ pub fn adapter_forward_into(x: &Matrix, l: &Matrix, r: &Matrix, y: &Matrix,
     ws.recycle_matrix(u);
 }
 
+/// [`adapter_forward_into`] with cache-resident projections in
+/// whatever storage kind the model layer installed them under
+/// ([`QuantMat`]).  F32 payloads take the unquantized path unchanged —
+/// the default `cache_quant = "f32"` policy is bit-identical to the
+/// pre-quant engine by construction.  Encoded payloads run the
+/// pack-fused quantized NT products ([`linalg::gemm_nt_quant_into`]),
+/// so no full-size f32 dequant buffer ever materializes.
+pub fn adapter_forward_quant_into(x: &Matrix, l: &QuantMat, r: &QuantMat,
+                                  y: &Matrix, alpha: f32,
+                                  ws: &mut Workspace, out: &mut Matrix) {
+    if let (Some(lf), Some(rf)) = (l.as_f32(), r.as_f32()) {
+        adapter_forward_into(x, lf, rf, y, alpha, ws, out);
+        return;
+    }
+    let mut u = ws.take_matrix(x.rows, r.rows());
+    linalg::gemm_nt_quant_into(x, r, &mut u);
+    let mut v = ws.take_matrix(x.rows, y.rows);
+    linalg::gemm_nt_into(&u, y, &mut v);
+    linalg::gemm_nt_quant_into(&v, l, out);
+    out.scale(alpha);
+    ws.recycle_matrix(v);
+    ws.recycle_matrix(u);
+}
+
 /// Grouped multi-adapter forward: consecutive row segments of `x`
 /// (`segs[g]` rows each) run against their own `(ls[g], rs[g], ys[g],
 /// alphas[g])` operand set in three grouped block-diagonal NT sweeps
@@ -107,6 +131,65 @@ pub fn adapter_forward_grouped_into(
     linalg::gemm_grouped_nt_into(&v, ls, segs, out);
     // per-segment α, applied exactly like `Matrix::scale` does in the
     // per-adapter path (unconditional multiply ⇒ identical bits)
+    let m = out.cols;
+    let mut row = 0usize;
+    for (g, &rows) in segs.iter().enumerate() {
+        for o in out.data[row * m..(row + rows) * m].iter_mut() {
+            *o *= alphas[g];
+        }
+        row += rows;
+    }
+    ws.recycle_matrix(v);
+    ws.recycle_matrix(u);
+}
+
+/// [`adapter_forward_grouped_into`] with quantized cache-resident
+/// projections.  All-F32 groups take the existing fused f32 sweep bit
+/// for bit; otherwise the two projection products run the grouped
+/// quantized sweeps ([`linalg::gemm_grouped_nt_quant_into`]) — still
+/// bit-identical to calling [`adapter_forward_quant_into`] once per
+/// segment, because each grouped sweep is bit-identical to its
+/// per-segment composition and the α ordering is unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn adapter_forward_grouped_quant_into(
+    x: &Matrix,
+    ls: &[&QuantMat],
+    rs: &[&QuantMat],
+    ys: &[&Matrix],
+    alphas: &[f32],
+    segs: &[usize],
+    ws: &mut Workspace,
+    out: &mut Matrix,
+) {
+    assert!(
+        ls.len() == segs.len()
+            && rs.len() == segs.len()
+            && ys.len() == segs.len()
+            && alphas.len() == segs.len(),
+        "adapter_forward_grouped_quant_into: operand/segment count \
+         mismatch"
+    );
+    if ls.iter().chain(rs.iter()).all(|q| q.as_f32().is_some()) {
+        let lf: Vec<&Matrix> = ls
+            .iter()
+            .map(|q| q.as_f32().expect("checked f32").as_ref())
+            .collect();
+        let rf: Vec<&Matrix> = rs
+            .iter()
+            .map(|q| q.as_f32().expect("checked f32").as_ref())
+            .collect();
+        adapter_forward_grouped_into(x, &lf, &rf, ys, alphas, segs, ws,
+                                     out);
+        return;
+    }
+    let b = rs.first().map_or(0, |r| r.rows());
+    let a = ys.first().map_or(0, |y| y.rows);
+    let mut u = ws.take_matrix(x.rows, b);
+    linalg::gemm_grouped_nt_quant_into(x, rs, segs, &mut u);
+    let mut v = ws.take_matrix(x.rows, a);
+    linalg::gemm_grouped_nt_into(&u, ys, segs, &mut v);
+    linalg::gemm_grouped_nt_quant_into(&v, ls, segs, out);
+    // per-segment α, applied exactly like the per-adapter path does
     let m = out.cols;
     let mut row = 0usize;
     for (g, &rows) in segs.iter().enumerate() {
@@ -286,24 +369,41 @@ impl Adapter for CosaAdapter {
     fn forward_into(
         &self,
         x: &Matrix,
-        regen: &[Arc<Matrix>],
+        regen: &[Arc<QuantMat>],
         alpha: f32,
         ws: &mut Workspace,
         out: &mut Matrix,
     ) {
-        adapter_forward_into(x, &regen[0], &regen[1], &self.y, alpha, ws,
-                             out);
+        adapter_forward_quant_into(x, &regen[0], &regen[1], &self.y,
+                                   alpha, ws, out);
     }
 
     fn vjp(
         &self,
         x: &Matrix,
-        regen: &[Arc<Matrix>],
+        regen: &[Arc<QuantMat>],
         g: &Matrix,
         alpha: f32,
     ) -> (Vec<Matrix>, Matrix) {
-        let (dy, dx) =
-            adapter_vjp(x, &regen[0], &regen[1], &self.y, g, alpha);
+        // training-only path: dequantize once (serving never comes
+        // through here, and f32 payloads borrow without a copy)
+        let l_owned;
+        let l: &Matrix = match regen[0].as_f32() {
+            Some(m) => m,
+            None => {
+                l_owned = regen[0].to_matrix();
+                &l_owned
+            }
+        };
+        let r_owned;
+        let r: &Matrix = match regen[1].as_f32() {
+            Some(m) => m,
+            None => {
+                r_owned = regen[1].to_matrix();
+                &r_owned
+            }
+        };
+        let (dy, dx) = adapter_vjp(x, l, r, &self.y, g, alpha);
         (vec![dy], dx)
     }
 
@@ -542,7 +642,12 @@ mod tests {
 
         let x = Matrix::gaussian(rows, nn, 1.0, &mut rng);
         let want = adapter_forward(&x, &l, &r, &y, 2.0);
-        let regen = vec![Arc::new(l.clone()), Arc::new(r.clone())];
+        let regen = vec![
+            Arc::new(QuantMat::encode_owned(l.clone(),
+                                            crate::linalg::QuantKind::F32)),
+            Arc::new(QuantMat::encode_owned(r.clone(),
+                                            crate::linalg::QuantKind::F32)),
+        ];
         let got = ad.forward(&x, &regen, 2.0);
         for (p, q) in want.data.iter().zip(&got.data) {
             assert_eq!(p.to_bits(), q.to_bits(), "trait forward drifted");
@@ -559,5 +664,62 @@ mod tests {
         assert_eq!(ad.resident_bytes(), a * b * 4 + 8);
         assert_eq!(ad.regen_bytes(), (m * a + b * nn) * 4);
         assert_eq!(ad.core_dims(), (a, b));
+    }
+
+    #[test]
+    fn quant_forward_is_bit_identical_to_quant_gemm_composition() {
+        // Forward-level acceptance for the quantized route: the trait
+        // forward with encoded regens must equal the hand-composed
+        // quantized GEMM sequence (regen → quantize → pack-fused
+        // product) bit for bit — same entries, same α ordering.  The
+        // GEMM-level test in linalg pins each quantized product against
+        // its dequantize-reference composition, so transitively the
+        // forward matches the regen-then-quantize-then-dequantize
+        // reference too.
+        use crate::linalg::QuantKind;
+        let mut rng = Pcg64::new(33);
+        let (m, nn, a, b, rows) = (18usize, 22usize, 5usize, 4usize, 6);
+        let y = Matrix::gaussian(a, b, 0.5, &mut rng);
+        let ad = CosaAdapter::new(
+            9,
+            "q.0.wq.l".into(),
+            "q.0.wq.r".into(),
+            m,
+            nn,
+            Arc::new(y.clone()),
+        );
+        let specs = ad.regen_specs();
+        let l = specs[0].materialize();
+        let r = specs[1].materialize();
+        let x = Matrix::gaussian(rows, nn, 1.0, &mut rng);
+        let f32_out = adapter_forward(&x, &l, &r, &y, 1.5);
+        for (kind, tol) in
+            [(QuantKind::Bf16, 0.05f64), (QuantKind::Int8, 0.15f64)]
+        {
+            let ql = Arc::new(QuantMat::encode(&l, kind));
+            let qr = Arc::new(QuantMat::encode(&r, kind));
+            let got =
+                ad.forward(&x, &[ql.clone(), qr.clone()], 1.5);
+            // hand-composed reference over the same quant GEMM entries
+            let mut u = Matrix::zeros(rows, b);
+            linalg::gemm_nt_quant_into(&x, &qr, &mut u);
+            let mut v = Matrix::zeros(rows, a);
+            linalg::gemm_nt_into(&u, &y, &mut v);
+            let mut want = Matrix::zeros(rows, m);
+            linalg::gemm_nt_quant_into(&v, &ql, &mut want);
+            want.scale(1.5);
+            for (i, (p, q)) in
+                want.data.iter().zip(&got.data).enumerate()
+            {
+                assert_eq!(p.to_bits(), q.to_bits(),
+                           "{} elem {i}: {p} vs {q}", kind.name());
+            }
+            // accuracy vs the unquantized forward stays inside the
+            // codec budget (the scenario-7 gate property, in-unit)
+            let num = (got.sub(&f32_out)).frobenius() as f64;
+            let den = (f32_out.frobenius() as f64).max(1e-12);
+            assert!(num / den < tol, "{}: rel err {}", kind.name(),
+                    num / den);
+        }
     }
 }

@@ -17,7 +17,7 @@ use std::sync::Arc;
 
 use crate::adapters::traits::{Adapter, RegenSpec};
 use crate::adapters::Method;
-use crate::linalg::{self, Workspace};
+use crate::linalg::{self, QuantMat, Workspace};
 use crate::math::matrix::Matrix;
 
 /// One adapted `m × n` site under plain LoRA: `B` (m × r) and `A`
@@ -98,7 +98,7 @@ impl Adapter for LoraAdapter {
     fn forward_into(
         &self,
         x: &Matrix,
-        _regen: &[Arc<Matrix>],
+        _regen: &[Arc<QuantMat>],
         alpha: f32,
         ws: &mut Workspace,
         out: &mut Matrix,
@@ -115,7 +115,7 @@ impl Adapter for LoraAdapter {
     fn vjp(
         &self,
         x: &Matrix,
-        _regen: &[Arc<Matrix>],
+        _regen: &[Arc<QuantMat>],
         g: &Matrix,
         alpha: f32,
     ) -> (Vec<Matrix>, Matrix) {
@@ -249,8 +249,8 @@ mod tests {
         let x = Matrix::gaussian(total, n, 1.0, &mut rng);
         let refs: Vec<&dyn Adapter> =
             ads.iter().map(|a| a as &dyn Adapter).collect();
-        let regens: Vec<&[Arc<Matrix>]> =
-            ads.iter().map(|_| &[] as &[Arc<Matrix>]).collect();
+        let regens: Vec<&[Arc<QuantMat>]> =
+            ads.iter().map(|_| &[] as &[Arc<QuantMat>]).collect();
         let mut ws = Workspace::new();
         let mut fused = Matrix::zeros(total, m);
         forward_grouped_into(&refs, &regens, &alphas, &x, &segs, &mut ws,

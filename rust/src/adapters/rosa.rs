@@ -22,7 +22,7 @@ use std::sync::Arc;
 
 use crate::adapters::traits::{Adapter, RegenSpec};
 use crate::adapters::Method;
-use crate::linalg::{self, Workspace};
+use crate::linalg::{self, QuantMat, Workspace};
 use crate::math::matrix::Matrix;
 
 /// One adapted `m × n` site under RoSA: sparse residual `S` (m × n,
@@ -128,7 +128,7 @@ impl Adapter for RosaAdapter {
     fn forward_into(
         &self,
         x: &Matrix,
-        _regen: &[Arc<Matrix>],
+        _regen: &[Arc<QuantMat>],
         alpha: f32,
         ws: &mut Workspace,
         out: &mut Matrix,
@@ -156,7 +156,7 @@ impl Adapter for RosaAdapter {
     fn vjp(
         &self,
         x: &Matrix,
-        _regen: &[Arc<Matrix>],
+        _regen: &[Arc<QuantMat>],
         g: &Matrix,
         alpha: f32,
     ) -> (Vec<Matrix>, Matrix) {
@@ -305,8 +305,10 @@ mod tests {
 
     #[test]
     fn grouped_forward_is_bit_identical_to_single_calls() {
-        // RoSA segments go through the per-segment fallback; the
-        // dispatcher's row copies must still be exact.
+        // Same-rank RoSA segments now take the grouped fast path (the
+        // dense low-rank half fused across segments, the sparse
+        // residual per-segment); the fused output must still equal
+        // composed single calls bit for bit.
         use crate::adapters::traits::forward_grouped_into;
         let (m, n, r) = (10usize, 12usize, 2usize);
         let ads: Vec<RosaAdapter> =
@@ -318,8 +320,8 @@ mod tests {
         let x = Matrix::gaussian(total, n, 1.0, &mut rng);
         let refs: Vec<&dyn Adapter> =
             ads.iter().map(|a| a as &dyn Adapter).collect();
-        let regens: Vec<&[Arc<Matrix>]> =
-            ads.iter().map(|_| &[] as &[Arc<Matrix>]).collect();
+        let regens: Vec<&[Arc<QuantMat>]> =
+            ads.iter().map(|_| &[] as &[Arc<QuantMat>]).collect();
         let mut ws = Workspace::new();
         let mut fused = Matrix::zeros(total, m);
         forward_grouped_into(&refs, &regens, &alphas, &x, &segs, &mut ws,
@@ -337,6 +339,54 @@ mod tests {
                 assert_eq!(p.to_bits(), q.to_bits(), "seg {g}: {p} vs {q}");
             }
             row += rows;
+        }
+    }
+
+    #[test]
+    fn grouped_fast_path_handles_zero_segs_and_mixed_ranks() {
+        // Two acceptance edges for the grouped fast path: zero-row
+        // segments must be skipped exactly, and mixed ranks must fall
+        // back to per-segment composition — both bit-identical to
+        // composed single calls.
+        use crate::adapters::traits::forward_grouped_into;
+        let (m, n) = (9usize, 11usize);
+        for ranks in [[2usize, 2, 2], [2, 3, 2]] {
+            let ads: Vec<RosaAdapter> = ranks
+                .iter()
+                .enumerate()
+                .map(|(i, &r)| sample(m, n, r, 40 + i as u64))
+                .collect();
+            let segs = [3usize, 0, 2];
+            let alphas = [1.5f32, 1.0, 0.25];
+            let total: usize = segs.iter().sum();
+            let mut rng = Pcg64::new(7);
+            let x = Matrix::gaussian(total, n, 1.0, &mut rng);
+            let refs: Vec<&dyn Adapter> =
+                ads.iter().map(|a| a as &dyn Adapter).collect();
+            let regens: Vec<&[Arc<QuantMat>]> =
+                ads.iter().map(|_| &[] as &[Arc<QuantMat>]).collect();
+            let mut ws = Workspace::new();
+            let mut fused = Matrix::zeros(total, m);
+            forward_grouped_into(&refs, &regens, &alphas, &x, &segs,
+                                 &mut ws, &mut fused);
+            let mut row = 0usize;
+            for (g, &rows) in segs.iter().enumerate() {
+                if rows == 0 {
+                    continue;
+                }
+                let xs = Matrix::from_vec(
+                    rows, n, x.data[row * n..(row + rows) * n].to_vec());
+                let mut o = Matrix::zeros(rows, m);
+                ads[g].forward_into(&xs, &[], alphas[g], &mut ws, &mut o);
+                for (p, q) in fused.data[row * m..(row + rows) * m]
+                    .iter()
+                    .zip(&o.data)
+                {
+                    assert_eq!(p.to_bits(), q.to_bits(),
+                               "ranks {ranks:?} seg {g}: {p} vs {q}");
+                }
+                row += rows;
+            }
         }
     }
 

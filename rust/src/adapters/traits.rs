@@ -30,9 +30,11 @@
 //! block-diagonal sweep — the all-CoSA case takes the *identical*
 //! grouped kernel path the pre-trait engine used (bit-identity is
 //! pinned by acceptance tests), all-LoRA takes a two-sweep grouped
-//! path, and anything else (RoSA's sparse half, mixed LoRA ranks)
-//! falls back to per-segment [`Adapter::forward_into`] calls, which
-//! the grouped kernels are bit-identical to anyway.
+//! path, same-rank RoSA fuses its dense low-rank half through the same
+//! two sweeps (the sparse residual stays per-segment), and anything
+//! else (mixed low-rank ranks) falls back to per-segment
+//! [`Adapter::forward_into`] calls, which the grouped kernels are
+//! bit-identical to anyway.
 
 use std::any::Any;
 use std::collections::BTreeMap;
@@ -42,7 +44,7 @@ use crate::adapters::cosa::{self, CosaAdapter};
 use crate::adapters::lora::LoraAdapter;
 use crate::adapters::rosa::RosaAdapter;
 use crate::adapters::Method;
-use crate::linalg::{self, Workspace};
+use crate::linalg::{self, QuantKind, QuantMat, Workspace};
 use crate::math::matrix::Matrix;
 
 /// One tensor that regenerates from the adapter seed instead of being
@@ -77,6 +79,13 @@ impl RegenSpec {
     /// Bytes this tensor occupies when materialized (f32).
     pub fn bytes(&self) -> usize {
         self.rows * self.cols * std::mem::size_of::<f32>()
+    }
+
+    /// Bytes this tensor occupies when cache-resident under a storage
+    /// kind — the quantity the projection-LRU ledger meters under
+    /// `[serve] cache_quant` (payload plus int8 per-panel scales).
+    pub fn bytes_as(&self, kind: QuantKind) -> usize {
+        kind.bytes_for(self.rows, self.cols)
     }
 }
 
@@ -124,11 +133,13 @@ pub trait Adapter: Send + Sync {
 
     /// `out = α · ΔW(x)` for a batch of row activations `x` (N × n),
     /// `out` (N × m).  `regen` holds the materialized
-    /// [`Adapter::regen_specs`] tensors in declaration order.
+    /// [`Adapter::regen_specs`] tensors in declaration order, in
+    /// whatever storage kind the cache resides them under (f32 payloads
+    /// are served bit-identically to the unquantized engine).
     fn forward_into(
         &self,
         x: &Matrix,
-        regen: &[Arc<Matrix>],
+        regen: &[Arc<QuantMat>],
         alpha: f32,
         ws: &mut Workspace,
         out: &mut Matrix,
@@ -138,7 +149,7 @@ pub trait Adapter: Send + Sync {
     fn forward(
         &self,
         x: &Matrix,
-        regen: &[Arc<Matrix>],
+        regen: &[Arc<QuantMat>],
         alpha: f32,
     ) -> Matrix {
         let mut ws = Workspace::new();
@@ -154,7 +165,7 @@ pub trait Adapter: Send + Sync {
     fn vjp(
         &self,
         x: &Matrix,
-        regen: &[Arc<Matrix>],
+        regen: &[Arc<QuantMat>],
         g: &Matrix,
         alpha: f32,
     ) -> (Vec<Matrix>, Matrix);
@@ -279,7 +290,7 @@ pub const SERVABLE_METHODS: [Method; 3] =
 #[allow(clippy::too_many_arguments)]
 pub fn forward_grouped_into(
     adapters: &[&dyn Adapter],
-    regens: &[&[Arc<Matrix>]],
+    regens: &[&[Arc<QuantMat>]],
     alphas: &[f32],
     x: &Matrix,
     segs: &[usize],
@@ -348,7 +359,7 @@ pub fn forward_grouped_into(
 /// Grouped compute for one same-method run of segments.
 fn run_method_into(
     adapters: &[&dyn Adapter],
-    regens: &[&[Arc<Matrix>]],
+    regens: &[&[Arc<QuantMat>]],
     alphas: &[f32],
     x: &Matrix,
     segs: &[usize],
@@ -357,7 +368,8 @@ fn run_method_into(
 ) {
     match adapters[0].method() {
         Method::CoSA => {
-            // the pre-trait grouped kernel path, bit for bit
+            // the pre-trait grouped kernel path — bit for bit when the
+            // regens are f32, pack-fused quantized sweeps otherwise
             let ys: Vec<&Matrix> = adapters
                 .iter()
                 .map(|ad| {
@@ -367,11 +379,11 @@ fn run_method_into(
                         .core()
                 })
                 .collect();
-            let ls: Vec<&Matrix> =
+            let ls: Vec<&QuantMat> =
                 regens.iter().map(|r| r[0].as_ref()).collect();
-            let rs: Vec<&Matrix> =
+            let rs: Vec<&QuantMat> =
                 regens.iter().map(|r| r[1].as_ref()).collect();
-            cosa::adapter_forward_grouped_into(
+            cosa::adapter_forward_grouped_quant_into(
                 x, &ls, &rs, &ys, alphas, segs, ws, out,
             );
         }
@@ -410,6 +422,63 @@ fn run_method_into(
                 run_per_segment(adapters, regens, alphas, x, segs, ws, out);
             }
         }
+        Method::RoSA => {
+            let ras: Vec<&RosaAdapter> = adapters
+                .iter()
+                .map(|ad| {
+                    ad.as_any()
+                        .downcast_ref::<RosaAdapter>()
+                        .expect("rosa-method segment must be a RosaAdapter")
+                })
+                .collect();
+            let rank = ras[0].rank();
+            if ras.iter().all(|r| r.rank() == rank) {
+                // dense low-rank half fused across segments — the same
+                // two grouped NT sweeps the LoRA arm runs; the sparse
+                // residual stays per-segment (sparse-left kernel, not
+                // groupable) and α multiplies last, exactly the op
+                // order `forward_into` uses ⇒ identical bits.
+                let amats: Vec<&Matrix> =
+                    ras.iter().map(|r| r.a_ref()).collect();
+                let bmats: Vec<&Matrix> =
+                    ras.iter().map(|r| r.b_ref()).collect();
+                let mut u = ws.take_matrix(x.rows, rank);
+                linalg::gemm_grouped_nt_into(x, &amats, segs, &mut u);
+                linalg::gemm_grouped_nt_into(&u, &bmats, segs, out);
+                ws.recycle_matrix(u);
+                let n = x.cols;
+                let m = out.cols;
+                let mut row = 0usize;
+                for (g, &rows) in segs.iter().enumerate() {
+                    if rows == 0 {
+                        continue;
+                    }
+                    let mut xs = ws.take_matrix(rows, n);
+                    xs.data.copy_from_slice(
+                        &x.data[row * n..(row + rows) * n],
+                    );
+                    let sx = linalg::sparse::gemm_sparse_left(
+                        ras[g].sparse_ref(),
+                        &xs.transpose(),
+                    );
+                    ws.recycle_matrix(xs);
+                    for i in 0..rows {
+                        let orow =
+                            &mut out.data[(row + i) * m..(row + i + 1) * m];
+                        for (j, o) in orow.iter_mut().enumerate() {
+                            *o += sx.data[j * rows + i];
+                        }
+                    }
+                    for o in out.data[row * m..(row + rows) * m].iter_mut()
+                    {
+                        *o *= alphas[g];
+                    }
+                    row += rows;
+                }
+            } else {
+                run_per_segment(adapters, regens, alphas, x, segs, ws, out);
+            }
+        }
         _ => run_per_segment(adapters, regens, alphas, x, segs, ws, out),
     }
 }
@@ -419,7 +488,7 @@ fn run_method_into(
 /// mixed LoRA ranks).
 fn run_per_segment(
     adapters: &[&dyn Adapter],
-    regens: &[&[Arc<Matrix>]],
+    regens: &[&[Arc<QuantMat>]],
     alphas: &[f32],
     x: &Matrix,
     segs: &[usize],
@@ -486,10 +555,19 @@ mod tests {
             .unwrap()
     }
 
-    fn materialized(ad: &dyn Adapter) -> Vec<Arc<Matrix>> {
+    fn materialized(ad: &dyn Adapter) -> Vec<Arc<QuantMat>> {
+        materialized_as(ad, QuantKind::F32)
+    }
+
+    fn materialized_as(
+        ad: &dyn Adapter,
+        kind: QuantKind,
+    ) -> Vec<Arc<QuantMat>> {
         ad.regen_specs()
             .iter()
-            .map(|s| Arc::new(s.materialize()))
+            .map(|s| {
+                Arc::new(QuantMat::encode_owned(s.materialize(), kind))
+            })
             .collect()
     }
 
@@ -512,12 +590,12 @@ mod tests {
         let total: usize = segs.iter().sum();
         let mut rng = Pcg64::new(9);
         let x = Matrix::gaussian(total, n, 1.0, &mut rng);
-        let regens: Vec<Vec<Arc<Matrix>>> =
+        let regens: Vec<Vec<Arc<QuantMat>>> =
             sites.iter().map(|s| materialized(s.as_ref())).collect();
 
         let adapters: Vec<&dyn Adapter> =
             sites.iter().map(|s| s.as_ref()).collect();
-        let regen_refs: Vec<&[Arc<Matrix>]> =
+        let regen_refs: Vec<&[Arc<QuantMat>]> =
             regens.iter().map(|r| r.as_slice()).collect();
         let mut ws = Workspace::new();
         let mut fused = Matrix::zeros(total, m);
@@ -549,6 +627,81 @@ mod tests {
             }
             row += rows;
         }
+    }
+
+    #[test]
+    fn grouped_with_quantized_regens_matches_per_segment_bitwise() {
+        // The scenario-7 serving shape: an all-CoSA fused batch whose
+        // cache residents are a mix of storage kinds.  The grouped
+        // quantized sweeps must equal composed per-segment forward_into
+        // calls (themselves the pack-fused quant route) bit for bit.
+        let (m, n) = (12usize, 10usize);
+        let sites: Vec<Arc<dyn Adapter>> =
+            (0..4).map(|i| cosa_site(30 + i, m, n)).collect();
+        let kinds = [QuantKind::Bf16, QuantKind::Int8, QuantKind::F32,
+                     QuantKind::Bf16];
+        let segs = [2usize, 0, 3, 1];
+        let alphas = [2.0f32, 1.0, 0.5, 3.0];
+        let total: usize = segs.iter().sum();
+        let mut rng = Pcg64::new(41);
+        let x = Matrix::gaussian(total, n, 1.0, &mut rng);
+        let regens: Vec<Vec<Arc<QuantMat>>> = sites
+            .iter()
+            .zip(&kinds)
+            .map(|(s, &kind)| materialized_as(s.as_ref(), kind))
+            .collect();
+        let adapters: Vec<&dyn Adapter> =
+            sites.iter().map(|s| s.as_ref()).collect();
+        let regen_refs: Vec<&[Arc<QuantMat>]> =
+            regens.iter().map(|r| r.as_slice()).collect();
+        let mut ws = Workspace::new();
+        let mut fused = Matrix::zeros(total, m);
+        forward_grouped_into(
+            &adapters, &regen_refs, &alphas, &x, &segs, &mut ws,
+            &mut fused,
+        );
+        let mut row = 0usize;
+        for (g, &rows) in segs.iter().enumerate() {
+            if rows == 0 {
+                continue;
+            }
+            let xs = Matrix::from_vec(
+                rows,
+                n,
+                x.data[row * n..(row + rows) * n].to_vec(),
+            );
+            let mut o = Matrix::zeros(rows, m);
+            adapters[g]
+                .forward_into(&xs, &regens[g], alphas[g], &mut ws, &mut o);
+            for (i, (p, q)) in fused.data[row * m..(row + rows) * m]
+                .iter()
+                .zip(&o.data)
+                .enumerate()
+            {
+                assert_eq!(
+                    p.to_bits(),
+                    q.to_bits(),
+                    "{} seg {g} elem {i}: {p} vs {q}",
+                    kinds[g].name()
+                );
+            }
+            row += rows;
+        }
+    }
+
+    #[test]
+    fn regen_spec_bytes_as_counts_encoded_bytes() {
+        let spec = RegenSpec {
+            seed: 1,
+            name: "s.l".into(),
+            rows: 8,
+            cols: 6,
+            regen: cosa::regen_l,
+        };
+        assert_eq!(spec.bytes(), 8 * 6 * 4);
+        assert_eq!(spec.bytes_as(QuantKind::F32), spec.bytes());
+        assert_eq!(spec.bytes_as(QuantKind::Bf16), 8 * 6 * 2);
+        assert_eq!(spec.bytes_as(QuantKind::Int8), 8 * 6 + 8 * 4);
     }
 
     #[test]

@@ -148,6 +148,12 @@ pub struct ServeConfig {
     pub fused: bool,
     /// Per-class WFQ weights (see [`ClassWeights`]).
     pub classes: ClassWeights,
+    /// Storage codec for cache-resident regenerated projections:
+    /// `"f32"` (bit-identical default), `"bf16"` (half the bytes,
+    /// ~1e-2 relative error), or `"int8"` (quarter the bytes plus
+    /// per-row scales, ~1e-1 worst-case relative error).  See
+    /// `linalg::QuantKind` and the README's "Quantized cache" section.
+    pub cache_quant: String,
 }
 
 impl Default for ServeConfig {
@@ -160,6 +166,7 @@ impl Default for ServeConfig {
             preload_dir: String::new(),
             fused: true,
             classes: ClassWeights::default(),
+            cache_quant: "f32".into(),
         }
     }
 }
@@ -172,11 +179,19 @@ impl ServeConfig {
         (self.cache_mb.max(0.0) * (1 << 20) as f64) as usize
     }
 
+    /// The parsed cache codec (`cache_quant` is the raw TOML/env
+    /// string; the TOML loader and `env_overridden` both validate, so
+    /// consumers normally cannot see this fail).
+    pub fn cache_quant_kind(&self) -> anyhow::Result<crate::linalg::QuantKind> {
+        crate::linalg::QuantKind::parse(&self.cache_quant)
+    }
+
     /// Apply the `COSA_SERVE_*` env overrides (read fresh on every call
     /// so long-lived processes can be steered per-invocation):
     /// `COSA_SERVE_CACHE_MB`, `COSA_SERVE_MAX_BATCH`,
     /// `COSA_SERVE_MAX_WAIT_US`, `COSA_SERVE_WORKERS`,
-    /// `COSA_SERVE_PRELOAD_DIR`, `COSA_SERVE_FUSED`, and the class
+    /// `COSA_SERVE_PRELOAD_DIR`, `COSA_SERVE_CACHE_QUANT`,
+    /// `COSA_SERVE_FUSED`, and the class
     /// weights `COSA_SERVE_CLASS_INTERACTIVE` /
     /// `COSA_SERVE_CLASS_BATCH` / `COSA_SERVE_CLASS_BACKGROUND`.
     /// Unparseable values warn and fall back to the config value,
@@ -189,6 +204,15 @@ impl ServeConfig {
         out.workers = env_num("COSA_SERVE_WORKERS", out.workers);
         if let Ok(dir) = std::env::var("COSA_SERVE_PRELOAD_DIR") {
             out.preload_dir = dir;
+        }
+        if let Ok(q) = std::env::var("COSA_SERVE_CACHE_QUANT") {
+            match crate::linalg::QuantKind::parse(&q) {
+                Ok(_) => out.cache_quant = q,
+                Err(e) => eprintln!(
+                    "warning: COSA_SERVE_CACHE_QUANT: {e}; using `{}`",
+                    out.cache_quant
+                ),
+            }
         }
         out.fused = env_num("COSA_SERVE_FUSED", out.fused);
         let cw = &mut out.classes;
@@ -589,6 +613,8 @@ impl RunConfig {
         s.workers = workers as usize;
         s.preload_dir = doc.str_or("serve.preload_dir", &s.preload_dir);
         s.fused = doc.bool_or("serve.fused", s.fused);
+        s.cache_quant = doc.str_or("serve.cache_quant", &s.cache_quant);
+        crate::linalg::QuantKind::parse(&s.cache_quant)?; // fail fast on typos
         for (key, field) in [
             ("serve.classes.interactive", &mut s.classes.interactive),
             ("serve.classes.batch", &mut s.classes.batch),
@@ -764,6 +790,14 @@ data = 3
         assert!(RunConfig::from_toml("[serve]\nmax_batch = 0").is_err());
         assert!(RunConfig::from_toml("[serve]\nworkers = -1").is_err());
         assert!(RunConfig::from_toml("[serve]\ncache_mb = -2.0").is_err());
+        // cache codec: aliases accepted, typos fail fast
+        let q = RunConfig::from_toml("[serve]\ncache_quant = \"bf16\"")
+            .unwrap();
+        assert_eq!(q.serve.cache_quant, "bf16");
+        assert_eq!(q.serve.cache_quant_kind().unwrap(),
+                   crate::linalg::QuantKind::Bf16);
+        assert!(RunConfig::from_toml("[serve]\ncache_quant = \"fp8\"")
+            .is_err());
         // defaults when the table is absent
         let d = RunConfig::from_toml("").unwrap();
         assert_eq!(d.serve, ServeConfig::default());
@@ -805,7 +839,12 @@ data = 3
         std::env::set_var("COSA_SERVE_FUSED", "false");
         std::env::set_var("COSA_SERVE_CLASS_BATCH", "6");
         std::env::set_var("COSA_SERVE_CLASS_BACKGROUND", "0");
+        std::env::set_var("COSA_SERVE_CACHE_QUANT", "int8");
         let cfg = ServeConfig::default().env_overridden();
+        assert_eq!(cfg.cache_quant, "int8", "cache codec env wins");
+        std::env::set_var("COSA_SERVE_CACHE_QUANT", "fp8");
+        assert_eq!(ServeConfig::default().env_overridden().cache_quant,
+                   "f32", "unknown codec warns and falls back");
         assert_eq!(cfg.max_batch, 9, "env wins over the default");
         assert_eq!(cfg.max_wait_us, ServeConfig::default().max_wait_us,
                    "garbage env value falls back");
@@ -825,6 +864,7 @@ data = 3
             "COSA_SERVE_FUSED",
             "COSA_SERVE_CLASS_BATCH",
             "COSA_SERVE_CLASS_BACKGROUND",
+            "COSA_SERVE_CACHE_QUANT",
         ] {
             std::env::remove_var(key);
         }

@@ -56,9 +56,19 @@
 //! see its module docs for the reuse contract.  The training-step hot
 //! loops (`adapters::cosa::adapter_forward_into`, `train::HostCosaStep`)
 //! perform zero matmul-output allocations after their first iteration.
+//!
+//! ## Quantized operands
+//!
+//! [`quant`] provides bf16 / int8 storage codecs ([`QuantMat`]) for
+//! cache-resident operands; the packed backend consumes them through
+//! quantized-source pack variants ([`pack`]) that fuse the SIMD
+//! up-convert into the pack pass, so the f32 micro-kernels are
+//! untouched and no full-size dequantized image materializes
+//! ([`Packed::gemm_nt_quant_into`] and the grouped variant).
 
 pub mod pack;
 pub mod packed;
+pub mod quant;
 pub mod reference;
 pub mod simd;
 pub mod sparse;
@@ -66,6 +76,7 @@ pub mod tiled;
 mod workspace;
 
 pub use packed::Packed;
+pub use quant::{QuantKind, QuantMat};
 pub use reference::Reference;
 pub use tiled::Tiled;
 pub use workspace::Workspace;
@@ -364,6 +375,44 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     dispatch(|bk| bk.axpy(alpha, x, y))
 }
 
+/// In-place `out = a · bᵀ` with a quantized B operand.  The packed
+/// backend (which `auto` resolves to — the serving configuration)
+/// consumes the encoded payload through its pack-fused up-convert
+/// ([`Packed::gemm_nt_quant_into`]); the reference/tiled backends
+/// decode to a transient f32 matrix first, a correctness-only fallback
+/// for debug runs.
+pub fn gemm_nt_quant_into(a: &Matrix, b: &QuantMat, out: &mut Matrix) {
+    let threads = current().1;
+    match resolved_kind() {
+        Kind::Reference | Kind::Tiled => match b.as_f32() {
+            Some(bm) => gemm_nt_into(a, bm, out),
+            None => {
+                let bm = b.to_matrix();
+                gemm_nt_into(a, &bm, out);
+            }
+        },
+        _ => Packed::new(threads).gemm_nt_quant_into(a, b, out),
+    }
+}
+
+/// Grouped block-diagonal NT with quantized B operands (see
+/// [`gemm_grouped_nt_into`]); bit-identical to calling
+/// [`gemm_nt_quant_into`] once per segment.
+pub fn gemm_grouped_nt_quant_into(a: &Matrix, bs: &[&QuantMat],
+                                  segs: &[usize], out: &mut Matrix) {
+    let threads = current().1;
+    match resolved_kind() {
+        Kind::Reference | Kind::Tiled => {
+            let decoded: Vec<Matrix> =
+                bs.iter().map(|q| q.to_matrix()).collect();
+            let refs: Vec<&Matrix> = decoded.iter().collect();
+            gemm_grouped_nt_into(a, &refs, segs, out);
+        }
+        _ => Packed::new(threads)
+            .gemm_grouped_nt_quant_into(a, bs, segs, out),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -587,6 +636,191 @@ mod tests {
                                "segs {segs:?} elem {i}: {x} vs {y}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn column_parallel_fanout_is_bit_identical_to_serial() {
+        // Wide-short shapes (rows ≪ columns) take the column fan-out
+        // under forced threading; every element must match the serial
+        // kernel to the bit for nn/nt/tn (the fan-out only changes
+        // which thread computes an element, never how).
+        let mut rng = Pcg64::new(37);
+        for &m in &[1usize, 2, 4, 5, 7] {
+            for &(k, n) in &[(8usize, 200usize), (13, 65), (32, 129),
+                             (9, 17)] {
+                let a = Matrix::gaussian(m, k, 1.0, &mut rng);
+                let b = Matrix::gaussian(k, n, 1.0, &mut rng);
+                let bt = Matrix::gaussian(n, k, 1.0, &mut rng);
+                let at = Matrix::gaussian(k, m, 1.0, &mut rng);
+                let serial = Packed::new(1);
+                let forced = forced_parallel_packed();
+                let ctx = format!("{m}x{k}x{n}");
+                for (want, have, tag) in [
+                    (serial.gemm(&a, &b), forced.gemm(&a, &b), "nn"),
+                    (serial.gemm_nt(&a, &bt), forced.gemm_nt(&a, &bt),
+                     "nt"),
+                    (serial.gemm_tn(&at, &b), forced.gemm_tn(&at, &b),
+                     "tn"),
+                ] {
+                    for (i, (x, y)) in
+                        want.data.iter().zip(&have.data).enumerate()
+                    {
+                        assert_eq!(x.to_bits(), y.to_bits(),
+                                   "{ctx} {tag} elem {i}: {x} vs {y}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_nt_f32_payload_is_bit_identical_to_plain_nt() {
+        // The default cache_quant="f32" policy must not perturb a
+        // single bit of the existing serving math.
+        let mut rng = Pcg64::new(51);
+        let a = Matrix::gaussian(6, 24, 1.0, &mut rng);
+        let b = Matrix::gaussian(19, 24, 1.0, &mut rng);
+        let qb = QuantMat::from_arc(std::sync::Arc::new(b.clone()));
+        for packed in [Packed::new(1), forced_parallel_packed()] {
+            let mut want = Matrix::zeros(6, 19);
+            packed.gemm_nt_into(&a, &b, &mut want);
+            let mut have = Matrix::zeros(6, 19);
+            packed.gemm_nt_quant_into(&a, &qb, &mut have);
+            for (x, y) in want.data.iter().zip(&have.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn quant_nt_is_bit_identical_to_decode_reference_composition() {
+        // The tentpole acceptance property at the GEMM level: the
+        // pack-fused quantized product equals the quantize-then-
+        // dequantize reference composition (an NN product against the
+        // decoded transpose) to the bit, serial and threaded — the
+        // pack images are identical and the micro-kernel is shared.
+        let mut rng = Pcg64::new(53);
+        let dims = [1usize, 3, 5, 15, 16, 17, 33];
+        for &n in &dims {
+            for &k in &[1usize, 9, 24, 40] {
+                let a = Matrix::gaussian(5, k, 1.0, &mut rng);
+                let b = Matrix::gaussian(n, k, 1.0, &mut rng);
+                for kind in [quant::QuantKind::Bf16,
+                             quant::QuantKind::Int8] {
+                    let qb = QuantMat::encode(&b, kind);
+                    let bt = qb.to_matrix_transposed(); // k×n decoded
+                    for packed in [Packed::new(1),
+                                   forced_parallel_packed()] {
+                        let mut want = Matrix::zeros(5, n);
+                        packed.gemm_into(&a, &bt, &mut want);
+                        let mut have = Matrix::from_vec(
+                            5, n, vec![8.0; 5 * n]);
+                        packed.gemm_nt_quant_into(&a, &qb, &mut have);
+                        for (i, (x, y)) in want
+                            .data
+                            .iter()
+                            .zip(&have.data)
+                            .enumerate()
+                        {
+                            assert_eq!(
+                                x.to_bits(), y.to_bits(),
+                                "{} {n}x{k} elem {i}: {x} vs {y}",
+                                kind.name());
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_nt_error_vs_f32_within_codec_tolerance() {
+        // Accuracy (not bit) bound vs the unquantized product: bf16
+        // carries ~2^-8 relative error per element, int8 per-panel
+        // half-steps; both land well under these loose output bounds.
+        let mut rng = Pcg64::new(57);
+        let a = Matrix::gaussian(8, 48, 1.0, &mut rng);
+        let b = Matrix::gaussian(21, 48, 1.0, &mut rng);
+        let packed = Packed::new(1);
+        let mut exact = Matrix::zeros(8, 21);
+        packed.gemm_nt_into(&a, &b, &mut exact);
+        for (kind, tol) in [(quant::QuantKind::Bf16, 0.05f64),
+                            (quant::QuantKind::Int8, 0.15f64)] {
+            let qb = QuantMat::encode(&b, kind);
+            let mut got = Matrix::zeros(8, 21);
+            packed.gemm_nt_quant_into(&a, &qb, &mut got);
+            let num = got.sub(&exact).frobenius();
+            let den = exact.frobenius().max(1e-12);
+            assert!(num / den < tol, "{}: rel RMSE {}", kind.name(),
+                    num / den);
+        }
+    }
+
+    #[test]
+    fn grouped_quant_matches_per_segment_calls_bitwise() {
+        // Mixed-kind groups: every segment of the grouped sweep must
+        // equal its standalone gemm_nt_quant_into to the bit (and the
+        // all-F32 group must equal the fused f32 grouped sweep).
+        let mut rng = Pcg64::new(59);
+        let segs: &[usize] = &[3, 0, 5, 1];
+        let m: usize = segs.iter().sum();
+        let (k, n) = (13, 19);
+        let a = Matrix::gaussian(m, k, 1.0, &mut rng);
+        let kinds = [quant::QuantKind::F32, quant::QuantKind::Bf16,
+                     quant::QuantKind::Int8, quant::QuantKind::Bf16];
+        let bs: Vec<QuantMat> = kinds
+            .iter()
+            .map(|&kind| {
+                QuantMat::encode(&Matrix::gaussian(n, k, 1.0, &mut rng),
+                                 kind)
+            })
+            .collect();
+        let brefs: Vec<&QuantMat> = bs.iter().collect();
+        for packed in [Packed::new(1), forced_parallel_packed()] {
+            let mut fused = Matrix::from_vec(m, n, vec![4.0; m * n]);
+            packed.gemm_grouped_nt_quant_into(&a, &brefs, segs,
+                                              &mut fused);
+            let mut row = 0;
+            for (g, &rows) in segs.iter().enumerate() {
+                if rows == 0 {
+                    continue;
+                }
+                let asub = Matrix::from_vec(
+                    rows, k, a.data[row * k..(row + rows) * k].to_vec());
+                let mut osub = Matrix::zeros(rows, n);
+                packed.gemm_nt_quant_into(&asub, &bs[g], &mut osub);
+                for (i, (x, y)) in fused.data
+                    [row * n..(row + rows) * n]
+                    .iter()
+                    .zip(&osub.data)
+                    .enumerate()
+                {
+                    assert_eq!(x.to_bits(), y.to_bits(),
+                               "seg {g} elem {i}");
+                }
+                row += rows;
+            }
+        }
+        // All-F32 groups ride the fused f32 sweep bit-identically.
+        let f32s: Vec<QuantMat> = (0..segs.len())
+            .map(|_| {
+                QuantMat::encode(&Matrix::gaussian(n, k, 1.0, &mut rng),
+                                 quant::QuantKind::F32)
+            })
+            .collect();
+        let fq: Vec<&QuantMat> = f32s.iter().collect();
+        let fm: Vec<&Matrix> = f32s
+            .iter()
+            .map(|q| q.as_f32().unwrap().as_ref())
+            .collect();
+        let packed = forced_parallel_packed();
+        let mut want = Matrix::zeros(m, n);
+        packed.gemm_grouped_nt_into(&a, &fm, segs, &mut want);
+        let mut have = Matrix::zeros(m, n);
+        packed.gemm_grouped_nt_quant_into(&a, &fq, segs, &mut have);
+        for (x, y) in want.data.iter().zip(&have.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
         }
     }
 

@@ -18,6 +18,19 @@
 //! NR-column strip of B — while the one-time blocked transpose touches
 //! each A element once and every kernel read after it is dense.
 //!
+//! ## Quantized sources
+//!
+//! The bf16/int8 cache residents ([`crate::linalg::quant::QuantMat`])
+//! are consumed through pack variants that fuse the SIMD up-convert
+//! into the pack pass: [`pack_b_nt_quant`] reads a quantized NT
+//! operand (`n×k`) row by row — each row decoded contiguously into a
+//! pool scratch line, then scattered into the strip lanes of the
+//! standard NN layout — and [`pack_a_tn_quant`] decodes block-rows
+//! before the blocked transpose.  Both produce images bit-identical to
+//! packing the decoded matrix, so the downstream f32 micro-kernels and
+//! their accumulation order are untouched, and no full-size f32 image
+//! of a quantized operand ever materializes.
+//!
 //! ## Allocation contract
 //!
 //! Pack buffers come from a **thread-local [`Workspace`] pool**, so a
@@ -31,6 +44,7 @@
 
 use std::cell::RefCell;
 
+use crate::linalg::quant::QuantMat;
 use crate::linalg::Workspace;
 
 /// Strip width (columns) — two 8-lane registers per micro-kernel row.
@@ -134,6 +148,112 @@ pub fn with_packed_a_tn<R>(
     r
 }
 
+/// Pack a **quantized NT operand** `b` (`n×k`: each row is one dot
+/// operand) into the standard NN strip layout of its transpose (`k×n`),
+/// decoding on the fly: row `j` is up-converted contiguously into a
+/// pool scratch line (SIMD — see `quant`), then scattered into lane
+/// `j−j0` of strip `j0/NR`.  The image is bit-identical to
+/// `pack_b(decode(b)ᵀ)`, so the NN micro-kernel consumes it verbatim.
+pub fn pack_b_nt_quant(b: &QuantMat, packed: &mut [f32]) {
+    let (n, k) = (b.rows(), b.cols());
+    let strips = n.div_ceil(NR);
+    assert!(packed.len() >= strips * k * NR, "pack buffer too small");
+    let mut rowbuf = PACK_POOL.with(|ws| ws.borrow_mut().take_scratch(k));
+    for s in 0..strips {
+        let j0 = s * NR;
+        let jw = NR.min(n - j0);
+        let strip = &mut packed[s * k * NR..(s + 1) * k * NR];
+        for lane in 0..jw {
+            b.dequantize_row_into(j0 + lane, &mut rowbuf);
+            for (kk, &v) in rowbuf[..k].iter().enumerate() {
+                strip[kk * NR + lane] = v;
+            }
+        }
+        // right-edge padding — REQUIRED: buffers arrive with stale
+        // contents (scratch draw), the kernel multiplies these lanes
+        for lane in jw..NR {
+            for kk in 0..k {
+                strip[kk * NR + lane] = 0.0;
+            }
+        }
+    }
+    PACK_POOL.with(|ws| ws.borrow_mut().recycle(rowbuf));
+}
+
+/// Run `f` against the packed image of a quantized NT operand
+/// (see [`pack_b_nt_quant`]); buffer from the thread-local pool.
+pub fn with_packed_b_nt_quant<R>(
+    b: &QuantMat,
+    f: impl FnOnce(&[f32]) -> R,
+) -> R {
+    let (n, k) = (b.rows(), b.cols());
+    // Scratch draw: pack_b_nt_quant writes every element, pad included.
+    let mut buf =
+        PACK_POOL.with(|ws| ws.borrow_mut().take_scratch(packed_len(k, n)));
+    pack_b_nt_quant(b, &mut buf);
+    let r = f(&buf);
+    PACK_POOL.with(|ws| ws.borrow_mut().recycle(buf));
+    r
+}
+
+/// Quantized-source variant of [`pack_a_tn`]: decode `a` (`k×mo`) a
+/// block of `TB` rows at a time into pool scratch (contiguous SIMD
+/// up-convert), then run the same blocked transpose into `at`
+/// (`mo×k`).  Bit-identical to `pack_a_tn(decode(a))` without ever
+/// holding more than `TB` decoded rows.
+pub fn pack_a_tn_quant(a: &QuantMat, at: &mut [f32]) {
+    let (k, mo) = (a.rows(), a.cols());
+    assert!(at.len() >= k * mo, "pack buffer too small");
+    const TB: usize = 32;
+    let mut block =
+        PACK_POOL.with(|ws| ws.borrow_mut().take_scratch(TB * mo));
+    let mut i0 = 0;
+    while i0 < k {
+        let iend = (i0 + TB).min(k);
+        for i in i0..iend {
+            a.dequantize_row_into(
+                i, &mut block[(i - i0) * mo..(i - i0) * mo + mo]);
+        }
+        let mut j0 = 0;
+        while j0 < mo {
+            let jend = (j0 + TB).min(mo);
+            for i in i0..iend {
+                for j in j0..jend {
+                    at[j * k + i] = block[(i - i0) * mo + j];
+                }
+            }
+            j0 = jend;
+        }
+        i0 = iend;
+    }
+    PACK_POOL.with(|ws| ws.borrow_mut().recycle(block));
+}
+
+/// Run `f` against the transposed image of a quantized TN operand
+/// (see [`pack_a_tn_quant`]); buffer from the thread-local pool.
+pub fn with_packed_a_tn_quant<R>(
+    a: &QuantMat,
+    f: impl FnOnce(&[f32]) -> R,
+) -> R {
+    // Scratch draw: pack_a_tn_quant writes all k·mo elements.
+    let mut buf = PACK_POOL
+        .with(|ws| ws.borrow_mut().take_scratch(a.rows() * a.cols()));
+    pack_a_tn_quant(a, &mut buf);
+    let r = f(&buf);
+    PACK_POOL.with(|ws| ws.borrow_mut().recycle(buf));
+    r
+}
+
+/// Run `f` on a pool-backed scratch slice of `len` **unspecified**
+/// elements (callers must overwrite whatever they read).  The packed
+/// backend's column fan-out uses this for its per-thread output slabs.
+pub fn with_scratch<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    let mut buf = PACK_POOL.with(|ws| ws.borrow_mut().take_scratch(len));
+    let r = f(&mut buf);
+    PACK_POOL.with(|ws| ws.borrow_mut().recycle(buf));
+    r
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -201,6 +321,79 @@ mod tests {
             with_packed_b(&b, 24, 24, |p| {
                 assert_eq!(p[0], 1.0);
             });
+        }
+        assert_eq!(pool_fresh_allocs(), warm, "steady-state pack allocated");
+    }
+
+    #[test]
+    fn quant_nt_pack_image_matches_pack_b_of_decoded_transpose() {
+        use crate::linalg::quant::{QuantKind, QuantMat};
+        use crate::math::matrix::Matrix;
+        use crate::math::rng::Pcg64;
+        let mut rng = Pcg64::new(41);
+        // shapes crossing the NR strip boundary and the odd-k edge
+        for (n, k) in [(1usize, 1usize), (5, 3), (16, 8), (17, 9),
+                       (33, 40)] {
+            let b = Matrix::gaussian(n, k, 1.0, &mut rng);
+            for kind in [QuantKind::F32, QuantKind::Bf16, QuantKind::Int8]
+            {
+                let qm = QuantMat::encode(&b, kind);
+                let mut img = vec![7.0f32; packed_len(k, n)];
+                pack_b_nt_quant(&qm, &mut img);
+                // reference: decode, transpose, pack with the f32 path
+                let bt = qm.to_matrix_transposed(); // k×n
+                let mut want = vec![9.0f32; packed_len(k, n)];
+                pack_b(&bt.data, k, n, &mut want);
+                for (i, (x, y)) in img.iter().zip(&want).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(),
+                               "{} ({n}x{k}) packed[{i}]: {x} vs {y}",
+                               kind.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_a_tn_pack_matches_f32_pack_of_decoded() {
+        use crate::linalg::quant::{QuantKind, QuantMat};
+        use crate::math::matrix::Matrix;
+        use crate::math::rng::Pcg64;
+        let mut rng = Pcg64::new(43);
+        // shapes crossing the 32-row decode/transpose block
+        for (k, mo) in [(1usize, 1usize), (3, 5), (31, 33), (40, 64)] {
+            let a = Matrix::gaussian(k, mo, 1.0, &mut rng);
+            for kind in [QuantKind::F32, QuantKind::Bf16, QuantKind::Int8]
+            {
+                let qm = QuantMat::encode(&a, kind);
+                let mut at = vec![-1.0f32; k * mo];
+                pack_a_tn_quant(&qm, &mut at);
+                let dec = qm.to_matrix();
+                let mut want = vec![-2.0f32; k * mo];
+                pack_a_tn(&dec.data, k, mo, &mut want);
+                for (i, (x, y)) in at.iter().zip(&want).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(),
+                               "{} ({k}x{mo}) at[{i}]", kind.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_pack_pool_reuses_buffers_after_warmup() {
+        use crate::linalg::quant::{QuantKind, QuantMat};
+        use crate::math::matrix::Matrix;
+        use crate::math::rng::Pcg64;
+        let mut rng = Pcg64::new(47);
+        let qm = QuantMat::encode(&Matrix::gaussian(24, 24, 1.0, &mut rng),
+                                  QuantKind::Bf16);
+        with_packed_b_nt_quant(&qm, |p| {
+            assert_eq!(p.len(), packed_len(24, 24));
+        });
+        with_packed_a_tn_quant(&qm, |at| assert_eq!(at.len(), 24 * 24));
+        let warm = pool_fresh_allocs();
+        for _ in 0..8 {
+            with_packed_b_nt_quant(&qm, |p| assert!(p[0].is_finite()));
+            with_packed_a_tn_quant(&qm, |at| assert!(at[0].is_finite()));
         }
         assert_eq!(pool_fresh_allocs(), warm, "steady-state pack allocated");
     }

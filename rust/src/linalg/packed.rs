@@ -36,9 +36,26 @@
 //!   auto-vectorizes for the build target elsewhere.  The NT kernel
 //!   replaces the old unrolled `dot8` with 8-lane loads and 4-way B-row
 //!   blocking (each A-row load feeds four dot products).
-//! * **Row-parallelism** identical to `Tiled` (scoped threads, disjoint
-//!   output rows, deterministic per thread count); packing happens once
-//!   on the dispatching thread, workers share the panel read-only.
+//! * **Row- or column-parallelism**: the default fan-out is `Tiled`'s
+//!   (scoped threads, disjoint output rows) — but row threading clamps
+//!   to the row count, so wide-short outputs (a 4×3072 site product)
+//!   used to run on 4 threads no matter how many cores exist.  When
+//!   splitting the *column* dimension yields strictly more workers
+//!   ([`run_nn`]/[`run_nt`]), each thread now runs the unchanged
+//!   kernel over its own strip-aligned column block into a pool slab
+//!   and the dispatcher scatters rows back — per-element arithmetic
+//!   (and hence bits) is identical to the serial kernel because every
+//!   output element's accumulation order never depends on which
+//!   column block computes it.  Packing still happens once on the
+//!   dispatching thread; workers share the panel read-only.
+//! * **Quantized-source entries** ([`Packed::gemm_nt_quant_into`],
+//!   [`Packed::gemm_grouped_nt_quant_into`]): bf16/int8 cache residents
+//!   ([`super::quant::QuantMat`]) multiply through a pack-fused decode
+//!   ([`super::pack::pack_b_nt_quant`]) — an NT product with quantized
+//!   B becomes the NN micro-kernel over the decoded transpose's pack
+//!   image, so the f32 kernels stay untouched and no full-size f32
+//!   dequant buffer materializes.  F32 payloads delegate to the plain
+//!   NT path, keeping the default serving pipeline bit-identical.
 //!
 //! Accumulation order per output element is ascending k within each
 //! KC-block and blocks are added in order — a reassociation of the
@@ -47,6 +64,7 @@
 //! `linalg::tests`).
 
 use crate::linalg::pack::{self, NR};
+use crate::linalg::quant::QuantMat;
 use crate::linalg::simd::{self, F32x8};
 use crate::linalg::tiled::{parallel_rows, plan_threads, DEFAULT_MIN_PAR_FLOPS};
 use crate::linalg::{
@@ -292,6 +310,98 @@ fn nt_kernel(a: &[f32], b: &[f32], out: &mut [f32], rows: usize, k: usize,
     }
 }
 
+// ---------------------------------------------------------------------
+// Fan-out planning: row-parallel by default, column-parallel for
+// wide-short outputs.  Row threading clamps to `rows`, so a 4×3072
+// product runs ≤4 threads however many cores exist; when a column
+// split plans strictly more workers, each worker runs the *unchanged*
+// kernel over its own column block — NN blocks are strip-aligned so a
+// packed sub-range is itself a valid pack image; NT blocks are row
+// ranges of B.  Workers write m×jw slabs drawn from the pack pool and
+// the dispatcher scatters rows back into `out`.  Every output element
+// is produced by the same kernel arithmetic on the same operand bytes
+// regardless of the split, so results are bit-identical to the serial
+// kernel (and therefore to the row-parallel fan-out).
+// ---------------------------------------------------------------------
+
+/// NN sweep `out(m×n) = a(m×k) · B` over a pre-packed `k×n` image,
+/// choosing the fan-out (see above).  Also the engine of the TN and
+/// quantized-NT entries, which reduce to NN over a packed operand.
+fn run_nn(ad: &[f32], packed: &[f32], od: &mut [f32], m: usize, k: usize,
+          n: usize, threads: usize, min_par_flops: usize) {
+    let flops = m * k.max(1) * n;
+    let nt = plan_threads(threads, min_par_flops, m, flops);
+    let strips = n.div_ceil(NR);
+    let ntc = plan_threads(threads, min_par_flops, strips, flops);
+    if ntc <= nt {
+        parallel_rows(od, m, n, nt, |row0, chunk| {
+            let rows_here = chunk.len() / n;
+            nn_kernel(&ad[row0 * k..(row0 + rows_here) * k], packed,
+                      chunk, rows_here, k, n);
+        });
+        return;
+    }
+    // Column fan-out: cb columns per block, strip-aligned so each
+    // block's packed sub-range is a self-contained pack image.
+    let cb = strips.div_ceil(ntc) * NR;
+    let nblocks = n.div_ceil(cb);
+    pack::with_scratch(m * cb * nblocks, |slab| {
+        parallel_rows(slab, nblocks, m * cb, nblocks, |blk, chunk| {
+            let j0 = blk * cb;
+            let jw = cb.min(n - j0);
+            let s0 = j0 / NR;
+            let sw = jw.div_ceil(NR);
+            nn_kernel(ad, &packed[s0 * k * NR..(s0 + sw) * k * NR],
+                      &mut chunk[..m * jw], m, k, jw);
+        });
+        for blk in 0..nblocks {
+            let j0 = blk * cb;
+            let jw = cb.min(n - j0);
+            let chunk = &slab[blk * m * cb..blk * m * cb + m * jw];
+            for i in 0..m {
+                od[i * n + j0..i * n + j0 + jw]
+                    .copy_from_slice(&chunk[i * jw..(i + 1) * jw]);
+            }
+        }
+    });
+}
+
+/// NT sweep `out(rows×n) = a(rows×k) · b(n×k)ᵀ` choosing the fan-out
+/// (column blocks are B-row ranges; see the planning comment above).
+fn run_nt(ad: &[f32], bd: &[f32], od: &mut [f32], rows: usize, k: usize,
+          n: usize, threads: usize, min_par_flops: usize) {
+    let flops = rows * k.max(1) * n;
+    let nt = plan_threads(threads, min_par_flops, rows, flops);
+    let ntc = plan_threads(threads, min_par_flops, n, flops);
+    if ntc <= nt {
+        parallel_rows(od, rows, n, nt, |row0, chunk| {
+            let rows_here = chunk.len() / n;
+            nt_kernel(&ad[row0 * k..(row0 + rows_here) * k], bd, chunk,
+                      rows_here, k, n);
+        });
+        return;
+    }
+    let cb = n.div_ceil(ntc);
+    let nblocks = n.div_ceil(cb);
+    pack::with_scratch(rows * cb * nblocks, |slab| {
+        parallel_rows(slab, nblocks, rows * cb, nblocks, |blk, chunk| {
+            let j0 = blk * cb;
+            let jw = cb.min(n - j0);
+            nt_kernel(ad, &bd[j0 * k..(j0 + jw) * k],
+                      &mut chunk[..rows * jw], rows, k, jw);
+        });
+        for blk in 0..nblocks {
+            let j0 = blk * cb;
+            let jw = cb.min(n - j0);
+            let chunk = &slab[blk * rows * cb..blk * rows * cb + rows * jw];
+            for i in 0..rows {
+                od[i * n + j0..i * n + j0 + jw]
+                    .copy_from_slice(&chunk[i * jw..(i + 1) * jw]);
+            }
+        }
+    });
+}
+
 impl Backend for Packed {
     fn name(&self) -> &'static str {
         "packed"
@@ -307,15 +417,11 @@ impl Backend for Packed {
             out.data.fill(0.0);
             return;
         }
-        let nt = plan_threads(self.threads, self.min_par_flops, m, m * k * c);
         let (ad, bd) = (&a.data, &b.data);
         let od = &mut out.data;
         pack::with_packed_b(bd, k, c, |packed| {
-            parallel_rows(od, m, c, nt, |row0, chunk| {
-                let rows_here = chunk.len() / c;
-                nn_kernel(&ad[row0 * k..(row0 + rows_here) * k], packed,
-                          chunk, rows_here, k, c);
-            });
+            run_nn(ad, packed, od, m, k, c, self.threads,
+                   self.min_par_flops);
         });
     }
 
@@ -325,14 +431,8 @@ impl Backend for Packed {
         if m == 0 || n == 0 {
             return;
         }
-        let nt = plan_threads(self.threads, self.min_par_flops, m,
-                              m * k.max(1) * n);
-        let (ad, bd) = (&a.data, &b.data);
-        parallel_rows(&mut out.data, m, n, nt, |row0, chunk| {
-            let rows_here = chunk.len() / n;
-            nt_kernel(&ad[row0 * k..(row0 + rows_here) * k], bd, chunk,
-                      rows_here, k, n);
-        });
+        run_nt(&a.data, &b.data, &mut out.data, m, k, n, self.threads,
+               self.min_par_flops);
     }
 
     fn gemm_tn_into(&self, a: &Matrix, b: &Matrix, out: &mut Matrix) {
@@ -345,8 +445,6 @@ impl Backend for Packed {
             out.data.fill(0.0);
             return;
         }
-        let nt = plan_threads(self.threads, self.min_par_flops, mo,
-                              mo * k * n);
         let (ad, bd) = (&a.data, &b.data);
         let od = &mut out.data;
         pack::with_packed_b(bd, k, n, |packed| {
@@ -354,11 +452,8 @@ impl Backend for Packed {
             // columns becomes A'·B on contiguous rows — the NN kernel
             // verbatim, with identical accumulation order.
             pack::with_packed_a_tn(ad, k, mo, |at| {
-                parallel_rows(od, mo, n, nt, |row0, chunk| {
-                    let rows_here = chunk.len() / n;
-                    nn_kernel(&at[row0 * k..(row0 + rows_here) * k],
-                              packed, chunk, rows_here, k, n);
-                });
+                run_nn(at, packed, od, mo, k, n, self.threads,
+                       self.min_par_flops);
             });
         });
     }
@@ -403,5 +498,127 @@ impl Backend for Packed {
                 r += take;
             }
         });
+    }
+}
+
+// ---------------------------------------------------------------------
+// Quantized-source entries.  These live on `Packed` (not the Backend
+// trait): quantized residents are a packed-backend feature — the pack
+// step is where the up-convert fuses — and callers hold a concrete
+// `Packed` on the serve path.  Other backends go through
+// `QuantMat::to_matrix` at the call site (correctness-only fallback).
+// ---------------------------------------------------------------------
+
+impl Packed {
+    /// `out = a · bᵀ` where `b` is a quantized `n×k` resident.
+    ///
+    /// * F32 payload → delegates to [`Backend::gemm_nt_into`] on the
+    ///   wrapped matrix: the default `cache_quant = "f32"` policy is
+    ///   bit-identical to the pre-quantization serving path.
+    /// * bf16/int8 → the product is computed as `a · decode(b)ᵀ` via
+    ///   the NN micro-kernel over a pack-fused decode
+    ///   ([`pack::pack_b_nt_quant`]).  The pack image is bit-identical
+    ///   to packing the decoded transpose, so the result matches the
+    ///   regen→quantize→dequantize reference composition (an NN
+    ///   product against [`QuantMat::to_matrix_transposed`]) to the
+    ///   bit, at every thread count.
+    pub fn gemm_nt_quant_into(&self, a: &Matrix, b: &QuantMat,
+                              out: &mut Matrix) {
+        assert_eq!(a.cols, b.cols(),
+                   "gemm_nt_quant shape mismatch: ({}x{})·({}x{})ᵀ",
+                   a.rows, a.cols, b.rows(), b.cols());
+        assert_eq!((out.rows, out.cols), (a.rows, b.rows()),
+                   "gemm_nt_quant out shape: have {}x{}, want {}x{}",
+                   out.rows, out.cols, a.rows, b.rows());
+        if let Some(bm) = b.as_f32() {
+            self.gemm_nt_into(a, bm, out);
+            return;
+        }
+        let (m, k, n) = (a.rows, a.cols, b.rows());
+        if m == 0 || n == 0 {
+            return;
+        }
+        if k == 0 {
+            out.data.fill(0.0);
+            return;
+        }
+        let ad = &a.data;
+        let od = &mut out.data;
+        pack::with_packed_b_nt_quant(b, |packed| {
+            run_nn(ad, packed, od, m, k, n, self.threads,
+                   self.min_par_flops);
+        });
+    }
+
+    /// Grouped (block-diagonal) NT over quantized per-segment
+    /// residents: row segment `g` of `a` multiplies `bs[g]ᵀ` into the
+    /// matching rows of `out`.  An all-F32 group takes the fused
+    /// [`Backend::gemm_grouped_nt_into`] sweep verbatim (bit-identical
+    /// to the pre-quantization grouped path); otherwise segments run
+    /// one at a time — quantized ones through the pack-fused NN route,
+    /// F32 ones through the NT kernel — each bit-identical to its
+    /// single-call [`Packed::gemm_nt_quant_into`] counterpart.  Pack
+    /// scratch is pool-recycled across segments, so a steady-state
+    /// grouped sweep stays allocation-free after warmup.
+    pub fn gemm_grouped_nt_quant_into(&self, a: &Matrix,
+                                      bs: &[&QuantMat], segs: &[usize],
+                                      out: &mut Matrix) {
+        assert_eq!(bs.len(), segs.len(),
+                   "gemm_grouped_nt_quant: {} B operands vs {} segments",
+                   bs.len(), segs.len());
+        let total: usize = segs.iter().sum();
+        assert_eq!(total, a.rows,
+                   "gemm_grouped_nt_quant: segments cover {total} rows, \
+                    a has {}",
+                   a.rows);
+        assert_eq!(out.rows, a.rows,
+                   "gemm_grouped_nt_quant out rows: have {}, want {}",
+                   out.rows, a.rows);
+        let (k, n) = (a.cols, out.cols);
+        for (g, b) in bs.iter().enumerate() {
+            assert_eq!(b.cols(), k,
+                       "gemm_grouped_nt_quant segment {g}: \
+                        ({}x{k})·({}x{})ᵀ",
+                       a.rows, b.rows(), b.cols());
+            assert_eq!(b.rows(), n,
+                       "gemm_grouped_nt_quant segment {g}: b has {} \
+                        rows, out has {n} cols",
+                       b.rows());
+        }
+        if bs.iter().all(|b| b.as_f32().is_some()) {
+            let mut refs: Vec<&Matrix> = Vec::with_capacity(bs.len());
+            for b in bs {
+                if let Some(m) = b.as_f32() {
+                    refs.push(m);
+                }
+            }
+            self.gemm_grouped_nt_into(a, &refs, segs, out);
+            return;
+        }
+        if n == 0 {
+            return;
+        }
+        let mut row = 0usize;
+        for (g, &rows) in segs.iter().enumerate() {
+            if rows == 0 {
+                continue;
+            }
+            let asub = &a.data[row * k..(row + rows) * k];
+            let osub = &mut out.data[row * n..(row + rows) * n];
+            match bs[g].as_f32() {
+                Some(bm) => {
+                    run_nt(asub, &bm.data, osub, rows, k, n,
+                           self.threads, self.min_par_flops);
+                }
+                None if k == 0 => osub.fill(0.0),
+                None => {
+                    pack::with_packed_b_nt_quant(bs[g], |packed| {
+                        run_nn(asub, packed, osub, rows, k, n,
+                               self.threads, self.min_par_flops);
+                    });
+                }
+            }
+            row += rows;
+        }
     }
 }

@@ -1,0 +1,536 @@
+//! Quantized storage codecs for cache-resident operands (bf16 / int8).
+//!
+//! The serving layer's scaling currency is adapter capacity per GiB:
+//! the shared projection LRU holds seed-regenerated L/R panels, and
+//! every byte saved per panel multiplies how many adapters stay hot.
+//! This module provides the two storage codecs and the container type
+//! ([`QuantMat`]) the cache holds:
+//!
+//! * **bf16** — f32 with the low 16 mantissa bits dropped, rounded to
+//!   nearest-even ([`f32_to_bf16`]).  2 bytes/element, ~3 decimal
+//!   digits of precision, exact for the exponent range of f32.  The
+//!   codec is total: ±inf is preserved and NaN stays NaN (the payload
+//!   is quieted so truncation cannot turn a signalling pattern into
+//!   an infinity).
+//! * **int8 + per-panel scales** — one f32 scale per matrix *row*
+//!   (`scale = amax/127` over the row's finite entries), elements
+//!   stored as `round(x/scale)` clamped to ±127.  1 byte/element plus
+//!   4 bytes per row.  Non-finite policy: NaN encodes to 0, ±inf
+//!   saturates to ±127 (both decode to finite values — the codec is a
+//!   *storage* format for regenerable data, not an IEEE round-trip).
+//!
+//! Decoding is **fused into the packed backend's pack step**
+//! ([`super::pack`]): [`QuantMat::dequantize_row_into`] up-converts one
+//! contiguous source row into a caller buffer (pool scratch in the hot
+//! path), the pack scatters it into NR-wide strips, and the untouched
+//! f32 micro-kernels in [`super::packed`] consume the result.  No
+//! full-size f32 image of a quantized operand ever materializes on the
+//! serve path.  The row up-convert follows the repo's SIMD idiom: one
+//! `#[inline(always)]` portable body, an AVX2 `#[target_feature]`
+//! clone on x86_64 (bf16→f32 is a shift+widen, int8 is widen+scale —
+//! both auto-vectorize under wide registers), dispatched once per call
+//! via [`super::simd::level`].
+
+use std::sync::Arc;
+
+use crate::linalg::simd;
+use crate::math::matrix::Matrix;
+
+// ---------------------------------------------------------------- bf16
+
+/// f32 → bf16 bits, round-to-nearest-even.  Total: ±inf maps to the
+/// bf16 infinities; NaN keeps its sign/exponent and gets the top
+/// mantissa bit forced so the result is a quiet NaN even when every
+/// surviving payload bit would otherwise be zero.
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    // RNE: add 0x7fff plus the parity of the keep-bit; ties (exactly
+    // 0x8000 below) round toward the even truncation.  Cannot overflow:
+    // NaN is handled above and inf + 0x8000 stays below 2^32.
+    let round = 0x7fff + ((bits >> 16) & 1);
+    ((bits + round) >> 16) as u16
+}
+
+/// bf16 bits → f32 (exact: shift+widen, every bf16 value is an f32).
+#[inline(always)]
+pub fn bf16_to_f32(u: u16) -> f32 {
+    f32::from_bits((u as u32) << 16)
+}
+
+// ---------------------------------------------------------------- int8
+
+/// Encode one panel (matrix row): returns the scale.  `amax` scans
+/// finite entries only, so one NaN cannot zero a panel and an inf
+/// cannot blow the scale up to non-finite.
+fn encode_int8_row(src: &[f32], q: &mut [i8]) -> f32 {
+    let mut amax = 0.0f32;
+    for &v in src {
+        let a = v.abs();
+        if a.is_finite() && a > amax {
+            amax = a;
+        }
+    }
+    let scale = if amax == 0.0 { 0.0 } else { amax / 127.0 };
+    let inv = if scale == 0.0 { 0.0 } else { 1.0 / scale };
+    for (dst, &v) in q.iter_mut().zip(src) {
+        *dst = if v.is_nan() {
+            0
+        } else {
+            // finite values land in [-127, 127] by construction of
+            // `inv`; the clamp catches ±inf (→ ±127) and keeps the
+            // symmetric range (a bare cast would saturate -inf to
+            // -128).  An all-zero panel's inf·0 = NaN clamps to NaN
+            // and casts to 0.
+            (v * inv).round().clamp(-127.0, 127.0) as i8
+        };
+    }
+    scale
+}
+
+// -------------------------------------------- row up-convert (SIMD)
+
+#[inline(always)]
+fn bf16_row_body(src: &[u16], out: &mut [f32]) {
+    for (o, &u) in out.iter_mut().zip(src) {
+        *o = bf16_to_f32(u);
+    }
+}
+
+#[inline(always)]
+fn int8_row_body(src: &[i8], scale: f32, out: &mut [f32]) {
+    for (o, &v) in out.iter_mut().zip(src) {
+        *o = v as f32 * scale;
+    }
+}
+
+// SAFETY: callers must guarantee avx2 support — upheld at every call
+// site by dispatching only when `simd::level()` probes Avx2Fma.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn bf16_row_avx2(src: &[u16], out: &mut [f32]) {
+    bf16_row_body(src, out);
+}
+
+// SAFETY: callers must guarantee avx2 support — upheld at every call
+// site by dispatching only when `simd::level()` probes Avx2Fma.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn int8_row_avx2(src: &[i8], scale: f32, out: &mut [f32]) {
+    int8_row_body(src, scale, out);
+}
+
+fn bf16_row(src: &[u16], out: &mut [f32]) {
+    match simd::level() {
+        #[cfg(target_arch = "x86_64")]
+        simd::Level::Avx2Fma => unsafe {
+            // SAFETY: level() returned Avx2Fma ⇒ CPU has avx2.
+            bf16_row_avx2(src, out)
+        },
+        _ => bf16_row_body(src, out),
+    }
+}
+
+fn int8_row(src: &[i8], scale: f32, out: &mut [f32]) {
+    match simd::level() {
+        #[cfg(target_arch = "x86_64")]
+        simd::Level::Avx2Fma => unsafe {
+            // SAFETY: level() returned Avx2Fma ⇒ CPU has avx2.
+            int8_row_avx2(src, scale, out)
+        },
+        _ => int8_row_body(src, scale, out),
+    }
+}
+
+// ------------------------------------------------------------- policy
+
+/// Storage codec selector for cache-resident operands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum QuantKind {
+    /// Uncompressed f32 — the bit-identical default.
+    F32,
+    /// bf16, truncation rounded to nearest-even (2 bytes/element).
+    Bf16,
+    /// int8 with one f32 scale per row panel (1 byte/element + 4/row).
+    Int8,
+}
+
+impl QuantKind {
+    pub fn parse(s: &str) -> anyhow::Result<QuantKind> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "none" => QuantKind::F32,
+            "bf16" | "bfloat16" => QuantKind::Bf16,
+            "int8" | "i8" => QuantKind::Int8,
+            other => anyhow::bail!(
+                "unknown cache quantization `{other}` (f32|bf16|int8)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            QuantKind::F32 => "f32",
+            QuantKind::Bf16 => "bf16",
+            QuantKind::Int8 => "int8",
+        }
+    }
+
+    /// Payload bytes of a `rows×cols` matrix stored under this codec
+    /// (the cache ledger counts exactly this).
+    pub fn bytes_for(&self, rows: usize, cols: usize) -> usize {
+        match self {
+            QuantKind::F32 => rows * cols * 4,
+            QuantKind::Bf16 => rows * cols * 2,
+            QuantKind::Int8 => rows * cols + rows * 4,
+        }
+    }
+}
+
+// ---------------------------------------------------------- container
+
+enum Payload {
+    F32(Arc<Matrix>),
+    Bf16(Vec<u16>),
+    Int8 { q: Vec<i8>, scales: Vec<f32> },
+}
+
+/// A row-major matrix stored under one of the [`QuantKind`] codecs.
+/// The F32 variant wraps the source `Arc<Matrix>` without copying, so
+/// the default policy has zero encode cost and bit-identical reads.
+pub struct QuantMat {
+    rows: usize,
+    cols: usize,
+    payload: Payload,
+}
+
+impl QuantMat {
+    /// Encode a borrowed matrix (F32 clones the data into a fresh Arc).
+    pub fn encode(m: &Matrix, kind: QuantKind) -> QuantMat {
+        match kind {
+            QuantKind::F32 => QuantMat::from_arc(Arc::new(m.clone())),
+            _ => QuantMat::encode_parts(m.rows, m.cols, &m.data, kind),
+        }
+    }
+
+    /// Encode an owned matrix — the F32 path wraps without copying.
+    pub fn encode_owned(m: Matrix, kind: QuantKind) -> QuantMat {
+        match kind {
+            QuantKind::F32 => QuantMat::from_arc(Arc::new(m)),
+            _ => QuantMat::encode_parts(m.rows, m.cols, &m.data, kind),
+        }
+    }
+
+    /// Wrap an already-shared matrix as an uncompressed resident.
+    pub fn from_arc(m: Arc<Matrix>) -> QuantMat {
+        QuantMat { rows: m.rows, cols: m.cols, payload: Payload::F32(m) }
+    }
+
+    fn encode_parts(rows: usize, cols: usize, data: &[f32],
+                    kind: QuantKind) -> QuantMat {
+        let payload = match kind {
+            QuantKind::F32 => {
+                Payload::F32(Arc::new(Matrix::from_vec(rows, cols,
+                                                       data.to_vec())))
+            }
+            QuantKind::Bf16 => {
+                Payload::Bf16(data.iter().map(|&v| f32_to_bf16(v))
+                                  .collect())
+            }
+            QuantKind::Int8 => {
+                let mut q = vec![0i8; rows * cols];
+                let mut scales = vec![0.0f32; rows];
+                for r in 0..rows {
+                    scales[r] = encode_int8_row(
+                        &data[r * cols..(r + 1) * cols],
+                        &mut q[r * cols..(r + 1) * cols],
+                    );
+                }
+                Payload::Int8 { q, scales }
+            }
+        };
+        QuantMat { rows, cols, payload }
+    }
+
+    pub fn kind(&self) -> QuantKind {
+        match &self.payload {
+            Payload::F32(_) => QuantKind::F32,
+            Payload::Bf16(_) => QuantKind::Bf16,
+            Payload::Int8 { .. } => QuantKind::Int8,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Resident payload bytes (what the cache ledger charges).
+    pub fn bytes(&self) -> usize {
+        self.kind().bytes_for(self.rows, self.cols)
+    }
+
+    /// The uncompressed matrix, when this resident is stored as f32 —
+    /// the fast paths key on this to stay bit-identical to the
+    /// pre-quantization serving pipeline.
+    pub fn as_f32(&self) -> Option<&Arc<Matrix>> {
+        match &self.payload {
+            Payload::F32(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Up-convert one row into `out[..cols]` (the pack-fusion entry:
+    /// contiguous reads, SIMD-dispatched, no allocation).
+    pub fn dequantize_row_into(&self, row: usize, out: &mut [f32]) {
+        let n = self.cols;
+        let dst = &mut out[..n];
+        match &self.payload {
+            Payload::F32(m) => {
+                dst.copy_from_slice(&m.data[row * n..(row + 1) * n]);
+            }
+            Payload::Bf16(d) => {
+                bf16_row(&d[row * n..(row + 1) * n], dst);
+            }
+            Payload::Int8 { q, scales } => {
+                int8_row(&q[row * n..(row + 1) * n], scales[row], dst);
+            }
+        }
+    }
+
+    /// Full decode to a fresh `rows×cols` matrix (slow path: VJP /
+    /// non-packed backends / tests — never the packed serve path).
+    pub fn to_matrix(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            self.dequantize_row_into(
+                r, &mut out.data[r * self.cols..(r + 1) * self.cols]);
+        }
+        out
+    }
+
+    /// Full decode to the transposed `cols×rows` matrix.  The quant
+    /// acceptance tests use this to build the reference composition:
+    /// an NT product with quantized B equals an NN product against the
+    /// decoded transpose, and the packed backend computes exactly that
+    /// (same pack image, same micro-kernel) — bit-identically.
+    pub fn to_matrix_transposed(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        let mut rowbuf = vec![0.0f32; self.cols];
+        for r in 0..self.rows {
+            self.dequantize_row_into(r, &mut rowbuf);
+            for (c, &v) in rowbuf.iter().enumerate() {
+                out.data[c * self.rows + r] = v;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Pcg64;
+    use crate::util::prop;
+
+    fn roundtrip_bf16(x: f32) -> f32 {
+        bf16_to_f32(f32_to_bf16(x))
+    }
+
+    #[test]
+    fn bf16_exact_on_representable_values() {
+        // Values whose low 16 mantissa bits are zero round-trip exactly.
+        for x in [0.0f32, -0.0, 1.0, -1.0, 2.0, 0.5, -0.375, 256.0,
+                  1.5e38, -1.5e-38] {
+            let y = roundtrip_bf16(x);
+            assert_eq!(x.to_bits(), y.to_bits(), "{x} -> {y}");
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_ties_to_even() {
+        // Construct a mantissa exactly halfway between two bf16
+        // neighbours: keep-bit even ⇒ truncate, keep-bit odd ⇒ round up.
+        let even = f32::from_bits(0x3f80_8000); // keep bits ...0, tie
+        assert_eq!(f32_to_bf16(even), 0x3f80, "tie at even truncates");
+        let odd = f32::from_bits(0x3f81_8000); // keep bits ...1, tie
+        assert_eq!(f32_to_bf16(odd), 0x3f82, "tie at odd rounds up");
+        // And a value just above the tie always rounds up.
+        let above = f32::from_bits(0x3f80_8001);
+        assert_eq!(f32_to_bf16(above), 0x3f81);
+        let below = f32::from_bits(0x3f80_7fff);
+        assert_eq!(f32_to_bf16(below), 0x3f80);
+    }
+
+    #[test]
+    fn bf16_nonfinite_policy() {
+        assert_eq!(roundtrip_bf16(f32::INFINITY), f32::INFINITY);
+        assert_eq!(roundtrip_bf16(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        assert!(roundtrip_bf16(f32::NAN).is_nan());
+        // A NaN whose payload lives entirely in the dropped bits must
+        // stay NaN (the encoder quiets the surviving mantissa).
+        let sneaky = f32::from_bits(0x7f80_0001);
+        assert!(sneaky.is_nan());
+        assert!(roundtrip_bf16(sneaky).is_nan());
+        // Rounding can (correctly) overflow the largest finite into inf.
+        let near_max = f32::from_bits(0x7f7f_ffff);
+        assert_eq!(roundtrip_bf16(near_max), f32::INFINITY);
+    }
+
+    #[test]
+    fn bf16_subnormals_keep_sign_and_magnitude_order() {
+        // f32 subnormals all collapse into bf16's subnormal range; the
+        // codec must stay total and monotone there.
+        let tiny = f32::from_bits(1); // smallest positive subnormal
+        let r = roundtrip_bf16(tiny);
+        assert!(r >= 0.0 && r <= 2.0 * tiny.max(f32::MIN_POSITIVE));
+        let a = f32::from_bits(0x0001_0000);
+        let b = f32::from_bits(0x0002_0000);
+        assert!(roundtrip_bf16(a) <= roundtrip_bf16(b));
+        assert_eq!(roundtrip_bf16(-0.0f32).to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn bf16_roundtrip_relative_error_bound() {
+        // 8 mantissa bits ⇒ relative error ≤ 2^-8 = 1/256 for normals.
+        prop::for_all("bf16 rel err <= 2^-8", 50, |rng| {
+            for _ in 0..64 {
+                let x = (rng.normal() as f32) * 10.0;
+                let y = roundtrip_bf16(x);
+                if x != 0.0 {
+                    assert!(((x - y) / x).abs() <= 1.0 / 256.0,
+                            "{x} -> {y}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn int8_roundtrip_error_bounded_by_half_step() {
+        prop::for_all("int8 err <= scale/2", 30, |rng| {
+            let n = prop::int_in(rng, 1, 64);
+            let src: Vec<f32> =
+                (0..n).map(|_| rng.normal() as f32 * 3.0).collect();
+            let mut q = vec![0i8; n];
+            let scale = encode_int8_row(&src, &mut q);
+            for (&v, &qv) in src.iter().zip(&q) {
+                let dec = qv as f32 * scale;
+                assert!((v - dec).abs() <= scale * 0.5 + 1e-12,
+                        "{v} -> {dec} (scale {scale})");
+            }
+        });
+    }
+
+    #[test]
+    fn int8_all_zero_panel_has_zero_scale() {
+        let src = [0.0f32; 16];
+        let mut q = [1i8; 16];
+        let scale = encode_int8_row(&src, &mut q);
+        assert_eq!(scale, 0.0);
+        assert!(q.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn int8_outlier_dominates_panel_scale() {
+        // One large entry sets the scale; small entries collapse toward
+        // zero but the outlier itself is represented near-exactly.
+        let mut src = [1e-3f32; 32];
+        src[7] = 127.0;
+        let mut q = [0i8; 32];
+        let scale = encode_int8_row(&src, &mut q);
+        assert!((scale - 1.0).abs() < 1e-6);
+        assert_eq!(q[7], 127);
+        assert!(q.iter().enumerate().all(|(i, &v)| i == 7 || v == 0));
+    }
+
+    #[test]
+    fn int8_nonfinite_policy() {
+        let src = [1.0f32, f32::NAN, f32::INFINITY, f32::NEG_INFINITY];
+        let mut q = [0i8; 4];
+        let scale = encode_int8_row(&src, &mut q);
+        assert!((scale - 1.0 / 127.0).abs() < 1e-9, "amax over finite");
+        assert_eq!(q, [127, 0, 127, -127]);
+        // All-nonfinite panel: zero scale, NaN→0, inf casts saturate
+        // through the zero scale to a stored value that decodes to 0.
+        let src = [f32::NAN, f32::INFINITY];
+        let mut q = [9i8; 2];
+        let scale = encode_int8_row(&src, &mut q);
+        assert_eq!(scale, 0.0);
+        assert!(q.iter().all(|&v| v as f32 * scale == 0.0));
+    }
+
+    #[test]
+    fn kind_parse_and_bytes() {
+        assert_eq!(QuantKind::parse("f32").unwrap(), QuantKind::F32);
+        assert_eq!(QuantKind::parse("BF16").unwrap(), QuantKind::Bf16);
+        assert_eq!(QuantKind::parse("int8").unwrap(), QuantKind::Int8);
+        assert!(QuantKind::parse("fp4").is_err());
+        assert_eq!(QuantKind::F32.bytes_for(3, 5), 60);
+        assert_eq!(QuantKind::Bf16.bytes_for(3, 5), 30);
+        assert_eq!(QuantKind::Int8.bytes_for(3, 5), 15 + 12);
+    }
+
+    #[test]
+    fn quantmat_f32_wraps_without_copy_and_reads_exact() {
+        let mut rng = Pcg64::new(5);
+        let m = Arc::new(Matrix::gaussian(7, 9, 1.0, &mut rng));
+        let qm = QuantMat::from_arc(Arc::clone(&m));
+        assert_eq!(qm.kind(), QuantKind::F32);
+        assert!(Arc::ptr_eq(qm.as_f32().unwrap(), &m));
+        assert_eq!(qm.bytes(), 7 * 9 * 4);
+        let dec = qm.to_matrix();
+        assert_eq!(dec.data, m.data);
+    }
+
+    #[test]
+    fn quantmat_row_decode_matches_full_decode_and_transpose() {
+        let mut rng = Pcg64::new(6);
+        let m = Matrix::gaussian(11, 13, 2.0, &mut rng);
+        for kind in [QuantKind::F32, QuantKind::Bf16, QuantKind::Int8] {
+            let qm = QuantMat::encode(&m, kind);
+            assert_eq!(qm.kind(), kind);
+            assert_eq!((qm.rows(), qm.cols()), (11, 13));
+            assert_eq!(qm.bytes(), kind.bytes_for(11, 13));
+            let full = qm.to_matrix();
+            let mut row = vec![0.0f32; 13];
+            for r in 0..11 {
+                qm.dequantize_row_into(r, &mut row);
+                assert_eq!(&full.data[r * 13..(r + 1) * 13], &row[..],
+                           "{} row {r}", kind.name());
+            }
+            let t = qm.to_matrix_transposed();
+            for r in 0..11 {
+                for c in 0..13 {
+                    assert_eq!(full.at(r, c).to_bits(),
+                               t.at(c, r).to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantmat_decode_error_within_codec_budget() {
+        let mut rng = Pcg64::new(7);
+        let m = Matrix::gaussian(16, 24, 1.0, &mut rng);
+        let amax_rows: Vec<f32> = (0..16)
+            .map(|r| m.row(r).iter().fold(0.0f32, |a, v| a.max(v.abs())))
+            .collect();
+        let bf = QuantMat::encode(&m, QuantKind::Bf16).to_matrix();
+        for (x, y) in m.data.iter().zip(&bf.data) {
+            assert!((x - y).abs() <= x.abs() / 256.0 + 1e-12);
+        }
+        let i8m = QuantMat::encode(&m, QuantKind::Int8).to_matrix();
+        for r in 0..16 {
+            let half_step = amax_rows[r] / 127.0 * 0.5;
+            for c in 0..24 {
+                assert!((m.at(r, c) - i8m.at(r, c)).abs()
+                            <= half_step + 1e-12,
+                        "[{r},{c}]");
+            }
+        }
+    }
+}

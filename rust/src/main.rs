@@ -181,7 +181,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 /// synthetic Zipf workloads and write the `serving` (single-site),
 /// `serving_model` (whole adapted model), and opt-in `serving_wire` /
 /// `serving_tail` (fused vs per-adapter batching) / `serving_methods`
-/// (cross-method adapter-zoo table) sections of the
+/// (cross-method adapter-zoo table) / `serving_quant` (f32 vs bf16 vs
+/// int8 cache codecs at one thrashing LRU budget) sections of the
 /// canonical `BENCH_linalg.json`.  Knob precedence, highest first: CLI flags,
 /// `COSA_SERVE_*` / `COSA_MODEL_*` env, `[serve]` / `[model]` config
 /// tables.  The preset worker hint (`ServeConfig::resolved`) is
@@ -368,6 +369,42 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         cosa::util::bench::write_bench_json(
             "serving_methods", Json::Arr(mereport.to_json_rows()));
     }
+
+    // Quant scenario (opt-in: --quant): the same whole-model Zipf
+    // workload served three times — f32, bf16, int8 cache codecs — at
+    // one deliberately thrashing LRU byte budget, measuring effective
+    // cache capacity (resident-tensor ratio vs f32), hit rates, and
+    // the machine-independent output RMSE each codec pays ->
+    // `serving_quant` section (one row per codec).  The fleet shape
+    // has its own flags (the default IS the acceptance scenario:
+    // 24 sites x 64 adapters); engine knobs reuse the scenario-1
+    // CLI/env overrides except the cache budget, which stays at the
+    // scenario's thrashing default unless --quant-cache-mb overrides.
+    if args.bool("quant") {
+        use cosa::serve::bench::{run_quant, QuantBenchOpts};
+        let qdefaults = QuantBenchOpts::default();
+        let qopts = QuantBenchOpts {
+            adapters: args.usize("quant-adapters", qdefaults.adapters),
+            requests: args.usize("quant-requests", qdefaults.requests),
+            zipf: args.f64("quant-zipf", qdefaults.zipf),
+            seed: args.u64("seed", qdefaults.seed),
+            cfg: cosa::config::ServeConfig {
+                workers: serve.workers,
+                cache_mb: args
+                    .f64("quant-cache-mb", qdefaults.cfg.cache_mb),
+                ..qdefaults.cfg.clone()
+            },
+            ..qdefaults
+        };
+        anyhow::ensure!(qopts.adapters >= 1,
+                        "--quant-adapters must be >= 1");
+        anyhow::ensure!(qopts.cfg.cache_mb > 0.0,
+                        "--quant-cache-mb must be > 0");
+        let qreport = run_quant(&qopts)?;
+        qreport.print();
+        cosa::util::bench::write_bench_json(
+            "serving_quant", Json::Arr(qreport.to_json_rows()));
+    }
     Ok(())
 }
 
@@ -412,6 +449,8 @@ USAGE: cosa-repro <subcommand> [flags]
           [--skip-model] [--wire --wire-requests N --wire-clients N]
           [--tail --tail-adapters N --tail-requests N --tail-zipf S]
           [--methods --methods-adapters N --methods-requests N]
+          [--quant --quant-adapters N --quant-requests N --quant-zipf S
+           --quant-cache-mb F]
           multi-adapter serving benchmarks: the single-site scenario
           (batched scheduler vs sequential per-request forward ->
           `serving` section of BENCH_linalg.json) plus the whole-model
@@ -427,6 +466,9 @@ USAGE: cosa-repro <subcommand> [flags]
           `serving_tail` section); --methods adds the adapter-zoo
           cross-method table (CoSA vs RoSA vs LoRA fleets plus a
           mixed-method stream in one engine ->
-          `serving_methods` section)
+          `serving_methods` section); --quant adds the quantized-cache
+          codec comparison (f32 vs bf16 vs int8 residents at one
+          thrashing LRU budget: effective-capacity ratio, hit rates,
+          output RMSE vs f32 -> `serving_quant` section)
   list    show artifacts (build with `make artifacts`)
 ";

@@ -24,6 +24,15 @@
 //! scheduler worker materializes every missing tensor of a request
 //! outside the lock in one go ([`ModelPlan::regen_missing`]) rather
 //! than re-taking the lock per site.
+//!
+//! Cache residents are [`QuantMat`]s: regeneration always happens in
+//! f32 (bit-identical to training), then the model's configured cache
+//! codec ([`AdaptedModel::set_cache_quant`]) encodes the tensor **once
+//! at install time** — bf16/int8 residents halve/quarter the byte
+//! budget a projection set occupies, and the Packed backend up-converts
+//! inside its pack step on use.  The default `F32` codec wraps the
+//! regenerated matrix without copying, keeping the serving path
+//! bit-identical to the unquantized engine.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -32,7 +41,7 @@ use std::sync::Arc;
 use crate::adapters::cosa::CosaAdapter;
 use crate::adapters::traits::{self, Adapter, RegenSpec};
 use crate::adapters::Method;
-use crate::linalg::Workspace;
+use crate::linalg::{QuantKind, QuantMat, Workspace};
 use crate::math::matrix::Matrix;
 use crate::model::cache::{CacheStats, ProjectionCache};
 use crate::model::spec::{ModelSpec, SiteShape};
@@ -97,8 +106,9 @@ pub struct SitePlan {
     /// The site's declared regenerable tensors, in declaration order
     /// (= the order `forward_into` expects and the cache is keyed).
     pub specs: Vec<RegenSpec>,
-    /// Aligned with `specs`: cache hits resolved at plan time.
-    pub have: Vec<Option<Arc<Matrix>>>,
+    /// Aligned with `specs`: cache hits resolved at plan time (already
+    /// encoded with whatever codec was active when they were installed).
+    pub have: Vec<Option<Arc<QuantMat>>>,
 }
 
 /// First phase of a whole-request lookup: every site of one adapter,
@@ -144,8 +154,9 @@ impl ModelPlan {
 pub struct SiteHandles {
     pub adapter: Arc<dyn Adapter>,
     /// Materialized regenerable tensors in spec-declaration order
-    /// (CoSA: `[L, R]`; LoRA/RoSA: empty).
-    pub regen: Vec<Arc<Matrix>>,
+    /// (CoSA: `[L, R]`; LoRA/RoSA: empty), encoded with the model's
+    /// cache codec at install time.
+    pub regen: Vec<Arc<QuantMat>>,
 }
 
 /// Everything one *request's* forward needs: all sites of one adapter.
@@ -162,6 +173,7 @@ pub struct AdaptedModel {
     spec: Arc<ModelSpec>,
     adapters: BTreeMap<Arc<str>, ModelAdapter>,
     cache: ProjectionCache,
+    cache_quant: QuantKind,
 }
 
 impl AdaptedModel {
@@ -176,6 +188,7 @@ impl AdaptedModel {
             spec: Arc::new(spec),
             adapters: BTreeMap::new(),
             cache: ProjectionCache::new(cache_budget_bytes),
+            cache_quant: QuantKind::F32,
         })
     }
 
@@ -215,6 +228,32 @@ impl AdaptedModel {
     /// Resident projection bytes (diagnostic; see `ProjectionCache`).
     pub fn cache_bytes(&self) -> usize {
         self.cache.bytes()
+    }
+
+    /// Resident projection bytes split by storage codec
+    /// (`[f32, bf16, int8]`) — the `/v1/stats` surface.
+    pub fn cache_bytes_by_kind(&self) -> [usize; 3] {
+        self.cache.resident_bytes_by_kind()
+    }
+
+    /// Resident projection tensor count — the quant bench's
+    /// effective-capacity measure (a cheaper codec keeps more tensors
+    /// resident in the same byte budget).
+    pub fn cache_resident_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Storage codec for cache-resident regenerated tensors (`[serve]
+    /// cache_quant`).  Affects only **future** installs: tensors
+    /// already resident keep the codec they were encoded with until the
+    /// LRU ages them out — deterministic regeneration makes either copy
+    /// correct, so there is nothing to invalidate.
+    pub fn set_cache_quant(&mut self, kind: QuantKind) {
+        self.cache_quant = kind;
+    }
+
+    pub fn cache_quant(&self) -> QuantKind {
+        self.cache_quant
     }
 
     #[cfg(test)]
@@ -684,9 +723,16 @@ impl AdaptedModel {
                 let mat = match have {
                     Some(hit) => hit.clone(),
                     None => {
+                        // Regenerate in f32 (slot, or inline), then
+                        // encode once with the active codec — the
+                        // quantized image is what goes resident.
                         let spec = spec.clone();
+                        let kind = self.cache_quant;
                         self.cache.get_or(spec.key(), move || {
-                            slot.unwrap_or_else(|| spec.materialize())
+                            QuantMat::encode_owned(
+                                slot.unwrap_or_else(|| spec.materialize()),
+                                kind,
+                            )
                         })
                     }
                 };
@@ -798,7 +844,7 @@ impl AdaptedModel {
                 .iter()
                 .map(|h| h.sites[s].adapter.as_ref())
                 .collect();
-            let regens: Vec<&[Arc<Matrix>]> = handles
+            let regens: Vec<&[Arc<QuantMat>]> = handles
                 .iter()
                 .map(|h| h.sites[s].regen.as_slice())
                 .collect();
@@ -1403,6 +1449,118 @@ mod tests {
         // a multi-site model refuses a core-count mismatch
         let mut multi = AdaptedModel::new(test_spec(2), 1 << 20).unwrap();
         assert!(multi.load_checkpoint("mathbot", &ck, 2.0).is_err());
+    }
+
+    #[test]
+    fn quantized_cache_serves_within_codec_tolerance_and_accounts_bytes() {
+        // The install-time quantization path: same adapter, same
+        // inputs, bf16/int8 cache codecs — outputs stay within each
+        // codec's error budget of the f32 serving path, and every
+        // resident byte is accounted under the right codec at its
+        // encoded (not f32) size.
+        let spec = test_spec(2);
+        let xs = site_inputs(&spec, 4, 13);
+        let mut f32_model =
+            AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+        add_adapter(&mut f32_model, "a", 7);
+        let want = f32_model.forward("a", &xs).unwrap();
+        assert_eq!(f32_model.cache_quant(), QuantKind::F32);
+        let by = f32_model.cache_bytes_by_kind();
+        assert_eq!(by[0], f32_model.cache_bytes());
+        assert_eq!(by[1] + by[2], 0);
+
+        for (kind, tol) in
+            [(QuantKind::Bf16, 0.05f32), (QuantKind::Int8, 0.15f32)]
+        {
+            let mut model =
+                AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+            model.set_cache_quant(kind);
+            add_adapter(&mut model, "a", 7);
+            let got = model.forward("a", &xs).unwrap();
+            for (s, (gm, wm)) in got.iter().zip(&want).enumerate() {
+                let rel = gm.sub(wm).frobenius()
+                    / wm.frobenius().max(1e-12);
+                assert!(rel < tol,
+                        "{kind:?} site {s}: rel err {rel} over {tol}");
+                assert!(rel > 0.0,
+                        "{kind:?} site {s}: quantization must perturb");
+            }
+            // resident bytes are encoded-size exact, under one codec
+            let expect: usize = spec
+                .sites
+                .iter()
+                .map(|s| {
+                    kind.bytes_for(s.shape.m, s.a)
+                        + kind.bytes_for(s.b, s.shape.n)
+                })
+                .sum();
+            assert_eq!(model.cache_bytes(), expect);
+            let by = model.cache_bytes_by_kind();
+            let slot = match kind {
+                QuantKind::F32 => 0,
+                QuantKind::Bf16 => 1,
+                QuantKind::Int8 => 2,
+            };
+            assert_eq!(by[slot], expect);
+            assert_eq!(by.iter().sum::<usize>(), expect);
+        }
+    }
+
+    #[test]
+    fn grouped_forward_with_quantized_cache_matches_per_adapter_calls() {
+        // The fused path through quantized-source packs must stay
+        // bit-identical to slicing the rows apart and composing
+        // per-adapter forwards — the f32 guarantee, under int8.
+        let spec = test_spec(2);
+        let mut model = AdaptedModel::new(spec.clone(), 1 << 20).unwrap();
+        model.set_cache_quant(QuantKind::Int8);
+        for (i, name) in ["a", "b", "c"].iter().enumerate() {
+            add_adapter(&mut model, name, 7 + i as u64);
+        }
+        let names = ["a", "b", "c"];
+        let segs = [2usize, 0, 3];
+        let total: usize = segs.iter().sum();
+        let xs = site_inputs(&spec, total, 21);
+        let mut ws = Workspace::new();
+        let mut outs: Vec<Matrix> = spec
+            .sites
+            .iter()
+            .map(|s| Matrix::zeros(total, s.shape.m))
+            .collect();
+        model
+            .forward_grouped_into(&names, &segs, &xs, &mut ws, &mut outs)
+            .unwrap();
+        let mut row = 0usize;
+        for (g, &rows) in segs.iter().enumerate() {
+            if rows == 0 {
+                continue;
+            }
+            let sub_xs: Vec<Matrix> = xs
+                .iter()
+                .map(|x| Matrix::from_vec(
+                    rows,
+                    x.cols,
+                    x.data[row * x.cols..(row + rows) * x.cols].to_vec(),
+                ))
+                .collect();
+            let mut sub_outs: Vec<Matrix> = spec
+                .sites
+                .iter()
+                .map(|s| Matrix::zeros(rows, s.shape.m))
+                .collect();
+            model
+                .forward_into(names[g], &sub_xs, &mut ws, &mut sub_outs)
+                .unwrap();
+            for (s, so) in sub_outs.iter().enumerate() {
+                let m = spec.sites[s].shape.m;
+                let fused = &outs[s].data[row * m..(row + rows) * m];
+                for (p, q) in fused.iter().zip(&so.data) {
+                    assert_eq!(p.to_bits(), q.to_bits(),
+                               "adapter {g} site {s} diverged under int8");
+                }
+            }
+            row += rows;
+        }
     }
 
     #[test]

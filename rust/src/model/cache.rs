@@ -12,16 +12,20 @@
 //! logical clock, misses regenerate and insert, and inserts evict
 //! least-recently-used entries until the budget holds (the newest entry
 //! is always kept resident so a single over-budget projection still
-//! serves).  Entries are `Arc<Matrix>` so scheduler workers can hold a
-//! projection across a batch while the cache concurrently evicts it for
-//! someone else.
+//! serves).  Entries are `Arc<QuantMat>` so scheduler workers can hold
+//! a projection across a batch while the cache concurrently evicts it
+//! for someone else — and so residents can live in bf16 or int8
+//! storage ([`QuantKind`]) at half or quarter the f32 footprint.  The
+//! byte ledger counts *encoded* bytes, so a quantized cache holds
+//! proportionally more projections at the same budget; the model layer
+//! decides the kind at install time (`[serve] cache_quant`).
 //!
 //! [`AdaptedModel`]: crate::model::AdaptedModel
 
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
-use crate::math::matrix::Matrix;
+use crate::linalg::{QuantKind, QuantMat};
 
 /// Cache key: (seed, tensor name, rows, cols).  Dims are part of the
 /// identity so two adapters sharing a seed but differing in core shape
@@ -30,7 +34,7 @@ use crate::math::matrix::Matrix;
 pub type CacheKey = (u64, String, usize, usize);
 
 struct CacheEntry {
-    mat: Arc<Matrix>,
+    mat: Arc<QuantMat>,
     last_used: u64,
 }
 
@@ -59,9 +63,6 @@ pub struct ProjectionCache {
     stats: CacheStats,
 }
 
-fn mat_bytes(m: &Matrix) -> usize {
-    m.data.len() * std::mem::size_of::<f32>()
-}
 
 impl ProjectionCache {
     pub fn new(budget_bytes: usize) -> ProjectionCache {
@@ -95,7 +96,23 @@ impl ProjectionCache {
     /// evictions can never corrupt the ledger another site's inserts
     /// depend on.
     pub fn recomputed_bytes(&self) -> usize {
-        self.entries.values().map(|e| mat_bytes(&e.mat)).sum()
+        self.entries.values().map(|e| e.mat.bytes()).sum()
+    }
+
+    /// Resident bytes broken down by storage kind, in
+    /// `[f32, bf16, int8]` order — the `/v1/stats` capacity view.  The
+    /// three components always sum to [`ProjectionCache::bytes`].
+    pub fn resident_bytes_by_kind(&self) -> [usize; 3] {
+        let mut by = [0usize; 3];
+        for e in self.entries.values() {
+            let slot = match e.mat.kind() {
+                QuantKind::F32 => 0,
+                QuantKind::Bf16 => 1,
+                QuantKind::Int8 => 2,
+            };
+            by[slot] += e.mat.bytes();
+        }
+        by
     }
 
     /// Entries currently resident (diagnostic).
@@ -110,7 +127,7 @@ impl ProjectionCache {
     /// Hit-only lookup: bumps recency and the hit counter on a hit,
     /// touches nothing on a miss (the caller is expected to regenerate
     /// outside any lock and come back through [`ProjectionCache::get_or`]).
-    pub fn peek(&mut self, key: &CacheKey) -> Option<Arc<Matrix>> {
+    pub fn peek(&mut self, key: &CacheKey) -> Option<Arc<QuantMat>> {
         if let Some(e) = self.entries.get_mut(key) {
             self.tick += 1;
             self.order.remove(&e.last_used);
@@ -125,12 +142,14 @@ impl ProjectionCache {
     /// The cached projection for `key`, regenerating via `regen` on a
     /// miss.  Hits refresh recency; misses insert and then evict
     /// least-recently-used entries until the budget holds (the entry
-    /// just inserted is never the victim).
+    /// just inserted is never the victim).  `regen` returns an
+    /// already-encoded [`QuantMat`] — the caller picks the storage
+    /// kind, the cache only meters encoded bytes.
     pub fn get_or(
         &mut self,
         key: CacheKey,
-        regen: impl FnOnce() -> Matrix,
-    ) -> Arc<Matrix> {
+        regen: impl FnOnce() -> QuantMat,
+    ) -> Arc<QuantMat> {
         self.tick += 1;
         if let Some(e) = self.entries.get_mut(&key) {
             self.order.remove(&e.last_used);
@@ -141,7 +160,7 @@ impl ProjectionCache {
         }
         self.stats.misses += 1;
         let mat = Arc::new(regen());
-        self.bytes += mat_bytes(&mat);
+        self.bytes += mat.bytes();
         let entry = CacheEntry { mat: mat.clone(), last_used: self.tick };
         self.entries.insert(key.clone(), entry);
         self.order.insert(self.tick, key.clone());
@@ -163,7 +182,7 @@ impl ProjectionCache {
             let Some((t, k)) = victim else { break };
             self.order.remove(&t);
             if let Some(e) = self.entries.remove(&k) {
-                self.bytes -= mat_bytes(&e.mat);
+                self.bytes -= e.mat.bytes();
                 self.stats.evictions += 1;
             }
         }
@@ -173,9 +192,16 @@ impl ProjectionCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::math::matrix::Matrix;
 
-    fn mat(rows: usize, cols: usize, v: f32) -> Matrix {
-        Matrix::from_vec(rows, cols, vec![v; rows * cols])
+    fn mat(rows: usize, cols: usize, v: f32) -> QuantMat {
+        let m = Matrix::from_vec(rows, cols, vec![v; rows * cols]);
+        QuantMat::encode_owned(m, QuantKind::F32)
+    }
+
+    fn qmat(rows: usize, cols: usize, v: f32, kind: QuantKind) -> QuantMat {
+        let m = Matrix::from_vec(rows, cols, vec![v; rows * cols]);
+        QuantMat::encode_owned(m, kind)
     }
 
     #[test]
@@ -209,6 +235,59 @@ mod tests {
             assert!(c.bytes() <= 100 || c.len() == 1, "over budget at {i}");
         }
         assert!(c.stats().evictions > 0, "churn must actually evict");
+    }
+
+    #[test]
+    fn ledger_is_exact_under_mixed_quant_kind_residents() {
+        // f32, bf16 and int8 residents churning in one cache: the
+        // incremental ledger, the recomputed sum, and the per-kind
+        // breakdown must agree at every step — quantized entries meter
+        // their *encoded* bytes, not a hypothetical f32 footprint.
+        let kinds = [QuantKind::F32, QuantKind::Bf16, QuantKind::Int8];
+        let mut c = ProjectionCache::new(300);
+        for i in 0..60u64 {
+            let kind = kinds[(i % 3) as usize];
+            let (rows, cols) = if i % 2 == 0 { (4, 6) } else { (2, 9) };
+            let key: CacheKey =
+                (i % 7, format!("s{}.{}", i % 4, kind.name()), rows, cols);
+            let got = c.get_or(key, || qmat(rows, cols, i as f32, kind));
+            assert_eq!(got.kind(), kind, "kind survives residency at {i}");
+            assert_eq!(
+                got.bytes(),
+                kind.bytes_for(rows, cols),
+                "encoded size at {i}"
+            );
+            assert_eq!(c.bytes(), c.recomputed_bytes(), "ledger drift at {i}");
+            let by = c.resident_bytes_by_kind();
+            assert_eq!(
+                by.iter().sum::<usize>(),
+                c.bytes(),
+                "per-kind breakdown must sum to the ledger at {i}"
+            );
+        }
+        assert!(c.stats().evictions > 0, "churn must actually evict");
+        let by = c.resident_bytes_by_kind();
+        assert!(
+            by.iter().filter(|&&b| b > 0).count() >= 2,
+            "mixed-kind churn should leave more than one kind resident"
+        );
+    }
+
+    #[test]
+    fn quantized_residents_multiply_capacity_at_equal_budget() {
+        // At one fixed byte budget, bf16 entries of the same shape are
+        // half the f32 footprint, so twice as many stay resident — the
+        // capacity mechanism scenario 7 gates end to end.
+        let count_resident = |kind: QuantKind| -> usize {
+            let mut c = ProjectionCache::new(8 * 6 * 4 * 4); // four f32 8x6 panels
+            for i in 0..16u64 {
+                c.get_or((i, "p.l".into(), 8, 6), || qmat(8, 6, 1.0, kind));
+            }
+            c.len()
+        };
+        assert_eq!(count_resident(QuantKind::F32), 4);
+        assert_eq!(count_resident(QuantKind::Bf16), 8);
+        assert!(count_resident(QuantKind::Int8) > 8);
     }
 
     #[test]

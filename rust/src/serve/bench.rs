@@ -40,6 +40,17 @@
 //!   batching; CI gates `fused_vs_per_adapter >= 1.5`
 //!   machine-independently (two walls of the same binary on the same
 //!   box).
+//! * [`run_quant`] — the quantized-cache workload (`serving_quant`
+//!   section): the model-bench spec at a deliberately **thrashing**
+//!   LRU budget, one identical Zipf stream re-driven under each cache
+//!   codec (f32, bf16, int8 — `[serve] cache_quant`).  Per codec it
+//!   reports the end-of-run resident tensor count (the
+//!   effective-capacity measure: bf16 fits ~2x the tensors of f32 in
+//!   the same bytes, int8 ~3-4x), the hit rate over the measured
+//!   stream, and the relative output RMSE against the f32 pass.  CI
+//!   gates `capacity_vs_f32 >= 1.8` for bf16 and a per-codec RMSE
+//!   bound — both machine-independent (deterministic sequential drive;
+//!   the capacity and hit counters are exact integers).
 //!
 //! Reported per scenario: wall-clock throughput, p50/p95/p99 request
 //! latency (submit -> worker completion), mean batch occupancy,
@@ -52,6 +63,7 @@ use std::time::{Duration, Instant};
 
 use crate::adapters::{costmodel, Method};
 use crate::config::ServeConfig;
+use crate::linalg::QuantKind;
 use crate::math::matrix::Matrix;
 use crate::math::rng::Pcg64;
 use crate::model::{AdaptedModel, CacheStats, ModelSpec, SiteShape};
@@ -1243,6 +1255,244 @@ pub fn run_methods(
     Ok(MethodsBenchReport { opts: opts.clone(), workers, rows, cache })
 }
 
+/// Quantized-cache workload description (sequential drive — the
+/// scenario measures residency capacity and output accuracy per cache
+/// codec; scheduler throughput is `run_model`'s job).
+#[derive(Clone, Debug)]
+pub struct QuantBenchOpts {
+    pub spec: ModelSpec,
+    pub adapters: usize,
+    pub requests: usize,
+    pub zipf: f64,
+    pub seed: u64,
+    /// `cache_mb` should sit well under the f32 projection working set
+    /// so the LRU actually thrashes; `cache_quant` is overridden per
+    /// measured codec by the driver.
+    pub cfg: ServeConfig,
+}
+
+impl Default for QuantBenchOpts {
+    fn default() -> Self {
+        // The acceptance scenario: the 24-site × 64-adapter model-bench
+        // shape with an LRU budget ~4x under its ~12 MiB f32 projection
+        // working set, so codec choice directly moves the resident
+        // tensor population (and with it the hit rate).
+        QuantBenchOpts {
+            spec: ModelSpec::synthetic(
+                24, SiteShape { m: 96, n: 96 }, 16, 12),
+            adapters: 64,
+            requests: 512,
+            zipf: 1.1,
+            seed: 19,
+            cfg: ServeConfig { cache_mb: 3.0, ..ServeConfig::default() },
+        }
+    }
+}
+
+/// One measured codec of the quantized-cache scenario (a
+/// `serving_quant` bench row).
+#[derive(Clone, Debug)]
+pub struct QuantBenchRow {
+    /// `"f32"` / `"bf16"` / `"int8"`.
+    pub kind: String,
+    /// Hit fraction over the measured stream's cache lookups.
+    pub hit_rate: f64,
+    pub hit_rate_vs_f32: f64,
+    /// Projections resident at end of drive (exact integer —
+    /// deterministic for a fixed stream).
+    pub resident_tensors: usize,
+    /// The acceptance metric: resident tensors / the f32 pass's
+    /// resident tensors at the identical byte budget.
+    pub capacity_vs_f32: f64,
+    pub resident_bytes: usize,
+    /// Relative output RMSE vs the f32 pass over every element of
+    /// every request (0 for the f32 row itself).
+    pub rmse_vs_f32: f64,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub cache: CacheStats,
+}
+
+/// The full quantized-cache report: one row per codec, f32 first.
+#[derive(Clone, Debug)]
+pub struct QuantBenchReport {
+    pub opts: QuantBenchOpts,
+    pub rows: Vec<QuantBenchRow>,
+}
+
+impl QuantBenchReport {
+    /// One self-contained JSON object per codec — the `serving_quant`
+    /// section is their array, mirroring `serving_methods`.
+    pub fn to_json_rows(&self) -> Vec<Json> {
+        let o = &self.opts;
+        self.rows
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("kind", Json::Str(r.kind.clone())),
+                    ("sites", o.spec.len().into()),
+                    ("adapters", o.adapters.into()),
+                    ("requests", o.requests.into()),
+                    ("zipf", o.zipf.into()),
+                    ("cache_mb", o.cfg.cache_mb.into()),
+                    ("hit_rate", r.hit_rate.into()),
+                    ("hit_rate_vs_f32", r.hit_rate_vs_f32.into()),
+                    ("resident_tensors", r.resident_tensors.into()),
+                    ("capacity_vs_f32", r.capacity_vs_f32.into()),
+                    ("resident_bytes", r.resident_bytes.into()),
+                    ("rmse_vs_f32", r.rmse_vs_f32.into()),
+                    ("wall_s", r.wall_s.into()),
+                    ("throughput_rps", r.throughput_rps.into()),
+                    ("cache_hits", (r.cache.hits as usize).into()),
+                    ("cache_misses", (r.cache.misses as usize).into()),
+                    (
+                        "cache_evictions",
+                        (r.cache.evictions as usize).into(),
+                    ),
+                ])
+            })
+            .collect()
+    }
+
+    pub fn print(&self) {
+        let o = &self.opts;
+        println!(
+            "serve-quant[{} sites x {} adapters, zipf {:.2}, {} reqs, \
+             cache {:.1} MiB]",
+            o.spec.len(), o.adapters, o.zipf, o.requests, o.cfg.cache_mb
+        );
+        for r in &self.rows {
+            println!(
+                "  {:<4} resident {:>5} tensors ({:>8} B)  \
+                 capacity {:.2}x  hit rate {:.3} ({:.2}x)  \
+                 rmse {:.2e}  {:>7.0} req/s",
+                r.kind, r.resident_tensors, r.resident_bytes,
+                r.capacity_vs_f32, r.hit_rate, r.hit_rate_vs_f32,
+                r.rmse_vs_f32, r.throughput_rps
+            );
+        }
+    }
+}
+
+/// Run the quantized-cache scenario (see module docs): the identical
+/// Zipf stream driven sequentially through three identically built
+/// models whose caches store f32, bf16 and int8 residents at one byte
+/// budget.  `opts.cfg` is taken as final except `cache_quant`, which
+/// this function owns.
+pub fn run_quant(opts: &QuantBenchOpts) -> anyhow::Result<QuantBenchReport> {
+    anyhow::ensure!(opts.adapters > 0, "need at least one adapter");
+    anyhow::ensure!(opts.requests > 0, "need at least one request");
+    opts.spec.validate()?;
+    let spec = &opts.spec;
+    let budget = opts.cfg.cache_budget_bytes();
+    let seed_of = |i: usize| opts.seed.wrapping_add(1 + i as u64);
+    let names: Vec<String> =
+        (0..opts.adapters).map(|i| format!("adp{i:03}")).collect();
+
+    // Every codec serves an identically built model (deterministic in
+    // `opts.seed`), so the only variable is resident storage.
+    let build = || -> anyhow::Result<AdaptedModel> {
+        let mut rng = Pcg64::new(opts.seed);
+        let mut m = AdaptedModel::new(spec.clone(), budget)?;
+        for (i, name) in names.iter().enumerate() {
+            let cores: Vec<Matrix> = spec
+                .sites
+                .iter()
+                .map(|s| Matrix::gaussian(s.a, s.b, 0.02, &mut rng))
+                .collect();
+            m.insert_synthetic(name, seed_of(i), 2.0, cores)?;
+        }
+        Ok(m)
+    };
+
+    // Shared Zipf stream + activation pool, distinct from the build
+    // stream.
+    let mut rng = Pcg64::with_stream(opts.seed, 1);
+    let zipf = Zipf::new(opts.adapters, opts.zipf);
+    let seq: Vec<usize> =
+        (0..opts.requests).map(|_| zipf.sample(&mut rng)).collect();
+    let xs_pool: Vec<Vec<Matrix>> = (0..X_POOL)
+        .map(|_| {
+            spec.sites
+                .iter()
+                .map(|s| {
+                    Matrix::from_vec(1, s.shape.n,
+                                     rng.normal_vec(s.shape.n, 1.0))
+                })
+                .collect()
+        })
+        .collect();
+
+    let kinds = [QuantKind::F32, QuantKind::Bf16, QuantKind::Int8];
+    // The f32 pass's outputs, flattened per request, for the RMSE
+    // comparison (regeneration is deterministic, so these do not
+    // depend on cache state).
+    let mut f32_out: Vec<Vec<f32>> = Vec::new();
+    let mut rows: Vec<QuantBenchRow> = Vec::with_capacity(kinds.len());
+    for kind in kinds {
+        let mut model = build()?;
+        model.set_cache_quant(kind);
+        // Warm every adapter once so the measured stream starts from a
+        // steady (already thrashing) cache, not a cold one — the same
+        // warm order for every codec.
+        for name in &names {
+            black_box(model.forward(name, &xs_pool[0])?);
+        }
+        model.reset_cache_stats();
+        let mut sq_diff = 0.0f64;
+        let mut sq_ref = 0.0f64;
+        let t0 = Instant::now();
+        for (j, &idx) in seq.iter().enumerate() {
+            let outs = model.forward(&names[idx], &xs_pool[j % X_POOL])?;
+            black_box(outs[0].data[0]);
+            if kind == QuantKind::F32 {
+                let mut flat = Vec::new();
+                for o in &outs {
+                    flat.extend_from_slice(&o.data);
+                }
+                f32_out.push(flat);
+            } else {
+                let want = &f32_out[j];
+                let mut k = 0usize;
+                for o in &outs {
+                    for &v in &o.data {
+                        let d = v as f64 - want[k] as f64;
+                        sq_diff += d * d;
+                        sq_ref += want[k] as f64 * want[k] as f64;
+                        k += 1;
+                    }
+                }
+            }
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let cache = model.cache_stats();
+        let lookups = (cache.hits + cache.misses) as f64;
+        rows.push(QuantBenchRow {
+            kind: kind.name().to_string(),
+            hit_rate: cache.hits as f64 / lookups.max(1.0),
+            hit_rate_vs_f32: 0.0, // filled once the f32 row exists
+            resident_tensors: model.cache_resident_count(),
+            capacity_vs_f32: 0.0, // filled once the f32 row exists
+            resident_bytes: model.cache_bytes(),
+            rmse_vs_f32: if kind == QuantKind::F32 {
+                0.0
+            } else {
+                (sq_diff / sq_ref.max(1e-300)).sqrt()
+            },
+            wall_s,
+            throughput_rps: opts.requests as f64 / wall_s.max(1e-9),
+            cache,
+        });
+    }
+    let base_hits = rows[0].hit_rate.max(1e-9);
+    let base_resident = rows[0].resident_tensors.max(1) as f64;
+    for r in rows.iter_mut() {
+        r.hit_rate_vs_f32 = r.hit_rate / base_hits;
+        r.capacity_vs_f32 = r.resident_tensors as f64 / base_resident;
+    }
+    Ok(QuantBenchReport { opts: opts.clone(), rows })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1390,6 +1640,61 @@ mod tests {
             .unwrap()
             .as_f64()
             .is_some());
+    }
+
+    #[test]
+    fn quant_smoke_scenario_multiplies_capacity_within_error_budget() {
+        // Tiny thrashing scenario (~8 KiB f32 working set, ~2.6 KiB
+        // budget): cheaper codecs must keep measurably more tensors
+        // resident at the same byte budget, and the output error must
+        // stay inside each codec's budget.  All counters here are
+        // deterministic in the seed.
+        let opts = QuantBenchOpts {
+            spec: ModelSpec::synthetic(
+                3, SiteShape { m: 16, n: 12 }, 4, 3),
+            adapters: 8,
+            requests: 48,
+            zipf: 1.0,
+            seed: 5,
+            cfg: ServeConfig {
+                cache_mb: 0.0025,
+                ..ServeConfig::default()
+            },
+        };
+        let rep = run_quant(&opts).unwrap();
+        let kinds: Vec<&str> =
+            rep.rows.iter().map(|r| r.kind.as_str()).collect();
+        assert_eq!(kinds, ["f32", "bf16", "int8"]);
+        let f32r = &rep.rows[0];
+        assert_eq!(f32r.rmse_vs_f32, 0.0);
+        assert_eq!(f32r.capacity_vs_f32, 1.0);
+        assert_eq!(f32r.hit_rate_vs_f32, 1.0);
+        assert!(f32r.cache.evictions > 0, "scenario must thrash");
+        for r in &rep.rows {
+            assert!(r.hit_rate > 0.0 && r.hit_rate < 1.0,
+                    "{}: hit rate {} not thrashing", r.kind, r.hit_rate);
+            assert!(r.resident_tensors > 0);
+            assert!(r.resident_bytes > 0);
+            assert!(r.throughput_rps > 0.0);
+        }
+        let bf16 = &rep.rows[1];
+        let int8 = &rep.rows[2];
+        assert!(bf16.capacity_vs_f32 > 1.5,
+                "bf16 capacity {:.2}", bf16.capacity_vs_f32);
+        assert!(int8.capacity_vs_f32 > 1.5,
+                "int8 capacity {:.2}", int8.capacity_vs_f32);
+        assert!(bf16.hit_rate > f32r.hit_rate,
+                "more resident tensors must hit more: bf16 {} vs f32 {}",
+                bf16.hit_rate, f32r.hit_rate);
+        assert!(bf16.rmse_vs_f32 > 0.0 && bf16.rmse_vs_f32 < 0.02,
+                "bf16 rmse {}", bf16.rmse_vs_f32);
+        assert!(int8.rmse_vs_f32 > 0.0 && int8.rmse_vs_f32 < 0.1,
+                "int8 rmse {}", int8.rmse_vs_f32);
+        let js = rep.to_json_rows();
+        assert_eq!(js.len(), 3);
+        assert_eq!(js[1].get("kind").unwrap().as_str(), Some("bf16"));
+        assert!(js[1].get("capacity_vs_f32").unwrap().as_f64().is_some());
+        assert!(js[2].get("rmse_vs_f32").unwrap().as_f64().is_some());
     }
 
     #[test]

@@ -80,7 +80,7 @@ use std::time::{Duration, Instant};
 use crate::adapters::{forward_grouped_into, Adapter};
 use crate::config::ServeConfig;
 use crate::linalg::tiled::plan_threads;
-use crate::linalg::Workspace;
+use crate::linalg::{QuantMat, Workspace};
 use crate::math::matrix::Matrix;
 use crate::model::{AdaptedModel, ModelHandles, ModelPlan};
 
@@ -378,9 +378,18 @@ impl Server {
     /// Spawn the engine over `model`.  `cfg` is used as-is — apply
     /// `ServeConfig::env_overridden()` at the call site (the CLI and
     /// bench drivers do), so tests stay hermetic.
-    pub fn new(model: AdaptedModel, cfg: &ServeConfig) -> Server {
+    pub fn new(mut model: AdaptedModel, cfg: &ServeConfig) -> Server {
         let site_ns: Vec<usize> =
             model.spec().sites.iter().map(|s| s.shape.n).collect();
+        // One funnel for the cache codec: whatever `[serve] cache_quant`
+        // resolved to governs every install this server performs.
+        // Config load and env override both validated the string, so an
+        // unparseable value here (hand-built cfg) keeps the model's
+        // current codec rather than guessing.
+        match cfg.cache_quant_kind() {
+            Ok(kind) => model.set_cache_quant(kind),
+            Err(e) => eprintln!("warning: serve.cache_quant: {e}"),
+        }
         let max_batch = cfg.max_batch.max(1);
         let max_wait = Duration::from_micros(cfg.max_wait_us);
         // Zero weights would stall a class's queue forever; config
@@ -997,7 +1006,7 @@ fn run_fused(
             .iter()
             .map(|h| h.sites[s].adapter.as_ref())
             .collect();
-        let regens: Vec<&[Arc<Matrix>]> = handles
+        let regens: Vec<&[Arc<QuantMat>]> = handles
             .iter()
             .map(|h| h.sites[s].regen.as_slice())
             .collect();

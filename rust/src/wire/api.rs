@@ -59,14 +59,21 @@ fn healthz(state: &GatewayState) -> Response {
 
 fn stats(state: &GatewayState) -> Response {
     let sched = state.server().scheduler_stats();
-    let (cache, cache_bytes, adapters, method_of) = {
+    let (cache, cache_bytes, by_kind, cache_quant, adapters, method_of) = {
         let model = state.model();
         let m = model.lock().unwrap_or_else(|p| p.into_inner());
         let method_of: std::collections::BTreeMap<String, &'static str> =
             m.adapters()
                 .map(|a| (a.name.to_string(), a.method.name()))
                 .collect();
-        (m.cache_stats(), m.cache_bytes(), m.len(), method_of)
+        (
+            m.cache_stats(),
+            m.cache_bytes(),
+            m.cache_bytes_by_kind(),
+            m.cache_quant().name(),
+            m.len(),
+            method_of,
+        )
     };
     // Per-method rollup: adapters currently loaded and requests
     // submitted under each method (evicted adapters' request counts
@@ -96,6 +103,15 @@ fn stats(state: &GatewayState) -> Response {
     w.key("misses").u64_val(cache.misses);
     w.key("evictions").u64_val(cache.evictions);
     w.key("resident_bytes").u64_val(cache_bytes as u64);
+    // The configured codec for future installs plus the exact byte
+    // ledger per codec actually resident (mixed populations occur
+    // after a live cache_quant change until the LRU turns over).
+    w.key("quant").str_val(cache_quant);
+    w.key("resident_bytes_by_kind").begin_obj();
+    w.key("f32").u64_val(by_kind[0] as u64);
+    w.key("bf16").u64_val(by_kind[1] as u64);
+    w.key("int8").u64_val(by_kind[2] as u64);
+    w.end_obj();
     w.end_obj();
     w.key("per_adapter").begin_obj();
     for (name, count) in &sched.per_adapter {

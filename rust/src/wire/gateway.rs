@@ -812,6 +812,28 @@ mod tests {
             doc.get("submitted").unwrap().as_usize().unwrap() >= 1
         );
         assert!(doc.get("cache").unwrap().get("hits").is_some());
+        // quantized-cache surface: configured codec + per-codec ledger
+        let cache = doc.get("cache").unwrap();
+        assert_eq!(
+            cache.get("quant").and_then(Json::as_str),
+            Some("f32"),
+            "default cache codec is f32"
+        );
+        let by_kind = cache.get("resident_bytes_by_kind").unwrap();
+        assert_eq!(
+            by_kind.get("bf16").and_then(Json::as_usize),
+            Some(0),
+            "nothing installed under a non-default codec"
+        );
+        assert_eq!(
+            by_kind.get("int8").and_then(Json::as_usize),
+            Some(0)
+        );
+        assert_eq!(
+            by_kind.get("f32").and_then(Json::as_usize),
+            cache.get("resident_bytes").and_then(Json::as_usize),
+            "every resident byte is f32 under the default codec"
+        );
         let beta = doc.get("per_adapter").unwrap().get("beta").unwrap();
         assert_eq!(
             beta.get("requests").and_then(Json::as_usize),

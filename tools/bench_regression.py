@@ -21,7 +21,10 @@ Checks:
    MIN_RATIO on the NN, NT, and TN kernels at every measured shape
    (TN rides the same packed micro-kernel via a blocked A-operand
    transpose pack).  The acceptance target is 1.5x; the gate uses 1.2x
-   to absorb runner noise.
+   to absorb runner noise.  The wide-short NT shape (4x512x3072, the
+   serving decode panel) is additionally gated at auto threads: rows
+   there are too few to parallelize, so packed only beats threaded
+   tiled through its per-block column parallelism.
 
 3. **Serving floors** — the `serving` section (written by
    `serve_bench`) is checked against the baseline's `serving` object:
@@ -77,6 +80,18 @@ Checks:
    The CoSA-only `serving` / `serving_model` floors stay unchanged —
    this section gates the zoo, not the original single-method path.
 
+9. **Quantized-cache gate** — the `serving_quant` section (written by
+   serve_bench scenario 7: the 24-site x 64-adapter fleet driven at
+   one thrashing LRU budget three times — f32, bf16, int8 cache
+   codecs, one row per codec) is checked against the baseline's
+   `serving_quant` object.  Machine-independent by construction (the
+   metrics are exact resident counts and deterministic arithmetic):
+   the bf16 row's `capacity_vs_f32` >= `min_capacity_vs_f32_bf16`
+   (default 1.8 — half-width residents must nearly double effective
+   cache capacity at the identical byte budget), and each row's
+   `rmse_vs_f32` <= its `max_rmse_vs_f32` bound (f32 must be exactly
+   0 — the default codec stays bit-identical).
+
 A fresh report that exists but is malformed (unparseable JSON, or none
 of the expected sections with rows) is a hard failure — a silently
 empty report must read as "the gate is off", never as "pass".  A
@@ -99,9 +114,14 @@ MODEL_SECTION = "serving_model"
 WIRE_SECTION = "serving_wire"
 TAIL_SECTION = "serving_tail"
 METHODS_SECTION = "serving_methods"
+QUANT_SECTION = "serving_quant"
 TOLERANCE = 0.20          # max allowed drop below the baseline gflops
 MIN_RATIO = 1.2           # fresh-run packed/tiled single-thread NN+NT floor
 MIN_SERVE_ADAPTERS = 64   # fleet size the serving ratio gate applies to
+# The one shape whose packed/tiled ratio is also gated at auto threads:
+# 4 rows cannot be split across workers, so only the packed backend's
+# per-block column parallelism keeps the threaded ratio healthy.
+WIDE_SHORT_SHAPE = (4, 512, 3072)
 
 KEY_FIELDS = ("kernel", "backend", "threads", "m", "k", "n")
 
@@ -170,6 +190,15 @@ def methods_rows(doc):
             and "method" in r]
 
 
+def quant_rows(doc):
+    rows = doc.get(QUANT_SECTION, [])
+    if not isinstance(rows, list):
+        return []
+    return [r for r in rows
+            if isinstance(r, dict) and "rmse_vs_f32" in r
+            and "kind" in r]
+
+
 def find_fresh(candidates):
     for p in candidates:
         if os.path.exists(p):
@@ -203,12 +232,16 @@ def check_kernels(fresh, baseline_doc, baseline_path, tolerance, min_ratio,
         print(f"bench_regression: no {baseline_path} — absolute check "
               "skipped (generate one with --update)")
 
-    # machine-independent relative gate: packed vs tiled, 1 thread
+    # machine-independent relative gate: packed vs tiled, 1 thread —
+    # plus the wide-short shape at auto threads, where the ratio is
+    # carried by the packed backend's per-block column parallelism.
     relative_pairs = 0
     for key, tiled_row in sorted(fresh.items()):
         kernel, backend, threads = key[0], key[1], key[2]
-        if backend != "tiled" or threads != 1 \
-                or kernel not in ("nn", "nt", "tn"):
+        if backend != "tiled" or kernel not in ("nn", "nt", "tn"):
+            continue
+        if threads != 1 and not (threads == 0
+                                 and key[3:] == WIDE_SHORT_SHAPE):
             continue
         packed_key = (kernel, "packed") + key[2:]
         packed_row = fresh.get(packed_key)
@@ -217,8 +250,8 @@ def check_kernels(fresh, baseline_doc, baseline_path, tolerance, min_ratio,
         relative_pairs += 1
         ratio = packed_row["gflops"] / tiled_row["gflops"]
         shape = "x".join(str(k) for k in key[3:])
-        line = (f"{kernel} {shape}: packed/tiled = {ratio:.2f}x "
-                f"({packed_row['gflops']:.2f} vs "
+        line = (f"{kernel} {shape} t{threads}: packed/tiled = "
+                f"{ratio:.2f}x ({packed_row['gflops']:.2f} vs "
                 f"{tiled_row['gflops']:.2f} GFLOP/s)")
         if ratio < min_ratio:
             failures.append(f"{line} — below the {min_ratio}x gate")
@@ -553,6 +586,77 @@ def check_serving_methods(rows, baseline_doc, baseline_path,
             print(f"  note: {msg}")
 
 
+def check_serving_quant(rows, baseline_doc, baseline_path,
+                        require_acceptance, failures):
+    base = {}
+    if baseline_doc is not None:
+        base = baseline_doc.get(QUANT_SECTION, {})
+    if not isinstance(base, dict):
+        failures.append(f"{baseline_path}: `{QUANT_SECTION}` must be an "
+                        "object of gates, not rows")
+        return
+    # Both gates are on even with no committed baseline object — the
+    # capacity multiplier and the error budget ARE the acceptance
+    # criteria, not tunable runner floors (every metric in this section
+    # is exact counts or deterministic arithmetic).
+    min_capacity = base.get("min_capacity_vs_f32_bf16", 1.8)
+    rmse_bounds = base.get("max_rmse_vs_f32",
+                           {"f32": 0.0, "bf16": 0.03, "int8": 0.08})
+    if not isinstance(rmse_bounds, dict):
+        failures.append(f"{baseline_path}: `{QUANT_SECTION}."
+                        "max_rmse_vs_f32` must map kind -> bound")
+        return
+    # Shape keys pinning the gates to the committed scenario (the
+    # capacity ratio only means something at the thrashing budget).
+    want_shape = {k: base[k] for k in ("sites", "adapters", "zipf")
+                  if k in base}
+
+    gated = []
+    for r in rows:
+        kind = r.get("kind")
+        tag = (f"serving_quant[{kind}, {r.get('sites')} sites x "
+               f"{r.get('adapters')} adapters]")
+        shape_ok = all(r.get(k) == v for k, v in want_shape.items())
+        if not shape_ok:
+            print(f"  note: {tag}: not the acceptance workload; gate "
+                  "not applied")
+            continue
+        gated.append(kind)
+        if kind == "bf16":
+            cap = r.get("capacity_vs_f32", 0.0)
+            line = (f"{tag}: effective capacity = {cap:.2f}x f32 "
+                    f"(gate {min_capacity}x)")
+            if cap < min_capacity:
+                failures.append(
+                    f"{line} — half-width residents no longer multiply "
+                    "the cache's effective capacity")
+            else:
+                print(f"  ok: {line}")
+        bound = rmse_bounds.get(kind)
+        if bound is not None:
+            rmse = r.get("rmse_vs_f32", float("inf"))
+            line = (f"{tag}: output RMSE vs f32 = {rmse:.3g} "
+                    f"(bound {bound:g})")
+            if rmse > bound:
+                failures.append(f"{line} — the `{kind}` codec blew its "
+                                "error budget")
+            else:
+                print(f"  ok: {line}")
+    if gated and "bf16" not in gated:
+        failures.append(
+            "serving_quant: no `bf16` row at the acceptance shape — the "
+            "capacity-multiplier gate (the quantized cache's reason to "
+            "exist) was not measured")
+    if not gated:
+        msg = (f"serving_quant gate matched 0 rows at the baseline "
+               f"shape {want_shape} — the quantized-cache acceptance "
+               "workload (serve_bench scenario 7) did not run")
+        if require_acceptance:
+            failures.append(msg)
+        else:
+            print(f"  note: {msg}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default="BENCH_baseline.json")
@@ -591,13 +695,14 @@ def main():
     wire = wire_rows(doc)
     tail = tail_rows(doc)
     methods = methods_rows(doc)
+    quant = quant_rows(doc)
     if (not fresh and not serving and not model and not wire and not tail
-            and not methods):
+            and not methods and not quant):
         print(f"bench_regression: FAIL — {fresh_path} exists but has no "
               f"usable `{SECTION}`, `{SERVING_SECTION}`, "
-              f"`{MODEL_SECTION}`, `{WIRE_SECTION}`, `{TAIL_SECTION}` "
-              f"or `{METHODS_SECTION}` rows; an empty report must not "
-              "pass the gate")
+              f"`{MODEL_SECTION}`, `{WIRE_SECTION}`, `{TAIL_SECTION}`, "
+              f"`{METHODS_SECTION}` or `{QUANT_SECTION}` rows; an empty "
+              "report must not pass the gate")
         return 1
 
     if args.update:
@@ -695,6 +800,18 @@ def main():
     else:
         print(f"bench_regression: note — no `{METHODS_SECTION}` rows; "
               "cross-method checks skipped (CI runs with "
+              "--require-serving)")
+    if quant:
+        evaluated.append(QUANT_SECTION)
+        check_serving_quant(quant, baseline_doc, args.baseline,
+                            args.require_serving, failures)
+    elif args.require_serving:
+        failures.append(f"{fresh_path}: `{QUANT_SECTION}` section is "
+                        "missing or empty — did serve_bench scenario 7 "
+                        "run?")
+    else:
+        print(f"bench_regression: note — no `{QUANT_SECTION}` rows; "
+              "quantized-cache checks skipped (CI runs with "
               "--require-serving)")
 
     if failures:

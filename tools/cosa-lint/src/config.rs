@@ -24,10 +24,11 @@ pub struct Config {
 
 /// Removing any of these from `[rules] families` is a config error
 /// (exit 2), so CI fails when a rule family is switched off.
-pub const REQUIRED_FAMILIES: [&str; 5] = [
+pub const REQUIRED_FAMILIES: [&str; 6] = [
     "unsafe-audit",
     "panic-freedom",
     "lock-order",
+    "lock-nesting",
     "hot-path-alloc",
     "condvar-wait",
 ];
@@ -165,6 +166,7 @@ families = [
     "unsafe-audit",
     "panic-freedom",
     "lock-order",
+    "lock-nesting",
     "hot-path-alloc",
     "condvar-wait",
 ]

@@ -1,9 +1,9 @@
 //! cosa-lint — repo-invariant static analysis for the CoSA serving
 //! stack, kept deliberately lexical and zero-dependency so the gate
 //! itself can never rot behind a dependency bump or a compiler
-//! upgrade.  Five rule families (see `rules`): unsafe-audit,
-//! panic-freedom, lock-order (+ lock-hygiene), hot-path-alloc,
-//! condvar-wait.
+//! upgrade.  Six rule families (see `rules`): unsafe-audit,
+//! panic-freedom, lock-order (+ lock-hygiene), lock-nesting
+//! (same-level ABBA reconciliation), hot-path-alloc, condvar-wait.
 //!
 //! The library surface exists so the golden-fixture tests can drive
 //! `check_source` with virtual paths; the binary in `main.rs` is the

@@ -1,4 +1,4 @@
-//! The five rule families, all lexical by design: cosa-lint never
+//! The six rule families, all lexical by design: cosa-lint never
 //! type-checks — it enforces *textual* invariants that survive
 //! refactors (a `// SAFETY:` comment travels with its `unsafe`, a
 //! lock receiver keeps its field name) and fails closed on the
@@ -653,6 +653,13 @@ struct Guard {
 const GUARD_ADAPTERS: [&str; 4] =
     ["unwrap", "expect", "unwrap_or_else", "unwrap_or_default"];
 
+/// One same-level nested acquisition observed while a same-level
+/// guard with a *different* receiver was live: (held receiver,
+/// acquired receiver, level name, line of the inner acquisition).
+/// The hierarchy check cannot order these — `rule_lock` reconciles
+/// them per file and flags pairs nested in opposite orders.
+type NestPair = (String, String, String, u32);
+
 /// Condvar parking calls.  Each releases exactly ONE lock — the guard
 /// it is passed — for the duration of the sleep; any other guard the
 /// thread holds stays locked while it sleeps, starving contenders.
@@ -668,6 +675,7 @@ fn analyze_fn(
     nested: &[(usize, usize)],
     cfg: &Config,
     d: &Directives,
+    nests: &mut Vec<NestPair>,
     findings: &mut Vec<Finding>,
     path: &str,
 ) {
@@ -762,6 +770,21 @@ fn analyze_fn(
                                 g.lname, g.recv, g.line
                             ),
                         });
+                    }
+                    // Same-level nesting is legal on its own (levels
+                    // only order *across* levels) — record the order
+                    // so the per-file reconciliation can catch two
+                    // fns nesting the same pair both ways (ABBA).
+                    if rank == g.rank
+                        && g.recv != recv
+                        && !d.allowed("lock", t.line)
+                    {
+                        nests.push((
+                            g.recv.clone(),
+                            recv.clone(),
+                            lname.to_string(),
+                            t.line,
+                        ));
                     }
                 }
                 // Skip guard-preserving adapters, then decide whether
@@ -895,6 +918,7 @@ fn rule_lock(
     findings: &mut Vec<Finding>,
     path: &str,
 ) {
+    let mut nests: Vec<NestPair> = Vec::new();
     for f in fns {
         if in_spans(f.b0, tspans) {
             continue;
@@ -904,7 +928,37 @@ fn rule_lock(
             .filter(|g| g.b0 > f.b0 && g.b1 < f.b1)
             .map(|g| (g.b0, g.b1))
             .collect();
-        analyze_fn(toks, f.b0, f.b1, &nested, cfg, d, findings, path);
+        analyze_fn(toks, f.b0, f.b1, &nested, cfg, d, &mut nests,
+                   findings, path);
+    }
+    // Per-file reconciliation of same-level nesting orders: fn A
+    // taking `q` then `queue` and fn B taking `queue` then `q` is a
+    // classic ABBA deadlock the rank check is blind to (both pass the
+    // hierarchy).  One finding per conflicting receiver pair, on the
+    // first line each direction was seen.
+    let mut first: BTreeMap<(String, String), (String, u32)> =
+        BTreeMap::new();
+    for (outer, inner, lname, line) in nests {
+        first.entry((outer, inner)).or_insert((lname, line));
+    }
+    for ((a, b), (lname, line)) in &first {
+        if a >= b {
+            continue; // visit each unordered pair once
+        }
+        if let Some((_, rline)) = first.get(&(b.clone(), a.clone())) {
+            findings.push(Finding {
+                file: path.to_string(),
+                line: *line.min(rline),
+                rule: "lock-nesting",
+                msg: format!(
+                    "same-level `{lname}` locks nested in opposite \
+                     orders: `{a}` before `{b}` (line {line}) but \
+                     `{b}` before `{a}` (line {rline}) — ABBA \
+                     deadlock; pick one order (or `// lint: \
+                     allow(lock) — <why>` on an acquisition)"
+                ),
+            });
+        }
     }
 }
 

@@ -1,0 +1,23 @@
+//! Fixture: two same-level (`scheduler`) locks nested in OPPOSITE
+//! orders across two fns — each fn passes the rank hierarchy on its
+//! own, but together they form an ABBA deadlock the reconciliation
+//! pass must flag exactly once.
+
+use std::sync::Mutex;
+
+pub struct State {
+    pub q: Mutex<Vec<u32>>,
+    pub queue: Mutex<Vec<u32>>,
+}
+
+pub fn fn_a(s: &State) -> u32 {
+    let a = s.q.lock().unwrap_or_else(|p| p.into_inner());
+    let b = s.queue.lock().unwrap_or_else(|p| p.into_inner());
+    a.len() as u32 + b.len() as u32
+}
+
+pub fn fn_b(s: &State) -> u32 {
+    let b = s.queue.lock().unwrap_or_else(|p| p.into_inner());
+    let a = s.q.lock().unwrap_or_else(|p| p.into_inner());
+    b.len() as u32 + a.len() as u32
+}

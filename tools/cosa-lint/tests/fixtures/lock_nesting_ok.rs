@@ -1,0 +1,31 @@
+//! Fixture: same-level locks nested in ONE consistent order across
+//! fns — legal under the hierarchy (levels only order across levels)
+//! and legal under the nesting reconciliation (no opposite order
+//! anywhere in the file).
+
+use std::sync::Mutex;
+
+pub struct State {
+    pub q: Mutex<Vec<u32>>,
+    pub queue: Mutex<Vec<u32>>,
+}
+
+pub fn drain_fast(s: &State) -> u32 {
+    let a = s.q.lock().unwrap_or_else(|p| p.into_inner());
+    let b = s.queue.lock().unwrap_or_else(|p| p.into_inner());
+    a.len() as u32 + b.len() as u32
+}
+
+pub fn drain_slow(s: &State) -> u32 {
+    let a = s.q.lock().unwrap_or_else(|p| p.into_inner());
+    let b = s.queue.lock().unwrap_or_else(|p| p.into_inner());
+    (a.len() + b.len()) as u32
+}
+
+pub fn disjoint(s: &State) -> u32 {
+    let a = s.q.lock().unwrap_or_else(|p| p.into_inner());
+    let n = a.len() as u32;
+    drop(a);
+    let b = s.queue.lock().unwrap_or_else(|p| p.into_inner());
+    n + b.len() as u32
+}

@@ -92,6 +92,40 @@ fn lock_bad_reports_inversion_and_hygiene() {
     );
 }
 
+// -------------------------------------------------- lock-nesting
+
+#[test]
+fn lock_nesting_one_consistent_order_is_clean() {
+    let fs = check(
+        "lock_nesting_ok.rs",
+        "rust/src/serve/lock_nesting_ok.rs",
+    );
+    assert!(fs.is_empty(), "unexpected findings: {fs:?}");
+}
+
+#[test]
+fn lock_nesting_opposite_orders_flag_once_per_pair() {
+    let fs = check(
+        "lock_nesting_bad.rs",
+        "rust/src/serve/lock_nesting_bad.rs",
+    );
+    assert_eq!(count_rule(&fs, "lock-nesting"), 1, "findings: {fs:?}");
+    assert_eq!(
+        fs.len(),
+        1,
+        "each fn passes the rank hierarchy on its own: {fs:?}"
+    );
+    let f = &fs[0];
+    assert_eq!(f.line, 15, "anchor on the first direction seen");
+    assert!(
+        f.msg.contains("`s.q`")
+            && f.msg.contains("`s.queue`")
+            && f.msg.contains("opposite"),
+        "msg: {}",
+        f.msg
+    );
+}
+
 // --------------------------------------------------- condvar-wait
 
 #[test]

@@ -179,8 +179,109 @@ class MethodsGate(unittest.TestCase):
         self.assertTrue(any("object of floors" in f for f in failures))
 
 
-def kernel_row(kernel, backend, gflops, m=256, k=3072, n=64):
-    return {"kernel": kernel, "backend": backend, "threads": 1,
+def quant_row(kind, **over):
+    """A healthy serving_quant row at the acceptance shape."""
+    row = {
+        "kind": kind,
+        "sites": 24,
+        "adapters": 64,
+        "zipf": 1.1,
+        "hit_rate": 0.5,
+        "hit_rate_vs_f32": 1.0,
+        "resident_tensors": 40,
+        "capacity_vs_f32": 1.0,
+        "resident_bytes": 3000000,
+        "rmse_vs_f32": 0.0,
+        "throughput_rps": 100.0,
+    }
+    row.update(over)
+    return row
+
+
+def quant_rows_all():
+    return [
+        quant_row("f32"),
+        quant_row("bf16", capacity_vs_f32=2.0, rmse_vs_f32=0.004),
+        quant_row("int8", capacity_vs_f32=3.5, rmse_vs_f32=0.02),
+    ]
+
+
+QUANT_BASE = {
+    "serving_quant": {
+        "sites": 24,
+        "adapters": 64,
+        "zipf": 1.1,
+        "min_capacity_vs_f32_bf16": 1.8,
+        "max_rmse_vs_f32": {"f32": 0.0, "bf16": 0.03, "int8": 0.08},
+    }
+}
+
+
+class QuantGate(unittest.TestCase):
+    def check(self, rows, base=QUANT_BASE, require=True):
+        failures = []
+        br.check_serving_quant(rows, base, "BENCH_baseline.json",
+                               require, failures)
+        return failures
+
+    def test_healthy_codecs_pass(self):
+        self.assertEqual(self.check(quant_rows_all()), [])
+
+    def test_low_bf16_capacity_fails(self):
+        rows = quant_rows_all()
+        rows[1]["capacity_vs_f32"] = 1.3  # bf16 stopped multiplying
+        failures = self.check(rows)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("effective capacity", failures[0])
+
+    def test_rmse_over_budget_fails_per_kind(self):
+        rows = quant_rows_all()
+        rows[2]["rmse_vs_f32"] = 0.2  # int8 blew its error budget
+        failures = self.check(rows)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("int8", failures[0])
+        self.assertIn("error budget", failures[0])
+
+    def test_f32_must_stay_bit_identical(self):
+        # Any nonzero f32 RMSE means the default codec path no longer
+        # routes through the identity encode — a silent correctness bug.
+        rows = quant_rows_all()
+        rows[0]["rmse_vs_f32"] = 1e-9
+        failures = self.check(rows)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("f32", failures[0])
+
+    def test_gates_default_without_baseline(self):
+        # The capacity and error-budget gates ARE the acceptance
+        # criteria — they must hold with no committed baseline object.
+        rows = quant_rows_all()
+        rows[1]["capacity_vs_f32"] = 1.0
+        failures = self.check(rows, base=None)
+        self.assertTrue(any("effective capacity" in f for f in failures))
+        self.assertEqual(self.check(quant_rows_all(), base=None), [])
+
+    def test_missing_bf16_row_fails(self):
+        rows = [quant_row("f32"),
+                quant_row("int8", capacity_vs_f32=3.5, rmse_vs_f32=0.02)]
+        failures = self.check(rows)
+        self.assertTrue(any("`bf16`" in f for f in failures))
+
+    def test_off_shape_rows_are_not_gated(self):
+        rows = [quant_row("bf16", adapters=8, capacity_vs_f32=0.5,
+                          rmse_vs_f32=9.0)]
+        self.assertEqual(self.check(rows, require=False), [])
+        failures = self.check(rows, require=True)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("matched 0 rows", failures[0])
+
+    def test_malformed_baseline_section_fails(self):
+        failures = self.check(quant_rows_all(),
+                              base={"serving_quant": quant_rows_all()})
+        self.assertTrue(any("object of gates" in f for f in failures))
+
+
+def kernel_row(kernel, backend, gflops, m=256, k=3072, n=64, threads=1):
+    return {"kernel": kernel, "backend": backend, "threads": threads,
             "m": m, "k": k, "n": n, "mean_ns": 1.0, "min_ns": 1.0,
             "gflops": gflops}
 
@@ -206,6 +307,40 @@ class RelativeKernelGate(unittest.TestCase):
         failures = self.check([
             kernel_row("tn", "tiled", 10.0),
             kernel_row("tn", "packed", 20.0),
+        ])
+        self.assertEqual(failures, [])
+
+    def wide_short(self, backend, gflops, threads):
+        m, k, n = br.WIDE_SHORT_SHAPE
+        return kernel_row("nt", backend, gflops, m=m, k=k, n=n,
+                          threads=threads)
+
+    def test_wide_short_threaded_pair_is_gated(self):
+        # At 4 rows the tiled backend cannot parallelize; a packed
+        # backend whose per-block column parallelism regressed to the
+        # tiled wall must fail the threaded relative gate.
+        failures = self.check([
+            self.wide_short("tiled", 10.0, 1),
+            self.wide_short("packed", 15.0, 1),
+            self.wide_short("tiled", 10.0, 0),
+            self.wide_short("packed", 10.5, 0),
+        ])
+        self.assertEqual(len(failures), 1)
+        self.assertIn("t0", failures[0])
+        self.assertIn("1.2x gate", failures[0])
+
+    def test_other_threaded_shapes_stay_ungated(self):
+        # The auto-thread relative gate is pinned to the wide-short
+        # shape; big square shapes at t0 keep their absolute floors
+        # only (both backends parallelize there, the ratio is noise).
+        failures = self.check([
+            kernel_row("nn", "tiled", 10.0, m=1024, k=1024, n=1024,
+                       threads=0),
+            kernel_row("nn", "packed", 10.5, m=1024, k=1024, n=1024,
+                       threads=0),
+            # one serial pair so the vacuous-gate guard stays quiet
+            kernel_row("nn", "tiled", 10.0),
+            kernel_row("nn", "packed", 20.0),
         ])
         self.assertEqual(failures, [])
 
@@ -262,6 +397,37 @@ class EndToEnd(unittest.TestCase):
         doc = {"serving_tail": [tail_row(fused_vs_per_adapter=0.9)]}
         rc = self.run_main(doc, TAIL_BASE, [])
         self.assertEqual(rc, 1)
+
+    def test_quant_only_report_passes_and_is_named(self):
+        import contextlib
+        import io
+        buf = io.StringIO()
+        doc = {"serving_quant": quant_rows_all()}
+        with contextlib.redirect_stdout(buf):
+            rc = self.run_main(doc, QUANT_BASE, [])
+        self.assertEqual(rc, 0)
+        self.assertIn("gates evaluated: serving_quant", buf.getvalue())
+
+    def test_degraded_quant_row_fails_end_to_end(self):
+        doc = {"serving_quant": [
+            quant_row("f32"),
+            quant_row("bf16", capacity_vs_f32=1.2, rmse_vs_f32=0.004),
+            quant_row("int8", capacity_vs_f32=3.5, rmse_vs_f32=0.02),
+        ]}
+        rc = self.run_main(doc, QUANT_BASE, [])
+        self.assertEqual(rc, 1)
+
+    def test_missing_quant_section_fails_under_require(self):
+        # CI mode: scenario 7 vanishing must fail, not silently skip
+        # the quantized-cache gate.
+        doc = {"serving_tail": [tail_row()]}
+        import contextlib
+        import io
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            rc = self.run_main(doc, TAIL_BASE, ["--require-serving"])
+        self.assertEqual(rc, 1)
+        self.assertIn("serving_quant", buf.getvalue())
 
     def test_pass_names_the_gates_it_evaluated(self):
         # A PASS must say which gate sections actually ran, so a CI log

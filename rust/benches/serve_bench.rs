@@ -1,9 +1,9 @@
 //! Bench: multi-adapter serving throughput and latency — the CI-gated
 //! `serving`, `serving_model`, `serving_wire`, `serving_tail`,
-//! `serving_methods`, and `serving_quant` sections of
+//! `serving_methods`, `serving_quant`, and `serving_obs` sections of
 //! `BENCH_linalg.json`.
 //!
-//! Seven scenarios:
+//! Eight scenarios:
 //!
 //! 1. **acceptance** — 64 adapters, one site, Zipf 1.1 popularity,
 //!    firehose injection.  The `batched_vs_sequential` field is the
@@ -44,6 +44,13 @@
 //!    capacity at the identical byte budget) and per-codec
 //!    `rmse_vs_f32` bounds (bf16 <= 0.03, int8 <= 0.08) — the output
 //!    error each codec pays relative to bit-exact f32 serving.
+//! 8. **obs acceptance** — the telemetry-overhead scenario: the
+//!    scenario-1 fleet driven twice on one identical Zipf stream, once
+//!    through an untraced server and once through a server with the
+//!    full `obs` registry attached (stage spans, histograms, slow
+//!    ring).  Gated field: `traced_vs_untraced >= 0.95`
+//!    (machine-independent ratio — tracing must cost < 5% throughput),
+//!    plus a conservative traced-throughput floor.
 //!
 //! Knobs come from the default `[serve]` / `[model]` / `[wire]`
 //! tables; `COSA_SERVE_*` / `COSA_MODEL_*` / `COSA_WIRE_*` env
@@ -52,8 +59,9 @@
 
 use cosa::config::{ModelConfig, WireConfig};
 use cosa::serve::bench::{
-    run, run_methods, run_model, run_quant, run_tail, MethodsBenchOpts,
-    ModelBenchOpts, QuantBenchOpts, ServeBenchOpts, TailBenchOpts,
+    run, run_methods, run_model, run_obs, run_quant, run_tail,
+    MethodsBenchOpts, ModelBenchOpts, ObsBenchOpts, QuantBenchOpts,
+    ServeBenchOpts, TailBenchOpts,
 };
 use cosa::util::bench::write_bench_json;
 use cosa::util::json::Json;
@@ -217,4 +225,25 @@ fn main() {
         Err(e) => eprintln!("serve_bench quant scenario failed: {e:#}"),
     }
     write_bench_json("serving_quant", Json::Arr(quant_rows));
+
+    // Scenario 8: the telemetry-overhead acceptance workload — the
+    // scenario-1 fleet on one identical stream, untraced vs traced.
+    // The serve knobs reuse the scenario-1 env overrides so both
+    // servers and the engine the `serving` floors were measured on
+    // share a configuration; the gated `traced_vs_untraced` ratio is
+    // machine-independent (same machine, same stream, both halves).
+    let odefaults = ObsBenchOpts::default();
+    let oopts = ObsBenchOpts {
+        cfg: acceptance.cfg.clone(),
+        ..odefaults
+    };
+    let mut obs_rows: Vec<Json> = Vec::new();
+    match run_obs(&oopts) {
+        Ok(report) => {
+            report.print();
+            obs_rows.push(report.to_json());
+        }
+        Err(e) => eprintln!("serve_bench obs scenario failed: {e:#}"),
+    }
+    write_bench_json("serving_obs", Json::Arr(obs_rows));
 }

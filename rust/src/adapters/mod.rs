@@ -26,8 +26,8 @@ pub mod rosa;
 pub mod traits;
 
 pub use traits::{
-    decode_site, forward_grouped_into, Adapter, RegenSpec,
-    SERVABLE_METHODS,
+    decode_site, forward_grouped_into, forward_grouped_into_marked,
+    Adapter, GroupedMarks, RegenSpec, SERVABLE_METHODS,
 };
 
 /// The PEFT methods implemented across L2/L3.

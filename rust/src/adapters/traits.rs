@@ -39,6 +39,7 @@
 use std::any::Any;
 use std::collections::BTreeMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::adapters::cosa::{self, CosaAdapter};
 use crate::adapters::lora::LoraAdapter;
@@ -282,6 +283,16 @@ pub fn decode_site(
 pub const SERVABLE_METHODS: [Method; 3] =
     [Method::CoSA, Method::RoSA, Method::LoRA];
 
+/// Timing split of one grouped dispatch, for the telemetry layer
+/// (`obs`): `copy_us` counts the mixed-method staging row copies,
+/// `compute_us` the grouped kernel sweeps themselves.  Uniform-method
+/// batches (the serving fast path) accrue only `compute_us`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GroupedMarks {
+    pub copy_us: u64,
+    pub compute_us: u64,
+}
+
 /// Fused multi-adapter forward over one site: consecutive row segments
 /// of `x` (`segs[g]` rows each) run against their own adapter + regen
 /// set.  Dispatch is per maximal same-method run (see module docs);
@@ -297,6 +308,26 @@ pub fn forward_grouped_into(
     ws: &mut Workspace,
     out: &mut Matrix,
 ) {
+    forward_grouped_into_marked(
+        adapters, regens, alphas, x, segs, ws, out, None,
+    );
+}
+
+/// [`forward_grouped_into`] with an optional [`GroupedMarks`]
+/// accumulator.  With `marks = None` (every non-traced caller) not a
+/// single `Instant::now` is taken — the compute path is byte-for-byte
+/// the untimed one.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_grouped_into_marked(
+    adapters: &[&dyn Adapter],
+    regens: &[&[Arc<QuantMat>]],
+    alphas: &[f32],
+    x: &Matrix,
+    segs: &[usize],
+    ws: &mut Workspace,
+    out: &mut Matrix,
+    mut marks: Option<&mut GroupedMarks>,
+) {
     assert!(
         adapters.len() == segs.len()
             && regens.len() == segs.len()
@@ -306,6 +337,9 @@ pub fn forward_grouped_into(
     if adapters.is_empty() {
         return;
     }
+    let timed = marks.is_some();
+    let mut copy_us = 0u64;
+    let mut compute_us = 0u64;
     let total_segs = segs.len();
     let mut g0 = 0usize;
     let mut row0 = 0usize;
@@ -319,6 +353,7 @@ pub fn forward_grouped_into(
         if g0 == 0 && g1 == total_segs {
             // uniform-method batch: dispatch in place, no row copies —
             // the all-CoSA serving fast path is exactly this arm
+            let t0 = timed.then(Instant::now);
             run_method_into(
                 &adapters[g0..g1],
                 &regens[g0..g1],
@@ -328,15 +363,23 @@ pub fn forward_grouped_into(
                 ws,
                 out,
             );
+            if let Some(t0) = t0 {
+                compute_us += t0.elapsed().as_micros() as u64;
+            }
         } else if rows > 0 {
             // mixed-method batch: copy the run's rows out, compute,
             // copy back (row-independent kernels make this exact)
             let n = adapters[g0].in_dim();
             let m = adapters[g0].out_dim();
+            let t0 = timed.then(Instant::now);
             let mut xs = ws.take_matrix(rows, n);
             xs.data
                 .copy_from_slice(&x.data[row0 * n..(row0 + rows) * n]);
             let mut os = ws.take_matrix(rows, m);
+            if let Some(t0) = t0 {
+                copy_us += t0.elapsed().as_micros() as u64;
+            }
+            let t1 = timed.then(Instant::now);
             run_method_into(
                 &adapters[g0..g1],
                 &regens[g0..g1],
@@ -346,13 +389,24 @@ pub fn forward_grouped_into(
                 ws,
                 &mut os,
             );
+            if let Some(t1) = t1 {
+                compute_us += t1.elapsed().as_micros() as u64;
+            }
+            let t2 = timed.then(Instant::now);
             out.data[row0 * m..(row0 + rows) * m]
                 .copy_from_slice(&os.data);
             ws.recycle_matrix(os);
             ws.recycle_matrix(xs);
+            if let Some(t2) = t2 {
+                copy_us += t2.elapsed().as_micros() as u64;
+            }
         }
         row0 += rows;
         g0 = g1;
+    }
+    if let Some(m) = marks.as_deref_mut() {
+        m.copy_us += copy_us;
+        m.compute_us += compute_us;
     }
 }
 

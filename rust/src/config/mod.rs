@@ -514,6 +514,62 @@ impl ModelConfig {
     }
 }
 
+/// Telemetry knobs (TOML table `[obs]`; the `COSA_OBS_*` env vars
+/// override via [`ObsConfig::env_overridden`]).  Consumed by
+/// `obs::Registry` — per-request stage tracing, the `/metrics`
+/// exposition, and the `/v1/debug/slow` slow-request ring.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// Master switch for request tracing.  `false` keeps `/metrics`
+    /// serving the aggregate counters but stops per-request spans and
+    /// slow-trace capture (one branch per request of overhead).
+    pub enabled: bool,
+    /// WARN + slow-ring threshold: a request whose end-to-end latency
+    /// reaches this many milliseconds is logged with its full stage
+    /// breakdown.
+    pub slow_ms: u64,
+    /// Capacity of the slowest-requests ring behind
+    /// `GET /v1/debug/slow` (0 disables capture).
+    pub slow_ring: usize,
+    /// Most-recent-traces ring capacity (healthy-request exemplars;
+    /// 0 disables).
+    pub exemplars: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            enabled: true,
+            slow_ms: 500,
+            slow_ring: 32,
+            exemplars: 8,
+        }
+    }
+}
+
+impl ObsConfig {
+    /// Apply the `COSA_OBS_*` env overrides (read fresh per call,
+    /// mirroring `COSA_SERVE_*`): `COSA_OBS_ENABLED`,
+    /// `COSA_OBS_SLOW_MS`, `COSA_OBS_SLOW_RING`, `COSA_OBS_EXEMPLARS`.
+    /// Unparseable values warn and fall back.
+    pub fn env_overridden(&self) -> ObsConfig {
+        let mut out = self.clone();
+        out.enabled = env_num("COSA_OBS_ENABLED", out.enabled);
+        out.slow_ms = env_num("COSA_OBS_SLOW_MS", out.slow_ms);
+        out.slow_ring = env_num("COSA_OBS_SLOW_RING", out.slow_ring);
+        out.exemplars = env_num("COSA_OBS_EXEMPLARS", out.exemplars);
+        if out.slow_ms == 0 {
+            eprintln!(
+                "warning: COSA_OBS_SLOW_MS=0 would flag every request \
+                 as slow; using {}",
+                self.slow_ms
+            );
+            out.slow_ms = self.slow_ms;
+        }
+        out
+    }
+}
+
 /// A full run description.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -528,6 +584,7 @@ pub struct RunConfig {
     pub serve: ServeConfig,
     pub wire: WireConfig,
     pub model: ModelConfig,
+    pub obs: ObsConfig,
     pub base_seed: u64,
     pub adapter_seed: u64,
     pub data_seed: u64,
@@ -545,6 +602,7 @@ impl Default for RunConfig {
             serve: ServeConfig::default(),
             wire: WireConfig::default(),
             model: ModelConfig::default(),
+            obs: ObsConfig::default(),
             base_seed: 42,
             adapter_seed: 1234,
             data_seed: 7,
@@ -695,6 +753,27 @@ impl RunConfig {
                 .collect::<anyhow::Result<Vec<_>>>()?;
         }
         m.method = doc.str_or("model.method", &m.method);
+
+        let o = &mut cfg.obs;
+        o.enabled = doc.bool_or("obs.enabled", o.enabled);
+        let slow_ms = doc.i64_or("obs.slow_ms", o.slow_ms as i64);
+        anyhow::ensure!(
+            slow_ms >= 1,
+            "obs.slow_ms must be >= 1 (got {slow_ms}; disable tracing \
+             with obs.enabled = false instead)"
+        );
+        o.slow_ms = slow_ms as u64;
+        for (key, field) in [
+            ("obs.slow_ring", &mut o.slow_ring),
+            ("obs.exemplars", &mut o.exemplars),
+        ] {
+            let v = doc.i64_or(key, *field as i64);
+            anyhow::ensure!(
+                (0..=65536).contains(&v),
+                "{key} must be in 0..=65536 (got {v})"
+            );
+            *field = v as usize;
+        }
         // Fail fast on unbuildable model tables (bad site-spec syntax,
         // duplicate site names, unservable method) instead of at
         // first use.
@@ -1038,6 +1117,52 @@ data = 3
         std::env::remove_var("COSA_MODEL_SITES_SPEC");
         let cfg = ModelConfig::default().env_overridden();
         assert_eq!(cfg, ModelConfig::default());
+    }
+
+    #[test]
+    fn obs_table_parses_and_validates() {
+        let cfg = RunConfig::from_toml(
+            "[obs]\nenabled = false\nslow_ms = 250\nslow_ring = 64\n\
+             exemplars = 16",
+        )
+        .unwrap();
+        assert!(!cfg.obs.enabled);
+        assert_eq!(cfg.obs.slow_ms, 250);
+        assert_eq!(cfg.obs.slow_ring, 64);
+        assert_eq!(cfg.obs.exemplars, 16);
+        assert!(RunConfig::from_toml("[obs]\nslow_ms = 0").is_err());
+        assert!(RunConfig::from_toml("[obs]\nslow_ring = -1").is_err());
+        assert!(RunConfig::from_toml("[obs]\nexemplars = 100000")
+            .is_err());
+        // defaults when the table is absent: tracing on
+        let d = RunConfig::from_toml("").unwrap();
+        assert_eq!(d.obs, ObsConfig::default());
+        assert!(d.obs.enabled);
+    }
+
+    #[test]
+    fn obs_env_overrides_win_and_warn_on_garbage() {
+        std::env::set_var("COSA_OBS_ENABLED", "false");
+        std::env::set_var("COSA_OBS_SLOW_MS", "0");
+        std::env::set_var("COSA_OBS_SLOW_RING", "not-a-number");
+        std::env::set_var("COSA_OBS_EXEMPLARS", "12");
+        let cfg = ObsConfig::default().env_overridden();
+        assert!(!cfg.enabled, "env wins over the default");
+        assert_eq!(cfg.slow_ms, ObsConfig::default().slow_ms,
+                   "slow_ms=0 falls back like the TOML path");
+        assert_eq!(cfg.slow_ring, ObsConfig::default().slow_ring,
+                   "garbage env value falls back");
+        assert_eq!(cfg.exemplars, 12);
+        for key in [
+            "COSA_OBS_ENABLED",
+            "COSA_OBS_SLOW_MS",
+            "COSA_OBS_SLOW_RING",
+            "COSA_OBS_EXEMPLARS",
+        ] {
+            std::env::remove_var(key);
+        }
+        let cfg = ObsConfig::default().env_overridden();
+        assert_eq!(cfg, ObsConfig::default());
     }
 
     #[test]

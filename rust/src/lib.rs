@@ -68,6 +68,19 @@
 //! The `serve` CLI subcommand runs it; `serve-bench --wire` measures
 //! it (`serving_wire` report section, CI-gated).
 //!
+//! ## Telemetry (`obs`)
+//!
+//! The [`obs`] subsystem is the serving stack's first-class telemetry
+//! layer: per-request stage-timing spans ([`obs::Trace`]) carried by
+//! the scheduler ticket through parse → admission → queue →
+//! batch_assemble → cache_plan → pack → gemm → reply, aggregated into
+//! per-stage log₂-µs histograms keyed by request class and adapter
+//! method; a hand-rolled Prometheus text-format exposition at
+//! `GET /metrics`; and a lock-striped slow-request ring behind
+//! `GET /v1/debug/slow`.  Knobs live in the `[obs]` config table with
+//! `COSA_OBS_*` env overrides; `serve-bench --obs` (scenario 8) gates
+//! traced throughput ≥ 0.95× untraced.
+//!
 //! ## Offline builds
 //!
 //! The workspace compiles with no network: `anyhow` and `xla` resolve to
@@ -83,6 +96,7 @@ pub mod exp;
 pub mod linalg;
 pub mod math;
 pub mod model;
+pub mod obs;
 pub mod rip;
 pub mod runtime;
 pub mod serve;

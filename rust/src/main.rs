@@ -120,10 +120,11 @@ fn cmd_eval(args: &Args) -> anyhow::Result<()> {
 /// `serve`: run the HTTP/1.1 + JSON gateway over the multi-adapter
 /// serving engine in the foreground.  The served `ModelSpec` comes
 /// from the `[model]` table, engine knobs from `[serve]`, transport
-/// knobs from `[wire]` — each env-overridable (`COSA_MODEL_*`,
-/// `COSA_SERVE_*`, `COSA_WIRE_*`) with CLI flags taking highest
-/// precedence.  `[serve] preload_dir` warm-loads every checkpoint in
-/// the directory before the listener opens.
+/// knobs from `[wire]`, telemetry knobs from `[obs]` — each
+/// env-overridable (`COSA_MODEL_*`, `COSA_SERVE_*`, `COSA_WIRE_*`,
+/// `COSA_OBS_*`) with CLI flags taking highest precedence.  `[serve]
+/// preload_dir` warm-loads every checkpoint in the directory before
+/// the listener opens.
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     use cosa::model::AdaptedModel;
     use cosa::wire::Gateway;
@@ -160,16 +161,34 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if let Some(v) = args.opt("http-workers") {
         wire.http_workers = v.parse()?;
     }
+    let mut obs = cfg.obs.env_overridden();
+    if args.bool("no-obs") {
+        obs.enabled = false;
+    }
+    if let Some(v) = args.opt("obs-slow-ms") {
+        obs.slow_ms = v.parse()?;
+        anyhow::ensure!(obs.slow_ms >= 1, "--obs-slow-ms must be >= 1");
+    }
     let model_cfg = cfg.model.env_overridden();
     let spec = model_cfg.to_spec(&cfg.name)?;
     let model = AdaptedModel::new(spec, serve.cache_budget_bytes())?;
-    let gateway = Gateway::start(model, &serve, &wire)?;
+    let gateway = Gateway::start_obs(model, &serve, &wire, &obs)?;
     info!(
         "gateway up on http://{} — POST /v1/forward, \
          POST /v1/adapters/{{name}}/load, DELETE /v1/adapters/{{name}}, \
-         GET /v1/stats, GET /healthz (Ctrl-C to stop)",
+         GET /v1/stats, GET /v1/adapters, GET /metrics, \
+         GET /v1/debug/slow, GET /healthz (Ctrl-C to stop)",
         gateway.addr()
     );
+    if obs.enabled {
+        info!(
+            "obs: tracing on — slow watermark {} ms, slow ring {}, \
+             {} recent exemplars",
+            obs.slow_ms, obs.slow_ring, obs.exemplars
+        );
+    } else {
+        info!("obs: tracing off (--no-obs / [obs] enabled = false)");
+    }
     // Foreground server: park until killed (no signal handling in a
     // zero-dependency std build; the OS reclaims the sockets).
     loop {
@@ -182,8 +201,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 /// `serving_model` (whole adapted model), and opt-in `serving_wire` /
 /// `serving_tail` (fused vs per-adapter batching) / `serving_methods`
 /// (cross-method adapter-zoo table) / `serving_quant` (f32 vs bf16 vs
-/// int8 cache codecs at one thrashing LRU budget) sections of the
-/// canonical `BENCH_linalg.json`.  Knob precedence, highest first: CLI flags,
+/// int8 cache codecs at one thrashing LRU budget) / `serving_obs`
+/// (traced vs untraced throughput on one identical stream) sections of
+/// the canonical `BENCH_linalg.json`.  Knob precedence, highest
+/// first: CLI flags,
 /// `COSA_SERVE_*` / `COSA_MODEL_*` env, `[serve]` / `[model]` config
 /// tables.  The preset worker hint (`ServeConfig::resolved`) is
 /// deliberately NOT applied: it describes serving a *model preset's*
@@ -405,6 +426,43 @@ fn cmd_serve_bench(args: &Args) -> anyhow::Result<()> {
         cosa::util::bench::write_bench_json(
             "serving_quant", Json::Arr(qreport.to_json_rows()));
     }
+
+    // Obs scenario (opt-in: --obs): the telemetry-overhead acceptance
+    // workload — the identical single-site Zipf stream through a
+    // tracing-disabled server and a fully traced one in interleaved
+    // passes -> `serving_obs` section.  CI gates
+    // `traced_vs_untraced >= 0.95` (tracing must cost under 5%
+    // throughput).  Engine knobs reuse the scenario-1 CLI/env
+    // overrides' worker count; the rest of the shape IS the
+    // single-site acceptance scenario unless overridden.
+    if args.bool("obs") {
+        use cosa::serve::bench::{run_obs, ObsBenchOpts};
+        let odefaults = ObsBenchOpts::default();
+        let oopts = ObsBenchOpts {
+            adapters: args.usize("obs-adapters", odefaults.adapters),
+            requests: args.usize("obs-requests", odefaults.requests),
+            zipf: args.f64("zipf", odefaults.zipf),
+            site: SiteShape {
+                m: args.usize("site-m", odefaults.site.m),
+                n: args.usize("site-n", odefaults.site.n),
+            },
+            core_a: args.usize("core-a", odefaults.core_a),
+            core_b: args.usize("core-b", odefaults.core_b),
+            seed: args.u64("seed", odefaults.seed),
+            passes: args.usize("obs-passes", odefaults.passes),
+            cfg: cosa::config::ServeConfig {
+                workers: serve.workers,
+                ..odefaults.cfg.clone()
+            },
+        };
+        anyhow::ensure!(oopts.adapters >= 1,
+                        "--obs-adapters must be >= 1");
+        anyhow::ensure!(oopts.passes >= 1, "--obs-passes must be >= 1");
+        let oreport = run_obs(&oopts)?;
+        oreport.print();
+        cosa::util::bench::write_bench_json(
+            "serving_obs", Json::Arr(vec![oreport.to_json()]));
+    }
     Ok(())
 }
 
@@ -433,15 +491,18 @@ USAGE: cosa-repro <subcommand> [flags]
   params  [--rank R --a A --b B]                alias for `exp fig3`
   serve   [--config <toml> --host H --port P --http-workers N]
           [--preload-dir D --batch N --wait-us U --workers N
-           --cache-mb F]
+           --cache-mb F] [--no-obs --obs-slow-ms MS]
           run the HTTP/1.1 + streaming-JSON gateway over the serving
           engine in the foreground: POST /v1/forward,
           POST /v1/adapters/{name}/load, DELETE /v1/adapters/{name},
-          GET /v1/adapters, GET /v1/stats, GET /healthz.
-          [wire]/[serve]/[model] config
-          tables and COSA_WIRE_*/COSA_SERVE_*/COSA_MODEL_* env provide
+          GET /v1/adapters, GET /v1/stats, GET /metrics (Prometheus
+          text), GET /v1/debug/slow (slowest traces), GET /healthz.
+          [wire]/[serve]/[model]/[obs] config tables and
+          COSA_WIRE_*/COSA_SERVE_*/COSA_MODEL_*/COSA_OBS_* env provide
           the defaults; --preload-dir warm-loads every checkpoint in a
-          directory before the listener opens
+          directory before the listener opens; --no-obs disables
+          request tracing, --obs-slow-ms sets the slow-request WARN
+          watermark
   serve-bench  [--adapters N --requests N --zipf S --rate RPS]
           [--batch N --wait-us U --workers N --cache-mb F]
           [--site-m M --site-n N --core-a A --core-b B --seed S]
@@ -451,6 +512,7 @@ USAGE: cosa-repro <subcommand> [flags]
           [--methods --methods-adapters N --methods-requests N]
           [--quant --quant-adapters N --quant-requests N --quant-zipf S
            --quant-cache-mb F]
+          [--obs --obs-adapters N --obs-requests N --obs-passes N]
           multi-adapter serving benchmarks: the single-site scenario
           (batched scheduler vs sequential per-request forward ->
           `serving` section of BENCH_linalg.json) plus the whole-model
@@ -469,6 +531,8 @@ USAGE: cosa-repro <subcommand> [flags]
           `serving_methods` section); --quant adds the quantized-cache
           codec comparison (f32 vs bf16 vs int8 residents at one
           thrashing LRU budget: effective-capacity ratio, hit rates,
-          output RMSE vs f32 -> `serving_quant` section)
+          output RMSE vs f32 -> `serving_quant` section); --obs adds
+          the telemetry-overhead scenario (traced vs untraced server
+          on one identical stream -> `serving_obs` section)
   list    show artifacts (build with `make artifacts`)
 ";

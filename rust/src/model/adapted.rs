@@ -129,6 +129,24 @@ impl ModelPlan {
             .collect()
     }
 
+    /// `(warm, cold)` regenerable-tensor counts across the plan's
+    /// sites — the projection-cache hit/miss split a request trace
+    /// records (fully-stored methods report `(0, 0)`).
+    pub fn cache_hits_misses(&self) -> (u32, u32) {
+        let mut hits = 0u32;
+        let mut misses = 0u32;
+        for site in &self.sites {
+            for have in &site.have {
+                if have.is_some() {
+                    hits = hits.saturating_add(1);
+                } else {
+                    misses = misses.saturating_add(1);
+                }
+            }
+        }
+        (hits, misses)
+    }
+
     /// Materialize exactly the tensors the plan found cold — the
     /// outside-the-lock step of the plan/install split, method-agnostic
     /// (each slot regenerates from its own [`RegenSpec`]).

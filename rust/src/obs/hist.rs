@@ -1,0 +1,234 @@
+//! Shared log₂-µs latency histogram.
+//!
+//! Promoted out of `serve::scheduler` (where it was `LatencyHist`) so
+//! the scheduler's per-class latency stats and the telemetry layer's
+//! per-stage spans share one type.  Bucket `b` covers durations in
+//! `[2^(b-1), 2^b - 1]` µs (bucket 0 is exactly 0 µs); the final
+//! bucket absorbs everything ≥ 2^38 µs.  Recording is two relaxed
+//! atomic adds — safe to call from every worker concurrently — and
+//! percentile readouts return the *upper edge* of the bucket holding
+//! the requested rank, exactly as the scheduler's old `p99_us` did.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log₂ buckets.  40 buckets reach `2^39 - 1` µs ≈ 6 days.
+pub const BUCKETS: usize = 40;
+
+/// Inclusive upper edge of bucket `b`, in µs.
+pub fn bucket_upper_us(b: usize) -> u64 {
+    (1u64 << b.min(BUCKETS - 1)) - 1
+}
+
+/// Lock-free log₂-µs histogram with a running sum.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: Box<[AtomicU64]>,
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        let counts: Vec<AtomicU64> =
+            (0..BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            counts: counts.into_boxed_slice(),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket(us: u64) -> usize {
+        ((64 - us.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    pub fn record_us(&self, us: u64) {
+        let b = Self::bucket(us);
+        if let Some(c) = self.counts.get(b) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Upper bucket edge of the requested percentile (1..=100); 0 for
+    /// an empty histogram.
+    pub fn percentile_us(&self, pct: u8) -> u64 {
+        self.snapshot().percentile_us(pct)
+    }
+
+    pub fn p50_us(&self) -> u64 {
+        self.percentile_us(50)
+    }
+
+    pub fn p95_us(&self) -> u64 {
+        self.percentile_us(95)
+    }
+
+    pub fn p99_us(&self) -> u64 {
+        self.percentile_us(99)
+    }
+
+    /// Consistent point-in-time copy for rendering (`/metrics`,
+    /// `/v1/stats`).  Per-bucket loads are relaxed; a scrape racing a
+    /// record may be off by the in-flight sample, never corrupt.
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            buckets: self
+                .counts
+                .iter()
+                .map(|c| c.load(Ordering::Relaxed))
+                .collect(),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Owned copy of a [`Histogram`]'s state.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Snapshot {
+    pub buckets: Vec<u64>,
+    pub sum_us: u64,
+}
+
+impl Snapshot {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    pub fn percentile_us(&self, pct: u8) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = (total * u64::from(pct.min(100))).div_ceil(100).max(1);
+        let mut seen = 0u64;
+        for (b, c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper_us(b);
+            }
+        }
+        bucket_upper_us(BUCKETS - 1)
+    }
+
+    pub fn p50_us(&self) -> u64 {
+        self.percentile_us(50)
+    }
+
+    pub fn p95_us(&self) -> u64 {
+        self.percentile_us(95)
+    }
+
+    pub fn p99_us(&self) -> u64 {
+        self.percentile_us(99)
+    }
+
+    /// Accumulate `other` into `self` (used to merge per-class /
+    /// per-method stage histograms into one series).
+    pub fn merge(&mut self, other: &Snapshot) {
+        if self.buckets.len() < other.buckets.len() {
+            self.buckets.resize(other.buckets.len(), 0);
+        }
+        for (b, c) in other.buckets.iter().enumerate() {
+            if let Some(slot) = self.buckets.get_mut(b) {
+                *slot += c;
+            }
+        }
+        self.sum_us += other.sum_us;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(Histogram::bucket(0), 0);
+        assert_eq!(Histogram::bucket(1), 1);
+        assert_eq!(Histogram::bucket(2), 2);
+        assert_eq!(Histogram::bucket(3), 2);
+        assert_eq!(Histogram::bucket(4), 3);
+        assert_eq!(Histogram::bucket(1023), 10);
+        assert_eq!(Histogram::bucket(1024), 11);
+        assert_eq!(Histogram::bucket(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn empty_percentiles_are_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.p50_us(), 0);
+        assert_eq!(h.p99_us(), 0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum_us(), 0);
+    }
+
+    #[test]
+    fn percentile_matches_scheduler_p99_semantics() {
+        // 100 samples at ~1 ms, one at ~1 s: the p99 rank (rank 100
+        // of 101) still lands in the 1 ms bucket; p100 in the 1 s
+        // bucket.  Mirrors the old scheduler test shape.
+        let h = Histogram::new();
+        for _ in 0..100 {
+            h.record_us(1000);
+        }
+        h.record_us(1_000_000);
+        assert!(h.p99_us() < 2048, "p99={}", h.p99_us());
+        assert!(h.percentile_us(100) >= 1_000_000);
+        assert_eq!(h.count(), 101);
+        assert_eq!(h.sum_us(), 100 * 1000 + 1_000_000);
+    }
+
+    #[test]
+    fn percentiles_are_monotone_in_pct() {
+        let h = Histogram::new();
+        for us in [0u64, 3, 10, 100, 1000, 10_000, 100_000] {
+            h.record_us(us);
+        }
+        let mut prev = 0;
+        for pct in [1u8, 25, 50, 75, 95, 99, 100] {
+            let v = h.percentile_us(pct);
+            assert!(v >= prev, "pct {pct}: {v} < {prev}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn snapshot_merge_adds() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        a.record_us(10);
+        b.record_us(10);
+        b.record_us(1_000_000);
+        let mut s = a.snapshot();
+        s.merge(&b.snapshot());
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.sum_us, 10 + 10 + 1_000_000);
+        assert!(s.p99_us() >= 1_000_000 / 2);
+    }
+
+    #[test]
+    fn record_duration_uses_micros() {
+        let h = Histogram::new();
+        h.record(Duration::from_millis(2));
+        assert_eq!(h.sum_us(), 2000);
+        assert_eq!(h.count(), 1);
+    }
+}

@@ -1,0 +1,392 @@
+//! `obs` — zero-dependency telemetry for the serving stack.
+//!
+//! Three pieces, all std-only:
+//!
+//! * **Stage-timing spans** ([`trace`]): a [`Trace`] handle created at
+//!   HTTP accept (or `Server::submit*` for in-process callers) rides
+//!   the request through the pipeline, stamping monotonic marks for
+//!   `parse` → `admission` → `queue` → `batch_assemble` →
+//!   `cache_plan` → `pack` → `gemm` → `reply`.  Finished spans fold
+//!   into per-stage log₂-µs [`Histogram`]s keyed by request class and
+//!   adapter method.
+//! * **Exposition** ([`prom`]): a hand-rolled Prometheus text-format
+//!   writer; `GET /metrics` renders every serving counter plus these
+//!   histograms as `_bucket`/`_sum`/`_count` series.
+//! * **Slow-request capture** ([`slow`]): a lock-striped ring of the
+//!   N slowest traces over a sliding window behind
+//!   `GET /v1/debug/slow`, with a WARN line past `[obs] slow_ms`.
+//!
+//! The [`Registry`] owns all aggregate state and is shared as an
+//! `Arc` between the gateway, the scheduler, and the exposition
+//! endpoints.  With `enabled = false`, [`Registry::begin`] returns
+//! `None` and the request path pays a single branch — the scenario-8
+//! bench gates traced throughput at ≥ 0.95× untraced.
+
+pub mod hist;
+pub mod prom;
+pub mod slow;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, SystemTime, UNIX_EPOCH};
+
+pub use hist::{Histogram, Snapshot, BUCKETS};
+pub use slow::{SlowEntry, SLOW_WINDOW};
+pub use trace::{Outcome, Stage, Trace, OUTCOME_COUNT, STAGE_COUNT};
+
+use crate::config::ObsConfig;
+use crate::util::logging::{self, Level};
+use slow::{RecentRing, SlowRing};
+
+/// Request-class labels, in `serve::scheduler::RequestClass` index
+/// order (the scheduler passes the class *index* when classifying a
+/// trace; these strings only name the series).
+pub const CLASS_LABELS: [&str; 3] = ["interactive", "batch", "background"];
+
+/// Adapter-method labels.  The first three mirror
+/// `adapters::traits::Method` tags; requests whose method is not yet
+/// known (sheds, parse errors, unknown adapters) bucket last.
+pub const METHOD_LABELS: [&str; 4] = ["cosa", "rosa", "lora", "unknown"];
+
+/// Index of the `"unknown"` method bucket.
+pub const METHOD_UNKNOWN: usize = METHOD_LABELS.len() - 1;
+
+const CLASSES: usize = CLASS_LABELS.len();
+const METHODS: usize = METHOD_LABELS.len();
+
+/// Shared telemetry state: per-stage histograms, outcome counters,
+/// and the slow/recent trace rings.
+pub struct Registry {
+    enabled: bool,
+    slow_us: u64,
+    next_id: AtomicU64,
+    /// `[class][method][stage]`, flattened.
+    stage_hists: Box<[Histogram]>,
+    grouped_copy: Histogram,
+    grouped_compute: Histogram,
+    finished: [AtomicU64; OUTCOME_COUNT],
+    slow_total: AtomicU64,
+    slow: SlowRing,
+    recent: RecentRing,
+}
+
+impl Registry {
+    pub fn new(cfg: &ObsConfig) -> Arc<Self> {
+        Self::with_params(
+            cfg.enabled,
+            cfg.slow_ms,
+            cfg.slow_ring,
+            cfg.exemplars,
+        )
+    }
+
+    /// A registry that records nothing ([`Registry::begin`] returns
+    /// `None`).  `Server::new` defaults to this so in-process callers
+    /// opt in explicitly via `Server::with_obs`.
+    pub fn disabled() -> Arc<Self> {
+        Self::with_params(false, u64::MAX / 2000, 0, 0)
+    }
+
+    pub fn with_params(
+        enabled: bool,
+        slow_ms: u64,
+        slow_ring: usize,
+        exemplars: usize,
+    ) -> Arc<Self> {
+        let n = CLASSES * METHODS * STAGE_COUNT;
+        let hists: Vec<Histogram> =
+            (0..n).map(|_| Histogram::new()).collect();
+        Arc::new(Registry {
+            enabled,
+            slow_us: slow_ms.saturating_mul(1000),
+            next_id: AtomicU64::new(1),
+            stage_hists: hists.into_boxed_slice(),
+            grouped_copy: Histogram::new(),
+            grouped_compute: Histogram::new(),
+            finished: Default::default(),
+            slow_total: AtomicU64::new(0),
+            slow: SlowRing::new(slow_ring, SLOW_WINDOW),
+            recent: RecentRing::new(exemplars),
+        })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn slow_ms(&self) -> u64 {
+        self.slow_us / 1000
+    }
+
+    /// Open a new trace, or `None` when tracing is disabled (the
+    /// whole request then pays one branch per call site).
+    pub fn begin(self: &Arc<Self>) -> Option<Trace> {
+        if !self.enabled {
+            return None;
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        Some(Trace::new(Arc::clone(self), id))
+    }
+
+    fn hist_idx(class: usize, method: usize, stage: usize) -> usize {
+        let c = class.min(CLASSES - 1);
+        let m = method.min(METHODS - 1);
+        let s = stage.min(STAGE_COUNT - 1);
+        (c * METHODS + m) * STAGE_COUNT + s
+    }
+
+    pub fn stage_snapshot(
+        &self,
+        class: usize,
+        method: usize,
+        stage: usize,
+    ) -> Snapshot {
+        let i = Self::hist_idx(class, method, stage);
+        self.stage_hists
+            .get(i)
+            .map(Histogram::snapshot)
+            .unwrap_or_default()
+    }
+
+    /// One stage's histogram merged across every class and method
+    /// (the bench's per-stage p99 readout).
+    pub fn merged_stage_snapshot(&self, stage: Stage) -> Snapshot {
+        let mut acc = Snapshot::default();
+        for c in 0..CLASSES {
+            for m in 0..METHODS {
+                acc.merge(&self.stage_snapshot(c, m, stage.idx()));
+            }
+        }
+        acc
+    }
+
+    pub fn finished(&self, outcome: Outcome) -> u64 {
+        self.finished
+            .get(outcome.idx())
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    pub fn finished_total(&self) -> u64 {
+        self.finished
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    pub fn slow_total(&self) -> u64 {
+        self.slow_total.load(Ordering::Relaxed)
+    }
+
+    pub fn slow_snapshot(&self) -> Vec<SlowEntry> {
+        self.slow.snapshot()
+    }
+
+    /// The most recent `exemplars` finished traces (any speed).
+    pub fn recent_snapshot(&self) -> Vec<SlowEntry> {
+        self.recent.snapshot()
+    }
+
+    /// Fold the adapters-layer grouped-forward split (mixed-method
+    /// row copies vs. compute) into the registry.
+    pub fn record_grouped(&self, copy_us: u64, compute_us: u64) {
+        self.grouped_copy.record_us(copy_us);
+        self.grouped_compute.record_us(compute_us);
+    }
+
+    pub fn grouped_copy_snapshot(&self) -> Snapshot {
+        self.grouped_copy.snapshot()
+    }
+
+    pub fn grouped_compute_snapshot(&self) -> Snapshot {
+        self.grouped_compute.snapshot()
+    }
+
+    /// Terminal accounting for one trace — called exactly once per
+    /// trace by [`Trace::finish`] / its `Drop` guard.
+    pub(crate) fn record(&self, t: &Trace, outcome: Outcome) {
+        if let Some(c) = self.finished.get(outcome.idx()) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut prev = 0u64;
+        for s in Stage::ALL {
+            if let Some(off) = t.marks.get(s.idx()).copied().flatten() {
+                let i = Self::hist_idx(t.class, t.method, s.idx());
+                if let Some(h) = self.stage_hists.get(i) {
+                    h.record_us(off.saturating_sub(prev));
+                }
+                prev = off;
+            }
+        }
+        let total_us = t
+            .marks
+            .get(Stage::Reply.idx())
+            .copied()
+            .flatten()
+            .unwrap_or(prev);
+        let slow = total_us >= self.slow_us;
+        if !slow && !self.recent.active() && !self.slow.active() {
+            return;
+        }
+        let entry = SlowEntry {
+            id: t.id,
+            unix_ms: SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_millis() as u64)
+                .unwrap_or(0),
+            total_us,
+            class: CLASS_LABELS
+                .get(t.class)
+                .copied()
+                .unwrap_or("interactive"),
+            method: METHOD_LABELS
+                .get(t.method)
+                .copied()
+                .unwrap_or("unknown"),
+            outcome: outcome.name(),
+            adapter: t
+                .adapter
+                .as_deref()
+                .unwrap_or("")
+                .to_string(),
+            batch_rows: t.batch_rows,
+            cache_hits: t.cache_hits,
+            cache_misses: t.cache_misses,
+            stages: t.marks,
+            at: t.start + Duration::from_micros(total_us),
+        };
+        if slow {
+            self.slow_total.fetch_add(1, Ordering::Relaxed);
+            let d = |s: Stage| stage_delta(&t.marks, s);
+            logging::log_req(
+                Level::Warn,
+                Some(t.id),
+                &format!(
+                    "slow request: {:.1} ms total (queue {:.1}, \
+                     cache_plan {:.1}, gemm {:.1}) class={} \
+                     method={} adapter={} rows={} cache={}h/{}m \
+                     outcome={}",
+                    total_us as f64 / 1000.0,
+                    d(Stage::Queue) as f64 / 1000.0,
+                    d(Stage::CachePlan) as f64 / 1000.0,
+                    d(Stage::Gemm) as f64 / 1000.0,
+                    entry.class,
+                    entry.method,
+                    entry.adapter,
+                    entry.batch_rows,
+                    entry.cache_hits,
+                    entry.cache_misses,
+                    entry.outcome,
+                ),
+            );
+        }
+        self.slow.offer(entry.clone());
+        self.recent.push(entry);
+    }
+}
+
+/// Duration of `stage` within a finished span set: offset delta from
+/// the previous *marked* stage (0 when the stage never ran).
+pub fn stage_delta(
+    marks: &[Option<u64>; STAGE_COUNT],
+    stage: Stage,
+) -> u64 {
+    let Some(off) = marks.get(stage.idx()).copied().flatten() else {
+        return 0;
+    };
+    let mut prev = 0u64;
+    for s in Stage::ALL {
+        if s.idx() >= stage.idx() {
+            break;
+        }
+        if let Some(p) = marks.get(s.idx()).copied().flatten() {
+            prev = p;
+        }
+    }
+    off.saturating_sub(prev)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_registry_hands_out_no_traces() {
+        let reg = Registry::disabled();
+        assert!(!reg.enabled());
+        assert!(reg.begin().is_none());
+    }
+
+    #[test]
+    fn begin_assigns_unique_ids() {
+        let reg = Registry::with_params(true, 1_000_000, 8, 8);
+        let a = reg.begin().map(|t| t.id()).unwrap_or(0);
+        let b = reg.begin().map(|t| t.id()).unwrap_or(0);
+        assert!(a > 0 && b > 0 && a != b);
+    }
+
+    #[test]
+    fn finish_records_outcome_and_stage_deltas() {
+        let reg = Registry::with_params(true, 1_000_000, 8, 8);
+        let mut t = reg.begin().expect("enabled");
+        t.set_class(1);
+        t.set_method("rosa");
+        t.mark(Stage::Parse);
+        t.mark(Stage::Queue);
+        t.finish(Outcome::Answered);
+        assert_eq!(reg.finished(Outcome::Answered), 1);
+        assert_eq!(reg.finished(Outcome::Expired), 0);
+        // class=batch(1), method=rosa(1): parse, queue, reply each
+        // recorded one sample.
+        for s in [Stage::Parse, Stage::Queue, Stage::Reply] {
+            assert_eq!(reg.stage_snapshot(1, 1, s.idx()).count(), 1);
+        }
+        assert_eq!(
+            reg.stage_snapshot(1, 1, Stage::Gemm.idx()).count(),
+            0
+        );
+        assert_eq!(reg.merged_stage_snapshot(Stage::Queue).count(), 1);
+    }
+
+    #[test]
+    fn dropped_traces_still_record() {
+        let reg = Registry::with_params(true, 1_000_000, 8, 8);
+        {
+            let mut t = reg.begin().expect("enabled");
+            t.mark(Stage::Parse);
+            // dropped without finish (e.g. scheduler shutdown)
+        }
+        assert_eq!(reg.finished(Outcome::Dropped), 1);
+        let recent = reg.recent_snapshot();
+        assert_eq!(recent.len(), 1);
+        assert_eq!(recent[0].outcome, "dropped");
+        // The Drop guard stamps the terminal reply mark.
+        assert!(recent[0].stages[Stage::Reply.idx()].is_some());
+    }
+
+    #[test]
+    fn slow_requests_count_and_capture() {
+        // slow_ms = 0: everything is "slow".
+        let reg = Registry::with_params(true, 0, 8, 0);
+        let t = reg.begin().expect("enabled");
+        t.finish(Outcome::Answered);
+        assert_eq!(reg.slow_total(), 1);
+        assert_eq!(reg.slow_snapshot().len(), 1);
+        // exemplars = 0: recent ring inert.
+        assert!(reg.recent_snapshot().is_empty());
+    }
+
+    #[test]
+    fn stage_delta_skips_unmarked_stages() {
+        let mut marks = [None; STAGE_COUNT];
+        marks[Stage::Parse.idx()] = Some(10);
+        marks[Stage::Queue.idx()] = Some(250);
+        marks[Stage::Reply.idx()] = Some(300);
+        assert_eq!(stage_delta(&marks, Stage::Parse), 10);
+        // queue's previous marked stage is parse (admission unmarked)
+        assert_eq!(stage_delta(&marks, Stage::Queue), 240);
+        assert_eq!(stage_delta(&marks, Stage::Gemm), 0);
+        assert_eq!(stage_delta(&marks, Stage::Reply), 50);
+    }
+}

@@ -1,0 +1,354 @@
+//! Hand-rolled Prometheus text-format (v0.0.4) writer — std only,
+//! like `wire::json`.
+//!
+//! [`PromWriter`] produces `# HELP` / `# TYPE` headers, counter and
+//! gauge samples, and full `_bucket`/`_sum`/`_count` histogram series
+//! from [`hist::Snapshot`]s.  Label values are escaped per the
+//! exposition spec (`\\`, `\"`, `\n`).  Histogram `le` edges are the
+//! log₂ bucket upper bounds in µs, cumulative, with a final `+Inf`
+//! bucket equal to the sample count — the layout Prometheus'
+//! `histogram_quantile` expects.
+//!
+//! [`render_registry`] emits the telemetry registry's own series
+//! (per-stage histograms keyed by class and method, grouped-forward
+//! split timings, outcome counters); `wire::api::metrics` composes it
+//! with the scheduler / cache / HTTP counters into `GET /metrics`.
+
+use super::hist::{bucket_upper_us, Snapshot, BUCKETS};
+use super::trace::{Outcome, Stage};
+use super::{Registry, CLASS_LABELS, METHOD_LABELS};
+
+pub struct PromWriter {
+    out: String,
+}
+
+impl PromWriter {
+    pub fn new() -> Self {
+        PromWriter {
+            out: String::with_capacity(4096),
+        }
+    }
+
+    /// Escape a label value per the text-format spec.
+    pub fn escape_label(v: &str) -> String {
+        let mut s = String::with_capacity(v.len());
+        for ch in v.chars() {
+            match ch {
+                '\\' => s.push_str("\\\\"),
+                '"' => s.push_str("\\\""),
+                '\n' => s.push_str("\\n"),
+                _ => s.push(ch),
+            }
+        }
+        s
+    }
+
+    /// `# HELP` + `# TYPE` for one metric family.  `kind` is
+    /// `counter`, `gauge`, or `histogram`.
+    pub fn header(&mut self, name: &str, kind: &str, help: &str) {
+        self.out.push_str("# HELP ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(help);
+        self.out.push('\n');
+        self.out.push_str("# TYPE ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(kind);
+        self.out.push('\n');
+    }
+
+    fn labels(&mut self, labels: &[(&str, &str)]) {
+        if labels.is_empty() {
+            return;
+        }
+        self.out.push('{');
+        for (i, (k, v)) in labels.iter().enumerate() {
+            if i > 0 {
+                self.out.push(',');
+            }
+            self.out.push_str(k);
+            self.out.push_str("=\"");
+            self.out.push_str(&Self::escape_label(v));
+            self.out.push('"');
+        }
+        self.out.push('}');
+    }
+
+    pub fn sample(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        value: u64,
+    ) {
+        self.out.push_str(name);
+        self.labels(labels);
+        self.out.push(' ');
+        self.out.push_str(&value.to_string());
+        self.out.push('\n');
+    }
+
+    pub fn sample_f64(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        value: f64,
+    ) {
+        self.out.push_str(name);
+        self.labels(labels);
+        self.out.push(' ');
+        self.out.push_str(&format!("{value}"));
+        self.out.push('\n');
+    }
+
+    /// Emit one histogram series: cumulative `_bucket` lines over
+    /// every log₂ edge, `+Inf`, then `_sum` (µs) and `_count`.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        labels: &[(&str, &str)],
+        snap: &Snapshot,
+    ) {
+        let bucket_name = format!("{name}_bucket");
+        let mut cum = 0u64;
+        for b in 0..BUCKETS {
+            cum += snap.buckets.get(b).copied().unwrap_or(0);
+            let le = if b + 1 == BUCKETS {
+                "+Inf".to_string()
+            } else {
+                bucket_upper_us(b).to_string()
+            };
+            self.out.push_str(&bucket_name);
+            self.out.push('{');
+            for (k, v) in labels.iter() {
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                self.out.push_str(&Self::escape_label(v));
+                self.out.push_str("\",");
+            }
+            self.out.push_str("le=\"");
+            self.out.push_str(&le);
+            self.out.push_str("\"} ");
+            self.out.push_str(&cum.to_string());
+            self.out.push('\n');
+        }
+        self.sample(&format!("{name}_sum"), labels, snap.sum_us);
+        self.sample(&format!("{name}_count"), labels, snap.count());
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+impl Default for PromWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Render the telemetry registry's own metric families.
+pub fn render_registry(reg: &Registry, w: &mut PromWriter) {
+    w.header(
+        "cosa_obs_enabled",
+        "gauge",
+        "1 when request tracing is enabled.",
+    );
+    w.sample("cosa_obs_enabled", &[], u64::from(reg.enabled()));
+
+    w.header(
+        "cosa_requests_finished_total",
+        "counter",
+        "Finished traces by terminal outcome.",
+    );
+    for o in Outcome::ALL {
+        w.sample(
+            "cosa_requests_finished_total",
+            &[("outcome", o.name())],
+            reg.finished(o),
+        );
+    }
+
+    w.header(
+        "cosa_slow_requests_total",
+        "counter",
+        "Requests slower than [obs] slow_ms.",
+    );
+    w.sample("cosa_slow_requests_total", &[], reg.slow_total());
+
+    w.header(
+        "cosa_stage_duration_us",
+        "histogram",
+        "Per-stage request latency, log2-us buckets, by request \
+         class and adapter method.",
+    );
+    for (ci, class) in CLASS_LABELS.iter().enumerate() {
+        for (mi, method) in METHOD_LABELS.iter().enumerate() {
+            for s in Stage::ALL {
+                let snap = reg.stage_snapshot(ci, mi, s.idx());
+                if snap.count() == 0 {
+                    continue;
+                }
+                w.histogram(
+                    "cosa_stage_duration_us",
+                    &[
+                        ("stage", s.name()),
+                        ("class", class),
+                        ("method", method),
+                    ],
+                    &snap,
+                );
+            }
+        }
+    }
+
+    let copy = reg.grouped_copy_snapshot();
+    if copy.count() > 0 {
+        w.header(
+            "cosa_grouped_copy_us",
+            "histogram",
+            "Mixed-method row copy time inside grouped forward.",
+        );
+        w.histogram("cosa_grouped_copy_us", &[], &copy);
+    }
+    let compute = reg.grouped_compute_snapshot();
+    if compute.count() > 0 {
+        w.header(
+            "cosa_grouped_gemm_us",
+            "histogram",
+            "Adapter compute time inside grouped forward.",
+        );
+        w.histogram("cosa_grouped_gemm_us", &[], &compute);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::hist::Histogram;
+    use super::super::trace::{Outcome, Stage};
+    use super::*;
+
+    /// Value of the first sample line matching `prefix`.
+    fn sample_value(text: &str, prefix: &str) -> Option<f64> {
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix(prefix) {
+                if let Some(v) = rest.trim().split(' ').next_back() {
+                    return v.parse().ok();
+                }
+            }
+        }
+        None
+    }
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(PromWriter::escape_label("plain"), "plain");
+        assert_eq!(
+            PromWriter::escape_label("a\"b\\c\nd"),
+            "a\\\"b\\\\c\\nd"
+        );
+        let mut w = PromWriter::new();
+        w.sample("m", &[("adapter", "we\"ird\\name")], 1);
+        let out = w.finish();
+        assert_eq!(out, "m{adapter=\"we\\\"ird\\\\name\"} 1\n");
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative_with_inf() {
+        let h = Histogram::new();
+        h.record_us(0); // bucket 0
+        h.record_us(1); // bucket 1
+        h.record_us(1000); // bucket 10 (le=1023)
+        let mut w = PromWriter::new();
+        w.histogram("lat", &[("class", "batch")], &h.snapshot());
+        let out = w.finish();
+        assert_eq!(
+            sample_value(&out, "lat_bucket{class=\"batch\",le=\"0\"}"),
+            Some(1.0)
+        );
+        assert_eq!(
+            sample_value(&out, "lat_bucket{class=\"batch\",le=\"1\"}"),
+            Some(2.0)
+        );
+        assert_eq!(
+            sample_value(
+                &out,
+                "lat_bucket{class=\"batch\",le=\"1023\"}"
+            ),
+            Some(3.0)
+        );
+        assert_eq!(
+            sample_value(
+                &out,
+                "lat_bucket{class=\"batch\",le=\"+Inf\"}"
+            ),
+            Some(3.0)
+        );
+        assert_eq!(
+            sample_value(&out, "lat_sum{class=\"batch\"}"),
+            Some(1001.0)
+        );
+        assert_eq!(
+            sample_value(&out, "lat_count{class=\"batch\"}"),
+            Some(3.0)
+        );
+        // One line per bucket + Inf + sum + count.
+        assert_eq!(out.lines().count(), BUCKETS + 2);
+    }
+
+    #[test]
+    fn headers_and_plain_samples() {
+        let mut w = PromWriter::new();
+        w.header("cosa_x_total", "counter", "X.");
+        w.sample("cosa_x_total", &[], 7);
+        w.sample_f64("cosa_ratio", &[], 0.5);
+        let out = w.finish();
+        assert!(out.contains("# HELP cosa_x_total X.\n"));
+        assert!(out.contains("# TYPE cosa_x_total counter\n"));
+        assert!(out.contains("cosa_x_total 7\n"));
+        assert!(out.contains("cosa_ratio 0.5\n"));
+    }
+
+    #[test]
+    fn registry_counters_are_monotone_across_scrapes() {
+        let reg = Registry::with_params(true, 1_000_000, 8, 8);
+        let scrape = |reg: &std::sync::Arc<Registry>| {
+            let mut w = PromWriter::new();
+            render_registry(reg, &mut w);
+            w.finish()
+        };
+        let finish_one = || {
+            let mut t = reg.begin().unwrap();
+            t.mark(Stage::Parse);
+            t.mark(Stage::Queue);
+            t.finish(Outcome::Answered);
+        };
+        finish_one();
+        let a = scrape(&reg);
+        let ka = "cosa_requests_finished_total{outcome=\"answered\"}";
+        let va = sample_value(&a, ka).unwrap();
+        assert_eq!(va, 1.0);
+        finish_one();
+        finish_one();
+        let b = scrape(&reg);
+        let vb = sample_value(&b, ka).unwrap();
+        assert!(vb >= va, "counter went backwards: {va} -> {vb}");
+        assert_eq!(vb, 3.0);
+        // Stage histogram appeared, keyed by class and method.
+        let kq = "cosa_stage_duration_us_count{stage=\"queue\",\
+                  class=\"interactive\",method=\"unknown\"}";
+        assert_eq!(sample_value(&b, kq), Some(3.0));
+    }
+
+    #[test]
+    fn disabled_registry_renders_cleanly() {
+        let reg = Registry::disabled();
+        let mut w = PromWriter::new();
+        render_registry(&reg, &mut w);
+        let out = w.finish();
+        assert!(out.contains("cosa_obs_enabled 0\n"));
+        assert!(out.contains(
+            "cosa_requests_finished_total{outcome=\"answered\"} 0\n"
+        ));
+    }
+}

@@ -1,0 +1,323 @@
+//! Slow-request capture: the N slowest traces over a sliding window.
+//!
+//! Two fixed-size, lock-striped rings live here.  [`SlowRing`] keeps
+//! the slowest finished traces seen in the last
+//! [`SLOW_WINDOW`](self::SLOW_WINDOW) and backs `GET /v1/debug/slow`;
+//! [`RecentRing`] keeps the most recent `exemplars` traces regardless
+//! of speed (useful for spot-checking healthy requests, and the
+//! substrate for the trace-lifecycle property test).
+//!
+//! Every finished trace is *offered* to the slow ring; striping by
+//! request id spreads contention across [`STRIPES`] mutexes and a
+//! per-stripe atomic floor (the minimum resident total once a stripe
+//! is full) lets the common fast-request case bail out without
+//! touching a lock at all.  Within a stripe, window-expired entries
+//! are evicted first; only then does a candidate displace the fastest
+//! resident.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use super::trace::STAGE_COUNT;
+
+/// Sliding window for slow-request retention.
+pub const SLOW_WINDOW: Duration = Duration::from_secs(900);
+
+/// Lock stripes per ring.
+const STRIPES: usize = 8;
+
+/// Poison-recovering lock (same contract as the scheduler's helper:
+/// a panicked holder leaves counters stale, never corrupt).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// A captured trace: full stage breakdown plus the request metadata
+/// an operator needs to read it (adapter, batch size, cache plan).
+#[derive(Clone, Debug)]
+pub struct SlowEntry {
+    pub id: u64,
+    /// Wall-clock completion time, ms since the Unix epoch.
+    pub unix_ms: u64,
+    pub total_us: u64,
+    pub class: &'static str,
+    pub method: &'static str,
+    pub outcome: &'static str,
+    pub adapter: String,
+    pub batch_rows: u32,
+    pub cache_hits: u32,
+    pub cache_misses: u32,
+    /// µs offsets from request start at which each stage completed
+    /// (`None` = the stage never ran), indexed by `Stage::idx()`.
+    pub stages: [Option<u64>; STAGE_COUNT],
+    /// Monotonic completion instant, used for window eviction.
+    pub(crate) at: Instant,
+}
+
+struct Stripe {
+    slots: Mutex<Vec<SlowEntry>>,
+    /// Minimum resident `total_us` while the stripe is full; 0 while
+    /// it still has room.  Read before locking to reject fast
+    /// requests cheaply.
+    floor_us: AtomicU64,
+}
+
+pub(crate) struct SlowRing {
+    stripes: Box<[Stripe]>,
+    cap_per_stripe: usize,
+    cap_total: usize,
+    window: Duration,
+}
+
+impl SlowRing {
+    pub(crate) fn new(cap_total: usize, window: Duration) -> Self {
+        let cap_per_stripe = if cap_total == 0 {
+            0
+        } else {
+            cap_total.div_ceil(STRIPES)
+        };
+        let stripes: Vec<Stripe> = (0..STRIPES)
+            .map(|_| Stripe {
+                slots: Mutex::new(Vec::new()),
+                floor_us: AtomicU64::new(0),
+            })
+            .collect();
+        SlowRing {
+            stripes: stripes.into_boxed_slice(),
+            cap_per_stripe,
+            cap_total,
+            window,
+        }
+    }
+
+    pub(crate) fn active(&self) -> bool {
+        self.cap_per_stripe > 0
+    }
+
+    /// Consider `e` for retention.  Cheap for fast requests once the
+    /// ring is warm: one relaxed load, no lock.
+    pub(crate) fn offer(&self, e: SlowEntry) {
+        if self.cap_per_stripe == 0 {
+            return;
+        }
+        let Some(st) = self.stripes.get(e.id as usize % STRIPES) else {
+            return;
+        };
+        let floor = st.floor_us.load(Ordering::Relaxed);
+        if floor > 0 && e.total_us <= floor {
+            // The stripe was full of strictly slower entries the last
+            // time anyone held its lock.  Entries may have expired
+            // since; they get swept on the next accepted offer or
+            // snapshot, which is a fine staleness trade for a
+            // lock-free reject on every fast request.
+            return;
+        }
+        let now = e.at;
+        let mut slots = lock(&st.slots);
+        slots.retain(|s| {
+            now.saturating_duration_since(s.at) <= self.window
+        });
+        if slots.len() < self.cap_per_stripe {
+            slots.push(e);
+        } else {
+            let mut min_i = 0usize;
+            let mut min_us = u64::MAX;
+            for (i, s) in slots.iter().enumerate() {
+                if s.total_us < min_us {
+                    min_us = s.total_us;
+                    min_i = i;
+                }
+            }
+            if e.total_us > min_us {
+                if let Some(slot) = slots.get_mut(min_i) {
+                    *slot = e;
+                }
+            }
+        }
+        let floor = if slots.len() >= self.cap_per_stripe {
+            slots.iter().map(|s| s.total_us).min().unwrap_or(0)
+        } else {
+            0
+        };
+        st.floor_us.store(floor, Ordering::Relaxed);
+    }
+
+    /// All in-window entries, slowest first, capped at the configured
+    /// ring size.
+    pub(crate) fn snapshot(&self) -> Vec<SlowEntry> {
+        let now = Instant::now();
+        let mut all: Vec<SlowEntry> = Vec::new();
+        for st in self.stripes.iter() {
+            let slots = lock(&st.slots);
+            for s in slots.iter() {
+                if now.saturating_duration_since(s.at) <= self.window {
+                    all.push(s.clone());
+                }
+            }
+        }
+        all.sort_by(|a, b| b.total_us.cmp(&a.total_us));
+        all.truncate(self.cap_total);
+        all
+    }
+}
+
+/// Most-recent-N trace ring (the `exemplars` knob).
+pub(crate) struct RecentRing {
+    stripes: Box<[Mutex<VecDeque<SlowEntry>>]>,
+    cap_per_stripe: usize,
+}
+
+impl RecentRing {
+    pub(crate) fn new(cap_total: usize) -> Self {
+        let cap_per_stripe = if cap_total == 0 {
+            0
+        } else {
+            cap_total.div_ceil(STRIPES)
+        };
+        let stripes: Vec<Mutex<VecDeque<SlowEntry>>> =
+            (0..STRIPES).map(|_| Mutex::new(VecDeque::new())).collect();
+        RecentRing {
+            stripes: stripes.into_boxed_slice(),
+            cap_per_stripe,
+        }
+    }
+
+    pub(crate) fn active(&self) -> bool {
+        self.cap_per_stripe > 0
+    }
+
+    pub(crate) fn push(&self, e: SlowEntry) {
+        if self.cap_per_stripe == 0 {
+            return;
+        }
+        let Some(stripe) = self.stripes.get(e.id as usize % STRIPES)
+        else {
+            return;
+        };
+        let mut q = lock(stripe);
+        q.push_back(e);
+        while q.len() > self.cap_per_stripe {
+            q.pop_front();
+        }
+    }
+
+    pub(crate) fn snapshot(&self) -> Vec<SlowEntry> {
+        let mut all: Vec<SlowEntry> = Vec::new();
+        for stripe in self.stripes.iter() {
+            let q = lock(stripe);
+            all.extend(q.iter().cloned());
+        }
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(id: u64, total_us: u64, at: Instant) -> SlowEntry {
+        SlowEntry {
+            id,
+            unix_ms: 0,
+            total_us,
+            class: "interactive",
+            method: "cosa",
+            outcome: "answered",
+            adapter: format!("adp-{id}"),
+            batch_rows: 1,
+            cache_hits: 0,
+            cache_misses: 0,
+            stages: [None; STAGE_COUNT],
+            at,
+        }
+    }
+
+    // ids that are multiples of STRIPES land in stripe 0, making the
+    // per-stripe eviction order observable with cap_total = STRIPES
+    // (one slot per stripe).
+    fn sid(k: u64) -> u64 {
+        k * STRIPES as u64
+    }
+
+    #[test]
+    fn keeps_slowest_and_sorts_desc() {
+        let ring = SlowRing::new(16, SLOW_WINDOW);
+        let now = Instant::now();
+        for (id, us) in [(1u64, 500u64), (2, 9000), (3, 100), (4, 7000)]
+        {
+            ring.offer(entry(id, us, now));
+        }
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 4);
+        let totals: Vec<u64> =
+            snap.iter().map(|s| s.total_us).collect();
+        assert_eq!(totals, vec![9000, 7000, 500, 100]);
+    }
+
+    #[test]
+    fn eviction_order_expired_first_then_fastest() {
+        // One slot per stripe: stripe 0 holds an *expired* slow entry.
+        let ring = SlowRing::new(STRIPES, SLOW_WINDOW);
+        let now = Instant::now();
+        let old = now - (SLOW_WINDOW + Duration::from_secs(60));
+        ring.offer(entry(sid(1), 1_000_000, old));
+        // A faster but in-window candidate must displace the expired
+        // entry (window eviction runs before the slowest-kept rule).
+        ring.offer(entry(sid(2), 10_000, now));
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].id, sid(2));
+
+        // Stripe full of in-window entries: the *fastest* resident is
+        // the one displaced, and only by a slower candidate.
+        ring.offer(entry(sid(3), 5_000, now)); // rejected: 5k < 10k
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].id, sid(2));
+        ring.offer(entry(sid(4), 20_000, now)); // displaces 10k
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].id, sid(4));
+    }
+
+    #[test]
+    fn snapshot_filters_expired_entries() {
+        let ring = SlowRing::new(8, SLOW_WINDOW);
+        let now = Instant::now();
+        let old = now - (SLOW_WINDOW + Duration::from_secs(1));
+        ring.offer(entry(sid(1), 100, old));
+        assert!(ring.snapshot().is_empty());
+    }
+
+    #[test]
+    fn zero_capacity_ring_is_inert() {
+        let ring = SlowRing::new(0, SLOW_WINDOW);
+        ring.offer(entry(1, 1_000_000, Instant::now()));
+        assert!(ring.snapshot().is_empty());
+    }
+
+    #[test]
+    fn recent_ring_keeps_latest() {
+        let ring = RecentRing::new(STRIPES); // one slot per stripe
+        assert!(ring.active());
+        let now = Instant::now();
+        for id in 0..=STRIPES as u64 {
+            ring.push(entry(id, 10, now));
+        }
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), STRIPES);
+        // Stripe 0 saw id 0 then id STRIPES: the newest survives.
+        assert!(snap.iter().any(|s| s.id == STRIPES as u64));
+        assert!(!snap.iter().any(|s| s.id == 0));
+    }
+
+    #[test]
+    fn recent_ring_zero_capacity_is_inert() {
+        let ring = RecentRing::new(0);
+        assert!(!ring.active());
+        ring.push(entry(1, 10, Instant::now()));
+        assert!(ring.snapshot().is_empty());
+    }
+}

@@ -1,0 +1,285 @@
+//! Per-request stage-timing spans.
+//!
+//! A [`Trace`] is created once per request — at HTTP accept in
+//! `wire::api`, or inside `Server::submit*` for in-process callers —
+//! and travels *with* the request through the scheduler (the ticket /
+//! `Request` carries it; no thread-locals cross the worker pool).
+//! Each pipeline stage calls [`Trace::mark`] as it completes; marks
+//! are monotonic µs offsets from the trace's start, so the per-stage
+//! duration is the delta between consecutive marked offsets.
+//!
+//! Every trace terminates exactly once: explicitly via
+//! [`Trace::finish`] on the known exits (answered / expired /
+//! cancelled / shed / errored), or via `Drop` with
+//! [`Outcome::Dropped`] if a request is torn down without an answer
+//! (e.g. scheduler shutdown).  Either way the terminal `reply` mark is
+//! stamped, so a finished trace always has a complete, stage-ordered
+//! span set — the property the trace-lifecycle test pins.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::Registry;
+
+/// Number of pipeline stages a request passes through.
+pub const STAGE_COUNT: usize = 8;
+
+/// Request pipeline stages, in execution order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// HTTP read + JSON body parse (wire layer).
+    Parse,
+    /// Admission control: drain / queue-depth / class shed checks.
+    Admission,
+    /// Time spent queued in the batcher's class queues.
+    Queue,
+    /// Batch boarding: WFQ pop, cancel/deadline sweep, segmentation.
+    BatchAssemble,
+    /// Cache plan + regen of missing projections + install (the
+    /// hit/miss counts on the trace say how much was regenerated).
+    CachePlan,
+    /// Per-site batch-matrix assembly (row gather into the workspace).
+    Pack,
+    /// Grouped block-diagonal GEMM + adapter compute.
+    Gemm,
+    /// Reply delivery back to the ticket / connection.
+    Reply,
+}
+
+impl Stage {
+    pub const ALL: [Stage; STAGE_COUNT] = [
+        Stage::Parse,
+        Stage::Admission,
+        Stage::Queue,
+        Stage::BatchAssemble,
+        Stage::CachePlan,
+        Stage::Pack,
+        Stage::Gemm,
+        Stage::Reply,
+    ];
+
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Parse => "parse",
+            Stage::Admission => "admission",
+            Stage::Queue => "queue",
+            Stage::BatchAssemble => "batch_assemble",
+            Stage::CachePlan => "cache_plan",
+            Stage::Pack => "pack",
+            Stage::Gemm => "gemm",
+            Stage::Reply => "reply",
+        }
+    }
+}
+
+/// Number of terminal outcomes.
+pub const OUTCOME_COUNT: usize = 6;
+
+/// How a request's trace terminated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Outcome {
+    Answered,
+    /// Deadline exceeded while queued.
+    Expired,
+    Cancelled,
+    /// Rejected by admission control (429 / 503) before submit.
+    Shed,
+    /// Answered with an error (bad request, unknown adapter, plan
+    /// failure).
+    Errored,
+    /// Torn down without a reply (scheduler shutdown).
+    Dropped,
+}
+
+impl Outcome {
+    pub const ALL: [Outcome; OUTCOME_COUNT] = [
+        Outcome::Answered,
+        Outcome::Expired,
+        Outcome::Cancelled,
+        Outcome::Shed,
+        Outcome::Errored,
+        Outcome::Dropped,
+    ];
+
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Outcome::Answered => "answered",
+            Outcome::Expired => "expired",
+            Outcome::Cancelled => "cancelled",
+            Outcome::Shed => "shed",
+            Outcome::Errored => "errored",
+            Outcome::Dropped => "dropped",
+        }
+    }
+}
+
+/// The per-request span handle.  Owned by exactly one layer at a time
+/// (wire → scheduler request → worker), so marking needs no atomics.
+#[derive(Debug)]
+pub struct Trace {
+    pub(crate) reg: Arc<Registry>,
+    pub(crate) id: u64,
+    pub(crate) start: Instant,
+    pub(crate) class: usize,
+    pub(crate) method: usize,
+    pub(crate) marks: [Option<u64>; STAGE_COUNT],
+    pub(crate) adapter: Option<Arc<str>>,
+    pub(crate) batch_rows: u32,
+    pub(crate) cache_hits: u32,
+    pub(crate) cache_misses: u32,
+    pub(crate) finished: bool,
+}
+
+impl Trace {
+    pub(crate) fn new(reg: Arc<Registry>, id: u64) -> Self {
+        Trace {
+            reg,
+            id,
+            start: Instant::now(),
+            class: 0,
+            method: super::METHOD_UNKNOWN,
+            marks: [None; STAGE_COUNT],
+            adapter: None,
+            batch_rows: 0,
+            cache_hits: 0,
+            cache_misses: 0,
+            finished: false,
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The wire representation of the request id (`x-request-id`).
+    pub fn id_hex(&self) -> String {
+        format!("{:016x}", self.id)
+    }
+
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.reg
+    }
+
+    /// Stamp `stage` as completed now.  Offsets are µs since the
+    /// trace started; marking in pipeline order keeps them
+    /// non-decreasing by construction.
+    pub fn mark(&mut self, stage: Stage) {
+        let us = self.start.elapsed().as_micros() as u64;
+        if let Some(slot) = self.marks.get_mut(stage.idx()) {
+            *slot = Some(us);
+        }
+    }
+
+    /// µs offset of a completed stage, if it ran.
+    pub fn mark_us(&self, stage: Stage) -> Option<u64> {
+        self.marks.get(stage.idx()).copied().flatten()
+    }
+
+    /// Classify by request class index (scheduler order:
+    /// interactive=0, batch=1, background=2).
+    pub fn set_class(&mut self, class: usize) {
+        self.class = class.min(super::CLASS_LABELS.len() - 1);
+    }
+
+    /// Classify by adapter method tag (`"cosa"` / `"rosa"` /
+    /// `"lora"`); anything else buckets under `"unknown"`.
+    pub fn set_method(&mut self, method: &str) {
+        self.method = super::METHOD_LABELS
+            .iter()
+            .position(|m| *m == method)
+            .unwrap_or(super::METHOD_UNKNOWN);
+    }
+
+    pub fn set_adapter(&mut self, adapter: &Arc<str>) {
+        self.adapter = Some(Arc::clone(adapter));
+    }
+
+    pub fn set_batch_rows(&mut self, rows: usize) {
+        self.batch_rows = rows.min(u32::MAX as usize) as u32;
+    }
+
+    /// Accumulate cache-plan results (hits = resident projections,
+    /// misses = seed-regenerated ones).
+    pub fn add_cache(&mut self, hits: u32, misses: u32) {
+        self.cache_hits = self.cache_hits.saturating_add(hits);
+        self.cache_misses = self.cache_misses.saturating_add(misses);
+    }
+
+    /// Terminate the trace: stamps the `reply` mark and folds the
+    /// span set into the registry's per-stage histograms, the slow
+    /// ring, and (when slower than `[obs] slow_ms`) a WARN line.
+    pub fn finish(mut self, outcome: Outcome) {
+        self.mark(Stage::Reply);
+        self.finished = true;
+        let reg = Arc::clone(&self.reg);
+        reg.record(&self, outcome);
+    }
+}
+
+impl Drop for Trace {
+    fn drop(&mut self) {
+        if !self.finished {
+            self.finished = true;
+            self.mark(Stage::Reply);
+            let reg = Arc::clone(&self.reg);
+            reg.record(self, Outcome::Dropped);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_order_and_names() {
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(s.idx(), i);
+        }
+        assert_eq!(Stage::Parse.name(), "parse");
+        assert_eq!(Stage::BatchAssemble.name(), "batch_assemble");
+        assert_eq!(Stage::Reply.name(), "reply");
+    }
+
+    #[test]
+    fn outcome_indices_cover_all() {
+        for (i, o) in Outcome::ALL.iter().enumerate() {
+            assert_eq!(o.idx(), i);
+        }
+        assert_eq!(Outcome::Dropped.name(), "dropped");
+    }
+
+    #[test]
+    fn marks_are_monotone() {
+        let reg = Registry::disabled();
+        let mut t = Trace::new(reg, 1);
+        t.mark(Stage::Parse);
+        t.mark(Stage::Queue);
+        t.mark(Stage::Gemm);
+        let a = t.mark_us(Stage::Parse).unwrap_or(u64::MAX);
+        let b = t.mark_us(Stage::Queue).unwrap_or(0);
+        let c = t.mark_us(Stage::Gemm).unwrap_or(0);
+        assert!(a <= b && b <= c);
+        assert_eq!(t.mark_us(Stage::Pack), None);
+        t.finish(Outcome::Answered);
+    }
+
+    #[test]
+    fn unknown_method_buckets_as_unknown() {
+        let reg = Registry::disabled();
+        let mut t = Trace::new(reg, 2);
+        t.set_method("cosa");
+        assert_eq!(t.method, 0);
+        t.set_method("svd-of-the-month");
+        assert_eq!(t.method, super::super::METHOD_UNKNOWN);
+        t.finish(Outcome::Errored);
+    }
+}

@@ -52,6 +52,16 @@
 //!   bound — both machine-independent (deterministic sequential drive;
 //!   the capacity and hit counters are exact integers).
 //!
+//! * [`run_obs`] — the telemetry-overhead workload (`serving_obs`
+//!   section): the single-site acceptance shape driven through two
+//!   servers of the same binary — one with tracing disabled, one with
+//!   a live [`obs::Registry`](crate::obs::Registry) stamping every
+//!   stage of every request — in interleaved passes (min wall per
+//!   variant).  CI gates `traced_vs_untraced >= 0.95`: full tracing
+//!   must cost under 5% throughput.  The traced pass also reports
+//!   per-stage p99s and the slow-ring capture count, so the report
+//!   doubles as a smoke check that the spans actually populate.
+//!
 //! Reported per scenario: wall-clock throughput, p50/p95/p99 request
 //! latency (submit -> worker completion), mean batch occupancy,
 //! projection-cache statistics, and (for models) the
@@ -1493,6 +1503,223 @@ pub fn run_quant(opts: &QuantBenchOpts) -> anyhow::Result<QuantBenchReport> {
     Ok(QuantBenchReport { opts: opts.clone(), rows })
 }
 
+/// Telemetry-overhead workload description (always firehose — the
+/// question is the per-request cost of stamping spans, not pacing).
+#[derive(Clone, Debug)]
+pub struct ObsBenchOpts {
+    pub adapters: usize,
+    pub requests: usize,
+    pub zipf: f64,
+    pub site: SiteShape,
+    pub core_a: usize,
+    pub core_b: usize,
+    pub seed: u64,
+    /// Interleaved measurement passes per variant; the min wall wins
+    /// (both variants see the same ambient noise, so the ratio of
+    /// minima is the stable machine-independent number).
+    pub passes: usize,
+    pub cfg: ServeConfig,
+}
+
+impl Default for ObsBenchOpts {
+    fn default() -> Self {
+        // The serving acceptance shape, so the overhead number is
+        // measured on the workload the other gates already pin.
+        ObsBenchOpts {
+            adapters: 64,
+            requests: 2048,
+            zipf: 1.1,
+            site: SiteShape { m: 256, n: 256 },
+            core_a: 64,
+            core_b: 48,
+            seed: 11,
+            passes: 3,
+            cfg: ServeConfig::default(),
+        }
+    }
+}
+
+/// The telemetry-overhead report (the `serving_obs` bench row).
+#[derive(Clone, Debug)]
+pub struct ObsBenchReport {
+    pub opts: ObsBenchOpts,
+    pub workers: usize,
+    pub untraced_wall_s: f64,
+    pub traced_wall_s: f64,
+    pub untraced_throughput_rps: f64,
+    pub traced_throughput_rps: f64,
+    /// The acceptance metric: traced / untraced throughput (>= 0.95).
+    pub traced_vs_untraced: f64,
+    /// Entries resident in the slow ring after the traced passes — a
+    /// liveness check that spans actually populated.
+    pub slow_captured: usize,
+    /// Merged per-stage p99s (µs, log₂-bucket upper edges) over every
+    /// traced request, indexed by [`obs::Stage`](crate::obs::Stage).
+    pub stage_p99_us: [u64; crate::obs::STAGE_COUNT],
+}
+
+impl ObsBenchReport {
+    pub fn to_json(&self) -> Json {
+        let o = &self.opts;
+        let mut kv: Vec<(&str, Json)> = vec![
+            ("adapters", o.adapters.into()),
+            ("requests", o.requests.into()),
+            ("zipf", o.zipf.into()),
+            ("site_m", o.site.m.into()),
+            ("site_n", o.site.n.into()),
+            ("core_a", o.core_a.into()),
+            ("core_b", o.core_b.into()),
+            ("passes", o.passes.into()),
+            ("workers", self.workers.into()),
+            ("untraced_wall_s", self.untraced_wall_s.into()),
+            ("traced_wall_s", self.traced_wall_s.into()),
+            (
+                "untraced_throughput_rps",
+                self.untraced_throughput_rps.into(),
+            ),
+            (
+                "traced_throughput_rps",
+                self.traced_throughput_rps.into(),
+            ),
+            ("traced_vs_untraced", self.traced_vs_untraced.into()),
+            ("slow_captured", self.slow_captured.into()),
+        ];
+        for s in crate::obs::Stage::ALL {
+            kv.push((
+                match s {
+                    crate::obs::Stage::Parse => "p99_us_parse",
+                    crate::obs::Stage::Admission => "p99_us_admission",
+                    crate::obs::Stage::Queue => "p99_us_queue",
+                    crate::obs::Stage::BatchAssemble => {
+                        "p99_us_batch_assemble"
+                    }
+                    crate::obs::Stage::CachePlan => "p99_us_cache_plan",
+                    crate::obs::Stage::Pack => "p99_us_pack",
+                    crate::obs::Stage::Gemm => "p99_us_gemm",
+                    crate::obs::Stage::Reply => "p99_us_reply",
+                },
+                (self.stage_p99_us[s.idx()] as usize).into(),
+            ));
+        }
+        obj(kv)
+    }
+
+    pub fn print(&self) {
+        let o = &self.opts;
+        println!(
+            "serve-obs[{} adapters, zipf {:.2}, {} reqs x {} passes, \
+             {} workers]",
+            o.adapters, o.zipf, o.requests, o.passes, self.workers
+        );
+        println!(
+            "  untraced    {:>10.0} req/s   ({:.3} s wall)",
+            self.untraced_throughput_rps, self.untraced_wall_s
+        );
+        println!(
+            "  traced      {:>10.0} req/s   ({:.3} s wall)  => {:.3}x",
+            self.traced_throughput_rps, self.traced_wall_s,
+            self.traced_vs_untraced
+        );
+        print!("  stage p99 us ");
+        for s in crate::obs::Stage::ALL {
+            print!(" {}={}", s.name(), self.stage_p99_us[s.idx()]);
+        }
+        println!("   slow ring {}", self.slow_captured);
+    }
+}
+
+/// Run the telemetry-overhead scenario (see module docs): two
+/// identically built single-site servers — tracing disabled vs a live
+/// registry — each driven through the identical Zipf stream in
+/// `passes` interleaved rounds.  The reported wall per variant is the
+/// minimum over its rounds.
+pub fn run_obs(opts: &ObsBenchOpts) -> anyhow::Result<ObsBenchReport> {
+    anyhow::ensure!(opts.adapters > 0, "need at least one adapter");
+    anyhow::ensure!(opts.requests > 0, "need at least one request");
+    anyhow::ensure!(opts.passes > 0, "need at least one pass");
+    let n = opts.site.n;
+    let budget = opts.cfg.cache_budget_bytes();
+    let mut rng = Pcg64::with_stream(opts.seed, 1);
+    let zipf = Zipf::new(opts.adapters, opts.zipf);
+    let seq: Vec<usize> =
+        (0..opts.requests).map(|_| zipf.sample(&mut rng)).collect();
+    let pool: Vec<Vec<f32>> =
+        (0..X_POOL).map(|_| rng.normal_vec(n, 1.0)).collect();
+
+    // Two bit-identical registries (synthetic_registry is
+    // deterministic in the seed), warmed the same way, so the only
+    // variable between the variants is the telemetry layer.
+    let build_warm = || -> anyhow::Result<AdaptedModel> {
+        let (mut registry, names) = synthetic_registry(
+            opts.adapters,
+            opts.site,
+            opts.core_a,
+            opts.core_b,
+            opts.seed,
+            budget,
+        )?;
+        for name in &names {
+            let x = Matrix::from_vec(1, n, pool[0].clone());
+            black_box(registry.forward_one(name, &x)?);
+        }
+        registry.reset_cache_stats();
+        Ok(registry)
+    };
+    let names: Vec<String> =
+        (0..opts.adapters).map(|i| format!("adp{i:03}")).collect();
+    let untraced = Server::new(build_warm()?, &opts.cfg);
+    let reg = crate::obs::Registry::new(&crate::config::ObsConfig::default());
+    let traced =
+        Server::with_obs(build_warm()?, &opts.cfg, reg.clone());
+    let workers = untraced.worker_count();
+
+    let drive = |server: &Server| -> anyhow::Result<f64> {
+        let t0 = Instant::now();
+        let mut tickets: Vec<Ticket> =
+            Vec::with_capacity(opts.requests);
+        for (j, &idx) in seq.iter().enumerate() {
+            tickets.push(server.submit_row(
+                &names[idx],
+                pool[j % X_POOL].clone(),
+            )?);
+        }
+        for t in tickets {
+            let resp = t.wait()?;
+            black_box(resp.output()[0]);
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    };
+
+    let mut untraced_wall_s = f64::INFINITY;
+    let mut traced_wall_s = f64::INFINITY;
+    for _ in 0..opts.passes {
+        untraced_wall_s = untraced_wall_s.min(drive(&untraced)?);
+        traced_wall_s = traced_wall_s.min(drive(&traced)?);
+    }
+    drop(untraced);
+    drop(traced);
+
+    let mut stage_p99_us = [0u64; crate::obs::STAGE_COUNT];
+    for s in crate::obs::Stage::ALL {
+        stage_p99_us[s.idx()] =
+            reg.merged_stage_snapshot(s).p99_us();
+    }
+    let untraced_tp =
+        opts.requests as f64 / untraced_wall_s.max(1e-9);
+    let traced_tp = opts.requests as f64 / traced_wall_s.max(1e-9);
+    Ok(ObsBenchReport {
+        opts: opts.clone(),
+        workers,
+        untraced_wall_s,
+        traced_wall_s,
+        untraced_throughput_rps: untraced_tp,
+        traced_throughput_rps: traced_tp,
+        traced_vs_untraced: traced_tp / untraced_tp.max(1e-9),
+        slow_captured: reg.slow_snapshot().len(),
+        stage_p99_us,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1695,6 +1922,44 @@ mod tests {
         assert_eq!(js[1].get("kind").unwrap().as_str(), Some("bf16"));
         assert!(js[1].get("capacity_vs_f32").unwrap().as_f64().is_some());
         assert!(js[2].get("rmse_vs_f32").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn obs_smoke_scenario_traces_without_breaking_the_drive() {
+        let opts = ObsBenchOpts {
+            adapters: 3,
+            requests: 48,
+            zipf: 1.1,
+            site: SiteShape { m: 16, n: 12 },
+            core_a: 4,
+            core_b: 3,
+            seed: 5,
+            passes: 2,
+            cfg: ServeConfig {
+                cache_mb: 4.0,
+                max_batch: 4,
+                max_wait_us: 300,
+                workers: 2,
+                ..ServeConfig::default()
+            },
+        };
+        let rep = run_obs(&opts).unwrap();
+        assert!(rep.untraced_throughput_rps > 0.0);
+        assert!(rep.traced_throughput_rps > 0.0);
+        assert!(rep.traced_vs_untraced > 0.0);
+        // The traced server stamped real spans: some stage must show
+        // a non-zero p99 (sub-µs stages legitimately round to 0) and
+        // the slow ring must hold entries.
+        assert!(
+            rep.stage_p99_us.iter().any(|&v| v > 0),
+            "all stage p99s zero: {:?}",
+            rep.stage_p99_us
+        );
+        assert!(rep.slow_captured > 0);
+        let j = rep.to_json();
+        assert_eq!(j.get("requests").unwrap().as_usize(), Some(48));
+        assert!(j.get("traced_vs_untraced").unwrap().as_f64().is_some());
+        assert!(j.get("p99_us_gemm").unwrap().as_usize().is_some());
     }
 
     #[test]

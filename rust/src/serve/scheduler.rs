@@ -77,12 +77,15 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::adapters::{forward_grouped_into, Adapter};
+use crate::adapters::{
+    forward_grouped_into_marked, Adapter, GroupedMarks,
+};
 use crate::config::ServeConfig;
 use crate::linalg::tiled::plan_threads;
 use crate::linalg::{QuantMat, Workspace};
 use crate::math::matrix::Matrix;
 use crate::model::{AdaptedModel, ModelHandles, ModelPlan};
+use crate::obs::{self, Outcome, Stage, Trace};
 
 use super::outpool::{OutputPool, PooledOut};
 
@@ -233,6 +236,9 @@ struct Request {
     deadline: Option<Instant>,
     cancelled: Arc<AtomicBool>,
     class: RequestClass,
+    /// Stage-timing span riding the request (`None` when tracing is
+    /// off).  The ticket carries it — no thread-locals cross the pool.
+    trace: Option<Trace>,
     _inflight: InflightGuard,
 }
 
@@ -240,54 +246,6 @@ struct Request {
 /// (the worker segments them by adapter, first-seen order).
 struct Batch {
     reqs: Vec<Request>,
-}
-
-/// Buckets of the per-class latency histogram — log₂ µs up to ~9 days,
-/// far past any latency a request can live to see.
-const HIST_BUCKETS: usize = 40;
-
-/// Lock-free log₂-bucketed latency histogram (µs): bucket `b` holds
-/// samples in `[2^(b-1), 2^b)`, so the p99 readout is exact to a factor
-/// of two — plenty for a tail gate — and recording stays one atomic
-/// increment on the reply path.
-struct LatencyHist {
-    counts: Box<[AtomicU64]>,
-}
-
-impl Default for LatencyHist {
-    fn default() -> LatencyHist {
-        LatencyHist {
-            counts: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
-        }
-    }
-}
-
-impl LatencyHist {
-    fn record(&self, d: Duration) {
-        let us = d.as_micros().min(u128::from(u64::MAX)) as u64;
-        let b = (64 - us.leading_zeros() as usize).min(HIST_BUCKETS - 1);
-        self.counts[b].fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// Upper edge of the bucket holding the 99th percentile; 0 until a
-    /// sample lands.
-    fn p99_us(&self) -> u64 {
-        let counts: Vec<u64> =
-            self.counts.iter().map(|c| c.load(Ordering::Relaxed)).collect();
-        let total: u64 = counts.iter().sum();
-        if total == 0 {
-            return 0;
-        }
-        let rank = (total * 99).div_ceil(100);
-        let mut cum = 0u64;
-        for (b, c) in counts.iter().enumerate() {
-            cum += c;
-            if cum >= rank {
-                return if b == 0 { 0 } else { (1u64 << b) - 1 };
-            }
-        }
-        (1u64 << (HIST_BUCKETS - 1)) - 1
-    }
 }
 
 /// Scheduler counters (mean batch size benches report is
@@ -309,7 +267,10 @@ struct ServerStats {
     untracked: AtomicU64,
     class_submitted: [AtomicU64; 3],
     class_answered: [AtomicU64; 3],
-    class_latency: [LatencyHist; 3],
+    /// Per-class service latency (submit → computed reply), the shared
+    /// `obs` log₂-µs histogram (formerly the scheduler-private
+    /// `LatencyHist` — identical bucketing and p99 semantics).
+    class_latency: [obs::Histogram; 3],
 }
 
 /// Distinct adapter names the per-adapter counter map will track.
@@ -326,9 +287,16 @@ pub struct ClassStats {
     pub submitted: u64,
     /// Requests answered with computed output (errors excluded).
     pub answered: u64,
-    /// p99 service latency (submit → computed reply) in µs, as the
+    /// p50 service latency (submit → computed reply) in µs, as the
     /// log₂-bucket upper edge; 0 until the class answers a request.
+    pub p50_us: u64,
+    /// p95, same semantics as `p50_us`.
+    pub p95_us: u64,
+    /// p99, same semantics as `p50_us`.
     pub p99_us: u64,
+    /// The full latency histogram snapshot (`/metrics` renders it as
+    /// `_bucket`/`_sum`/`_count` series).
+    pub hist: obs::Snapshot,
 }
 
 /// Cheap point-in-time snapshot of the engine's counters — the surface
@@ -361,6 +329,9 @@ pub struct Server {
     model: Arc<Mutex<AdaptedModel>>,
     stats: Arc<ServerStats>,
     out_pool: Arc<OutputPool>,
+    /// Shared telemetry registry (a disabled one for `Server::new`
+    /// callers; `Server::with_obs` wires a live one through).
+    obs: Arc<obs::Registry>,
     /// Per-site input widths, spec order (submit-time validation).
     site_ns: Vec<usize>,
     worker_count: usize,
@@ -377,8 +348,20 @@ fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
 impl Server {
     /// Spawn the engine over `model`.  `cfg` is used as-is — apply
     /// `ServeConfig::env_overridden()` at the call site (the CLI and
-    /// bench drivers do), so tests stay hermetic.
-    pub fn new(mut model: AdaptedModel, cfg: &ServeConfig) -> Server {
+    /// bench drivers do), so tests stay hermetic.  Tracing is off;
+    /// callers that want spans use [`Server::with_obs`].
+    pub fn new(model: AdaptedModel, cfg: &ServeConfig) -> Server {
+        Self::with_obs(model, cfg, obs::Registry::disabled())
+    }
+
+    /// [`Server::new`] with a shared telemetry registry: every request
+    /// gets a [`Trace`] from `obs` (unless it is disabled), and the
+    /// per-stage histograms / slow ring aggregate there.
+    pub fn with_obs(
+        mut model: AdaptedModel,
+        cfg: &ServeConfig,
+        obs: Arc<obs::Registry>,
+    ) -> Server {
         let site_ns: Vec<usize> =
             model.spec().sites.iter().map(|s| s.shape.n).collect();
         // One funnel for the cache codec: whatever `[serve] cache_quant`
@@ -446,9 +429,15 @@ impl Server {
             model,
             stats,
             out_pool,
+            obs,
             site_ns,
             worker_count,
         }
+    }
+
+    /// The shared telemetry registry (exposition endpoints render it).
+    pub fn obs(&self) -> Arc<obs::Registry> {
+        self.obs.clone()
     }
 
     /// Workers actually spawned (after auto resolution).
@@ -489,13 +478,19 @@ impl Server {
         per_adapter.sort();
         let per_class = RequestClass::ALL
             .iter()
-            .map(|&c| ClassStats {
-                class: c.as_str().to_string(),
-                submitted: self.stats.class_submitted[c.idx()]
-                    .load(Ordering::Relaxed),
-                answered: self.stats.class_answered[c.idx()]
-                    .load(Ordering::Relaxed),
-                p99_us: self.stats.class_latency[c.idx()].p99_us(),
+            .map(|&c| {
+                let hist = self.stats.class_latency[c.idx()].snapshot();
+                ClassStats {
+                    class: c.as_str().to_string(),
+                    submitted: self.stats.class_submitted[c.idx()]
+                        .load(Ordering::Relaxed),
+                    answered: self.stats.class_answered[c.idx()]
+                        .load(Ordering::Relaxed),
+                    p50_us: hist.p50_us(),
+                    p95_us: hist.p95_us(),
+                    p99_us: hist.p99_us(),
+                    hist,
+                }
             })
             .collect();
         SchedulerStats {
@@ -526,13 +521,9 @@ impl Server {
         self.model.clone()
     }
 
-    fn submit_inner(
-        &self,
-        adapter: &str,
-        xs: Vec<Vec<f32>>,
-        class: RequestClass,
-        deadline: Option<Duration>,
-    ) -> anyhow::Result<Ticket> {
+    /// Submit-time validation: the request must match the served
+    /// model's site count and per-site input widths.
+    fn validate_sites(&self, xs: &[Vec<f32>]) -> anyhow::Result<()> {
         anyhow::ensure!(
             xs.len() == self.site_ns.len(),
             "request has {} site rows, model has {} sites",
@@ -546,14 +537,48 @@ impl Server {
                 x.len()
             );
         }
-        let ingress = self
-            .ingress
-            .as_ref()
-            .ok_or_else(|| anyhow::anyhow!("server is shut down"))?;
+        Ok(())
+    }
+
+    fn submit_inner(
+        &self,
+        adapter: &str,
+        xs: Vec<Vec<f32>>,
+        class: RequestClass,
+        deadline: Option<Duration>,
+        trace: Option<Trace>,
+    ) -> anyhow::Result<Ticket> {
+        // In-process callers get their span opened here; wire callers
+        // hand one in that already carries the parse/admission marks.
+        let mut trace = trace.or_else(|| self.obs.begin());
+        if let Some(t) = trace.as_mut() {
+            t.set_class(class.idx());
+            if t.mark_us(Stage::Parse).is_none() {
+                t.mark(Stage::Parse);
+            }
+            if t.mark_us(Stage::Admission).is_none() {
+                t.mark(Stage::Admission);
+            }
+        }
+        if let Err(e) = self.validate_sites(&xs) {
+            if let Some(t) = trace.take() {
+                t.finish(Outcome::Errored);
+            }
+            return Err(e);
+        }
+        let Some(ingress) = self.ingress.as_ref() else {
+            if let Some(t) = trace.take() {
+                t.finish(Outcome::Errored);
+            }
+            return Err(anyhow::anyhow!("server is shut down"));
+        };
         let (tx, rx) = channel::<Reply>();
         let submitted = Instant::now();
         let cancelled = Arc::new(AtomicBool::new(false));
         let key: Arc<str> = Arc::from(adapter);
+        if let Some(t) = trace.as_mut() {
+            t.set_adapter(&key);
+        }
         self.stats.submitted.fetch_add(1, Ordering::Relaxed);
         self.stats.class_submitted[class.idx()]
             .fetch_add(1, Ordering::Relaxed);
@@ -578,8 +603,11 @@ impl Server {
             deadline: deadline.map(|d| submitted + d),
             cancelled: cancelled.clone(),
             class,
+            trace,
             _inflight: InflightGuard(self.stats.clone()),
         };
+        // A send failure drops `req` — its trace records `dropped`,
+        // which is exactly what a mid-shutdown teardown is.
         ingress
             .send(req)
             .map_err(|_| anyhow::anyhow!("server is shut down"))?;
@@ -593,12 +621,11 @@ impl Server {
         adapter: &str,
         xs: Vec<Vec<f32>>,
     ) -> anyhow::Result<Ticket> {
-        self.submit_inner(adapter, xs, RequestClass::default(), None)
+        self.submit_inner(adapter, xs, RequestClass::default(), None, None)
     }
 
     /// [`Server::submit`] with an explicit QoS class and optional
-    /// relative deadline — the full-control surface the wire gateway
-    /// uses.
+    /// relative deadline.
     pub fn submit_classed(
         &self,
         adapter: &str,
@@ -606,7 +633,21 @@ impl Server {
         class: RequestClass,
         deadline: Option<Duration>,
     ) -> anyhow::Result<Ticket> {
-        self.submit_inner(adapter, xs, class, deadline)
+        self.submit_inner(adapter, xs, class, deadline, None)
+    }
+
+    /// [`Server::submit_classed`] with a caller-opened [`Trace`] (the
+    /// wire gateway opens one at HTTP accept so the span covers parse
+    /// and admission; `None` falls back to opening one here).
+    pub fn submit_traced(
+        &self,
+        adapter: &str,
+        xs: Vec<Vec<f32>>,
+        class: RequestClass,
+        deadline: Option<Duration>,
+        trace: Option<Trace>,
+    ) -> anyhow::Result<Ticket> {
+        self.submit_inner(adapter, xs, class, deadline, trace)
     }
 
     /// [`Server::submit`] with a relative deadline: if the request is
@@ -623,6 +664,7 @@ impl Server {
             xs,
             RequestClass::default(),
             Some(deadline),
+            None,
         )
     }
 
@@ -637,7 +679,13 @@ impl Server {
             "submit_row needs a 1-site model; this one has {} sites",
             self.site_ns.len()
         );
-        self.submit_inner(adapter, vec![x], RequestClass::default(), None)
+        self.submit_inner(
+            adapter,
+            vec![x],
+            RequestClass::default(),
+            None,
+            None,
+        )
     }
 
     /// Stop accepting requests, drain everything in flight, join the
@@ -858,7 +906,13 @@ fn flush_one(
     let mut reqs = Vec::with_capacity(max_batch.min(pending.len));
     while reqs.len() < max_batch {
         match pending.pop_next() {
-            Some(r) => reqs.push(r),
+            Some(mut r) => {
+                // end of the queue stage: the row just boarded
+                if let Some(t) = r.trace.as_mut() {
+                    t.mark(Stage::Queue);
+                }
+                reqs.push(r);
+            }
             None => break,
         }
     }
@@ -891,13 +945,16 @@ fn worker_loop(
         // are answered with their error and never occupy a fused slot.
         let now = Instant::now();
         let mut live = Vec::with_capacity(batch.reqs.len());
-        for req in batch.reqs {
+        for mut req in batch.reqs {
             if req.cancelled.load(Ordering::Relaxed) {
                 stats.cancelled.fetch_add(1, Ordering::Relaxed);
                 let _ = req.reply.send(Err(format!(
                     "request for `{}` was cancelled",
                     req.adapter
                 )));
+                if let Some(t) = req.trace.take() {
+                    t.finish(Outcome::Cancelled);
+                }
             } else if req.deadline.is_some_and(|d| now >= d) {
                 stats.expired.fetch_add(1, Ordering::Relaxed);
                 let _ = req.reply.send(Err(format!(
@@ -906,6 +963,9 @@ fn worker_loop(
                     req.adapter,
                     now.duration_since(req.at)
                 )));
+                if let Some(t) = req.trace.take() {
+                    t.finish(Outcome::Expired);
+                }
             } else {
                 live.push(req);
             }
@@ -923,6 +983,13 @@ fn worker_loop(
                 None => {
                     names.push(req.adapter.clone());
                     groups.push(vec![req]);
+                }
+            }
+        }
+        for group in groups.iter_mut() {
+            for req in group.iter_mut() {
+                if let Some(t) = req.trace.as_mut() {
+                    t.mark(Stage::BatchAssemble);
                 }
             }
         }
@@ -947,8 +1014,11 @@ fn worker_loop(
                     // a bad segment answers its own rows with the error;
                     // its batchmates ride on
                     let msg = format!("{e:#}");
-                    for req in group {
+                    for mut req in group {
                         let _ = req.reply.send(Err(msg.clone()));
+                        if let Some(t) = req.trace.take() {
+                            t.finish(Outcome::Errored);
+                        }
                     }
                 }
             }
@@ -962,6 +1032,20 @@ fn worker_loop(
         let regens: Vec<Vec<Vec<Option<Matrix>>>> =
             seg_plans.iter().map(ModelPlan::regen_missing).collect();
         let handles = lock(model).install_many(&seg_plans, regens);
+        // Cache planning done (plan + regen + install): stamp the
+        // cache_plan mark and the plan's method / hit-miss split on
+        // every traced member — outside the model lock.
+        for (plan, group) in seg_plans.iter().zip(seg_groups.iter_mut())
+        {
+            let (hits, misses) = plan.cache_hits_misses();
+            for req in group.iter_mut() {
+                if let Some(t) = req.trace.as_mut() {
+                    t.set_method(plan.method.name());
+                    t.add_cache(hits, misses);
+                    t.mark(Stage::CachePlan);
+                }
+            }
+        }
         if fused {
             run_fused(&handles, seg_groups, stats, pool, &mut ws);
         } else {
@@ -979,7 +1063,7 @@ fn worker_loop(
 /// every adapter segment of the batch (see module docs).
 fn run_fused(
     handles: &[ModelHandles],
-    groups: Vec<Vec<Request>>,
+    mut groups: Vec<Vec<Request>>,
     stats: &ServerStats,
     pool: &Arc<OutputPool>,
     ws: &mut Workspace,
@@ -988,12 +1072,17 @@ fn run_fused(
     let rows: usize = segs.iter().sum();
     let alphas: Vec<f32> = handles.iter().map(|h| h.alpha).collect();
     let nsites = handles[0].sites.len();
-    let mut outs = Vec::with_capacity(nsites);
+    let traced =
+        groups.iter().flatten().any(|r| r.trace.is_some());
+    // Pack phase: every site's batch matrix is assembled before any
+    // compute starts, so the pack/gemm trace marks bracket the real
+    // phases.  Same row gathers, same kernel calls, same order per
+    // site as an interleaved loop — outputs stay bit-identical.
+    let mut site_xs = Vec::with_capacity(nsites);
     for s in 0..nsites {
         // every adapter shares the spec's site dims — read them off the
         // first segment's handles
         let n = handles[0].sites[s].adapter.in_dim();
-        let m = handles[0].sites[s].adapter.out_dim();
         let mut x = ws.take_matrix(rows, n);
         let mut row = 0usize;
         for group in &groups {
@@ -1002,6 +1091,15 @@ fn run_fused(
                 row += 1;
             }
         }
+        site_xs.push(x);
+    }
+    if traced {
+        mark_all(&mut groups, Stage::Pack);
+    }
+    let mut marks = traced.then(GroupedMarks::default);
+    let mut outs = Vec::with_capacity(nsites);
+    for (s, x) in site_xs.into_iter().enumerate() {
+        let m = handles[0].sites[s].adapter.out_dim();
         let adapters: Vec<&dyn Adapter> = handles
             .iter()
             .map(|h| h.sites[s].adapter.as_ref())
@@ -1011,7 +1109,7 @@ fn run_fused(
             .map(|h| h.sites[s].regen.as_slice())
             .collect();
         let mut out = pool.take(rows, m);
-        forward_grouped_into(
+        forward_grouped_into_marked(
             &adapters,
             &regens,
             &alphas,
@@ -1019,9 +1117,22 @@ fn run_fused(
             &segs,
             ws,
             out.matrix_mut(),
+            marks.as_mut(),
         );
         ws.recycle_matrix(x);
         outs.push(out);
+    }
+    if traced {
+        mark_all(&mut groups, Stage::Gemm);
+        if let (Some(mk), Some(reg)) = (
+            marks,
+            groups
+                .iter()
+                .flatten()
+                .find_map(|r| r.trace.as_ref().map(|t| t.registry().clone())),
+        ) {
+            reg.record_grouped(mk.copy_us, mk.compute_us);
+        }
     }
     let outs = Arc::new(outs);
     let done = Instant::now();
@@ -1036,29 +1147,56 @@ fn run_fused(
     }
 }
 
+/// Stamp `stage` on every traced member of a segmented batch.
+fn mark_all(groups: &mut [Vec<Request>], stage: Stage) {
+    for group in groups.iter_mut() {
+        for req in group.iter_mut() {
+            if let Some(t) = req.trace.as_mut() {
+                t.mark(stage);
+            }
+        }
+    }
+}
+
 /// One adapter segment computed on its own batch matrices and pooled
 /// outputs — the `[serve] fused = false` per-adapter path.
 fn run_segment(
     h: &ModelHandles,
-    group: Vec<Request>,
+    mut group: Vec<Request>,
     stats: &ServerStats,
     pool: &Arc<OutputPool>,
     ws: &mut Workspace,
 ) {
     let rows = group.len();
-    let mut outs = Vec::with_capacity(h.sites.len());
+    // Same pack-then-compute phase split as `run_fused`, so the
+    // per-adapter baseline path carries the same trace marks.
+    let mut site_xs = Vec::with_capacity(h.sites.len());
     for (s, sh) in h.sites.iter().enumerate() {
         let n = sh.adapter.in_dim();
-        let m = sh.adapter.out_dim();
         let mut x = ws.take_matrix(rows, n);
         for (i, req) in group.iter().enumerate() {
             x.data[i * n..(i + 1) * n].copy_from_slice(&req.xs[s]);
         }
+        site_xs.push(x);
+    }
+    for req in group.iter_mut() {
+        if let Some(t) = req.trace.as_mut() {
+            t.mark(Stage::Pack);
+        }
+    }
+    let mut outs = Vec::with_capacity(h.sites.len());
+    for (sh, x) in h.sites.iter().zip(site_xs) {
+        let m = sh.adapter.out_dim();
         let mut out = pool.take(rows, m);
         sh.adapter
             .forward_into(&x, &sh.regen, h.alpha, ws, out.matrix_mut());
         ws.recycle_matrix(x);
         outs.push(out);
+    }
+    for req in group.iter_mut() {
+        if let Some(t) = req.trace.as_mut() {
+            t.mark(Stage::Gemm);
+        }
     }
     let outs = Arc::new(outs);
     let done = Instant::now();
@@ -1073,7 +1211,7 @@ fn run_segment(
 /// (exactly one reply per live request — the exactly-once property the
 /// tests pin down).
 fn reply_ok(
-    req: Request,
+    mut req: Request,
     outs: &Arc<Vec<PooledOut>>,
     row: usize,
     batch_rows: usize,
@@ -1091,6 +1229,10 @@ fn reply_ok(
         done,
     };
     let _ = req.reply.send(Ok(resp));
+    if let Some(mut t) = req.trace.take() {
+        t.set_batch_rows(batch_rows);
+        t.finish(Outcome::Answered);
+    }
 }
 
 #[cfg(test)]
@@ -1284,6 +1426,7 @@ mod tests {
                 deadline: None,
                 cancelled: Arc::new(AtomicBool::new(false)),
                 class,
+                trace: None,
                 _inflight: InflightGuard(stats.clone()),
             }
         };
@@ -1533,6 +1676,11 @@ mod tests {
             assert_eq!(cs.answered, i as u64 + 1);
             assert!(cs.p99_us > 0,
                     "an answered class must show a latency tail");
+            assert!(cs.p50_us > 0 && cs.p50_us <= cs.p95_us
+                        && cs.p95_us <= cs.p99_us,
+                    "percentiles must be ordered: {cs:?}");
+            assert_eq!(cs.hist.count(), cs.answered,
+                       "histogram counts every answer");
         }
         // legacy surfaces default to interactive
         server.submit_row("solo", vec![0.5; N]).unwrap().wait().unwrap();
@@ -1710,5 +1858,173 @@ mod tests {
         assert!(t_new.wait().is_ok(), "hot-loaded adapter must serve");
         let t_old = server.submit_row("old", vec![0.1; N]).unwrap();
         assert!(t_old.wait().is_err(), "evicted adapter must error");
+    }
+
+    /// A registry with an exemplar ring big enough to retain every
+    /// trace a test submits, and a slow threshold nothing reaches.
+    fn test_registry() -> Arc<obs::Registry> {
+        obs::Registry::with_params(true, u64::MAX / 2000, 64, 256)
+    }
+
+    fn assert_stage_ordered(e: &crate::obs::SlowEntry) {
+        assert!(
+            e.stages[Stage::Reply.idx()].is_some(),
+            "trace {:016x} has no terminal reply mark",
+            e.id
+        );
+        let mut prev = 0u64;
+        for s in Stage::ALL {
+            if let Some(off) = e.stages[s.idx()] {
+                assert!(
+                    off >= prev,
+                    "trace {:016x}: stage {} offset {} < {}",
+                    e.id,
+                    s.name(),
+                    off,
+                    prev
+                );
+                prev = off;
+            }
+        }
+    }
+
+    #[test]
+    fn every_request_path_yields_a_complete_stage_ordered_trace() {
+        // The trace-lifecycle property: every submitted request —
+        // answered, errored, cancelled, expired, or drained on
+        // shutdown — terminates exactly one trace, and every finished
+        // trace's marks are stage-ordered with a terminal reply mark.
+        // Answered + errored ride a fast-flush server; cancelled +
+        // expired need the huge-max_wait server (only the cancel sweep
+        // / deadline can answer them, as the dedicated tests pin).
+        let reg = test_registry();
+        {
+            let model =
+                test_model(&[("alpha", 7u64), ("beta", 8u64)]);
+            let server =
+                Server::with_obs(model, &test_cfg(4, 500), reg.clone());
+            for _ in 0..3 {
+                let t =
+                    server.submit_row("alpha", vec![0.5; N]).unwrap();
+                t.wait().unwrap();
+            }
+            let t = server.submit_row("ghost", vec![0.0; N]).unwrap();
+            assert!(t.wait().is_err(), "unknown adapter errors");
+            // validation failures terminate the trace too
+            assert!(server.submit_row("alpha", vec![0.0; N + 1]).is_err());
+        }
+        let reg2 = test_registry();
+        {
+            let model =
+                test_model(&[("alpha", 7u64), ("beta", 8u64)]);
+            let server = Server::with_obs(
+                model,
+                &test_cfg(64, 30_000_000),
+                reg2.clone(),
+            );
+            let t = server.submit_row("alpha", vec![0.5; N]).unwrap();
+            t.cancel();
+            assert!(t.wait().is_err());
+            let t = server
+                .submit_with_deadline(
+                    "beta",
+                    vec![vec![0.5; N]],
+                    Duration::from_millis(20),
+                )
+                .unwrap();
+            assert!(t.wait().is_err());
+        }
+        assert_eq!(reg.finished(Outcome::Answered), 3);
+        assert_eq!(reg.finished(Outcome::Errored), 2);
+        assert_eq!(reg.finished_total(), 5, "one trace per submit");
+        assert_eq!(reg2.finished(Outcome::Cancelled), 1);
+        assert_eq!(reg2.finished(Outcome::Expired), 1);
+        assert_eq!(reg2.finished_total(), 2);
+        let recent = reg.recent_snapshot();
+        assert_eq!(recent.len(), 5, "exemplar ring retains every trace");
+        for e in recent.iter().chain(reg2.recent_snapshot().iter()) {
+            assert_stage_ordered(e);
+        }
+        // answered traces carry the full pipeline and the plan's
+        // method + cache split (CoSA: L and R per site = 2 tensors)
+        let answered: Vec<_> = recent
+            .iter()
+            .filter(|e| e.outcome == "answered")
+            .collect();
+        assert_eq!(answered.len(), 3);
+        for e in &answered {
+            for s in Stage::ALL {
+                assert!(
+                    e.stages[s.idx()].is_some(),
+                    "answered trace missing stage {}",
+                    s.name()
+                );
+            }
+            assert_eq!(e.method, "cosa");
+            assert_eq!(e.adapter, "alpha");
+            assert_eq!(e.batch_rows, 1);
+            assert_eq!(e.cache_hits + e.cache_misses, 2);
+        }
+        // the per-stage histograms saw the pipeline: the ghost request
+        // boards the queue too (4 samples), but only the answered
+        // three reach compute
+        assert_eq!(reg.merged_stage_snapshot(Stage::Queue).count(), 4);
+        for s in [Stage::Pack, Stage::Gemm] {
+            assert_eq!(
+                reg.merged_stage_snapshot(s).count(),
+                3,
+                "stage {} histogram",
+                s.name()
+            );
+        }
+        // errored-before-queue traces never mark pipeline stages
+        let errored: Vec<_> = recent
+            .iter()
+            .filter(|e| e.outcome == "errored")
+            .collect();
+        assert_eq!(errored.len(), 2);
+        assert!(
+            errored
+                .iter()
+                .any(|e| e.stages[Stage::Queue.idx()].is_none()),
+            "the validation failure never reached the queue"
+        );
+    }
+
+    #[test]
+    fn shutdown_drain_still_terminates_every_trace() {
+        let reg = test_registry();
+        {
+            let model = test_model(&[("solo", 7)]);
+            let mut server = Server::with_obs(
+                model,
+                &test_cfg(64, 30_000_000),
+                reg.clone(),
+            );
+            let tickets: Vec<Ticket> = (0..3)
+                .map(|_| server.submit_row("solo", vec![0.5; N]).unwrap())
+                .collect();
+            server.shutdown();
+            for t in tickets {
+                assert!(t.wait().is_ok(), "drain answers");
+            }
+        }
+        assert_eq!(reg.finished(Outcome::Answered), 3);
+        for e in reg.recent_snapshot() {
+            assert_stage_ordered(&e);
+        }
+    }
+
+    #[test]
+    fn disabled_registry_requests_carry_no_traces() {
+        // Server::new wires the disabled registry: no trace is ever
+        // opened, nothing aggregates.
+        let model = test_model(&[("solo", 7)]);
+        let server = Server::new(model, &test_cfg(4, 200));
+        let reg = server.obs();
+        assert!(!reg.enabled());
+        server.submit_row("solo", vec![0.5; N]).unwrap().wait().unwrap();
+        assert_eq!(reg.finished_total(), 0);
+        assert!(reg.recent_snapshot().is_empty());
     }
 }

@@ -1,6 +1,14 @@
 //! Leveled stderr logging with wall-clock timestamps relative to start.
 //!
-//! `COSA_LOG=debug|info|warn` selects verbosity (default `info`).
+//! `COSA_LOG=debug|info|warn|error` selects verbosity (default
+//! `info`).  `COSA_LOG_FORMAT=json` switches every line to a single
+//! JSON object (`{"t":…,"level":…,"msg":…}` plus `"req"` when a
+//! request trace is in scope) with `wire::json`-style string escaping
+//! — the text format stays the default for humans at a terminal.
+//!
+//! Request-path call sites that hold an `obs::Trace` log through
+//! [`log_req`] so the request id lands on the line (text format:
+//! `[… WRN req 00000000000000a3] …`).
 
 use std::sync::OnceLock;
 use std::time::Instant;
@@ -10,30 +18,90 @@ pub enum Level {
     Debug = 0,
     Info = 1,
     Warn = 2,
+    Error = 3,
 }
 
 static START: OnceLock<Instant> = OnceLock::new();
 static LEVEL: OnceLock<Level> = OnceLock::new();
+static JSON: OnceLock<bool> = OnceLock::new();
 
 fn level() -> Level {
     *LEVEL.get_or_init(|| match std::env::var("COSA_LOG").as_deref() {
         Ok("debug") => Level::Debug,
         Ok("warn") => Level::Warn,
+        Ok("error") => Level::Error,
         _ => Level::Info,
     })
 }
 
+fn json_format() -> bool {
+    *JSON.get_or_init(|| {
+        matches!(
+            std::env::var("COSA_LOG_FORMAT").as_deref(),
+            Ok("json")
+        )
+    })
+}
+
+/// JSON string escaping (the `wire::json::JsonWriter` rules: control
+/// characters, quote and backslash; `util` stays independent of
+/// `wire` so the escaper is local).
+fn push_json_escaped(out: &mut String, s: &str) {
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+}
+
 pub fn log(lvl: Level, msg: &str) {
+    log_req(lvl, None, msg);
+}
+
+/// Log with an optional request id (from the in-scope `obs::Trace`).
+pub fn log_req(lvl: Level, req: Option<u64>, msg: &str) {
     if lvl < level() {
         return;
     }
     let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    if json_format() {
+        let level_name = match lvl {
+            Level::Debug => "debug",
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        };
+        let mut line = String::with_capacity(msg.len() + 48);
+        line.push_str(&format!("{{\"t\":{t:.2},\"level\":\""));
+        line.push_str(level_name);
+        line.push('"');
+        if let Some(id) = req {
+            line.push_str(&format!(",\"req\":\"{id:016x}\""));
+        }
+        line.push_str(",\"msg\":\"");
+        push_json_escaped(&mut line, msg);
+        line.push_str("\"}");
+        eprintln!("{line}");
+        return;
+    }
     let tag = match lvl {
         Level::Debug => "DBG",
         Level::Info => "INF",
         Level::Warn => "WRN",
+        Level::Error => "ERR",
     };
-    eprintln!("[{t:8.2}s {tag}] {msg}");
+    match req {
+        Some(id) => eprintln!("[{t:8.2}s {tag} req {id:016x}] {msg}"),
+        None => eprintln!("[{t:8.2}s {tag}] {msg}"),
+    }
 }
 
 #[macro_export]
@@ -51,6 +119,11 @@ macro_rules! warn {
     ($($arg:tt)*) => { $crate::util::logging::log(
         $crate::util::logging::Level::Warn, &format!($($arg)*)) };
 }
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::util::logging::log(
+        $crate::util::logging::Level::Error, &format!($($arg)*)) };
+}
 
 #[cfg(test)]
 mod tests {
@@ -60,11 +133,21 @@ mod tests {
     fn levels_order() {
         assert!(Level::Debug < Level::Info);
         assert!(Level::Info < Level::Warn);
+        assert!(Level::Warn < Level::Error);
     }
 
     #[test]
     fn log_does_not_panic() {
         log(Level::Info, "hello from test");
+        log_req(Level::Error, Some(0xa3), "with request id");
         crate::info!("macro path {}", 42);
+        crate::error!("error macro path {}", 42);
+    }
+
+    #[test]
+    fn json_escaping_covers_specials() {
+        let mut s = String::new();
+        push_json_escaped(&mut s, "a\"b\\c\nd\te\u{1}");
+        assert_eq!(s, "a\\\"b\\\\c\\nd\\te\\u0001");
     }
 }

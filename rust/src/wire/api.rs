@@ -12,6 +12,7 @@
 use std::borrow::Cow;
 use std::sync::atomic::Ordering;
 
+use crate::obs::{self, Outcome, Stage, Trace};
 use crate::serve::RequestClass;
 use crate::wire::gateway::GatewayState;
 use crate::wire::http::{Request, Response};
@@ -24,7 +25,9 @@ pub fn handle(state: &GatewayState, req: &Request) -> Response {
         req.path.split('/').filter(|s| !s.is_empty()).collect();
     match (req.method.as_str(), segs.as_slice()) {
         ("GET", ["healthz"]) => healthz(state),
+        ("GET", ["metrics"]) => metrics(state),
         ("GET", ["v1", "stats"]) => stats(state),
+        ("GET", ["v1", "debug", "slow"]) => debug_slow(state),
         ("GET", ["v1", "adapters"]) => list_adapters(state),
         ("POST", ["v1", "forward"]) => forward(state, req),
         ("POST", ["v1", "adapters", name, "load"]) => {
@@ -32,7 +35,9 @@ pub fn handle(state: &GatewayState, req: &Request) -> Response {
         }
         ("DELETE", ["v1", "adapters", name]) => evict_adapter(state, name),
         (_, ["healthz"])
+        | (_, ["metrics"])
         | (_, ["v1", "stats"])
+        | (_, ["v1", "debug", "slow"])
         | (_, ["v1", "forward"])
         | (_, ["v1", "adapters"])
         | (_, ["v1", "adapters", _, "load"])
@@ -138,6 +143,8 @@ fn stats(state: &GatewayState) -> Response {
         w.key(&c.class).begin_obj();
         w.key("submitted").u64_val(c.submitted);
         w.key("answered").u64_val(c.answered);
+        w.key("p50_us").u64_val(c.p50_us);
+        w.key("p95_us").u64_val(c.p95_us);
         w.key("p99_us").u64_val(c.p99_us);
         w.end_obj();
     }
@@ -149,8 +156,319 @@ fn stats(state: &GatewayState) -> Response {
         w.key("shed_503").u64_val(hs.shed_503.load(Ordering::Relaxed));
         w.key("bad_requests")
             .u64_val(hs.bad_requests.load(Ordering::Relaxed));
+        // Status-class rollup of every response written, including
+        // transport-level errors the handlers never see.
+        w.key("responses_by_status").begin_obj();
+        w.key("2xx")
+            .u64_val(hs.responses_2xx.load(Ordering::Relaxed));
+        w.key("4xx")
+            .u64_val(hs.responses_4xx.load(Ordering::Relaxed));
+        w.key("5xx")
+            .u64_val(hs.responses_5xx.load(Ordering::Relaxed));
+        w.end_obj();
         w.end_obj();
     }
+    w.end_obj();
+    Response::json(200, w.finish())
+}
+
+/// `GET /metrics`: Prometheus text-format (v0.0.4) exposition of
+/// every serving counter — scheduler, per-class, per-adapter,
+/// per-method, cache (with the per-codec byte ledger), HTTP transport
+/// — plus the obs registry's stage histograms and outcome counters.
+/// Hand-rolled writer, std only; all series are `cosa_`-prefixed.
+fn metrics(state: &GatewayState) -> Response {
+    use crate::obs::prom::PromWriter;
+    let sched = state.server().scheduler_stats();
+    let (cache, cache_bytes, by_kind, adapters, method_of) = {
+        let model = state.model();
+        let m = model.lock().unwrap_or_else(|p| p.into_inner());
+        let method_of: std::collections::BTreeMap<String, &'static str> =
+            m.adapters()
+                .map(|a| (a.name.to_string(), a.method.name()))
+                .collect();
+        (
+            m.cache_stats(),
+            m.cache_bytes(),
+            m.cache_bytes_by_kind(),
+            m.len(),
+            method_of,
+        )
+    };
+    let mut w = PromWriter::new();
+
+    w.header(
+        "cosa_adapters_loaded",
+        "gauge",
+        "Adapters currently resident in the model.",
+    );
+    w.sample("cosa_adapters_loaded", &[], adapters as u64);
+    w.header(
+        "cosa_queue_depth",
+        "gauge",
+        "Requests waiting in the scheduler's class queues.",
+    );
+    w.sample("cosa_queue_depth", &[], sched.queue_depth);
+    w.header(
+        "cosa_requests_submitted_total",
+        "counter",
+        "Requests accepted by the scheduler.",
+    );
+    w.sample("cosa_requests_submitted_total", &[], sched.submitted);
+    w.header(
+        "cosa_batches_total",
+        "counter",
+        "Batches flushed by the scheduler.",
+    );
+    w.sample("cosa_batches_total", &[], sched.batches);
+    w.header(
+        "cosa_batched_rows_total",
+        "counter",
+        "Rows carried by flushed batches.",
+    );
+    w.sample("cosa_batched_rows_total", &[], sched.batched_rows);
+    w.header(
+        "cosa_requests_expired_total",
+        "counter",
+        "Requests that missed their deadline before compute.",
+    );
+    w.sample("cosa_requests_expired_total", &[], sched.expired);
+    w.header(
+        "cosa_requests_cancelled_total",
+        "counter",
+        "Requests cancelled by their caller before compute.",
+    );
+    w.sample("cosa_requests_cancelled_total", &[], sched.cancelled);
+    w.header(
+        "cosa_shed_429_total",
+        "counter",
+        "Forwards shed by gateway admission control.",
+    );
+    w.sample(
+        "cosa_shed_429_total",
+        &[],
+        state.shed_429.load(Ordering::Relaxed),
+    );
+
+    w.header(
+        "cosa_class_requests_total",
+        "counter",
+        "Requests per QoS class by lifecycle point.",
+    );
+    for c in &sched.per_class {
+        w.sample(
+            "cosa_class_requests_total",
+            &[("class", c.class.as_str()), ("point", "submitted")],
+            c.submitted,
+        );
+        w.sample(
+            "cosa_class_requests_total",
+            &[("class", c.class.as_str()), ("point", "answered")],
+            c.answered,
+        );
+    }
+    w.header(
+        "cosa_class_latency_us",
+        "histogram",
+        "Submit-to-reply service latency by QoS class, log2-us \
+         buckets.",
+    );
+    for c in &sched.per_class {
+        if c.hist.count() > 0 {
+            w.histogram(
+                "cosa_class_latency_us",
+                &[("class", c.class.as_str())],
+                &c.hist,
+            );
+        }
+    }
+
+    w.header(
+        "cosa_adapter_requests_total",
+        "counter",
+        "Requests submitted per adapter (tracked set).",
+    );
+    for (name, count) in &sched.per_adapter {
+        w.sample(
+            "cosa_adapter_requests_total",
+            &[("adapter", name.as_str())],
+            *count,
+        );
+    }
+    // Per-method rollup, same derivation as /v1/stats.
+    let mut methods: std::collections::BTreeMap<&str, (u64, u64)> =
+        std::collections::BTreeMap::new();
+    for name in method_of.values() {
+        methods.entry(name).or_insert((0, 0)).0 += 1;
+    }
+    for (name, count) in &sched.per_adapter {
+        if let Some(meth) = method_of.get(name) {
+            methods.entry(meth).or_insert((0, 0)).1 += count;
+        }
+    }
+    w.header(
+        "cosa_method_adapters",
+        "gauge",
+        "Loaded adapters per PEFT method.",
+    );
+    w.header(
+        "cosa_method_requests_total",
+        "counter",
+        "Requests per PEFT method (loaded adapters only).",
+    );
+    for (meth, (loaded, requests)) in &methods {
+        w.sample("cosa_method_adapters", &[("method", meth)], *loaded);
+        w.sample(
+            "cosa_method_requests_total",
+            &[("method", meth)],
+            *requests,
+        );
+    }
+
+    w.header(
+        "cosa_cache_hits_total",
+        "counter",
+        "Projection-cache hits at plan time.",
+    );
+    w.sample("cosa_cache_hits_total", &[], cache.hits);
+    w.header(
+        "cosa_cache_misses_total",
+        "counter",
+        "Projection-cache misses (regeneration required).",
+    );
+    w.sample("cosa_cache_misses_total", &[], cache.misses);
+    w.header(
+        "cosa_cache_evictions_total",
+        "counter",
+        "Projection-cache LRU evictions.",
+    );
+    w.sample("cosa_cache_evictions_total", &[], cache.evictions);
+    w.header(
+        "cosa_cache_resident_bytes",
+        "gauge",
+        "Projection-cache resident bytes by codec.",
+    );
+    w.sample(
+        "cosa_cache_resident_bytes",
+        &[("codec", "f32")],
+        by_kind[0] as u64,
+    );
+    w.sample(
+        "cosa_cache_resident_bytes",
+        &[("codec", "bf16")],
+        by_kind[1] as u64,
+    );
+    w.sample(
+        "cosa_cache_resident_bytes",
+        &[("codec", "int8")],
+        by_kind[2] as u64,
+    );
+    w.header(
+        "cosa_cache_resident_bytes_total",
+        "gauge",
+        "Projection-cache resident bytes, all codecs.",
+    );
+    w.sample("cosa_cache_resident_bytes_total", &[], cache_bytes as u64);
+
+    if let Some(hs) = state.http_stats() {
+        w.header(
+            "cosa_http_accepted_total",
+            "counter",
+            "TCP connections accepted.",
+        );
+        w.sample(
+            "cosa_http_accepted_total",
+            &[],
+            hs.accepted.load(Ordering::Relaxed),
+        );
+        w.header(
+            "cosa_http_requests_total",
+            "counter",
+            "HTTP requests dispatched to a handler.",
+        );
+        w.sample(
+            "cosa_http_requests_total",
+            &[],
+            hs.requests.load(Ordering::Relaxed),
+        );
+        w.header(
+            "cosa_http_shed_503_total",
+            "counter",
+            "Connections shed at the accept queue.",
+        );
+        w.sample(
+            "cosa_http_shed_503_total",
+            &[],
+            hs.shed_503.load(Ordering::Relaxed),
+        );
+        w.header(
+            "cosa_http_bad_requests_total",
+            "counter",
+            "Requests rejected by the HTTP parser.",
+        );
+        w.sample(
+            "cosa_http_bad_requests_total",
+            &[],
+            hs.bad_requests.load(Ordering::Relaxed),
+        );
+        w.header(
+            "cosa_http_responses_total",
+            "counter",
+            "Responses written, by status class.",
+        );
+        w.sample(
+            "cosa_http_responses_total",
+            &[("code", "2xx")],
+            hs.responses_2xx.load(Ordering::Relaxed),
+        );
+        w.sample(
+            "cosa_http_responses_total",
+            &[("code", "4xx")],
+            hs.responses_4xx.load(Ordering::Relaxed),
+        );
+        w.sample(
+            "cosa_http_responses_total",
+            &[("code", "5xx")],
+            hs.responses_5xx.load(Ordering::Relaxed),
+        );
+    }
+
+    obs::prom::render_registry(state.obs(), &mut w);
+    Response::text(200, "text/plain; version=0.0.4", w.finish())
+}
+
+/// `GET /v1/debug/slow`: the slowest traces captured over the sliding
+/// window, slowest first.  `stages` maps stage name → µs offset from
+/// request start (absent stages never ran on that request's path).
+fn debug_slow(state: &GatewayState) -> Response {
+    let entries = state.obs().slow_snapshot();
+    let mut w = JsonWriter::new();
+    w.begin_obj();
+    w.key("window_s").u64_val(obs::SLOW_WINDOW.as_secs());
+    w.key("count").u64_val(entries.len() as u64);
+    w.key("slow").begin_arr();
+    for e in &entries {
+        w.begin_obj();
+        w.key("id").str_val(&format!("{:016x}", e.id));
+        w.key("unix_ms").u64_val(e.unix_ms);
+        w.key("total_us").u64_val(e.total_us);
+        w.key("class").str_val(e.class);
+        w.key("method").str_val(e.method);
+        w.key("outcome").str_val(e.outcome);
+        w.key("adapter").str_val(&e.adapter);
+        w.key("batch_rows").u64_val(u64::from(e.batch_rows));
+        w.key("cache_hits").u64_val(u64::from(e.cache_hits));
+        w.key("cache_misses").u64_val(u64::from(e.cache_misses));
+        w.key("stages").begin_obj();
+        for s in Stage::ALL {
+            if let Some(us) = e.stages[s.idx()] {
+                w.key(s.name()).u64_val(us);
+            }
+        }
+        w.end_obj();
+        w.end_obj();
+    }
+    w.end_arr();
     w.end_obj();
     Response::json(200, w.finish())
 }
@@ -308,14 +626,57 @@ fn parse_forward(
     })
 }
 
+/// The `x-request-id` echoed on every forward response: the client's
+/// value when it is well-formed (visible ASCII, ≤ 64 bytes), else the
+/// trace id — so a log line's `req <id>` is always greppable from the
+/// caller's side.
+fn request_id(req: &Request, trace: Option<&Trace>) -> Option<String> {
+    let client = req.header("x-request-id").filter(|v| {
+        !v.is_empty()
+            && v.len() <= 64
+            && v.bytes().all(|b| (0x21..=0x7e).contains(&b))
+    });
+    match client {
+        Some(v) => Some(v.to_string()),
+        None => trace.map(Trace::id_hex),
+    }
+}
+
+/// Terminate a gateway-refused trace (shed / pre-submit error); the
+/// scheduler owns termination once the request boards.
+fn finish_trace(trace: &mut Option<Trace>, outcome: Outcome) {
+    if let Some(t) = trace.take() {
+        t.finish(outcome);
+    }
+}
+
 fn forward(state: &GatewayState, req: &Request) -> Response {
+    // The trace is born at the HTTP edge so queueing behind admission
+    // control is visible; it rides the scheduler ticket from submit
+    // onward (no thread-locals cross the pool).
+    let trace = state.obs().begin();
+    let rid = request_id(req, trace.as_ref());
+    let resp = forward_traced(state, req, trace);
+    match rid {
+        Some(id) => resp.with_header("x-request-id", &id),
+        None => resp,
+    }
+}
+
+fn forward_traced(
+    state: &GatewayState,
+    req: &Request,
+    mut trace: Option<Trace>,
+) -> Response {
     if state.is_draining() {
+        finish_trace(&mut trace, Outcome::Shed);
         return Response::error(503, "gateway is draining");
     }
     // Admission control first — shedding must stay cheap under the
     // very overload it exists for, so it runs before body parsing.
     if let Some(why) = state.should_shed() {
         state.shed_429.fetch_add(1, Ordering::Relaxed);
+        finish_trace(&mut trace, Outcome::Shed);
         return Response::error(429, &why).with_header(
             "retry-after",
             &state.cfg.retry_after_s.to_string(),
@@ -323,21 +684,32 @@ fn forward(state: &GatewayState, req: &Request) -> Response {
     }
     let fwd = match parse_forward(&req.body, &state.limits) {
         Ok(f) => f,
-        Err(e) => return Response::error(400, &format!("{e:#}")),
+        Err(e) => {
+            finish_trace(&mut trace, Outcome::Errored);
+            return Response::error(400, &format!("{e:#}"));
+        }
     };
+    if let Some(t) = trace.as_mut() {
+        t.mark(Stage::Parse);
+    }
     // Class-tier admission runs once the class is known: batch and
     // background requests shed at 75% / 50% of the depth watermark.
     if let Some(why) = state.should_shed_class(fwd.class) {
         state.shed_429.fetch_add(1, Ordering::Relaxed);
+        finish_trace(&mut trace, Outcome::Shed);
         return Response::error(429, &why).with_header(
             "retry-after",
             &state.cfg.retry_after_s.to_string(),
         );
     }
+    if let Some(t) = trace.as_mut() {
+        t.mark(Stage::Admission);
+    }
     // Validate shape here (400) instead of surfacing the scheduler's
     // submit error as a server-side failure.
     let site_ns = state.site_ns();
     if fwd.rows.len() != site_ns.len() {
+        finish_trace(&mut trace, Outcome::Errored);
         return Response::error(
             400,
             &format!(
@@ -349,6 +721,7 @@ fn forward(state: &GatewayState, req: &Request) -> Response {
     }
     for (i, (row, n)) in fwd.rows.iter().zip(site_ns).enumerate() {
         if row.len() != *n {
+            finish_trace(&mut trace, Outcome::Errored);
             return Response::error(
                 400,
                 &format!(
@@ -369,6 +742,7 @@ fn forward(state: &GatewayState, req: &Request) -> Response {
         m.contains(&fwd.adapter)
     };
     if !known {
+        finish_trace(&mut trace, Outcome::Errored);
         return Response::error(
             404,
             &format!("unknown adapter `{}`", fwd.adapter),
@@ -382,11 +756,15 @@ fn forward(state: &GatewayState, req: &Request) -> Response {
         let server = state.server();
         let deadline = (deadline_ms > 0)
             .then(|| std::time::Duration::from_millis(deadline_ms));
-        let result = server.submit_classed(
+        // Ownership of the trace moves to the scheduler here — it
+        // stamps the remaining stages and the terminal outcome
+        // (including its own submit-time errors).
+        let result = server.submit_traced(
             &fwd.adapter,
             fwd.rows,
             fwd.class,
             deadline,
+            trace,
         );
         match result {
             Ok(t) => t,

@@ -28,8 +28,9 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock, RwLock, RwLockReadGuard};
 use std::time::{Duration, Instant};
 
-use crate::config::{ServeConfig, WireConfig};
+use crate::config::{ObsConfig, ServeConfig, WireConfig};
 use crate::model::AdaptedModel;
+use crate::obs;
 use crate::serve::Server;
 use crate::train::checkpoint::Checkpoint;
 use crate::wire::http::{
@@ -59,6 +60,9 @@ pub struct GatewayState {
     /// Default checkpoint directory for `/v1/adapters/{name}/load`
     /// (from `[serve] preload_dir`; empty = none).
     preload_dir: String,
+    /// The telemetry registry shared with the scheduler — `/metrics`
+    /// and `/v1/debug/slow` read it without touching the server lock.
+    obs: Arc<obs::Registry>,
 }
 
 impl GatewayState {
@@ -97,6 +101,12 @@ impl GatewayState {
 
     pub fn http_stats(&self) -> Option<&HttpStats> {
         self.http_stats.get().map(|a| a.as_ref())
+    }
+
+    /// The telemetry registry (also reachable via the scheduler, but
+    /// this accessor skips the server read-lock).
+    pub fn obs(&self) -> &Arc<obs::Registry> {
+        &self.obs
     }
 
     pub fn default_dir(&self) -> Option<String> {
@@ -264,10 +274,25 @@ impl Gateway {
     /// Preload checkpoints (if `[serve] preload_dir` is set), spawn
     /// the scheduler over `model`, and bind the HTTP edge.  Configs
     /// are taken as-is — apply `env_overridden()` at the call site.
+    /// Telemetry runs at `[obs]` defaults (enabled); use
+    /// [`start_obs`](Self::start_obs) to pass an explicit config.
     pub fn start(
+        model: AdaptedModel,
+        serve_cfg: &ServeConfig,
+        wire_cfg: &WireConfig,
+    ) -> anyhow::Result<Gateway> {
+        Self::start_obs(model, serve_cfg, wire_cfg, &ObsConfig::default())
+    }
+
+    /// [`start`](Self::start) with an explicit `[obs]` config.  The
+    /// registry is built here and threaded two ways: into the
+    /// scheduler (which stamps every request's trace) and into
+    /// [`GatewayState`] (which serves `/metrics` + `/v1/debug/slow`).
+    pub fn start_obs(
         mut model: AdaptedModel,
         serve_cfg: &ServeConfig,
         wire_cfg: &WireConfig,
+        obs_cfg: &ObsConfig,
     ) -> anyhow::Result<Gateway> {
         if !serve_cfg.preload_dir.is_empty() {
             preload_checkpoints(
@@ -278,7 +303,8 @@ impl Gateway {
         }
         let site_ns: Vec<usize> =
             model.spec().sites.iter().map(|s| s.shape.n).collect();
-        let server = Server::new(model, serve_cfg);
+        let obs_reg = obs::Registry::new(obs_cfg);
+        let server = Server::with_obs(model, serve_cfg, obs_reg.clone());
         let shared_model = server.model();
         let limits = Limits {
             max_bytes: wire_cfg.max_body_bytes,
@@ -298,6 +324,7 @@ impl Gateway {
                 evictions_at_start: 0,
             }),
             preload_dir: serve_cfg.preload_dir.clone(),
+            obs: obs_reg,
         });
         let handler: Handler = {
             let st = state.clone();
@@ -554,6 +581,218 @@ mod tests {
                 "class {class} must record its one answer"
             );
         }
+    }
+
+    /// Spin until `f` holds (worker threads stamp trace outcomes just
+    /// after the reply send, so scrapes can race the last stamp).
+    fn wait_until(what: &str, mut f: impl FnMut() -> bool) {
+        for _ in 0..500 {
+            if f() {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        panic!("timed out waiting for {what}");
+    }
+
+    #[test]
+    fn metrics_and_debug_slow_expose_the_request_path() {
+        let spec = test_spec(1);
+        let mut model = AdaptedModel::new(spec, 1 << 20).unwrap();
+        add_adapter(&mut model, "alpha", 7);
+        let gw =
+            Gateway::start(model, &test_serve_cfg(), &test_wire_cfg())
+                .unwrap();
+        let mut client = HttpClient::connect(gw.addr()).unwrap();
+        let row = vec!["0.5"; 10].join(",");
+        let body =
+            format!(r#"{{"adapter":"alpha","rows":[[{row}]]}}"#);
+        for _ in 0..2 {
+            let resp = client
+                .request("POST", "/v1/forward", Some(body.as_bytes()))
+                .unwrap();
+            assert_eq!(resp.status, 200);
+            // Without a client-supplied id the gateway echoes the
+            // trace id: 16 lowercase hex digits.
+            let rid = resp
+                .headers
+                .iter()
+                .find(|(k, _)| k == "x-request-id")
+                .map(|(_, v)| v.clone())
+                .expect("x-request-id on a traced forward");
+            assert_eq!(rid.len(), 16, "trace id hex: {rid}");
+            assert!(rid.bytes().all(|b| b.is_ascii_hexdigit()));
+        }
+        // Unknown adapter: refused at the edge, trace ends Errored.
+        let ghost =
+            format!(r#"{{"adapter":"ghost","rows":[[{row}]]}}"#);
+        let resp = client
+            .request("POST", "/v1/forward", Some(ghost.as_bytes()))
+            .unwrap();
+        assert_eq!(resp.status, 404);
+
+        let reg = gw.state().obs().clone();
+        use crate::obs::Outcome;
+        wait_until("both answers traced", || {
+            reg.finished(Outcome::Answered) == 2
+        });
+        assert_eq!(reg.finished(Outcome::Errored), 1);
+
+        let resp = client.request("GET", "/metrics", None).unwrap();
+        assert_eq!(resp.status, 200);
+        let text = String::from_utf8(resp.body.clone()).unwrap();
+        for needle in [
+            "# TYPE cosa_requests_submitted_total counter",
+            "cosa_requests_submitted_total 2",
+            "cosa_requests_finished_total{outcome=\"answered\"} 2",
+            "cosa_requests_finished_total{outcome=\"errored\"} 1",
+            "# TYPE cosa_stage_duration_us histogram",
+            "cosa_stage_duration_us_bucket{stage=\"gemm\",\
+             class=\"interactive\",method=\"cosa\",le=\"+Inf\"} 2",
+            "cosa_class_latency_us_bucket{class=\"interactive\",\
+             le=\"+Inf\"} 2",
+            "cosa_cache_resident_bytes{codec=\"f32\"}",
+            "cosa_adapter_requests_total{adapter=\"alpha\"} 2",
+            "cosa_method_requests_total{method=\"cosa\"} 2",
+            "cosa_http_responses_total{code=\"2xx\"}",
+            "cosa_obs_enabled 1",
+        ] {
+            assert!(
+                text.contains(needle),
+                "missing `{needle}` in:\n{text}"
+            );
+        }
+        let ct = resp
+            .headers
+            .iter()
+            .find(|(k, _)| k == "content-type")
+            .map(|(_, v)| v.clone())
+            .unwrap();
+        assert!(ct.starts_with("text/plain"), "{ct}");
+
+        // Every finished trace is offered to the slow ring, so even a
+        // fast test captures entries — slowest first, stage offsets
+        // attached.
+        let resp =
+            client.request("GET", "/v1/debug/slow", None).unwrap();
+        assert_eq!(resp.status, 200);
+        let doc = parse_value(&resp.body, &Limits::default()).unwrap();
+        let n = doc
+            .get("count")
+            .and_then(Json::as_usize)
+            .expect("count");
+        assert!(n >= 3, "expected all three traces captured, got {n}");
+        let slow = doc.get("slow").and_then(Json::as_arr).unwrap();
+        assert_eq!(slow.len(), n);
+        let mut last_total = u64::MAX;
+        for e in slow {
+            let id = e.get("id").and_then(Json::as_str).unwrap();
+            assert_eq!(id.len(), 16);
+            let total = e
+                .get("total_us")
+                .and_then(Json::as_usize)
+                .unwrap() as u64;
+            assert!(total <= last_total, "entries must sort slowest-first");
+            last_total = total;
+            let outcome =
+                e.get("outcome").and_then(Json::as_str).unwrap();
+            if outcome == "answered" {
+                let stages = e.get("stages").expect("stages object");
+                for s in ["parse", "queue", "gemm", "reply"] {
+                    assert!(
+                        stages.get(s).is_some(),
+                        "answered trace missing stage `{s}`"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn client_request_id_echo_and_shed_outcome_tracing() {
+        use std::io::{Read, Write};
+        use std::net::TcpStream;
+
+        let spec = test_spec(1);
+        let mut model = AdaptedModel::new(spec, 1 << 20).unwrap();
+        add_adapter(&mut model, "alpha", 7);
+        // Slow flush parks submissions in the queue; watermark 1 makes
+        // the next class-tiered admission check shed deterministically.
+        let serve_cfg = ServeConfig {
+            max_batch: 64,
+            max_wait_us: 30_000_000,
+            ..test_serve_cfg()
+        };
+        let wire_cfg =
+            WireConfig { shed_queue_depth: 1, ..test_wire_cfg() };
+        let mut gw =
+            Gateway::start(model, &serve_cfg, &wire_cfg).unwrap();
+        let row = vec!["0.5"; 10].join(",");
+
+        // A well-formed client id is echoed verbatim (here on a 404 —
+        // the echo must survive error paths too).
+        let body =
+            format!(r#"{{"adapter":"ghost","rows":[[{row}]]}}"#);
+        let mut conn = TcpStream::connect(gw.addr()).unwrap();
+        conn.write_all(
+            format!(
+                "POST /v1/forward HTTP/1.1\r\n\
+                 x-request-id: my-id-123\r\n\
+                 content-length: {}\r\n\
+                 connection: close\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .unwrap();
+        let mut out = Vec::new();
+        conn.read_to_end(&mut out).unwrap();
+        let text = String::from_utf8_lossy(&out);
+        assert!(text.starts_with("HTTP/1.1 404"), "{text}");
+        assert!(
+            text.contains("x-request-id: my-id-123"),
+            "client id must be echoed: {text}"
+        );
+
+        // Park one request, then a background forward sheds with 429
+        // and its trace terminates with the Shed outcome.
+        let ticket = {
+            let server = gw.state().server();
+            server
+                .submit_classed(
+                    "alpha",
+                    vec![vec![0.25; 10]],
+                    crate::serve::RequestClass::Interactive,
+                    None,
+                )
+                .unwrap()
+        };
+        wait_until("parked request visible in queue", || {
+            gw.state().server().queue_depth() >= 1
+        });
+        let mut client = HttpClient::connect(gw.addr()).unwrap();
+        let bg = format!(
+            r#"{{"adapter":"alpha","class":"background","rows":[[{row}]]}}"#
+        );
+        let resp = client
+            .request("POST", "/v1/forward", Some(bg.as_bytes()))
+            .unwrap();
+        assert_eq!(
+            resp.status,
+            429,
+            "{}",
+            String::from_utf8_lossy(&resp.body)
+        );
+        let reg = gw.state().obs().clone();
+        use crate::obs::Outcome;
+        assert_eq!(reg.finished(Outcome::Shed), 1);
+        drop(client);
+        // Shutdown drains the parked request; its trace completes.
+        gw.shutdown();
+        assert!(ticket.wait().is_ok());
+        wait_until("parked request traced", || {
+            reg.finished(Outcome::Answered) == 1
+        });
     }
 
     #[test]

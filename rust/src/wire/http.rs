@@ -82,6 +82,21 @@ impl Response {
         }
     }
 
+    /// Plain-text response with an explicit content type — the
+    /// `/metrics` exposition uses the Prometheus text-format type.
+    pub fn text(
+        status: u16,
+        content_type: &'static str,
+        body: String,
+    ) -> Response {
+        Response {
+            status,
+            headers: Vec::new(),
+            body: body.into_bytes(),
+            content_type,
+        }
+    }
+
     /// The uniform error shape: `{"error": "..."}` with the mapped
     /// status.
     pub fn error(status: u16, msg: &str) -> Response {
@@ -146,13 +161,32 @@ impl Default for HttpOptions {
     }
 }
 
-/// Transport counters (surfaced through `/v1/stats`).
+/// Transport counters (surfaced through `/v1/stats` and `/metrics`).
 #[derive(Default)]
 pub struct HttpStats {
     pub accepted: AtomicU64,
     pub shed_503: AtomicU64,
     pub requests: AtomicU64,
     pub bad_requests: AtomicU64,
+    /// Status-class rollup of every response actually written — the
+    /// handler's answers plus transport-level errors (400/408/413,
+    /// accept-queue 503s).  Informational/3xx statuses never occur
+    /// here, so three classes cover the space.
+    pub responses_2xx: AtomicU64,
+    pub responses_4xx: AtomicU64,
+    pub responses_5xx: AtomicU64,
+}
+
+impl HttpStats {
+    /// Bump the status-class rollup for one written response.
+    pub fn record_status(&self, status: u16) {
+        let c = match status / 100 {
+            2 => &self.responses_2xx,
+            4 => &self.responses_4xx,
+            _ => &self.responses_5xx,
+        };
+        c.fetch_add(1, Ordering::Relaxed);
+    }
 }
 
 struct ConnQueue {
@@ -271,6 +305,7 @@ impl HttpServer {
                         // backpressure contract — answer 503 from the
                         // accept thread without occupying a worker.
                         hs.shed_503.fetch_add(1, Ordering::Relaxed);
+                        hs.record_status(503);
                         let _ = conn.set_write_timeout(Some(
                             Duration::from_millis(500),
                         ));
@@ -393,6 +428,7 @@ fn serve_conn(
             }
             if buf.len() > MAX_HEAD_BYTES {
                 stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                stats.record_status(400);
                 let _ = write_response(
                     &mut conn,
                     &Response::error(400, "request head too large"),
@@ -406,6 +442,7 @@ fn serve_conn(
                 && wait_start.elapsed() >= opts.read_timeout
             {
                 // Total-budget stall: answer and give up.
+                stats.record_status(408);
                 let _ = write_response(
                     &mut conn,
                     &Response::error(408, "request timed out"),
@@ -449,6 +486,7 @@ fn serve_conn(
                 Ok(ok) => ok,
                 Err(msg) => {
                     stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+                    stats.record_status(400);
                     let _ = write_response(
                         &mut conn,
                         &Response::error(400, &msg),
@@ -460,6 +498,7 @@ fn serve_conn(
             };
         if req.header("transfer-encoding").is_some() {
             stats.bad_requests.fetch_add(1, Ordering::Relaxed);
+            stats.record_status(501);
             let _ = write_response(
                 &mut conn,
                 &Response::error(
@@ -475,6 +514,7 @@ fn serve_conn(
         if content_length > opts.max_body_bytes {
             // Answer without reading the remainder — the connection
             // cannot be reused after an unread body.
+            stats.record_status(413);
             let _ = write_response(
                 &mut conn,
                 &Response::error(
@@ -497,6 +537,7 @@ fn serve_conn(
             if stall_closes && wait_start.elapsed() >= opts.read_timeout {
                 // Same total budget as the head: trickled bodies must
                 // not hold the worker past the request's clock.
+                stats.record_status(408);
                 let _ = write_response(
                     &mut conn,
                     &Response::error(408, "request timed out"),
@@ -519,6 +560,7 @@ fn serve_conn(
                         return;
                     }
                     if stall_closes {
+                        stats.record_status(408);
                         let _ = write_response(
                             &mut conn,
                             &Response::error(408, "request timed out"),
@@ -538,6 +580,7 @@ fn serve_conn(
         // -- dispatch --
         stats.requests.fetch_add(1, Ordering::Relaxed);
         let resp = handler(&req);
+        stats.record_status(resp.status);
         let client_close = req
             .header("connection")
             .is_some_and(|v| v.eq_ignore_ascii_case("close"));
@@ -820,6 +863,20 @@ mod tests {
         drop(client); // EOF frees the worker before the join below
         server.shutdown();
         server.shutdown(); // idempotent
+    }
+
+    #[test]
+    fn status_rollup_counts_every_written_response() {
+        let server = echo_server(HttpOptions::default());
+        let mut client = HttpClient::connect(server.addr()).unwrap();
+        let ok = client.request("GET", "/ping", None).unwrap();
+        assert_eq!(ok.status, 200);
+        let missing = client.request("GET", "/nope", None).unwrap();
+        assert_eq!(missing.status, 404);
+        let s = server.stats();
+        assert_eq!(s.responses_2xx.load(Ordering::Relaxed), 1);
+        assert_eq!(s.responses_4xx.load(Ordering::Relaxed), 1);
+        assert_eq!(s.responses_5xx.load(Ordering::Relaxed), 0);
     }
 
     #[test]

@@ -92,6 +92,17 @@ Checks:
    `rmse_vs_f32` <= its `max_rmse_vs_f32` bound (f32 must be exactly
    0 — the default codec stays bit-identical).
 
+10. **Telemetry-overhead gate** — the `serving_obs` section (written by
+    serve_bench scenario 8: the scenario-1 fleet driven on one
+    identical Zipf stream through an untraced server and a server with
+    the full `obs` registry attached) is checked against the
+    baseline's `serving_obs` object.  Machine-independent and enforced
+    by default: `traced_vs_untraced` >= `min_traced_vs_untraced`
+    (default 0.95 — stage spans, histograms, and the slow ring must
+    cost less than 5% throughput; both walls come from the same binary
+    on the same box, so the ratio is runner-independent), plus a
+    conservative `throughput_rps_floor` on the traced half.
+
 A fresh report that exists but is malformed (unparseable JSON, or none
 of the expected sections with rows) is a hard failure — a silently
 empty report must read as "the gate is off", never as "pass".  A
@@ -115,6 +126,7 @@ WIRE_SECTION = "serving_wire"
 TAIL_SECTION = "serving_tail"
 METHODS_SECTION = "serving_methods"
 QUANT_SECTION = "serving_quant"
+OBS_SECTION = "serving_obs"
 TOLERANCE = 0.20          # max allowed drop below the baseline gflops
 MIN_RATIO = 1.2           # fresh-run packed/tiled single-thread NN+NT floor
 MIN_SERVE_ADAPTERS = 64   # fleet size the serving ratio gate applies to
@@ -197,6 +209,14 @@ def quant_rows(doc):
     return [r for r in rows
             if isinstance(r, dict) and "rmse_vs_f32" in r
             and "kind" in r]
+
+
+def obs_rows(doc):
+    rows = doc.get(OBS_SECTION, [])
+    if not isinstance(rows, list):
+        return []
+    return [r for r in rows
+            if isinstance(r, dict) and "traced_vs_untraced" in r]
 
 
 def find_fresh(candidates):
@@ -657,6 +677,61 @@ def check_serving_quant(rows, baseline_doc, baseline_path,
             print(f"  note: {msg}")
 
 
+def check_serving_obs(rows, baseline_doc, baseline_path,
+                      require_acceptance, failures):
+    base = {}
+    if baseline_doc is not None:
+        base = baseline_doc.get(OBS_SECTION, {})
+    if not isinstance(base, dict):
+        failures.append(f"{baseline_path}: `{OBS_SECTION}` must be an "
+                        "object of gates, not rows")
+        return
+    # The overhead ratio gate is on even with no committed baseline
+    # object — "tracing costs < 5% throughput" is the acceptance
+    # criterion, not a tunable runner floor (both walls come from the
+    # same binary on the same box).
+    min_ratio = base.get("min_traced_vs_untraced", 0.95)
+    tp_floor = base.get("throughput_rps_floor", 0.0)
+    # Shape keys pinning the gate to the committed scenario.
+    want_shape = {k: base[k] for k in ("adapters", "zipf") if k in base}
+
+    gated_rows = 0
+    for r in rows:
+        tag = (f"serving_obs[{r.get('adapters')} adapters, "
+               f"zipf {r.get('zipf')}]")
+        shape_ok = all(r.get(k) == v for k, v in want_shape.items())
+        if not shape_ok:
+            print(f"  note: {tag}: not the acceptance workload; gate "
+                  "not applied")
+            continue
+        gated_rows += 1
+        # machine-independent: the traced server must keep >= min_ratio
+        # of the untraced server's throughput on the identical stream
+        ratio = r.get("traced_vs_untraced", 0.0)
+        line = (f"{tag}: traced/untraced = {ratio:.3f}x "
+                f"(gate {min_ratio}x)")
+        if ratio < min_ratio:
+            failures.append(f"{line} — request tracing eats too much of "
+                            "the engine's throughput")
+        else:
+            print(f"  ok: {line}")
+        tp = r.get("traced_throughput_rps", 0.0)
+        if tp < tp_floor:
+            failures.append(f"{tag}: traced throughput {tp:.0f} req/s < "
+                            f"floor {tp_floor:.0f}")
+        else:
+            print(f"  ok: {tag}: traced throughput {tp:.0f} req/s "
+                  f"(floor {tp_floor:.0f})")
+    if gated_rows == 0:
+        msg = (f"serving_obs gate matched 0 rows at the baseline shape "
+               f"{want_shape} — the telemetry-overhead acceptance "
+               "workload (serve_bench scenario 8) did not run")
+        if require_acceptance:
+            failures.append(msg)
+        else:
+            print(f"  note: {msg}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default="BENCH_baseline.json")
@@ -696,13 +771,15 @@ def main():
     tail = tail_rows(doc)
     methods = methods_rows(doc)
     quant = quant_rows(doc)
+    obs = obs_rows(doc)
     if (not fresh and not serving and not model and not wire and not tail
-            and not methods and not quant):
+            and not methods and not quant and not obs):
         print(f"bench_regression: FAIL — {fresh_path} exists but has no "
               f"usable `{SECTION}`, `{SERVING_SECTION}`, "
               f"`{MODEL_SECTION}`, `{WIRE_SECTION}`, `{TAIL_SECTION}`, "
-              f"`{METHODS_SECTION}` or `{QUANT_SECTION}` rows; an empty "
-              "report must not pass the gate")
+              f"`{METHODS_SECTION}`, `{QUANT_SECTION}` or "
+              f"`{OBS_SECTION}` rows; an empty report must not pass "
+              "the gate")
         return 1
 
     if args.update:
@@ -812,6 +889,18 @@ def main():
     else:
         print(f"bench_regression: note — no `{QUANT_SECTION}` rows; "
               "quantized-cache checks skipped (CI runs with "
+              "--require-serving)")
+    if obs:
+        evaluated.append(OBS_SECTION)
+        check_serving_obs(obs, baseline_doc, args.baseline,
+                          args.require_serving, failures)
+    elif args.require_serving:
+        failures.append(f"{fresh_path}: `{OBS_SECTION}` section is "
+                        "missing or empty — did serve_bench scenario 8 "
+                        "run?")
+    else:
+        print(f"bench_regression: note — no `{OBS_SECTION}` rows; "
+              "telemetry-overhead checks skipped (CI runs with "
               "--require-serving)")
 
     if failures:

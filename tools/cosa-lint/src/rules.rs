@@ -1095,7 +1095,9 @@ pub fn check_source(path: &str, src: &str, cfg: &Config) -> Vec<Finding> {
     let in_tests = dirs.iter().any(|c| *c == "tests");
     let request_path = dirs
         .iter()
-        .any(|c| matches!(*c, "serve" | "wire" | "model" | "linalg"));
+        .any(|c| {
+            matches!(*c, "serve" | "wire" | "model" | "linalg" | "obs")
+        });
     rule_unsafe(&toks, &lm, &d, &mut findings, path);
     if request_path && !in_tests {
         rule_panic(&toks, &tspans, &d, &mut findings, path);

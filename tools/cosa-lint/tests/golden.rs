@@ -65,9 +65,19 @@ fn panic_bad_reports_all_five_forms() {
 
 #[test]
 fn panic_rule_only_applies_to_request_path_modules() {
-    // The exact same source outside serve/wire/model/linalg is fine.
+    // The exact same source outside serve/wire/model/linalg/obs is
+    // fine.
     let fs = check("panic_bad.rs", "rust/src/exp/panic_bad.rs");
     assert!(fs.is_empty(), "unexpected findings: {fs:?}");
+}
+
+#[test]
+fn panic_rule_covers_the_obs_module() {
+    // The telemetry layer sits on the request path (Trace is stamped
+    // inside scheduler workers) — a panic there kills serving threads
+    // just like one in serve/, so obs/ is held to the same rule.
+    let fs = check("panic_bad.rs", "rust/src/obs/panic_bad.rs");
+    assert_eq!(count_rule(&fs, "panic-freedom"), 5, "findings: {fs:?}");
 }
 
 // -------------------------------------------- lock-order + hygiene

@@ -280,6 +280,75 @@ class QuantGate(unittest.TestCase):
         self.assertTrue(any("object of gates" in f for f in failures))
 
 
+def obs_row(**over):
+    """A healthy serving_obs row at the acceptance shape."""
+    row = {
+        "adapters": 64,
+        "requests": 2048,
+        "zipf": 1.1,
+        "passes": 3,
+        "untraced_throughput_rps": 4000.0,
+        "traced_throughput_rps": 3920.0,
+        "traced_vs_untraced": 0.98,
+        "slow_captured": 32,
+        "p99_us_gemm": 800,
+    }
+    row.update(over)
+    return row
+
+
+OBS_BASE = {
+    "serving_obs": {
+        "adapters": 64,
+        "zipf": 1.1,
+        "min_traced_vs_untraced": 0.95,
+        "throughput_rps_floor": 500.0,
+    }
+}
+
+
+class ObsGate(unittest.TestCase):
+    def check(self, rows, base=OBS_BASE, require=True):
+        failures = []
+        br.check_serving_obs(rows, base, "BENCH_baseline.json",
+                             require, failures)
+        return failures
+
+    def test_healthy_row_passes(self):
+        self.assertEqual(self.check([obs_row()]), [])
+
+    def test_low_overhead_ratio_fails(self):
+        failures = self.check([obs_row(traced_vs_untraced=0.8)])
+        self.assertEqual(len(failures), 1)
+        self.assertIn("traced/untraced", failures[0])
+
+    def test_ratio_gate_defaults_to_0_95_without_baseline(self):
+        # "Tracing costs < 5%" is the acceptance criterion — it must
+        # hold even with no committed baseline object.
+        failures = self.check([obs_row(traced_vs_untraced=0.9)],
+                              base=None)
+        self.assertTrue(any("traced/untraced" in f for f in failures))
+        self.assertEqual(self.check([obs_row()], base=None), [])
+
+    def test_traced_throughput_floor(self):
+        failures = self.check([obs_row(traced_throughput_rps=100.0,
+                                       untraced_throughput_rps=102.0)])
+        self.assertEqual(len(failures), 1)
+        self.assertIn("floor", failures[0])
+
+    def test_off_shape_rows_are_not_gated(self):
+        rows = [obs_row(adapters=8, traced_vs_untraced=0.5)]
+        self.assertEqual(self.check(rows, require=False), [])
+        failures = self.check(rows, require=True)
+        self.assertEqual(len(failures), 1)
+        self.assertIn("matched 0 rows", failures[0])
+
+    def test_malformed_baseline_section_fails(self):
+        failures = self.check([obs_row()],
+                              base={"serving_obs": [obs_row()]})
+        self.assertTrue(any("object of gates" in f for f in failures))
+
+
 def kernel_row(kernel, backend, gflops, m=256, k=3072, n=64, threads=1):
     return {"kernel": kernel, "backend": backend, "threads": threads,
             "m": m, "k": k, "n": n, "mean_ns": 1.0, "min_ns": 1.0,
@@ -428,6 +497,33 @@ class EndToEnd(unittest.TestCase):
             rc = self.run_main(doc, TAIL_BASE, ["--require-serving"])
         self.assertEqual(rc, 1)
         self.assertIn("serving_quant", buf.getvalue())
+
+    def test_obs_only_report_passes_and_is_named(self):
+        import contextlib
+        import io
+        buf = io.StringIO()
+        doc = {"serving_obs": [obs_row()]}
+        with contextlib.redirect_stdout(buf):
+            rc = self.run_main(doc, OBS_BASE, [])
+        self.assertEqual(rc, 0)
+        self.assertIn("gates evaluated: serving_obs", buf.getvalue())
+
+    def test_degraded_obs_row_fails_end_to_end(self):
+        doc = {"serving_obs": [obs_row(traced_vs_untraced=0.7)]}
+        rc = self.run_main(doc, OBS_BASE, [])
+        self.assertEqual(rc, 1)
+
+    def test_missing_obs_section_fails_under_require(self):
+        # CI mode: scenario 8 vanishing must fail, not silently skip
+        # the telemetry-overhead gate.
+        doc = {"serving_tail": [tail_row()]}
+        import contextlib
+        import io
+        buf = io.StringIO()
+        with contextlib.redirect_stdout(buf):
+            rc = self.run_main(doc, TAIL_BASE, ["--require-serving"])
+        self.assertEqual(rc, 1)
+        self.assertIn("serving_obs", buf.getvalue())
 
     def test_pass_names_the_gates_it_evaluated(self):
         # A PASS must say which gate sections actually ran, so a CI log
